@@ -1,0 +1,68 @@
+//! Newton sketch for logistic regression — the paper's §6.3 / Figure 3.
+//!
+//! Generates the AR(1)-correlated design matrix, runs exact Newton and
+//! several sketched variants, and prints the optimality-gap traces.
+//!
+//!     cargo run --release --example newton_sketch
+
+use triplespin::data::logistic;
+use triplespin::sketch::{newton_solve, NewtonOptions, SketchKind};
+use triplespin::transform::Family;
+
+fn main() {
+    let (n, d) = (2048usize, 32usize);
+    println!("== Newton sketch: logistic regression, n={n} observations, d={d} ==\n");
+    let p = logistic::generate(n, d, 0.99, 1);
+
+    // f* from a long exact run
+    let exact = newton_solve(
+        &p,
+        SketchKind::Exact,
+        NewtonOptions {
+            max_iters: 60,
+            ..Default::default()
+        },
+    );
+    let f_star = *exact.values.last().unwrap();
+    println!("f* = {f_star:.6} (exact Newton, {} iterations)\n", exact.values.len() - 1);
+
+    let m = 8 * d; // sketch dimension
+    let kinds = [
+        SketchKind::Exact,
+        SketchKind::Gaussian,
+        SketchKind::Struct(Family::Hd3),
+        SketchKind::Struct(Family::Hdg),
+        SketchKind::Struct(Family::Toeplitz),
+    ];
+    println!("optimality gap f(x_t) - f*   (sketch m = {m})");
+    print!("{:<26}", "iteration");
+    for it in [1usize, 2, 4, 8, 12, 16] {
+        print!(" {it:>9}");
+    }
+    println!();
+    for kind in kinds {
+        let trace = newton_solve(
+            &p,
+            kind,
+            NewtonOptions {
+                sketch_rows: m,
+                max_iters: 16,
+                ..Default::default()
+            },
+        );
+        let gaps = trace.gaps(f_star);
+        print!("{:<26}", kind.label());
+        for it in [1usize, 2, 4, 8, 12, 16] {
+            if it < gaps.len() {
+                print!(" {:>9.2e}", gaps[it]);
+            } else {
+                print!(" {:>9}", "-");
+            }
+        }
+        println!();
+    }
+    println!(
+        "\nSketched runs converge a constant factor slower than exact Newton but every\n\
+         TripleSpin sketch tracks the Gaussian sketch — Figure 3 (left)'s finding."
+    );
+}

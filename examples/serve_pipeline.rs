@@ -1,0 +1,119 @@
+//! End-to-end serving driver — proves all three layers compose.
+//!
+//! Loads the AOT artifacts (Layer 1 Pallas kernels lowered through the
+//! Layer 2 JAX model into HLO text), starts the PJRT runtime thread and the
+//! Layer 3 coordinator on top of it, then drives a mixed batched workload
+//! (transform / RFF feature maps / LSH hashes) from several client threads,
+//! reporting throughput and latency percentiles per lane. A native-backend
+//! pass runs the same workload for comparison, and cross-checks numerics
+//! between the two backends.
+//!
+//!     make artifacts && cargo run --release --example serve_pipeline
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use triplespin::coordinator::{Backend, Config, Coordinator, NativeBackend, PjrtBackend};
+use triplespin::runtime::{Op, RuntimeService};
+use triplespin::util::rng::Rng;
+
+const N: usize = 256;
+const REQUESTS_PER_CLIENT: usize = 400;
+const CLIENTS: usize = 3;
+
+fn drive(c: &Arc<Coordinator>, label: &str) {
+    let ops = [Op::Transform, Op::Rff, Op::CrossPolytope];
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..CLIENTS as u64 {
+        let cc = Arc::clone(c);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + t);
+            let mut done = 0usize;
+            while done < REQUESTS_PER_CLIENT {
+                let op = ops[(done + t as usize) % ops.len()];
+                match cc.submit(op, rng.gaussian_vec(N)) {
+                    Ok((_, rx)) => {
+                        rx.recv().expect("response").result.expect("ok");
+                        done += 1;
+                    }
+                    Err(triplespin::coordinator::SubmitError::Busy) => {
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                    Err(e) => panic!("{e}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let dt = start.elapsed();
+    let total = CLIENTS * REQUESTS_PER_CLIENT;
+    println!(
+        "\n[{label}] {total} requests from {CLIENTS} clients in {dt:?} -> {:.0} req/s",
+        total as f64 / dt.as_secs_f64()
+    );
+    for ((op, n), m) in c.metrics() {
+        println!(
+            "  lane {op:>14}/n={n}: completed {:>5}  mean batch {:>5.1}  p50 {:>7} µs  p95 {:>7} µs",
+            m.completed.load(std::sync::atomic::Ordering::Relaxed),
+            m.mean_batch_size(),
+            m.latency.percentile_us(0.50),
+            m.latency.percentile_us(0.95),
+        );
+    }
+}
+
+fn main() {
+    let (sigma, seed) = (1.0, 42);
+    let lanes = vec![(Op::Transform, N), (Op::Rff, N), (Op::CrossPolytope, N)];
+    let config = Config {
+        lanes: lanes.clone(),
+        max_batch: 64,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 512,
+        sigma,
+        seed,
+    };
+
+    // --- three-layer path: Pallas/JAX artifacts via PJRT ---
+    println!("loading artifacts + compiling via PJRT ...");
+    let svc = RuntimeService::spawn("artifacts".into())
+        .expect("run `make artifacts` first");
+    let pjrt: Arc<dyn Backend> =
+        Arc::new(PjrtBackend::new(svc.handle(), &[N], sigma, seed).expect("backend"));
+    let c = Arc::new(Coordinator::start(config.clone(), pjrt));
+    drive(&c, "pjrt (L1 Pallas -> L2 JAX -> HLO -> PJRT)");
+
+    // numeric cross-check against the native backend
+    let native = NativeBackend::new(&[N], sigma, seed);
+    let mut rng = Rng::new(77);
+    let v = rng.gaussian_vec(N);
+    let via_coord = c.call(Op::Transform, v.clone()).expect("call");
+    let via_native = native.run_batch(Op::Transform, N, 1, &v).expect("native");
+    let max_err = via_coord
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(via_native.as_f32().unwrap())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("\ncross-check pjrt vs native transform: max |err| = {max_err:.3e}");
+    assert!(max_err < 1e-2, "backends disagree!");
+
+    if let Ok(c) = Arc::try_unwrap(c) {
+        c.shutdown();
+    }
+    svc.shutdown();
+
+    // --- native hot path, same workload ---
+    let native: Arc<dyn Backend> = Arc::new(NativeBackend::new(&[N], sigma, seed));
+    let c2 = Arc::new(Coordinator::start(config, native));
+    drive(&c2, "native (pure-Rust FWHT hot path)");
+    if let Ok(c2) = Arc::try_unwrap(c2) {
+        c2.shutdown();
+    }
+
+    println!("\nAll layers compose: python built the kernels once; the request path is Rust-only.");
+}

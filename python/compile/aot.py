@@ -1,0 +1,159 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts + manifest.
+
+Run once at ``make artifacts``; Python never runs on the request path.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each (op, n, batch) variant becomes ``artifacts/<name>.hlo.txt``; the
+manifest (``artifacts/manifest.json``) records the parameter shapes so the
+Rust runtime can validate inputs before execution.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (op, n, batch) variants to export. n must be a power of two; batches
+# match the coordinator's lane sizes.
+VARIANTS = [
+    ("transform", 64, 1), ("transform", 64, 16),
+    ("transform", 256, 1), ("transform", 256, 16), ("transform", 256, 64),
+    ("transform", 1024, 16),
+    ("rff", 64, 16),
+    ("rff", 256, 1), ("rff", 256, 16), ("rff", 256, 64),
+    ("crosspolytope", 64, 16),
+    ("crosspolytope", 256, 16), ("crosspolytope", 256, 64),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides large constants as "{...}",
+    # which the XLA text parser silently turns into zeros — the in-VMEM
+    # Hadamard factors of the Pallas kernels would vanish. Print in full.
+    import jaxlib._jax as jx
+
+    opts = jx.HloPrintOptions()
+    opts.print_large_constants = True
+    # the pinned XLA 0.5.1 text parser predates source_end_line/column
+    # metadata attributes — strip metadata entirely.
+    opts.print_metadata = False
+    module = jx.HloModule.from_serialized_hlo_module_proto(
+        comp.as_serialized_hlo_module_proto()
+    )
+    text = module.to_string(opts)
+    assert "{...}" not in text, "HLO printer still eliding constants"
+    return text
+
+
+def specs_for(op: str, n: int, batch: int):
+    """(example arg specs, output shape) for one variant."""
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((batch, n), f32)
+    d = jax.ShapeDtypeStruct((n,), f32)
+    if op == "transform":
+        return (x, d, d, d), (batch, n), "f32"
+    if op == "rff":
+        s = jax.ShapeDtypeStruct((1,), f32)
+        return (x, d, d, d, s), (batch, 2 * n), "f32"
+    if op == "crosspolytope":
+        return (x, d, d, d), (batch,), "i32"
+    raise ValueError(f"unknown op {op}")
+
+
+def fn_for(op: str):
+    return {"transform": model.transform, "rff": model.rff,
+            "crosspolytope": model.crosspolytope}[op]
+
+
+def example_inputs(op: str, n: int, batch: int, seed: int = 7):
+    """Deterministic example inputs for golden-vector generation."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((batch, n)).astype(np.float32)
+    diags = [rng.choice(np.float32([-1.0, 1.0]), size=n) for _ in range(3)]
+    ins = [x] + diags
+    if op == "rff":
+        ins.append(np.float32([0.5]))  # inv_sigma
+    return ins
+
+
+def lower_variant(op: str, n: int, batch: int, out_dir: str,
+                  golden: bool = True) -> dict:
+    args, out_shape, out_dtype = specs_for(op, n, batch)
+    # wrap so the HLO root is a tuple (rust side unwraps with to_tuple1)
+    fn = fn_for(op)
+    jitted = jax.jit(lambda *a: (fn(*a),))
+    lowered = jitted.lower(*args)
+    text = to_hlo_text(lowered)
+    name = f"{op}_n{n}_b{batch}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {
+        "name": name,
+        "op": op,
+        "n": n,
+        "batch": batch,
+        "file": f"{name}.hlo.txt",
+        "inputs": [list(a.shape) for a in args],
+        "output": list(out_shape),
+        "output_dtype": out_dtype,
+    }
+    # golden input/output vectors: the Rust integration test executes the
+    # artifact via PJRT and compares against these (cross-language check).
+    # Skip the largest batches to keep artifacts small.
+    if golden and batch <= 16:
+        ins = example_inputs(op, n, batch)
+        out = np.asarray(jitted(*ins)[0])
+        gname = f"{name}.golden.json"
+        with open(os.path.join(out_dir, gname), "w") as f:
+            json.dump(
+                {
+                    "inputs": [i.reshape(-1).tolist() for i in ins],
+                    "output": out.reshape(-1).tolist(),
+                },
+                f,
+            )
+        entry["golden"] = gname
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated op filter (e.g. 'transform,rff')")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    entries = []
+    for op, n, batch in VARIANTS:
+        if only and op not in only:
+            continue
+        entry = lower_variant(op, n, batch, args.out_dir)
+        entries.append(entry)
+        print(f"lowered {entry['name']} -> {entry['file']}")
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

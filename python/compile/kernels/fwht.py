@@ -1,0 +1,84 @@
+"""Layer-1 Pallas kernel: two-level (Kronecker-factored) FWHT.
+
+TPU adaptation of the Hadamard transform (DESIGN.md §Hardware-Adaptation):
+instead of the `log n` butterfly rounds a CPU/GPU implementation uses
+(pointer-chasing, bad for the MXU), factor `H_n = H_a ⊗ H_b` for `n = a·b`
+and compute
+
+    Y = H_a · X · H_b        (X = row-reshaped (a, b) view of x)
+
+i.e. **two small dense matmuls** against Hadamard factors that live in VMEM.
+For n = 4096, a = b = 64: both factors are 64×64 — exactly one MXU tile —
+and a (batch_tile, n) f32 block plus factors fit comfortably in VMEM
+(batch_tile=128: 128·4096·4 B = 2 MiB stream + 32 KiB factors).
+
+Pallas runs with ``interpret=True`` everywhere in this repo: the CPU PJRT
+plugin cannot execute Mosaic custom-calls. Real-TPU performance is estimated
+from the BlockSpec footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _factor(n: int) -> tuple[int, int]:
+    """Split n = a*b with a, b powers of two, as square as possible."""
+    assert n & (n - 1) == 0 and n > 0
+    log = n.bit_length() - 1
+    a = 1 << ((log + 1) // 2)
+    return a, n // a
+
+
+def _fwht_kernel(x_ref, ha_ref, hb_ref, o_ref, *, a: int, b: int,
+                 scale: float):
+    """One batch-tile: reshape rows to (a, b), multiply by both factors."""
+    bt = x_ref.shape[0]
+    x = x_ref[...].reshape(bt, a, b)
+    ha = ha_ref[...]
+    hb = hb_ref[...]
+    # Y = Ha @ X @ Hb  (Hb symmetric, so right-multiplying by Hb == Hb^T)
+    y = jax.lax.dot_general(x, hb, (((2,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(ha, y, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # dot_general(ha, y): contracting ha dim 1 with y dim 1 (the 'a' axis)
+    # -> result (a, bt, b); transpose back to (bt, a, b).
+    y = y.transpose(1, 0, 2)
+    o_ref[...] = (y * scale).reshape(bt, a * b)
+
+
+def fwht(x: jnp.ndarray, *, block_batch: int = 128,
+         interpret: bool = True) -> jnp.ndarray:
+    """Normalized FWHT over the last axis of ``x (batch, n)`` via Pallas.
+
+    Matches ``ref.fwht`` to f32 round-off.
+    """
+    batch, n = x.shape
+    a, b = _factor(n)
+    ha = jnp.asarray(ref.hadamard_matrix(a))
+    hb = jnp.asarray(ref.hadamard_matrix(b))
+    scale = float(1.0 / (n ** 0.5))
+    bt = min(block_batch, batch)
+    # pad batch to a multiple of the tile
+    pad = (-batch) % bt
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, n), x.dtype)], axis=0)
+    grid = (x.shape[0] // bt,)
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, a=a, b=b, scale=scale),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x, ha, hb)
+    return out[:batch] if pad else out

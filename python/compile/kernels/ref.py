@@ -1,0 +1,55 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is deliberately simple and dense — `O(n^2)` Hadamard
+matmuls — so the Pallas kernels (and the Rust native path, transitively via
+the AOT artifacts) have an unambiguous reference.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Unnormalized Sylvester Hadamard matrix (entries ±1), n a power of 2."""
+    assert n & (n - 1) == 0 and n > 0, f"n={n} must be a power of two"
+    h = np.array([[1.0]], dtype=np.float32)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h.astype(np.float32)
+
+
+def fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized Walsh-Hadamard transform of the last axis (dense matmul).
+
+    ``y = x @ H`` with ``H = H_sylvester / sqrt(n)`` (H is symmetric, so
+    left/right application coincide for vectors).
+    """
+    n = x.shape[-1]
+    h = jnp.asarray(hadamard_matrix(n)) / jnp.sqrt(n).astype(jnp.float32)
+    return x @ h
+
+
+def triplespin(x: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
+               d3: jnp.ndarray) -> jnp.ndarray:
+    """``sqrt(n) * H D3 H D2 H D1 x`` per row of the batch ``x (b, n)``.
+
+    The paper's flagship discrete chain, with L2-normalized ``H`` and the
+    ``sqrt(n)`` scaling that makes rows act like N(0,1) directions.
+    """
+    n = x.shape[-1]
+    y = fwht(x * d1)
+    y = fwht(y * d2)
+    y = fwht(y * d3)
+    return y * jnp.sqrt(n).astype(jnp.float32)
+
+
+def rff_features(x: jnp.ndarray, d1: jnp.ndarray, d2: jnp.ndarray,
+                 d3: jnp.ndarray, inv_sigma: jnp.ndarray) -> jnp.ndarray:
+    """Gaussian-kernel random Fourier features from the TripleSpin projection.
+
+    ``phi(x) = [cos(Tx/sigma); sin(Tx/sigma)] / sqrt(n)`` — output ``(b, 2n)``.
+    """
+    n = x.shape[-1]
+    proj = triplespin(x, d1, d2, d3) * inv_sigma
+    scale = (1.0 / jnp.sqrt(n)).astype(jnp.float32)
+    return jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], axis=-1) * scale

@@ -1,0 +1,132 @@
+"""Layer-1 Pallas kernel: fused TripleSpin chain and RFF feature map.
+
+One kernel invocation computes the full `sqrt(n) * H D3 H D2 H D1 x` chain
+for a batch tile — the three diagonal scalings are elementwise VPU ops fused
+between the Kronecker-factored Hadamard matmuls, so the tile never leaves
+VMEM between spins (on real TPU; under ``interpret=True`` this structure is
+still what gets lowered to HLO and what the Rust runtime executes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .fwht import _factor
+
+
+def _hadamard_pair(y, ha, hb, a: int, b: int):
+    """(bt, n) -> unnormalized FWHT via Y = Ha @ X @ Hb on (a, b) reshapes."""
+    bt = y.shape[0]
+    x = y.reshape(bt, a, b)
+    t = jax.lax.dot_general(x, hb, (((2,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    t = jax.lax.dot_general(ha, t, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return t.transpose(1, 0, 2).reshape(bt, a * b)
+
+
+def _chain_kernel(x_ref, d1_ref, d2_ref, d3_ref, ha_ref, hb_ref, o_ref, *,
+                  a: int, b: int, scale: float):
+    ha = ha_ref[...]
+    hb = hb_ref[...]
+    y = x_ref[...] * d1_ref[...]
+    y = _hadamard_pair(y, ha, hb, a, b)
+    y = y * d2_ref[...]
+    y = _hadamard_pair(y, ha, hb, a, b)
+    y = y * d3_ref[...]
+    y = _hadamard_pair(y, ha, hb, a, b)
+    o_ref[...] = y * scale
+
+
+def _rff_kernel(x_ref, d1_ref, d2_ref, d3_ref, inv_sigma_ref, ha_ref, hb_ref,
+                o_ref, *, a: int, b: int, scale: float, feat_scale: float):
+    ha = ha_ref[...]
+    hb = hb_ref[...]
+    y = x_ref[...] * d1_ref[...]
+    y = _hadamard_pair(y, ha, hb, a, b)
+    y = y * d2_ref[...]
+    y = _hadamard_pair(y, ha, hb, a, b)
+    y = y * d3_ref[...]
+    y = _hadamard_pair(y, ha, hb, a, b)
+    proj = y * (scale * inv_sigma_ref[0])
+    o_ref[...] = jnp.concatenate(
+        [jnp.cos(proj), jnp.sin(proj)], axis=-1) * feat_scale
+
+
+def _padded(x, bt):
+    batch = x.shape[0]
+    pad = (-batch) % bt
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, pad
+
+
+def triplespin(x, d1, d2, d3, *, block_batch: int = 128,
+               interpret: bool = True):
+    """Fused ``sqrt(n) * H D3 H D2 H D1 x`` over a batch; matches
+    ``ref.triplespin``."""
+    batch, n = x.shape
+    a, b = _factor(n)
+    ha = jnp.asarray(ref.hadamard_matrix(a))
+    hb = jnp.asarray(ref.hadamard_matrix(b))
+    # 3 unnormalized FWHTs contribute n^{3/2}; target scaling is sqrt(n)/n^{3/2}... :
+    # normalized chain = n^{-3/2} * unnormalized; final factor sqrt(n).
+    scale = float(n ** 0.5 / n ** 1.5)
+    bt = min(block_batch, batch)
+    x, pad = _padded(x, bt)
+    grid = (x.shape[0] // bt,)
+    vec = lambda i: (0,)  # noqa: E731 — diagonals broadcast to every tile
+    out = pl.pallas_call(
+        functools.partial(_chain_kernel, a=a, b=b, scale=scale),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), vec),
+            pl.BlockSpec((n,), vec),
+            pl.BlockSpec((n,), vec),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x, d1, d2, d3, ha, hb)
+    return out[:batch] if pad else out
+
+
+def rff_features(x, d1, d2, d3, inv_sigma, *, block_batch: int = 128,
+                 interpret: bool = True):
+    """Fused TripleSpin projection + cos/sin featurization; matches
+    ``ref.rff_features``. ``inv_sigma`` is a shape-(1,) f32 array."""
+    batch, n = x.shape
+    a, b = _factor(n)
+    ha = jnp.asarray(ref.hadamard_matrix(a))
+    hb = jnp.asarray(ref.hadamard_matrix(b))
+    scale = float(n ** 0.5 / n ** 1.5)
+    feat_scale = float(1.0 / (n ** 0.5))
+    bt = min(block_batch, batch)
+    x, pad = _padded(x, bt)
+    grid = (x.shape[0] // bt,)
+    vec = lambda i: (0,)  # noqa: E731
+    out = pl.pallas_call(
+        functools.partial(_rff_kernel, a=a, b=b, scale=scale,
+                          feat_scale=feat_scale),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], 2 * n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), vec),
+            pl.BlockSpec((n,), vec),
+            pl.BlockSpec((n,), vec),
+            pl.BlockSpec((1,), vec),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 2 * n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x, d1, d2, d3, inv_sigma, ha, hb)
+    return out[:batch] if pad else out

@@ -1,0 +1,39 @@
+"""Layer-2 JAX model: the TripleSpin compute graph served by the Rust side.
+
+Build-time only — these functions are jitted, lowered to HLO text by
+``aot.py``, and executed from Rust via PJRT. They call the Layer-1 Pallas
+kernels (``kernels.triplespin``) so the fused chain lowers into the same
+HLO module.
+
+Operations exported:
+  * ``transform``      — ``sqrt(n)·HD3 HD2 HD1 x``  (b, n) -> (b, n)
+  * ``rff``            — Gaussian-kernel RFF map    (b, n) -> (b, 2n)
+  * ``crosspolytope``  — LSH hash bucket ids        (b, n) -> (b,) int32
+"""
+
+import jax.numpy as jnp
+
+from .kernels import triplespin as ts_kernels
+
+
+def transform(x, d1, d2, d3):
+    """The flagship discrete chain, batched."""
+    return ts_kernels.triplespin(x, d1, d2, d3)
+
+
+def rff(x, d1, d2, d3, inv_sigma):
+    """Random Fourier features for the Gaussian kernel (paper §4)."""
+    return ts_kernels.rff_features(x, d1, d2, d3, inv_sigma)
+
+
+def crosspolytope(x, d1, d2, d3):
+    """Cross-polytope hash ids (paper §2): ``argmax |Tx|`` with sign.
+
+    Returns int32 bucket ids in ``[0, 2n)``: ``i`` for ``+e_i``, ``i + n``
+    for ``-e_i`` — the same encoding the Rust LSH module uses.
+    """
+    n = x.shape[-1]
+    y = ts_kernels.triplespin(x, d1, d2, d3)
+    idx = jnp.argmax(jnp.abs(y), axis=-1)
+    vals = jnp.take_along_axis(y, idx[:, None], axis=-1)[:, 0]
+    return jnp.where(vals >= 0, idx, idx + n).astype(jnp.int32)

@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import fwht as fwht_kernel
+from compile.kernels import ref
+from compile.kernels import triplespin as ts
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def rademacher(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.choice(np.float32([-1.0, 1.0]), size=n)
+
+
+# powers of two the kernels must handle; 1-2 exercise degenerate factors
+POW2 = [2, 4, 8, 16, 64, 128, 256]
+
+
+class TestFwhtKernel:
+    @given(
+        n=st.sampled_from(POW2),
+        batch=st.integers(min_value=1, max_value=9),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, n, batch, seed):
+        x = rand((batch, n), seed)
+        got = np.asarray(fwht_kernel.fwht(x))
+        want = np.asarray(ref.fwht(x))
+        assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_involution(self):
+        x = rand((4, 64), 1)
+        y = np.asarray(fwht_kernel.fwht(np.asarray(fwht_kernel.fwht(x))))
+        assert_allclose(y, x, rtol=1e-4, atol=1e-5)
+
+    def test_batch_tiling_boundary(self):
+        # batch not divisible by the tile: padding must not leak
+        x = rand((5, 32), 2)
+        got = np.asarray(fwht_kernel.fwht(x, block_batch=4))
+        want = np.asarray(ref.fwht(x))
+        assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_norm_preservation(self):
+        x = rand((3, 128), 3)
+        y = np.asarray(fwht_kernel.fwht(x))
+        assert_allclose(
+            np.linalg.norm(y, axis=1), np.linalg.norm(x, axis=1), rtol=1e-4
+        )
+
+    def test_factor_split(self):
+        assert fwht_kernel._factor(4096) == (64, 64)
+        assert fwht_kernel._factor(256) == (16, 16)
+        assert fwht_kernel._factor(128) == (16, 8)
+        assert fwht_kernel._factor(2) == (2, 1)
+        assert fwht_kernel._factor(1) == (1, 1)
+
+
+class TestTripleSpinKernel:
+    @given(
+        n=st.sampled_from([4, 16, 64, 256]),
+        batch=st.integers(min_value=1, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_matches_ref(self, n, batch, seed):
+        x = rand((batch, n), seed)
+        d1, d2, d3 = (rademacher(n, seed + i) for i in (1, 2, 3))
+        got = np.asarray(ts.triplespin(x, d1, d2, d3))
+        want = np.asarray(ref.triplespin(x, d1, d2, d3))
+        assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_norm_scaling(self):
+        # isometric chain scaled by sqrt(n): unit rows -> norm sqrt(n)
+        n = 64
+        x = rand((4, n), 5)
+        x /= np.linalg.norm(x, axis=1, keepdims=True)
+        d1, d2, d3 = (rademacher(n, i) for i in (7, 8, 9))
+        y = np.asarray(ts.triplespin(x, d1, d2, d3))
+        assert_allclose(np.linalg.norm(y, axis=1), np.sqrt(n), rtol=1e-4)
+
+    def test_gaussian_diag_also_works(self):
+        # HDg variant: the kernel doesn't care about the diag distribution
+        n = 32
+        x = rand((2, n), 6)
+        d1, d2 = rademacher(n, 1), rademacher(n, 2)
+        dg = rand(n, 3)
+        got = np.asarray(ts.triplespin(x, d1, d2, dg))
+        want = np.asarray(ref.triplespin(x, d1, d2, dg))
+        assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+class TestRffKernel:
+    @given(
+        n=st.sampled_from([16, 64, 256]),
+        batch=st.integers(min_value=1, max_value=5),
+        seed=st.integers(min_value=0, max_value=2**31),
+        sigma=st.floats(min_value=0.3, max_value=20.0),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_matches_ref(self, n, batch, seed, sigma):
+        x = rand((batch, n), seed)
+        d1, d2, d3 = (rademacher(n, seed + i) for i in (1, 2, 3))
+        inv = np.float32([1.0 / sigma])
+        got = np.asarray(ts.rff_features(x, d1, d2, d3, inv))
+        want = np.asarray(ref.rff_features(x, d1, d2, d3, inv))
+        assert got.shape == (batch, 2 * n)
+        assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_self_kernel_is_one(self):
+        # phi(x)·phi(x) = mean(cos²+sin²) = 1 exactly
+        n = 64
+        x = rand((3, n), 11)
+        d1, d2, d3 = (rademacher(n, i) for i in (4, 5, 6))
+        phi = np.asarray(ts.rff_features(x, d1, d2, d3, np.float32([0.5])))
+        assert_allclose((phi * phi).sum(axis=1), 1.0, rtol=1e-5)
+
+    def test_kernel_estimate_close_to_exact(self):
+        # dot of feature maps ≈ Gaussian kernel, averaged over diag draws
+        n = 256
+        sigma = 1.0
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal(n).astype(np.float32)
+        x /= np.linalg.norm(x)
+        y = 0.8 * x + 0.2 * rng.standard_normal(n).astype(np.float32) / np.sqrt(n)
+        y /= np.linalg.norm(y)
+        exact = np.exp(-np.linalg.norm(x - y) ** 2 / (2 * sigma**2))
+        ests = []
+        for s in range(6):
+            d1, d2, d3 = (rademacher(n, 100 + 3 * s + i) for i in range(3))
+            batch = np.stack([x, y])
+            phi = np.asarray(
+                ts.rff_features(batch, d1, d2, d3, np.float32([1.0 / sigma]))
+            )
+            ests.append(float(phi[0] @ phi[1]))
+        est = np.mean(ests)
+        assert abs(est - exact) < 0.05, f"{est} vs {exact}"

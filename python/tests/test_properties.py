@@ -1,0 +1,133 @@
+"""Property-style sweeps over the Pallas kernels (hypothesis).
+
+Complements test_kernel.py's allclose checks with structural invariants:
+linearity, isometry, sign symmetries, padding behaviour — each a property
+the TripleSpin math guarantees and the kernels must not break.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import fwht as fwht_kernel
+from compile.kernels import ref
+from compile.kernels import triplespin as ts
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+def rademacher(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.choice(np.float32([-1.0, 1.0]), size=n)
+
+
+class TestFwhtProperties:
+    @given(n=st.sampled_from([4, 16, 64]), seed=st.integers(0, 2**31),
+           alpha=st.floats(-3, 3, allow_nan=False))
+    @settings(max_examples=15, deadline=None)
+    def test_linearity(self, n, seed, alpha):
+        x, y = rand((2, n), seed), rand((2, n), seed + 1)
+        lhs = np.asarray(fwht_kernel.fwht(np.float32(alpha) * x + y))
+        rhs = np.float32(alpha) * np.asarray(fwht_kernel.fwht(x)) + np.asarray(
+            fwht_kernel.fwht(y))
+        assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-4)
+
+    @given(n=st.sampled_from([8, 32, 128]), seed=st.integers(0, 2**31))
+    @settings(max_examples=15, deadline=None)
+    def test_isometry(self, n, seed):
+        x = rand((3, n), seed)
+        y = np.asarray(fwht_kernel.fwht(x))
+        assert_allclose(np.linalg.norm(y, axis=1),
+                        np.linalg.norm(x, axis=1), rtol=1e-4)
+
+    def test_parseval_cross_terms(self):
+        # <Hx, Hy> == <x, y> (full inner-product preservation)
+        x, y = rand((1, 64), 1), rand((1, 64), 2)
+        hx = np.asarray(fwht_kernel.fwht(x))
+        hy = np.asarray(fwht_kernel.fwht(y))
+        assert_allclose(hx @ hy.T, x @ y.T, rtol=1e-4)
+
+
+class TestTripleSpinProperties:
+    @given(n=st.sampled_from([16, 64]), seed=st.integers(0, 2**31))
+    @settings(max_examples=15, deadline=None)
+    def test_negation_antisymmetry(self, n, seed):
+        x = rand((2, n), seed)
+        d1, d2, d3 = (rademacher(n, seed + i) for i in (1, 2, 3))
+        a = np.asarray(ts.triplespin(x, d1, d2, d3))
+        b = np.asarray(ts.triplespin(-x, d1, d2, d3))
+        assert_allclose(a, -b, rtol=1e-4, atol=1e-5)
+
+    @given(n=st.sampled_from([16, 64, 256]), seed=st.integers(0, 2**31))
+    @settings(max_examples=10, deadline=None)
+    def test_chain_is_orthogonal_times_sqrt_n(self, n, seed):
+        # T/√n is orthogonal: ||Tx|| = √n ||x|| exactly for ±1 diags
+        x = rand((2, n), seed)
+        d1, d2, d3 = (rademacher(n, seed + i) for i in (1, 2, 3))
+        y = np.asarray(ts.triplespin(x, d1, d2, d3))
+        assert_allclose(np.linalg.norm(y, axis=1),
+                        np.sqrt(n) * np.linalg.norm(x, axis=1), rtol=1e-4)
+
+    def test_zero_input_zero_output(self):
+        n = 32
+        d = rademacher(n, 1)
+        z = np.zeros((2, n), np.float32)
+        assert not np.asarray(ts.triplespin(z, d, d, d)).any()
+
+
+class TestCrossPolytopeProperties:
+    @given(seed=st.integers(0, 2**31),
+           scale=st.floats(0.1, 100.0, allow_nan=False))
+    @settings(max_examples=15, deadline=None)
+    def test_scale_invariance(self, seed, scale):
+        n = 64
+        x = rand((4, n), seed)
+        d1, d2, d3 = (rademacher(n, seed + i) for i in (1, 2, 3))
+        a = np.asarray(model.crosspolytope(x, d1, d2, d3))
+        b = np.asarray(model.crosspolytope(np.float32(scale) * x, d1, d2, d3))
+        assert (a == b).all()
+
+    @given(seed=st.integers(0, 2**31))
+    @settings(max_examples=10, deadline=None)
+    def test_bucket_range(self, seed):
+        n = 32
+        x = rand((8, n), seed)
+        d1, d2, d3 = (rademacher(n, seed + i) for i in (1, 2, 3))
+        ids = np.asarray(model.crosspolytope(x, d1, d2, d3))
+        assert ((ids >= 0) & (ids < 2 * n)).all()
+
+
+class TestRffProperties:
+    @given(seed=st.integers(0, 2**31), sigma=st.floats(0.5, 10.0))
+    @settings(max_examples=10, deadline=None)
+    def test_features_bounded(self, seed, sigma):
+        # |cos|,|sin| <= 1 -> each feature bounded by 1/sqrt(n)
+        n = 64
+        x = rand((3, n), seed)
+        d1, d2, d3 = (rademacher(n, seed + i) for i in (1, 2, 3))
+        phi = np.asarray(ts.rff_features(
+            x, d1, d2, d3, np.float32([1.0 / sigma])))
+        assert (np.abs(phi) <= 1.0 / np.sqrt(n) + 1e-6).all()
+
+    def test_kernel_estimate_symmetric(self):
+        n = 64
+        x = rand((2, n), 3)
+        d1, d2, d3 = (rademacher(n, i) for i in (4, 5, 6))
+        phi = np.asarray(ts.rff_features(x, d1, d2, d3, np.float32([1.0])))
+        kxy = float(phi[0] @ phi[1])
+        kyx = float(phi[1] @ phi[0])
+        assert abs(kxy - kyx) < 1e-7
+
+    def test_distant_points_low_kernel(self):
+        n = 256
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal(n).astype(np.float32) * 10
+        y = -x
+        d1, d2, d3 = (rademacher(n, i) for i in (1, 2, 3))
+        batch = np.stack([x, y])
+        phi = np.asarray(ts.rff_features(batch, d1, d2, d3,
+                                         np.float32([1.0])))
+        assert abs(float(phi[0] @ phi[1])) < 0.1

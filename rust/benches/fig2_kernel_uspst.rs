@@ -1,0 +1,76 @@
+//! Figure 2 — Gram-matrix reconstruction error vs number of random
+//! features, USPST, Gaussian + angular kernels.
+//!
+//! The paper: 2007 points, n = 258 (we synthesize stroke images at n = 256;
+//! DESIGN.md §4), σ = 9.4338 on real USPST — we use the median heuristic on
+//! the synthetic set, which is how that value was derived. Errors are
+//! `||K - K̃||_F / ||K||_F`, averaged over runs.
+//!
+//! Default subsamples 400 points / 3 runs (the metric is point-count
+//! stable); `TS_FULL=1` uses all 2007 points / 10 runs.
+//!
+//!     cargo bench --bench fig2_kernel_uspst
+
+use triplespin::data::uspst;
+use triplespin::kernels::{exact, gram, FeatureKind, FeatureMap};
+use triplespin::transform::{make, Family};
+use triplespin::util::rng::Rng;
+
+fn main() {
+    let full = std::env::var("TS_FULL").is_ok();
+    let (count, runs) = if full { (2007, 10) } else { (400, 3) };
+    let points = uspst::dataset_n(count, 1);
+    let n = uspst::DIM;
+    let sigma = exact::median_bandwidth(&points, 300);
+    let feature_counts: Vec<usize> = if full {
+        (4..=11).map(|e| 1usize << e).collect()
+    } else {
+        vec![16, 32, 64, 128, 256, 512, 1024]
+    };
+
+    println!(
+        "== Figure 2: Gram reconstruction error, USPST-like ({count} pts, n={n}, σ={sigma:.4}, {runs} runs) =="
+    );
+
+    let families = [
+        Family::Dense,
+        Family::Toeplitz,
+        Family::SkewCirculant,
+        Family::Hdg,
+        Family::Hd3,
+    ];
+
+    for (kname, kind) in [
+        ("Gaussian kernel", FeatureKind::GaussianRff),
+        ("angular kernel", FeatureKind::Angular),
+    ] {
+        let k_exact = match kind {
+            FeatureKind::GaussianRff => {
+                exact::gram(&points, |a, b| exact::gaussian(a, b, sigma))
+            }
+            _ => exact::gram(&points, exact::angular),
+        };
+        println!("\n--- {kname} ---");
+        print!("{:<22}", "family \\ #features");
+        for f in &feature_counts {
+            print!(" {f:>8}");
+        }
+        println!();
+        for fam in families {
+            print!("{:<22}", fam.label());
+            for &feats in &feature_counts {
+                let mut err = 0.0;
+                for s in 0..runs {
+                    let t = make(fam, feats, n, n, &mut Rng::new(100 + s as u64));
+                    let fm = FeatureMap::new(t, kind, sigma);
+                    err += gram::reconstruction_error(&fm, &points, &k_exact);
+                }
+                print!(" {:>8.4}", err / runs as f64);
+            }
+            println!();
+        }
+    }
+    println!(
+        "\n(paper: all TripleSpin curves track the Gaussian curve; HD3HD2HD1 best.\n error decays ~1/√k with feature count k)"
+    );
+}

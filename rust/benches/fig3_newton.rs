@@ -1,0 +1,123 @@
+//! Figure 3 — Newton sketch: convergence (left) and Hessian-sketch
+//! wall-clock time vs dimension (right).
+//!
+//! Left: optimality gap vs iteration for exact Newton, Gaussian sketch, and
+//! TripleSpin sketches on logistic regression with `Σ_ij = 0.99^|i-j|`
+//! design rows. Right: time to *form the sketched Hessian* — the paper's
+//! `O(nd²)` exact vs `O(dn log n + md²)` structured comparison.
+//!
+//!     cargo bench --bench fig3_newton   (TS_FULL=1 for larger n sweep)
+
+use std::time::Instant;
+use triplespin::data::logistic;
+use triplespin::sketch::logistic::gram_t;
+use triplespin::sketch::newton::sketch_apply;
+use triplespin::sketch::{newton_solve, NewtonOptions, SketchKind};
+use triplespin::transform::Family;
+use triplespin::util::bench::{self, Opts};
+use triplespin::util::rng::Rng;
+
+fn main() {
+    let full = std::env::var("TS_FULL").is_ok();
+
+    // ---------- left panel: convergence ----------
+    let (n, d) = (4096usize, 64usize);
+    let m = 4 * d;
+    println!("== Figure 3 (left): optimality gap vs iteration (n={n}, d={d}, sketch m={m}) ==\n");
+    let p = logistic::generate(n, d, 0.99, 1);
+    let f_star = *newton_solve(
+        &p,
+        SketchKind::Exact,
+        NewtonOptions {
+            max_iters: 60,
+            ..Default::default()
+        },
+    )
+    .values
+    .last()
+    .unwrap();
+
+    let kinds = [
+        SketchKind::Exact,
+        SketchKind::Gaussian,
+        SketchKind::Struct(Family::Hd3),
+        SketchKind::Struct(Family::Hdg),
+        SketchKind::Struct(Family::Toeplitz),
+        SketchKind::Struct(Family::SkewCirculant),
+    ];
+    let iters_shown = [1usize, 2, 3, 4, 6, 8, 12, 16, 20];
+    print!("{:<26}", "sketch \\ iteration");
+    for it in iters_shown {
+        print!(" {it:>9}");
+    }
+    println!();
+    for kind in kinds {
+        let trace = newton_solve(
+            &p,
+            kind,
+            NewtonOptions {
+                sketch_rows: m,
+                max_iters: 20,
+                ..Default::default()
+            },
+        );
+        let gaps = trace.gaps(f_star);
+        print!("{:<26}", kind.label());
+        for it in iters_shown {
+            if it < gaps.len() {
+                print!(" {:>9.2e}", gaps[it]);
+            } else {
+                print!(" {:>9}", "conv");
+            }
+        }
+        println!();
+    }
+    println!("\n(paper: sketched variants converge linearly, a constant factor behind\n exact Newton; all TripleSpin curves overlap the Gaussian-sketch curve)");
+
+    // ---------- right panel: Hessian-sketch wall-clock ----------
+    // exact Hessian formation is O(n d²); TripleSpin sketch O(d n log n + m d²)
+    // with m = 4d — the structured win appears once d >> log n, so we sweep
+    // both n and the problem dimension d.
+    let max_exp = if full { 15 } else { 13 };
+    let ns: Vec<usize> = (11..=max_exp).map(|e| 1usize << e).collect();
+    let sketch_kinds = [
+        SketchKind::Exact,
+        SketchKind::Gaussian,
+        SketchKind::Struct(Family::Hd3),
+        SketchKind::Struct(Family::Hdg),
+        SketchKind::Struct(Family::Toeplitz),
+    ];
+    for d in [64usize, 256] {
+        let m = 4 * d;
+        println!("\n== Figure 3 (right): time to form the sketched Hessian (d={d}, m={m}) ==\n");
+        print!("{:<26}", "sketch \\ n");
+        for n in &ns {
+            print!(" {:>10}", format!("2^{}", n.trailing_zeros()));
+        }
+        println!();
+        for kind in sketch_kinds {
+            print!("{:<26}", kind.label());
+            for &nn in &ns {
+                // fresh problem at this n; time sketch + d×d Gram formation
+                let p = logistic::generate(nn, d, 0.99, 2);
+                let x0 = vec![0.0f64; d];
+                let b = p.hessian_sqrt(&x0);
+                let opts = Opts {
+                    warmup: std::time::Duration::from_millis(20),
+                    measure: std::time::Duration::from_millis(150),
+                    max_samples: 8,
+                };
+                let mut rng = Rng::new(3);
+                let s = bench::bench("hessian", opts, || {
+                    let t0 = Instant::now();
+                    let sb = sketch_apply(kind, &b, m, &mut rng);
+                    let h = gram_t(&sb, 1e-8);
+                    std::hint::black_box((h, t0));
+                });
+                print!(" {:>10}", bench::fmt_ns(s.mean_ns));
+            }
+            println!();
+        }
+    }
+    println!("\n(paper: exact/Gaussian grow ~linearly in n with a large constant;\n Hadamard-based sketches cheapest once d >> log n — visible in the d=256 table)");
+}

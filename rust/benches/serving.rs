@@ -1,0 +1,110 @@
+//! Serving benchmark (ours) — coordinator throughput and latency,
+//! native vs PJRT backends, batch-size sweep, plus coordinator overhead
+//! over raw backend calls.
+//!
+//!     make artifacts && cargo bench --bench serving
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use triplespin::coordinator::{Backend, Config, Coordinator, NativeBackend, PjrtBackend};
+use triplespin::runtime::{Op, RuntimeService};
+use triplespin::util::rng::Rng;
+
+const N: usize = 256;
+const REQUESTS: usize = 2000;
+
+fn throughput(c: &Coordinator, op: Op) -> (f64, u64, u64) {
+    let mut rng = Rng::new(5);
+    let start = Instant::now();
+    let mut pending = Vec::with_capacity(REQUESTS);
+    for _ in 0..REQUESTS {
+        loop {
+            match c.submit(op, rng.gaussian_vec(N)) {
+                Ok(p) => {
+                    pending.push(p);
+                    break;
+                }
+                Err(triplespin::coordinator::SubmitError::Busy) => {
+                    if let Some((_, rx)) = pending.pop() {
+                        let _ = rx.recv();
+                    }
+                }
+                Err(e) => panic!("{e}"),
+            }
+        }
+    }
+    for (_, rx) in pending {
+        rx.recv().unwrap().result.unwrap();
+    }
+    let dt = start.elapsed();
+    let rps = REQUESTS as f64 / dt.as_secs_f64();
+    let m = c.metrics();
+    let (_, lm) = m.iter().find(|((o, _), _)| *o == op).unwrap();
+    (
+        rps,
+        lm.latency.percentile_us(0.5),
+        lm.latency.percentile_us(0.95),
+    )
+}
+
+fn bench_backend(name: &str, make_backend: &dyn Fn() -> Arc<dyn Backend>) {
+    println!("\n--- backend: {name} ---");
+    println!(
+        "{:<14} {:>12} {:>12} {:>10} {:>10}",
+        "op", "max_batch", "req/s", "p50(µs)", "p95(µs)"
+    );
+    for op in [Op::Transform, Op::Rff, Op::CrossPolytope] {
+        for max_batch in [1usize, 16, 64] {
+            let config = Config {
+                lanes: vec![(op, N)],
+                max_batch,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 1024,
+                sigma: 1.0,
+                seed: 42,
+            };
+            let c = Coordinator::start(config, make_backend());
+            let (rps, p50, p95) = throughput(&c, op);
+            println!("{op:<14} {max_batch:>12} {rps:>12.0} {p50:>10} {p95:>10}");
+            c.shutdown();
+        }
+    }
+}
+
+fn main() {
+    println!("== serving: coordinator throughput/latency (n={N}, {REQUESTS} reqs, 1 client burst) ==");
+
+    // native backend
+    bench_backend("native (Rust FWHT)", &|| {
+        Arc::new(NativeBackend::new(&[N], 1.0, 42)) as Arc<dyn Backend>
+    });
+
+    // coordinator overhead vs raw backend calls (native, batch=1)
+    {
+        let be = NativeBackend::new(&[N], 1.0, 42);
+        let mut rng = Rng::new(6);
+        let xs: Vec<Vec<f32>> = (0..REQUESTS).map(|_| rng.gaussian_vec(N)).collect();
+        let t0 = Instant::now();
+        for x in &xs {
+            std::hint::black_box(be.run_batch(Op::Transform, N, 1, x).unwrap());
+        }
+        let raw = t0.elapsed();
+        println!(
+            "\nraw native backend, batch=1: {:.0} req/s (coordinator overhead = routing+channels+batching)",
+            REQUESTS as f64 / raw.as_secs_f64()
+        );
+    }
+
+    // pjrt backend (requires artifacts)
+    match RuntimeService::spawn("artifacts".into()) {
+        Ok(svc) => {
+            let handle = svc.handle();
+            bench_backend("pjrt (AOT Pallas/JAX artifacts)", &|| {
+                Arc::new(PjrtBackend::new(handle.clone(), &[N], 1.0, 42).unwrap())
+                    as Arc<dyn Backend>
+            });
+            svc.shutdown();
+        }
+        Err(e) => println!("\n(pjrt backend skipped: {e} — run `make artifacts`)"),
+    }
+}

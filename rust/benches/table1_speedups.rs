@@ -1,0 +1,65 @@
+//! Table 1 — matvec speedups `time(G) / time(T)` per TripleSpin family.
+//!
+//! The paper reports dims 2^9..2^15 (single thread, MKL dense baseline).
+//! Default here sweeps 2^9..2^13; set `TS_FULL=1` for 2^14 and 2^15 (the
+//! dense baseline alone needs 1 GiB / 4 GiB and minutes of RNG).
+//!
+//!     cargo bench --bench table1_speedups
+
+use triplespin::transform::{make_square, Family};
+use triplespin::util::bench::{self, Opts};
+use triplespin::util::rng::Rng;
+
+fn main() {
+    let full = std::env::var("TS_FULL").is_ok();
+    let max_exp = if full { 15 } else { 13 };
+    let dims: Vec<usize> = (9..=max_exp).map(|e| 1usize << e).collect();
+
+    println!("== Table 1: matvec speedups time(G)/time(T) ==");
+    println!("(paper: x1.4..x316 over dims 2^9..2^15; shape should match — speedup grows ~n/log n)\n");
+
+    // dense baseline times per dim
+    let mut dense_ns = Vec::new();
+    let opts = Opts::default();
+    for &n in &dims {
+        let t = make_square(Family::Dense, n, &mut Rng::new(1));
+        let x = Rng::new(2).unit_vec(n);
+        let s = bench::bench(&format!("dense n={n}"), opts, || {
+            std::hint::black_box(t.apply(std::hint::black_box(&x)));
+        });
+        dense_ns.push(s.mean_ns);
+        eprintln!("baseline dense n={n}: {}", bench::fmt_ns(s.mean_ns));
+    }
+
+    let columns: Vec<String> = dims.iter().map(|n| format!("2^{}", n.trailing_zeros())).collect();
+    let mut rows = Vec::new();
+    for fam in Family::PAPER_SET {
+        let mut vals = Vec::new();
+        for (i, &n) in dims.iter().enumerate() {
+            let t = make_square(fam, n, &mut Rng::new(3));
+            let x = Rng::new(4).unit_vec(n);
+            let s = bench::bench(&format!("{} n={n}", fam.name()), opts, || {
+                std::hint::black_box(t.apply(std::hint::black_box(&x)));
+            });
+            vals.push(format!("x{:.1}", dense_ns[i] / s.mean_ns));
+        }
+        rows.push((fam.label().to_string(), vals));
+    }
+    bench::print_table("speedup over dense Gaussian matvec", &columns, &rows);
+
+    // absolute times for the record
+    let mut abs_rows = Vec::new();
+    for fam in [Family::Dense, Family::Hd3, Family::Hdg, Family::Toeplitz, Family::SkewCirculant] {
+        let mut vals = Vec::new();
+        for &n in &dims {
+            let t = make_square(fam, n, &mut Rng::new(3));
+            let x = Rng::new(4).unit_vec(n);
+            let s = bench::bench("abs", Opts::default(), || {
+                std::hint::black_box(t.apply(std::hint::black_box(&x)));
+            });
+            vals.push(bench::fmt_ns(s.mean_ns));
+        }
+        abs_rows.push((fam.label().to_string(), vals));
+    }
+    bench::print_table("absolute matvec time", &columns, &abs_rows);
+}

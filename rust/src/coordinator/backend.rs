@@ -1,0 +1,366 @@
+//! Execution backends for the coordinator.
+//!
+//! Both backends compute the same model — the `√n·HD3 HD2 HD1` chain and
+//! its derived ops — from the same seeded [`ModelParams`], so they are
+//! interchangeable and cross-checkable:
+//!
+//! * [`NativeBackend`] — pure-Rust hot path (FWHT chain), no artifacts
+//!   needed. The fallback and the perf baseline.
+//! * [`PjrtBackend`] — executes the AOT-compiled JAX/Pallas artifacts via
+//!   the runtime service (the paper-faithful "three-layer" path).
+
+use crate::linalg::fwht::fwht;
+use crate::linalg::vecops::scale_by;
+use crate::runtime::{Op, Output, RuntimeHandle};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Per-dimension model parameters shared by both backends: the three
+/// Rademacher diagonals of the chain plus the RFF bandwidth.
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    pub n: usize,
+    pub d1: Vec<f32>,
+    pub d2: Vec<f32>,
+    pub d3: Vec<f32>,
+    /// `1/σ` for the Gaussian-kernel RFF op.
+    pub inv_sigma: f32,
+}
+
+impl ModelParams {
+    /// Deterministic in (seed, n): both backends derive identical params.
+    pub fn generate(n: usize, sigma: f64, seed: u64) -> ModelParams {
+        assert!(n.is_power_of_two());
+        let mut rng = Rng::new(seed ^ (n as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        ModelParams {
+            n,
+            d1: rng.rademacher_vec(n),
+            d2: rng.rademacher_vec(n),
+            d3: rng.rademacher_vec(n),
+            inv_sigma: (1.0 / sigma) as f32,
+        }
+    }
+}
+
+/// A batch-execution backend. `xs` is a row-major `(rows, n)` buffer.
+pub trait Backend: Send + Sync + 'static {
+    fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String>;
+    /// Output elements **per request row** for (op, n).
+    fn out_elems(&self, op: Op, n: usize) -> usize {
+        match op {
+            Op::Transform => n,
+            Op::Rff => 2 * n,
+            Op::CrossPolytope => 1,
+        }
+    }
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend: the L3-native hot path.
+pub struct NativeBackend {
+    params: HashMap<usize, NativeParams>,
+}
+
+/// [`ModelParams`] plus the perf-folded last diagonal: the chain's global
+/// `1/n` normalization commutes with the linear FWHT, so it is premultiplied
+/// into `d3` — one fewer pass over the row per request (§Perf L3 iter 1).
+struct NativeParams {
+    base: ModelParams,
+    d3_scaled: Vec<f32>,
+}
+
+impl NativeBackend {
+    pub fn new(dims: &[usize], sigma: f64, seed: u64) -> NativeBackend {
+        NativeBackend {
+            params: dims
+                .iter()
+                .map(|&n| {
+                    let base = ModelParams::generate(n, sigma, seed);
+                    let s = 1.0 / n as f32;
+                    let d3_scaled = base.d3.iter().map(|v| v * s).collect();
+                    (n, NativeParams { base, d3_scaled })
+                })
+                .collect(),
+        }
+    }
+
+    fn params(&self, n: usize) -> Result<&NativeParams, String> {
+        self.params
+            .get(&n)
+            .ok_or_else(|| format!("native backend: no params for n={n}"))
+    }
+
+    /// In-place chain on one row: `√n · H D3 H D2 H D1 x` (normalized H).
+    /// Three unnormalized FWHTs contribute n^{3/2}; the remaining
+    /// `√n/n^{3/2} = 1/n` factor is pre-folded into `d3_scaled`.
+    fn chain_row(p: &NativeParams, row: &mut [f32]) {
+        scale_by(row, &p.base.d1);
+        fwht(row);
+        scale_by(row, &p.base.d2);
+        fwht(row);
+        scale_by(row, &p.d3_scaled);
+        fwht(row);
+    }
+}
+
+impl Backend for NativeBackend {
+    fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+        debug_assert_eq!(xs.len(), rows * n);
+        let p = self.params(n)?;
+        match op {
+            Op::Transform => {
+                let mut out = xs.to_vec();
+                for row in out.chunks_exact_mut(n) {
+                    Self::chain_row(p, row);
+                }
+                Ok(Output::F32(out))
+            }
+            Op::Rff => {
+                let mut out = Vec::with_capacity(rows * 2 * n);
+                let mut buf = vec![0.0f32; n];
+                let feat_scale = (1.0 / (n as f64).sqrt()) as f32;
+                for row in xs.chunks_exact(n) {
+                    buf.copy_from_slice(row);
+                    Self::chain_row(p, &mut buf);
+                    for v in &buf {
+                        out.push((v * p.base.inv_sigma).cos() * feat_scale);
+                    }
+                    for v in &buf {
+                        out.push((v * p.base.inv_sigma).sin() * feat_scale);
+                    }
+                }
+                Ok(Output::F32(out))
+            }
+            Op::CrossPolytope => {
+                let mut out = Vec::with_capacity(rows);
+                let mut buf = vec![0.0f32; n];
+                for row in xs.chunks_exact(n) {
+                    buf.copy_from_slice(row);
+                    Self::chain_row(p, &mut buf);
+                    out.push(crate::linalg::vecops::argmax_abs_signed(&buf) as i32);
+                }
+                Ok(Output::I32(out))
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT backend: routes batches to the AOT artifacts via the runtime thread.
+pub struct PjrtBackend {
+    handle: RuntimeHandle,
+    params: HashMap<usize, ModelParams>,
+    /// available (op, n) -> sorted batch sizes, derived from artifact names.
+    batches: HashMap<(Op, usize), Vec<usize>>,
+}
+
+impl PjrtBackend {
+    /// `dims`, `sigma`, `seed` must match the NativeBackend's for parity.
+    pub fn new(
+        handle: RuntimeHandle,
+        dims: &[usize],
+        sigma: f64,
+        seed: u64,
+    ) -> Result<PjrtBackend, String> {
+        let names = handle.names().map_err(|e| e.to_string())?;
+        let mut batches: HashMap<(Op, usize), Vec<usize>> = HashMap::new();
+        for name in &names {
+            // artifact names are "<op>_n<k>_b<B>"
+            if let Some((op, n, b)) = parse_artifact_name(name) {
+                batches.entry((op, n)).or_default().push(b);
+            }
+        }
+        for v in batches.values_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+        Ok(PjrtBackend {
+            handle,
+            params: dims
+                .iter()
+                .map(|&n| (n, ModelParams::generate(n, sigma, seed)))
+                .collect(),
+            batches,
+        })
+    }
+
+    /// Smallest compiled batch >= rows, or the largest available (batches
+    /// larger than it are split by the caller via multiple run calls).
+    pub fn pick_batch(&self, op: Op, n: usize, rows: usize) -> Option<usize> {
+        let avail = self.batches.get(&(op, n))?;
+        avail
+            .iter()
+            .copied()
+            .find(|b| *b >= rows)
+            .or_else(|| avail.last().copied())
+    }
+
+    fn run_padded(
+        &self,
+        op: Op,
+        n: usize,
+        rows: usize,
+        xs: &[f32],
+    ) -> Result<Output, String> {
+        let p = self
+            .params
+            .get(&n)
+            .ok_or_else(|| format!("pjrt backend: no params for n={n}"))?;
+        let b = self
+            .pick_batch(op, n, rows)
+            .ok_or_else(|| format!("no artifact for op={op} n={n}"))?;
+        if rows > b {
+            // split into chunks of <= b rows, concatenate
+            let mut f32_out: Vec<f32> = Vec::new();
+            let mut i32_out: Vec<i32> = Vec::new();
+            let mut is_i32 = false;
+            for chunk in xs.chunks(b * n) {
+                let r = chunk.len() / n;
+                match self.run_padded(op, n, r, chunk)? {
+                    Output::F32(v) => f32_out.extend_from_slice(&v),
+                    Output::I32(v) => {
+                        is_i32 = true;
+                        i32_out.extend_from_slice(&v);
+                    }
+                }
+            }
+            return Ok(if is_i32 {
+                Output::I32(i32_out)
+            } else {
+                Output::F32(f32_out)
+            });
+        }
+        // pad to exactly b rows
+        let mut x = vec![0.0f32; b * n];
+        x[..rows * n].copy_from_slice(xs);
+        let name = format!("{op}_n{n}_b{b}");
+        let mut inputs = vec![x, p.d1.clone(), p.d2.clone(), p.d3.clone()];
+        if op == Op::Rff {
+            inputs.push(vec![p.inv_sigma]);
+        }
+        let out = self
+            .handle
+            .run(&name, inputs)
+            .map_err(|e| e.to_string())?;
+        // strip padding rows
+        let per = self.out_elems(op, n);
+        Ok(match out {
+            Output::F32(v) => Output::F32(v[..rows * per].to_vec()),
+            Output::I32(v) => Output::I32(v[..rows * per].to_vec()),
+        })
+    }
+}
+
+/// Parse "<op>_n<k>_b<B>" artifact names.
+pub fn parse_artifact_name(name: &str) -> Option<(Op, usize, usize)> {
+    let (op_s, rest) = name.split_once("_n")?;
+    let (n_s, b_s) = rest.split_once("_b")?;
+    Some((
+        Op::parse(op_s)?,
+        n_s.parse().ok()?,
+        b_s.parse().ok()?,
+    ))
+}
+
+impl Backend for PjrtBackend {
+    fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+        debug_assert_eq!(xs.len(), rows * n);
+        self.run_padded(op, n, rows, xs)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_params_deterministic() {
+        let a = ModelParams::generate(64, 2.0, 7);
+        let b = ModelParams::generate(64, 2.0, 7);
+        assert_eq!(a.d1, b.d1);
+        assert_eq!(a.d3, b.d3);
+        let c = ModelParams::generate(64, 2.0, 8);
+        assert_ne!(a.d1, c.d1);
+    }
+
+    #[test]
+    fn native_transform_matches_hdchain_scaling() {
+        // the chain output on a unit vector has norm √n
+        let n = 64;
+        let be = NativeBackend::new(&[n], 1.0, 3);
+        let x = Rng::new(5).unit_vec(n);
+        let out = be.run_batch(Op::Transform, n, 1, &x).unwrap();
+        let y = out.as_f32().unwrap();
+        let norm: f64 = y.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((norm - (n as f64).sqrt()).abs() < 1e-3 * (n as f64).sqrt());
+    }
+
+    #[test]
+    fn native_rff_unit_features() {
+        let n = 32;
+        let be = NativeBackend::new(&[n], 2.0, 4);
+        let x = Rng::new(6).unit_vec(n);
+        let out = be.run_batch(Op::Rff, n, 1, &x).unwrap();
+        let phi = out.as_f32().unwrap();
+        assert_eq!(phi.len(), 2 * n);
+        let ss: f64 = phi.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!((ss - 1.0).abs() < 1e-5, "cos²+sin² sums to 1, got {ss}");
+    }
+
+    #[test]
+    fn native_crosspolytope_range_and_scale_invariance() {
+        let n = 64;
+        let be = NativeBackend::new(&[n], 1.0, 5);
+        let x = Rng::new(7).unit_vec(n);
+        let id1 = be.run_batch(Op::CrossPolytope, n, 1, &x).unwrap();
+        let scaled: Vec<f32> = x.iter().map(|v| v * 3.0).collect();
+        let id2 = be.run_batch(Op::CrossPolytope, n, 1, &scaled).unwrap();
+        assert_eq!(id1, id2);
+        let v = id1.as_i32().unwrap()[0];
+        assert!((0..2 * n as i32).contains(&v));
+    }
+
+    #[test]
+    fn native_batch_equals_rowwise() {
+        let n = 32;
+        let be = NativeBackend::new(&[n], 1.0, 6);
+        let mut rng = Rng::new(8);
+        let rows = 5;
+        let xs: Vec<f32> = rng.gaussian_vec(rows * n);
+        let batch = be.run_batch(Op::Transform, n, rows, &xs).unwrap();
+        let batch = batch.as_f32().unwrap();
+        for r in 0..rows {
+            let single = be
+                .run_batch(Op::Transform, n, 1, &xs[r * n..(r + 1) * n])
+                .unwrap();
+            assert_eq!(single.as_f32().unwrap(), &batch[r * n..(r + 1) * n]);
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(
+            parse_artifact_name("transform_n256_b16"),
+            Some((Op::Transform, 256, 16))
+        );
+        assert_eq!(
+            parse_artifact_name("crosspolytope_n64_b1"),
+            Some((Op::CrossPolytope, 64, 1))
+        );
+        assert_eq!(parse_artifact_name("junk"), None);
+        assert_eq!(parse_artifact_name("transform_nX_b1"), None);
+    }
+
+    #[test]
+    fn unknown_dim_is_error() {
+        let be = NativeBackend::new(&[64], 1.0, 1);
+        assert!(be.run_batch(Op::Transform, 128, 1, &vec![0.0; 128]).is_err());
+    }
+}

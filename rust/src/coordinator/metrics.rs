@@ -1,0 +1,177 @@
+//! Lock-free coordinator metrics: per-lane counters and a log-bucketed
+//! latency histogram with percentile queries and a JSON dump.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of latency buckets: bucket `i` holds samples in
+/// `[2^i, 2^{i+1})` microseconds; bucket 0 holds `< 2 µs`.
+const BUCKETS: usize = 32;
+
+/// Latency histogram over microseconds (powers of two).
+#[derive(Default)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    total: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate percentile (upper bucket edge), q in [0, 1].
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+}
+
+/// Per-lane metrics.
+#[derive(Default)]
+pub struct LaneMetrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_rows: AtomicU64,
+    pub latency: Histogram,
+}
+
+impl LaneMetrics {
+    pub fn new() -> LaneMetrics {
+        LaneMetrics::default()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_rows.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "submitted",
+                Json::Num(self.submitted.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "rejected",
+                Json::Num(self.rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "completed",
+                Json::Num(self.completed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "failed",
+                Json::Num(self.failed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "batches",
+                Json::Num(self.batches.load(Ordering::Relaxed) as f64),
+            ),
+            ("mean_batch", Json::Num(self.mean_batch_size())),
+            ("latency_mean_us", Json::Num(self.latency.mean_us())),
+            (
+                "latency_p50_us",
+                Json::Num(self.latency.percentile_us(0.50) as f64),
+            ),
+            (
+                "latency_p95_us",
+                Json::Num(self.latency.percentile_us(0.95) as f64),
+            ),
+            (
+                "latency_p99_us",
+                Json::Num(self.latency.percentile_us(0.99) as f64),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::new();
+        for us in [1u64, 2, 4, 10, 100, 1000, 10_000] {
+            for _ in 0..10 {
+                h.record_us(us);
+            }
+        }
+        assert_eq!(h.count(), 70);
+        let p50 = h.percentile_us(0.5);
+        let p95 = h.percentile_us(0.95);
+        let p99 = h.percentile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn percentile_covers_large_values() {
+        let h = Histogram::new();
+        h.record_us(u64::MAX / 2);
+        assert!(h.percentile_us(0.5) > 0);
+    }
+
+    #[test]
+    fn lane_metrics_json() {
+        let m = LaneMetrics::new();
+        m.submitted.store(10, Ordering::Relaxed);
+        m.completed.store(9, Ordering::Relaxed);
+        m.batches.store(3, Ordering::Relaxed);
+        m.batched_rows.store(9, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("submitted").unwrap().as_f64(), Some(10.0));
+        assert_eq!(j.get("mean_batch").unwrap().as_f64(), Some(3.0));
+        // serializes to valid JSON
+        let s = j.to_string();
+        assert!(Json::parse(&s).is_ok());
+    }
+}

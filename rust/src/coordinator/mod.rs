@@ -1,0 +1,582 @@
+//! Layer-3 serving coordinator: request router → per-lane dynamic batcher →
+//! backend execution (PJRT artifacts or native Rust), with bounded-queue
+//! backpressure and per-lane metrics.
+//!
+//! Topology: one ingress per lane (an `(op, n)` pair). [`Coordinator::submit`]
+//! routes a request to its lane's bounded channel — a full channel rejects
+//! with [`SubmitError::Busy`] (explicit load-shedding, never unbounded
+//! memory). Each lane runs a thread that drains up to `max_batch` requests
+//! (waiting at most `max_wait` after the first), pads the tail, executes one
+//! backend call, and fans responses back out on per-request channels.
+//!
+//! Invariants (property-tested below and in `rust/tests/`):
+//! * every accepted request receives exactly one response;
+//! * batch sizes never exceed `max_batch`;
+//! * padding rows never leak into responses;
+//! * routing is a pure function of `(op, dim)`;
+//! * FIFO order within a lane.
+
+pub mod backend;
+pub mod server;
+pub mod metrics;
+
+pub use backend::{Backend, ModelParams, NativeBackend, PjrtBackend};
+pub use metrics::LaneMetrics;
+pub use server::TcpServer;
+
+use crate::runtime::{Op, Output};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Lanes to open: (op, input dim n). n must be a power of two.
+    pub lanes: Vec<(Op, usize)>,
+    /// Max requests per backend call.
+    pub max_batch: usize,
+    /// How long a lane waits to fill a batch after the first request.
+    pub max_wait: Duration,
+    /// Bounded ingress queue per lane (backpressure limit).
+    pub queue_cap: usize,
+    /// Gaussian-kernel bandwidth for the RFF op.
+    pub sigma: f64,
+    /// Model seed (both backends derive identical diagonals from it).
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            lanes: vec![(Op::Transform, 256), (Op::Rff, 256), (Op::CrossPolytope, 256)],
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 1024,
+            sigma: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+/// A response: the per-request slice of the batch output.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<Output, String>,
+}
+
+/// Submission failure modes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The lane's queue is full — shed load and retry later.
+    Busy,
+    /// No lane for this (op, dim).
+    UnknownLane,
+    /// Input length != lane dim.
+    BadDim,
+    /// Coordinator is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy => write!(f, "lane queue full"),
+            SubmitError::UnknownLane => write!(f, "no lane for (op, dim)"),
+            SubmitError::BadDim => write!(f, "input dim mismatch"),
+            SubmitError::Closed => write!(f, "coordinator closed"),
+        }
+    }
+}
+
+struct Job {
+    id: u64,
+    vector: Vec<f32>,
+    reply: mpsc::Sender<Response>,
+    enqueued: Instant,
+}
+
+struct Lane {
+    tx: SyncSender<Job>,
+    metrics: Arc<LaneMetrics>,
+    n: usize,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    lanes: HashMap<(Op, usize), Lane>,
+    next_id: AtomicU64,
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start one batcher thread per lane over a shared backend.
+    pub fn start(config: Config, backend: Arc<dyn Backend>) -> Coordinator {
+        let mut lanes = HashMap::new();
+        let mut joins = Vec::new();
+        for (op, n) in &config.lanes {
+            let (op, n) = (*op, *n);
+            let (tx, rx) = mpsc::sync_channel::<Job>(config.queue_cap);
+            let metrics = Arc::new(LaneMetrics::new());
+            let be = Arc::clone(&backend);
+            let m = Arc::clone(&metrics);
+            let max_batch = config.max_batch;
+            let max_wait = config.max_wait;
+            let join = std::thread::Builder::new()
+                .name(format!("lane-{op}-{n}"))
+                .spawn(move || lane_loop(rx, be, op, n, max_batch, max_wait, m))
+                .expect("spawn lane thread");
+            joins.push(join);
+            lanes.insert((op, n), Lane { tx, metrics, n });
+        }
+        Coordinator {
+            lanes,
+            next_id: AtomicU64::new(1),
+            joins,
+        }
+    }
+
+    /// Submit a request. Returns the request id and a receiver for the
+    /// response. Non-blocking: a full lane returns [`SubmitError::Busy`].
+    pub fn submit(
+        &self,
+        op: Op,
+        vector: Vec<f32>,
+    ) -> Result<(u64, Receiver<Response>), SubmitError> {
+        let lane = self
+            .lanes
+            .get(&(op, vector.len()))
+            .ok_or(SubmitError::UnknownLane)?;
+        if vector.len() != lane.n {
+            return Err(SubmitError::BadDim);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        let job = Job {
+            id,
+            vector,
+            reply,
+            enqueued: Instant::now(),
+        };
+        lane.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match lane.tx.try_send(job) {
+            Ok(()) => Ok((id, rx)),
+            Err(TrySendError::Full(_)) => {
+                lane.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Busy)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Submit and wait for the response (convenience for examples / CLI).
+    pub fn call(&self, op: Op, vector: Vec<f32>) -> Result<Output, String> {
+        let (_, rx) = self.submit(op, vector).map_err(|e| e.to_string())?;
+        rx.recv()
+            .map_err(|_| "coordinator dropped response".to_string())?
+            .result
+    }
+
+    /// Per-lane metrics handles.
+    pub fn metrics(&self) -> Vec<((Op, usize), Arc<LaneMetrics>)> {
+        let mut v: Vec<_> = self
+            .lanes
+            .iter()
+            .map(|(k, l)| (*k, Arc::clone(&l.metrics)))
+            .collect();
+        v.sort_by_key(|((op, n), _)| (op.name(), *n));
+        v
+    }
+
+    /// Metrics as a JSON document.
+    pub fn metrics_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(
+            self.metrics()
+                .into_iter()
+                .map(|((op, n), m)| (format!("{op}_n{n}"), m.to_json()))
+                .collect(),
+        )
+    }
+
+    /// Stop accepting requests, drain lanes, join threads.
+    pub fn shutdown(mut self) {
+        // dropping the senders closes the lanes
+        self.lanes.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+fn lane_loop(
+    rx: mpsc::Receiver<Job>,
+    backend: Arc<dyn Backend>,
+    op: Op,
+    n: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    metrics: Arc<LaneMetrics>,
+) {
+    let per = backend.out_elems(op, n);
+    loop {
+        // block for the first job of the batch
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // all senders dropped -> shutdown
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + max_wait;
+        while jobs.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        debug_assert!(jobs.len() <= max_batch);
+
+        // assemble the batch buffer
+        let rows = jobs.len();
+        let mut xs = Vec::with_capacity(rows * n);
+        for j in &jobs {
+            xs.extend_from_slice(&j.vector);
+        }
+        let result = backend.run_batch(op, n, rows, &xs);
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+
+        match result {
+            Ok(out) => {
+                for (i, job) in jobs.into_iter().enumerate() {
+                    let slice = match &out {
+                        Output::F32(v) => Output::F32(v[i * per..(i + 1) * per].to_vec()),
+                        Output::I32(v) => Output::I32(v[i * per..(i + 1) * per].to_vec()),
+                    };
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .latency
+                        .record_us(job.enqueued.elapsed().as_micros() as u64);
+                    let _ = job.reply.send(Response {
+                        id: job.id,
+                        result: Ok(slice),
+                    });
+                }
+            }
+            Err(e) => {
+                for job in jobs {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Response {
+                        id: job.id,
+                        result: Err(e.clone()),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn test_coordinator(max_batch: usize, queue_cap: usize) -> Coordinator {
+        let config = Config {
+            lanes: vec![
+                (Op::Transform, 64),
+                (Op::Rff, 64),
+                (Op::CrossPolytope, 64),
+            ],
+            max_batch,
+            max_wait: Duration::from_micros(500),
+            queue_cap,
+            sigma: 1.0,
+            seed: 9,
+        };
+        let backend = Arc::new(NativeBackend::new(&[64], config.sigma, config.seed));
+        Coordinator::start(config, backend)
+    }
+
+    #[test]
+    fn every_request_gets_exactly_one_response() {
+        let c = test_coordinator(8, 256);
+        let mut rng = Rng::new(1);
+        let mut rxs = Vec::new();
+        for _ in 0..100 {
+            let v = rng.gaussian_vec(64);
+            let (id, rx) = c.submit(Op::Transform, v).unwrap();
+            rxs.push((id, rx));
+        }
+        for (id, rx) in rxs {
+            let resp = rx.recv().expect("one response");
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.result.unwrap().as_f32().unwrap().len(), 64);
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_lane_and_bad_dim_rejected() {
+        let c = test_coordinator(8, 16);
+        assert_eq!(
+            c.submit(Op::Transform, vec![0.0; 128]).unwrap_err(),
+            SubmitError::UnknownLane
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn responses_match_direct_backend_call() {
+        // padding rows must never leak: coordinator output == direct call
+        let config = Config {
+            lanes: vec![(Op::Rff, 64)],
+            max_batch: 16,
+            max_wait: Duration::from_micros(100),
+            queue_cap: 64,
+            sigma: 2.0,
+            seed: 11,
+        };
+        let backend = Arc::new(NativeBackend::new(&[64], 2.0, 11));
+        let direct = NativeBackend::new(&[64], 2.0, 11);
+        let c = Coordinator::start(config, backend);
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let v = rng.gaussian_vec(64);
+            let got = c.call(Op::Rff, v.clone()).unwrap();
+            let want = direct.run_batch(Op::Rff, 64, 1, &v).unwrap();
+            assert_eq!(got, want);
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn fifo_within_lane() {
+        let c = test_coordinator(4, 256);
+        let mut rng = Rng::new(3);
+        let mut pairs = Vec::new();
+        for _ in 0..50 {
+            let v = rng.gaussian_vec(64);
+            pairs.push(c.submit(Op::CrossPolytope, v).unwrap());
+        }
+        let mut last = 0u64;
+        for (id, rx) in pairs {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.id, id);
+            assert!(id > last, "ids must arrive in submit order");
+            last = id;
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // tiny queue + slow drain: force Busy
+        let config = Config {
+            lanes: vec![(Op::Transform, 64)],
+            max_batch: 1,
+            max_wait: Duration::from_millis(50),
+            queue_cap: 2,
+            sigma: 1.0,
+            seed: 1,
+        };
+        let backend = Arc::new(NativeBackend::new(&[64], 1.0, 1));
+        let c = Coordinator::start(config, backend);
+        let mut rng = Rng::new(4);
+        let mut saw_busy = false;
+        let mut rxs = Vec::new();
+        for _ in 0..200 {
+            match c.submit(Op::Transform, rng.gaussian_vec(64)) {
+                Ok(p) => rxs.push(p),
+                Err(SubmitError::Busy) => {
+                    saw_busy = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(saw_busy, "bounded queue must eventually reject");
+        // accepted requests all complete
+        for (_, rx) in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn metrics_track_counts() {
+        let c = test_coordinator(8, 256);
+        let mut rng = Rng::new(5);
+        for _ in 0..30 {
+            c.call(Op::Transform, rng.gaussian_vec(64)).unwrap();
+        }
+        let m = c.metrics();
+        let (_, tm) = m
+            .iter()
+            .find(|((op, n), _)| *op == Op::Transform && *n == 64)
+            .unwrap();
+        assert_eq!(tm.submitted.load(Ordering::Relaxed), 30);
+        assert_eq!(tm.completed.load(Ordering::Relaxed), 30);
+        assert_eq!(tm.failed.load(Ordering::Relaxed), 0);
+        assert!(tm.latency.count() == 30);
+        let j = c.metrics_json().to_string();
+        assert!(crate::util::json::Json::parse(&j).is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let c = Arc::new(test_coordinator(16, 1024));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let cc = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for _ in 0..25 {
+                    let out = cc.call(Op::Transform, rng.gaussian_vec(64)).unwrap();
+                    assert_eq!(out.as_f32().unwrap().len(), 64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        if let Ok(c) = Arc::try_unwrap(c) {
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        // submit a burst, then check mean batch size > 1
+        let c = test_coordinator(32, 1024);
+        let mut rng = Rng::new(6);
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            rxs.push(c.submit(Op::Transform, rng.gaussian_vec(64)).unwrap());
+        }
+        for (_, rx) in rxs {
+            rx.recv().unwrap().result.unwrap();
+        }
+        let m = c.metrics();
+        let (_, tm) = m
+            .iter()
+            .find(|((op, _), _)| *op == Op::Transform)
+            .unwrap();
+        assert!(
+            tm.mean_batch_size() > 1.5,
+            "mean batch {} — burst should batch",
+            tm.mean_batch_size()
+        );
+        c.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod failure_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Backend that fails every call — exercises the error fan-out path.
+    struct FailingBackend;
+
+    impl Backend for FailingBackend {
+        fn run_batch(
+            &self,
+            _op: Op,
+            _n: usize,
+            _rows: usize,
+            _xs: &[f32],
+        ) -> Result<Output, String> {
+            Err("injected failure".into())
+        }
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    /// Backend that fails intermittently (every other batch).
+    struct FlakyBackend {
+        inner: NativeBackend,
+        calls: std::sync::atomic::AtomicU64,
+    }
+
+    impl Backend for FlakyBackend {
+        fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+            let c = self.calls.fetch_add(1, Ordering::Relaxed);
+            if c % 2 == 1 {
+                Err("flaky".into())
+            } else {
+                self.inner.run_batch(op, n, rows, xs)
+            }
+        }
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+    }
+
+    fn config() -> Config {
+        Config {
+            lanes: vec![(Op::Transform, 64)],
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            queue_cap: 64,
+            sigma: 1.0,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn failing_backend_errors_propagate_to_every_request() {
+        let c = Coordinator::start(config(), Arc::new(FailingBackend));
+        let mut rng = Rng::new(1);
+        let mut rxs = Vec::new();
+        for _ in 0..20 {
+            rxs.push(c.submit(Op::Transform, rng.gaussian_vec(64)).unwrap());
+        }
+        for (id, rx) in rxs {
+            let resp = rx.recv().expect("a response, even on failure");
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.result.unwrap_err(), "injected failure");
+        }
+        let m = c.metrics();
+        let (_, lm) = &m[0];
+        assert_eq!(lm.failed.load(Ordering::Relaxed), 20);
+        assert_eq!(lm.completed.load(Ordering::Relaxed), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn flaky_backend_keeps_lane_alive() {
+        // a failed batch must not kill the lane: later requests succeed.
+        let be = FlakyBackend {
+            inner: NativeBackend::new(&[64], 1.0, 1),
+            calls: std::sync::atomic::AtomicU64::new(0),
+        };
+        let c = Coordinator::start(config(), Arc::new(be));
+        let mut rng = Rng::new(2);
+        let (mut ok, mut err) = (0, 0);
+        for _ in 0..30 {
+            match c.call(Op::Transform, rng.gaussian_vec(64)) {
+                Ok(out) => {
+                    assert_eq!(out.as_f32().unwrap().len(), 64);
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert_eq!(e, "flaky");
+                    err += 1;
+                }
+            }
+        }
+        assert!(ok > 0, "some requests must succeed");
+        assert!(err > 0, "some requests must fail (flaky backend)");
+        c.shutdown();
+    }
+}

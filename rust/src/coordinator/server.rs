@@ -1,0 +1,265 @@
+//! TCP serving front: newline-delimited JSON over `std::net`.
+//!
+//! Protocol (one JSON document per line):
+//!
+//! ```text
+//! -> {"id": 7, "op": "transform", "vector": [0.1, -0.3, ...]}
+//! <- {"id": 7, "ok": true, "result": [ ... ]}
+//! <- {"id": 7, "ok": false, "error": "lane queue full"}
+//! ```
+//!
+//! Each connection gets a handler thread; requests within a connection are
+//! pipelined (responses come back in submit order, matching the lane's
+//! FIFO guarantee). Backpressure surfaces as `ok: false / "lane queue
+//! full"` so clients can retry with jitter.
+
+use super::{Coordinator, SubmitError};
+use crate::runtime::{Op, Output};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Handle to a running TCP server.
+pub struct TcpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (use port 0 for ephemeral) and serve `coordinator`.
+    pub fn start(coordinator: Arc<Coordinator>, addr: &str) -> std::io::Result<TcpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_join = std::thread::Builder::new()
+            .name("tcp-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let c = Arc::clone(&coordinator);
+                            let _ = std::thread::Builder::new()
+                                .name("tcp-conn".into())
+                                .spawn(move || handle_connection(stream, c));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(TcpServer {
+            addr: local,
+            stop,
+            accept_join: Some(accept_join),
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and join the accept thread. Existing
+    /// connection handlers finish their in-flight lines and exit on EOF.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // unblock accept() with a no-op connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = process_line(&line, &coordinator);
+        if writer
+            .write_all(format!("{reply}\n").as_bytes())
+            .is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer; // connection closed
+}
+
+/// Parse one request line, execute, format the response (pure function —
+/// unit-testable without sockets).
+pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
+    let doc = match Json::parse(line) {
+        Ok(d) => d,
+        Err(e) => return err_response(Json::Null, &format!("bad json: {e}")),
+    };
+    let id = doc.get("id").cloned().unwrap_or(Json::Null);
+    let Some(op) = doc.get("op").and_then(|o| o.as_str()).and_then(Op::parse) else {
+        return err_response(id, "missing or unknown 'op'");
+    };
+    let Some(vec_json) = doc.get("vector").and_then(|v| v.as_arr()) else {
+        return err_response(id, "missing 'vector' array");
+    };
+    let mut vector = Vec::with_capacity(vec_json.len());
+    for v in vec_json {
+        match v.as_f64() {
+            Some(f) => vector.push(f as f32),
+            None => return err_response(id, "'vector' must contain numbers"),
+        }
+    }
+    match coordinator.submit(op, vector) {
+        Ok((_, rx)) => match rx.recv() {
+            Ok(resp) => match resp.result {
+                Ok(out) => ok_response(id, out),
+                Err(e) => err_response(id, &e),
+            },
+            Err(_) => err_response(id, "coordinator dropped response"),
+        },
+        Err(SubmitError::Busy) => err_response(id, "lane queue full"),
+        Err(e) => err_response(id, &e.to_string()),
+    }
+}
+
+fn ok_response(id: Json, out: Output) -> Json {
+    let result = match out {
+        Output::F32(v) => Json::Arr(v.into_iter().map(|x| Json::Num(x as f64)).collect()),
+        Output::I32(v) => Json::Arr(v.into_iter().map(|x| Json::Num(x as f64)).collect()),
+    };
+    Json::obj(vec![("id", id), ("ok", Json::Bool(true)), ("result", result)])
+}
+
+fn err_response(id: Json, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", id),
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Config, NativeBackend};
+    use std::time::Duration;
+
+    fn coordinator() -> Arc<Coordinator> {
+        let config = Config {
+            lanes: vec![(Op::Transform, 64), (Op::CrossPolytope, 64)],
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 64,
+            sigma: 1.0,
+            seed: 3,
+        };
+        let backend = Arc::new(NativeBackend::new(&[64], 1.0, 3));
+        Arc::new(Coordinator::start(config, backend))
+    }
+
+    #[test]
+    fn process_line_happy_path() {
+        let c = coordinator();
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", i as f32 / 64.0)).collect();
+        let line = format!(
+            r#"{{"id": 1, "op": "transform", "vector": [{}]}}"#,
+            vec_str.join(",")
+        );
+        let resp = process_line(&line, &c);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("id").unwrap().as_f64(), Some(1.0));
+        assert_eq!(resp.get("result").unwrap().as_arr().unwrap().len(), 64);
+    }
+
+    #[test]
+    fn process_line_errors() {
+        let c = coordinator();
+        // bad json
+        let r = process_line("{nope", &c);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        // unknown op
+        let r = process_line(r#"{"id":2,"op":"nope","vector":[1]}"#, &c);
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("op"));
+        // missing vector
+        let r = process_line(r#"{"id":3,"op":"transform"}"#, &c);
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("vector"));
+        // wrong dim -> unknown lane
+        let r = process_line(r#"{"id":4,"op":"transform","vector":[1,2]}"#, &c);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        let c = coordinator();
+        let server = TcpServer::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", (i % 5) as f32)).collect();
+        // pipeline three requests
+        for id in 1..=3 {
+            let line = format!(
+                "{{\"id\": {id}, \"op\": \"crosspolytope\", \"vector\": [{}]}}\n",
+                vec_str.join(",")
+            );
+            stream.write_all(line.as_bytes()).unwrap();
+        }
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        for id in 1..=3 {
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            let doc = Json::parse(resp.trim()).unwrap();
+            assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{resp}");
+            assert_eq!(doc.get("id").unwrap().as_f64(), Some(id as f64));
+            let ids = doc.get("result").unwrap().as_arr().unwrap();
+            assert_eq!(ids.len(), 1);
+            // all three identical requests -> identical hash ids
+        }
+        drop(reader);
+        server.shutdown();
+    }
+
+    #[test]
+    fn tcp_multiple_clients() {
+        let c = coordinator();
+        let server = TcpServer::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let mut joins = Vec::new();
+        for t in 0..3 {
+            joins.push(std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let vec_str: Vec<String> =
+                    (0..64).map(|i| format!("{}", ((i + t) % 7) as f32)).collect();
+                let line = format!(
+                    "{{\"id\": {t}, \"op\": \"transform\", \"vector\": [{}]}}\n",
+                    vec_str.join(",")
+                );
+                stream.write_all(line.as_bytes()).unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                let doc = Json::parse(resp.trim()).unwrap();
+                assert_eq!(doc.get("ok"), Some(&Json::Bool(true)));
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        server.shutdown();
+    }
+}

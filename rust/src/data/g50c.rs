@@ -1,0 +1,97 @@
+//! G50C: 550 points in R^50 drawn from two multivariate Gaussians.
+//!
+//! The original dataset is itself synthetic — two Gaussians whose means are
+//! placed so the Bayes error is ~5%. We reproduce that construction: means
+//! `±μ·e` along a random unit direction, identity covariance.
+
+use crate::util::rng::Rng;
+
+pub const DIM: usize = 50;
+pub const COUNT: usize = 550;
+
+/// Generate the G50C-like dataset: `count` points, labels ±1, two Gaussian
+/// classes separated along a random direction.
+pub fn dataset_with_labels(count: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let dir = rng.unit_vec(DIM);
+    let sep = 2.5f32; // class-mean separation giving ≈5% overlap
+    let mut pts = Vec::with_capacity(count);
+    let mut labels = Vec::with_capacity(count);
+    for i in 0..count {
+        let y: f32 = if i % 2 == 0 { 1.0 } else { -1.0 };
+        let p: Vec<f32> = (0..DIM)
+            .map(|j| rng.gaussian_f32() + y * sep * dir[j])
+            .collect();
+        pts.push(p);
+        labels.push(y);
+    }
+    (pts, labels)
+}
+
+/// The standard 550-point instance.
+pub fn dataset(seed: u64) -> Vec<Vec<f32>> {
+    dataset_with_labels(COUNT, seed).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::dot;
+
+    #[test]
+    fn shape() {
+        let pts = dataset(1);
+        assert_eq!(pts.len(), COUNT);
+        assert!(pts.iter().all(|p| p.len() == DIM));
+    }
+
+    #[test]
+    fn two_classes_are_separated() {
+        let (pts, labels) = dataset_with_labels(400, 2);
+        // project onto the difference of class means: classes should separate
+        let mut mean_pos = vec![0.0f32; DIM];
+        let mut mean_neg = vec![0.0f32; DIM];
+        let (mut np, mut nn) = (0, 0);
+        for (p, y) in pts.iter().zip(&labels) {
+            if *y > 0.0 {
+                for (m, v) in mean_pos.iter_mut().zip(p) {
+                    *m += v;
+                }
+                np += 1;
+            } else {
+                for (m, v) in mean_neg.iter_mut().zip(p) {
+                    *m += v;
+                }
+                nn += 1;
+            }
+        }
+        for m in mean_pos.iter_mut() {
+            *m /= np as f32;
+        }
+        for m in mean_neg.iter_mut() {
+            *m /= nn as f32;
+        }
+        let w: Vec<f32> = mean_pos.iter().zip(&mean_neg).map(|(a, b)| a - b).collect();
+        let mut errors = 0;
+        for (p, y) in pts.iter().zip(&labels) {
+            let centered: Vec<f32> = p
+                .iter()
+                .zip(mean_pos.iter().zip(&mean_neg))
+                .map(|(v, (a, b))| v - 0.5 * (a + b))
+                .collect();
+            let pred = if dot(&w, &centered) > 0.0 { 1.0 } else { -1.0 };
+            if pred != *y {
+                errors += 1;
+            }
+        }
+        let err_rate = errors as f64 / pts.len() as f64;
+        assert!(err_rate < 0.12, "linear error rate {err_rate} (want ~5%)");
+        assert!(err_rate > 0.0005 || errors == 0); // sanity
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(dataset(9)[0], dataset(9)[0]);
+        assert_ne!(dataset(9)[0], dataset(10)[0]);
+    }
+}

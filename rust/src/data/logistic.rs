@@ -1,0 +1,85 @@
+//! Newton-sketch experiment data (paper §6.3): design matrix `A ∈ R^{n×d}`
+//! with rows from a centered Gaussian with AR(1) covariance
+//! `Σ_ij = ρ^|i-j|` (ρ = 0.99 in the paper), labels `y ∈ {-1, 1}` random.
+
+use crate::linalg::Mat;
+use crate::sketch::logistic::LogisticProblem;
+use crate::util::rng::Rng;
+
+/// Draw one AR(1) row: `a_1 = g_1`, `a_j = ρ a_{j-1} + √(1-ρ²) g_j`, which
+/// has exactly the covariance `Σ_ij = ρ^|i-j|`.
+pub fn ar1_row(d: usize, rho: f64, rng: &mut Rng) -> Vec<f32> {
+    let mut row = Vec::with_capacity(d);
+    let innov = (1.0 - rho * rho).sqrt();
+    let mut prev = rng.gaussian();
+    row.push(prev as f32);
+    for _ in 1..d {
+        prev = rho * prev + innov * rng.gaussian();
+        row.push(prev as f32);
+    }
+    row
+}
+
+/// Generate the full logistic-regression instance.
+pub fn generate(n: usize, d: usize, rho: f64, seed: u64) -> LogisticProblem {
+    let mut rng = Rng::new(seed);
+    let mut a = Mat::zeros(n, d);
+    for i in 0..n {
+        let row = ar1_row(d, rho, &mut rng);
+        a.data[i * d..(i + 1) * d].copy_from_slice(&row);
+    }
+    let y: Vec<f32> = (0..n).map(|_| rng.rademacher()).collect();
+    LogisticProblem::new(a, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ar1_covariance_structure() {
+        // empirical Σ_ij ≈ ρ^|i-j| over many rows
+        let d = 8;
+        let rho = 0.9f64;
+        let mut rng = Rng::new(1);
+        let trials = 30_000;
+        let mut cov = vec![0.0f64; d * d];
+        for _ in 0..trials {
+            let r = ar1_row(d, rho, &mut rng);
+            for i in 0..d {
+                for j in 0..d {
+                    cov[i * d + j] += r[i] as f64 * r[j] as f64;
+                }
+            }
+        }
+        for v in cov.iter_mut() {
+            *v /= trials as f64;
+        }
+        for i in 0..d {
+            for j in 0..d {
+                let expect = rho.powi((i as i32 - j as i32).abs());
+                assert!(
+                    (cov[i * d + j] - expect).abs() < 0.05,
+                    "cov[{i}][{j}] = {} want {expect}",
+                    cov[i * d + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn problem_shape_and_labels() {
+        let p = generate(100, 10, 0.99, 2);
+        assert_eq!(p.n(), 100);
+        assert_eq!(p.d(), 10);
+        assert!(p.y.iter().all(|v| *v == 1.0 || *v == -1.0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let p1 = generate(20, 5, 0.99, 3);
+        let p2 = generate(20, 5, 0.99, 3);
+        assert_eq!(p1.a.data, p2.a.data);
+        assert_eq!(p1.y, p2.y);
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic datasets standing in for the paper's workloads.
+//!
+//! Substitutions (rationale in DESIGN.md §4):
+//! * [`uspst`] — USPST (2007 handwritten-digit scans, 16×16) → synthetic
+//!   stroke images with the same point count and image geometry.
+//! * [`g50c`] — G50C (550 points from two Gaussians in R^50) → generated
+//!   exactly as described; the original *is* synthetic Gaussian.
+//! * [`logistic`] — the Newton-sketch design matrix `A` with AR(1) row
+//!   covariance `Σ_ij = 0.99^|i-j|` and random ±1 labels, per §6.3.
+
+pub mod g50c;
+pub mod logistic;
+pub mod uspst;

@@ -1,0 +1,124 @@
+//! USPST-like synthetic digits: 16×16 grayscale stroke images.
+//!
+//! The paper's Figure 2 uses USPST (test split of USPS): 2007 points,
+//! n=258 descriptors of 16×16 scans. The experiment measures Gram-matrix
+//! reconstruction, which depends only on point-cloud geometry — so we
+//! synthesize a smooth, correlated, image-like cloud: each sample renders
+//! 2–4 Gaussian-blob strokes along a random polyline onto a 16×16 canvas.
+//! We use n=256 directly (the Hadamard pipeline zero-pads to powers of two
+//! anyway; USPST's 258 would pad to 512).
+
+use crate::util::rng::Rng;
+
+pub const IMG: usize = 16;
+pub const DIM: usize = IMG * IMG; // 256
+pub const COUNT: usize = 2007;
+
+/// Render one synthetic digit-like stroke image, normalized to unit L2 norm.
+pub fn sample(rng: &mut Rng) -> Vec<f32> {
+    let mut img = vec![0.0f32; DIM];
+    // a polyline of 2..=4 segments with blobs stamped along it
+    let segments = 2 + rng.below(3) as usize;
+    let mut x = 2.0 + rng.uniform() * 12.0;
+    let mut y = 2.0 + rng.uniform() * 12.0;
+    let sigma = 0.8 + rng.uniform() * 0.8; // stroke width
+    for _ in 0..segments {
+        let nx = 2.0 + rng.uniform() * 12.0;
+        let ny = 2.0 + rng.uniform() * 12.0;
+        let steps = 8;
+        for s in 0..=steps {
+            let t = s as f64 / steps as f64;
+            let cx = x + t * (nx - x);
+            let cy = y + t * (ny - y);
+            stamp_blob(&mut img, cx, cy, sigma);
+        }
+        x = nx;
+        y = ny;
+    }
+    // normalize like descriptor vectors
+    let norm: f64 = img.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        let inv = (1.0 / norm) as f32;
+        for v in img.iter_mut() {
+            *v *= inv;
+        }
+    }
+    img
+}
+
+fn stamp_blob(img: &mut [f32], cx: f64, cy: f64, sigma: f64) {
+    let r = (3.0 * sigma).ceil() as i64;
+    let (cxi, cyi) = (cx.round() as i64, cy.round() as i64);
+    for dy in -r..=r {
+        for dx in -r..=r {
+            let (px, py) = (cxi + dx, cyi + dy);
+            if px < 0 || py < 0 || px >= IMG as i64 || py >= IMG as i64 {
+                continue;
+            }
+            let ddx = px as f64 - cx;
+            let ddy = py as f64 - cy;
+            let v = (-(ddx * ddx + ddy * ddy) / (2.0 * sigma * sigma)).exp();
+            let idx = (py as usize) * IMG + px as usize;
+            img[idx] = (img[idx] + v as f32).min(4.0);
+        }
+    }
+}
+
+/// The full USPST-like dataset (2007 points, n = 256), deterministic in the
+/// seed.
+pub fn dataset(seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..COUNT).map(|_| sample(&mut rng)).collect()
+}
+
+/// Smaller slice for quick tests / examples.
+pub fn dataset_n(count: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..count).map(|_| sample(&mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::exact::median_bandwidth;
+    use crate::linalg::vecops::norm2;
+
+    #[test]
+    fn shapes_and_normalization() {
+        let pts = dataset_n(50, 1);
+        assert_eq!(pts.len(), 50);
+        for p in &pts {
+            assert_eq!(p.len(), DIM);
+            assert!((norm2(p) - 1.0).abs() < 1e-4);
+            assert!(p.iter().all(|v| *v >= 0.0), "images are non-negative");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        assert_eq!(dataset_n(10, 7), dataset_n(10, 7));
+        assert_ne!(dataset_n(10, 7), dataset_n(10, 8));
+    }
+
+    #[test]
+    fn images_are_smooth_and_sparse_like_digits() {
+        // stroke images: most pixels near zero, a connected minority bright
+        let pts = dataset_n(30, 2);
+        for p in &pts {
+            let bright = p.iter().filter(|v| **v > 0.05).count();
+            assert!(
+                bright > 5 && bright < DIM * 3 / 4,
+                "bright pixel count {bright} not stroke-like"
+            );
+        }
+    }
+
+    #[test]
+    fn pairwise_geometry_nondegenerate() {
+        // points are neither collapsed nor orthogonal — a meaningful kernel
+        // experiment needs spread in similarity
+        let pts = dataset_n(60, 3);
+        let med = median_bandwidth(&pts, 60);
+        assert!(med > 0.3 && med < 2.0, "median distance {med}");
+    }
+}

@@ -1,0 +1,159 @@
+//! Johnson–Lindenstrauss transforms (paper §1/§2's motivating application).
+//!
+//! A JLT embeds `R^n` into `R^k` (`k ≪ n`) while preserving pairwise
+//! Euclidean distances to `1 ± ε`. With a TripleSpin projection the embed
+//! costs `O(n log n)` instead of `O(kn)` — the "fast JLT" line of work
+//! [Ailon–Chazelle, Ailon–Liberty, Vybíral] that the TripleSpin family
+//! subsumes (all those constructions are members).
+
+use crate::linalg::vecops::{euclidean, pad_to};
+use crate::transform::{make, Family, Transform};
+use crate::util::rng::Rng;
+
+/// A `k`-dimensional JL embedding backed by any TripleSpin family.
+pub struct Jlt {
+    transform: Box<dyn Transform>,
+    k: usize,
+    scale: f32,
+}
+
+impl Jlt {
+    /// Embed into `k` dims; inputs of dim `n` (padded to the next power of
+    /// two internally).
+    pub fn new(family: Family, k: usize, n: usize, seed: u64) -> Jlt {
+        let n_pad = n.next_power_of_two();
+        let mut rng = Rng::new(seed);
+        let transform = make(family, k, n_pad, n_pad, &mut rng);
+        Jlt {
+            transform,
+            k,
+            // rows act like N(0,1)^n directions; E||Tx||² = k||x||², so
+            // normalize by 1/√k to make the embedding isometric on average.
+            scale: (1.0 / (k as f64).sqrt()) as f32,
+        }
+    }
+
+    pub fn dim_out(&self) -> usize {
+        self.k
+    }
+
+    /// Embed one vector.
+    pub fn embed(&self, x: &[f32]) -> Vec<f32> {
+        let n_pad = self.transform.dim_in();
+        let mut y = self.transform.apply(&pad_to(x, n_pad));
+        for v in y.iter_mut() {
+            *v *= self.scale;
+        }
+        y
+    }
+
+    /// The number of dimensions the classic JL lemma prescribes for `m`
+    /// points at distortion `eps`: `k = ⌈8 ln(m) / eps²⌉`.
+    pub fn required_dims(m: usize, eps: f64) -> usize {
+        ((8.0 * (m as f64).ln()) / (eps * eps)).ceil() as usize
+    }
+}
+
+/// Worst-case pairwise distance distortion of an embedding over a point
+/// set: `max |  ||f(x)-f(y)|| / ||x-y||  - 1 |`.
+pub fn max_distortion(jlt: &Jlt, points: &[Vec<f32>]) -> f64 {
+    let embedded: Vec<Vec<f32>> = points.iter().map(|p| jlt.embed(p)).collect();
+    let mut worst = 0.0f64;
+    for i in 0..points.len() {
+        for j in i + 1..points.len() {
+            let orig = euclidean(&points[i], &points[j]);
+            if orig < 1e-9 {
+                continue;
+            }
+            let emb = euclidean(&embedded[i], &embedded[j]);
+            worst = worst.max((emb / orig - 1.0).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+
+    fn cloud(m: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..m).map(|_| rng.gaussian_vec(n)).collect()
+    }
+
+    #[test]
+    fn distances_preserved_dense_and_structured() {
+        let pts = cloud(30, 512, 1);
+        for fam in [Family::Dense, Family::Hd3, Family::Circulant] {
+            let jlt = Jlt::new(fam, 256, 512, 7);
+            let d = max_distortion(&jlt, &pts);
+            assert!(d < 0.35, "{fam:?}: max distortion {d}");
+        }
+    }
+
+    #[test]
+    fn distortion_shrinks_with_k() {
+        let pts = cloud(25, 512, 2);
+        let avg = |k: usize| -> f64 {
+            (0..3)
+                .map(|s| max_distortion(&Jlt::new(Family::Hd3, k, 512, 10 + s), &pts))
+                .sum::<f64>()
+                / 3.0
+        };
+        let d32 = avg(32);
+        let d128 = avg(128);
+        let d512 = avg(512);
+        assert!(d128 < d32, "{d128} !< {d32}");
+        assert!(d512 < d128, "{d512} !< {d128}");
+    }
+
+    #[test]
+    fn embedding_is_linear() {
+        for_all(12, |g| {
+            let n = 128;
+            let jlt = Jlt::new(Family::Hdg, 64, n, g.u64());
+            let x = g.gaussian_vec(n);
+            let y = g.gaussian_vec(n);
+            let a = g.f32_in(-2.0, 2.0);
+            let comb: Vec<f32> = x.iter().zip(&y).map(|(u, v)| a * u + v).collect();
+            let lhs = jlt.embed(&comb);
+            let ex = jlt.embed(&x);
+            let ey = jlt.embed(&y);
+            for i in 0..64 {
+                let rhs = a * ex[i] + ey[i];
+                assert!((lhs[i] - rhs).abs() < 2e-2 * (1.0 + rhs.abs()));
+            }
+        });
+    }
+
+    #[test]
+    fn norm_preserved_in_expectation() {
+        let n = 256;
+        let x = Rng::new(3).unit_vec(n);
+        let mut total = 0.0;
+        let trials = 50;
+        for s in 0..trials {
+            let jlt = Jlt::new(Family::Hd3, 128, n, 100 + s);
+            let y = jlt.embed(&x);
+            total += y.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+        }
+        let avg = total / trials as f64;
+        assert!((avg - 1.0).abs() < 0.1, "E||f(x)||² = {avg}");
+    }
+
+    #[test]
+    fn required_dims_formula() {
+        let k = Jlt::required_dims(1000, 0.5);
+        assert_eq!(k, ((8.0 * 1000f64.ln()) / 0.25).ceil() as usize);
+        assert!(Jlt::required_dims(1000, 0.1) > k);
+    }
+
+    #[test]
+    fn non_pow2_input_padded() {
+        let pts = cloud(10, 300, 4);
+        let jlt = Jlt::new(Family::Hd3, 64, 300, 5);
+        let d = max_distortion(&jlt, &pts);
+        assert!(d < 1.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Closed-form kernels used as ground truth in the experiments.
+
+use crate::linalg::vecops::{angle, euclidean};
+use crate::linalg::Mat;
+use std::f64::consts::PI;
+
+/// Gaussian (RBF) kernel `exp(-||x-y||² / (2σ²))`.
+pub fn gaussian(x: &[f32], y: &[f32], sigma: f64) -> f64 {
+    let d = euclidean(x, y);
+    (-d * d / (2.0 * sigma * sigma)).exp()
+}
+
+/// Angular kernel `1 - 2θ/π` (the sign/"binary embedding" kernel of [9]:
+/// `E[sign(gᵀx) sign(gᵀy)] = 1 - 2θ/π`).
+pub fn angular(x: &[f32], y: &[f32]) -> f64 {
+    1.0 - 2.0 * angle(x, y) / PI
+}
+
+/// First-order arc-cosine kernel (Cho & Saul):
+/// `κ(x,y) = (1/π) ||x|| ||y|| (sin θ + (π-θ) cos θ)`; its PNG form uses
+/// `f = ReLU` with a `√2` normalization: `E[relu(gᵀx) relu(gᵀy)] = κ/2`.
+pub fn arc_cosine1(x: &[f32], y: &[f32]) -> f64 {
+    use crate::linalg::vecops::norm2;
+    let theta = angle(x, y);
+    norm2(x) * norm2(y) / PI * (theta.sin() + (PI - theta) * theta.cos())
+}
+
+/// Exact Gram matrix `K[i][j] = κ(p_i, p_j)` for a pointwise kernel.
+pub fn gram<F: Fn(&[f32], &[f32]) -> f64>(points: &[Vec<f32>], k: F) -> Mat {
+    let n = points.len();
+    let mut m = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let v = k(&points[i], &points[j]) as f32;
+            *m.at_mut(i, j) = v;
+            *m.at_mut(j, i) = v;
+        }
+    }
+    m
+}
+
+/// Median-heuristic bandwidth: the median pairwise Euclidean distance over
+/// at most `cap` points (the standard way USPST's σ=9.4338 was derived).
+pub fn median_bandwidth(points: &[Vec<f32>], cap: usize) -> f64 {
+    let n = points.len().min(cap);
+    let mut dists = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in i + 1..n {
+            dists.push(euclidean(&points[i], &points[j]));
+        }
+    }
+    if dists.is_empty() {
+        return 1.0;
+    }
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    dists[dists.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+
+    #[test]
+    fn gaussian_limits() {
+        let x = [1.0f32, 2.0];
+        assert!((gaussian(&x, &x, 1.0) - 1.0).abs() < 1e-12);
+        // far apart -> ~0
+        assert!(gaussian(&[0.0, 0.0], &[100.0, 0.0], 1.0) < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_symmetry_and_bounds() {
+        for_all(24, |g| {
+            let n = g.usize_in(1, 16);
+            let x = g.gaussian_vec(n);
+            let y = g.gaussian_vec(n);
+            let s = g.f32_in(0.5, 10.0) as f64;
+            let k = gaussian(&x, &y, s);
+            assert!((0.0..=1.0).contains(&k));
+            assert!((k - gaussian(&y, &x, s)).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn angular_known_values() {
+        assert!((angular(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(angular(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6); // orthogonal -> 0
+        assert!((angular(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-6); // opposite -> -1
+    }
+
+    #[test]
+    fn arc_cosine_parallel() {
+        // θ=0: κ = ||x|| ||y||
+        let x = [2.0f32, 0.0];
+        assert!((arc_cosine1(&x, &x) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let pts: Vec<Vec<f32>> = vec![
+            vec![1.0, 0.0],
+            vec![0.5, 0.5],
+            vec![-1.0, 0.2],
+        ];
+        let g = gram(&pts, |a, b| gaussian(a, b, 2.0));
+        for i in 0..3 {
+            assert!((g.at(i, i) - 1.0).abs() < 1e-6);
+            for j in 0..3 {
+                assert_eq!(g.at(i, j), g.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn median_bandwidth_sane() {
+        let pts: Vec<Vec<f32>> = vec![vec![0.0], vec![1.0], vec![2.0]];
+        // pairwise distances 1, 1, 2 -> median 1
+        assert!((median_bandwidth(&pts, 10) - 1.0).abs() < 1e-9);
+        assert_eq!(median_bandwidth(&pts[..1], 10), 1.0); // degenerate
+    }
+}

@@ -1,0 +1,199 @@
+//! Random feature maps: `Φ(x) s.t. Φ(x)ᵀΦ(y) ≈ κ(x, y)`.
+//!
+//! Each map wraps a [`Transform`] (Gaussian or TripleSpin) and a pointwise
+//! nonlinearity. The Gaussian kernel uses the paired cos/sin Rahimi–Recht
+//! features; the angular kernel uses sign features (a PNG with `f = sign`);
+//! the arc-cosine kernel uses `√2·ReLU` features.
+
+use crate::linalg::vecops::pad_to;
+use crate::transform::Transform;
+
+/// The nonlinearity / kernel selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureKind {
+    /// Rahimi–Recht RFF for the Gaussian kernel: projections scaled by
+    /// `1/σ`, features `[cos(Gx/σ); sin(Gx/σ)] / √k` (2 features per row).
+    GaussianRff,
+    /// Sign features for the angular kernel `1 - 2θ/π`.
+    Angular,
+    /// `√2·max(0, ·)` features for the (normalized) first-order arc-cosine
+    /// kernel.
+    ArcCosine1,
+}
+
+/// A feature map built from a projection transform and a nonlinearity.
+pub struct FeatureMap {
+    transform: Box<dyn Transform>,
+    kind: FeatureKind,
+    /// Gaussian-kernel bandwidth σ (ignored by the other kinds).
+    sigma: f64,
+}
+
+impl FeatureMap {
+    /// `transform.dim_out()` projection rows; GaussianRff emits
+    /// `2 * dim_out()` features (cos and sin per projection).
+    pub fn new(transform: Box<dyn Transform>, kind: FeatureKind, sigma: f64) -> FeatureMap {
+        assert!(sigma > 0.0);
+        FeatureMap {
+            transform,
+            kind,
+            sigma,
+        }
+    }
+
+    /// Input dimensionality the underlying transform expects.
+    pub fn dim_in(&self) -> usize {
+        self.transform.dim_in()
+    }
+
+    /// Feature dimensionality.
+    pub fn dim_features(&self) -> usize {
+        match self.kind {
+            FeatureKind::GaussianRff => 2 * self.transform.dim_out(),
+            _ => self.transform.dim_out(),
+        }
+    }
+
+    pub fn kind(&self) -> FeatureKind {
+        self.kind
+    }
+
+    /// Compute `Φ(x)`. Inputs shorter than `dim_in()` are zero-padded
+    /// (Hadamard families need power-of-two dims).
+    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+        let n = self.transform.dim_in();
+        assert!(x.len() <= n, "input dim {} exceeds transform dim {n}", x.len());
+        let proj = if x.len() == n {
+            self.transform.apply(x)
+        } else {
+            self.transform.apply(&pad_to(x, n))
+        };
+        let k = proj.len();
+        match self.kind {
+            FeatureKind::GaussianRff => {
+                let scale = (1.0 / k as f64).sqrt() as f32;
+                let inv_sigma = (1.0 / self.sigma) as f32;
+                let mut out = Vec::with_capacity(2 * k);
+                for v in &proj {
+                    let t = v * inv_sigma;
+                    out.push(t.cos() * scale);
+                }
+                for v in &proj {
+                    let t = v * inv_sigma;
+                    out.push(t.sin() * scale);
+                }
+                out
+            }
+            FeatureKind::Angular => {
+                let scale = (1.0 / k as f64).sqrt() as f32;
+                proj.iter()
+                    .map(|v| if *v >= 0.0 { scale } else { -scale })
+                    .collect()
+            }
+            FeatureKind::ArcCosine1 => {
+                let scale = (2.0 / k as f64).sqrt() as f32;
+                proj.iter().map(|v| v.max(0.0) * scale).collect()
+            }
+        }
+    }
+
+    /// Approximate kernel value `Φ(x)ᵀΦ(y)`.
+    pub fn approx_kernel(&self, x: &[f32], y: &[f32]) -> f64 {
+        let fx = self.features(x);
+        let fy = self.features(y);
+        crate::linalg::vecops::dot(&fx, &fy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::exact;
+    use crate::transform::{make, Family};
+    use crate::util::rng::Rng;
+
+    fn avg_kernel_error(fam: Family, kind: FeatureKind, sigma: f64, trials: u64) -> f64 {
+        let n = 64;
+        let k = 256;
+        let mut rng = Rng::new(50);
+        let x = rng.unit_vec(n);
+        let mut y = x.clone();
+        // y at moderate angle from x
+        for (i, v) in y.iter_mut().enumerate() {
+            *v = 0.8 * *v + 0.2 * if i % 2 == 0 { 0.1 } else { -0.1 };
+        }
+        crate::linalg::vecops::normalize(&mut y);
+        let exact_val = match kind {
+            FeatureKind::GaussianRff => exact::gaussian(&x, &y, sigma),
+            FeatureKind::Angular => exact::angular(&x, &y),
+            FeatureKind::ArcCosine1 => exact::arc_cosine1(&x, &y),
+        };
+        let mut err = 0.0;
+        for t in 0..trials {
+            let tr = make(fam, k, n, n, &mut Rng::new(100 + t));
+            let fm = FeatureMap::new(tr, kind, sigma);
+            err += (fm.approx_kernel(&x, &y) - exact_val).abs();
+        }
+        err / trials as f64
+    }
+
+    #[test]
+    fn gaussian_rff_unbiased_dense() {
+        let e = avg_kernel_error(Family::Dense, FeatureKind::GaussianRff, 1.0, 8);
+        assert!(e < 0.08, "avg |err| = {e}");
+    }
+
+    #[test]
+    fn gaussian_rff_unbiased_hd3() {
+        let e = avg_kernel_error(Family::Hd3, FeatureKind::GaussianRff, 1.0, 8);
+        assert!(e < 0.08, "avg |err| = {e}");
+    }
+
+    #[test]
+    fn angular_features_match_dense_and_structured() {
+        for fam in [Family::Dense, Family::Hd3, Family::Toeplitz] {
+            let e = avg_kernel_error(fam, FeatureKind::Angular, 1.0, 8);
+            assert!(e < 0.12, "{fam:?}: avg |err| = {e}");
+        }
+    }
+
+    #[test]
+    fn arc_cosine_features_approximate() {
+        let e = avg_kernel_error(Family::Dense, FeatureKind::ArcCosine1, 1.0, 8);
+        assert!(e < 0.12, "avg |err| = {e}");
+    }
+
+    #[test]
+    fn rff_self_kernel_is_one() {
+        // Φ(x)ᵀΦ(x) = Σ (cos² + sin²)/k = 1 exactly for RFF.
+        let n = 32;
+        let tr = make(Family::Hdg, 64, n, n, &mut Rng::new(1));
+        let fm = FeatureMap::new(tr, FeatureKind::GaussianRff, 2.0);
+        let x = Rng::new(2).unit_vec(n);
+        assert!((fm.approx_kernel(&x, &x) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn feature_dims() {
+        let n = 32;
+        let tr = make(Family::Hd3, 48, n, n, &mut Rng::new(1));
+        let fm = FeatureMap::new(tr, FeatureKind::GaussianRff, 1.0);
+        assert_eq!(fm.dim_features(), 96);
+        let x = Rng::new(2).unit_vec(n);
+        assert_eq!(fm.features(&x).len(), 96);
+
+        let tr2 = make(Family::Hd3, 48, n, n, &mut Rng::new(1));
+        let fm2 = FeatureMap::new(tr2, FeatureKind::Angular, 1.0);
+        assert_eq!(fm2.dim_features(), 48);
+    }
+
+    #[test]
+    fn short_inputs_zero_padded() {
+        let n = 64;
+        let tr = make(Family::Hd3, n, n, n, &mut Rng::new(3));
+        let fm = FeatureMap::new(tr, FeatureKind::Angular, 1.0);
+        let x50 = Rng::new(4).unit_vec(50);
+        let f = fm.features(&x50); // no panic, padded internally
+        assert_eq!(f.len(), n);
+    }
+}

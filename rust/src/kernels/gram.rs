@@ -1,0 +1,102 @@
+//! Gram-matrix reconstruction: the accuracy metric of Figures 2 and 4.
+//!
+//! `err = ||K - K̃||_F / ||K||_F` where `K` is the exact Gram matrix and
+//! `K̃[i][j] = Φ(p_i)ᵀΦ(p_j)` the feature-map approximation.
+
+use super::features::FeatureMap;
+use crate::linalg::Mat;
+
+/// Feature matrix `Φ ∈ R^{N x D}`: one row per point.
+pub fn feature_matrix(map: &FeatureMap, points: &[Vec<f32>]) -> Mat {
+    let d = map.dim_features();
+    let mut out = Mat::zeros(points.len(), d);
+    for (i, p) in points.iter().enumerate() {
+        let f = map.features(p);
+        out.data[i * d..(i + 1) * d].copy_from_slice(&f);
+    }
+    out
+}
+
+/// Approximate Gram matrix `K̃ = Φ Φᵀ`.
+pub fn approx_gram(map: &FeatureMap, points: &[Vec<f32>]) -> Mat {
+    let phi = feature_matrix(map, points);
+    let phit = phi.transpose();
+    phi.matmul(&phit)
+}
+
+/// `||K̃ - K||_F / ||K||_F`.
+pub fn reconstruction_error(map: &FeatureMap, points: &[Vec<f32>], exact: &Mat) -> f64 {
+    approx_gram(map, points).rel_frob_err(exact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::exact;
+    use crate::kernels::features::FeatureKind;
+    use crate::transform::{make, Family};
+    use crate::util::rng::Rng;
+
+    fn sphere_points(count: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..count).map(|_| rng.unit_vec(dim)).collect()
+    }
+
+    #[test]
+    fn error_decreases_with_more_features() {
+        let n = 32;
+        let pts = sphere_points(30, n, 1);
+        let k_exact = exact::gram(&pts, |a, b| exact::gaussian(a, b, 1.0));
+        let mut errs = Vec::new();
+        for feats in [8usize, 64, 512] {
+            // average over a few seeds to damp MC noise
+            let mut e = 0.0;
+            for s in 0..3 {
+                let tr = make(Family::Dense, feats, n, n, &mut Rng::new(10 + s));
+                let fm = FeatureMap::new(tr, FeatureKind::GaussianRff, 1.0);
+                e += reconstruction_error(&fm, &pts, &k_exact);
+            }
+            errs.push(e / 3.0);
+        }
+        assert!(
+            errs[0] > errs[1] && errs[1] > errs[2],
+            "errors should decrease: {errs:?}"
+        );
+        assert!(errs[2] < 0.1, "512 features should reconstruct well: {errs:?}");
+    }
+
+    #[test]
+    fn structured_matches_unstructured_accuracy() {
+        // The paper's headline: TripleSpin ≈ Gaussian accuracy.
+        let n = 32;
+        let pts = sphere_points(25, n, 2);
+        let k_exact = exact::gram(&pts, |a, b| exact::gaussian(a, b, 1.0));
+        let feats = 128;
+        let avg_err = |fam: Family| -> f64 {
+            let mut e = 0.0;
+            for s in 0..4 {
+                let tr = make(fam, feats, n, n, &mut Rng::new(60 + s));
+                let fm = FeatureMap::new(tr, FeatureKind::GaussianRff, 1.0);
+                e += reconstruction_error(&fm, &pts, &k_exact);
+            }
+            e / 4.0
+        };
+        let dense = avg_err(Family::Dense);
+        let hd3 = avg_err(Family::Hd3);
+        assert!(
+            hd3 < dense * 1.6,
+            "hd3 err {hd3} should be comparable to dense err {dense}"
+        );
+    }
+
+    #[test]
+    fn feature_matrix_shape() {
+        let n = 16;
+        let pts = sphere_points(5, n, 3);
+        let tr = make(Family::Hd3, 32, n, n, &mut Rng::new(4));
+        let fm = FeatureMap::new(tr, FeatureKind::GaussianRff, 1.0);
+        let phi = feature_matrix(&fm, &pts);
+        assert_eq!(phi.rows, 5);
+        assert_eq!(phi.cols, 64);
+    }
+}

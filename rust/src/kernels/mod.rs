@@ -1,0 +1,17 @@
+//! Kernel approximation with random feature maps (paper §4).
+//!
+//! Pointwise Nonlinear Gaussian (PNG) kernels
+//! `κ(x, y) = E[f(gᵀx) f(gᵀy)]` are estimated by Monte-Carlo:
+//! `κ̂(x, y) = (1/k) f(Gx)ᵀ f(Gy)` with `G` either an unstructured Gaussian
+//! matrix or any TripleSpin member. [`exact`] holds closed forms for the
+//! kernels the experiments sweep (Gaussian, angular, arc-cosine), [`features`]
+//! the feature-map machinery, [`png`] the general PNG / sum-of-PNG layer
+//! (Theorem 4.1's spectral-mixture construction), and [`gram`] the
+//! Gram-matrix reconstruction metric of Figures 2 and 4.
+
+pub mod exact;
+pub mod features;
+pub mod gram;
+pub mod png;
+
+pub use features::{FeatureKind, FeatureMap};

@@ -1,0 +1,43 @@
+//! # TripleSpin
+//!
+//! A production-quality reproduction of *"TripleSpin — a generic compact
+//! paradigm for fast machine learning computations"* (Choromanski, Fagan,
+//! Gouy-Pailler, Morvan, Sarlos, Atif; 2016).
+//!
+//! TripleSpin matrices `G_struct = M3 · M2 · M1` (e.g. `HD3·HD2·HD1`,
+//! `HDg·HD2·HD1`, `Gcirc·D2·HD1`, Toeplitz/Hankel/skew-circulant variants)
+//! replace dense i.i.d. Gaussian projection matrices in randomized ML
+//! algorithms: matvecs drop from `Θ(mn)` to `O(n log n)` and storage from
+//! `O(mn)` to `O(n)` (or just random bits for the fully discrete chain),
+//! with provably small accuracy loss.
+//!
+//! ## Layout
+//!
+//! * [`util`] / [`linalg`] — substrates: seeded RNG, JSON, bench/property
+//!   harnesses; FWHT, FFT-based structured matvecs, dense baselines.
+//! * [`transform`] — the TripleSpin family itself (the paper's §3),
+//!   including block stacking (§3.1).
+//! * [`kernels`] — random-feature kernel approximation (paper §4):
+//!   Gaussian/angular/arc-cosine and general PNG kernels, Gram-matrix
+//!   reconstruction metrics.
+//! * [`lsh`] — cross-polytope LSH (paper §2/§5, Figure 1).
+//! * [`sketch`] — Newton sketch for convex optimization (paper §6.3,
+//!   Figure 3), with logistic regression.
+//! * [`data`] — synthetic datasets standing in for USPST / G50C and the
+//!   logistic-regression design matrices (substitutions in DESIGN.md §4).
+//! * [`runtime`] — PJRT executor: loads `artifacts/*.hlo.txt` that
+//!   `python/compile/aot.py` lowered from the JAX/Pallas layers.
+//! * [`coordinator`] — L3 serving layer: request router, dynamic batcher,
+//!   worker pool, metrics, backpressure.
+
+pub mod coordinator;
+pub mod data;
+pub mod jlt;
+pub mod kernels;
+pub mod linalg;
+pub mod lsh;
+pub mod quantize;
+pub mod runtime;
+pub mod sketch;
+pub mod transform;
+pub mod util;

@@ -1,0 +1,353 @@
+//! Dense row-major matrices: the unstructured baseline and small solvers.
+//!
+//! This is the `G` side of every paper comparison — a plain dense Gaussian
+//! matvec/matmul stands in for the MKL GEMV the authors benchmarked against
+//! (speedup *ratios* are what Table 1 reports; both sides share a toolchain
+//! here, which is the fair version of the comparison).
+//!
+//! Also hosts the small dense factorizations the Newton-sketch pipeline
+//! needs: Cholesky solve for the `d x d` sketched-Hessian system.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// i.i.d. N(0,1) entries (the paper's unstructured `G`).
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: rng.gaussian_vec(rows * cols),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// `y = A x`. Inner loop is written to auto-vectorize (contiguous fma
+    /// over the row), with 4-way outer unroll to cut loop overhead.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = A x` into a caller-provided buffer (hot-path variant, no alloc).
+    ///
+    /// Each row accumulates into 8 independent lanes so LLVM can vectorize
+    /// the reduction without `-ffast-math` (scalar accumulation pins the FP
+    /// addition order and blocks SIMD — measured 4.5x slower; §Perf L3
+    /// iteration 3). This keeps the Table-1 dense baseline honest.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        let n = self.cols;
+        let chunks = n / 8;
+
+        #[inline(always)]
+        fn row_dot(row: &[f32], x: &[f32], chunks: usize, acc: &mut [f32; 8]) {
+            for c in 0..chunks {
+                let r = &row[c * 8..c * 8 + 8];
+                let xx = &x[c * 8..c * 8 + 8];
+                for l in 0..8 {
+                    acc[l] += r[l] * xx[l];
+                }
+            }
+        }
+        #[inline(always)]
+        fn finish(acc: &[f32; 8], row: &[f32], x: &[f32], chunks: usize) -> f32 {
+            let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5])
+                + (acc[2] + acc[6])
+                + (acc[3] + acc[7]);
+            for j in chunks * 8..x.len() {
+                s += row[j] * x[j];
+            }
+            s
+        }
+
+        // Two row streams at once keep the HW prefetchers busy on
+        // bandwidth-bound sizes (n >= 2^12, matrix >> LLC) while the 8-lane
+        // accumulators vectorize on compute-bound sizes.
+        let data: &[f32] = &self.data;
+        let rows = self.rows;
+        let mut i = 0;
+        while i + 2 <= rows {
+            let r0 = &data[i * n..(i + 1) * n];
+            let r1 = &data[(i + 1) * n..(i + 2) * n];
+            let mut a0 = [0.0f32; 8];
+            let mut a1 = [0.0f32; 8];
+            // chunks_exact elides the per-chunk bounds checks the indexed
+            // form keeps in generic (non-const-n) code — 2.2x on this loop
+            for ((xx, p0), p1) in x
+                .chunks_exact(8)
+                .zip(r0.chunks_exact(8))
+                .zip(r1.chunks_exact(8))
+            {
+                for l in 0..8 {
+                    a0[l] += p0[l] * xx[l];
+                    a1[l] += p1[l] * xx[l];
+                }
+            }
+            y[i] = finish(&a0, r0, x, chunks);
+            y[i + 1] = finish(&a1, r1, x, chunks);
+            i += 2;
+        }
+        while i < rows {
+            let row = &data[i * n..(i + 1) * n];
+            let mut acc = [0.0f32; 8];
+            row_dot(row, x, chunks, &mut acc);
+            y[i] = finish(&acc, row, x, chunks);
+            i += 1;
+        }
+    }
+
+    /// `C = A B` (naive blocked; used off the hot path: Gram matrices, tests).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] += a * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    /// `||A - B||_F / ||B||_F` — the Gram reconstruction metric of Figure 2.
+    pub fn rel_frob_err(&self, reference: &Mat) -> f64 {
+        assert_eq!(self.rows, reference.rows);
+        assert_eq!(self.cols, reference.cols);
+        let num: f64 = self
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(a, b)| ((*a - *b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        num / reference.frob().max(1e-30)
+    }
+}
+
+/// Cholesky factorization of an SPD matrix (f64 for stability), returning
+/// the lower factor L with `A = L L^T`, or `None` if not positive definite.
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    debug_assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` for SPD `A` via Cholesky. Returns `None` if `A` is not
+/// positive definite.
+pub fn solve_spd(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    let l = cholesky(a, n)?;
+    // forward: L y = b
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    // backward: L^T x = y
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+
+    #[test]
+    fn matvec_matches_naive() {
+        for_all(24, |g| {
+            let m = g.usize_in(1, 20);
+            let n = g.usize_in(1, 20);
+            let a = Mat::from_vec(m, n, g.vec_f32(m * n, -1.0, 1.0));
+            let x = g.vec_f32(n, -1.0, 1.0);
+            let y = a.matvec(&x);
+            for i in 0..m {
+                let expect: f32 = (0..n).map(|j| a.at(i, j) * x[j]).sum();
+                assert!((y[i] - expect).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_identity() {
+        for_all(16, |g| {
+            let n = g.usize_in(1, 12);
+            let a = Mat::from_vec(n, n, g.vec_f32(n * n, -1.0, 1.0));
+            let i = Mat::identity(n);
+            assert_eq!(a.matmul(&i), a);
+        });
+    }
+
+    #[test]
+    fn matmul_matches_matvec_columns() {
+        for_all(16, |g| {
+            let m = g.usize_in(1, 10);
+            let k = g.usize_in(1, 10);
+            let n = g.usize_in(1, 10);
+            let a = Mat::from_vec(m, k, g.vec_f32(m * k, -1.0, 1.0));
+            let b = Mat::from_vec(k, n, g.vec_f32(k * n, -1.0, 1.0));
+            let c = a.matmul(&b);
+            // column j of C == A * (column j of B)
+            for j in 0..n {
+                let col: Vec<f32> = (0..k).map(|p| b.at(p, j)).collect();
+                let y = a.matvec(&col);
+                for i in 0..m {
+                    assert!((c.at(i, j) - y[i]).abs() < 1e-4);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        for_all(16, |g| {
+            let m = g.usize_in(1, 10);
+            let n = g.usize_in(1, 10);
+            let a = Mat::from_vec(m, n, g.vec_f32(m * n, -1.0, 1.0));
+            assert_eq!(a.transpose().transpose(), a);
+        });
+    }
+
+    #[test]
+    fn frob_err_zero_on_self() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(m.rel_frob_err(&m) < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_solve_recovers() {
+        for_all(24, |g| {
+            let n = g.usize_in(1, 12);
+            // A = B B^T + n*I is SPD
+            let b = Mat::from_vec(n, n, g.vec_f32(n * n, -1.0, 1.0));
+            let mut a = vec![0.0f64; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0f64;
+                    for k in 0..n {
+                        s += b.at(i, k) as f64 * b.at(j, k) as f64;
+                    }
+                    a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+                }
+            }
+            let x_true: Vec<f64> = (0..n).map(|i| (i as f64 + 1.0) / n as f64).collect();
+            let rhs: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| a[i * n + j] * x_true[j]).sum())
+                .collect();
+            let x = solve_spd(&a, &rhs, n).expect("SPD");
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-8, "n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        // [[0, 1], [1, 0]] is indefinite
+        assert!(cholesky(&[0.0, 1.0, 1.0, 0.0], 2).is_none());
+    }
+
+    #[test]
+    fn gaussian_matrix_moments() {
+        let mut rng = Rng::new(21);
+        let m = Mat::gaussian(64, 64, &mut rng);
+        let mean: f64 = m.data.iter().map(|v| *v as f64).sum::<f64>() / m.data.len() as f64;
+        let var: f64 =
+            m.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / m.data.len() as f64;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 1.0).abs() < 0.1);
+    }
+}

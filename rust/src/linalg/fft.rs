@@ -1,0 +1,389 @@
+//! Radix-2 complex FFT and FFT-based structured matvecs.
+//!
+//! Circulant / Toeplitz / Hankel / skew-circulant Gaussian matrices (the
+//! `G_circ D2 H D1`-style TripleSpin members, Lemma 1 of the paper) multiply
+//! a vector in `O(n log n)` via circular convolution. NumPy's `numpy.fft`
+//! played this role in the paper's experiments; here it is self-contained.
+//!
+//! All transforms work on split complex (re, im) `f64` buffers — the extra
+//! precision is free at these sizes and keeps the structured matvec within
+//! f32 round-off of the dense reference.
+
+use std::f64::consts::PI;
+
+/// In-place iterative radix-2 Cooley–Tukey FFT.
+/// `re.len() == im.len()` must be a power of two. `inverse` applies the
+/// conjugate transform *including* the 1/n scaling.
+pub fn fft(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    debug_assert_eq!(n, im.len());
+    debug_assert!(n.is_power_of_two());
+    if n <= 1 {
+        return;
+    }
+
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 0..n - 1 {
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+        let mut m = n >> 1;
+        while m >= 1 && j & m != 0 {
+            j ^= m;
+            m >>= 1;
+        }
+        j |= m;
+    }
+
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in i..i + len / 2 {
+                let (ur, ui) = (re[k], im[k]);
+                let (vr, vi) = (
+                    re[k + len / 2] * cr - im[k + len / 2] * ci,
+                    re[k + len / 2] * ci + im[k + len / 2] * cr,
+                );
+                re[k] = ur + vr;
+                im[k] = ui + vi;
+                re[k + len / 2] = ur - vr;
+                im[k + len / 2] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+
+    if inverse {
+        let s = 1.0 / n as f64;
+        for v in re.iter_mut() {
+            *v *= s;
+        }
+        for v in im.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+/// Circular convolution `a ⊛ b` of two real vectors of equal power-of-two
+/// length, via FFT.
+pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = a.len();
+    debug_assert_eq!(n, b.len());
+    debug_assert!(n.is_power_of_two());
+    let mut ar = a.to_vec();
+    let mut ai = vec![0.0; n];
+    let mut br = b.to_vec();
+    let mut bi = vec![0.0; n];
+    fft(&mut ar, &mut ai, false);
+    fft(&mut br, &mut bi, false);
+    for i in 0..n {
+        let (r, im) = (
+            ar[i] * br[i] - ai[i] * bi[i],
+            ar[i] * bi[i] + ai[i] * br[i],
+        );
+        ar[i] = r;
+        ai[i] = im;
+    }
+    fft(&mut ar, &mut ai, true);
+    ar
+}
+
+/// Precomputed spectrum of a circulant (or skew-/Toeplitz-embedded) kernel,
+/// so repeated matvecs pay only two FFTs instead of three.
+#[derive(Clone, Debug)]
+pub struct ConvPlan {
+    n: usize,
+    kr: Vec<f64>,
+    ki: Vec<f64>,
+}
+
+impl ConvPlan {
+    /// Plan for circular convolution with fixed kernel `k` (power-of-two len).
+    pub fn new(k: &[f64]) -> ConvPlan {
+        let n = k.len();
+        assert!(n.is_power_of_two());
+        let mut kr = k.to_vec();
+        let mut ki = vec![0.0; n];
+        fft(&mut kr, &mut ki, false);
+        ConvPlan { n, kr, ki }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// `out = kernel ⊛ x` (circular).
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(x.len(), self.n);
+        let mut xr = x.to_vec();
+        let mut xi = vec![0.0; self.n];
+        fft(&mut xr, &mut xi, false);
+        for i in 0..self.n {
+            let (r, im) = (
+                xr[i] * self.kr[i] - xi[i] * self.ki[i],
+                xr[i] * self.ki[i] + xi[i] * self.kr[i],
+            );
+            xr[i] = r;
+            xi[i] = im;
+        }
+        fft(&mut xr, &mut xi, true);
+        xr
+    }
+}
+
+/// Multiply by the circulant matrix whose **first row** is `row`:
+/// `y_i = sum_j row_{(j - i) mod n} x_j`.
+pub fn circulant_matvec(row: &[f64], x: &[f64]) -> Vec<f64> {
+    // first-row circulant C satisfies C x = reverse-shift trick:
+    // y = IFFT(FFT(c_col) * FFT(x)) where c_col is the first column:
+    // c_col[i] = row[(n - i) % n].
+    let n = row.len();
+    let mut col = vec![0.0; n];
+    for i in 0..n {
+        col[i] = row[(n - i) % n];
+    }
+    circular_convolve(&col, x)
+}
+
+/// Multiply by the Toeplitz matrix `T` with `T[i][j] = diag[j - i + (n-1)]`,
+/// where `diag` has length `2n - 1` (entry `n-1` is the main diagonal,
+/// entries above it the superdiagonals). Uses 2n-point circulant embedding.
+pub fn toeplitz_matvec(diag: &[f64], x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    debug_assert_eq!(diag.len(), 2 * n - 1);
+    let m = (2 * n).next_power_of_two();
+    // Embed: circulant first column c with c[k] = T[k][0] = diag[n-1-k] for
+    // k in 0..n, and wrap the superdiagonals at the end.
+    let mut c = vec![0.0; m];
+    for i in 0..n {
+        c[i] = diag[n - 1 - i]; // first column, top to bottom
+    }
+    for j in 1..n {
+        c[m - j] = diag[n - 1 + j]; // superdiagonal j wraps to position m-j
+    }
+    let mut xx = vec![0.0; m];
+    xx[..n].copy_from_slice(x);
+    let y = circular_convolve(&c, &xx);
+    y[..n].to_vec()
+}
+
+/// Multiply by the Hankel matrix `Hk[i][j] = anti[i + j]` where `anti` has
+/// length `2n - 1`. A Hankel matrix is a row-reversed Toeplitz: `Hk x = T xr`
+/// with `xr` the reversed input.
+pub fn hankel_matvec(anti: &[f64], x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    debug_assert_eq!(anti.len(), 2 * n - 1);
+    // Hk[i][j] = anti[i+j]; with xr[j] = x[n-1-j]:
+    // (T xr)_i = sum_j T[i][j] x[n-1-j]; choose T[i][j] = anti[i + n-1 - j]
+    // i.e. T diag index (j - i + n - 1) -> anti[i + n - 1 - j] means
+    // diag[d] = anti[2(n-1) - d].
+    let mut diag = vec![0.0; 2 * n - 1];
+    for d in 0..2 * n - 1 {
+        diag[d] = anti[2 * (n - 1) - d];
+    }
+    let xr: Vec<f64> = x.iter().rev().copied().collect();
+    toeplitz_matvec(&diag, &xr)
+}
+
+/// Multiply by the skew-circulant matrix with first row `row`:
+/// like a circulant but entries that wrap around pick up a minus sign
+/// (`S[i][j] = row[j-i]` for `j >= i`, `-row[n + j - i]` for `j < i`).
+pub fn skew_circulant_matvec(row: &[f64], x: &[f64]) -> Vec<f64> {
+    // A skew-circulant is the Toeplitz matrix with diag[d] = row[d - (n-1)]
+    // for d >= n-1 (upper part incl. main diag) and -row[d + 1] for d < n-1.
+    let n = row.len();
+    let mut diag = vec![0.0; 2 * n - 1];
+    for d in 0..2 * n - 1 {
+        diag[d] = if d >= n - 1 {
+            row[d - (n - 1)]
+        } else {
+            -row[d + 1]
+        };
+    }
+    toeplitz_matvec(&diag, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+    use crate::util::rng::Rng;
+
+    fn naive_dft(re: &[f64], im: &[f64], inverse: bool) -> (Vec<f64>, Vec<f64>) {
+        let n = re.len();
+        let sign = if inverse { 1.0 } else { -1.0 };
+        let mut or_ = vec![0.0; n];
+        let mut oi = vec![0.0; n];
+        for k in 0..n {
+            for t in 0..n {
+                let ang = sign * 2.0 * PI * (k * t) as f64 / n as f64;
+                or_[k] += re[t] * ang.cos() - im[t] * ang.sin();
+                oi[k] += re[t] * ang.sin() + im[t] * ang.cos();
+            }
+        }
+        if inverse {
+            for v in or_.iter_mut() {
+                *v /= n as f64;
+            }
+            for v in oi.iter_mut() {
+                *v /= n as f64;
+            }
+        }
+        (or_, oi)
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let mut rng = Rng::new(11);
+        for n in [1usize, 2, 4, 8, 32, 128] {
+            let re: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let (er, ei) = naive_dft(&re, &im, false);
+            let (mut gr, mut gi) = (re.clone(), im.clone());
+            fft(&mut gr, &mut gi, false);
+            for i in 0..n {
+                assert!((gr[i] - er[i]).abs() < 1e-8 * n as f64, "n={n}");
+                assert!((gi[i] - ei[i]).abs() < 1e-8 * n as f64, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fft_round_trip() {
+        for_all(24, |g| {
+            let n = g.pow2_in(0, 9);
+            let re: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let im: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let (mut rr, mut ri) = (re.clone(), im.clone());
+            fft(&mut rr, &mut ri, false);
+            fft(&mut rr, &mut ri, true);
+            for i in 0..n {
+                assert!((rr[i] - re[i]).abs() < 1e-9);
+                assert!((ri[i] - im[i]).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn parseval() {
+        for_all(16, |g| {
+            let n = g.pow2_in(1, 8);
+            let re: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let mut im = vec![0.0; n];
+            let energy: f64 = re.iter().map(|v| v * v).sum();
+            let mut fr = re;
+            fft(&mut fr, &mut im, false);
+            let fenergy: f64 =
+                fr.iter().zip(&im).map(|(r, i)| r * r + i * i).sum::<f64>() / n as f64;
+            assert!((energy - fenergy).abs() < 1e-8 * energy.max(1.0));
+        });
+    }
+
+    fn naive_circulant(row: &[f64], x: &[f64]) -> Vec<f64> {
+        let n = row.len();
+        (0..n)
+            .map(|i| (0..n).map(|j| row[(n + j - i) % n] * x[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn circulant_matches_naive() {
+        for_all(24, |g| {
+            let n = g.pow2_in(0, 7);
+            let row: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let x: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let expect = naive_circulant(&row, &x);
+            let got = circulant_matvec(&row, &x);
+            for i in 0..n {
+                assert!((got[i] - expect[i]).abs() < 1e-8 * n as f64, "n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn toeplitz_matches_naive() {
+        for_all(24, |g| {
+            let n = g.usize_in(1, 70);
+            let diag: Vec<f64> = (0..2 * n - 1).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let x: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let expect: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| diag[j + n - 1 - i] * x[j]).sum())
+                .collect();
+            let got = toeplitz_matvec(&diag, &x);
+            for i in 0..n {
+                assert!((got[i] - expect[i]).abs() < 1e-8 * n as f64, "n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn hankel_matches_naive() {
+        for_all(24, |g| {
+            let n = g.usize_in(1, 60);
+            let anti: Vec<f64> = (0..2 * n - 1).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let x: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let expect: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| anti[i + j] * x[j]).sum())
+                .collect();
+            let got = hankel_matvec(&anti, &x);
+            for i in 0..n {
+                assert!((got[i] - expect[i]).abs() < 1e-8 * n as f64, "n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn skew_circulant_matches_naive() {
+        for_all(24, |g| {
+            let n = g.usize_in(1, 60);
+            let row: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let x: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let expect: Vec<f64> = (0..n)
+                .map(|i| {
+                    (0..n)
+                        .map(|j| {
+                            if j >= i {
+                                row[j - i] * x[j]
+                            } else {
+                                -row[n + j - i] * x[j]
+                            }
+                        })
+                        .sum()
+                })
+                .collect();
+            let got = skew_circulant_matvec(&row, &x);
+            for i in 0..n {
+                assert!((got[i] - expect[i]).abs() < 1e-8 * n as f64, "n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn conv_plan_matches_one_shot() {
+        let mut rng = Rng::new(13);
+        let n = 64;
+        let k: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let plan = ConvPlan::new(&k);
+        let a = plan.apply(&x);
+        let b = circular_convolve(&k, &x);
+        for i in 0..n {
+            assert!((a[i] - b[i]).abs() < 1e-9);
+        }
+    }
+}

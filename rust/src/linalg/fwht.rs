@@ -1,0 +1,226 @@
+//! Fast Walsh–Hadamard Transform (FWHT).
+//!
+//! The workhorse of every Hadamard-based TripleSpin matrix: `HD x` costs one
+//! diagonal scaling plus one FWHT, `O(n log n)` instead of the `O(n^2)` dense
+//! matvec. This replaces the `ffht` C library the paper's experiments used.
+//!
+//! Conventions: [`fwht`] applies the *unnormalized* Hadamard matrix (entries
+//! ±1); the paper's `H` is the L2-normalized matrix, i.e. `fwht` output
+//! scaled by `1/sqrt(n)` — use [`fwht_normalized`]. Both operate in place on
+//! power-of-two lengths.
+
+/// In-place unnormalized FWHT. `x.len()` must be a power of two.
+///
+/// After the call `x = H̃ x` where `H̃` has ±1 entries (Sylvester order).
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    // First two levels fused in blocks of 4 (in-register radix-4 head);
+    // the remaining levels run radix-2 with a contiguous inner loop that
+    // auto-vectorizes. A full radix-4 sweep was tried and REVERTED: its
+    // 4-way strided inner loop defeats vectorization and measured 13%
+    // slower at n=8192 (see EXPERIMENTS.md §Perf, L3 iteration 2).
+    if n == 2 {
+        let (a, b) = (x[0], x[1]);
+        x[0] = a + b;
+        x[1] = a - b;
+        return;
+    }
+    let mut h = 1;
+    if n >= 4 {
+        // fused h=1 and h=2 pass over blocks of 4
+        let mut i = 0;
+        while i < n {
+            let (a, b, c, d) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+            let (ab0, ab1) = (a + b, a - b);
+            let (cd0, cd1) = (c + d, c - d);
+            x[i] = ab0 + cd0;
+            x[i + 1] = ab1 + cd1;
+            x[i + 2] = ab0 - cd0;
+            x[i + 3] = ab1 - cd1;
+            i += 4;
+        }
+        h = 4;
+    }
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            let (head, tail) = x[i..i + 2 * h].split_at_mut(h);
+            for (u, v) in head.iter_mut().zip(tail.iter_mut()) {
+                let a = *u;
+                let b = *v;
+                *u = a + b;
+                *v = a - b;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+}
+
+/// In-place L2-normalized FWHT: `x = H x` with `H = H̃ / sqrt(n)` (an
+/// isometry, `H H = I`).
+pub fn fwht_normalized(x: &mut [f32]) {
+    let n = x.len();
+    fwht(x);
+    let s = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Apply the normalized FWHT to every row of a row-major `rows x n` batch.
+pub fn fwht_batch_normalized(data: &mut [f32], n: usize) {
+    debug_assert_eq!(data.len() % n, 0);
+    for row in data.chunks_exact_mut(n) {
+        fwht_normalized(row);
+    }
+}
+
+/// Dense Sylvester-order Hadamard matrix with ±1 entries (for tests and the
+/// Pallas kernel's small in-VMEM factor). Row-major `n x n`.
+pub fn hadamard_dense(n: usize) -> Vec<f32> {
+    assert!(n.is_power_of_two());
+    let mut m = vec![0.0f32; n * n];
+    m[0] = 1.0;
+    let mut size = 1;
+    while size < n {
+        for i in 0..size {
+            for j in 0..size {
+                let v = m[i * n + j];
+                m[i * n + (j + size)] = v;
+                m[(i + size) * n + j] = v;
+                m[(i + size) * n + (j + size)] = -v;
+            }
+        }
+        size *= 2;
+    }
+    m
+}
+
+/// Smallest power of two >= n (data is zero-padded to this size before any
+/// Hadamard-based transform; matches the paper's treatment of USPST n=258).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+    use crate::util::rng::Rng;
+
+    fn dense_apply(h: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| (0..n).map(|j| h[i * n + j] * x[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn matches_dense_hadamard() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 2, 4, 8, 16, 64, 256] {
+            let h = hadamard_dense(n);
+            let x = rng.gaussian_vec(n);
+            let expect = dense_apply(&h, &x, n);
+            let mut got = x.clone();
+            fwht(&mut got);
+            for (g, e) in got.iter().zip(&expect) {
+                assert!((g - e).abs() < 1e-3 * n as f32, "n={n}: {g} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_is_involution() {
+        // H H = I for the normalized transform.
+        for_all(32, |g| {
+            let n = g.pow2_in(0, 9);
+            let x = g.gaussian_vec(n);
+            let mut y = x.clone();
+            fwht_normalized(&mut y);
+            fwht_normalized(&mut y);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-4, "n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn normalized_preserves_norm() {
+        for_all(32, |g| {
+            let n = g.pow2_in(1, 10);
+            let x = g.gaussian_vec(n);
+            let before: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+            let mut y = x;
+            fwht_normalized(&mut y);
+            let after: f64 = y.iter().map(|v| (*v as f64).powi(2)).sum();
+            assert!(
+                (before - after).abs() < 1e-3 * before.max(1.0),
+                "n={n} before={before} after={after}"
+            );
+        });
+    }
+
+    #[test]
+    fn linearity() {
+        for_all(16, |g| {
+            let n = g.pow2_in(1, 8);
+            let x = g.gaussian_vec(n);
+            let y = g.gaussian_vec(n);
+            let a = g.f32_in(-2.0, 2.0);
+            let mut lhs: Vec<f32> = x.iter().zip(&y).map(|(u, v)| a * u + v).collect();
+            fwht(&mut lhs);
+            let mut fx = x.clone();
+            fwht(&mut fx);
+            let mut fy = y.clone();
+            fwht(&mut fy);
+            for i in 0..n {
+                let rhs = a * fx[i] + fy[i];
+                assert!((lhs[i] - rhs).abs() < 1e-2 * (1.0 + rhs.abs()), "n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(2);
+        let n = 32;
+        let rows = 5;
+        let mut batch: Vec<f32> = rng.gaussian_vec(n * rows);
+        let singles: Vec<Vec<f32>> = batch
+            .chunks_exact(n)
+            .map(|r| {
+                let mut v = r.to_vec();
+                fwht_normalized(&mut v);
+                v
+            })
+            .collect();
+        fwht_batch_normalized(&mut batch, n);
+        for (i, s) in singles.iter().enumerate() {
+            assert_eq!(&batch[i * n..(i + 1) * n], &s[..]);
+        }
+    }
+
+    #[test]
+    fn hadamard_dense_is_orthogonal() {
+        let n = 16;
+        let h = hadamard_dense(n);
+        for i in 0..n {
+            for j in 0..n {
+                let dot: f32 = (0..n).map(|k| h[i * n + k] * h[j * n + k]).sum();
+                let expect = if i == j { n as f32 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(50), 64);
+        assert_eq!(next_pow2(258), 512);
+        assert_eq!(next_pow2(256), 256);
+    }
+}

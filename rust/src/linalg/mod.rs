@@ -1,0 +1,9 @@
+//! Linear-algebra substrate: FWHT, FFT-based structured matvecs, dense
+//! matrices and small SPD solvers.
+
+pub mod dense;
+pub mod fft;
+pub mod fwht;
+pub mod vecops;
+
+pub use dense::Mat;

@@ -1,0 +1,159 @@
+//! Small vector helpers shared across the library.
+
+/// Dot product (f64 accumulation for stability).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+/// L2 norm.
+pub fn norm2(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Normalize to unit L2 norm in place (no-op on the zero vector).
+pub fn normalize(a: &mut [f32]) {
+    let n = norm2(a);
+    if n > 0.0 {
+        let inv = (1.0 / n) as f32;
+        for v in a.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Elementwise multiply in place: `a[i] *= d[i]` — the `D` of every `HD`.
+#[inline]
+pub fn scale_by(a: &mut [f32], d: &[f32]) {
+    debug_assert_eq!(a.len(), d.len());
+    for (x, s) in a.iter_mut().zip(d) {
+        *x *= *s;
+    }
+}
+
+/// Zero-pad `x` to length `n` (returns a new vector).
+pub fn pad_to(x: &[f32], n: usize) -> Vec<f32> {
+    debug_assert!(n >= x.len());
+    let mut out = vec![0.0f32; n];
+    out[..x.len()].copy_from_slice(x);
+    out
+}
+
+/// Euclidean distance between two vectors.
+pub fn euclidean(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((*x - *y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Angle (radians) between two vectors.
+pub fn angle(a: &[f32], b: &[f32]) -> f64 {
+    let c = dot(a, b) / (norm2(a) * norm2(b)).max(1e-30);
+    c.clamp(-1.0, 1.0).acos()
+}
+
+/// Index of the entry with the largest absolute value, with its sign:
+/// the cross-polytope `η(y)` returns `±e_i` — we encode it as
+/// `i` if positive, `i + n` if negative.
+pub fn argmax_abs_signed(y: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_abs = f32::NEG_INFINITY;
+    for (i, v) in y.iter().enumerate() {
+        let a = v.abs();
+        if a > best_abs {
+            best_abs = a;
+            best = i;
+        }
+    }
+    if y[best] >= 0.0 {
+        best
+    } else {
+        best + y.len()
+    }
+}
+
+/// Mean of a slice of f64.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_unit() {
+        for_all(16, |g| {
+            let n = g.usize_in(1, 32);
+            let mut v = g.gaussian_vec(n);
+            if norm2(&v) == 0.0 {
+                return;
+            }
+            normalize(&mut v);
+            assert!((norm2(&v) - 1.0).abs() < 1e-5);
+        });
+    }
+
+    #[test]
+    fn normalize_zero_is_noop() {
+        let mut z = vec![0.0f32; 4];
+        normalize(&mut z);
+        assert_eq!(z, vec![0.0f32; 4]);
+    }
+
+    #[test]
+    fn pad_preserves_prefix() {
+        let p = pad_to(&[1.0, 2.0], 5);
+        assert_eq!(p, vec![1.0, 2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn angle_orthogonal_and_parallel() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!((angle(&a, &b) - std::f64::consts::FRAC_PI_2).abs() < 1e-9);
+        assert!(angle(&a, &a).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_abs_signed_encoding() {
+        assert_eq!(argmax_abs_signed(&[0.1, -3.0, 2.0]), 1 + 3); // -e_1
+        assert_eq!(argmax_abs_signed(&[0.1, 3.0, 2.0]), 1); // +e_1
+        assert_eq!(argmax_abs_signed(&[5.0]), 0);
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn euclidean_distance() {
+        assert!((euclidean(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,142 @@
+//! Collision-probability estimation — the measurement behind Figure 1.
+//!
+//! For each distance bucket we draw pairs of unit vectors at that exact
+//! Euclidean distance (distance `d` on the unit sphere ⇔ inner product
+//! `1 - d²/2`), hash both with freshly drawn hash functions, and count
+//! collisions.
+
+use super::crosspolytope::CrossPolytopeHash;
+use crate::linalg::vecops::normalize;
+use crate::transform::Family;
+use crate::util::rng::Rng;
+
+/// Draw a pair of unit vectors in `R^n` at Euclidean distance `dist`
+/// (`0 <= dist <= 2`).
+pub fn pair_at_distance(n: usize, dist: f64, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+    // x random unit; y = c·x + s·w with w ⟂ x unit, c = 1 - d²/2, s = √(1-c²).
+    let c = 1.0 - dist * dist / 2.0;
+    let s = (1.0 - c * c).max(0.0).sqrt();
+    let x = rng.unit_vec(n);
+    // random unit vector orthogonal to x
+    let mut w = rng.unit_vec(n);
+    let proj: f64 = x.iter().zip(&w).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+    for (wi, xi) in w.iter_mut().zip(&x) {
+        *wi -= (proj as f32) * *xi;
+    }
+    normalize(&mut w);
+    let y: Vec<f32> = x
+        .iter()
+        .zip(&w)
+        .map(|(xi, wi)| (c as f32) * xi + (s as f32) * wi)
+        .collect();
+    (x, y)
+}
+
+/// One row of the Figure-1 sweep.
+#[derive(Clone, Debug)]
+pub struct CollisionPoint {
+    pub distance: f64,
+    pub probability: f64,
+}
+
+/// Estimate the collision curve of `family` over `distances`, using
+/// `hash_draws` independent hash functions × `pairs_per_draw` pairs each
+/// (the paper: 100 runs × 20 000 points).
+pub fn collision_curve(
+    family: Family,
+    n: usize,
+    distances: &[f64],
+    hash_draws: u64,
+    pairs_per_draw: usize,
+    seed: u64,
+) -> Vec<CollisionPoint> {
+    let mut out = Vec::with_capacity(distances.len());
+    for (di, &dist) in distances.iter().enumerate() {
+        let mut collisions = 0usize;
+        let mut total = 0usize;
+        for h in 0..hash_draws {
+            let hash = CrossPolytopeHash::with_family(
+                family,
+                n,
+                &mut Rng::new(seed ^ (h * 1_000_003 + di as u64)),
+            );
+            let mut rng = Rng::new(seed.wrapping_add(77).wrapping_add(h * 13 + di as u64 * 7919));
+            for _ in 0..pairs_per_draw {
+                let (x, y) = pair_at_distance(n, dist, &mut rng);
+                if hash.hash(&x) == hash.hash(&y) {
+                    collisions += 1;
+                }
+                total += 1;
+            }
+        }
+        out.push(CollisionPoint {
+            distance: dist,
+            probability: collisions as f64 / total as f64,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{euclidean, norm2};
+    use crate::util::prop::for_all;
+
+    #[test]
+    fn pair_at_distance_is_exact() {
+        for_all(24, |g| {
+            let n = g.usize_in(4, 128);
+            let d = g.f32_in(0.05, 1.95) as f64;
+            let mut rng = Rng::new(g.u64());
+            let (x, y) = pair_at_distance(n, d, &mut rng);
+            assert!((norm2(&x) - 1.0).abs() < 1e-4);
+            assert!((norm2(&y) - 1.0).abs() < 1e-3);
+            assert!(
+                (euclidean(&x, &y) - d).abs() < 1e-3,
+                "wanted dist {d}, got {}",
+                euclidean(&x, &y)
+            );
+        });
+    }
+
+    #[test]
+    fn collision_probability_decreases_with_distance() {
+        let n = 64;
+        let distances = [0.2, 0.8, 1.4, 1.9];
+        for fam in [Family::Dense, Family::Hd3] {
+            let curve = collision_curve(fam, n, &distances, 20, 50, 42);
+            for w in curve.windows(2) {
+                assert!(
+                    w[0].probability >= w[1].probability - 0.02,
+                    "{fam:?}: p({}) = {} < p({}) = {}",
+                    w[0].distance,
+                    w[0].probability,
+                    w[1].distance,
+                    w[1].probability
+                );
+            }
+            assert!(curve[0].probability > 0.3, "{fam:?}: near pairs should collide often");
+            assert!(curve[3].probability < 0.1, "{fam:?}: far pairs should rarely collide");
+        }
+    }
+
+    #[test]
+    fn structured_curve_close_to_unstructured() {
+        // Theorem 5.3's empirical face: the HD3 curve tracks the Gaussian
+        // curve pointwise.
+        let n = 64;
+        let distances = [0.3, 0.9, 1.5];
+        let dense = collision_curve(Family::Dense, n, &distances, 30, 60, 7);
+        let hd3 = collision_curve(Family::Hd3, n, &distances, 30, 60, 7);
+        for (a, b) in dense.iter().zip(&hd3) {
+            assert!(
+                (a.probability - b.probability).abs() < 0.08,
+                "at d={}: dense {} vs hd3 {}",
+                a.distance,
+                a.probability,
+                b.probability
+            );
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! The cross-polytope hash function `h(x) = η(Gx / ||Gx||₂)`.
+//!
+//! `η(y)` returns the closest vector among `{±e_i}` — equivalently the index
+//! of the largest-|·| coordinate together with its sign. Normalization does
+//! not change the argmax, so the hash needs only one transform apply plus
+//! one linear scan.
+
+use crate::linalg::vecops::{argmax_abs_signed, pad_to};
+use crate::transform::{make_square, Family, Transform};
+use crate::util::rng::Rng;
+
+/// One cross-polytope hash function over `R^n`.
+///
+/// Hash values live in `0..2n`: value `i < n` encodes `+e_i`, value
+/// `i >= n` encodes `-e_{i-n}`.
+pub struct CrossPolytopeHash {
+    transform: Box<dyn Transform>,
+}
+
+impl CrossPolytopeHash {
+    pub fn new(transform: Box<dyn Transform>) -> CrossPolytopeHash {
+        CrossPolytopeHash { transform }
+    }
+
+    /// Standard square construction of the given family (the paper's
+    /// Figure 1 setting).
+    pub fn with_family(family: Family, n: usize, rng: &mut Rng) -> CrossPolytopeHash {
+        CrossPolytopeHash {
+            transform: make_square(family, n, rng),
+        }
+    }
+
+    /// Input dimensionality (inputs shorter than this are zero-padded).
+    pub fn dim(&self) -> usize {
+        self.transform.dim_in()
+    }
+
+    /// Number of distinct hash buckets (`2 * dim_out`).
+    pub fn num_buckets(&self) -> usize {
+        2 * self.transform.dim_out()
+    }
+
+    /// Hash a vector. The norm of `x` is irrelevant (hash is scale
+    /// invariant), matching the unit-sphere setting of the paper.
+    pub fn hash(&self, x: &[f32]) -> usize {
+        let n = self.transform.dim_in();
+        let y = if x.len() == n {
+            self.transform.apply(x)
+        } else {
+            self.transform.apply(&pad_to(x, n))
+        };
+        argmax_abs_signed(&y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+
+    #[test]
+    fn hash_in_range_and_scale_invariant() {
+        for_all(24, |g| {
+            let n = g.pow2_in(2, 7);
+            let fam = *g.choose(&[Family::Dense, Family::Hd3, Family::Hdg]);
+            let h = CrossPolytopeHash::with_family(fam, n, &mut Rng::new(g.u64()));
+            let x = g.gaussian_vec(n);
+            let b = h.hash(&x);
+            assert!(b < h.num_buckets());
+            let scaled: Vec<f32> = x.iter().map(|v| v * 7.5).collect();
+            assert_eq!(h.hash(&scaled), b, "hash must be scale invariant");
+        });
+    }
+
+    #[test]
+    fn identical_points_always_collide() {
+        for_all(16, |g| {
+            let n = 32;
+            let h = CrossPolytopeHash::with_family(Family::Hd3, n, &mut Rng::new(g.u64()));
+            let x = g.unit_vec(n);
+            assert_eq!(h.hash(&x), h.hash(&x));
+        });
+    }
+
+    #[test]
+    fn antipodal_points_never_collide() {
+        // h(-x) is the opposite bucket of h(x).
+        for_all(16, |g| {
+            let n = 32;
+            let h = CrossPolytopeHash::with_family(Family::Hdg, n, &mut Rng::new(g.u64()));
+            let x = g.unit_vec(n);
+            let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+            let (a, b) = (h.hash(&x), h.hash(&neg));
+            assert_ne!(a, b);
+            // and specifically the sign-flipped encoding of the same index
+            let m = n;
+            assert_eq!(a % m, b % m);
+        });
+    }
+
+    #[test]
+    fn buckets_roughly_uniform_for_random_input() {
+        // Averaged over hash draws, a random input lands in each of the 2n
+        // buckets with equal probability (symmetry of the construction).
+        let n = 8;
+        let mut counts = vec![0usize; 2 * n];
+        let mut rng = Rng::new(2);
+        let draws = 40;
+        let per = 250;
+        for d in 0..draws {
+            let h = CrossPolytopeHash::with_family(Family::Dense, n, &mut Rng::new(d));
+            for _ in 0..per {
+                counts[h.hash(&rng.unit_vec(n))] += 1;
+            }
+        }
+        let trials = draws as usize * per;
+        let expect = trials as f64 / (2 * n) as f64;
+        for (i, c) in counts.iter().enumerate() {
+            assert!(
+                (*c as f64 - expect).abs() < 5.0 * expect.sqrt() + 0.05 * expect,
+                "bucket {i}: {c} vs expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn short_input_padded() {
+        let h = CrossPolytopeHash::with_family(Family::Hd3, 64, &mut Rng::new(3));
+        let x = Rng::new(4).unit_vec(50);
+        assert!(h.hash(&x) < 128);
+    }
+}

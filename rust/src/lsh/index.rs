@@ -1,0 +1,200 @@
+//! Multi-table LSH index for approximate nearest-neighbor search.
+//!
+//! The downstream application the paper's LSH section motivates: `L` tables,
+//! each keyed by the concatenation of `t` cross-polytope hashes. Queries
+//! collect candidates from all tables and re-rank them exactly.
+
+use super::crosspolytope::CrossPolytopeHash;
+use crate::linalg::vecops::euclidean;
+use crate::transform::Family;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// One hash table: `t` concatenated hash functions.
+struct Table {
+    hashes: Vec<CrossPolytopeHash>,
+    buckets: HashMap<u64, Vec<usize>>,
+}
+
+impl Table {
+    fn key(&self, x: &[f32]) -> u64 {
+        // combine the t sub-hashes into one 64-bit key
+        let mut k = 0xcbf2_9ce4_8422_2325u64; // FNV offset basis
+        for h in &self.hashes {
+            k ^= h.hash(x) as u64;
+            k = k.wrapping_mul(0x1000_0000_01b3);
+        }
+        k
+    }
+}
+
+/// Multi-probe-free, multi-table cross-polytope LSH index.
+pub struct LshIndex {
+    tables: Vec<Table>,
+    points: Vec<Vec<f32>>,
+}
+
+impl LshIndex {
+    /// Build an index over `points` with `l` tables × `t` hashes each.
+    pub fn build(
+        points: Vec<Vec<f32>>,
+        family: Family,
+        n: usize,
+        l: usize,
+        t: usize,
+        seed: u64,
+    ) -> LshIndex {
+        let mut master = Rng::new(seed);
+        let mut tables: Vec<Table> = (0..l)
+            .map(|_| Table {
+                hashes: (0..t)
+                    .map(|_| CrossPolytopeHash::with_family(family, n, &mut master.fork()))
+                    .collect(),
+                buckets: HashMap::new(),
+            })
+            .collect();
+        for (i, p) in points.iter().enumerate() {
+            for tb in tables.iter_mut() {
+                let k = tb.key(p);
+                tb.buckets.entry(k).or_default().push(i);
+            }
+        }
+        LshIndex { tables, points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Candidate set for a query (union of matching buckets, deduplicated).
+    pub fn candidates(&self, q: &[f32]) -> Vec<usize> {
+        let mut seen = vec![false; self.points.len()];
+        let mut out = Vec::new();
+        for tb in &self.tables {
+            if let Some(ids) = tb.buckets.get(&tb.key(q)) {
+                for &i in ids {
+                    if !seen[i] {
+                        seen[i] = true;
+                        out.push(i);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Approximate k-NN: re-rank candidates by exact distance. Returns
+    /// `(index, distance)` pairs, nearest first.
+    pub fn query(&self, q: &[f32], k: usize) -> Vec<(usize, f64)> {
+        let mut cands: Vec<(usize, f64)> = self
+            .candidates(q)
+            .into_iter()
+            .map(|i| (i, euclidean(q, &self.points[i])))
+            .collect();
+        cands.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        cands.truncate(k);
+        cands
+    }
+
+    /// Exact k-NN by brute force (recall baseline).
+    pub fn brute_force(&self, q: &[f32], k: usize) -> Vec<(usize, f64)> {
+        let mut all: Vec<(usize, f64)> = self
+            .points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (i, euclidean(q, p)))
+            .collect();
+        all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        all.truncate(k);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::collision::pair_at_distance;
+
+    fn cluster_dataset(n: usize, clusters: usize, per: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let mut pts = Vec::new();
+        for _ in 0..clusters {
+            let center = rng.unit_vec(n);
+            for _ in 0..per {
+                // small perturbation around the center, re-normalized
+                let (_, nearby) = pair_at_distance(n, 0.25, &mut rng);
+                let mut p: Vec<f32> = center
+                    .iter()
+                    .zip(&nearby)
+                    .map(|(c, q)| 0.9 * c + 0.1 * q)
+                    .collect();
+                crate::linalg::vecops::normalize(&mut p);
+                pts.push(p);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn index_finds_exact_duplicates() {
+        let n = 64;
+        let pts = cluster_dataset(n, 4, 20, 1);
+        let idx = LshIndex::build(pts.clone(), Family::Hd3, n, 8, 1, 99);
+        // querying with an indexed point must return it at distance 0
+        for i in [0usize, 17, 40, 79] {
+            let res = idx.query(&pts[i], 1);
+            assert!(!res.is_empty(), "point {i} not found in any bucket");
+            assert_eq!(res[0].0, i);
+            assert!(res[0].1 < 1e-9);
+        }
+    }
+
+    #[test]
+    fn recall_reasonable_on_clustered_data() {
+        let n = 64;
+        let pts = cluster_dataset(n, 5, 30, 2);
+        let idx = LshIndex::build(pts.clone(), Family::Hd3, n, 10, 1, 7);
+        let mut rng = Rng::new(3);
+        let mut hits = 0;
+        let trials = 30;
+        for _ in 0..trials {
+            let qi = rng.below(pts.len() as u64) as usize;
+            // perturb the query slightly off an indexed point
+            let mut q = pts[qi].clone();
+            q[0] += 0.05;
+            crate::linalg::vecops::normalize(&mut q);
+            let truth = idx.brute_force(&q, 1)[0].0;
+            let approx = idx.query(&q, 1);
+            if approx.first().map(|r| r.0) == Some(truth) {
+                hits += 1;
+            }
+        }
+        let recall = hits as f64 / trials as f64;
+        assert!(recall > 0.6, "recall@1 = {recall}");
+    }
+
+    #[test]
+    fn candidates_subset_and_dedup() {
+        let n = 32;
+        let pts = cluster_dataset(n, 3, 10, 4);
+        let idx = LshIndex::build(pts.clone(), Family::Hdg, n, 6, 1, 8);
+        let c = idx.candidates(&pts[0]);
+        let mut sorted = c.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), c.len(), "candidates must be deduplicated");
+        assert!(c.iter().all(|i| *i < pts.len()));
+    }
+
+    #[test]
+    fn empty_and_len() {
+        let idx = LshIndex::build(Vec::new(), Family::Hd3, 16, 2, 1, 1);
+        assert!(idx.is_empty());
+        assert_eq!(idx.len(), 0);
+        assert!(idx.query(&[0.0; 16], 3).is_empty());
+    }
+}

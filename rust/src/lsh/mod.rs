@@ -1,0 +1,15 @@
+//! Cross-polytope Locality-Sensitive Hashing (paper §2, Figure 1,
+//! Theorem 5.3).
+//!
+//! The hash of a unit vector is the closest signed canonical direction of
+//! its (normalized) random projection: `h(x) = η(Gx / ||Gx||)`. Replacing
+//! the Gaussian `G` with `HD3·HD2·HD1` keeps the collision-probability
+//! curve (Theorem 5.3 bounds the total-variation gap over convex sets) while
+//! hashing in `O(n log n)`.
+
+pub mod collision;
+pub mod crosspolytope;
+pub mod index;
+
+pub use crosspolytope::CrossPolytopeHash;
+pub use index::LshIndex;

@@ -1,0 +1,357 @@
+//! `triplespin` — leader binary / CLI.
+//!
+//! Subcommands:
+//!   info                      list compiled artifacts + lanes
+//!   verify                    run every artifact against its golden vectors
+//!   serve [opts]              start the coordinator and drive a workload
+//!   transform [opts]          one-shot structured transform of a random vector
+//!   metrics-demo              short burst + metrics JSON dump
+//!
+//! Run `triplespin help` for the option list. The binary is self-contained
+//! once `make artifacts` has produced `artifacts/` (PJRT backend); the
+//! native backend needs no artifacts at all.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use triplespin::coordinator::{Backend, Config, Coordinator, NativeBackend, PjrtBackend};
+use triplespin::runtime::{Op, RuntimeService};
+use triplespin::transform::{make_square, Family};
+use triplespin::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let opts = parse_opts(&args[args.len().min(1)..]);
+    let code = match cmd {
+        "info" => cmd_info(&opts),
+        "verify" => cmd_verify(&opts),
+        "serve" => cmd_serve(&opts),
+        "transform" => cmd_transform(&opts),
+        "metrics-demo" => cmd_metrics_demo(&opts),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "triplespin — structured random matrices for fast ML computations
+
+USAGE: triplespin <command> [--key value]...
+
+COMMANDS:
+  info            list artifacts in --artifacts (default: artifacts/)
+  verify          execute every artifact against its Python golden vectors
+  serve           start coordinator; drive --requests N at --rate req/s
+                  (--backend native|pjrt, --n 256, --op transform|rff|crosspolytope,
+                   --max-batch 64, --queue 1024)
+  transform       one-shot transform (--family hd3|hdg|circulant|toeplitz|
+                  hankel|skew|dense, --n 256, --seed 42)
+  metrics-demo    short native-backend burst, dumps metrics JSON
+"
+    );
+}
+
+fn parse_opts(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    m.insert(key.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    m.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn opt<T: std::str::FromStr>(opts: &HashMap<String, String>, key: &str, default: T) -> T {
+    opts.get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn artifact_dir(opts: &HashMap<String, String>) -> PathBuf {
+    PathBuf::from(
+        opts.get("artifacts")
+            .cloned()
+            .unwrap_or_else(|| "artifacts".into()),
+    )
+}
+
+fn cmd_info(opts: &HashMap<String, String>) -> i32 {
+    let dir = artifact_dir(opts);
+    match triplespin::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifact dir: {}", dir.display());
+            println!(
+                "{:<28} {:>6} {:>6} {:>12} {:>8}",
+                "name", "n", "batch", "output", "golden"
+            );
+            for a in &m.artifacts {
+                println!(
+                    "{:<28} {:>6} {:>6} {:>12} {:>8}",
+                    a.name,
+                    a.n,
+                    a.batch,
+                    format!("{:?}", a.output),
+                    a.golden.is_some()
+                );
+            }
+            println!("\nlanes: {:?}", m.lanes());
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}\nhint: run `make artifacts` first");
+            1
+        }
+    }
+}
+
+fn cmd_verify(opts: &HashMap<String, String>) -> i32 {
+    let dir = artifact_dir(opts);
+    let svc = match RuntimeService::spawn(dir) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let h = svc.handle();
+    let mut failures = 0;
+    for name in h.names().unwrap_or_default() {
+        match h.verify_golden(&name) {
+            Ok(Some((err, numel))) => {
+                let ok = err < 2e-3;
+                println!(
+                    "{:<28} max|err| = {err:.3e} over {numel} elements  {}",
+                    name,
+                    if ok { "OK" } else { "FAIL" }
+                );
+                if !ok {
+                    failures += 1;
+                }
+            }
+            Ok(None) => println!("{name:<28} (no golden vectors)"),
+            Err(e) => {
+                println!("{name:<28} ERROR: {e}");
+                failures += 1;
+            }
+        }
+    }
+    svc.shutdown();
+    if failures > 0 {
+        eprintln!("{failures} artifact(s) failed verification");
+        1
+    } else {
+        0
+    }
+}
+
+fn cmd_transform(opts: &HashMap<String, String>) -> i32 {
+    let n: usize = opt(opts, "n", 256);
+    let seed: u64 = opt(opts, "seed", 42);
+    let fam_s = opts.get("family").cloned().unwrap_or_else(|| "hd3".into());
+    let Some(family) = Family::parse(&fam_s) else {
+        eprintln!("unknown family '{fam_s}'");
+        return 2;
+    };
+    if !n.is_power_of_two() && family != Family::Dense {
+        eprintln!("n must be a power of two for Hadamard-based families");
+        return 2;
+    }
+    let mut rng = Rng::new(seed);
+    let t = make_square(family, n, &mut rng);
+    let x = Rng::new(seed ^ 0xABCD).unit_vec(n);
+    let start = Instant::now();
+    let y = t.apply(&x);
+    let dt = start.elapsed();
+    let norm: f64 = y.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+    println!("family   : {} ({})", family.name(), family.label());
+    println!("n        : {n}");
+    println!(
+        "params   : {} bits ({:.1} KiB)",
+        t.param_bits(),
+        t.param_bits() as f64 / 8192.0
+    );
+    println!("apply    : {dt:?}");
+    println!(
+        "||y||/√n : {:.4} (≈1 for Gaussian-like rows)",
+        norm / (n as f64).sqrt()
+    );
+    println!("y[..8]   : {:?}", &y[..8.min(n)]);
+    0
+}
+
+fn build_coordinator(
+    opts: &HashMap<String, String>,
+    lanes: Vec<(Op, usize)>,
+) -> Result<(Coordinator, Option<RuntimeService>), String> {
+    let sigma: f64 = opt(opts, "sigma", 1.0);
+    let seed: u64 = opt(opts, "seed", 42);
+    let dims: Vec<usize> = {
+        let mut d: Vec<usize> = lanes.iter().map(|(_, n)| *n).collect();
+        d.sort_unstable();
+        d.dedup();
+        d
+    };
+    let config = Config {
+        lanes,
+        max_batch: opt(opts, "max-batch", 64),
+        max_wait: Duration::from_micros(opt(opts, "max-wait-us", 200)),
+        queue_cap: opt(opts, "queue", 1024),
+        sigma,
+        seed,
+    };
+    let backend_s = opts
+        .get("backend")
+        .cloned()
+        .unwrap_or_else(|| "native".into());
+    match backend_s.as_str() {
+        "native" => {
+            let be: Arc<dyn Backend> = Arc::new(NativeBackend::new(&dims, sigma, seed));
+            Ok((Coordinator::start(config, be), None))
+        }
+        "pjrt" => {
+            let svc = RuntimeService::spawn(artifact_dir(opts)).map_err(|e| e.to_string())?;
+            let be: Arc<dyn Backend> =
+                Arc::new(PjrtBackend::new(svc.handle(), &dims, sigma, seed)?);
+            Ok((Coordinator::start(config, be), Some(svc)))
+        }
+        other => Err(format!("unknown backend '{other}' (native|pjrt)")),
+    }
+}
+
+fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
+    let n: usize = opt(opts, "n", 256);
+    // --tcp <addr>: serve the newline-JSON protocol instead of the
+    // built-in load driver. E.g. `triplespin serve --tcp 127.0.0.1:7878`.
+    if let Some(addr) = opts.get("tcp") {
+        let lanes = vec![
+            (Op::Transform, n),
+            (Op::Rff, n),
+            (Op::CrossPolytope, n),
+        ];
+        let (c, _svc) = match build_coordinator(opts, lanes) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        let c = Arc::new(c);
+        let server = match triplespin::coordinator::TcpServer::start(Arc::clone(&c), addr) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("bind {addr}: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "listening on {} (ops: transform/rff/crosspolytope, n={n});\n\
+             protocol: one JSON per line: {{\"id\":1,\"op\":\"transform\",\"vector\":[..]}}\n\
+             Ctrl-C to stop.",
+            server.addr()
+        );
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let requests: usize = opt(opts, "requests", 2000);
+    let rate: f64 = opt(opts, "rate", 0.0); // 0 = as fast as possible
+    let op_s = opts
+        .get("op")
+        .cloned()
+        .unwrap_or_else(|| "transform".into());
+    let Some(op) = Op::parse(&op_s) else {
+        eprintln!("unknown op '{op_s}'");
+        return 2;
+    };
+    let (c, svc) = match build_coordinator(opts, vec![(op, n)]) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!(
+        "serving {requests} {op} requests (n={n}, backend={})...",
+        opts.get("backend").map(String::as_str).unwrap_or("native")
+    );
+
+    let mut rng = Rng::new(7);
+    let start = Instant::now();
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    let gap = if rate > 0.0 {
+        Duration::from_secs_f64(1.0 / rate)
+    } else {
+        Duration::ZERO
+    };
+    for i in 0..requests {
+        loop {
+            match c.submit(op, rng.gaussian_vec(n)) {
+                Ok(p) => {
+                    pending.push(p);
+                    break;
+                }
+                Err(triplespin::coordinator::SubmitError::Busy) => {
+                    rejected += 1;
+                    // drain one response then retry (simple client-side flow control)
+                    if let Some((_, rx)) = pending.pop() {
+                        let _ = rx.recv();
+                    }
+                }
+                Err(e) => {
+                    eprintln!("submit failed: {e}");
+                    return 1;
+                }
+            }
+        }
+        if !gap.is_zero() && i % 16 == 0 {
+            std::thread::sleep(gap * 16);
+        }
+    }
+    for (_, rx) in pending {
+        if rx.recv().map(|r| r.result.is_err()).unwrap_or(true) {
+            eprintln!("a request failed");
+        }
+    }
+    let dt = start.elapsed();
+    println!(
+        "done: {requests} requests in {dt:?}  ({:.0} req/s, {rejected} Busy signals)",
+        requests as f64 / dt.as_secs_f64()
+    );
+    println!("metrics: {}", c.metrics_json());
+    c.shutdown();
+    if let Some(s) = svc {
+        s.shutdown();
+    }
+    0
+}
+
+fn cmd_metrics_demo(opts: &HashMap<String, String>) -> i32 {
+    let mut o = opts.clone();
+    o.entry("requests".into()).or_insert("500".into());
+    cmd_serve(&o)
+}

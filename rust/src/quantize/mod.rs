@@ -1,0 +1,14 @@
+//! Vector quantization with random projection trees (paper §1, Remark 4).
+//!
+//! An RP-tree recursively splits a dataset at the median of its projection
+//! onto a random direction [Dasgupta & Freund]. The paper's Remark 4 notes
+//! the whole tree is one function `f` of a Gaussian matrix `G` (one row per
+//! level), with `d = d_intrinsic` — so any TripleSpin member can supply the
+//! directions. [`RpTree`] builds the tree with either a dense Gaussian or a
+//! structured transform; [`RpTree::quantize`] maps a vector to its leaf
+//! centroid, and [`distortion`] measures the quantization error the
+//! experiments compare.
+
+pub mod tree;
+
+pub use tree::{distortion, RpTree};

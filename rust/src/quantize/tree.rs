@@ -1,0 +1,292 @@
+//! Random projection tree quantizer.
+//!
+//! Internal nodes hold a projection-row index and a median threshold; the
+//! projections for *all* levels come from one `k x n` transform (one row
+//! per tree level), so a TripleSpin transform supplies every split
+//! direction at `O(n log n)` per query instead of `O(kn)`.
+
+use crate::linalg::vecops::{euclidean, pad_to};
+use crate::transform::{make, Family, Transform};
+use crate::util::rng::Rng;
+
+/// A node of the RP-tree, indexed into [`RpTree::nodes`].
+#[derive(Clone, Debug)]
+enum Node {
+    Internal {
+        /// Which projection row splits this node (== node depth).
+        level: usize,
+        /// Median threshold on the projected value.
+        threshold: f32,
+        left: usize,
+        right: usize,
+    },
+    Leaf {
+        /// Mean of the training points that landed here.
+        centroid: Vec<f32>,
+        /// Number of training points.
+        count: usize,
+    },
+}
+
+/// Random-projection-tree vector quantizer.
+pub struct RpTree {
+    transform: Box<dyn Transform>,
+    nodes: Vec<Node>,
+    root: usize,
+    dim: usize,
+    depth: usize,
+}
+
+impl RpTree {
+    /// Build a depth-`depth` RP-tree over `points`, drawing split
+    /// directions from `family`. Leaves store centroids.
+    pub fn build(
+        points: &[Vec<f32>],
+        family: Family,
+        depth: usize,
+        seed: u64,
+    ) -> RpTree {
+        assert!(!points.is_empty());
+        let dim = points[0].len();
+        let n_pad = dim.next_power_of_two();
+        let mut rng = Rng::new(seed);
+        // one projection row per level
+        let transform = make(family, depth.max(1), n_pad, n_pad, &mut rng);
+        // project every training point once
+        let projections: Vec<Vec<f32>> = points
+            .iter()
+            .map(|p| transform.apply(&pad_to(p, n_pad)))
+            .collect();
+        let mut nodes = Vec::new();
+        let ids: Vec<usize> = (0..points.len()).collect();
+        let root = build_rec(points, &projections, &ids, 0, depth, &mut nodes);
+        RpTree {
+            transform,
+            nodes,
+            root,
+            dim,
+            depth,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Leaf { .. }))
+            .count()
+    }
+
+    /// Total stored parameters in bits (tree thresholds + centroids +
+    /// projection rows).
+    pub fn param_bits(&self) -> usize {
+        let node_bits: usize = self
+            .nodes
+            .iter()
+            .map(|n| match n {
+                Node::Internal { .. } => 32 + 2 * 64,
+                Node::Leaf { centroid, .. } => 32 * centroid.len(),
+            })
+            .sum();
+        node_bits + self.transform.param_bits()
+    }
+
+    /// The leaf centroid for `x` (the quantized representative).
+    pub fn quantize(&self, x: &[f32]) -> &[f32] {
+        let n_pad = self.transform.dim_in();
+        let proj = self.transform.apply(&pad_to(x, n_pad));
+        let mut cur = self.root;
+        loop {
+            match &self.nodes[cur] {
+                Node::Internal {
+                    level,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    cur = if proj[*level] <= *threshold { *left } else { *right };
+                }
+                Node::Leaf { centroid, .. } => return centroid,
+            }
+        }
+    }
+
+    /// Leaf id for `x` (a compact code in `0..num_leaves`-ish space —
+    /// node index, stable for a built tree).
+    pub fn code(&self, x: &[f32]) -> usize {
+        let n_pad = self.transform.dim_in();
+        let proj = self.transform.apply(&pad_to(x, n_pad));
+        let mut cur = self.root;
+        loop {
+            match &self.nodes[cur] {
+                Node::Internal {
+                    level,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    cur = if proj[*level] <= *threshold { *left } else { *right };
+                }
+                Node::Leaf { .. } => return cur,
+            }
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+fn build_rec(
+    points: &[Vec<f32>],
+    projections: &[Vec<f32>],
+    ids: &[usize],
+    level: usize,
+    max_depth: usize,
+    nodes: &mut Vec<Node>,
+) -> usize {
+    if level >= max_depth || ids.len() <= 1 {
+        let dim = points[0].len();
+        let mut centroid = vec![0.0f32; dim];
+        for &i in ids {
+            for (c, v) in centroid.iter_mut().zip(&points[i]) {
+                *c += v;
+            }
+        }
+        let cnt = ids.len().max(1);
+        for c in centroid.iter_mut() {
+            *c /= cnt as f32;
+        }
+        nodes.push(Node::Leaf {
+            centroid,
+            count: ids.len(),
+        });
+        return nodes.len() - 1;
+    }
+    // median split on this level's projection
+    let mut vals: Vec<f32> = ids.iter().map(|&i| projections[i][level]).collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let threshold = vals[vals.len() / 2];
+    let (mut l, mut r) = (Vec::new(), Vec::new());
+    for &i in ids {
+        if projections[i][level] <= threshold {
+            l.push(i);
+        } else {
+            r.push(i);
+        }
+    }
+    // degenerate split (ties): stop here
+    if l.is_empty() || r.is_empty() {
+        return build_rec(points, projections, ids, max_depth, max_depth, nodes);
+    }
+    let left = build_rec(points, projections, &l, level + 1, max_depth, nodes);
+    let right = build_rec(points, projections, &r, level + 1, max_depth, nodes);
+    nodes.push(Node::Internal {
+        level,
+        threshold,
+        left,
+        right,
+    });
+    nodes.len() - 1
+}
+
+/// Mean squared quantization distortion `E ||x - q(x)||²` over a set.
+pub fn distortion(tree: &RpTree, points: &[Vec<f32>]) -> f64 {
+    let total: f64 = points
+        .iter()
+        .map(|p| euclidean(p, tree.quantize(p)).powi(2))
+        .sum();
+    total / points.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::uspst;
+
+    fn dataset() -> Vec<Vec<f32>> {
+        uspst::dataset_n(300, 7)
+    }
+
+    #[test]
+    fn tree_builds_and_quantizes() {
+        let pts = dataset();
+        let tree = RpTree::build(&pts, Family::Hd3, 5, 1);
+        assert!(tree.num_leaves() > 1);
+        assert!(tree.num_leaves() <= 32);
+        for p in pts.iter().take(10) {
+            let q = tree.quantize(p);
+            assert_eq!(q.len(), p.len());
+        }
+    }
+
+    #[test]
+    fn deeper_trees_reduce_distortion() {
+        let pts = dataset();
+        let d2 = distortion(&RpTree::build(&pts, Family::Hd3, 2, 3), &pts);
+        let d6 = distortion(&RpTree::build(&pts, Family::Hd3, 6, 3), &pts);
+        let d8 = distortion(&RpTree::build(&pts, Family::Hd3, 8, 3), &pts);
+        assert!(d6 < d2, "depth 6 ({d6}) should beat depth 2 ({d2})");
+        assert!(d8 <= d6 * 1.05, "depth 8 ({d8}) should not regress vs 6 ({d6})");
+    }
+
+    #[test]
+    fn structured_matches_dense_distortion() {
+        // the paper's claim specialized to quantization: TripleSpin split
+        // directions quantize as well as Gaussian ones.
+        let pts = dataset();
+        let avg = |fam: Family| -> f64 {
+            (0..4)
+                .map(|s| distortion(&RpTree::build(&pts, fam, 6, 10 + s), &pts))
+                .sum::<f64>()
+                / 4.0
+        };
+        let dense = avg(Family::Dense);
+        let hd3 = avg(Family::Hd3);
+        assert!(
+            (hd3 - dense).abs() < 0.25 * dense,
+            "hd3 distortion {hd3} vs dense {dense}"
+        );
+    }
+
+    #[test]
+    fn code_is_consistent_with_quantize() {
+        let pts = dataset();
+        let tree = RpTree::build(&pts, Family::Hdg, 5, 2);
+        for p in pts.iter().take(20) {
+            let c1 = tree.code(p);
+            let c2 = tree.code(p);
+            assert_eq!(c1, c2);
+        }
+    }
+
+    #[test]
+    fn identical_points_share_a_leaf() {
+        let pts = dataset();
+        let tree = RpTree::build(&pts, Family::Hd3, 6, 4);
+        let p = &pts[0];
+        assert_eq!(tree.code(p), tree.code(&p.clone()));
+    }
+
+    #[test]
+    fn single_point_dataset() {
+        let pts = vec![vec![1.0f32; 16]];
+        let tree = RpTree::build(&pts, Family::Hd3, 4, 5);
+        assert_eq!(tree.num_leaves(), 1);
+        let q = tree.quantize(&pts[0]);
+        assert_eq!(q, &pts[0][..]);
+        assert_eq!(distortion(&tree, &pts), 0.0);
+    }
+
+    #[test]
+    fn param_bits_positive_and_ordered() {
+        let pts = dataset();
+        let hd3 = RpTree::build(&pts, Family::Hd3, 5, 6).param_bits();
+        let dense = RpTree::build(&pts, Family::Dense, 5, 6).param_bits();
+        assert!(hd3 > 0);
+        assert!(hd3 < dense, "structured tree must store fewer bits");
+    }
+}

@@ -1,0 +1,212 @@
+//! PJRT executor: loads HLO-text artifacts and runs them on the CPU client.
+//!
+//! The `xla` crate's handles are `Rc`-based (not `Send`), so all PJRT state
+//! lives on whatever thread constructs [`Executor`]; cross-thread access
+//! goes through [`super::service::RuntimeHandle`].
+
+use super::manifest::{ArtifactSpec, Manifest};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+
+/// Execution output: f32 tensor or i32 tensor (crosspolytope ids).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Output {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Output {
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Output::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Output::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Executor error.
+#[derive(Debug)]
+pub struct ExecError(pub String);
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "executor error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+fn xerr<E: fmt::Display>(ctx: &str) -> impl FnOnce(E) -> ExecError + '_ {
+    move |e| ExecError(format!("{ctx}: {e}"))
+}
+
+struct Loaded {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Owns the PJRT client and all compiled executables.
+pub struct Executor {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    models: HashMap<String, Loaded>,
+    manifest: Manifest,
+}
+
+impl Executor {
+    /// Load every artifact in `<dir>/manifest.json` and compile it on the
+    /// PJRT CPU client.
+    pub fn load_dir(dir: &Path) -> Result<Executor, ExecError> {
+        let manifest = Manifest::load(dir).map_err(|e| ExecError(e.to_string()))?;
+        let client = xla::PjRtClient::cpu().map_err(xerr("PjRtClient::cpu"))?;
+        let mut models = HashMap::new();
+        for spec in &manifest.artifacts {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| ExecError(format!("bad path {}", path.display())))?,
+            )
+            .map_err(xerr("parse HLO text"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(xerr("compile"))?;
+            models.insert(
+                spec.name.clone(),
+                Loaded {
+                    spec: spec.clone(),
+                    exe,
+                },
+            );
+        }
+        Ok(Executor {
+            client,
+            models,
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.models.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.models.get(name).map(|l| &l.spec)
+    }
+
+    /// Execute an artifact by name. `inputs` are flat f32 buffers matching
+    /// the manifest's parameter shapes (validated here).
+    pub fn run(&self, name: &str, inputs: &[&[f32]]) -> Result<Output, ExecError> {
+        let loaded = self
+            .models
+            .get(name)
+            .ok_or_else(|| ExecError(format!("unknown artifact '{name}'")))?;
+        let spec = &loaded.spec;
+        if inputs.len() != spec.inputs.len() {
+            return Err(ExecError(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&spec.inputs) {
+            let numel: usize = shape.iter().product();
+            if buf.len() != numel {
+                return Err(ExecError(format!(
+                    "{name}: input numel {} != shape {:?}",
+                    buf.len(),
+                    shape
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(xerr("reshape literal"))?;
+            literals.push(lit);
+        }
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(xerr("execute"))?[0][0]
+            .to_literal_sync()
+            .map_err(xerr("to_literal"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(xerr("to_tuple1"))?;
+        match spec.output_dtype.as_str() {
+            "i32" => Ok(Output::I32(out.to_vec::<i32>().map_err(xerr("to_vec i32"))?)),
+            _ => Ok(Output::F32(out.to_vec::<f32>().map_err(xerr("to_vec f32"))?)),
+        }
+    }
+
+    /// Run the artifact's golden vectors (if present): returns
+    /// `(max_abs_err, numel)` between PJRT output and the Python-side
+    /// golden output. Used by integration tests and `triplespin verify`.
+    pub fn verify_golden(&self, name: &str) -> Result<Option<(f64, usize)>, ExecError> {
+        let spec = self
+            .spec(name)
+            .ok_or_else(|| ExecError(format!("unknown artifact '{name}'")))?
+            .clone();
+        let Some(golden_file) = &spec.golden else {
+            return Ok(None);
+        };
+        let text = std::fs::read_to_string(self.manifest.dir.join(golden_file))
+            .map_err(xerr("read golden"))?;
+        let doc = Json::parse(&text).map_err(xerr("parse golden"))?;
+        let inputs: Vec<Vec<f32>> = doc
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| ExecError("golden: missing inputs".into()))?
+            .iter()
+            .map(|arr| {
+                arr.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|x| x.as_f64().unwrap_or(f64::NAN) as f32)
+                    .collect()
+            })
+            .collect();
+        let want: Vec<f64> = doc
+            .get("output")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| ExecError("golden: missing output".into()))?
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(f64::NAN))
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let got = self.run(name, &refs)?;
+        let got_f64: Vec<f64> = match &got {
+            Output::F32(v) => v.iter().map(|x| *x as f64).collect(),
+            Output::I32(v) => v.iter().map(|x| *x as f64).collect(),
+        };
+        if got_f64.len() != want.len() {
+            return Err(ExecError(format!(
+                "{name}: golden output numel {} != got {}",
+                want.len(),
+                got_f64.len()
+            )));
+        }
+        let max_err = got_f64
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        Ok(Some((max_err, want.len())))
+    }
+}
+
+// NOTE: no unit tests here — Executor needs real artifacts; covered by
+// rust/tests/runtime_integration.rs (runs after `make artifacts`).

@@ -1,0 +1,285 @@
+//! The AOT artifact manifest written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Operations the compiled artifacts implement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// `√n·HD3 HD2 HD1 x` — (b, n) f32 -> (b, n) f32.
+    Transform,
+    /// Gaussian-kernel RFF map — (b, n) f32 -> (b, 2n) f32.
+    Rff,
+    /// Cross-polytope hash ids — (b, n) f32 -> (b,) i32.
+    CrossPolytope,
+}
+
+impl Op {
+    pub fn parse(s: &str) -> Option<Op> {
+        Some(match s {
+            "transform" => Op::Transform,
+            "rff" => Op::Rff,
+            "crosspolytope" => Op::CrossPolytope,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Transform => "transform",
+            Op::Rff => "rff",
+            Op::CrossPolytope => "crosspolytope",
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One compiled artifact: an (op, n, batch) variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub op: Op,
+    pub n: usize,
+    pub batch: usize,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Parameter shapes, in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape.
+    pub output: Vec<usize>,
+    /// "f32" or "i32".
+    pub output_dtype: String,
+    /// Optional golden input/output vectors file.
+    pub golden: Option<String>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+/// Error type for manifest loading / validation.
+#[derive(Debug)]
+pub struct ManifestError(pub String);
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "manifest error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+fn shape_list(j: &Json) -> Result<Vec<usize>, ManifestError> {
+    j.as_arr()
+        .ok_or_else(|| ManifestError("shape is not an array".into()))?
+        .iter()
+        .map(|d| {
+            d.as_usize()
+                .ok_or_else(|| ManifestError(format!("bad dim {d:?}")))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| ManifestError(format!("read {}: {e}", path.display())))?;
+        let doc = Json::parse(&text).map_err(|e| ManifestError(e.to_string()))?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| ManifestError("missing 'artifacts' array".into()))?;
+        let mut out = Vec::with_capacity(arts.len());
+        for a in arts {
+            let get_str = |k: &str| -> Result<String, ManifestError> {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| ManifestError(format!("missing string '{k}'")))
+            };
+            let get_usize = |k: &str| -> Result<usize, ManifestError> {
+                a.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| ManifestError(format!("missing int '{k}'")))
+            };
+            let op_s = get_str("op")?;
+            let op = Op::parse(&op_s)
+                .ok_or_else(|| ManifestError(format!("unknown op '{op_s}'")))?;
+            let inputs = a
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| ManifestError("missing 'inputs'".into()))?
+                .iter()
+                .map(shape_list)
+                .collect::<Result<Vec<_>, _>>()?;
+            let spec = ArtifactSpec {
+                name: get_str("name")?,
+                op,
+                n: get_usize("n")?,
+                batch: get_usize("batch")?,
+                file: get_str("file")?,
+                inputs,
+                output: shape_list(
+                    a.get("output")
+                        .ok_or_else(|| ManifestError("missing 'output'".into()))?,
+                )?,
+                output_dtype: get_str("output_dtype")?,
+                golden: a.get("golden").and_then(|v| v.as_str()).map(str::to_string),
+            };
+            // structural validation
+            if spec.inputs.is_empty() || spec.inputs[0] != vec![spec.batch, spec.n] {
+                return Err(ManifestError(format!(
+                    "{}: first input shape {:?} != [batch={}, n={}]",
+                    spec.name, spec.inputs.first(), spec.batch, spec.n
+                )));
+            }
+            if !dir.join(&spec.file).exists() {
+                return Err(ManifestError(format!(
+                    "{}: artifact file {} missing",
+                    spec.name, spec.file
+                )));
+            }
+            out.push(spec);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts: out,
+        })
+    }
+
+    /// Find artifacts for (op, n), sorted by batch ascending.
+    pub fn variants(&self, op: Op, n: usize) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.op == op && a.n == n)
+            .collect();
+        v.sort_by_key(|a| a.batch);
+        v
+    }
+
+    /// Distinct (op, n) pairs available.
+    pub fn lanes(&self) -> Vec<(Op, usize)> {
+        let mut v: Vec<(Op, usize)> = self.artifacts.iter().map(|a| (a.op, a.n)).collect();
+        v.sort_by_key(|(op, n)| (op.name(), *n));
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("ts_manifest_test1");
+        write_fake_manifest(
+            &dir,
+            r#"{"version":1,"artifacts":[
+                {"name":"transform_n64_b4","op":"transform","n":64,"batch":4,
+                 "file":"t.hlo.txt","inputs":[[4,64],[64],[64],[64]],
+                 "output":[4,64],"output_dtype":"f32"}]}"#,
+        );
+        std::fs::write(dir.join("t.hlo.txt"), "HloModule fake").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.op, Op::Transform);
+        assert_eq!(a.n, 64);
+        assert_eq!(a.batch, 4);
+        assert_eq!(a.golden, None);
+        assert_eq!(m.lanes(), vec![(Op::Transform, 64)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let dir = std::env::temp_dir().join("ts_manifest_test2");
+        write_fake_manifest(
+            &dir,
+            r#"{"artifacts":[
+                {"name":"x","op":"transform","n":64,"batch":4,
+                 "file":"t.hlo.txt","inputs":[[9,9]],
+                 "output":[4,64],"output_dtype":"f32"}]}"#,
+        );
+        std::fs::write(dir.join("t.hlo.txt"), "x").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = std::env::temp_dir().join("ts_manifest_test3");
+        write_fake_manifest(
+            &dir,
+            r#"{"artifacts":[
+                {"name":"x","op":"rff","n":64,"batch":4,
+                 "file":"gone.hlo.txt","inputs":[[4,64]],
+                 "output":[4,128],"output_dtype":"f32"}]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn variants_sorted_by_batch() {
+        let dir = std::env::temp_dir().join("ts_manifest_test4");
+        write_fake_manifest(
+            &dir,
+            r#"{"artifacts":[
+                {"name":"a","op":"transform","n":64,"batch":16,
+                 "file":"a.hlo.txt","inputs":[[16,64]],"output":[16,64],"output_dtype":"f32"},
+                {"name":"b","op":"transform","n":64,"batch":1,
+                 "file":"b.hlo.txt","inputs":[[1,64]],"output":[1,64],"output_dtype":"f32"}]}"#,
+        );
+        std::fs::write(dir.join("a.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("b.hlo.txt"), "x").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variants(Op::Transform, 64);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].batch, 1);
+        assert_eq!(v[1].batch, 16);
+        assert!(m.variants(Op::Rff, 64).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn op_parse() {
+        assert_eq!(Op::parse("transform"), Some(Op::Transform));
+        assert_eq!(Op::parse("rff"), Some(Op::Rff));
+        assert_eq!(Op::parse("crosspolytope"), Some(Op::CrossPolytope));
+        assert_eq!(Op::parse("bogus"), None);
+        assert_eq!(Op::Rff.to_string(), "rff");
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // when `make artifacts` has run, the real manifest must load
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).expect("real manifest must parse");
+            assert!(!m.artifacts.is_empty());
+            assert!(m
+                .artifacts
+                .iter()
+                .any(|a| a.op == Op::Transform && a.n == 256));
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (lowered by
+//! `python/compile/aot.py`) and execute them from the Rust request path.
+//!
+//! * [`manifest`] — parses/validates `artifacts/manifest.json`.
+//! * [`executor`] — PJRT CPU client + compiled executables (single thread).
+//! * [`service`] — thread-hosted executor with a `Send + Sync` handle.
+
+pub mod executor;
+pub mod manifest;
+pub mod service;
+
+pub use executor::{ExecError, Executor, Output};
+pub use manifest::{ArtifactSpec, Manifest, Op};
+pub use service::{RuntimeHandle, RuntimeService};

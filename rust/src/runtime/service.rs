@@ -1,0 +1,167 @@
+//! Thread-hosted runtime service.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based and must not cross
+//! threads. [`RuntimeService::spawn`] starts one dedicated thread that owns
+//! the [`Executor`]; [`RuntimeHandle`] is a cheap, cloneable, `Send + Sync`
+//! front the coordinator's workers use to execute artifacts.
+
+use super::executor::{ExecError, Executor, Output};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+enum Cmd {
+    Run {
+        name: String,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<Output, ExecError>>,
+    },
+    Names {
+        reply: mpsc::Sender<Vec<String>>,
+    },
+    VerifyGolden {
+        name: String,
+        reply: mpsc::Sender<Result<Option<(f64, usize)>, ExecError>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<mpsc::Sender<Cmd>>>,
+}
+
+impl RuntimeHandle {
+    fn send(&self, cmd: Cmd) -> Result<(), ExecError> {
+        self.tx
+            .lock()
+            .map_err(|_| ExecError("runtime handle poisoned".into()))?
+            .send(cmd)
+            .map_err(|_| ExecError("runtime thread gone".into()))
+    }
+
+    /// Execute an artifact by name (blocking).
+    pub fn run(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Output, ExecError> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Cmd::Run {
+            name: name.to_string(),
+            inputs,
+            reply,
+        })?;
+        rx.recv()
+            .map_err(|_| ExecError("runtime thread dropped reply".into()))?
+    }
+
+    /// Names of all loaded artifacts.
+    pub fn names(&self) -> Result<Vec<String>, ExecError> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Cmd::Names { reply })?;
+        rx.recv().map_err(|_| ExecError("runtime thread gone".into()))
+    }
+
+    /// Verify an artifact against its golden vectors.
+    pub fn verify_golden(&self, name: &str) -> Result<Option<(f64, usize)>, ExecError> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Cmd::VerifyGolden {
+            name: name.to_string(),
+            reply,
+        })?;
+        rx.recv()
+            .map_err(|_| ExecError("runtime thread dropped reply".into()))?
+    }
+}
+
+/// The running service (join on drop via [`RuntimeService::shutdown`]).
+pub struct RuntimeService {
+    handle: RuntimeHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Spawn the runtime thread; blocks until artifacts are loaded and
+    /// compiled (so startup errors surface immediately).
+    pub fn spawn(artifact_dir: PathBuf) -> Result<RuntimeService, ExecError> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), ExecError>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let exec = match Executor::load_dir(&artifact_dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Run {
+                            name,
+                            inputs,
+                            reply,
+                        } => {
+                            let refs: Vec<&[f32]> =
+                                inputs.iter().map(|v| v.as_slice()).collect();
+                            let _ = reply.send(exec.run(&name, &refs));
+                        }
+                        Cmd::Names { reply } => {
+                            let _ = reply.send(
+                                exec.names().into_iter().map(str::to_string).collect(),
+                            );
+                        }
+                        Cmd::VerifyGolden { name, reply } => {
+                            let _ = reply.send(exec.verify_golden(&name));
+                        }
+                        Cmd::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| ExecError(format!("spawn runtime thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| ExecError("runtime thread died during load".into()))??;
+        Ok(RuntimeService {
+            handle: RuntimeHandle {
+                tx: Arc::new(Mutex::new(tx)),
+            },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the runtime thread and wait for it.
+    pub fn shutdown(mut self) {
+        let _ = self.handle.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.handle.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_fails_cleanly_on_missing_dir() {
+        let r = RuntimeService::spawn(PathBuf::from("/nonexistent/artifacts"));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! Unconstrained logistic regression — the Newton-sketch experiment's
+//! objective (paper Appendix 7.3).
+//!
+//! Given observations `(a_i, y_i)`, `y_i ∈ {-1, +1}`:
+//! `f(x) = Σ_i log(1 + exp(-y_i a_iᵀ x))`,
+//! `∇f(x) = Σ_i (σ(y_i a_iᵀ x) - 1) y_i a_i`,
+//! `∇²f(x) = Aᵀ diag(s_i (1 - s_i)) A`, `s_i = σ(a_iᵀ x)`.
+//! The Hessian square root is `B = diag(s(1-s))^{1/2} A ∈ R^{n×d}`.
+
+use crate::linalg::Mat;
+
+#[inline]
+fn sigmoid(t: f64) -> f64 {
+    if t >= 0.0 {
+        1.0 / (1.0 + (-t).exp())
+    } else {
+        let e = t.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// log(1 + exp(t)) computed stably.
+#[inline]
+fn log1pexp(t: f64) -> f64 {
+    if t > 30.0 {
+        t
+    } else {
+        t.exp().ln_1p()
+    }
+}
+
+/// A logistic-regression instance: design matrix `A ∈ R^{n×d}` (row per
+/// observation) and labels `y ∈ {-1, +1}^n`.
+pub struct LogisticProblem {
+    pub a: Mat,
+    pub y: Vec<f32>,
+    /// Small ridge term keeping Hessians PD (0 reproduces the paper; the
+    /// default 1e-8 merely guards the Cholesky).
+    pub ridge: f64,
+}
+
+impl LogisticProblem {
+    pub fn new(a: Mat, y: Vec<f32>) -> LogisticProblem {
+        assert_eq!(a.rows, y.len());
+        assert!(y.iter().all(|v| *v == 1.0 || *v == -1.0));
+        LogisticProblem {
+            a,
+            y,
+            ridge: 1e-8,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.a.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Margins `a_iᵀ x`.
+    fn margins(&self, x: &[f64]) -> Vec<f64> {
+        let d = self.d();
+        (0..self.n())
+            .map(|i| {
+                let row = self.a.row(i);
+                (0..d).map(|j| row[j] as f64 * x[j]).sum()
+            })
+            .collect()
+    }
+
+    /// Objective value.
+    pub fn value(&self, x: &[f64]) -> f64 {
+        let m = self.margins(x);
+        let data: f64 = m
+            .iter()
+            .zip(&self.y)
+            .map(|(mi, yi)| log1pexp(-(*yi as f64) * mi))
+            .sum();
+        data + 0.5 * self.ridge * x.iter().map(|v| v * v).sum::<f64>()
+    }
+
+    /// Gradient.
+    pub fn grad(&self, x: &[f64]) -> Vec<f64> {
+        let m = self.margins(x);
+        let d = self.d();
+        let mut g = vec![0.0f64; d];
+        for i in 0..self.n() {
+            let yi = self.y[i] as f64;
+            let coeff = sigmoid(yi * m[i]) - 1.0; // in (-1, 0)
+            let row = self.a.row(i);
+            for j in 0..d {
+                g[j] += coeff * yi * row[j] as f64;
+            }
+        }
+        for (gj, xj) in g.iter_mut().zip(x) {
+            *gj += self.ridge * xj;
+        }
+        g
+    }
+
+    /// Hessian weights `w_i = s_i (1 - s_i)`, `s_i = σ(a_iᵀ x)`.
+    pub fn hessian_weights(&self, x: &[f64]) -> Vec<f64> {
+        self.margins(x)
+            .iter()
+            .map(|mi| {
+                let s = sigmoid(*mi);
+                s * (1.0 - s)
+            })
+            .collect()
+    }
+
+    /// Hessian square root `B = diag(w)^{1/2} A ∈ R^{n×d}` (f32, row-major —
+    /// this is the matrix the sketch hits).
+    pub fn hessian_sqrt(&self, x: &[f64]) -> Mat {
+        let w = self.hessian_weights(x);
+        let (n, d) = (self.n(), self.d());
+        let mut b = Mat::zeros(n, d);
+        for i in 0..n {
+            let s = w[i].sqrt() as f32;
+            let row = self.a.row(i);
+            for j in 0..d {
+                b.data[i * d + j] = s * row[j];
+            }
+        }
+        b
+    }
+
+    /// Exact Hessian `BᵀB + ridge·I` as an f64 buffer (d×d, row-major).
+    pub fn hessian(&self, x: &[f64]) -> Vec<f64> {
+        let b = self.hessian_sqrt(x);
+        gram_t(&b, self.ridge)
+    }
+}
+
+/// `MᵀM + ridge·I` in f64 for a row-major f32 matrix (d×d output).
+pub fn gram_t(m: &Mat, ridge: f64) -> Vec<f64> {
+    let (n, d) = (m.rows, m.cols);
+    let mut h = vec![0.0f64; d * d];
+    for i in 0..n {
+        let row = m.row(i);
+        for j in 0..d {
+            let rj = row[j] as f64;
+            if rj == 0.0 {
+                continue;
+            }
+            for k in j..d {
+                h[j * d + k] += rj * row[k] as f64;
+            }
+        }
+    }
+    // mirror + ridge
+    for j in 0..d {
+        for k in j..d {
+            let v = h[j * d + k];
+            h[k * d + j] = v;
+        }
+        h[j * d + j] += ridge;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::logistic::generate;
+    use crate::util::prop::for_all;
+    use crate::util::rng::Rng;
+
+    fn finite_diff_grad(p: &LogisticProblem, x: &[f64]) -> Vec<f64> {
+        let eps = 1e-6;
+        (0..x.len())
+            .map(|j| {
+                let mut xp = x.to_vec();
+                let mut xm = x.to_vec();
+                xp[j] += eps;
+                xm[j] -= eps;
+                (p.value(&xp) - p.value(&xm)) / (2.0 * eps)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let p = generate(50, 6, 0.99, 1);
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..6).map(|_| rng.gaussian() * 0.3).collect();
+        let g = p.grad(&x);
+        let fd = finite_diff_grad(&p, &x);
+        for j in 0..6 {
+            assert!(
+                (g[j] - fd[j]).abs() < 1e-4 * (1.0 + fd[j].abs()),
+                "j={j}: {} vs {}",
+                g[j],
+                fd[j]
+            );
+        }
+    }
+
+    #[test]
+    fn hessian_matches_finite_difference_of_grad() {
+        let p = generate(40, 4, 0.9, 3);
+        let x = vec![0.1, -0.2, 0.05, 0.3];
+        let h = p.hessian(&x);
+        let eps = 1e-5;
+        for j in 0..4 {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[j] += eps;
+            xm[j] -= eps;
+            let gp = p.grad(&xp);
+            let gm = p.grad(&xm);
+            for k in 0..4 {
+                let fd = (gp[k] - gm[k]) / (2.0 * eps);
+                assert!(
+                    (h[k * 4 + j] - fd).abs() < 1e-3 * (1.0 + fd.abs()),
+                    "H[{k}][{j}] = {} vs fd {}",
+                    h[k * 4 + j],
+                    fd
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn value_at_zero_is_n_log2() {
+        let p = generate(30, 5, 0.99, 4);
+        let v = p.value(&vec![0.0; 5]);
+        assert!((v - 30.0 * (2.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn value_convex_along_segments() {
+        for_all(12, |g| {
+            let p = generate(25, 4, 0.9, g.u64());
+            let x: Vec<f64> = (0..4).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let y: Vec<f64> = (0..4).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let mid: Vec<f64> = x.iter().zip(&y).map(|(a, b)| 0.5 * (a + b)).collect();
+            assert!(p.value(&mid) <= 0.5 * p.value(&x) + 0.5 * p.value(&y) + 1e-9);
+        });
+    }
+
+    #[test]
+    fn hessian_sqrt_squares_to_hessian() {
+        let p = generate(20, 3, 0.9, 5);
+        let x = vec![0.2, -0.1, 0.4];
+        let b = p.hessian_sqrt(&x);
+        let h = p.hessian(&x);
+        let bb = gram_t(&b, p.ridge);
+        for (u, v) in h.iter().zip(&bb) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn stable_sigmoid_extremes() {
+        assert!(sigmoid(1000.0) <= 1.0);
+        assert!(sigmoid(-1000.0) >= 0.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(log1pexp(1000.0).is_finite());
+    }
+}

@@ -1,0 +1,15 @@
+//! Newton sketch for convex optimization (paper §6.3, Figure 3).
+//!
+//! The Newton sketch [Pilanci & Wainwright] replaces the exact Hessian
+//! `∇²f = BᵀB` (with `B = W^{1/2} A ∈ R^{n×d}` the Hessian square root) by
+//! `(S B)ᵀ (S B)` for an isotropic `m×n` sketch `S`. With a TripleSpin `S`
+//! the per-iteration cost drops from `O(n d²)` to `O(d n log n + m d²)`.
+//!
+//! [`logistic`] defines the objective of the experiment; [`newton`] the
+//! exact / sketched solvers and sketch constructions.
+
+pub mod logistic;
+pub mod newton;
+
+pub use logistic::LogisticProblem;
+pub use newton::{newton_solve, NewtonOptions, SketchKind, Trace};

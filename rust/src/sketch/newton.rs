@@ -1,0 +1,286 @@
+//! Exact and sketched Newton iterations (Figure 3).
+//!
+//! Per iteration: form the Hessian square root `B = W^{1/2}A ∈ R^{n×d}`,
+//! sketch it to `S B ∈ R^{m×d}`, solve `((SB)ᵀ(SB) + ridge·I) Δ = -∇f`, and
+//! take a backtracking-line-search step. `S` is either exact (no sketch),
+//! i.i.d. Gaussian `N(0, 1/m)`, or a TripleSpin transform row-block scaled
+//! by `1/√m` — all isotropic (`E[SᵀS] = I`), which is what the Newton-sketch
+//! guarantees need.
+
+use super::logistic::{gram_t, LogisticProblem};
+use crate::linalg::dense::solve_spd;
+use crate::linalg::fwht::next_pow2;
+use crate::linalg::vecops::pad_to;
+use crate::linalg::Mat;
+use crate::transform::{make, Family, Transform};
+use crate::util::rng::Rng;
+
+/// Sketch selection for one Newton run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SketchKind {
+    /// No sketch: exact Newton (`S = I`).
+    Exact,
+    /// Dense i.i.d. Gaussian sketch.
+    Gaussian,
+    /// TripleSpin sketch of the given family.
+    Struct(Family),
+}
+
+impl SketchKind {
+    pub fn label(&self) -> String {
+        match self {
+            SketchKind::Exact => "exact Newton".into(),
+            SketchKind::Gaussian => "Gaussian sketch".into(),
+            SketchKind::Struct(f) => format!("{} sketch", f.label()),
+        }
+    }
+}
+
+/// Options for a Newton / Newton-sketch run.
+#[derive(Clone, Copy, Debug)]
+pub struct NewtonOptions {
+    /// Sketch dimension m (rows of S). Ignored for `Exact`.
+    pub sketch_rows: usize,
+    pub max_iters: usize,
+    /// Armijo backtracking parameters.
+    pub ls_alpha: f64,
+    pub ls_beta: f64,
+    pub seed: u64,
+}
+
+impl Default for NewtonOptions {
+    fn default() -> Self {
+        NewtonOptions {
+            sketch_rows: 256,
+            max_iters: 30,
+            ls_alpha: 0.1,
+            ls_beta: 0.5,
+            seed: 1,
+        }
+    }
+}
+
+/// Per-iteration trace of a run.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// f(x_t) per iteration (index 0 = initial point).
+    pub values: Vec<f64>,
+    /// Final iterate.
+    pub x: Vec<f64>,
+}
+
+impl Trace {
+    /// Optimality gaps `f(x_t) - f_star` (clamped at 1e-16 for log plots).
+    pub fn gaps(&self, f_star: f64) -> Vec<f64> {
+        self.values.iter().map(|v| (v - f_star).max(1e-16)).collect()
+    }
+}
+
+/// Apply a sketch to the Hessian square root `B ∈ R^{n×d}`, producing
+/// `S B ∈ R^{m×d}`. For structured sketches columns of `B` are zero-padded
+/// to the next power of two.
+pub fn sketch_apply(kind: SketchKind, b: &Mat, m: usize, rng: &mut Rng) -> Mat {
+    let (n, d) = (b.rows, b.cols);
+    match kind {
+        SketchKind::Exact => b.clone(),
+        SketchKind::Gaussian => {
+            // S ∈ R^{m×n}, entries N(0, 1/m): SB computed as m dot products
+            // per column — O(mnd), the cost the paper wants to beat.
+            let s = Mat::gaussian(m, n, rng);
+            let scale = (1.0 / m as f64).sqrt() as f32;
+            let mut out = Mat::zeros(m, d);
+            // (S B)[i][j] = Σ_k S[i][k] B[k][j]
+            for i in 0..m {
+                let srow = s.row(i);
+                for k in 0..n {
+                    let sv = srow[k] * scale;
+                    if sv == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(k);
+                    let orow = &mut out.data[i * d..(i + 1) * d];
+                    for j in 0..d {
+                        orow[j] += sv * brow[j];
+                    }
+                }
+            }
+            out
+        }
+        SketchKind::Struct(f) => {
+            let np = next_pow2(n);
+            let t: Box<dyn Transform> = make(f, m, np, np.min(m.max(1)), rng);
+            let scale = (1.0 / m as f64).sqrt() as f32;
+            // sketch each column: O(d · n log n)
+            let mut out = Mat::zeros(m, d);
+            let mut col = vec![0.0f32; n];
+            for j in 0..d {
+                for i in 0..n {
+                    col[i] = b.at(i, j);
+                }
+                let padded = pad_to(&col, np);
+                let y = t.apply(&padded);
+                for i in 0..m {
+                    out.data[i * d + j] = y[i] * scale;
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Run (sketched) Newton on a logistic-regression problem from `x0 = 0`.
+pub fn newton_solve(p: &LogisticProblem, kind: SketchKind, opts: NewtonOptions) -> Trace {
+    let d = p.d();
+    let mut x = vec![0.0f64; d];
+    let mut values = vec![p.value(&x)];
+    let mut rng = Rng::new(opts.seed);
+
+    for _ in 0..opts.max_iters {
+        let g = p.grad(&x);
+        let b = p.hessian_sqrt(&x);
+        let sb = sketch_apply(kind, &b, opts.sketch_rows, &mut rng);
+        let h = gram_t(&sb, p.ridge.max(1e-10));
+        let neg_g: Vec<f64> = g.iter().map(|v| -v).collect();
+        let delta = match solve_spd(&h, &neg_g, d) {
+            Some(dd) => dd,
+            None => break, // sketched Hessian degenerate; stop
+        };
+        // Armijo backtracking on f along delta
+        let g_dot_d: f64 = g.iter().zip(&delta).map(|(a, b)| a * b).sum();
+        if g_dot_d >= 0.0 {
+            break; // not a descent direction (sketch too coarse); stop
+        }
+        let f0 = *values.last().unwrap();
+        let mut step = 1.0f64;
+        let mut accepted = false;
+        for _ in 0..40 {
+            let xt: Vec<f64> = x.iter().zip(&delta).map(|(a, b)| a + step * b).collect();
+            let ft = p.value(&xt);
+            if ft <= f0 + opts.ls_alpha * step * g_dot_d {
+                x = xt;
+                values.push(ft);
+                accepted = true;
+                break;
+            }
+            step *= opts.ls_beta;
+        }
+        if !accepted {
+            break;
+        }
+    }
+    Trace { values, x }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::logistic::generate;
+
+    fn small_problem(seed: u64) -> LogisticProblem {
+        generate(256, 8, 0.99, seed)
+    }
+
+    #[test]
+    fn exact_newton_decreases_monotonically() {
+        let p = small_problem(1);
+        let t = newton_solve(&p, SketchKind::Exact, NewtonOptions::default());
+        for w in t.values.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "non-monotone: {:?}", t.values);
+        }
+        assert!(t.values.len() > 3);
+    }
+
+    #[test]
+    fn exact_newton_reaches_stationarity() {
+        let p = small_problem(2);
+        let t = newton_solve(
+            &p,
+            SketchKind::Exact,
+            NewtonOptions {
+                max_iters: 50,
+                ..Default::default()
+            },
+        );
+        let g = p.grad(&t.x);
+        let gnorm: f64 = g.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(gnorm < 1e-5, "|grad| = {gnorm}");
+    }
+
+    #[test]
+    fn sketched_newton_converges_close_to_exact() {
+        let p = small_problem(3);
+        let exact = newton_solve(
+            &p,
+            SketchKind::Exact,
+            NewtonOptions {
+                max_iters: 60,
+                ..Default::default()
+            },
+        );
+        let f_star = *exact.values.last().unwrap();
+        for kind in [
+            SketchKind::Gaussian,
+            SketchKind::Struct(Family::Hd3),
+            SketchKind::Struct(Family::Toeplitz),
+        ] {
+            let t = newton_solve(
+                &p,
+                kind,
+                NewtonOptions {
+                    sketch_rows: 64, // 8d
+                    max_iters: 40,
+                    ..Default::default()
+                },
+            );
+            let gap = t.values.last().unwrap() - f_star;
+            assert!(
+                gap < 1e-3 * (1.0 + f_star.abs()),
+                "{kind:?}: final gap {gap}"
+            );
+            // sketched runs still decrease monotonically (line search)
+            for w in t.values.windows(2) {
+                assert!(w[1] <= w[0] + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_isotropy() {
+        // E[(Sx)ᵀ(Sx)] ≈ ||x||² for every sketch kind.
+        let n = 128;
+        let mut rng = Rng::new(4);
+        let x = rng.unit_vec(n);
+        let b = Mat::from_vec(n, 1, x.clone());
+        for kind in [
+            SketchKind::Gaussian,
+            SketchKind::Struct(Family::Hd3),
+            SketchKind::Struct(Family::Circulant),
+        ] {
+            let mut total = 0.0f64;
+            let trials = 60;
+            for s in 0..trials {
+                let sb = sketch_apply(kind, &b, 32, &mut Rng::new(100 + s));
+                total += sb.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+            }
+            let avg = total / trials as f64;
+            assert!(
+                (avg - 1.0).abs() < 0.2,
+                "{kind:?}: E||Sx||² = {avg}, want ≈ 1"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_sketch_is_identity() {
+        let p = small_problem(5);
+        let b = p.hessian_sqrt(&vec![0.0; p.d()]);
+        let sb = sketch_apply(SketchKind::Exact, &b, 10, &mut Rng::new(1));
+        assert_eq!(sb.data, b.data);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(SketchKind::Exact.label(), "exact Newton");
+        assert!(SketchKind::Struct(Family::Hd3).label().contains("HD3"));
+    }
+}

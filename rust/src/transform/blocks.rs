@@ -1,0 +1,168 @@
+//! Block stacking (paper §3.1): rectangular TripleSpin transforms.
+//!
+//! An `m x n` TripleSpin matrix (`m <= n`) is the first `m` rows of an
+//! independently drawn square `n x n` member; a `k x n` matrix stacks
+//! `ceil(k / m)` such blocks vertically, truncating the last. The block
+//! height `m` tunes the "structuredness level": `m = n` is maximally
+//! structured (one block), `m = 1` degenerates to fully independent rows.
+
+use super::{make_square, Family, Transform};
+use crate::util::rng::Rng;
+
+/// `k x n` transform assembled from independent square blocks.
+pub struct StackedTransform {
+    family: Family,
+    k: usize,
+    n: usize,
+    block_rows: usize,
+    blocks: Vec<Box<dyn Transform>>,
+    name: &'static str,
+}
+
+impl StackedTransform {
+    /// `k` output rows over inputs of dim `n`, from blocks of `m <= n` rows
+    /// each (each block an independent square transform truncated to `m`).
+    pub fn new(family: Family, k: usize, n: usize, m: usize, rng: &mut Rng) -> StackedTransform {
+        assert!(m >= 1 && m <= n, "block rows m={m} must be in 1..=n={n}");
+        assert!(k >= 1);
+        let num_blocks = k.div_ceil(m);
+        let blocks: Vec<Box<dyn Transform>> = (0..num_blocks)
+            .map(|_| make_square(family, n, &mut rng.fork()))
+            .collect();
+        let name = blocks[0].name();
+        StackedTransform {
+            family,
+            k,
+            n,
+            block_rows: m,
+            blocks,
+            name,
+        }
+    }
+
+    /// Convenience: maximally structured stacking (`m = n`).
+    pub fn full_blocks(family: Family, k: usize, n: usize, rng: &mut Rng) -> StackedTransform {
+        StackedTransform::new(family, k, n, n, rng)
+    }
+
+    pub fn family(&self) -> Family {
+        self.family
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+}
+
+impl Transform for StackedTransform {
+    fn dim_in(&self) -> usize {
+        self.n
+    }
+
+    fn dim_out(&self) -> usize {
+        self.k
+    }
+
+    fn apply(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.n);
+        let mut out = Vec::with_capacity(self.k);
+        for b in &self.blocks {
+            let y = b.apply(x);
+            let take = self.block_rows.min(self.k - out.len());
+            out.extend_from_slice(&y[..take]);
+            if out.len() == self.k {
+                break;
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn param_bits(&self) -> usize {
+        self.blocks.iter().map(|b| b.param_bits()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+
+    #[test]
+    fn output_dims() {
+        for_all(16, |g| {
+            let n = g.pow2_in(2, 7);
+            let m = g.usize_in(1, n);
+            let k = g.usize_in(1, 3 * n);
+            let t = StackedTransform::new(Family::Hd3, k, n, m, &mut Rng::new(g.u64()));
+            assert_eq!(t.dim_out(), k);
+            assert_eq!(t.num_blocks(), k.div_ceil(m));
+            let x = g.gaussian_vec(n);
+            assert_eq!(t.apply(&x).len(), k);
+        });
+    }
+
+    #[test]
+    fn first_block_matches_square_truncation() {
+        // The first m outputs must equal the first m rows of the first
+        // square block (seeded through the same fork sequence).
+        let n = 64;
+        let m = 16;
+        let k = 40;
+        let seed = 1234u64;
+        let t = StackedTransform::new(Family::Hd3, k, n, m, &mut Rng::new(seed));
+        let sq = make_square(Family::Hd3, n, &mut Rng::new(seed).fork());
+        let x = Rng::new(9).gaussian_vec(n);
+        let full = sq.apply(&x);
+        let stacked = t.apply(&x);
+        assert_eq!(&stacked[..m], &full[..m]);
+    }
+
+    #[test]
+    fn blocks_are_independent() {
+        // different blocks come from independent draws: their outputs on the
+        // same input must differ.
+        let n = 32;
+        let t = StackedTransform::new(Family::Hd3, 2 * n, n, n, &mut Rng::new(5));
+        let x = Rng::new(6).unit_vec(n);
+        let y = t.apply(&x);
+        let (a, b) = (&y[..n], &y[n..]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn k_larger_than_n_supported() {
+        let n = 16;
+        let k = 100;
+        let t = StackedTransform::full_blocks(Family::Hdg, k, n, &mut Rng::new(7));
+        assert_eq!(t.dim_out(), 100);
+        assert_eq!(t.num_blocks(), 7); // ceil(100/16)
+        let x = Rng::new(8).gaussian_vec(n);
+        assert_eq!(t.apply(&x).len(), 100);
+    }
+
+    #[test]
+    fn m1_is_fully_unstructured_rows() {
+        // m = 1: every output row from its own block.
+        let n = 8;
+        let k = 5;
+        let t = StackedTransform::new(Family::Circulant, k, n, 1, &mut Rng::new(11));
+        assert_eq!(t.num_blocks(), 5);
+    }
+
+    #[test]
+    fn param_bits_scales_with_blocks() {
+        let n = 64;
+        let mut rng = Rng::new(13);
+        let one = StackedTransform::new(Family::Hd3, n, n, n, &mut rng).param_bits();
+        let two = StackedTransform::new(Family::Hd3, 2 * n, n, n, &mut rng).param_bits();
+        assert_eq!(two, 2 * one);
+    }
+}

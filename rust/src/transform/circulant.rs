@@ -1,0 +1,297 @@
+//! `G_struct · D2 · H D1` members with a Gaussian circulant / Toeplitz /
+//! Hankel / skew-circulant top block (Lemma 1 of the paper).
+//!
+//! Pipeline for one matvec: `x → D1 x → H x → D2 x → G_top x`, where the
+//! top block multiplies in `O(n log n)` via an FFT circulant embedding whose
+//! spectrum is precomputed once at construction ([`ConvPlan`]).
+
+use super::Transform;
+use crate::linalg::fft::ConvPlan;
+use crate::linalg::fwht::fwht;
+use crate::linalg::vecops::scale_by;
+use crate::util::rng::Rng;
+
+/// Top-block structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TopKind {
+    Circulant,
+    Toeplitz,
+    Hankel,
+    SkewCirculant,
+}
+
+/// A `G_top · D2 · H D1` transform (square, `n` a power of two).
+pub struct StructuredGaussian {
+    n: usize,
+    d1: Vec<f32>,
+    d2: Vec<f32>,
+    /// Precomputed spectrum of the circulant embedding of `G_top`.
+    plan: ConvPlan,
+    kind: TopKind,
+    /// Stored Gaussian parameter count (for `param_bits`).
+    gaussians: usize,
+    name: &'static str,
+    /// Inverse FWHT normalization `1/√n`, fused with the `d2` scaling.
+    inv_sqrt_n: f32,
+}
+
+impl StructuredGaussian {
+    fn build(n: usize, kind: TopKind, rng: &mut Rng) -> StructuredGaussian {
+        assert!(n.is_power_of_two(), "needs power-of-two n, got {n}");
+        let d1 = rng.rademacher_vec(n);
+        let d2 = rng.rademacher_vec(n);
+        let (plan, gaussians, name) = match kind {
+            TopKind::Circulant => {
+                // first row r; first column col[i] = r[(n-i) % n]
+                let row: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                let mut col = vec![0.0f64; n];
+                for i in 0..n {
+                    col[i] = row[(n - i) % n];
+                }
+                (ConvPlan::new(&col), n, "circulant")
+            }
+            TopKind::Toeplitz => {
+                let diag: Vec<f64> = (0..2 * n - 1).map(|_| rng.gaussian()).collect();
+                (Self::toeplitz_plan(&diag, n), 2 * n - 1, "toeplitz")
+            }
+            TopKind::Hankel => {
+                // Hankel(anti) x = Toeplitz(diag) xr with
+                // diag[d] = anti[2(n-1)-d] and xr the reversed input.
+                let anti: Vec<f64> = (0..2 * n - 1).map(|_| rng.gaussian()).collect();
+                let mut diag = vec![0.0f64; 2 * n - 1];
+                for d in 0..2 * n - 1 {
+                    diag[d] = anti[2 * (n - 1) - d];
+                }
+                (Self::toeplitz_plan(&diag, n), 2 * n - 1, "hankel")
+            }
+            TopKind::SkewCirculant => {
+                // skew-circulant with first row r == Toeplitz with
+                // diag[d] = r[d-(n-1)] above/on the main diagonal and
+                // -r[d+1] below it.
+                let row: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                let mut diag = vec![0.0f64; 2 * n - 1];
+                for d in 0..2 * n - 1 {
+                    diag[d] = if d >= n - 1 { row[d - (n - 1)] } else { -row[d + 1] };
+                }
+                (Self::toeplitz_plan(&diag, n), n, "skew_circulant")
+            }
+        };
+        StructuredGaussian {
+            n,
+            d1,
+            d2,
+            plan,
+            kind,
+            gaussians,
+            name,
+            inv_sqrt_n: 1.0 / (n as f32).sqrt(),
+        }
+    }
+
+    /// 2n-point circulant embedding of a Toeplitz matrix given its 2n-1
+    /// diagonals (`diag[n-1]` = main).
+    fn toeplitz_plan(diag: &[f64], n: usize) -> ConvPlan {
+        let m = (2 * n).next_power_of_two();
+        let mut c = vec![0.0f64; m];
+        for i in 0..n {
+            c[i] = diag[n - 1 - i];
+        }
+        for j in 1..n {
+            c[m - j] = diag[n - 1 + j];
+        }
+        ConvPlan::new(&c)
+    }
+
+    pub fn circulant(n: usize, rng: &mut Rng) -> StructuredGaussian {
+        Self::build(n, TopKind::Circulant, rng)
+    }
+
+    pub fn toeplitz(n: usize, rng: &mut Rng) -> StructuredGaussian {
+        Self::build(n, TopKind::Toeplitz, rng)
+    }
+
+    pub fn hankel(n: usize, rng: &mut Rng) -> StructuredGaussian {
+        Self::build(n, TopKind::Hankel, rng)
+    }
+
+    pub fn skew_circulant(n: usize, rng: &mut Rng) -> StructuredGaussian {
+        Self::build(n, TopKind::SkewCirculant, rng)
+    }
+}
+
+impl Transform for StructuredGaussian {
+    fn dim_in(&self) -> usize {
+        self.n
+    }
+
+    fn dim_out(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.n);
+        // D1, then unnormalized FWHT; the 1/√n normalization is fused into
+        // the D2 pass below (one multiply per element instead of two).
+        let mut v = x.to_vec();
+        scale_by(&mut v, &self.d1);
+        fwht(&mut v);
+        // promote to f64 for the FFT top block, fusing 1/√n · d2
+        let n = self.n;
+        let m = self.plan.len();
+        let mut buf = vec![0.0f64; m];
+        match self.kind {
+            TopKind::Hankel => {
+                // reversed input for the Hankel-as-Toeplitz reduction
+                for i in 0..n {
+                    let j = n - 1 - i;
+                    buf[i] = (v[j] * self.d2[j] * self.inv_sqrt_n) as f64;
+                }
+            }
+            _ => {
+                for i in 0..n {
+                    buf[i] = (v[i] * self.d2[i] * self.inv_sqrt_n) as f64;
+                }
+            }
+        }
+        let y = self.plan.apply(&buf);
+        y[..n].iter().map(|v| *v as f32).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn param_bits(&self) -> usize {
+        32 * self.gaussians + 2 * self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::fwht::hadamard_dense;
+    use crate::util::prop::for_all;
+
+    /// Dense reference for each kind, reconstructing G_top explicitly from
+    /// the same RNG stream the constructor consumed.
+    fn dense_top(kind: TopKind, n: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let d1 = rng.rademacher_vec(n);
+        let d2 = rng.rademacher_vec(n);
+        let mut g = vec![0.0f32; n * n];
+        match kind {
+            TopKind::Circulant => {
+                let row: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                for i in 0..n {
+                    for j in 0..n {
+                        g[i * n + j] = row[(n + j - i) % n] as f32;
+                    }
+                }
+            }
+            TopKind::Toeplitz => {
+                let diag: Vec<f64> = (0..2 * n - 1).map(|_| rng.gaussian()).collect();
+                for i in 0..n {
+                    for j in 0..n {
+                        g[i * n + j] = diag[j + n - 1 - i] as f32;
+                    }
+                }
+            }
+            TopKind::Hankel => {
+                let anti: Vec<f64> = (0..2 * n - 1).map(|_| rng.gaussian()).collect();
+                for i in 0..n {
+                    for j in 0..n {
+                        g[i * n + j] = anti[i + j] as f32;
+                    }
+                }
+            }
+            TopKind::SkewCirculant => {
+                let row: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+                for i in 0..n {
+                    for j in 0..n {
+                        g[i * n + j] = if j >= i {
+                            row[j - i] as f32
+                        } else {
+                            -row[n + j - i] as f32
+                        };
+                    }
+                }
+            }
+        }
+        (d1, d2, g)
+    }
+
+    fn check_kind(kind: TopKind, ctor: fn(usize, &mut Rng) -> StructuredGaussian) {
+        for n in [2usize, 8, 32] {
+            let seed = 40 + n as u64;
+            let t = ctor(n, &mut Rng::new(seed));
+            let (d1, d2, g) = dense_top(kind, n, &mut Rng::new(seed));
+            let h = hadamard_dense(n);
+            let norm = 1.0 / (n as f32).sqrt();
+            let mut rng = Rng::new(99);
+            let x = rng.gaussian_vec(n);
+            // reference: y = G * D2 * H * D1 * x
+            let v1: Vec<f32> = x.iter().zip(&d1).map(|(a, b)| a * b).collect();
+            let v2: Vec<f32> = (0..n)
+                .map(|i| (0..n).map(|j| h[i * n + j] * norm * v1[j]).sum())
+                .collect();
+            let v3: Vec<f32> = v2.iter().zip(&d2).map(|(a, b)| a * b).collect();
+            let expect: Vec<f32> = (0..n)
+                .map(|i| (0..n).map(|j| g[i * n + j] * v3[j]).sum())
+                .collect();
+            let got = t.apply(&x);
+            for i in 0..n {
+                assert!(
+                    (got[i] - expect[i]).abs() < 1e-3 * (1.0 + expect[i].abs()),
+                    "{kind:?} n={n} i={i}: {} vs {}",
+                    got[i],
+                    expect[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn circulant_matches_dense() {
+        check_kind(TopKind::Circulant, StructuredGaussian::circulant);
+    }
+
+    #[test]
+    fn toeplitz_matches_dense() {
+        check_kind(TopKind::Toeplitz, StructuredGaussian::toeplitz);
+    }
+
+    #[test]
+    fn hankel_matches_dense() {
+        check_kind(TopKind::Hankel, StructuredGaussian::hankel);
+    }
+
+    #[test]
+    fn skew_circulant_matches_dense() {
+        check_kind(TopKind::SkewCirculant, StructuredGaussian::skew_circulant);
+    }
+
+    #[test]
+    fn apply_is_deterministic() {
+        for_all(8, |g| {
+            let n = g.pow2_in(1, 7);
+            let seed = g.u64();
+            let t1 = StructuredGaussian::circulant(n, &mut Rng::new(seed));
+            let t2 = StructuredGaussian::circulant(n, &mut Rng::new(seed));
+            let x = g.gaussian_vec(n);
+            assert_eq!(t1.apply(&x), t2.apply(&x));
+        });
+    }
+
+    #[test]
+    fn param_bits_counts() {
+        let mut rng = Rng::new(1);
+        let n = 64;
+        assert_eq!(
+            StructuredGaussian::circulant(n, &mut rng).param_bits(),
+            32 * n + 2 * n
+        );
+        assert_eq!(
+            StructuredGaussian::toeplitz(n, &mut rng).param_bits(),
+            32 * (2 * n - 1) + 2 * n
+        );
+    }
+}

@@ -1,0 +1,73 @@
+//! The unstructured baseline: a dense i.i.d. Gaussian matrix.
+//!
+//! This is the `G` every TripleSpin member is measured against (Table 1's
+//! `time(G)/time(T)`, Figures 1/2/4's accuracy reference).
+
+use super::Transform;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Dense `m x n` matrix with i.i.d. `N(0,1)` entries.
+pub struct DenseGaussian {
+    mat: Mat,
+}
+
+impl DenseGaussian {
+    pub fn new(m: usize, n: usize, rng: &mut Rng) -> DenseGaussian {
+        DenseGaussian {
+            mat: Mat::gaussian(m, n, rng),
+        }
+    }
+
+    /// Access the underlying matrix (tests compare against it directly).
+    pub fn mat(&self) -> &Mat {
+        &self.mat
+    }
+}
+
+impl Transform for DenseGaussian {
+    fn dim_in(&self) -> usize {
+        self.mat.cols
+    }
+
+    fn dim_out(&self) -> usize {
+        self.mat.rows
+    }
+
+    fn apply(&self, x: &[f32]) -> Vec<f32> {
+        self.mat.matvec(x)
+    }
+
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn param_bits(&self) -> usize {
+        self.mat.rows * self.mat.cols * 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_apply() {
+        let mut rng = Rng::new(1);
+        let t = DenseGaussian::new(3, 5, &mut rng);
+        assert_eq!(t.dim_out(), 3);
+        assert_eq!(t.dim_in(), 5);
+        let y = t.apply(&[1.0, 0.0, 0.0, 0.0, 0.0]);
+        // G e_0 is the first column
+        for i in 0..3 {
+            assert_eq!(y[i], t.mat().at(i, 0));
+        }
+    }
+
+    #[test]
+    fn param_bits() {
+        let mut rng = Rng::new(2);
+        let t = DenseGaussian::new(4, 8, &mut rng);
+        assert_eq!(t.param_bits(), 4 * 8 * 32);
+    }
+}

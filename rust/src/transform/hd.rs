@@ -1,0 +1,275 @@
+//! Hadamard–diagonal chains: `√n · H D_k ··· H D_2 H D_1`.
+//!
+//! The fully discrete `HD3 HD2 HD1` (k = 3, Rademacher diagonals) is the
+//! paper's flagship construction — the fastest known cross-polytope LSH
+//! variant [Andoni et al. 2015], storable in `3n` random *bits*. Theorem 5.2
+//! gives it the same convex-set distributional guarantees as the Gaussian
+//! matrix it replaces. `HDg HD2 HD1` swaps the last diagonal for Gaussian
+//! entries (Lemma 1's second member).
+//!
+//! Each `H D` factor costs one elementwise scaling plus one FWHT — the whole
+//! chain is `O(k · n log n)` with zero stored floats for the discrete case.
+
+use super::Transform;
+use crate::linalg::fwht::fwht;
+use crate::linalg::vecops::scale_by;
+use crate::util::rng::Rng;
+
+/// Which distribution a diagonal's entries were drawn from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiagKind {
+    /// ±1 entries (one bit each).
+    Rademacher,
+    /// N(0,1) entries.
+    Gaussian,
+}
+
+/// `√n · H D_k ··· H D_1` chain transform (square, `n` a power of two).
+pub struct HdChain {
+    n: usize,
+    /// Diagonals in application order (`diags[0]` = `D_1`).
+    diags: Vec<Vec<f32>>,
+    kinds: Vec<DiagKind>,
+    /// Combined per-spin normalization folded into the last pass:
+    /// each FWHT is unnormalized (H̃ = √n·H), so after k spins we have
+    /// n^{k/2} · (H D)^k; multiplying by `scale = √n / n^{k/2}` yields the
+    /// paper's `√n · (HD)^k` with L2-normalized H.
+    scale: f32,
+    name: &'static str,
+}
+
+impl HdChain {
+    /// Generic chain with `k` spins; `kinds[i]` gives the distribution of
+    /// `D_{i+1}`. Used directly by the spin-count ablation.
+    pub fn with_kinds(n: usize, kinds: &[DiagKind], rng: &mut Rng, name: &'static str) -> HdChain {
+        assert!(n.is_power_of_two(), "HdChain needs power-of-two n, got {n}");
+        assert!(!kinds.is_empty());
+        let mut diags: Vec<Vec<f32>> = kinds
+            .iter()
+            .map(|k| match k {
+                DiagKind::Rademacher => rng.rademacher_vec(n),
+                DiagKind::Gaussian => rng.gaussian_vec(n),
+            })
+            .collect();
+        let k = kinds.len() as i32;
+        // √n * (n^{-1/2})^k , computed in f64 to avoid overflow at large n.
+        let scale = ((n as f64).sqrt() * (n as f64).powf(-0.5 * k as f64)) as f32;
+        // perf: scaling commutes with the linear FWHT chain, so fold the
+        // global scalar into the *last* diagonal — saves one full pass
+        // over the output per apply (§Perf L3 iteration 1).
+        if let Some(last) = diags.last_mut() {
+            for v in last.iter_mut() {
+                *v *= scale;
+            }
+        }
+        HdChain {
+            n,
+            diags,
+            kinds: kinds.to_vec(),
+            scale: 1.0,
+            name,
+        }
+    }
+
+    /// The flagship `√n · HD3 HD2 HD1` (all-Rademacher, bit-only storage).
+    pub fn hd3(n: usize, rng: &mut Rng) -> HdChain {
+        HdChain::with_kinds(
+            n,
+            &[DiagKind::Rademacher; 3],
+            rng,
+            "hd3",
+        )
+    }
+
+    /// `√n · HDg HD2 HD1` — last diagonal Gaussian.
+    pub fn hdg(n: usize, rng: &mut Rng) -> HdChain {
+        HdChain::with_kinds(
+            n,
+            &[DiagKind::Rademacher, DiagKind::Rademacher, DiagKind::Gaussian],
+            rng,
+            "hdg",
+        )
+    }
+
+    /// All-Rademacher chain with `k` spins (`k = 3` is [`HdChain::hd3`]).
+    pub fn spins(n: usize, k: usize, rng: &mut Rng) -> HdChain {
+        let kinds = vec![DiagKind::Rademacher; k];
+        let name: &'static str = match k {
+            1 => "hd1",
+            2 => "hd2",
+            3 => "hd3",
+            _ => "hdk",
+        };
+        HdChain::with_kinds(n, &kinds, rng, name)
+    }
+
+    /// Number of spins (HD factors).
+    pub fn num_spins(&self) -> usize {
+        self.diags.len()
+    }
+
+    /// Apply in place into `buf` (`buf.len() == n`), the alloc-free hot path.
+    pub fn apply_in_place(&self, buf: &mut [f32]) {
+        debug_assert_eq!(buf.len(), self.n);
+        for d in &self.diags {
+            scale_by(buf, d);
+            fwht(buf);
+        }
+        if self.scale != 1.0 {
+            for v in buf.iter_mut() {
+                *v *= self.scale;
+            }
+        }
+    }
+}
+
+impl Transform for HdChain {
+    fn dim_in(&self) -> usize {
+        self.n
+    }
+
+    fn dim_out(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = x.to_vec();
+        self.apply_in_place(&mut y);
+        y
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn param_bits(&self) -> usize {
+        self.kinds
+            .iter()
+            .map(|k| match k {
+                DiagKind::Rademacher => self.n,
+                DiagKind::Gaussian => 32 * self.n,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::fwht::hadamard_dense;
+    use crate::linalg::vecops::norm2;
+    use crate::util::prop::for_all;
+
+    /// Dense reference: build the chain exactly as `apply` computes it —
+    /// unnormalized H̃ per spin over the *stored* diagonals (the global
+    /// √n·n^{-k/2} normalization is folded into the last stored diagonal).
+    fn dense_reference(chain: &HdChain, n: usize) -> Vec<f32> {
+        let h = hadamard_dense(n); // unnormalized ±1
+        // start with identity
+        let mut m: Vec<f32> = vec![0.0; n * n];
+        for i in 0..n {
+            m[i * n + i] = 1.0;
+        }
+        for d in &chain.diags {
+            // m = H̃ * D * m
+            let mut scaled = m.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    scaled[i * n + j] = m[i * n + j] * d[i]; // D scales rows of m (i.e. D*m)
+                }
+            }
+            let mut next = vec![0.0f32; n * n];
+            for i in 0..n {
+                for k in 0..n {
+                    let hv = h[i * n + k];
+                    for j in 0..n {
+                        next[i * n + j] += hv * scaled[k * n + j];
+                    }
+                }
+            }
+            m = next;
+        }
+        m
+    }
+
+    #[test]
+    fn matches_dense_reference() {
+        for n in [2usize, 4, 16, 32] {
+            let mut rng = Rng::new(31);
+            let chain = HdChain::hd3(n, &mut rng);
+            let dense = dense_reference(&chain, n);
+            let mut rng2 = Rng::new(77);
+            let x = rng2.gaussian_vec(n);
+            let got = chain.apply(&x);
+            for i in 0..n {
+                let expect: f32 = (0..n).map(|j| dense[i * n + j] * x[j]).sum();
+                assert!(
+                    (got[i] - expect).abs() < 1e-3 * (1.0 + expect.abs()),
+                    "n={n} i={i}: {} vs {expect}",
+                    got[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn norm_scaling_exact_for_discrete_chain() {
+        // (HD)^k with H an isometry and D ±1 is an isometry, so the √n-scaled
+        // chain maps unit vectors to norm exactly √n.
+        for_all(24, |g| {
+            let n = g.pow2_in(1, 9);
+            let k = g.usize_in(1, 4);
+            let chain = HdChain::spins(n, k, &mut Rng::new(g.u64()));
+            let x = g.unit_vec(n);
+            let y = chain.apply(&x);
+            let expect = (n as f64).sqrt();
+            assert!(
+                (norm2(&y) - expect).abs() < 1e-2 * expect,
+                "n={n} k={k}: ||y||={} want {expect}",
+                norm2(&y)
+            );
+        });
+    }
+
+    #[test]
+    fn hdg_has_gaussian_diag_storage() {
+        let mut rng = Rng::new(3);
+        let hd3 = HdChain::hd3(64, &mut rng);
+        let hdg = HdChain::hdg(64, &mut rng);
+        assert_eq!(hd3.param_bits(), 3 * 64);
+        assert_eq!(hdg.param_bits(), 2 * 64 + 32 * 64);
+    }
+
+    #[test]
+    fn balancedness_of_hd1() {
+        // Remark 1: HD1 is (log n, p)-balanced — after one spin a unit
+        // vector's mass spreads out: ||HD1 x||_inf <= log(n)/sqrt(n) whp.
+        let n = 1024usize;
+        let mut failures = 0;
+        for s in 0..50 {
+            let chain = HdChain::spins(n, 1, &mut Rng::new(900 + s));
+            // spike input: worst case for balancedness
+            let mut x = vec![0.0f32; n];
+            x[0] = 1.0;
+            let y = chain.apply(&x);
+            // chain output is √n-scaled; undo to compare against δ(n)/√n
+            let maxabs = y.iter().fold(0.0f32, |a, v| a.max(v.abs())) / (n as f32).sqrt();
+            let bound = (n as f32).ln() / (n as f32).sqrt();
+            if maxabs > bound {
+                failures += 1;
+            }
+        }
+        assert!(failures <= 2, "balancedness failed {failures}/50 times");
+    }
+
+    #[test]
+    fn apply_in_place_matches_apply() {
+        let mut rng = Rng::new(4);
+        let chain = HdChain::hd3(128, &mut rng);
+        let x = rng.gaussian_vec(128);
+        let a = chain.apply(&x);
+        let mut b = x.clone();
+        chain.apply_in_place(&mut b);
+        assert_eq!(a, b);
+    }
+}

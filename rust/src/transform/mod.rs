@@ -1,0 +1,322 @@
+//! The TripleSpin structured-matrix family (paper §3).
+//!
+//! Every member implements [`Transform`]: a linear map `R^n -> R^m` whose
+//! rows behave like i.i.d. Gaussian directions but which applies in
+//! `O(n log n)` and stores `O(n)` parameters (sometimes only random bits).
+//!
+//! Implemented members (Lemma 1 variants plus the experimental section's):
+//!
+//! | name                 | structure                      | params stored |
+//! |----------------------|--------------------------------|---------------|
+//! | `dense`              | unstructured Gaussian `G`      | `m·n` floats  |
+//! | `hd3`                | `√n·HD3·HD2·HD1`               | `3n` bits     |
+//! | `hdg`                | `√n·HDg·HD2·HD1`               | `n` floats + `2n` bits |
+//! | `circulant`          | `G_circ·D2·HD1`                | `n` floats + `2n` bits |
+//! | `toeplitz`           | `G_Toeplitz·D2·HD1`            | `2n-1` floats + `2n` bits |
+//! | `hankel`             | `G_Hankel·D2·HD1`              | `2n-1` floats + `2n` bits |
+//! | `skew_circulant`     | `G_skew-circ·D2·HD1`           | `n` floats + `2n` bits |
+//!
+//! Rectangular / stacked shapes (paper §3.1) are provided by
+//! [`blocks::StackedTransform`].
+
+pub mod blocks;
+pub mod circulant;
+pub mod dense_gaussian;
+pub mod hd;
+
+pub use blocks::StackedTransform;
+pub use circulant::StructuredGaussian;
+pub use dense_gaussian::DenseGaussian;
+pub use hd::HdChain;
+
+use crate::util::rng::Rng;
+
+/// A randomized linear transform `R^{dim_in} -> R^{dim_out}` standing in for
+/// a Gaussian projection matrix.
+pub trait Transform: Send + Sync {
+    /// Input dimensionality `n` (callers zero-pad shorter vectors).
+    fn dim_in(&self) -> usize;
+
+    /// Output dimensionality `m`.
+    fn dim_out(&self) -> usize;
+
+    /// `y = G_struct x`. `x.len() == dim_in()`.
+    fn apply(&self, x: &[f32]) -> Vec<f32>;
+
+    /// Human-readable family name (stable; used by benches and the CLI).
+    fn name(&self) -> &'static str;
+
+    /// Number of stored parameters, counting a ±1 entry as one bit and a
+    /// float as 32 bits. Reported by the compression tables.
+    fn param_bits(&self) -> usize;
+
+    /// Apply to each row of a row-major batch, concatenating outputs.
+    fn apply_batch(&self, xs: &[f32]) -> Vec<f32> {
+        let n = self.dim_in();
+        debug_assert_eq!(xs.len() % n, 0);
+        let rows = xs.len() / n;
+        let m = self.dim_out();
+        let mut out = Vec::with_capacity(rows * m);
+        for r in xs.chunks_exact(n) {
+            out.extend_from_slice(&self.apply(r));
+        }
+        debug_assert_eq!(out.len(), rows * m);
+        out
+    }
+}
+
+/// The transform families the library can construct by name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Unstructured i.i.d. Gaussian baseline.
+    Dense,
+    /// `√n · HD3 HD2 HD1` — fully discrete, bit-only storage.
+    Hd3,
+    /// `√n · HDg HD2 HD1` — Gaussian last diagonal.
+    Hdg,
+    /// `G_circ · D2 · H D1` — Gaussian circulant top block.
+    Circulant,
+    /// `G_Toeplitz · D2 · H D1`.
+    Toeplitz,
+    /// `G_Hankel · D2 · H D1`.
+    Hankel,
+    /// `G_skew-circ · D2 · H D1` (the experiments' `G_skew-circ D2HD1`).
+    SkewCirculant,
+}
+
+impl Family {
+    /// All structured members (everything except the dense baseline).
+    pub const STRUCTURED: [Family; 6] = [
+        Family::Hd3,
+        Family::Hdg,
+        Family::Circulant,
+        Family::Toeplitz,
+        Family::Hankel,
+        Family::SkewCirculant,
+    ];
+
+    /// The four variants Figure 1 / Figure 2 / Table 1 sweep.
+    pub const PAPER_SET: [Family; 4] = [
+        Family::Toeplitz,
+        Family::SkewCirculant,
+        Family::Hdg,
+        Family::Hd3,
+    ];
+
+    pub fn parse(s: &str) -> Option<Family> {
+        Some(match s {
+            "dense" | "gaussian" => Family::Dense,
+            "hd3" => Family::Hd3,
+            "hdg" => Family::Hdg,
+            "circulant" | "circ" => Family::Circulant,
+            "toeplitz" => Family::Toeplitz,
+            "hankel" => Family::Hankel,
+            "skew" | "skew_circulant" | "skew-circulant" => Family::SkewCirculant,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Dense => "dense",
+            Family::Hd3 => "hd3",
+            Family::Hdg => "hdg",
+            Family::Circulant => "circulant",
+            Family::Toeplitz => "toeplitz",
+            Family::Hankel => "hankel",
+            Family::SkewCirculant => "skew_circulant",
+        }
+    }
+
+    /// Display label matching the paper's notation.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Family::Dense => "G (unstructured)",
+            Family::Hd3 => "HD3 HD2 HD1",
+            Family::Hdg => "HDg HD2 HD1",
+            Family::Circulant => "Gcirc D2 HD1",
+            Family::Toeplitz => "GToeplitz D2 HD1",
+            Family::Hankel => "GHankel D2 HD1",
+            Family::SkewCirculant => "Gskew-circ D2 HD1",
+        }
+    }
+}
+
+/// Build a **square** `n x n` transform of the given family. `n` must be a
+/// power of two for every Hadamard-based family (callers zero-pad; see
+/// [`crate::linalg::fwht::next_pow2`]).
+pub fn make_square(family: Family, n: usize, rng: &mut Rng) -> Box<dyn Transform> {
+    match family {
+        Family::Dense => Box::new(DenseGaussian::new(n, n, rng)),
+        Family::Hd3 => Box::new(HdChain::hd3(n, rng)),
+        Family::Hdg => Box::new(HdChain::hdg(n, rng)),
+        Family::Circulant => Box::new(StructuredGaussian::circulant(n, rng)),
+        Family::Toeplitz => Box::new(StructuredGaussian::toeplitz(n, rng)),
+        Family::Hankel => Box::new(StructuredGaussian::hankel(n, rng)),
+        Family::SkewCirculant => Box::new(StructuredGaussian::skew_circulant(n, rng)),
+    }
+}
+
+/// Build a `k x n` transform: square for structured families truncated /
+/// stacked per §3.1 (block size `m` rows, `m <= n`), or a dense `k x n`
+/// Gaussian for [`Family::Dense`].
+pub fn make(family: Family, k: usize, n: usize, m: usize, rng: &mut Rng) -> Box<dyn Transform> {
+    match family {
+        Family::Dense => Box::new(DenseGaussian::new(k, n, rng)),
+        _ => Box::new(StackedTransform::new(family, k, n, m, rng)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{dot, norm2};
+    use crate::util::prop::for_all;
+
+    /// Shared statistical check: across many random constructions, the
+    /// projection of a fixed unit vector should have ~N(0,1) marginals.
+    fn marginal_check(family: Family) {
+        let n = 64;
+        let mut rng = Rng::new(100 + family as u64);
+        let x = rng.unit_vec(n);
+        let mut samples: Vec<f64> = Vec::new();
+        for trial in 0..200 {
+            let t = make_square(family, n, &mut Rng::new(1000 + trial));
+            let y = t.apply(&x);
+            samples.push(y[0] as f64);
+            samples.push(y[n / 2] as f64);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|v| (v - mean).powi(2)).sum::<f64>()
+            / (samples.len() - 1) as f64;
+        assert!(mean.abs() < 0.15, "{family:?} mean={mean}");
+        assert!(
+            (var - 1.0).abs() < 0.30,
+            "{family:?} var={var} (want ~1: rows act like N(0,1) directions)"
+        );
+    }
+
+    #[test]
+    fn all_families_gaussian_like_marginals() {
+        for f in [Family::Dense, Family::Hd3, Family::Hdg, Family::Circulant] {
+            marginal_check(f);
+        }
+    }
+
+    #[test]
+    fn more_families_gaussian_like_marginals() {
+        for f in [Family::Toeplitz, Family::Hankel, Family::SkewCirculant] {
+            marginal_check(f);
+        }
+    }
+
+    #[test]
+    fn linearity_of_every_family() {
+        for_all(12, |g| {
+            let n = 32;
+            let fam = *g.choose(&[
+                Family::Dense,
+                Family::Hd3,
+                Family::Hdg,
+                Family::Circulant,
+                Family::Toeplitz,
+                Family::Hankel,
+                Family::SkewCirculant,
+            ]);
+            let t = make_square(fam, n, &mut Rng::new(g.u64()));
+            let x = g.gaussian_vec(n);
+            let y = g.gaussian_vec(n);
+            let a = g.f32_in(-2.0, 2.0);
+            let combined: Vec<f32> = x.iter().zip(&y).map(|(u, v)| a * u + v).collect();
+            let lhs = t.apply(&combined);
+            let tx = t.apply(&x);
+            let ty = t.apply(&y);
+            for i in 0..n {
+                let rhs = a * tx[i] + ty[i];
+                assert!(
+                    (lhs[i] - rhs).abs() < 2e-2 * (1.0 + rhs.abs()),
+                    "{fam:?} i={i}: {} vs {rhs}",
+                    lhs[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn expected_norm_preservation() {
+        // E||G_struct x||^2 = n ||x||^2 for all families (rows ~ N(0,1)^n).
+        for fam in [Family::Hd3, Family::Hdg, Family::Circulant, Family::Toeplitz] {
+            let n = 64;
+            let x = Rng::new(5).unit_vec(n);
+            let mut total = 0.0f64;
+            let trials = 100;
+            for s in 0..trials {
+                let t = make_square(fam, n, &mut Rng::new(7_000 + s));
+                let y = t.apply(&x);
+                total += norm2(&y).powi(2);
+            }
+            let avg = total / trials as f64;
+            assert!(
+                (avg / n as f64 - 1.0).abs() < 0.25,
+                "{fam:?}: E||y||^2/n = {}",
+                avg / n as f64
+            );
+        }
+    }
+
+    #[test]
+    fn rows_nearly_orthogonal_hd3() {
+        // Theorem 5.1's mechanism: distinct rows of the structured matrix
+        // are near-orthogonal after normalization.
+        let n = 256;
+        let t = make_square(Family::Hd3, n, &mut Rng::new(3));
+        // extract rows by applying to canonical basis vectors: row_i = (G e_j)_i
+        // -> build full matrix column by column.
+        let mut cols: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for j in 0..n {
+            let mut e = vec![0.0f32; n];
+            e[j] = 1.0;
+            cols.push(t.apply(&e));
+        }
+        let row = |i: usize| -> Vec<f32> { (0..n).map(|j| cols[j][i]).collect() };
+        let r0 = row(0);
+        let r1 = row(n / 3);
+        let r2 = row(2 * n / 3);
+        let c01 = dot(&r0, &r1) / (norm2(&r0) * norm2(&r1));
+        let c02 = dot(&r0, &r2) / (norm2(&r0) * norm2(&r2));
+        let c12 = dot(&r1, &r2) / (norm2(&r1) * norm2(&r2));
+        for c in [c01, c02, c12] {
+            assert!(c.abs() < 0.2, "cosine {c} too large for near-orthogonality");
+        }
+    }
+
+    #[test]
+    fn family_parse_round_trip() {
+        for f in [
+            Family::Dense,
+            Family::Hd3,
+            Family::Hdg,
+            Family::Circulant,
+            Family::Toeplitz,
+            Family::Hankel,
+            Family::SkewCirculant,
+        ] {
+            assert_eq!(Family::parse(f.name()), Some(f));
+        }
+        assert_eq!(Family::parse("nope"), None);
+    }
+
+    #[test]
+    fn param_bits_ordering() {
+        // compression: hd3 < hdg < circulant-family < dense
+        let n = 256;
+        let mut rng = Rng::new(9);
+        let dense = make_square(Family::Dense, n, &mut rng).param_bits();
+        let hd3 = make_square(Family::Hd3, n, &mut rng).param_bits();
+        let hdg = make_square(Family::Hdg, n, &mut rng).param_bits();
+        let circ = make_square(Family::Circulant, n, &mut rng).param_bits();
+        assert!(hd3 < hdg, "hd3={hd3} hdg={hdg}");
+        assert!(hdg <= circ, "hdg={hdg} circ={circ}");
+        assert!(circ < dense / 50, "circ={circ} dense={dense}");
+    }
+}

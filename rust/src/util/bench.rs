@@ -1,0 +1,179 @@
+//! Mini benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Each bench binary sets `harness = false` in `Cargo.toml` and drives this
+//! module directly. The harness does warmup, adaptively picks an iteration
+//! count targeting a fixed measurement window, and reports mean / p50 / p95
+//! per-iteration times. Results can also be collected programmatically so a
+//! bench binary can print paper-style tables (e.g. Table 1's speedup rows).
+
+use std::time::{Duration, Instant};
+
+/// A single measurement summary, per-iteration times in nanoseconds.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Summary {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark options.
+#[derive(Clone, Copy, Debug)]
+pub struct Opts {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Measurement wall-clock budget.
+    pub measure: Duration,
+    /// Max number of timed samples (batches).
+    pub max_samples: usize,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_samples: 50,
+        }
+    }
+}
+
+/// Quick options for expensive end-to-end benches.
+pub fn quick() -> Opts {
+    Opts {
+        warmup: Duration::from_millis(50),
+        measure: Duration::from_millis(300),
+        max_samples: 20,
+    }
+}
+
+/// Time `f` under `opts`, returning a summary. `f` is invoked repeatedly;
+/// use `std::hint::black_box` inside to defeat dead-code elimination.
+pub fn bench<F: FnMut()>(name: &str, opts: Opts, mut f: F) -> Summary {
+    // Warmup and estimate per-call cost.
+    let wu_start = Instant::now();
+    let mut calls = 0u64;
+    while wu_start.elapsed() < opts.warmup || calls == 0 {
+        f();
+        calls += 1;
+        if calls > 1_000_000 {
+            break;
+        }
+    }
+    let per_call = wu_start.elapsed().as_nanos() as f64 / calls as f64;
+
+    // Choose batch size so each sample is ~measure/max_samples.
+    let sample_target_ns = opts.measure.as_nanos() as f64 / opts.max_samples as f64;
+    let batch = ((sample_target_ns / per_call.max(1.0)).ceil() as usize).max(1);
+
+    let mut samples: Vec<f64> = Vec::with_capacity(opts.max_samples);
+    let m_start = Instant::now();
+    while m_start.elapsed() < opts.measure && samples.len() < opts.max_samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    if samples.is_empty() {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    Summary {
+        name: name.to_string(),
+        iters: samples.len() * batch,
+        mean_ns: mean,
+        p50_ns: p(0.5),
+        p95_ns: p(0.95),
+        min_ns: samples[0],
+    }
+}
+
+/// Bench and print a one-line report.
+pub fn run<F: FnMut()>(name: &str, opts: Opts, f: F) -> Summary {
+    let s = bench(name, opts, f);
+    println!(
+        "{:<44} {:>12}/iter  p50 {:>12}  p95 {:>12}  ({} iters)",
+        s.name,
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p50_ns),
+        fmt_ns(s.p95_ns),
+        s.iters
+    );
+    s
+}
+
+/// Print a markdown-style table: rows of (label, values per column).
+pub fn print_table(title: &str, columns: &[String], rows: &[(String, Vec<String>)]) {
+    println!("\n== {title} ==");
+    print!("{:<36}", "");
+    for c in columns {
+        print!(" {c:>10}");
+    }
+    println!();
+    for (label, vals) in rows {
+        print!("{label:<36}");
+        for v in vals {
+            print!(" {v:>10}");
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let opts = Opts {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            max_samples: 10,
+        };
+        let mut x = 0u64;
+        let s = bench("noop-ish", opts, || {
+            x = std::hint::black_box(x.wrapping_add(1));
+        });
+        assert!(s.iters > 0);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p95_ns + 1.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

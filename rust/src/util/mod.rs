@@ -1,0 +1,6 @@
+//! Dependency-free utilities: seeded RNG, JSON, bench + property harnesses.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,159 @@
+//! Tiny property-testing harness (proptest is not in the offline vendor set).
+//!
+//! A property is a closure over a [`Gen`] (a seeded value source). The
+//! harness runs it for `cases` different seeds; on panic it reports the
+//! failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the xla rpath linker flags
+//! use triplespin::util::prop::{for_all, Gen};
+//! for_all(64, |g: &mut Gen| {
+//!     let n = g.usize_in(1, 32);
+//!     let v = g.vec_f32(n, -1.0, 1.0);
+//!     let sum: f32 = v.iter().sum();
+//!     assert!(sum.abs() <= v.len() as f32);
+//! });
+//! ```
+//!
+//! No shrinking — failing inputs here are small by construction (dims are
+//! drawn from bounded ranges), and the seed makes reproduction trivial.
+
+use crate::util::rng::Rng;
+
+/// Seeded generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// The seed for this case (for error reporting / replay).
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            seed,
+        }
+    }
+
+    /// usize uniform in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// A power of two in [2^lo_exp, 2^hi_exp].
+    pub fn pow2_in(&mut self, lo_exp: u32, hi_exp: u32) -> usize {
+        1usize << self.usize_in(lo_exp as usize, hi_exp as usize)
+    }
+
+    /// f32 uniform in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.uniform_f32() * (hi - lo)
+    }
+
+    /// Vector of f32 uniform in [lo, hi).
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Vector of standard Gaussians.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.gaussian_vec(n)
+    }
+
+    /// Unit-norm vector.
+    pub fn unit_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.unit_vec(n)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` for `cases` seeded cases. Panics (with the failing seed in the
+/// message) if any case panics.
+pub fn for_all<F: FnMut(&mut Gen) + std::panic::UnwindSafe + Copy>(cases: u64, prop: F) {
+    for_all_seeded(0xC0FFEE, cases, prop)
+}
+
+/// Like [`for_all`] but with an explicit base seed (use to replay).
+pub fn for_all_seeded<F: FnMut(&mut Gen) + std::panic::UnwindSafe + Copy>(
+    base_seed: u64,
+    cases: u64,
+    prop: F,
+) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(move || {
+            let mut g = Gen::new(seed);
+            let mut p = prop;
+            p(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        for_all(32, |g| {
+            let n = g.usize_in(1, 10);
+            let v = g.vec_f32(n, 0.0, 1.0);
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|x| (0.0..1.0).contains(x)));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        for_all(32, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x < 90, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        for_all(32, |g| {
+            let n = g.pow2_in(2, 8);
+            assert!(n.is_power_of_two());
+            assert!((4..=256).contains(&n));
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut first: Vec<u64> = Vec::new();
+        for_all_seeded(42, 8, |_g| {});
+        // Generators with the same seed produce the same values.
+        let mut g1 = Gen::new(7);
+        let mut g2 = Gen::new(7);
+        for _ in 0..16 {
+            first.push(g1.u64());
+        }
+        for v in &first {
+            assert_eq!(*v, g2.u64());
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Deterministic, dependency-free random number generation.
+//!
+//! The offline vendor set has no `rand` crate, so we implement the small
+//! amount of randomness the TripleSpin library needs ourselves:
+//!
+//! * [`Rng`] — xoshiro256++ seeded through SplitMix64. Fast, well-tested
+//!   statistical quality, 2^256-1 period, trivially reproducible.
+//! * Gaussian sampling via the Marsaglia polar method (exact, no table).
+//! * Rademacher (±1), uniform ranges, and sub-Gaussian helpers used by the
+//!   TripleSpin constructions (Condition 2 of the paper, §3).
+//!
+//! Every randomized object in the library takes an explicit seed so that
+//! experiments, tests and benches are bit-reproducible.
+
+/// xoshiro256++ PRNG (Blackman & Vigna), seeded via SplitMix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second output of the polar Gaussian transform
+    spare: Option<f64>,
+}
+
+#[inline(always)]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed. Two generators built from the
+    /// same seed produce identical streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Derive an independent child generator (used to hand sub-streams to
+    /// blocks / threads without sharing state).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xA076_1D64_78BD_642F)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n) (n > 0), via Lemire's unbiased method.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal sample (Marsaglia polar method, cached spare).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Standard normal f32.
+    #[inline]
+    pub fn gaussian_f32(&mut self) -> f32 {
+        self.gaussian() as f32
+    }
+
+    /// Rademacher sample: ±1 with equal probability.
+    #[inline]
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fill a vector with i.i.d. standard Gaussians.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.gaussian_f32()).collect()
+    }
+
+    /// Fill a vector with i.i.d. Rademacher ±1 entries (the diagonal of the
+    /// paper's `D_i` matrices).
+    pub fn rademacher_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rademacher()).collect()
+    }
+
+    /// A unit vector uniform on the sphere S^{n-1}.
+    pub fn unit_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = self.gaussian_vec(n);
+        let norm = v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32;
+        if norm > 0.0 {
+            for x in &mut v {
+                *x /= norm;
+            }
+        }
+        v
+    }
+
+    /// Random permutation of 0..n (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            p.swap(i, j);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let (mut s1, mut s2, mut s4) = (0.0f64, 0.0f64, 0.0f64);
+        for _ in 0..n {
+            let g = r.gaussian();
+            s1 += g;
+            s2 += g * g;
+            s4 += g * g * g * g;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64;
+        let kurt = s4 / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+        assert!((kurt - 3.0).abs() < 0.15, "kurtosis={kurt}");
+    }
+
+    #[test]
+    fn rademacher_balanced() {
+        let mut r = Rng::new(5);
+        let n = 20_000;
+        let sum: f32 = (0..n).map(|_| r.rademacher()).sum();
+        assert!(sum.abs() < 300.0, "sum={sum}");
+        let v = r.rademacher_vec(16);
+        assert!(v.iter().all(|x| *x == 1.0 || *x == -1.0));
+    }
+
+    #[test]
+    fn below_unbiased_small_range() {
+        let mut r = Rng::new(6);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn unit_vec_has_unit_norm() {
+        let mut r = Rng::new(8);
+        for n in [2, 17, 128] {
+            let v = r.unit_vec(n);
+            let norm: f64 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(9);
+        let p = r.permutation(100);
+        let mut seen = vec![false; 100];
+        for i in p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|x| *x));
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut a = Rng::new(10);
+        let mut b = a.fork();
+        let matches = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(matches < 2);
+    }
+}

@@ -1,0 +1,91 @@
+//! CLI smoke tests: run the `triplespin` binary end to end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_triplespin"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+#[test]
+fn help_exits_zero() {
+    let out = bin().arg("help").output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("serve"));
+    assert!(text.contains("verify"));
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let out = bin().arg("frobnicate").output().expect("run");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn transform_prints_stats() {
+    let out = bin()
+        .args(["transform", "--family", "hd3", "--n", "128", "--seed", "7"])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("HD3 HD2 HD1"));
+    assert!(text.contains("params"));
+}
+
+#[test]
+fn transform_rejects_bad_family_and_dim() {
+    let out = bin()
+        .args(["transform", "--family", "nope"])
+        .output()
+        .expect("run");
+    assert!(!out.status.success());
+    let out = bin()
+        .args(["transform", "--family", "hd3", "--n", "100"])
+        .output()
+        .expect("run");
+    assert!(!out.status.success(), "non-power-of-two n must be rejected");
+}
+
+#[test]
+fn info_and_verify_with_artifacts() {
+    if !have_artifacts() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let out = bin()
+        .arg("info")
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("run");
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("transform_n256_b16"));
+
+    let out = bin()
+        .arg("verify")
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("OK"));
+    assert!(!text.contains("FAIL"));
+}
+
+#[test]
+fn serve_native_smoke() {
+    let out = bin()
+        .args(["serve", "--requests", "100", "--n", "64", "--backend", "native"])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("done: 100 requests"));
+    assert!(text.contains("metrics"));
+}

@@ -1,0 +1,163 @@
+//! Integration tests over the real AOT artifacts (`make artifacts`).
+//!
+//! These exercise the full three-layer contract: Pallas/JAX-lowered HLO
+//! text -> PJRT compile -> execute from Rust, checked against (a) golden
+//! vectors computed by the Python side and (b) the native Rust backend.
+//!
+//! If `artifacts/manifest.json` is missing the tests skip with a notice so
+//! plain `cargo test` stays usable before `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use triplespin::coordinator::{self, Backend, Coordinator, NativeBackend, PjrtBackend};
+use triplespin::runtime::{Op, RuntimeService};
+use triplespin::util::rng::Rng;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json not found — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn golden_vectors_verify_on_pjrt() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = RuntimeService::spawn(dir).expect("runtime loads all artifacts");
+    let h = svc.handle();
+    let names = h.names().unwrap();
+    assert!(!names.is_empty());
+    let mut checked = 0;
+    for name in &names {
+        if let Some((max_err, numel)) = h.verify_golden(name).expect("verify runs") {
+            assert!(numel > 0);
+            assert!(
+                max_err < 2e-3,
+                "{name}: PJRT output deviates from python golden by {max_err}"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 5, "expected golden vectors for most artifacts");
+    svc.shutdown();
+}
+
+#[test]
+fn pjrt_backend_matches_native_backend() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = RuntimeService::spawn(dir).expect("runtime spawns");
+    let dims = [64usize, 256];
+    let (sigma, seed) = (2.0, 77);
+    let native = NativeBackend::new(&dims, sigma, seed);
+    let pjrt = PjrtBackend::new(svc.handle(), &dims, sigma, seed).unwrap();
+
+    let mut rng = Rng::new(5);
+    for &n in &dims {
+        for rows in [1usize, 3, 16] {
+            let xs = rng.gaussian_vec(rows * n);
+            // transform: exact same math, f32 tolerance
+            let a = native.run_batch(Op::Transform, n, rows, &xs).unwrap();
+            let b = pjrt.run_batch(Op::Transform, n, rows, &xs).unwrap();
+            let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert!(
+                    (x - y).abs() < 1e-2 * (1.0 + y.abs()),
+                    "transform n={n} rows={rows}: {x} vs {y}"
+                );
+            }
+            // crosspolytope: identical bucket ids
+            let a = native.run_batch(Op::CrossPolytope, n, rows, &xs).unwrap();
+            let b = pjrt.run_batch(Op::CrossPolytope, n, rows, &xs).unwrap();
+            assert_eq!(
+                a.as_i32().unwrap(),
+                b.as_i32().unwrap(),
+                "crosspolytope ids must agree exactly (n={n}, rows={rows})"
+            );
+        }
+    }
+    // rff on the n=256 lane
+    let n = 256;
+    let xs = rng.gaussian_vec(2 * n);
+    let a = native.run_batch(Op::Rff, n, 2, &xs).unwrap();
+    let b = pjrt.run_batch(Op::Rff, n, 2, &xs).unwrap();
+    for (x, y) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()) {
+        assert!((x - y).abs() < 5e-3, "rff: {x} vs {y}");
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn coordinator_over_pjrt_end_to_end() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = RuntimeService::spawn(dir).expect("runtime spawns");
+    let (sigma, seed) = (1.0, 42);
+    let backend =
+        Arc::new(PjrtBackend::new(svc.handle(), &[256], sigma, seed).unwrap());
+    let config = coordinator::Config {
+        lanes: vec![
+            (Op::Transform, 256),
+            (Op::Rff, 256),
+            (Op::CrossPolytope, 256),
+        ],
+        max_batch: 16,
+        max_wait: Duration::from_micros(300),
+        queue_cap: 256,
+        sigma,
+        seed,
+    };
+    let c = Coordinator::start(config, backend);
+    let native = NativeBackend::new(&[256], sigma, seed);
+
+    let mut rng = Rng::new(9);
+    let mut rxs = Vec::new();
+    let mut inputs = Vec::new();
+    for _ in 0..40 {
+        let v = rng.gaussian_vec(256);
+        inputs.push(v.clone());
+        rxs.push(c.submit(Op::Transform, v).unwrap());
+    }
+    for ((_, rx), v) in rxs.into_iter().zip(&inputs) {
+        let out = rx.recv().unwrap().result.unwrap();
+        let got = out.as_f32().unwrap();
+        let want = native.run_batch(Op::Transform, 256, 1, v).unwrap();
+        let want = want.as_f32().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (x, y) in got.iter().zip(want) {
+            assert!((x - y).abs() < 1e-2 * (1.0 + y.abs()));
+        }
+    }
+    // batching happened over the PJRT path too
+    let m = c.metrics();
+    let (_, tm) = m
+        .iter()
+        .find(|((op, _), _)| *op == Op::Transform)
+        .unwrap();
+    assert!(tm.mean_batch_size() > 1.0);
+    c.shutdown();
+    svc.shutdown();
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = RuntimeService::spawn(dir).expect("runtime spawns");
+    let h = svc.handle();
+    // unknown artifact
+    assert!(h.run("nope_n1_b1", vec![]).is_err());
+    // wrong input count
+    assert!(h.run("transform_n64_b1", vec![vec![0.0; 64]]).is_err());
+    // wrong numel
+    assert!(h
+        .run(
+            "transform_n64_b1",
+            vec![vec![0.0; 63], vec![0.0; 64], vec![0.0; 64], vec![0.0; 64]],
+        )
+        .is_err());
+    svc.shutdown();
+}
