@@ -8,6 +8,7 @@
 use triplespin::data::uspst;
 use triplespin::kernels::{exact, gram, FeatureKind, FeatureMap};
 use triplespin::linalg::vecops::argmax_abs_signed;
+use triplespin::linalg::Workspace;
 use triplespin::lsh::collision::pair_at_distance;
 use triplespin::transform::hd::HdChain;
 use triplespin::transform::{make_square, Family, Transform};
@@ -163,17 +164,19 @@ impl Transform for StackedOfChains {
     fn dim_out(&self) -> usize {
         self.k_rows
     }
-    fn apply(&self, x: &[f32]) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.k_rows);
+    fn apply_into(&self, x: &[f32], out: &mut [f32], ws: &mut Workspace) {
+        let mut buf = ws.take_f32(self.n);
+        let mut off = 0;
         for b in &self.blocks {
-            let y = b.apply(x);
-            let take = self.n.min(self.k_rows - out.len());
-            out.extend_from_slice(&y[..take]);
-            if out.len() == self.k_rows {
+            b.apply_into(x, &mut buf, ws);
+            let take = self.n.min(self.k_rows - off);
+            out[off..off + take].copy_from_slice(&buf[..take]);
+            off += take;
+            if off == self.k_rows {
                 break;
             }
         }
-        out
+        ws.put_f32(buf);
     }
     fn name(&self) -> &'static str {
         "hdk-stacked"

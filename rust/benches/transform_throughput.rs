@@ -1,0 +1,152 @@
+//! Batch-throughput sweep for the zero-allocation, batch-first execution
+//! engine: family × n × batch-rows, seed-style per-row `apply` loop vs the
+//! sharded `apply_batch_into` path, plus the NativeBackend `Op::Transform` /
+//! `Op::Rff` batch lanes.
+//!
+//! Writes `BENCH_transform_throughput.json` at the repo root to seed the
+//! perf trajectory. Set `TS_FULL=1` for the larger dims / row counts and
+//! `TS_WORKERS=k` to pin the worker count.
+//!
+//!     cargo bench --bench transform_throughput
+
+use triplespin::coordinator::{Backend, NativeBackend};
+use triplespin::linalg::WorkspacePool;
+use triplespin::runtime::Op;
+use triplespin::transform::{make_square, Family};
+use triplespin::util::bench;
+use triplespin::util::json::Json;
+use triplespin::util::rng::Rng;
+
+/// Repo root regardless of whether cargo ran from the workspace root or
+/// from `rust/`.
+fn out_path() -> &'static str {
+    if std::path::Path::new("rust/Cargo.toml").exists() {
+        "BENCH_transform_throughput.json"
+    } else {
+        "../BENCH_transform_throughput.json"
+    }
+}
+
+fn entry(kind: &str, family: &str, n: usize, rows: usize, per_row_ns: f64, batch_ns: f64) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str(kind.into())),
+        ("family", Json::Str(family.into())),
+        ("n", Json::Num(n as f64)),
+        ("rows", Json::Num(rows as f64)),
+        ("per_row_loop_ns", Json::Num(per_row_ns)),
+        ("batch_ns", Json::Num(batch_ns)),
+        (
+            "batch_rows_per_sec",
+            Json::Num(rows as f64 / (batch_ns / 1e9)),
+        ),
+        ("speedup", Json::Num(per_row_ns / batch_ns)),
+    ])
+}
+
+fn main() {
+    let full = std::env::var("TS_FULL").is_ok();
+    let dims: Vec<usize> = if full {
+        vec![256, 1024, 4096]
+    } else {
+        vec![256, 1024]
+    };
+    let row_counts: Vec<usize> = if full {
+        vec![8, 128, 512]
+    } else {
+        vec![8, 128]
+    };
+    let opts = bench::quick();
+    let workers = WorkspacePool::from_env().workers();
+    println!("== transform throughput (workers={workers}) ==\n");
+
+    let mut entries: Vec<Json> = Vec::new();
+
+    // Transform trait path: seed-style allocating per-row loop vs the
+    // batch-first engine.
+    for fam in [
+        Family::Hd3,
+        Family::Hdg,
+        Family::Circulant,
+        Family::Toeplitz,
+    ] {
+        for &n in &dims {
+            let t = make_square(fam, n, &mut Rng::new(1));
+            for &rows in &row_counts {
+                let xs = Rng::new(2).gaussian_vec(rows * n);
+                let label = format!("{} n={n} rows={rows}", fam.name());
+                let per_row = bench::bench(&format!("{label} per-row"), opts, || {
+                    let mut out: Vec<f32> = Vec::with_capacity(rows * n);
+                    for r in xs.chunks_exact(n) {
+                        out.extend_from_slice(&t.apply(r));
+                    }
+                    std::hint::black_box(&out);
+                });
+                let mut pool = WorkspacePool::from_env();
+                let mut out = vec![0.0f32; rows * n];
+                let batch = bench::bench(&format!("{label} batch"), opts, || {
+                    t.apply_batch_into(&xs, &mut out, &mut pool);
+                    std::hint::black_box(&out);
+                });
+                println!(
+                    "{label:<36} per-row {:>11}  batch {:>11}  x{:.2}",
+                    bench::fmt_ns(per_row.mean_ns),
+                    bench::fmt_ns(batch.mean_ns),
+                    per_row.mean_ns / batch.mean_ns
+                );
+                entries.push(entry(
+                    "transform",
+                    fam.name(),
+                    n,
+                    rows,
+                    per_row.mean_ns,
+                    batch.mean_ns,
+                ));
+            }
+        }
+    }
+
+    // NativeBackend lanes: rows×run_batch(rows=1) (the seed per-row loop)
+    // vs one sharded batch call.
+    for op in [Op::Transform, Op::Rff] {
+        for &n in &dims {
+            let be = NativeBackend::new(&[n], 1.0, 3);
+            for &rows in &row_counts {
+                let xs = Rng::new(4).gaussian_vec(rows * n);
+                let label = format!("native {op} n={n} rows={rows}");
+                let per_row = bench::bench(&format!("{label} per-row"), opts, || {
+                    for r in xs.chunks_exact(n) {
+                        std::hint::black_box(be.run_batch(op, n, 1, r).unwrap());
+                    }
+                });
+                let batch = bench::bench(&format!("{label} batch"), opts, || {
+                    std::hint::black_box(be.run_batch(op, n, rows, &xs).unwrap());
+                });
+                println!(
+                    "{label:<36} per-row {:>11}  batch {:>11}  x{:.2}",
+                    bench::fmt_ns(per_row.mean_ns),
+                    bench::fmt_ns(batch.mean_ns),
+                    per_row.mean_ns / batch.mean_ns
+                );
+                entries.push(entry(
+                    &format!("native_{op}"),
+                    "hd3_chain",
+                    n,
+                    rows,
+                    per_row.mean_ns,
+                    batch.mean_ns,
+                ));
+            }
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("transform_throughput".into())),
+        ("generated", Json::Bool(true)),
+        ("workers", Json::Num(workers as f64)),
+        ("full_sweep", Json::Bool(full)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = out_path();
+    std::fs::write(path, format!("{doc}\n")).expect("write bench json");
+    println!("\nwrote {path}");
+}

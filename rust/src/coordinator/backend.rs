@@ -9,8 +9,9 @@
 //! * [`PjrtBackend`] — executes the AOT-compiled JAX/Pallas artifacts via
 //!   the runtime service (the paper-faithful "three-layer" path).
 
-use crate::linalg::fwht::fwht;
-use crate::linalg::vecops::scale_by;
+use crate::linalg::fwht::fwht_batch;
+use crate::linalg::vecops::scale_rows;
+use crate::linalg::workspace::{worker_count_from_env, MIN_ROWS_PER_WORKER};
 use crate::runtime::{Op, Output, RuntimeHandle};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
@@ -56,9 +57,12 @@ pub trait Backend: Send + Sync + 'static {
     fn name(&self) -> &'static str;
 }
 
-/// Pure-Rust backend: the L3-native hot path.
+/// Pure-Rust backend: the L3-native hot path. Batches run through the
+/// batch-level chain kernel (level-major FWHT butterflies across all rows)
+/// with rows sharded over scoped worker threads (`TS_WORKERS`-tunable).
 pub struct NativeBackend {
     params: HashMap<usize, NativeParams>,
+    workers: usize,
 }
 
 /// [`ModelParams`] plus the perf-folded last diagonal: the chain's global
@@ -81,7 +85,16 @@ impl NativeBackend {
                     (n, NativeParams { base, d3_scaled })
                 })
                 .collect(),
+            workers: worker_count_from_env(),
         }
+    }
+
+    /// Like [`NativeBackend::new`] with a pinned worker count (`new` reads
+    /// the `TS_WORKERS` env var / machine parallelism).
+    pub fn with_workers(dims: &[usize], sigma: f64, seed: u64, workers: usize) -> NativeBackend {
+        let mut be = NativeBackend::new(dims, sigma, seed);
+        be.workers = workers.max(1);
+        be
     }
 
     fn params(&self, n: usize) -> Result<&NativeParams, String> {
@@ -90,55 +103,108 @@ impl NativeBackend {
             .ok_or_else(|| format!("native backend: no params for n={n}"))
     }
 
-    /// In-place chain on one row: `√n · H D3 H D2 H D1 x` (normalized H).
-    /// Three unnormalized FWHTs contribute n^{3/2}; the remaining
-    /// `√n/n^{3/2} = 1/n` factor is pre-folded into `d3_scaled`.
-    fn chain_row(p: &NativeParams, row: &mut [f32]) {
-        scale_by(row, &p.base.d1);
-        fwht(row);
-        scale_by(row, &p.base.d2);
-        fwht(row);
-        scale_by(row, &p.d3_scaled);
-        fwht(row);
+    /// In-place chain over a row-major sub-batch: `√n · H D3 H D2 H D1 x`
+    /// per row (normalized H). Three unnormalized FWHTs contribute n^{3/2};
+    /// the remaining `√n/n^{3/2} = 1/n` factor is pre-folded into
+    /// `d3_scaled`. Each stage sweeps the whole sub-batch (level-major
+    /// cache-blocked FWHT) before the next begins.
+    fn chain_batch(p: &NativeParams, data: &mut [f32], n: usize) {
+        scale_rows(data, &p.base.d1);
+        fwht_batch(data, n);
+        scale_rows(data, &p.base.d2);
+        fwht_batch(data, n);
+        scale_rows(data, &p.d3_scaled);
+        fwht_batch(data, n);
     }
+}
+
+/// Shard the rows of the `proj` chain buffer (width `n`) and the output
+/// buffer (width `w_out`) across up to `workers` scoped threads; no thread
+/// is spawned unless every worker gets at least [`MIN_ROWS_PER_WORKER`]
+/// full shares of rows.
+fn shard_rows<T, F>(
+    proj: &mut [f32],
+    out: &mut [T],
+    rows: usize,
+    n: usize,
+    w_out: usize,
+    workers: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(&mut [f32], &mut [T]) + Sync,
+{
+    let workers = workers.min((rows / MIN_ROWS_PER_WORKER).max(1));
+    if workers <= 1 {
+        f(proj, out);
+        return;
+    }
+    let rows_per = rows.div_ceil(workers);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (pc, oc) in proj
+            .chunks_mut(rows_per * n)
+            .zip(out.chunks_mut(rows_per * w_out))
+        {
+            s.spawn(move || f(pc, oc));
+        }
+    });
 }
 
 impl Backend for NativeBackend {
     fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
         debug_assert_eq!(xs.len(), rows * n);
         let p = self.params(n)?;
+        if rows == 0 {
+            return Ok(match op {
+                Op::CrossPolytope => Output::I32(Vec::new()),
+                _ => Output::F32(Vec::new()),
+            });
+        }
         match op {
             Op::Transform => {
                 let mut out = xs.to_vec();
-                for row in out.chunks_exact_mut(n) {
-                    Self::chain_row(p, row);
+                let workers = self.workers.min((rows / MIN_ROWS_PER_WORKER).max(1));
+                if workers <= 1 {
+                    Self::chain_batch(p, &mut out, n);
+                } else {
+                    let rows_per = rows.div_ceil(workers);
+                    std::thread::scope(|s| {
+                        for chunk in out.chunks_mut(rows_per * n) {
+                            s.spawn(move || Self::chain_batch(p, chunk, n));
+                        }
+                    });
                 }
                 Ok(Output::F32(out))
             }
             Op::Rff => {
-                let mut out = Vec::with_capacity(rows * 2 * n);
-                let mut buf = vec![0.0f32; n];
+                let mut proj = xs.to_vec();
+                let mut out = vec![0.0f32; rows * 2 * n];
+                let inv_sigma = p.base.inv_sigma;
                 let feat_scale = (1.0 / (n as f64).sqrt()) as f32;
-                for row in xs.chunks_exact(n) {
-                    buf.copy_from_slice(row);
-                    Self::chain_row(p, &mut buf);
-                    for v in &buf {
-                        out.push((v * p.base.inv_sigma).cos() * feat_scale);
+                shard_rows(&mut proj, &mut out, rows, n, 2 * n, self.workers, |pc, oc| {
+                    Self::chain_batch(p, pc, n);
+                    for (prow, orow) in pc.chunks_exact(n).zip(oc.chunks_exact_mut(2 * n)) {
+                        let (cos_half, sin_half) = orow.split_at_mut(n);
+                        for (o, v) in cos_half.iter_mut().zip(prow.iter()) {
+                            *o = (v * inv_sigma).cos() * feat_scale;
+                        }
+                        for (o, v) in sin_half.iter_mut().zip(prow.iter()) {
+                            *o = (v * inv_sigma).sin() * feat_scale;
+                        }
                     }
-                    for v in &buf {
-                        out.push((v * p.base.inv_sigma).sin() * feat_scale);
-                    }
-                }
+                });
                 Ok(Output::F32(out))
             }
             Op::CrossPolytope => {
-                let mut out = Vec::with_capacity(rows);
-                let mut buf = vec![0.0f32; n];
-                for row in xs.chunks_exact(n) {
-                    buf.copy_from_slice(row);
-                    Self::chain_row(p, &mut buf);
-                    out.push(crate::linalg::vecops::argmax_abs_signed(&buf) as i32);
-                }
+                let mut proj = xs.to_vec();
+                let mut out = vec![0i32; rows];
+                shard_rows(&mut proj, &mut out, rows, n, 1, self.workers, |pc, oc| {
+                    Self::chain_batch(p, pc, n);
+                    for (prow, o) in pc.chunks_exact(n).zip(oc.iter_mut()) {
+                        *o = crate::linalg::vecops::argmax_abs_signed(prow) as i32;
+                    }
+                });
                 Ok(Output::I32(out))
             }
         }
@@ -342,6 +408,31 @@ mod tests {
                 .unwrap();
             assert_eq!(single.as_f32().unwrap(), &batch[r * n..(r + 1) * n]);
         }
+    }
+
+    #[test]
+    fn worker_counts_agree_bitwise_for_all_ops() {
+        let n = 64;
+        let rows = 41; // deliberately not a multiple of any worker count
+        let xs = Rng::new(9).gaussian_vec(rows * n);
+        let serial = NativeBackend::with_workers(&[n], 1.5, 2, 1);
+        for op in [Op::Transform, Op::Rff, Op::CrossPolytope] {
+            let want = serial.run_batch(op, n, rows, &xs).unwrap();
+            for workers in [2usize, 4] {
+                let be = NativeBackend::with_workers(&[n], 1.5, 2, workers);
+                let got = be.run_batch(op, n, rows, &xs).unwrap();
+                assert_eq!(got, want, "op={op} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let be = NativeBackend::new(&[32], 1.0, 1);
+        let out = be.run_batch(Op::Transform, 32, 0, &[]).unwrap();
+        assert_eq!(out.as_f32().unwrap().len(), 0);
+        let out = be.run_batch(Op::CrossPolytope, 32, 0, &[]).unwrap();
+        assert_eq!(out.as_i32().unwrap().len(), 0);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! [Ailon–Chazelle, Ailon–Liberty, Vybíral] that the TripleSpin family
 //! subsumes (all those constructions are members).
 
-use crate::linalg::vecops::{euclidean, pad_to};
+use crate::linalg::vecops::euclidean;
+use crate::linalg::Workspace;
 use crate::transform::{make, Family, Transform};
 use crate::util::rng::Rng;
 
@@ -37,14 +38,22 @@ impl Jlt {
         self.k
     }
 
-    /// Embed one vector.
-    pub fn embed(&self, x: &[f32]) -> Vec<f32> {
-        let n_pad = self.transform.dim_in();
-        let mut y = self.transform.apply(&pad_to(x, n_pad));
-        for v in y.iter_mut() {
+    /// Embed one vector into `out` (`out.len() == dim_out()`), all scratch
+    /// drawn from `ws` — the zero-allocation path.
+    pub fn embed_into(&self, x: &[f32], out: &mut [f32], ws: &mut Workspace) {
+        debug_assert_eq!(out.len(), self.k);
+        self.transform.apply_padded_into(x, out, ws);
+        for v in out.iter_mut() {
             *v *= self.scale;
         }
-        y
+    }
+
+    /// Embed one vector. Thin allocating wrapper over [`Jlt::embed_into`].
+    pub fn embed(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k];
+        let mut ws = Workspace::new();
+        self.embed_into(x, &mut out, &mut ws);
+        out
     }
 
     /// The number of dimensions the classic JL lemma prescribes for `m`
@@ -57,7 +66,13 @@ impl Jlt {
 /// Worst-case pairwise distance distortion of an embedding over a point
 /// set: `max |  ||f(x)-f(y)|| / ||x-y||  - 1 |`.
 pub fn max_distortion(jlt: &Jlt, points: &[Vec<f32>]) -> f64 {
-    let embedded: Vec<Vec<f32>> = points.iter().map(|p| jlt.embed(p)).collect();
+    // one workspace + one flat output matrix reused across all embeddings
+    let k = jlt.dim_out();
+    let mut embedded = vec![0.0f32; points.len() * k];
+    let mut ws = Workspace::new();
+    for (p, dst) in points.iter().zip(embedded.chunks_exact_mut(k)) {
+        jlt.embed_into(p, dst, &mut ws);
+    }
     let mut worst = 0.0f64;
     for i in 0..points.len() {
         for j in i + 1..points.len() {
@@ -65,7 +80,7 @@ pub fn max_distortion(jlt: &Jlt, points: &[Vec<f32>]) -> f64 {
             if orig < 1e-9 {
                 continue;
             }
-            let emb = euclidean(&embedded[i], &embedded[j]);
+            let emb = euclidean(&embedded[i * k..(i + 1) * k], &embedded[j * k..(j + 1) * k]);
             worst = worst.max((emb / orig - 1.0).abs());
         }
     }

@@ -5,7 +5,8 @@
 //! features; the angular kernel uses sign features (a PNG with `f = sign`);
 //! the arc-cosine kernel uses `√2·ReLU` features.
 
-use crate::linalg::vecops::pad_to;
+use crate::linalg::workspace::MIN_ROWS_PER_WORKER;
+use crate::linalg::{Workspace, WorkspacePool};
 use crate::transform::Transform;
 
 /// The nonlinearity / kernel selector.
@@ -58,43 +59,110 @@ impl FeatureMap {
         self.kind
     }
 
-    /// Compute `Φ(x)`. Inputs shorter than `dim_in()` are zero-padded
-    /// (Hadamard families need power-of-two dims).
-    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+    /// Compute `Φ(x)` into `out` (`out.len() == dim_features()`), drawing
+    /// every intermediate buffer from `ws` — the zero-allocation hot path.
+    /// Inputs shorter than `dim_in()` are zero-padded (Hadamard families
+    /// need power-of-two dims).
+    pub fn features_into(&self, x: &[f32], out: &mut [f32], ws: &mut Workspace) {
         let n = self.transform.dim_in();
         assert!(x.len() <= n, "input dim {} exceeds transform dim {n}", x.len());
-        let proj = if x.len() == n {
-            self.transform.apply(x)
-        } else {
-            self.transform.apply(&pad_to(x, n))
-        };
+        debug_assert_eq!(out.len(), self.dim_features());
+        let k = self.transform.dim_out();
+        let mut proj = ws.take_f32(k);
+        self.transform.apply_padded_into(x, &mut proj, ws);
+        self.nonlin_into(&proj, out);
+        ws.put_f32(proj);
+    }
+
+    /// Pointwise nonlinearity stage: `proj` rows of `dim_out()` to feature
+    /// rows of `dim_features()`.
+    fn nonlin_into(&self, proj: &[f32], out: &mut [f32]) {
         let k = proj.len();
         match self.kind {
             FeatureKind::GaussianRff => {
+                debug_assert_eq!(out.len(), 2 * k);
                 let scale = (1.0 / k as f64).sqrt() as f32;
                 let inv_sigma = (1.0 / self.sigma) as f32;
-                let mut out = Vec::with_capacity(2 * k);
-                for v in &proj {
-                    let t = v * inv_sigma;
-                    out.push(t.cos() * scale);
+                let (cos_half, sin_half) = out.split_at_mut(k);
+                for (o, v) in cos_half.iter_mut().zip(proj) {
+                    *o = (v * inv_sigma).cos() * scale;
                 }
-                for v in &proj {
-                    let t = v * inv_sigma;
-                    out.push(t.sin() * scale);
+                for (o, v) in sin_half.iter_mut().zip(proj) {
+                    *o = (v * inv_sigma).sin() * scale;
                 }
-                out
             }
             FeatureKind::Angular => {
                 let scale = (1.0 / k as f64).sqrt() as f32;
-                proj.iter()
-                    .map(|v| if *v >= 0.0 { scale } else { -scale })
-                    .collect()
+                for (o, v) in out.iter_mut().zip(proj) {
+                    *o = if *v >= 0.0 { scale } else { -scale };
+                }
             }
             FeatureKind::ArcCosine1 => {
                 let scale = (2.0 / k as f64).sqrt() as f32;
-                proj.iter().map(|v| v.max(0.0) * scale).collect()
+                for (o, v) in out.iter_mut().zip(proj) {
+                    *o = v.max(0.0) * scale;
+                }
             }
         }
+    }
+
+    /// Compute `Φ(x)`. Thin allocating wrapper over
+    /// [`FeatureMap::features_into`].
+    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim_features()];
+        let mut ws = Workspace::new();
+        self.features_into(x, &mut out, &mut ws);
+        out
+    }
+
+    /// Batch-first feature map: `xs` holds `rows` row-major inputs of
+    /// `dim_in()` (already padded), `out` receives `rows` feature rows. The
+    /// projection runs through the transform's parallel batch engine.
+    pub fn features_batch_into(&self, xs: &[f32], out: &mut [f32], pool: &mut WorkspacePool) {
+        let n = self.transform.dim_in();
+        debug_assert_eq!(xs.len() % n, 0);
+        let rows = xs.len() / n;
+        let d = self.dim_features();
+        debug_assert_eq!(out.len(), rows * d);
+        let k = self.transform.dim_out();
+        let mut proj = pool.slot(0).take_f32(rows * k);
+        self.transform.apply_batch_into(xs, &mut proj, pool);
+        // pointwise stage sharded too: for GaussianRff the cos/sin pass is
+        // comparable to the projection itself, so leaving it serial would
+        // give back half the multi-core win
+        let workers = pool.workers().min((rows / MIN_ROWS_PER_WORKER).max(1));
+        if workers <= 1 {
+            for (prow, orow) in proj.chunks_exact(k).zip(out.chunks_exact_mut(d)) {
+                self.nonlin_into(prow, orow);
+            }
+        } else {
+            let rows_per = rows.div_ceil(workers);
+            let proj_ref: &[f32] = &proj;
+            std::thread::scope(|s| {
+                for (pc, oc) in proj_ref
+                    .chunks(rows_per * k)
+                    .zip(out.chunks_mut(rows_per * d))
+                {
+                    s.spawn(move || {
+                        for (prow, orow) in pc.chunks_exact(k).zip(oc.chunks_exact_mut(d)) {
+                            self.nonlin_into(prow, orow);
+                        }
+                    });
+                }
+            });
+        }
+        pool.slot(0).put_f32(proj);
+    }
+
+    /// Allocating wrapper over [`FeatureMap::features_batch_into`].
+    pub fn features_batch(&self, xs: &[f32]) -> Vec<f32> {
+        let n = self.transform.dim_in();
+        debug_assert_eq!(xs.len() % n, 0);
+        let rows = xs.len() / n;
+        let mut out = vec![0.0f32; rows * self.dim_features()];
+        let mut pool = WorkspacePool::from_env();
+        self.features_batch_into(xs, &mut out, &mut pool);
+        out
     }
 
     /// Approximate kernel value `Φ(x)ᵀΦ(y)`.
@@ -185,6 +253,31 @@ mod tests {
         let tr2 = make(Family::Hd3, 48, n, n, &mut Rng::new(1));
         let fm2 = FeatureMap::new(tr2, FeatureKind::Angular, 1.0);
         assert_eq!(fm2.dim_features(), 48);
+    }
+
+    #[test]
+    fn batch_features_match_rowwise_bitwise() {
+        let n = 32;
+        let rows = 40; // enough rows for the sharded nonlinearity path
+        for kind in [
+            FeatureKind::GaussianRff,
+            FeatureKind::Angular,
+            FeatureKind::ArcCosine1,
+        ] {
+            let tr = make(Family::Toeplitz, 48, n, 16, &mut Rng::new(9));
+            let fm = FeatureMap::new(tr, kind, 1.5);
+            let xs = Rng::new(10).gaussian_vec(rows * n);
+            let batch = fm.features_batch(&xs);
+            assert_eq!(batch.len(), rows * fm.dim_features());
+            for (r, row) in xs.chunks_exact(n).enumerate() {
+                let single = fm.features(row);
+                assert_eq!(
+                    &batch[r * fm.dim_features()..(r + 1) * fm.dim_features()],
+                    &single[..],
+                    "{kind:?} row {r}"
+                );
+            }
+        }
     }
 
     #[test]

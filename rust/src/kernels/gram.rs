@@ -4,15 +4,16 @@
 //! `K̃[i][j] = Φ(p_i)ᵀΦ(p_j)` the feature-map approximation.
 
 use super::features::FeatureMap;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Workspace};
 
-/// Feature matrix `Φ ∈ R^{N x D}`: one row per point.
+/// Feature matrix `Φ ∈ R^{N x D}`: one row per point, computed through the
+/// zero-allocation path with one workspace reused across all points.
 pub fn feature_matrix(map: &FeatureMap, points: &[Vec<f32>]) -> Mat {
     let d = map.dim_features();
     let mut out = Mat::zeros(points.len(), d);
+    let mut ws = Workspace::new();
     for (i, p) in points.iter().enumerate() {
-        let f = map.features(p);
-        out.data[i * d..(i + 1) * d].copy_from_slice(&f);
+        map.features_into(p, &mut out.data[i * d..(i + 1) * d], &mut ws);
     }
     out
 }

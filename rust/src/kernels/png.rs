@@ -10,7 +10,8 @@
 //! [`PngSum`] mixes components with weights `α_k`, giving the library's
 //! "virtually all kernels" surface.
 
-use crate::linalg::vecops::{dot, pad_to};
+use crate::linalg::vecops::dot;
+use crate::linalg::Workspace;
 use crate::transform::Transform;
 
 /// Pointwise nonlinearity choices for a PNG component.
@@ -83,29 +84,44 @@ impl PngComponent {
         self.transform.dim_out()
     }
 
-    /// Feature vector `(1/√k) f(Gx + μᵀx·1)` — dot of two of these is the
-    /// Monte-Carlo PNG estimate.
-    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+    /// Feature vector `(1/√k) f(Gx + μᵀx·1)` into `out`
+    /// (`out.len() == dim_features()`), all scratch drawn from `ws` — dot of
+    /// two of these is the Monte-Carlo PNG estimate.
+    pub fn features_into(&self, x: &[f32], out: &mut [f32], ws: &mut Workspace) {
         let n = self.transform.dim_in();
-        // σ ⊙ x (diagonal Σ absorbed into the input)
-        let mut xs = x.to_vec();
+        assert!(x.len() <= n, "input dim {} exceeds transform dim {n}", x.len());
+        let k = self.transform.dim_out();
+        debug_assert_eq!(out.len(), k);
+        // σ ⊙ x, zero-padded to n (diagonal Σ absorbed into the input)
+        let mut xs = ws.take_f32(n); // zeroed by take_f32
+        xs[..x.len()].copy_from_slice(x);
         if let Some(sig) = &self.sigma {
             for (v, s) in xs.iter_mut().zip(sig) {
                 *v *= *s;
             }
         }
-        let xs = if xs.len() == n { xs } else { pad_to(&xs, n) };
-        let proj = self.transform.apply(&xs);
-        let k = proj.len();
+        let mut proj = ws.take_f32(k);
+        self.transform.apply_into(&xs, &mut proj, ws);
+        // μᵀx over the zero-padded input == μ[..len]ᵀ x
         let mu_dot = self
             .mu
             .as_ref()
-            .map(|m| dot(m, &pad_to(x, n)) as f32)
+            .map(|m| dot(&m[..x.len()], x) as f32)
             .unwrap_or(0.0);
         let scale = (1.0 / k as f64).sqrt() as f32;
-        proj.iter()
-            .map(|v| self.f.eval(v + mu_dot) * scale)
-            .collect()
+        for (o, v) in out.iter_mut().zip(&proj) {
+            *o = self.f.eval(v + mu_dot) * scale;
+        }
+        ws.put_f32(proj);
+        ws.put_f32(xs);
+    }
+
+    /// Allocating wrapper over [`PngComponent::features_into`].
+    pub fn features(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim_features()];
+        let mut ws = Workspace::new();
+        self.features_into(x, &mut out, &mut ws);
+        out
     }
 
     /// Monte-Carlo estimate of the PNG kernel.

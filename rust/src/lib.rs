@@ -11,10 +11,26 @@
 //! `O(mn)` to `O(n)` (or just random bits for the fully discrete chain),
 //! with provably small accuracy loss.
 //!
+//! ## Execution engine
+//!
+//! The hot path is **zero-allocation and batch-first**. Every
+//! [`transform::Transform`] computes through
+//! [`transform::Transform::apply_into`], drawing all scratch from a reused
+//! [`linalg::Workspace`]; batches go through
+//! [`transform::Transform::apply_batch_into`], which runs each family's
+//! batch-level kernel (level-major cache-blocked FWHT butterflies, FFT
+//! `ConvPlan` scratch reuse across rows) and shards rows over
+//! `std::thread::scope` workers — one pooled workspace per worker,
+//! env-tunable via `TS_WORKERS`. The allocating `apply` / `apply_batch`
+//! remain as thin wrappers. `cargo bench --bench transform_throughput`
+//! records the per-row-loop vs batch-engine speedups in
+//! `BENCH_transform_throughput.json`.
+//!
 //! ## Layout
 //!
 //! * [`util`] / [`linalg`] — substrates: seeded RNG, JSON, bench/property
-//!   harnesses; FWHT, FFT-based structured matvecs, dense baselines.
+//!   harnesses; FWHT, FFT-based structured matvecs, dense baselines, and
+//!   the [`linalg::Workspace`] / [`linalg::WorkspacePool`] scratch arenas.
 //! * [`transform`] — the TripleSpin family itself (the paper's §3),
 //!   including block stacking (§3.1).
 //! * [`kernels`] — random-feature kernel approximation (paper §4):

@@ -130,19 +130,30 @@ impl ConvPlan {
     /// `out = kernel ⊛ x` (circular).
     pub fn apply(&self, x: &[f64]) -> Vec<f64> {
         debug_assert_eq!(x.len(), self.n);
-        let mut xr = x.to_vec();
-        let mut xi = vec![0.0; self.n];
-        fft(&mut xr, &mut xi, false);
+        let mut re = x.to_vec();
+        let mut im = vec![0.0; self.n];
+        self.apply_in_place(&mut re, &mut im);
+        re
+    }
+
+    /// `re = kernel ⊛ re` (circular), in place. `im` is caller-provided
+    /// scratch of the same length, overwritten — the zero-allocation hot
+    /// path behind the circulant/Toeplitz/Hankel/skew batch kernels, which
+    /// reuse both buffers across every row of a batch.
+    pub fn apply_in_place(&self, re: &mut [f64], im: &mut [f64]) {
+        debug_assert_eq!(re.len(), self.n);
+        debug_assert_eq!(im.len(), self.n);
+        im.fill(0.0);
+        fft(re, im, false);
         for i in 0..self.n {
-            let (r, im) = (
-                xr[i] * self.kr[i] - xi[i] * self.ki[i],
-                xr[i] * self.ki[i] + xi[i] * self.kr[i],
+            let (r, m) = (
+                re[i] * self.kr[i] - im[i] * self.ki[i],
+                re[i] * self.ki[i] + im[i] * self.kr[i],
             );
-            xr[i] = r;
-            xi[i] = im;
+            re[i] = r;
+            im[i] = m;
         }
-        fft(&mut xr, &mut xi, true);
-        xr
+        fft(re, im, true);
     }
 }
 

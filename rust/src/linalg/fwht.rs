@@ -60,20 +60,150 @@ pub fn fwht(x: &mut [f32]) {
 
 /// In-place L2-normalized FWHT: `x = H x` with `H = H̃ / sqrt(n)` (an
 /// isometry, `H H = I`).
+///
+/// The `1/√n` scaling is folded into the **last butterfly level** instead of
+/// a separate full pass over the buffer — one fewer memory sweep per call,
+/// and bit-for-bit identical to `fwht` + scale (the multiply sees the exact
+/// same operand either way).
 pub fn fwht_normalized(x: &mut [f32]) {
     let n = x.len();
-    fwht(x);
+    debug_assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    if n <= 1 {
+        return;
+    }
     let s = 1.0 / (n as f32).sqrt();
-    for v in x.iter_mut() {
-        *v *= s;
+    if n == 2 {
+        let (a, b) = (x[0], x[1]);
+        x[0] = (a + b) * s;
+        x[1] = (a - b) * s;
+        return;
+    }
+    let mut h;
+    if n >= 8 {
+        // fused radix-4 head (levels h=1,2) — safe here because the last
+        // level, which carries the scale, is h = n/2 >= 4
+        let mut i = 0;
+        while i < n {
+            let (a, b, c, d) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+            let (ab0, ab1) = (a + b, a - b);
+            let (cd0, cd1) = (c + d, c - d);
+            x[i] = ab0 + cd0;
+            x[i + 1] = ab1 + cd1;
+            x[i + 2] = ab0 - cd0;
+            x[i + 3] = ab1 - cd1;
+            i += 4;
+        }
+        h = 4;
+    } else {
+        // n == 4: plain h=1 level; h=2 is the fused last level below
+        let mut i = 0;
+        while i < n {
+            let (a, b) = (x[i], x[i + 1]);
+            x[i] = a + b;
+            x[i + 1] = a - b;
+            i += 2;
+        }
+        h = 2;
+    }
+    while h < n / 2 {
+        let mut i = 0;
+        while i < n {
+            let (head, tail) = x[i..i + 2 * h].split_at_mut(h);
+            for (u, v) in head.iter_mut().zip(tail.iter_mut()) {
+                let a = *u;
+                let b = *v;
+                *u = a + b;
+                *v = a - b;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+    // last level (h = n/2, one block spanning the whole buffer) with the
+    // 1/√n normalization fused into the butterfly outputs
+    debug_assert_eq!(h, n / 2);
+    let (head, tail) = x.split_at_mut(n / 2);
+    for (u, v) in head.iter_mut().zip(tail.iter_mut()) {
+        let a = *u;
+        let b = *v;
+        *u = (a + b) * s;
+        *v = (a - b) * s;
+    }
+}
+
+/// Unnormalized FWHT over every row of a row-major `rows x n` batch,
+/// bit-for-bit identical to calling [`fwht`] on each row.
+///
+/// Rows are processed in L2-sized blocks; within a block every butterfly
+/// level runs across all of the block's rows before advancing to the next
+/// level, so one level's add/sub pattern streams through the block instead
+/// of re-deriving the full per-row schedule once per row. This is the
+/// batch kernel under every Hadamard-based family's `apply_batch_into`.
+pub fn fwht_batch(data: &mut [f32], n: usize) {
+    if n <= 1 || data.is_empty() {
+        return;
+    }
+    debug_assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    debug_assert_eq!(data.len() % n, 0);
+    // 64 Ki floats = 256 KiB per block: comfortably inside a typical L2.
+    let rows_per_block = ((1usize << 16) / n).max(1);
+    for block in data.chunks_mut(rows_per_block * n) {
+        fwht_block_level_major(block, n);
+    }
+}
+
+/// All butterfly levels over one block of rows, level-major.
+fn fwht_block_level_major(block: &mut [f32], n: usize) {
+    if n == 2 {
+        for row in block.chunks_exact_mut(2) {
+            let (a, b) = (row[0], row[1]);
+            row[0] = a + b;
+            row[1] = a - b;
+        }
+        return;
+    }
+    // fused h=1 + h=2 head across all rows (matches `fwht`'s radix-4 head)
+    for row in block.chunks_exact_mut(n) {
+        let mut i = 0;
+        while i < n {
+            let (a, b, c, d) = (row[i], row[i + 1], row[i + 2], row[i + 3]);
+            let (ab0, ab1) = (a + b, a - b);
+            let (cd0, cd1) = (c + d, c - d);
+            row[i] = ab0 + cd0;
+            row[i + 1] = ab1 + cd1;
+            row[i + 2] = ab0 - cd0;
+            row[i + 3] = ab1 - cd1;
+            i += 4;
+        }
+    }
+    let mut h = 4;
+    while h < n {
+        for row in block.chunks_exact_mut(n) {
+            let mut i = 0;
+            while i < n {
+                let (head, tail) = row[i..i + 2 * h].split_at_mut(h);
+                for (u, v) in head.iter_mut().zip(tail.iter_mut()) {
+                    let a = *u;
+                    let b = *v;
+                    *u = a + b;
+                    *v = a - b;
+                }
+                i += h * 2;
+            }
+        }
+        h *= 2;
     }
 }
 
 /// Apply the normalized FWHT to every row of a row-major `rows x n` batch.
 pub fn fwht_batch_normalized(data: &mut [f32], n: usize) {
     debug_assert_eq!(data.len() % n, 0);
-    for row in data.chunks_exact_mut(n) {
-        fwht_normalized(row);
+    fwht_batch(data, n);
+    if n > 1 {
+        let s = 1.0 / (n as f32).sqrt();
+        for v in data.iter_mut() {
+            *v *= s;
+        }
     }
 }
 
@@ -200,6 +330,63 @@ mod tests {
         for (i, s) in singles.iter().enumerate() {
             assert_eq!(&batch[i * n..(i + 1) * n], &s[..]);
         }
+    }
+
+    #[test]
+    fn unnormalized_batch_matches_rowwise_bitwise() {
+        for_all(16, |g| {
+            let n = g.pow2_in(1, 9);
+            let rows = g.usize_in(1, 12);
+            let mut batch = g.gaussian_vec(n * rows);
+            let expect: Vec<f32> = batch
+                .chunks_exact(n)
+                .flat_map(|r| {
+                    let mut v = r.to_vec();
+                    fwht(&mut v);
+                    v
+                })
+                .collect();
+            fwht_batch(&mut batch, n);
+            assert_eq!(batch, expect, "n={n} rows={rows}");
+        });
+    }
+
+    #[test]
+    fn batch_spanning_multiple_cache_blocks() {
+        // n = 8192 -> 8 rows per 256 KiB block; 20 rows forces 3 blocks.
+        let n = 8192;
+        let rows = 20;
+        let mut rng = Rng::new(77);
+        let mut batch = rng.gaussian_vec(n * rows);
+        let expect: Vec<f32> = batch
+            .chunks_exact(n)
+            .flat_map(|r| {
+                let mut v = r.to_vec();
+                fwht(&mut v);
+                v
+            })
+            .collect();
+        fwht_batch(&mut batch, n);
+        assert_eq!(batch, expect);
+    }
+
+    #[test]
+    fn normalized_fused_scale_matches_separate_pass() {
+        // fwht_normalized folds 1/√n into the last butterfly level; the
+        // result must be bit-for-bit what fwht + a scale pass produces.
+        for_all(24, |g| {
+            let n = g.pow2_in(0, 10);
+            let x = g.gaussian_vec(n);
+            let mut fused = x.clone();
+            fwht_normalized(&mut fused);
+            let mut two_pass = x;
+            fwht(&mut two_pass);
+            let s = 1.0 / (n as f32).sqrt();
+            for v in two_pass.iter_mut() {
+                *v *= s;
+            }
+            assert_eq!(fused, two_pass, "n={n}");
+        });
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Linear-algebra substrate: FWHT, FFT-based structured matvecs, dense
-//! matrices and small SPD solvers.
+//! matrices, small SPD solvers, and the reusable scratch workspaces behind
+//! the zero-allocation transform execution path.
 
 pub mod dense;
 pub mod fft;
 pub mod fwht;
 pub mod vecops;
+pub mod workspace;
 
 pub use dense::Mat;
+pub use workspace::{Workspace, WorkspacePool};

@@ -1,0 +1,173 @@
+//! Reusable scratch-buffer arenas for the zero-allocation execution path.
+//!
+//! Every [`crate::transform::Transform`] draws its intermediate buffers from
+//! a [`Workspace`] instead of allocating per call: after the first apply has
+//! warmed the pools (or [`crate::transform::Transform::make_workspace`] has
+//! pre-warmed them), the hot path performs no heap allocations at all.
+//!
+//! [`WorkspacePool`] holds one `Workspace` per batch worker so
+//! `apply_batch_into` can shard rows across `std::thread::scope` threads
+//! (gateway-batcher style), each worker reusing its own scratch across
+//! batches.
+//!
+//! Buffers are checked out by value ([`Workspace::take_f32`] /
+//! [`Workspace::take_f64`]) and returned with the matching `put_*`, which
+//! makes nested use (a stacked transform borrowing a block buffer while its
+//! blocks borrow FFT scratch) trivially safe. Check-outs are LIFO: as long
+//! as a call site takes and returns buffers in a consistent order, the same
+//! allocation is recycled every call.
+
+/// Minimum batch rows assigned to one worker before another thread is
+/// spawned — below this, thread-spawn latency dominates the kernel time.
+pub const MIN_ROWS_PER_WORKER: usize = 8;
+
+/// Grow-only pool of f32/f64 scratch buffers.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    f32_pool: Vec<Vec<f32>>,
+    f64_pool: Vec<Vec<f64>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Check out an f32 buffer of exactly `len` elements, all zero.
+    /// Reuses a pooled allocation when one is available.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut b = self.f32_pool.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, 0.0);
+        b
+    }
+
+    /// Return a buffer checked out with [`Workspace::take_f32`].
+    pub fn put_f32(&mut self, buf: Vec<f32>) {
+        self.f32_pool.push(buf);
+    }
+
+    /// Check out an f64 buffer of exactly `len` elements, all zero.
+    pub fn take_f64(&mut self, len: usize) -> Vec<f64> {
+        let mut b = self.f64_pool.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, 0.0);
+        b
+    }
+
+    /// Return a buffer checked out with [`Workspace::take_f64`].
+    pub fn put_f64(&mut self, buf: Vec<f64>) {
+        self.f64_pool.push(buf);
+    }
+}
+
+/// Batch-execution worker count: the `TS_WORKERS` env var when set (>= 1),
+/// otherwise `available_parallelism` capped at 8.
+pub fn worker_count_from_env() -> usize {
+    std::env::var("TS_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|w| *w >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+                .min(8)
+        })
+}
+
+/// One [`Workspace`] per batch worker, reused across `apply_batch_into`
+/// calls. Slots are created lazily and never shrink.
+#[derive(Debug)]
+pub struct WorkspacePool {
+    slots: Vec<Workspace>,
+    workers: usize,
+}
+
+impl WorkspacePool {
+    /// Pool targeting a fixed worker count (clamped to >= 1).
+    pub fn new(workers: usize) -> WorkspacePool {
+        WorkspacePool {
+            slots: Vec::new(),
+            workers: workers.max(1),
+        }
+    }
+
+    /// Pool sized by [`worker_count_from_env`].
+    pub fn from_env() -> WorkspacePool {
+        WorkspacePool::new(worker_count_from_env())
+    }
+
+    /// Target worker count (the actual count per batch is additionally
+    /// capped so each worker gets at least [`MIN_ROWS_PER_WORKER`] rows).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Mutable access to the first `k` per-worker workspaces.
+    pub fn slots_mut(&mut self, k: usize) -> &mut [Workspace] {
+        while self.slots.len() < k {
+            self.slots.push(Workspace::new());
+        }
+        &mut self.slots[..k]
+    }
+
+    /// Mutable access to one slot (created on demand).
+    pub fn slot(&mut self, i: usize) -> &mut Workspace {
+        &mut self.slots_mut(i + 1)[i]
+    }
+}
+
+impl Default for WorkspacePool {
+    fn default() -> Self {
+        WorkspacePool::from_env()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_returns_zeroed_exact_len() {
+        let mut ws = Workspace::new();
+        let a = ws.take_f32(7);
+        assert_eq!(a.len(), 7);
+        assert!(a.iter().all(|v| *v == 0.0));
+        let b = ws.take_f64(3);
+        assert_eq!(b.len(), 3);
+        ws.put_f64(b);
+        ws.put_f32(a);
+    }
+
+    #[test]
+    fn put_then_take_reuses_allocation() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_f32(16);
+        a[0] = 5.0;
+        let ptr = a.as_ptr();
+        ws.put_f32(a);
+        let b = ws.take_f32(16);
+        assert_eq!(b.as_ptr(), ptr, "same allocation must be recycled");
+        assert_eq!(b[0], 0.0, "recycled buffer must be re-zeroed");
+        ws.put_f32(b);
+    }
+
+    #[test]
+    fn pool_slots_are_distinct_and_persistent() {
+        let mut pool = WorkspacePool::new(3);
+        assert_eq!(pool.workers(), 3);
+        pool.slot(0).put_f32(vec![1.0; 4]);
+        assert_eq!(pool.slots_mut(3).len(), 3);
+        // slot 0 kept its pooled buffer; slot 1 starts empty
+        let a = pool.slot(0).take_f32(4);
+        assert_eq!(a.len(), 4);
+        pool.slot(0).put_f32(a);
+    }
+
+    #[test]
+    fn worker_count_at_least_one() {
+        assert!(worker_count_from_env() >= 1);
+        assert_eq!(WorkspacePool::new(0).workers(), 1);
+    }
+}

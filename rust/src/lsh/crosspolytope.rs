@@ -5,7 +5,8 @@
 //! not change the argmax, so the hash needs only one transform apply plus
 //! one linear scan.
 
-use crate::linalg::vecops::{argmax_abs_signed, pad_to};
+use crate::linalg::vecops::argmax_abs_signed;
+use crate::linalg::Workspace;
 use crate::transform::{make_square, Family, Transform};
 use crate::util::rng::Rng;
 
@@ -40,16 +41,23 @@ impl CrossPolytopeHash {
         2 * self.transform.dim_out()
     }
 
+    /// Hash a vector with caller-owned scratch — the zero-allocation path
+    /// the LSH index drives (one workspace shared across every table, hash
+    /// function and point).
+    pub fn hash_with(&self, x: &[f32], ws: &mut Workspace) -> usize {
+        let mut y = ws.take_f32(self.transform.dim_out());
+        self.transform.apply_padded_into(x, &mut y, ws);
+        let h = argmax_abs_signed(&y);
+        ws.put_f32(y);
+        h
+    }
+
     /// Hash a vector. The norm of `x` is irrelevant (hash is scale
-    /// invariant), matching the unit-sphere setting of the paper.
+    /// invariant), matching the unit-sphere setting of the paper. Thin
+    /// wrapper over [`CrossPolytopeHash::hash_with`].
     pub fn hash(&self, x: &[f32]) -> usize {
-        let n = self.transform.dim_in();
-        let y = if x.len() == n {
-            self.transform.apply(x)
-        } else {
-            self.transform.apply(&pad_to(x, n))
-        };
-        argmax_abs_signed(&y)
+        let mut ws = Workspace::new();
+        self.hash_with(x, &mut ws)
     }
 }
 

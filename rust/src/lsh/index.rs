@@ -6,6 +6,7 @@
 
 use super::crosspolytope::CrossPolytopeHash;
 use crate::linalg::vecops::euclidean;
+use crate::linalg::Workspace;
 use crate::transform::Family;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
@@ -17,11 +18,11 @@ struct Table {
 }
 
 impl Table {
-    fn key(&self, x: &[f32]) -> u64 {
+    fn key(&self, x: &[f32], ws: &mut Workspace) -> u64 {
         // combine the t sub-hashes into one 64-bit key
         let mut k = 0xcbf2_9ce4_8422_2325u64; // FNV offset basis
         for h in &self.hashes {
-            k ^= h.hash(x) as u64;
+            k ^= h.hash_with(x, ws) as u64;
             k = k.wrapping_mul(0x1000_0000_01b3);
         }
         k
@@ -53,9 +54,11 @@ impl LshIndex {
                 buckets: HashMap::new(),
             })
             .collect();
+        // one workspace reused across every (point, table, hash) insert
+        let mut ws = Workspace::new();
         for (i, p) in points.iter().enumerate() {
             for tb in tables.iter_mut() {
-                let k = tb.key(p);
+                let k = tb.key(p, &mut ws);
                 tb.buckets.entry(k).or_default().push(i);
             }
         }
@@ -74,8 +77,9 @@ impl LshIndex {
     pub fn candidates(&self, q: &[f32]) -> Vec<usize> {
         let mut seen = vec![false; self.points.len()];
         let mut out = Vec::new();
+        let mut ws = Workspace::new();
         for tb in &self.tables {
-            if let Some(ids) = tb.buckets.get(&tb.key(q)) {
+            if let Some(ids) = tb.buckets.get(&tb.key(q, &mut ws)) {
                 for &i in ids {
                     if !seen[i] {
                         seen[i] = true;

@@ -3,6 +3,13 @@
 //! The `xla` crate's handles are `Rc`-based (not `Send`), so all PJRT state
 //! lives on whatever thread constructs [`Executor`]; cross-thread access
 //! goes through [`super::service::RuntimeHandle`].
+//!
+//! **Offline build note:** the `xla` crate is not part of the offline
+//! vendor set, so PJRT execution is stubbed out: manifest parsing, input
+//! validation and the whole `Executor` surface compile and behave normally,
+//! but loading a non-empty artifact directory fails with a clear error and
+//! the native backend remains the execution path. Vendored `xla` back in,
+//! [`PjrtExecutable`] is the single seam to reconnect.
 
 use super::manifest::{ArtifactSpec, Manifest};
 use crate::util::json::Json;
@@ -49,46 +56,51 @@ fn xerr<E: fmt::Display>(ctx: &str) -> impl FnOnce(E) -> ExecError + '_ {
     move |e| ExecError(format!("{ctx}: {e}"))
 }
 
+/// Stand-in for `xla::PjRtLoadedExecutable` while the `xla` crate is absent
+/// from the offline vendor set. Never constructed — [`Executor::load_dir`]
+/// refuses non-empty artifact directories — so [`Executor::run`] can only
+/// ever report the stub error through it.
+#[allow(dead_code)] // constructed only once the real `xla` crate returns
+struct PjrtExecutable;
+
+impl PjrtExecutable {
+    fn execute(&self, name: &str) -> Result<Output, ExecError> {
+        Err(ExecError(format!(
+            "cannot execute '{name}': PJRT support is not compiled into \
+             this build (the `xla` crate is absent from the offline vendor \
+             set) — use the native backend"
+        )))
+    }
+}
+
 struct Loaded {
     spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    exe: PjrtExecutable,
 }
 
 /// Owns the PJRT client and all compiled executables.
 pub struct Executor {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
     models: HashMap<String, Loaded>,
     manifest: Manifest,
 }
 
 impl Executor {
     /// Load every artifact in `<dir>/manifest.json` and compile it on the
-    /// PJRT CPU client.
+    /// PJRT CPU client. In this offline build, artifact compilation is
+    /// unavailable: an empty manifest loads fine (so `info` and the service
+    /// plumbing keep working), a non-empty one is refused up front.
     pub fn load_dir(dir: &Path) -> Result<Executor, ExecError> {
         let manifest = Manifest::load(dir).map_err(|e| ExecError(e.to_string()))?;
-        let client = xla::PjRtClient::cpu().map_err(xerr("PjRtClient::cpu"))?;
-        let mut models = HashMap::new();
-        for spec in &manifest.artifacts {
-            let path = dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str()
-                    .ok_or_else(|| ExecError(format!("bad path {}", path.display())))?,
-            )
-            .map_err(xerr("parse HLO text"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(xerr("compile"))?;
-            models.insert(
-                spec.name.clone(),
-                Loaded {
-                    spec: spec.clone(),
-                    exe,
-                },
-            );
+        if let Some(spec) = manifest.artifacts.first() {
+            return Err(ExecError(format!(
+                "cannot compile artifact '{}': PJRT support is not compiled \
+                 into this build (the `xla` crate is absent from the offline \
+                 vendor set) — use the native backend",
+                spec.name
+            )));
         }
         Ok(Executor {
-            client,
-            models,
+            models: HashMap::new(),
             manifest,
         })
     }
@@ -122,7 +134,6 @@ impl Executor {
                 inputs.len()
             )));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (buf, shape) in inputs.iter().zip(&spec.inputs) {
             let numel: usize = shape.iter().product();
             if buf.len() != numel {
@@ -132,24 +143,8 @@ impl Executor {
                     shape
                 )));
             }
-            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
-            let lit = xla::Literal::vec1(buf)
-                .reshape(&dims)
-                .map_err(xerr("reshape literal"))?;
-            literals.push(lit);
         }
-        let result = loaded
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(xerr("execute"))?[0][0]
-            .to_literal_sync()
-            .map_err(xerr("to_literal"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().map_err(xerr("to_tuple1"))?;
-        match spec.output_dtype.as_str() {
-            "i32" => Ok(Output::I32(out.to_vec::<i32>().map_err(xerr("to_vec i32"))?)),
-            _ => Ok(Output::F32(out.to_vec::<f32>().map_err(xerr("to_vec f32"))?)),
-        }
+        loaded.exe.execute(name)
     }
 
     /// Run the artifact's golden vectors (if present): returns

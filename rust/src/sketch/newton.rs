@@ -10,8 +10,7 @@
 use super::logistic::{gram_t, LogisticProblem};
 use crate::linalg::dense::solve_spd;
 use crate::linalg::fwht::next_pow2;
-use crate::linalg::vecops::pad_to;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, WorkspacePool};
 use crate::transform::{make, Family, Transform};
 use crate::util::rng::Rng;
 
@@ -110,17 +109,23 @@ pub fn sketch_apply(kind: SketchKind, b: &Mat, m: usize, rng: &mut Rng) -> Mat {
             let np = next_pow2(n);
             let t: Box<dyn Transform> = make(f, m, np, np.min(m.max(1)), rng);
             let scale = (1.0 / m as f64).sqrt() as f32;
-            // sketch each column: O(d · n log n)
-            let mut out = Mat::zeros(m, d);
-            let mut col = vec![0.0f32; n];
+            // batch-first: the d columns of B become the d rows of one
+            // zero-padded batch, sketched in a single multi-worker
+            // apply_batch_into sweep — O(d · n log n) with no per-column
+            // allocation.
+            let mut cols = vec![0.0f32; d * np];
             for j in 0..d {
                 for i in 0..n {
-                    col[i] = b.at(i, j);
+                    cols[j * np + i] = b.at(i, j);
                 }
-                let padded = pad_to(&col, np);
-                let y = t.apply(&padded);
+            }
+            let mut proj = vec![0.0f32; d * m];
+            let mut pool = WorkspacePool::from_env();
+            t.apply_batch_into(&cols, &mut proj, &mut pool);
+            let mut out = Mat::zeros(m, d);
+            for j in 0..d {
                 for i in 0..m {
-                    out.data[i * d + j] = y[i] * scale;
+                    out.data[i * d + j] = proj[j * m + i] * scale;
                 }
             }
             out

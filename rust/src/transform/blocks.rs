@@ -7,6 +7,7 @@
 //! structured (one block), `m = 1` degenerates to fully independent rows.
 
 use super::{make_square, Family, Transform};
+use crate::linalg::Workspace;
 use crate::util::rng::Rng;
 
 /// `k x n` transform assembled from independent square blocks.
@@ -67,18 +68,50 @@ impl Transform for StackedTransform {
         self.k
     }
 
-    fn apply(&self, x: &[f32]) -> Vec<f32> {
+    fn apply_into(&self, x: &[f32], out: &mut [f32], ws: &mut Workspace) {
         debug_assert_eq!(x.len(), self.n);
-        let mut out = Vec::with_capacity(self.k);
+        debug_assert_eq!(out.len(), self.k);
+        // One reused square scratch row: each block writes its full output
+        // there and only the kept (truncated) prefix is copied out — no
+        // per-block allocation, no materialized n×n block results.
+        let mut buf = ws.take_f32(self.n);
+        let mut off = 0;
         for b in &self.blocks {
-            let y = b.apply(x);
-            let take = self.block_rows.min(self.k - out.len());
-            out.extend_from_slice(&y[..take]);
-            if out.len() == self.k {
+            b.apply_into(x, &mut buf, ws);
+            let take = self.block_rows.min(self.k - off);
+            out[off..off + take].copy_from_slice(&buf[..take]);
+            off += take;
+            if off == self.k {
                 break;
             }
         }
-        out
+        ws.put_f32(buf);
+    }
+
+    /// Batch kernel: iterate **blocks outer, rows inner**, so each square
+    /// block's parameters stay hot while its batch kernel (level-major FWHT
+    /// / FFT scratch reuse) sweeps all rows; truncated prefixes are then
+    /// scattered into the interleaved output rows.
+    fn apply_batch_serial(&self, xs: &[f32], out: &mut [f32], ws: &mut Workspace) {
+        let n = self.n;
+        let k = self.k;
+        debug_assert_eq!(xs.len() % n, 0);
+        let rows = xs.len() / n;
+        debug_assert_eq!(out.len(), rows * k);
+        let mut buf = ws.take_f32(rows * n);
+        let mut off = 0;
+        for b in &self.blocks {
+            b.apply_batch_serial(xs, &mut buf, ws);
+            let take = self.block_rows.min(k - off);
+            for (r, brow) in buf.chunks_exact(n).enumerate() {
+                out[r * k + off..r * k + off + take].copy_from_slice(&brow[..take]);
+            }
+            off += take;
+            if off == k {
+                break;
+            }
+        }
+        ws.put_f32(buf);
     }
 
     fn name(&self) -> &'static str {

@@ -7,8 +7,9 @@
 
 use super::Transform;
 use crate::linalg::fft::ConvPlan;
-use crate::linalg::fwht::fwht;
-use crate::linalg::vecops::scale_by;
+use crate::linalg::fwht::{fwht, fwht_batch};
+use crate::linalg::vecops::{scale_by, scale_rows};
+use crate::linalg::Workspace;
 use crate::util::rng::Rng;
 
 /// Top-block structure.
@@ -27,7 +28,9 @@ pub struct StructuredGaussian {
     d2: Vec<f32>,
     /// Precomputed spectrum of the circulant embedding of `G_top`.
     plan: ConvPlan,
-    kind: TopKind,
+    /// Hankel is reduced to Toeplitz on the *reversed* input — the only
+    /// kind-specific behavior left at apply time.
+    reverse_input: bool,
     /// Stored Gaussian parameter count (for `param_bits`).
     gaussians: usize,
     name: &'static str,
@@ -81,10 +84,28 @@ impl StructuredGaussian {
             d1,
             d2,
             plan,
-            kind,
+            reverse_input: kind == TopKind::Hankel,
             gaussians,
             name,
             inv_sqrt_n: 1.0 / (n as f32).sqrt(),
+        }
+    }
+
+    /// Promote the FWHT stage output to the f64 FFT buffer, fusing the
+    /// `1/√n · d2` scaling (and the Hankel input reversal). `re[n..]` is
+    /// the circulant-embedding padding and must be zeroed by the caller.
+    #[inline]
+    fn load_fft_input(&self, stage: &[f32], re: &mut [f64]) {
+        let n = self.n;
+        if self.reverse_input {
+            for i in 0..n {
+                let j = n - 1 - i;
+                re[i] = (stage[j] * self.d2[j] * self.inv_sqrt_n) as f64;
+            }
+        } else {
+            for i in 0..n {
+                re[i] = (stage[i] * self.d2[i] * self.inv_sqrt_n) as f64;
+            }
         }
     }
 
@@ -128,33 +149,55 @@ impl Transform for StructuredGaussian {
         self.n
     }
 
-    fn apply(&self, x: &[f32]) -> Vec<f32> {
+    fn apply_into(&self, x: &[f32], out: &mut [f32], ws: &mut Workspace) {
         debug_assert_eq!(x.len(), self.n);
-        // D1, then unnormalized FWHT; the 1/√n normalization is fused into
-        // the D2 pass below (one multiply per element instead of two).
-        let mut v = x.to_vec();
-        scale_by(&mut v, &self.d1);
-        fwht(&mut v);
-        // promote to f64 for the FFT top block, fusing 1/√n · d2
+        debug_assert_eq!(out.len(), self.n);
         let n = self.n;
+        // `out` doubles as the f32 stage buffer: D1, then unnormalized FWHT;
+        // the 1/√n normalization is fused into the D2 promotion below.
+        out.copy_from_slice(x);
+        scale_by(out, &self.d1);
+        fwht(out);
+        // FFT top block on reused workspace scratch (`take_*` zeroes, so the
+        // embedding padding `re[n..]` is already clear).
         let m = self.plan.len();
-        let mut buf = vec![0.0f64; m];
-        match self.kind {
-            TopKind::Hankel => {
-                // reversed input for the Hankel-as-Toeplitz reduction
-                for i in 0..n {
-                    let j = n - 1 - i;
-                    buf[i] = (v[j] * self.d2[j] * self.inv_sqrt_n) as f64;
-                }
+        let mut re = ws.take_f64(m);
+        let mut im = ws.take_f64(m);
+        self.load_fft_input(out, &mut re);
+        self.plan.apply_in_place(&mut re, &mut im);
+        for i in 0..n {
+            out[i] = re[i] as f32;
+        }
+        ws.put_f64(im);
+        ws.put_f64(re);
+    }
+
+    /// Batch kernel: the whole sub-batch goes through `D1` + FWHT at batch
+    /// level (level-major butterflies), then the FFT top block runs per row
+    /// with the `ConvPlan` scratch buffers reused across every row.
+    fn apply_batch_serial(&self, xs: &[f32], out: &mut [f32], ws: &mut Workspace) {
+        debug_assert_eq!(xs.len(), out.len());
+        let n = self.n;
+        out.copy_from_slice(xs);
+        scale_rows(out, &self.d1);
+        fwht_batch(out, n);
+        let m = self.plan.len();
+        let mut re = ws.take_f64(m);
+        let mut im = ws.take_f64(m);
+        for row in out.chunks_exact_mut(n) {
+            self.load_fft_input(row, &mut re);
+            // re-zero the embedding padding the previous row's convolution
+            // left behind
+            for v in re[n..].iter_mut() {
+                *v = 0.0;
             }
-            _ => {
-                for i in 0..n {
-                    buf[i] = (v[i] * self.d2[i] * self.inv_sqrt_n) as f64;
-                }
+            self.plan.apply_in_place(&mut re, &mut im);
+            for i in 0..n {
+                row[i] = re[i] as f32;
             }
         }
-        let y = self.plan.apply(&buf);
-        y[..n].iter().map(|v| *v as f32).collect()
+        ws.put_f64(im);
+        ws.put_f64(re);
     }
 
     fn name(&self) -> &'static str {

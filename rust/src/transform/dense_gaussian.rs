@@ -4,7 +4,7 @@
 //! `time(G)/time(T)`, Figures 1/2/4's accuracy reference).
 
 use super::Transform;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Workspace};
 use crate::util::rng::Rng;
 
 /// Dense `m x n` matrix with i.i.d. `N(0,1)` entries.
@@ -34,8 +34,8 @@ impl Transform for DenseGaussian {
         self.mat.rows
     }
 
-    fn apply(&self, x: &[f32]) -> Vec<f32> {
-        self.mat.matvec(x)
+    fn apply_into(&self, x: &[f32], out: &mut [f32], _ws: &mut Workspace) {
+        self.mat.matvec_into(x, out);
     }
 
     fn name(&self) -> &'static str {

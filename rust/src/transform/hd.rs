@@ -11,8 +11,9 @@
 //! chain is `O(k · n log n)` with zero stored floats for the discrete case.
 
 use super::Transform;
-use crate::linalg::fwht::fwht;
-use crate::linalg::vecops::scale_by;
+use crate::linalg::fwht::{fwht, fwht_batch};
+use crate::linalg::vecops::{scale_by, scale_rows};
+use crate::linalg::Workspace;
 use crate::util::rng::Rng;
 
 /// Which distribution a diagonal's entries were drawn from.
@@ -27,14 +28,12 @@ pub enum DiagKind {
 /// `√n · H D_k ··· H D_1` chain transform (square, `n` a power of two).
 pub struct HdChain {
     n: usize,
-    /// Diagonals in application order (`diags[0]` = `D_1`).
+    /// Diagonals in application order (`diags[0]` = `D_1`), with the global
+    /// `√n · n^{-k/2}` normalization pre-folded into the last one.
     diags: Vec<Vec<f32>>,
-    kinds: Vec<DiagKind>,
-    /// Combined per-spin normalization folded into the last pass:
-    /// each FWHT is unnormalized (H̃ = √n·H), so after k spins we have
-    /// n^{k/2} · (H D)^k; multiplying by `scale = √n / n^{k/2}` yields the
-    /// paper's `√n · (HD)^k` with L2-normalized H.
-    scale: f32,
+    /// Stored-parameter bits: `n` per Rademacher diagonal, `32n` per
+    /// Gaussian one (fixed at construction).
+    bits: usize,
     name: &'static str,
 }
 
@@ -62,11 +61,17 @@ impl HdChain {
                 *v *= scale;
             }
         }
+        let bits = kinds
+            .iter()
+            .map(|k| match k {
+                DiagKind::Rademacher => n,
+                DiagKind::Gaussian => 32 * n,
+            })
+            .sum();
         HdChain {
             n,
             diags,
-            kinds: kinds.to_vec(),
-            scale: 1.0,
+            bits,
             name,
         }
     }
@@ -115,11 +120,6 @@ impl HdChain {
             scale_by(buf, d);
             fwht(buf);
         }
-        if self.scale != 1.0 {
-            for v in buf.iter_mut() {
-                *v *= self.scale;
-            }
-        }
     }
 }
 
@@ -132,10 +132,23 @@ impl Transform for HdChain {
         self.n
     }
 
-    fn apply(&self, x: &[f32]) -> Vec<f32> {
-        let mut y = x.to_vec();
-        self.apply_in_place(&mut y);
-        y
+    fn apply_into(&self, x: &[f32], out: &mut [f32], _ws: &mut Workspace) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(out.len(), self.n);
+        out.copy_from_slice(x);
+        self.apply_in_place(out);
+    }
+
+    /// Batch kernel: each `D` scaling and each FWHT butterfly level runs
+    /// across the whole sub-batch (level-major, cache-blocked) instead of
+    /// row at a time.
+    fn apply_batch_serial(&self, xs: &[f32], out: &mut [f32], _ws: &mut Workspace) {
+        debug_assert_eq!(xs.len(), out.len());
+        out.copy_from_slice(xs);
+        for d in &self.diags {
+            scale_rows(out, d);
+            fwht_batch(out, self.n);
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -143,13 +156,7 @@ impl Transform for HdChain {
     }
 
     fn param_bits(&self) -> usize {
-        self.kinds
-            .iter()
-            .map(|k| match k {
-                DiagKind::Rademacher => self.n,
-                DiagKind::Gaussian => 32 * self.n,
-            })
-            .sum()
+        self.bits
     }
 }
 

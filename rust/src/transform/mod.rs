@@ -29,10 +29,21 @@ pub use circulant::StructuredGaussian;
 pub use dense_gaussian::DenseGaussian;
 pub use hd::HdChain;
 
+use crate::linalg::workspace::MIN_ROWS_PER_WORKER;
+use crate::linalg::{Workspace, WorkspacePool};
 use crate::util::rng::Rng;
 
 /// A randomized linear transform `R^{dim_in} -> R^{dim_out}` standing in for
 /// a Gaussian projection matrix.
+///
+/// The execution surface is **batch-first and zero-allocation**: the one
+/// required compute method is [`Transform::apply_into`], which draws every
+/// intermediate buffer from a caller-owned [`Workspace`]. Batches go through
+/// [`Transform::apply_batch_into`], which shards rows across scoped worker
+/// threads (env-tunable via `TS_WORKERS`), each worker driving the family's
+/// serial batch kernel with its own reused workspace. The allocating
+/// [`Transform::apply`] / [`Transform::apply_batch`] remain as thin wrappers
+/// for call sites off the hot path.
 pub trait Transform: Send + Sync {
     /// Input dimensionality `n` (callers zero-pad shorter vectors).
     fn dim_in(&self) -> usize;
@@ -40,8 +51,10 @@ pub trait Transform: Send + Sync {
     /// Output dimensionality `m`.
     fn dim_out(&self) -> usize;
 
-    /// `y = G_struct x`. `x.len() == dim_in()`.
-    fn apply(&self, x: &[f32]) -> Vec<f32>;
+    /// `out = G_struct x`, all scratch drawn from `ws` — the
+    /// zero-allocation hot path (no heap traffic once `ws` is warm).
+    /// `x.len() == dim_in()`, `out.len() == dim_out()`.
+    fn apply_into(&self, x: &[f32], out: &mut [f32], ws: &mut Workspace);
 
     /// Human-readable family name (stable; used by benches and the CLI).
     fn name(&self) -> &'static str;
@@ -50,18 +63,100 @@ pub trait Transform: Send + Sync {
     /// float as 32 bits. Reported by the compression tables.
     fn param_bits(&self) -> usize;
 
-    /// Apply to each row of a row-major batch, concatenating outputs.
+    /// `y = G_struct x`. Thin allocating wrapper over
+    /// [`Transform::apply_into`].
+    fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim_out()];
+        let mut ws = Workspace::new();
+        self.apply_into(x, &mut out, &mut ws);
+        out
+    }
+
+    /// Like [`Transform::apply_into`] but accepting inputs shorter than
+    /// `dim_in()`, zero-padded through workspace scratch (`take_f32` hands
+    /// out zeroed buffers, so only the prefix copy is paid). The shared
+    /// padding path for every consumer of Hadamard-based families.
+    fn apply_padded_into(&self, x: &[f32], out: &mut [f32], ws: &mut Workspace) {
+        let n = self.dim_in();
+        debug_assert!(x.len() <= n);
+        if x.len() == n {
+            self.apply_into(x, out, ws);
+        } else {
+            let mut padded = ws.take_f32(n);
+            padded[..x.len()].copy_from_slice(x);
+            self.apply_into(&padded, out, ws);
+            ws.put_f32(padded);
+        }
+    }
+
+    /// Single-threaded batch kernel over row-major rows. Families override
+    /// this with batch-level kernels (level-major FWHT over all rows, FFT
+    /// scratch reuse across rows); the default loops [`Transform::apply_into`].
+    fn apply_batch_serial(&self, xs: &[f32], out: &mut [f32], ws: &mut Workspace) {
+        let n = self.dim_in();
+        let m = self.dim_out();
+        debug_assert_eq!(xs.len() % n, 0);
+        debug_assert_eq!(out.len() / m.max(1) * n, xs.len());
+        for (row, dst) in xs.chunks_exact(n).zip(out.chunks_exact_mut(m)) {
+            self.apply_into(row, dst, ws);
+        }
+    }
+
+    /// Batch-first entry point: apply to each row of a row-major batch,
+    /// writing row outputs into `out` (`rows * dim_out()` elements). Rows
+    /// are sharded across `std::thread::scope` workers — at most
+    /// `pool.workers()` of them, and no thread is spawned unless every
+    /// worker gets at least [`MIN_ROWS_PER_WORKER`] full shares of rows —
+    /// each worker reusing its own [`Workspace`] from the pool across
+    /// calls.
+    fn apply_batch_into(&self, xs: &[f32], out: &mut [f32], pool: &mut WorkspacePool) {
+        let n = self.dim_in();
+        let m = self.dim_out();
+        debug_assert_eq!(xs.len() % n, 0);
+        let rows = xs.len() / n;
+        debug_assert_eq!(out.len(), rows * m);
+        if rows == 0 {
+            return;
+        }
+        let workers = pool.workers().min((rows / MIN_ROWS_PER_WORKER).max(1));
+        if workers <= 1 {
+            self.apply_batch_serial(xs, out, pool.slot(0));
+            return;
+        }
+        let rows_per = rows.div_ceil(workers);
+        let slots = pool.slots_mut(workers);
+        std::thread::scope(|s| {
+            for ((xc, oc), ws) in xs
+                .chunks(rows_per * n)
+                .zip(out.chunks_mut(rows_per * m))
+                .zip(slots.iter_mut())
+            {
+                s.spawn(move || self.apply_batch_serial(xc, oc, ws));
+            }
+        });
+    }
+
+    /// Apply to each row of a row-major batch, concatenating outputs. Thin
+    /// allocating wrapper over [`Transform::apply_batch_into`].
     fn apply_batch(&self, xs: &[f32]) -> Vec<f32> {
         let n = self.dim_in();
         debug_assert_eq!(xs.len() % n, 0);
         let rows = xs.len() / n;
-        let m = self.dim_out();
-        let mut out = Vec::with_capacity(rows * m);
-        for r in xs.chunks_exact(n) {
-            out.extend_from_slice(&self.apply(r));
-        }
-        debug_assert_eq!(out.len(), rows * m);
+        let mut out = vec![0.0f32; rows * self.dim_out()];
+        let mut pool = WorkspacePool::from_env();
+        self.apply_batch_into(xs, &mut out, &mut pool);
         out
+    }
+
+    /// A [`Workspace`] pre-warmed for this transform: one throwaway apply
+    /// populates the buffer pools, so every subsequent
+    /// [`Transform::apply_into`] through it is allocation-free.
+    fn make_workspace(&self) -> Workspace {
+        let mut ws = Workspace::new();
+        let x = vec![0.0f32; self.dim_in()];
+        let mut out = vec![0.0f32; self.dim_out()];
+        self.apply_into(&x, &mut out, &mut ws);
+        ws
     }
 }
 
@@ -287,6 +382,95 @@ mod tests {
         let c12 = dot(&r1, &r2) / (norm2(&r1) * norm2(&r2));
         for c in [c01, c02, c12] {
             assert!(c.abs() < 0.2, "cosine {c} too large for near-orthogonality");
+        }
+    }
+
+    const ALL_FAMILIES: [Family; 7] = [
+        Family::Dense,
+        Family::Hd3,
+        Family::Hdg,
+        Family::Circulant,
+        Family::Toeplitz,
+        Family::Hankel,
+        Family::SkewCirculant,
+    ];
+
+    #[test]
+    fn apply_into_matches_apply_bitwise_all_families() {
+        // Zero-allocation path == allocating path, square and stacked, with
+        // one long-lived workspace reused across every call.
+        for_all(14, |g| {
+            let n = g.pow2_in(2, 6);
+            let fam = *g.choose(&ALL_FAMILIES);
+            let t: Box<dyn Transform> = if g.bool() {
+                make_square(fam, n, &mut Rng::new(g.u64()))
+            } else {
+                let m = g.usize_in(1, n);
+                let k = g.usize_in(1, 2 * n);
+                make(fam, k, n, m, &mut Rng::new(g.u64()))
+            };
+            let mut ws = t.make_workspace();
+            let mut out = vec![0.0f32; t.dim_out()];
+            for _ in 0..3 {
+                let x = g.gaussian_vec(n);
+                let expect = t.apply(&x);
+                t.apply_into(&x, &mut out, &mut ws);
+                assert_eq!(out, expect, "{fam:?} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn apply_batch_into_matches_apply_bitwise_across_worker_counts() {
+        // The batch engine (batch kernels + row sharding) must reproduce the
+        // per-row path bit for bit at every worker count.
+        for_all(10, |g| {
+            let n = g.pow2_in(2, 5);
+            let fam = *g.choose(&ALL_FAMILIES);
+            let t: Box<dyn Transform> = if g.bool() {
+                make_square(fam, n, &mut Rng::new(g.u64()))
+            } else {
+                let m = g.usize_in(1, n);
+                let k = g.usize_in(1, 2 * n);
+                make(fam, k, n, m, &mut Rng::new(g.u64()))
+            };
+            let rows = g.usize_in(1, 40);
+            let xs = g.gaussian_vec(rows * n);
+            let m_out = t.dim_out();
+            let mut expect = Vec::with_capacity(rows * m_out);
+            for r in xs.chunks_exact(n) {
+                expect.extend_from_slice(&t.apply(r));
+            }
+            for workers in [1usize, 2, 4] {
+                let mut pool = WorkspacePool::new(workers);
+                let mut out = vec![0.0f32; rows * m_out];
+                // twice through the same pool: reused workspaces stay clean
+                for _ in 0..2 {
+                    t.apply_batch_into(&xs, &mut out, &mut pool);
+                    assert_eq!(out, expect, "{fam:?} n={n} rows={rows} workers={workers}");
+                }
+            }
+            assert_eq!(t.apply_batch(&xs), expect, "{fam:?} wrapper");
+        });
+    }
+
+    #[test]
+    fn large_batch_deterministically_hits_the_parallel_path() {
+        // rows = 70 with 4 workers guarantees threads actually spawn
+        // (70 / MIN_ROWS_PER_WORKER >= 4) for every family.
+        let n = 32;
+        let rows = 70;
+        let xs = Rng::new(21).gaussian_vec(rows * n);
+        for fam in ALL_FAMILIES {
+            let t = make_square(fam, n, &mut Rng::new(22));
+            let mut expect = Vec::with_capacity(rows * n);
+            for r in xs.chunks_exact(n) {
+                expect.extend_from_slice(&t.apply(r));
+            }
+            let mut pool = WorkspacePool::new(4);
+            let mut out = vec![0.0f32; rows * n];
+            t.apply_batch_into(&xs, &mut out, &mut pool);
+            assert_eq!(out, expect, "{fam:?}");
         }
     }
 
