@@ -1,17 +1,23 @@
-//! Batch-throughput sweep for the zero-allocation, batch-first execution
-//! engine: family × n × batch-rows, seed-style per-row `apply` loop vs the
-//! sharded `apply_batch_into` path, plus the NativeBackend `Op::Transform` /
-//! `Op::Rff` batch lanes.
+//! Batch-throughput sweep for the pool-resident, zero-allocation execution
+//! engine: family × n × batch-rows, three execution modes per shape —
 //!
-//! Writes `BENCH_transform_throughput.json` at the repo root to seed the
+//! * `per_row`  — seed-style allocating `apply` loop (the baseline PR 1
+//!   replaced);
+//! * `serial`   — `apply_batch_into` pinned to one worker (batch-level
+//!   kernels, no threading);
+//! * `pooled`   — `apply_batch_into` on a persistent [`WorkerPool`]
+//!   (`TS_WORKERS`-tunable, threads spawned once and reused).
+//!
+//! Plus the NativeBackend `Op::Transform` / `Op::Rff` batch lanes.
+//!
+//! Writes `BENCH_transform_throughput.json` at the repo root to extend the
 //! perf trajectory. Set `TS_FULL=1` for the larger dims / row counts and
 //! `TS_WORKERS=k` to pin the worker count.
 //!
 //!     cargo bench --bench transform_throughput
 
 use triplespin::coordinator::{Backend, NativeBackend};
-use triplespin::linalg::WorkspacePool;
-use triplespin::runtime::Op;
+use triplespin::runtime::{Op, WorkerPool};
 use triplespin::transform::{make_square, Family};
 use triplespin::util::bench;
 use triplespin::util::json::Json;
@@ -27,24 +33,35 @@ fn out_path() -> &'static str {
     }
 }
 
-fn entry(kind: &str, family: &str, n: usize, rows: usize, per_row_ns: f64, batch_ns: f64) -> Json {
+#[allow(clippy::too_many_arguments)]
+fn entry(
+    kind: &str,
+    family: &str,
+    n: usize,
+    rows: usize,
+    per_row_ns: f64,
+    serial_ns: f64,
+    pooled_ns: f64,
+) -> Json {
     Json::obj(vec![
         ("kind", Json::Str(kind.into())),
         ("family", Json::Str(family.into())),
         ("n", Json::Num(n as f64)),
         ("rows", Json::Num(rows as f64)),
         ("per_row_loop_ns", Json::Num(per_row_ns)),
-        ("batch_ns", Json::Num(batch_ns)),
+        ("batch_serial_ns", Json::Num(serial_ns)),
+        ("batch_ns", Json::Num(pooled_ns)),
         (
             "batch_rows_per_sec",
-            Json::Num(rows as f64 / (batch_ns / 1e9)),
+            Json::Num(rows as f64 / (pooled_ns / 1e9)),
         ),
-        ("speedup", Json::Num(per_row_ns / batch_ns)),
+        ("speedup_serial", Json::Num(per_row_ns / serial_ns)),
+        ("speedup", Json::Num(per_row_ns / pooled_ns)),
     ])
 }
 
 fn main() {
-    let full = std::env::var("TS_FULL").is_ok();
+    let full = std::env::var("TS_FULL").map(|v| v != "0").unwrap_or(false);
     let dims: Vec<usize> = if full {
         vec![256, 1024, 4096]
     } else {
@@ -56,13 +73,15 @@ fn main() {
         vec![8, 128]
     };
     let opts = bench::quick();
-    let workers = WorkspacePool::from_env().workers();
+    let pool = WorkerPool::from_env();
+    let workers = pool.size();
     println!("== transform throughput (workers={workers}) ==\n");
 
     let mut entries: Vec<Json> = Vec::new();
 
     // Transform trait path: seed-style allocating per-row loop vs the
-    // batch-first engine.
+    // serial batch kernel vs the persistent-pool engine.
+    let serial_pool = WorkerPool::new(1);
     for fam in [
         Family::Hd3,
         Family::Hdg,
@@ -81,17 +100,21 @@ fn main() {
                     }
                     std::hint::black_box(&out);
                 });
-                let mut pool = WorkspacePool::from_env();
                 let mut out = vec![0.0f32; rows * n];
-                let batch = bench::bench(&format!("{label} batch"), opts, || {
-                    t.apply_batch_into(&xs, &mut out, &mut pool);
+                let serial = bench::bench(&format!("{label} serial"), opts, || {
+                    t.apply_batch_into(&xs, &mut out, &serial_pool);
+                    std::hint::black_box(&out);
+                });
+                let pooled = bench::bench(&format!("{label} pooled"), opts, || {
+                    t.apply_batch_into(&xs, &mut out, &pool);
                     std::hint::black_box(&out);
                 });
                 println!(
-                    "{label:<36} per-row {:>11}  batch {:>11}  x{:.2}",
+                    "{label:<34} per-row {:>10}  serial {:>10}  pooled {:>10}  x{:.2}",
                     bench::fmt_ns(per_row.mean_ns),
-                    bench::fmt_ns(batch.mean_ns),
-                    per_row.mean_ns / batch.mean_ns
+                    bench::fmt_ns(serial.mean_ns),
+                    bench::fmt_ns(pooled.mean_ns),
+                    per_row.mean_ns / pooled.mean_ns
                 );
                 entries.push(entry(
                     "transform",
@@ -99,33 +122,39 @@ fn main() {
                     n,
                     rows,
                     per_row.mean_ns,
-                    batch.mean_ns,
+                    serial.mean_ns,
+                    pooled.mean_ns,
                 ));
             }
         }
     }
 
     // NativeBackend lanes: rows×run_batch(rows=1) (the seed per-row loop)
-    // vs one sharded batch call.
+    // vs one batch call on a single-worker backend vs the pooled backend.
     for op in [Op::Transform, Op::Rff] {
         for &n in &dims {
             let be = NativeBackend::new(&[n], 1.0, 3);
+            let be_serial = NativeBackend::with_workers(&[n], 1.0, 3, 1);
             for &rows in &row_counts {
                 let xs = Rng::new(4).gaussian_vec(rows * n);
                 let label = format!("native {op} n={n} rows={rows}");
                 let per_row = bench::bench(&format!("{label} per-row"), opts, || {
                     for r in xs.chunks_exact(n) {
-                        std::hint::black_box(be.run_batch(op, n, 1, r).unwrap());
+                        std::hint::black_box(be_serial.run_batch(op, n, 1, r).unwrap());
                     }
                 });
-                let batch = bench::bench(&format!("{label} batch"), opts, || {
+                let serial = bench::bench(&format!("{label} serial"), opts, || {
+                    std::hint::black_box(be_serial.run_batch(op, n, rows, &xs).unwrap());
+                });
+                let pooled = bench::bench(&format!("{label} pooled"), opts, || {
                     std::hint::black_box(be.run_batch(op, n, rows, &xs).unwrap());
                 });
                 println!(
-                    "{label:<36} per-row {:>11}  batch {:>11}  x{:.2}",
+                    "{label:<34} per-row {:>10}  serial {:>10}  pooled {:>10}  x{:.2}",
                     bench::fmt_ns(per_row.mean_ns),
-                    bench::fmt_ns(batch.mean_ns),
-                    per_row.mean_ns / batch.mean_ns
+                    bench::fmt_ns(serial.mean_ns),
+                    bench::fmt_ns(pooled.mean_ns),
+                    per_row.mean_ns / pooled.mean_ns
                 );
                 entries.push(entry(
                     &format!("native_{op}"),
@@ -133,7 +162,8 @@ fn main() {
                     n,
                     rows,
                     per_row.mean_ns,
-                    batch.mean_ns,
+                    serial.mean_ns,
+                    pooled.mean_ns,
                 ));
             }
         }
@@ -142,6 +172,7 @@ fn main() {
     let doc = Json::obj(vec![
         ("bench", Json::Str("transform_throughput".into())),
         ("generated", Json::Bool(true)),
+        ("provenance", Json::Str("cargo_bench".into())),
         ("workers", Json::Num(workers as f64)),
         ("full_sweep", Json::Bool(full)),
         ("entries", Json::Arr(entries)),

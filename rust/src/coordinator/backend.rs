@@ -9,12 +9,13 @@
 //! * [`PjrtBackend`] — executes the AOT-compiled JAX/Pallas artifacts via
 //!   the runtime service (the paper-faithful "three-layer" path).
 
-use crate::linalg::fwht::fwht_batch;
-use crate::linalg::vecops::scale_rows;
-use crate::linalg::workspace::{worker_count_from_env, MIN_ROWS_PER_WORKER};
+use crate::linalg::fwht::fwht;
+use crate::linalg::vecops::scale_by;
+use crate::runtime::pool::{shard_rows as pool_shard_rows, WorkerPool};
 use crate::runtime::{Op, Output, RuntimeHandle};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Per-dimension model parameters shared by both backends: the three
 /// Rademacher diagonals of the chain plus the RFF bandwidth.
@@ -58,11 +59,14 @@ pub trait Backend: Send + Sync + 'static {
 }
 
 /// Pure-Rust backend: the L3-native hot path. Batches run through the
-/// batch-level chain kernel (level-major FWHT butterflies across all rows)
-/// with rows sharded over scoped worker threads (`TS_WORKERS`-tunable).
+/// chain kernel (all three spins per L1-resident row)
+/// with rows sharded over the backend's persistent [`WorkerPool`]
+/// (`TS_WORKERS`-tunable) — worker threads are spawned once on the first
+/// large-enough batch and reused for every batch after, so steady-state
+/// serving performs no thread spawns.
 pub struct NativeBackend {
     params: HashMap<usize, NativeParams>,
-    workers: usize,
+    pool: WorkerPool,
 }
 
 /// [`ModelParams`] plus the perf-folded last diagonal: the chain's global
@@ -85,15 +89,17 @@ impl NativeBackend {
                     (n, NativeParams { base, d3_scaled })
                 })
                 .collect(),
-            workers: worker_count_from_env(),
+            pool: WorkerPool::from_env(),
         }
     }
 
     /// Like [`NativeBackend::new`] with a pinned worker count (`new` reads
-    /// the `TS_WORKERS` env var / machine parallelism).
+    /// the `TS_WORKERS` env var / machine parallelism). Pinning also
+    /// disables the pool's work gate: "use exactly this many workers
+    /// wherever the row count allows" — the test/bench constructor.
     pub fn with_workers(dims: &[usize], sigma: f64, seed: u64, workers: usize) -> NativeBackend {
         let mut be = NativeBackend::new(dims, sigma, seed);
-        be.workers = workers.max(1);
+        be.pool = WorkerPool::with_min_work(workers, 0);
         be
     }
 
@@ -106,48 +112,58 @@ impl NativeBackend {
     /// In-place chain over a row-major sub-batch: `√n · H D3 H D2 H D1 x`
     /// per row (normalized H). Three unnormalized FWHTs contribute n^{3/2};
     /// the remaining `√n/n^{3/2} = 1/n` factor is pre-folded into
-    /// `d3_scaled`. Each stage sweeps the whole sub-batch (level-major
-    /// cache-blocked FWHT) before the next begins.
+    /// `d3_scaled`. Each row runs all three stages while L1-resident —
+    /// stage-major full-batch sweeps were reverted with the other
+    /// level-major kernels (see [`crate::linalg::fwht::fwht_batch`]).
     fn chain_batch(p: &NativeParams, data: &mut [f32], n: usize) {
-        scale_rows(data, &p.base.d1);
-        fwht_batch(data, n);
-        scale_rows(data, &p.base.d2);
-        fwht_batch(data, n);
-        scale_rows(data, &p.d3_scaled);
-        fwht_batch(data, n);
+        for row in data.chunks_exact_mut(n) {
+            scale_by(row, &p.base.d1);
+            fwht(row);
+            scale_by(row, &p.base.d2);
+            fwht(row);
+            scale_by(row, &p.d3_scaled);
+            fwht(row);
+        }
+    }
+
+    /// Per-row work estimate of the three-spin chain, in the pool's
+    /// ~butterfly-op units (see `Transform::batch_work_per_row`).
+    fn chain_work(n: usize) -> usize {
+        let n = n.max(2);
+        3 * n * (n.ilog2() as usize + 1)
     }
 }
 
 /// Shard the rows of the `proj` chain buffer (width `n`) and the output
-/// buffer (width `w_out`) across up to `workers` scoped threads; no thread
-/// is spawned unless every worker gets at least [`MIN_ROWS_PER_WORKER`]
-/// full shares of rows.
-fn shard_rows<T, F>(
+/// buffer (width `w_out`) across the backend's persistent pool; batches too
+/// small for a second worker run serially on the caller thread.
+#[allow(clippy::too_many_arguments)]
+fn shard_proj_out<T, F>(
+    pool: &WorkerPool,
     proj: &mut [f32],
     out: &mut [T],
     rows: usize,
     n: usize,
     w_out: usize,
-    workers: usize,
+    work_per_row: usize,
     f: F,
 ) where
     T: Send,
     F: Fn(&mut [f32], &mut [T]) + Sync,
 {
-    let workers = workers.min((rows / MIN_ROWS_PER_WORKER).max(1));
-    if workers <= 1 {
-        f(proj, out);
-        return;
-    }
-    let rows_per = rows.div_ceil(workers);
-    let f = &f;
-    std::thread::scope(|s| {
-        for (pc, oc) in proj
-            .chunks_mut(rows_per * n)
-            .zip(out.chunks_mut(rows_per * w_out))
-        {
-            s.spawn(move || f(pc, oc));
-        }
+    let proj_ptr = proj.as_mut_ptr() as usize;
+    let out_ptr = out.as_mut_ptr() as usize;
+    pool_shard_rows(pool, rows, work_per_row, &|lo, hi, _slot, _ws| {
+        // Safety: shard_rows hands out disjoint, covering row ranges and
+        // blocks until every worker finished, so the raw-slice views below
+        // never alias and never outlive the borrow of proj/out.
+        let pc = unsafe {
+            std::slice::from_raw_parts_mut((proj_ptr as *mut f32).add(lo * n), (hi - lo) * n)
+        };
+        let oc = unsafe {
+            std::slice::from_raw_parts_mut((out_ptr as *mut T).add(lo * w_out), (hi - lo) * w_out)
+        };
+        f(pc, oc);
     });
 }
 
@@ -164,15 +180,19 @@ impl Backend for NativeBackend {
         match op {
             Op::Transform => {
                 let mut out = xs.to_vec();
-                let workers = self.workers.min((rows / MIN_ROWS_PER_WORKER).max(1));
-                if workers <= 1 {
-                    Self::chain_batch(p, &mut out, n);
-                } else {
-                    let rows_per = rows.div_ceil(workers);
-                    std::thread::scope(|s| {
-                        for chunk in out.chunks_mut(rows_per * n) {
-                            s.spawn(move || Self::chain_batch(p, chunk, n));
-                        }
+                {
+                    let out_ptr = out.as_mut_ptr() as usize;
+                    let work = Self::chain_work(n);
+                    pool_shard_rows(&self.pool, rows, work, &|lo, hi, _slot, _ws| {
+                        // Safety: disjoint covering row ranges; the pool
+                        // blocks until every worker acked.
+                        let chunk = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (out_ptr as *mut f32).add(lo * n),
+                                (hi - lo) * n,
+                            )
+                        };
+                        Self::chain_batch(p, chunk, n);
                     });
                 }
                 Ok(Output::F32(out))
@@ -182,7 +202,9 @@ impl Backend for NativeBackend {
                 let mut out = vec![0.0f32; rows * 2 * n];
                 let inv_sigma = p.base.inv_sigma;
                 let feat_scale = (1.0 / (n as f64).sqrt()) as f32;
-                shard_rows(&mut proj, &mut out, rows, n, 2 * n, self.workers, |pc, oc| {
+                // chain + ~8 units per cos/sin output
+                let work = Self::chain_work(n) + 16 * n;
+                shard_proj_out(&self.pool, &mut proj, &mut out, rows, n, 2 * n, work, |pc, oc| {
                     Self::chain_batch(p, pc, n);
                     for (prow, orow) in pc.chunks_exact(n).zip(oc.chunks_exact_mut(2 * n)) {
                         let (cos_half, sin_half) = orow.split_at_mut(n);
@@ -199,7 +221,8 @@ impl Backend for NativeBackend {
             Op::CrossPolytope => {
                 let mut proj = xs.to_vec();
                 let mut out = vec![0i32; rows];
-                shard_rows(&mut proj, &mut out, rows, n, 1, self.workers, |pc, oc| {
+                let work = Self::chain_work(n) + n;
+                shard_proj_out(&self.pool, &mut proj, &mut out, rows, n, 1, work, |pc, oc| {
                     Self::chain_batch(p, pc, n);
                     for (prow, o) in pc.chunks_exact(n).zip(oc.iter_mut()) {
                         *o = crate::linalg::vecops::argmax_abs_signed(prow) as i32;
@@ -215,10 +238,33 @@ impl Backend for NativeBackend {
     }
 }
 
+/// Per-dimension parameters cached **once** in shared buffers: each
+/// `run_padded` call passes `Arc` clones (refcount bumps) instead of
+/// deep-copying the three sign vectors per call — the same allocator-churn
+/// fix the native path got from pre-folding `d3`.
+struct SharedParams {
+    d1: Arc<Vec<f32>>,
+    d2: Arc<Vec<f32>>,
+    d3: Arc<Vec<f32>>,
+    /// `[1/σ]` as a ready-made scalar input buffer for the RFF op.
+    inv_sigma: Arc<Vec<f32>>,
+}
+
+impl SharedParams {
+    fn from_model(p: ModelParams) -> SharedParams {
+        SharedParams {
+            inv_sigma: Arc::new(vec![p.inv_sigma]),
+            d1: Arc::new(p.d1),
+            d2: Arc::new(p.d2),
+            d3: Arc::new(p.d3),
+        }
+    }
+}
+
 /// PJRT backend: routes batches to the AOT artifacts via the runtime thread.
 pub struct PjrtBackend {
     handle: RuntimeHandle,
-    params: HashMap<usize, ModelParams>,
+    params: HashMap<usize, SharedParams>,
     /// available (op, n) -> sorted batch sizes, derived from artifact names.
     batches: HashMap<(Op, usize), Vec<usize>>,
 }
@@ -247,7 +293,9 @@ impl PjrtBackend {
             handle,
             params: dims
                 .iter()
-                .map(|&n| (n, ModelParams::generate(n, sigma, seed)))
+                .map(|&n| {
+                    (n, SharedParams::from_model(ModelParams::generate(n, sigma, seed)))
+                })
                 .collect(),
             batches,
         })
@@ -303,13 +351,20 @@ impl PjrtBackend {
         let mut x = vec![0.0f32; b * n];
         x[..rows * n].copy_from_slice(xs);
         let name = format!("{op}_n{n}_b{b}");
-        let mut inputs = vec![x, p.d1.clone(), p.d2.clone(), p.d3.clone()];
+        // only the request buffer is fresh; d1/d2/d3 (and the RFF scalar)
+        // are Arc clones of the backend's cached buffers — no per-call copy
+        let mut inputs = vec![
+            Arc::new(x),
+            Arc::clone(&p.d1),
+            Arc::clone(&p.d2),
+            Arc::clone(&p.d3),
+        ];
         if op == Op::Rff {
-            inputs.push(vec![p.inv_sigma]);
+            inputs.push(Arc::clone(&p.inv_sigma));
         }
         let out = self
             .handle
-            .run(&name, inputs)
+            .run_shared(&name, inputs)
             .map_err(|e| e.to_string())?;
         // strip padding rows
         let per = self.out_elems(op, n);

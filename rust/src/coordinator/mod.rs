@@ -8,6 +8,10 @@
 //! memory). Each lane runs a thread that drains up to `max_batch` requests
 //! (waiting at most `max_wait` after the first), pads the tail, executes one
 //! backend call, and fans responses back out on per-request channels.
+//! Backend batch execution shards over the backend's **persistent**
+//! [`crate::runtime::WorkerPool`] — lane threads never spawn per-batch
+//! workers, so steady-state serving touches a fixed set of long-lived
+//! threads.
 //!
 //! Invariants (property-tested below and in `rust/tests/`):
 //! * every accepted request receives exactly one response;

@@ -11,7 +11,10 @@
 //! Each connection gets a handler thread; requests within a connection are
 //! pipelined (responses come back in submit order, matching the lane's
 //! FIFO guarantee). Backpressure surfaces as `ok: false / "lane queue
-//! full"` so clients can retry with jitter.
+//! full"` so clients can retry with jitter. Below the lanes, batch compute
+//! runs on the backend's persistent [`crate::runtime::WorkerPool`]: the
+//! steady-state thread census is `1 accept + 1/connection + 1/lane +
+//! TS_WORKERS pool workers`, fixed for the life of the server.
 
 use super::{Coordinator, SubmitError};
 use crate::runtime::{Op, Output};

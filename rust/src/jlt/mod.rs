@@ -8,6 +8,7 @@
 
 use crate::linalg::vecops::euclidean;
 use crate::linalg::Workspace;
+use crate::runtime::WorkerPool;
 use crate::transform::{make, Family, Transform};
 use crate::util::rng::Rng;
 
@@ -56,6 +57,25 @@ impl Jlt {
         out
     }
 
+    /// Embed a row-major batch (`rows` inputs of the transform's padded
+    /// input dim) into `rows * dim_out()` outputs, sharding rows across the
+    /// persistent worker pool. Bit-identical per row to [`Jlt::embed_into`].
+    pub fn embed_batch_into(&self, xs: &[f32], out: &mut [f32], pool: &WorkerPool) {
+        let n = self.transform.dim_in();
+        debug_assert_eq!(xs.len() % n, 0);
+        debug_assert_eq!(out.len(), (xs.len() / n) * self.k);
+        self.transform.apply_batch_into(xs, out, pool);
+        for v in out.iter_mut() {
+            *v *= self.scale;
+        }
+    }
+
+    /// Padded input dimensionality of the underlying transform (batch rows
+    /// for [`Jlt::embed_batch_into`] must be zero-padded to this length).
+    pub fn dim_in_padded(&self) -> usize {
+        self.transform.dim_in()
+    }
+
     /// The number of dimensions the classic JL lemma prescribes for `m`
     /// points at distortion `eps`: `k = ⌈8 ln(m) / eps²⌉`.
     pub fn required_dims(m: usize, eps: f64) -> usize {
@@ -66,13 +86,16 @@ impl Jlt {
 /// Worst-case pairwise distance distortion of an embedding over a point
 /// set: `max |  ||f(x)-f(y)|| / ||x-y||  - 1 |`.
 pub fn max_distortion(jlt: &Jlt, points: &[Vec<f32>]) -> f64 {
-    // one workspace + one flat output matrix reused across all embeddings
+    // one padded input batch + one flat output matrix: all embeddings run
+    // as a single sweep over the persistent worker pool
     let k = jlt.dim_out();
-    let mut embedded = vec![0.0f32; points.len() * k];
-    let mut ws = Workspace::new();
-    for (p, dst) in points.iter().zip(embedded.chunks_exact_mut(k)) {
-        jlt.embed_into(p, dst, &mut ws);
+    let np = jlt.dim_in_padded();
+    let mut xs = vec![0.0f32; points.len() * np];
+    for (p, row) in points.iter().zip(xs.chunks_exact_mut(np)) {
+        row[..p.len()].copy_from_slice(p);
     }
+    let mut embedded = vec![0.0f32; points.len() * k];
+    jlt.embed_batch_into(&xs, &mut embedded, WorkerPool::global());
     let mut worst = 0.0f64;
     for i in 0..points.len() {
         for j in i + 1..points.len() {
@@ -155,6 +178,23 @@ mod tests {
         }
         let avg = total / trials as f64;
         assert!((avg - 1.0).abs() < 0.1, "E||f(x)||² = {avg}");
+    }
+
+    #[test]
+    fn batch_embedding_matches_single_bitwise() {
+        let n = 200; // pads to 256
+        let jlt = Jlt::new(Family::Toeplitz, 48, n, 11);
+        let np = jlt.dim_in_padded();
+        let pts = cloud(30, n, 12);
+        let mut xs = vec![0.0f32; pts.len() * np];
+        for (p, row) in pts.iter().zip(xs.chunks_exact_mut(np)) {
+            row[..p.len()].copy_from_slice(p);
+        }
+        let mut out = vec![0.0f32; pts.len() * 48];
+        jlt.embed_batch_into(&xs, &mut out, WorkerPool::global());
+        for (p, got) in pts.iter().zip(out.chunks_exact(48)) {
+            assert_eq!(got, &jlt.embed(p)[..]);
+        }
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! features; the angular kernel uses sign features (a PNG with `f = sign`);
 //! the arc-cosine kernel uses `√2·ReLU` features.
 
-use crate::linalg::workspace::MIN_ROWS_PER_WORKER;
-use crate::linalg::{Workspace, WorkspacePool};
+use crate::linalg::Workspace;
+use crate::runtime::pool::{shard_rows, WorkerPool};
 use crate::transform::Transform;
 
 /// The nonlinearity / kernel selector.
@@ -117,51 +117,52 @@ impl FeatureMap {
 
     /// Batch-first feature map: `xs` holds `rows` row-major inputs of
     /// `dim_in()` (already padded), `out` receives `rows` feature rows. The
-    /// projection runs through the transform's parallel batch engine.
-    pub fn features_batch_into(&self, xs: &[f32], out: &mut [f32], pool: &mut WorkspacePool) {
+    /// projection runs through the transform's persistent-pool batch
+    /// engine; the projection scratch comes from the pool's serial
+    /// workspace, so repeated batches through the same pool are
+    /// allocation-free once warm.
+    pub fn features_batch_into(&self, xs: &[f32], out: &mut [f32], pool: &WorkerPool) {
         let n = self.transform.dim_in();
         debug_assert_eq!(xs.len() % n, 0);
         let rows = xs.len() / n;
         let d = self.dim_features();
         debug_assert_eq!(out.len(), rows * d);
         let k = self.transform.dim_out();
-        let mut proj = pool.slot(0).take_f32(rows * k);
+        let mut proj = pool.with_serial_workspace(|ws| ws.take_f32(rows * k));
         self.transform.apply_batch_into(xs, &mut proj, pool);
         // pointwise stage sharded too: for GaussianRff the cos/sin pass is
         // comparable to the projection itself, so leaving it serial would
         // give back half the multi-core win
-        let workers = pool.workers().min((rows / MIN_ROWS_PER_WORKER).max(1));
-        if workers <= 1 {
-            for (prow, orow) in proj.chunks_exact(k).zip(out.chunks_exact_mut(d)) {
-                self.nonlin_into(prow, orow);
-            }
-        } else {
-            let rows_per = rows.div_ceil(workers);
+        {
             let proj_ref: &[f32] = &proj;
-            std::thread::scope(|s| {
-                for (pc, oc) in proj_ref
-                    .chunks(rows_per * k)
-                    .zip(out.chunks_mut(rows_per * d))
-                {
-                    s.spawn(move || {
-                        for (prow, orow) in pc.chunks_exact(k).zip(oc.chunks_exact_mut(d)) {
-                            self.nonlin_into(prow, orow);
-                        }
-                    });
+            let out_ptr = out.as_mut_ptr() as usize;
+            // ~8 work units per emitted feature (cos/sin transcendentals
+            // dominate the pointwise stage)
+            shard_rows(pool, rows, 8 * d, &|lo, hi, _slot, _ws| {
+                let pc = &proj_ref[lo * k..hi * k];
+                // Safety: disjoint covering row ranges, joined before return.
+                let oc = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (out_ptr as *mut f32).add(lo * d),
+                        (hi - lo) * d,
+                    )
+                };
+                for (prow, orow) in pc.chunks_exact(k).zip(oc.chunks_exact_mut(d)) {
+                    self.nonlin_into(prow, orow);
                 }
             });
         }
-        pool.slot(0).put_f32(proj);
+        pool.with_serial_workspace(move |ws| ws.put_f32(proj));
     }
 
-    /// Allocating wrapper over [`FeatureMap::features_batch_into`].
+    /// Allocating wrapper over [`FeatureMap::features_batch_into`] on the
+    /// process-wide pool.
     pub fn features_batch(&self, xs: &[f32]) -> Vec<f32> {
         let n = self.transform.dim_in();
         debug_assert_eq!(xs.len() % n, 0);
         let rows = xs.len() / n;
         let mut out = vec![0.0f32; rows * self.dim_features()];
-        let mut pool = WorkspacePool::from_env();
-        self.features_batch_into(xs, &mut out, &mut pool);
+        self.features_batch_into(xs, &mut out, WorkerPool::global());
         out
     }
 

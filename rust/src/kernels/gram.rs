@@ -4,17 +4,22 @@
 //! `K̃[i][j] = Φ(p_i)ᵀΦ(p_j)` the feature-map approximation.
 
 use super::features::FeatureMap;
-use crate::linalg::{Mat, Workspace};
+use crate::linalg::Mat;
+use crate::runtime::WorkerPool;
 
-/// Feature matrix `Φ ∈ R^{N x D}`: one row per point, computed through the
-/// zero-allocation path with one workspace reused across all points.
+/// Feature matrix `Φ ∈ R^{N x D}`: one row per point, computed as a single
+/// zero-padded batch through the persistent worker pool (batch kernels +
+/// multi-core sharding) — bit-identical to the per-point path.
 pub fn feature_matrix(map: &FeatureMap, points: &[Vec<f32>]) -> Mat {
     let d = map.dim_features();
-    let mut out = Mat::zeros(points.len(), d);
-    let mut ws = Workspace::new();
-    for (i, p) in points.iter().enumerate() {
-        map.features_into(p, &mut out.data[i * d..(i + 1) * d], &mut ws);
+    let n = map.dim_in();
+    let mut xs = vec![0.0f32; points.len() * n];
+    for (p, row) in points.iter().zip(xs.chunks_exact_mut(n)) {
+        assert!(p.len() <= n, "point dim {} exceeds map dim {n}", p.len());
+        row[..p.len()].copy_from_slice(p);
     }
+    let mut out = Mat::zeros(points.len(), d);
+    map.features_batch_into(&xs, &mut out.data, WorkerPool::global());
     out
 }
 

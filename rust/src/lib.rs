@@ -13,24 +13,26 @@
 //!
 //! ## Execution engine
 //!
-//! The hot path is **zero-allocation and batch-first**. Every
-//! [`transform::Transform`] computes through
+//! The hot path is **zero-allocation, batch-first and pool-resident**.
+//! Every [`transform::Transform`] computes through
 //! [`transform::Transform::apply_into`], drawing all scratch from a reused
 //! [`linalg::Workspace`]; batches go through
 //! [`transform::Transform::apply_batch_into`], which runs each family's
-//! batch-level kernel (level-major cache-blocked FWHT butterflies, FFT
-//! `ConvPlan` scratch reuse across rows) and shards rows over
-//! `std::thread::scope` workers — one pooled workspace per worker,
-//! env-tunable via `TS_WORKERS`. The allocating `apply` / `apply_batch`
-//! remain as thin wrappers. `cargo bench --bench transform_throughput`
-//! records the per-row-loop vs batch-engine speedups in
-//! `BENCH_transform_throughput.json`.
+//! batch kernel (row-resident multi-stage pipelines, the twiddle-table
+//! multi-row FFT of [`linalg::fft::ConvPlan`]) and shards
+//! rows over the persistent [`runtime::WorkerPool`] — worker threads spawn
+//! once and keep one pinned workspace each for their lifetime, env-tunable
+//! via `TS_WORKERS` (`0` = single-threaded), so steady state performs zero
+//! thread spawns and zero heap allocations per batch. The allocating
+//! `apply` / `apply_batch` remain as thin wrappers. `cargo bench --bench
+//! transform_throughput` records per-row-loop vs serial-batch vs
+//! pooled-batch speedups in `BENCH_transform_throughput.json`.
 //!
 //! ## Layout
 //!
 //! * [`util`] / [`linalg`] — substrates: seeded RNG, JSON, bench/property
 //!   harnesses; FWHT, FFT-based structured matvecs, dense baselines, and
-//!   the [`linalg::Workspace`] / [`linalg::WorkspacePool`] scratch arenas.
+//!   the [`linalg::Workspace`] scratch arenas.
 //! * [`transform`] — the TripleSpin family itself (the paper's §3),
 //!   including block stacking (§3.1).
 //! * [`kernels`] — random-feature kernel approximation (paper §4):
@@ -41,7 +43,8 @@
 //!   Figure 3), with logistic regression.
 //! * [`data`] — synthetic datasets standing in for USPST / G50C and the
 //!   logistic-regression design matrices (substitutions in DESIGN.md §4).
-//! * [`runtime`] — PJRT executor: loads `artifacts/*.hlo.txt` that
+//! * [`runtime`] — the persistent batch [`runtime::WorkerPool`], plus the
+//!   PJRT executor loading `artifacts/*.hlo.txt` that
 //!   `python/compile/aot.py` lowered from the JAX/Pallas layers.
 //! * [`coordinator`] — L3 serving layer: request router, dynamic batcher,
 //!   worker pool, metrics, backpressure.

@@ -22,20 +22,7 @@ pub fn fft(re: &mut [f64], im: &mut [f64], inverse: bool) {
         return;
     }
 
-    // bit-reversal permutation
-    let mut j = 0usize;
-    for i in 0..n - 1 {
-        if i < j {
-            re.swap(i, j);
-            im.swap(i, j);
-        }
-        let mut m = n >> 1;
-        while m >= 1 && j & m != 0 {
-            j ^= m;
-            m >>= 1;
-        }
-        j |= m;
-    }
+    bit_reverse(re, im);
 
     let sign = if inverse { 1.0 } else { -1.0 };
     let mut len = 2;
@@ -99,13 +86,111 @@ pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
     ar
 }
 
-/// Precomputed spectrum of a circulant (or skew-/Toeplitz-embedded) kernel,
-/// so repeated matvecs pay only two FFTs instead of three.
+/// Bit-reversal permutation shared by [`fft`] and the table-driven plan
+/// kernels.
+#[inline]
+fn bit_reverse(re: &mut [f64], im: &mut [f64]) {
+    let n = re.len();
+    if n <= 2 {
+        return;
+    }
+    let mut j = 0usize;
+    for i in 0..n - 1 {
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+        let mut m = n >> 1;
+        while m >= 1 && j & m != 0 {
+            j ^= m;
+            m >>= 1;
+        }
+        j |= m;
+    }
+}
+
+/// One radix-2 butterfly level (span `len`) over one row, twiddles looked
+/// up from a precomputed `exp(-2πi k/n)` table (stride `n/len`). The table
+/// drive replaces the per-stage trig recurrence of [`fft`]: no serial
+/// dependency in the inner loop, and every row of a batch reuses the same
+/// table entries.
+#[inline]
+fn butterfly_level(
+    re: &mut [f64],
+    im: &mut [f64],
+    len: usize,
+    inverse: bool,
+    twr: &[f64],
+    twi: &[f64],
+) {
+    let n = re.len();
+    let half = len / 2;
+    let stride = n / len;
+    let sign = if inverse { -1.0 } else { 1.0 };
+    let mut i = 0;
+    while i < n {
+        for j in 0..half {
+            let wr = twr[j * stride];
+            let wi = sign * twi[j * stride];
+            let k = i + j;
+            let (ur, ui) = (re[k], im[k]);
+            let (vr, vi) = (
+                re[k + half] * wr - im[k + half] * wi,
+                re[k + half] * wi + im[k + half] * wr,
+            );
+            re[k] = ur + vr;
+            im[k] = ui + vi;
+            re[k + half] = ur - vr;
+            im[k + half] = ui - vi;
+        }
+        i += len;
+    }
+}
+
+/// Full table-driven FFT over one row (used by the plan kernels; the
+/// standalone [`fft`] keeps its table-free form for one-shot callers).
+#[inline]
+fn fft_tabled(re: &mut [f64], im: &mut [f64], inverse: bool, twr: &[f64], twi: &[f64]) {
+    let n = re.len();
+    if n <= 1 {
+        return;
+    }
+    bit_reverse(re, im);
+    let mut len = 2;
+    while len <= n {
+        butterfly_level(re, im, len, inverse, twr, twi);
+        len <<= 1;
+    }
+    if inverse {
+        let s = 1.0 / n as f64;
+        for v in re.iter_mut() {
+            *v *= s;
+        }
+        for v in im.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+/// Rows per block of the batch convolution kernel: bounds the f64 scratch
+/// (`2 * block * n` doubles) while amortizing the twiddle stream across
+/// rows. Consumers size their workspace scratch with
+/// [`ConvPlan::batch_block_rows`].
+const MAX_FFT_BLOCK_ROWS: usize = 8;
+
+/// Precomputed spectrum of a circulant (or skew-/Toeplitz-embedded) kernel
+/// **plus its twiddle tables**, so repeated matvecs pay only two
+/// table-driven FFTs — and batches of rows share one twiddle stream
+/// ([`ConvPlan::apply_batch_in_place`]) instead of re-deriving the
+/// per-stage trig recurrence once per row.
 #[derive(Clone, Debug)]
 pub struct ConvPlan {
     n: usize,
     kr: Vec<f64>,
     ki: Vec<f64>,
+    /// `exp(-2πi k/n)` for `k < max(n/2, 1)` (forward; inverse conjugates).
+    twr: Vec<f64>,
+    twi: Vec<f64>,
 }
 
 impl ConvPlan {
@@ -113,10 +198,18 @@ impl ConvPlan {
     pub fn new(k: &[f64]) -> ConvPlan {
         let n = k.len();
         assert!(n.is_power_of_two());
+        let half = (n / 2).max(1);
+        let mut twr = Vec::with_capacity(half);
+        let mut twi = Vec::with_capacity(half);
+        for i in 0..half {
+            let ang = -2.0 * PI * i as f64 / n as f64;
+            twr.push(ang.cos());
+            twi.push(ang.sin());
+        }
         let mut kr = k.to_vec();
         let mut ki = vec![0.0; n];
-        fft(&mut kr, &mut ki, false);
-        ConvPlan { n, kr, ki }
+        fft_tabled(&mut kr, &mut ki, false, &twr, &twi);
+        ConvPlan { n, kr, ki, twr, twi }
     }
 
     pub fn len(&self) -> usize {
@@ -125,6 +218,13 @@ impl ConvPlan {
 
     pub fn is_empty(&self) -> bool {
         self.n == 0
+    }
+
+    /// How many rows the batch kernel processes per block — size per-block
+    /// scratch as `batch_block_rows() * len()`.
+    pub fn batch_block_rows(&self) -> usize {
+        // keep a block's two f64 buffers within ~256 KiB
+        ((1usize << 14) / self.n.max(1)).clamp(1, MAX_FFT_BLOCK_ROWS)
     }
 
     /// `out = kernel ⊛ x` (circular).
@@ -137,23 +237,48 @@ impl ConvPlan {
     }
 
     /// `re = kernel ⊛ re` (circular), in place. `im` is caller-provided
-    /// scratch of the same length, overwritten — the zero-allocation hot
-    /// path behind the circulant/Toeplitz/Hankel/skew batch kernels, which
-    /// reuse both buffers across every row of a batch.
+    /// scratch of the same length, overwritten. The single-row case of
+    /// [`ConvPlan::apply_batch_in_place`] — the two share one code path so
+    /// the per-row and batch engines stay bit-for-bit identical.
     pub fn apply_in_place(&self, re: &mut [f64], im: &mut [f64]) {
         debug_assert_eq!(re.len(), self.n);
-        debug_assert_eq!(im.len(), self.n);
+        self.apply_batch_in_place(re, im);
+    }
+
+    /// Multi-row circular convolution: `re` holds `rows` row-major rows of
+    /// `len()` each (`re = kernel ⊛ re` per row), `im` is caller scratch of
+    /// the same length, overwritten. The plan's precomputed twiddle tables
+    /// and the caller's blocked scratch are shared across every row; within
+    /// the block each row runs to completion (forward FFT, spectrum
+    /// multiply, inverse FFT) so it stays L1-resident — a level-major
+    /// ordering across rows was tried and REVERTED: re-streaming the block
+    /// once per butterfly level measured slower than per-row traversal at
+    /// n >= 512 (C-mirror calibration, PR 2). This is the batch kernel
+    /// under every circulant/Toeplitz/Hankel/skew family.
+    pub fn apply_batch_in_place(&self, re: &mut [f64], im: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(re.len() % n.max(1), 0);
+        debug_assert_eq!(im.len(), re.len());
         im.fill(0.0);
-        fft(re, im, false);
-        for i in 0..self.n {
-            let (r, m) = (
-                re[i] * self.kr[i] - im[i] * self.ki[i],
-                re[i] * self.ki[i] + im[i] * self.kr[i],
-            );
-            re[i] = r;
-            im[i] = m;
+        if n <= 1 {
+            // 1-point FFT: pointwise scale by the kernel only.
+            for v in re.iter_mut() {
+                *v *= self.kr[0];
+            }
+            return;
         }
-        fft(re, im, true);
+        for (rr, ri) in re.chunks_exact_mut(n).zip(im.chunks_exact_mut(n)) {
+            fft_tabled(rr, ri, false, &self.twr, &self.twi);
+            for i in 0..n {
+                let (r, m) = (
+                    rr[i] * self.kr[i] - ri[i] * self.ki[i],
+                    rr[i] * self.ki[i] + ri[i] * self.kr[i],
+                );
+                rr[i] = r;
+                ri[i] = m;
+            }
+            fft_tabled(rr, ri, true, &self.twr, &self.twi);
+        }
     }
 }
 
@@ -382,6 +507,58 @@ mod tests {
                 assert!((got[i] - expect[i]).abs() < 1e-8 * n as f64, "n={n}");
             }
         });
+    }
+
+    #[test]
+    fn plan_batch_matches_single_row_bitwise() {
+        // The multi-row kernel must reproduce the single-row path bit for
+        // bit — this is what keeps apply_into and apply_batch_serial
+        // interchangeable for every FFT-backed family.
+        for_all(16, |g| {
+            let n = g.pow2_in(0, 8);
+            let rows = g.usize_in(1, 12);
+            let mut rng = Rng::new(g.u64());
+            let k: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let plan = ConvPlan::new(&k);
+            let batch: Vec<f64> = (0..rows * n).map(|_| rng.gaussian()).collect();
+            let mut expect = Vec::with_capacity(rows * n);
+            for row in batch.chunks_exact(n) {
+                let mut re = row.to_vec();
+                let mut im = vec![0.0; n];
+                plan.apply_in_place(&mut re, &mut im);
+                expect.extend_from_slice(&re);
+            }
+            let mut re = batch;
+            let mut im = vec![0.0; rows * n];
+            plan.apply_batch_in_place(&mut re, &mut im);
+            assert_eq!(re, expect, "n={n} rows={rows}");
+        });
+    }
+
+    #[test]
+    fn plan_scratch_reuse_is_clean() {
+        // dirty im scratch (and dirty padding in re from a previous call)
+        // must not leak into results.
+        let mut rng = Rng::new(17);
+        let n = 32;
+        let k: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let plan = ConvPlan::new(&k);
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let clean = plan.apply(&x);
+        let mut re = x.clone();
+        let mut im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect(); // garbage
+        plan.apply_in_place(&mut re, &mut im);
+        assert_eq!(re, clean);
+    }
+
+    #[test]
+    fn batch_block_rows_bounds() {
+        for n in [1usize, 2, 64, 1024, 1 << 14, 1 << 16] {
+            let k = vec![1.0f64; n];
+            let plan = ConvPlan::new(&k);
+            let b = plan.batch_block_rows();
+            assert!((1..=8).contains(&b), "n={n} -> block {b}");
+        }
     }
 
     #[test]

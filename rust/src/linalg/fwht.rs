@@ -134,76 +134,35 @@ pub fn fwht_normalized(x: &mut [f32]) {
 /// Unnormalized FWHT over every row of a row-major `rows x n` batch,
 /// bit-for-bit identical to calling [`fwht`] on each row.
 ///
-/// Rows are processed in L2-sized blocks; within a block every butterfly
-/// level runs across all of the block's rows before advancing to the next
-/// level, so one level's add/sub pattern streams through the block instead
-/// of re-deriving the full per-row schedule once per row. This is the
-/// batch kernel under every Hadamard-based family's `apply_batch_into`.
+/// Internally this IS a per-row traversal: each row runs all butterfly
+/// levels while it is L1-resident. A level-major organization (every level
+/// swept across a block of rows before the next level) was shipped in PR 1
+/// and REVERTED here: calibration against a C mirror of both kernels
+/// measured level-major 5–35% slower across n = 32..4096 — re-streaming
+/// the block once per level trades L1 hits for L2 traffic, and the per-row
+/// butterfly schedule is too cheap to be worth amortizing (PR 2,
+/// tools/bench_mirror.c).
 pub fn fwht_batch(data: &mut [f32], n: usize) {
     if n <= 1 || data.is_empty() {
         return;
     }
     debug_assert!(n.is_power_of_two(), "FWHT length must be a power of two");
     debug_assert_eq!(data.len() % n, 0);
-    // 64 Ki floats = 256 KiB per block: comfortably inside a typical L2.
-    let rows_per_block = ((1usize << 16) / n).max(1);
-    for block in data.chunks_mut(rows_per_block * n) {
-        fwht_block_level_major(block, n);
+    for row in data.chunks_exact_mut(n) {
+        fwht(row);
     }
 }
 
-/// All butterfly levels over one block of rows, level-major.
-fn fwht_block_level_major(block: &mut [f32], n: usize) {
-    if n == 2 {
-        for row in block.chunks_exact_mut(2) {
-            let (a, b) = (row[0], row[1]);
-            row[0] = a + b;
-            row[1] = a - b;
-        }
+/// Apply the normalized FWHT to every row of a row-major `rows x n` batch
+/// (per-row [`fwht_normalized`], so the `1/√n` scale stays fused into each
+/// row's last butterfly level — no separate scale sweep).
+pub fn fwht_batch_normalized(data: &mut [f32], n: usize) {
+    if n == 0 {
         return;
     }
-    // fused h=1 + h=2 head across all rows (matches `fwht`'s radix-4 head)
-    for row in block.chunks_exact_mut(n) {
-        let mut i = 0;
-        while i < n {
-            let (a, b, c, d) = (row[i], row[i + 1], row[i + 2], row[i + 3]);
-            let (ab0, ab1) = (a + b, a - b);
-            let (cd0, cd1) = (c + d, c - d);
-            row[i] = ab0 + cd0;
-            row[i + 1] = ab1 + cd1;
-            row[i + 2] = ab0 - cd0;
-            row[i + 3] = ab1 - cd1;
-            i += 4;
-        }
-    }
-    let mut h = 4;
-    while h < n {
-        for row in block.chunks_exact_mut(n) {
-            let mut i = 0;
-            while i < n {
-                let (head, tail) = row[i..i + 2 * h].split_at_mut(h);
-                for (u, v) in head.iter_mut().zip(tail.iter_mut()) {
-                    let a = *u;
-                    let b = *v;
-                    *u = a + b;
-                    *v = a - b;
-                }
-                i += h * 2;
-            }
-        }
-        h *= 2;
-    }
-}
-
-/// Apply the normalized FWHT to every row of a row-major `rows x n` batch.
-pub fn fwht_batch_normalized(data: &mut [f32], n: usize) {
     debug_assert_eq!(data.len() % n, 0);
-    fwht_batch(data, n);
-    if n > 1 {
-        let s = 1.0 / (n as f32).sqrt();
-        for v in data.iter_mut() {
-            *v *= s;
-        }
+    for row in data.chunks_exact_mut(n) {
+        fwht_normalized(row);
     }
 }
 
@@ -352,8 +311,10 @@ mod tests {
     }
 
     #[test]
-    fn batch_spanning_multiple_cache_blocks() {
-        // n = 8192 -> 8 rows per 256 KiB block; 20 rows forces 3 blocks.
+    fn batch_matches_rowwise_at_large_n() {
+        // large-n regression shape (8192-float rows, 20 of them): the batch
+        // entry point must stay bit-identical to per-row fwht far beyond
+        // any cache-resident size.
         let n = 8192;
         let rows = 20;
         let mut rng = Rng::new(77);

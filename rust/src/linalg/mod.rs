@@ -9,4 +9,4 @@ pub mod vecops;
 pub mod workspace;
 
 pub use dense::Mat;
-pub use workspace::{Workspace, WorkspacePool};
+pub use workspace::Workspace;

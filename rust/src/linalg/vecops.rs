@@ -31,18 +31,6 @@ pub fn scale_by(a: &mut [f32], d: &[f32]) {
     }
 }
 
-/// Scale every row of a row-major batch by the same diagonal:
-/// `data[r * n + i] *= d[i]` with `n = d.len()` — the batch-level `D` pass
-/// of every `HD` spin.
-#[inline]
-pub fn scale_rows(data: &mut [f32], d: &[f32]) {
-    debug_assert!(!d.is_empty());
-    debug_assert_eq!(data.len() % d.len(), 0);
-    for row in data.chunks_exact_mut(d.len()) {
-        scale_by(row, d);
-    }
-}
-
 /// Zero-pad `x` to length `n` (returns a new vector).
 pub fn pad_to(x: &[f32], n: usize) -> Vec<f32> {
     debug_assert!(n >= x.len());

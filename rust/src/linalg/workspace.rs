@@ -5,10 +5,10 @@
 //! warmed the pools (or [`crate::transform::Transform::make_workspace`] has
 //! pre-warmed them), the hot path performs no heap allocations at all.
 //!
-//! [`WorkspacePool`] holds one `Workspace` per batch worker so
-//! `apply_batch_into` can shard rows across `std::thread::scope` threads
-//! (gateway-batcher style), each worker reusing its own scratch across
-//! batches.
+//! Batch execution pins one `Workspace` per worker thread inside the
+//! persistent [`crate::runtime::WorkerPool`] — the worker owns its scratch
+//! for its whole lifetime, so warm buffers survive across batches without
+//! any hand-off.
 //!
 //! Buffers are checked out by value ([`Workspace::take_f32`] /
 //! [`Workspace::take_f64`]) and returned with the matching `put_*`, which
@@ -18,7 +18,7 @@
 //! allocation is recycled every call.
 
 /// Minimum batch rows assigned to one worker before another thread is
-/// spawned — below this, thread-spawn latency dominates the kernel time.
+/// engaged — below this, dispatch latency dominates the kernel time.
 pub const MIN_ROWS_PER_WORKER: usize = 8;
 
 /// Grow-only pool of f32/f64 scratch buffers.
@@ -61,67 +61,24 @@ impl Workspace {
     }
 }
 
-/// Batch-execution worker count: the `TS_WORKERS` env var when set (>= 1),
-/// otherwise `available_parallelism` capped at 8.
+/// Pure worker-count resolution from an optional `TS_WORKERS` value:
+/// a parseable value `w` resolves to `max(w, 1)` — **`0` means "stay
+/// single-threaded"**, not "pick a default" — while unset / unparseable
+/// falls back to `available_parallelism` capped at 8.
+pub fn resolve_worker_count(ts_workers: Option<&str>) -> usize {
+    match ts_workers.and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(w) => w.max(1),
+        None => std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(8),
+    }
+}
+
+/// Batch-execution worker count from the environment (`TS_WORKERS`);
+/// see [`resolve_worker_count`] for the rules.
 pub fn worker_count_from_env() -> usize {
-    std::env::var("TS_WORKERS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|w| *w >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|p| p.get())
-                .unwrap_or(1)
-                .min(8)
-        })
-}
-
-/// One [`Workspace`] per batch worker, reused across `apply_batch_into`
-/// calls. Slots are created lazily and never shrink.
-#[derive(Debug)]
-pub struct WorkspacePool {
-    slots: Vec<Workspace>,
-    workers: usize,
-}
-
-impl WorkspacePool {
-    /// Pool targeting a fixed worker count (clamped to >= 1).
-    pub fn new(workers: usize) -> WorkspacePool {
-        WorkspacePool {
-            slots: Vec::new(),
-            workers: workers.max(1),
-        }
-    }
-
-    /// Pool sized by [`worker_count_from_env`].
-    pub fn from_env() -> WorkspacePool {
-        WorkspacePool::new(worker_count_from_env())
-    }
-
-    /// Target worker count (the actual count per batch is additionally
-    /// capped so each worker gets at least [`MIN_ROWS_PER_WORKER`] rows).
-    pub fn workers(&self) -> usize {
-        self.workers
-    }
-
-    /// Mutable access to the first `k` per-worker workspaces.
-    pub fn slots_mut(&mut self, k: usize) -> &mut [Workspace] {
-        while self.slots.len() < k {
-            self.slots.push(Workspace::new());
-        }
-        &mut self.slots[..k]
-    }
-
-    /// Mutable access to one slot (created on demand).
-    pub fn slot(&mut self, i: usize) -> &mut Workspace {
-        &mut self.slots_mut(i + 1)[i]
-    }
-}
-
-impl Default for WorkspacePool {
-    fn default() -> Self {
-        WorkspacePool::from_env()
-    }
+    resolve_worker_count(std::env::var("TS_WORKERS").ok().as_deref())
 }
 
 #[cfg(test)]
@@ -154,20 +111,31 @@ mod tests {
     }
 
     #[test]
-    fn pool_slots_are_distinct_and_persistent() {
-        let mut pool = WorkspacePool::new(3);
-        assert_eq!(pool.workers(), 3);
-        pool.slot(0).put_f32(vec![1.0; 4]);
-        assert_eq!(pool.slots_mut(3).len(), 3);
-        // slot 0 kept its pooled buffer; slot 1 starts empty
-        let a = pool.slot(0).take_f32(4);
-        assert_eq!(a.len(), 4);
-        pool.slot(0).put_f32(a);
+    fn worker_count_zero_degrades_to_serial() {
+        // TS_WORKERS=0 must mean "single-threaded", never "use the default".
+        assert_eq!(resolve_worker_count(Some("0")), 1);
+        assert_eq!(resolve_worker_count(Some(" 0 ")), 1);
     }
 
     #[test]
-    fn worker_count_at_least_one() {
+    fn worker_count_explicit_values_respected() {
+        assert_eq!(resolve_worker_count(Some("1")), 1);
+        assert_eq!(resolve_worker_count(Some("3")), 3);
+        // values larger than the machine are allowed here; the per-batch
+        // cap (WorkerPool::workers_for) bounds the actual fan-out.
+        assert_eq!(resolve_worker_count(Some("64")), 64);
+    }
+
+    #[test]
+    fn worker_count_garbage_falls_back_to_default() {
+        for v in [None, Some(""), Some("abc"), Some("-3"), Some("2.5")] {
+            let w = resolve_worker_count(v);
+            assert!((1..=8).contains(&w), "{v:?} -> {w}");
+        }
+    }
+
+    #[test]
+    fn worker_count_from_env_at_least_one() {
         assert!(worker_count_from_env() >= 1);
-        assert_eq!(WorkspacePool::new(0).workers(), 1);
     }
 }

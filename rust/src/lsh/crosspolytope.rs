@@ -7,6 +7,7 @@
 
 use crate::linalg::vecops::argmax_abs_signed;
 use crate::linalg::Workspace;
+use crate::runtime::WorkerPool;
 use crate::transform::{make_square, Family, Transform};
 use crate::util::rng::Rng;
 
@@ -58,6 +59,24 @@ impl CrossPolytopeHash {
     pub fn hash(&self, x: &[f32]) -> usize {
         let mut ws = Workspace::new();
         self.hash_with(x, &mut ws)
+    }
+
+    /// Hash a row-major batch (`rows` inputs of `dim()`, already padded)
+    /// into `out`, projecting every row through the persistent worker
+    /// pool's batch engine — the bulk-index-build path. Bit-identical per
+    /// row to [`CrossPolytopeHash::hash_with`].
+    pub fn hash_batch(&self, xs: &[f32], out: &mut [usize], pool: &WorkerPool) {
+        let n = self.transform.dim_in();
+        let k = self.transform.dim_out();
+        debug_assert_eq!(xs.len() % n, 0);
+        let rows = xs.len() / n;
+        debug_assert_eq!(out.len(), rows);
+        let mut proj = pool.with_serial_workspace(|ws| ws.take_f32(rows * k));
+        self.transform.apply_batch_into(xs, &mut proj, pool);
+        for (o, prow) in out.iter_mut().zip(proj.chunks_exact(k)) {
+            *o = argmax_abs_signed(prow);
+        }
+        pool.with_serial_workspace(move |ws| ws.put_f32(proj));
     }
 }
 

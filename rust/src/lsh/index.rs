@@ -7,9 +7,15 @@
 use super::crosspolytope::CrossPolytopeHash;
 use crate::linalg::vecops::euclidean;
 use crate::linalg::Workspace;
+use crate::runtime::WorkerPool;
 use crate::transform::Family;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
+
+/// FNV-1a offset basis / prime used to combine the `t` sub-hashes of one
+/// table into a single 64-bit bucket key.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1000_0000_01b3;
 
 /// One hash table: `t` concatenated hash functions.
 struct Table {
@@ -20,10 +26,10 @@ struct Table {
 impl Table {
     fn key(&self, x: &[f32], ws: &mut Workspace) -> u64 {
         // combine the t sub-hashes into one 64-bit key
-        let mut k = 0xcbf2_9ce4_8422_2325u64; // FNV offset basis
+        let mut k = FNV_OFFSET;
         for h in &self.hashes {
             k ^= h.hash_with(x, ws) as u64;
-            k = k.wrapping_mul(0x1000_0000_01b3);
+            k = k.wrapping_mul(FNV_PRIME);
         }
         k
     }
@@ -54,12 +60,29 @@ impl LshIndex {
                 buckets: HashMap::new(),
             })
             .collect();
-        // one workspace reused across every (point, table, hash) insert
-        let mut ws = Workspace::new();
-        for (i, p) in points.iter().enumerate() {
-            for tb in tables.iter_mut() {
-                let k = tb.key(p, &mut ws);
-                tb.buckets.entry(k).or_default().push(i);
+        // Bulk build: every (table, hash) projects the whole point set in
+        // one sweep over the persistent worker pool — batch-level FWHT/FFT
+        // kernels plus multi-core sharding instead of per-point applies.
+        // Key combination matches Table::key exactly (FNV over sub-hashes).
+        let rows = points.len();
+        let pool = WorkerPool::global();
+        let mut flat = vec![0.0f32; rows * n];
+        for (p, row) in points.iter().zip(flat.chunks_exact_mut(n)) {
+            assert!(p.len() <= n, "point dim {} exceeds hash dim {n}", p.len());
+            row[..p.len()].copy_from_slice(p);
+        }
+        let mut codes = vec![0usize; rows];
+        for tb in tables.iter_mut() {
+            let mut keys = vec![FNV_OFFSET; rows];
+            for h in &tb.hashes {
+                h.hash_batch(&flat, &mut codes, pool);
+                for (k, c) in keys.iter_mut().zip(&codes) {
+                    *k ^= *c as u64;
+                    *k = k.wrapping_mul(FNV_PRIME);
+                }
+            }
+            for (i, k) in keys.iter().enumerate() {
+                tb.buckets.entry(*k).or_default().push(i);
             }
         }
         LshIndex { tables, points }

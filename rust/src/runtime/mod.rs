@@ -1,14 +1,20 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt` (lowered by
-//! `python/compile/aot.py`) and execute them from the Rust request path.
+//! Execution runtime: the persistent batch worker pool, plus the PJRT
+//! artifact path (`artifacts/*.hlo.txt` lowered by
+//! `python/compile/aot.py`).
 //!
+//! * [`pool`] — long-lived worker pool with pinned per-worker workspaces;
+//!   every batch consumer (transform trait path, native backend, feature
+//!   maps, LSH, JLT, Newton sketch) shards rows through it.
 //! * [`manifest`] — parses/validates `artifacts/manifest.json`.
 //! * [`executor`] — PJRT CPU client + compiled executables (single thread).
 //! * [`service`] — thread-hosted executor with a `Send + Sync` handle.
 
 pub mod executor;
 pub mod manifest;
+pub mod pool;
 pub mod service;
 
 pub use executor::{ExecError, Executor, Output};
 pub use manifest::{ArtifactSpec, Manifest, Op};
+pub use pool::WorkerPool;
 pub use service::{RuntimeHandle, RuntimeService};

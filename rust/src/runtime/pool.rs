@@ -1,0 +1,510 @@
+//! Persistent worker-pool runtime for batch execution.
+//!
+//! PR 1 sharded batch rows across `std::thread::scope` workers, which spawns
+//! and joins OS threads on **every batch** — fine for one-shot sweeps, wrong
+//! for steady-state serving where thread spawn latency (~10–50 µs) rivals
+//! the kernel time of a small batch. [`WorkerPool`] replaces that with a
+//! long-lived, lazily-started pool:
+//!
+//! * Worker threads are spawned **once**, on the first batch large enough to
+//!   go parallel, and live for the pool's lifetime. Steady state performs
+//!   zero thread spawns per batch.
+//! * Each worker owns one pinned [`Workspace`] for its whole lifetime, so
+//!   family scratch (FFT rows, padding buffers) is reused across every batch
+//!   it ever shards — zero heap allocations per batch once warm.
+//! * Dispatch is two `std::sync::mpsc::sync_channel` hops per worker (job
+//!   down, ack back). Bounded channels preallocate their slot buffers at
+//!   construction, so a dispatch allocates nothing.
+//! * Serial batches (fewer than [`MIN_ROWS_PER_WORKER`] rows per would-be
+//!   worker, or too little total work to amortize a wakeup) never touch the
+//!   worker threads at all — they run on the caller thread against a
+//!   thread-local serial workspace, so concurrent lane threads stay fully
+//!   parallel with each other, and do not start the pool.
+//!
+//! Sizing comes from `TS_WORKERS` (`0` and `1` both mean "stay
+//! single-threaded"; unset falls back to `available_parallelism` capped at
+//! 8 — see [`crate::linalg::workspace::resolve_worker_count`]). Per-batch
+//! counts are additionally capped by [`WorkerPool::workers_for`] so a batch
+//! never fans out wider than its row count supports.
+//!
+//! The process-wide default pool is [`WorkerPool::global`]; components that
+//! need a pinned worker count (tests, `NativeBackend::with_workers`) own a
+//! private pool, whose threads are shut down and joined on drop.
+
+use crate::linalg::workspace::{worker_count_from_env, Workspace, MIN_ROWS_PER_WORKER};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Mutex, OnceLock};
+use std::thread::{JoinHandle, ThreadId};
+
+/// A borrowed batch task: invoked once per participating worker with the
+/// worker's slot index and its pinned workspace.
+type Task<'a> = &'a (dyn Fn(usize, &mut Workspace) + Sync);
+
+/// The `'static`-erased form that crosses the channel. Sound because
+/// [`WorkerPool::run`] blocks until every dispatched worker has acked, so
+/// the borrow outlives all uses.
+type TaskRef = &'static (dyn Fn(usize, &mut Workspace) + Sync);
+
+struct Job {
+    task: TaskRef,
+}
+
+/// Channel ends the submitting side holds; one mutex serializes whole
+/// batches (submit + drain), which also keeps ack accounting trivially
+/// correct under concurrent callers.
+struct ExecState {
+    job_txs: Vec<SyncSender<Job>>,
+    done_rx: Receiver<bool>,
+}
+
+struct PoolInner {
+    exec: Mutex<ExecState>,
+    thread_ids: Vec<ThreadId>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Default for [`WorkerPool::min_work_per_worker`]: the estimated work (in
+/// ~f32-butterfly-op units, see [`crate::transform::Transform::batch_work_per_row`])
+/// a worker must receive before fanning a batch out is worth a wakeup.
+/// Calibrated with `tools/bench_mirror.c` on the 2-vCPU authoring box,
+/// where a pool round-trip costs ~0.2 ms: shards below ~2 ms of work
+/// measured slower pooled than serial there. Deliberately conservative for
+/// larger machines (their wakeups are cheaper, but a sub-millisecond batch
+/// rarely needs more cores); override with `TS_MIN_WORK` or
+/// [`WorkerPool::with_min_work`].
+pub const DEFAULT_MIN_WORK_PER_WORKER: usize = 1 << 22;
+
+/// Long-lived batch-execution worker pool. See the module docs.
+pub struct WorkerPool {
+    size: usize,
+    /// Work gate for [`WorkerPool::workers_for_work`]; 0 disables the gate
+    /// (row-count rule only).
+    min_work_per_worker: usize,
+    inner: OnceLock<PoolInner>,
+}
+
+impl WorkerPool {
+    /// Pool with a pinned worker count (clamped to >= 1) and the default
+    /// work gate. Threads are not spawned until the first parallel
+    /// [`WorkerPool::run`].
+    pub fn new(size: usize) -> WorkerPool {
+        WorkerPool::with_min_work(size, DEFAULT_MIN_WORK_PER_WORKER)
+    }
+
+    /// Pool with an explicit work gate (`0` disables it — every batch that
+    /// clears the row-count floor fans out; used by the bit-parity tests
+    /// to force the parallel path on small shapes).
+    pub fn with_min_work(size: usize, min_work_per_worker: usize) -> WorkerPool {
+        WorkerPool {
+            size: size.max(1),
+            min_work_per_worker,
+            inner: OnceLock::new(),
+        }
+    }
+
+    /// Pool sized by `TS_WORKERS` / machine parallelism, work gate from
+    /// `TS_MIN_WORK` (defaults to [`DEFAULT_MIN_WORK_PER_WORKER`]).
+    pub fn from_env() -> WorkerPool {
+        let min_work = std::env::var("TS_MIN_WORK")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(DEFAULT_MIN_WORK_PER_WORKER);
+        WorkerPool::with_min_work(worker_count_from_env(), min_work)
+    }
+
+    /// The process-wide shared pool (lazily constructed, never dropped).
+    /// This is what the transform trait path, feature maps, LSH index, JLT
+    /// and Newton sketch all execute on, so steady-state serving keeps one
+    /// set of warm workers regardless of which subsystem a request hits.
+    pub fn global() -> &'static WorkerPool {
+        static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+        GLOBAL.get_or_init(WorkerPool::from_env)
+    }
+
+    /// Maximum workers this pool will ever run (the spawn count).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Hardened per-batch worker resolution: never more than the pool size,
+    /// never so many that a worker gets fewer than [`MIN_ROWS_PER_WORKER`]
+    /// rows, and always at least 1 (the serial path). `TS_WORKERS=0`,
+    /// `TS_WORKERS` larger than the row count, and tiny batches all degrade
+    /// to 1 here instead of spawning idle workers or panicking.
+    pub fn workers_for(&self, rows: usize) -> usize {
+        self.size.min(rows / MIN_ROWS_PER_WORKER).max(1)
+    }
+
+    /// [`WorkerPool::workers_for`] plus the work gate: a batch whose total
+    /// estimated work (`rows * work_per_row`, in the units of
+    /// [`crate::transform::Transform::batch_work_per_row`]) cannot give
+    /// every engaged worker at least [`WorkerPool::min_work_per_worker`]
+    /// stays serial — waking a worker for less costs more than it saves.
+    pub fn workers_for_work(&self, rows: usize, work_per_row: usize) -> usize {
+        let by_rows = self.workers_for(rows);
+        if self.min_work_per_worker == 0 {
+            return by_rows;
+        }
+        let by_work = rows
+            .saturating_mul(work_per_row)
+            .checked_div(self.min_work_per_worker)
+            .unwrap_or(usize::MAX);
+        by_rows.min(by_work).max(1)
+    }
+
+    /// Whether the worker threads have been spawned yet. Serial-only
+    /// workloads keep this `false` forever.
+    pub fn started(&self) -> bool {
+        self.inner.get().is_some()
+    }
+
+    /// ThreadIds of the worker threads in slot order, spawning them if
+    /// needed. Stable for the pool's lifetime — the regression surface for
+    /// "no thread is spawned per batch".
+    pub fn thread_ids(&self) -> Vec<ThreadId> {
+        self.inner().thread_ids.clone()
+    }
+
+    /// Run `f` on the caller thread with a **thread-local** serial
+    /// workspace. Per-thread (not per-pool-mutex) scratch keeps concurrent
+    /// callers — e.g. several coordinator lane threads whose batches all
+    /// fall under the work gate — fully parallel: each lane thread warms
+    /// and reuses its own workspace, and nobody blocks on a shared lock
+    /// for the duration of a kernel. Nested use (a serial task that itself
+    /// enters the serial path) falls back to fresh scratch instead of
+    /// aliasing the outer borrow.
+    pub fn with_serial_workspace<R>(&self, f: impl FnOnce(&mut Workspace) -> R) -> R {
+        thread_local! {
+            static SERIAL_WS: std::cell::RefCell<Workspace> =
+                std::cell::RefCell::new(Workspace::new());
+        }
+        SERIAL_WS.with(|cell| match cell.try_borrow_mut() {
+            Ok(mut ws) => f(&mut ws),
+            Err(_) => f(&mut Workspace::new()),
+        })
+    }
+
+    /// Execute `task` on `workers` pool threads (slot indices
+    /// `0..workers`), blocking until all of them finish. `workers <= 1`
+    /// runs on the caller thread and never starts the pool. Allocation-free
+    /// once the pool is warm.
+    ///
+    /// Panics if a worker task panics or a worker thread is gone.
+    pub fn run(&self, workers: usize, task: Task<'_>) {
+        if workers <= 1 {
+            self.with_serial_workspace(|ws| task(0, ws));
+            return;
+        }
+        let workers = workers.min(self.size);
+        let inner = self.inner();
+        // Safety: the borrow is erased to 'static only for the duration of
+        // this call; the ack-drain below guarantees no worker touches the
+        // task after `run` returns (see the send-failure path, which still
+        // drains every ack for a successfully dispatched job).
+        let task: TaskRef = unsafe { std::mem::transmute::<Task<'_>, TaskRef>(task) };
+        let exec = inner
+            .exec
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let mut dispatched = 0usize;
+        let mut worker_gone = false;
+        for tx in &exec.job_txs[..workers] {
+            if tx.send(Job { task }).is_err() {
+                worker_gone = true;
+                break;
+            }
+            dispatched += 1;
+        }
+        let mut task_panicked = false;
+        for _ in 0..dispatched {
+            match exec.done_rx.recv() {
+                Ok(ok) => task_panicked |= !ok,
+                // Err: every worker is gone, so no outstanding borrows.
+                Err(_) => {
+                    worker_gone = true;
+                    break;
+                }
+            }
+        }
+        drop(exec);
+        assert!(!worker_gone, "worker pool: a worker thread died");
+        assert!(!task_panicked, "worker pool: a worker task panicked");
+    }
+
+    fn inner(&self) -> &PoolInner {
+        self.inner.get_or_init(|| {
+            let (done_tx, done_rx) = sync_channel::<bool>(self.size);
+            let mut job_txs = Vec::with_capacity(self.size);
+            let mut handles = Vec::with_capacity(self.size);
+            for i in 0..self.size {
+                // capacity 1: at most one in-flight job per worker (run()
+                // acks before the next dispatch), and a bounded channel
+                // preallocates its slot — no allocation per send.
+                let (tx, rx) = sync_channel::<Job>(1);
+                let ack = done_tx.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("ts-worker-{i}"))
+                    .spawn(move || worker_loop(i, rx, ack))
+                    .expect("spawn worker-pool thread");
+                job_txs.push(tx);
+                handles.push(handle);
+            }
+            let thread_ids = handles.iter().map(|h| h.thread().id()).collect();
+            PoolInner {
+                exec: Mutex::new(ExecState { job_txs, done_rx }),
+                thread_ids,
+                handles,
+            }
+        })
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            // dropping the job senders ends every worker's recv loop
+            drop(inner.exec);
+            for h in inner.handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("size", &self.size)
+            .field("started", &self.started())
+            .finish()
+    }
+}
+
+fn worker_loop(index: usize, rx: Receiver<Job>, ack: SyncSender<bool>) {
+    // The pinned workspace: lives exactly as long as the worker thread, so
+    // scratch warmed by one batch is reused by every later batch.
+    let mut ws = Workspace::new();
+    while let Ok(job) = rx.recv() {
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            (job.task)(index, &mut ws);
+        }))
+        .is_ok();
+        if ack.send(ok).is_err() {
+            return; // pool dropped mid-ack; nothing left to do
+        }
+    }
+}
+
+/// Shard `rows` rows across the pool: `task(lo, hi, slot, ws)` is invoked
+/// with disjoint, covering `lo..hi` row ranges. `work_per_row` is the
+/// caller's per-row cost estimate (see
+/// [`crate::transform::Transform::batch_work_per_row`]) feeding the work
+/// gate. The standard row-parallel driver used by the transform trait path
+/// and the native backend; callers supply the (unsafe, range-disjoint)
+/// buffer slicing.
+pub fn shard_rows(
+    pool: &WorkerPool,
+    rows: usize,
+    work_per_row: usize,
+    task: &(dyn Fn(usize, usize, usize, &mut Workspace) + Sync),
+) {
+    if rows == 0 {
+        return;
+    }
+    let workers = pool.workers_for_work(rows, work_per_row);
+    if workers <= 1 {
+        pool.with_serial_workspace(|ws| task(0, rows, 0, ws));
+        return;
+    }
+    let rows_per = rows.div_ceil(workers);
+    let shards = rows.div_ceil(rows_per);
+    pool.run(shards, &|i, ws| {
+        let lo = i * rows_per;
+        let hi = rows.min(lo + rows_per);
+        if lo < hi {
+            task(lo, hi, i, ws);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_run_never_starts_threads() {
+        let pool = WorkerPool::new(4);
+        let hit = AtomicUsize::new(0);
+        pool.run(1, &|i, _ws| {
+            assert_eq!(i, 0);
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+        assert!(!pool.started(), "workers <= 1 must not spawn threads");
+    }
+
+    #[test]
+    fn parallel_run_covers_every_slot_once() {
+        let pool = WorkerPool::new(3);
+        for _ in 0..5 {
+            let hits = [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)];
+            pool.run(3, &|i, _ws| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for h in &hits {
+                assert_eq!(h.load(Ordering::SeqCst), 1);
+            }
+        }
+        assert!(pool.started());
+        assert_eq!(pool.thread_ids().len(), 3);
+    }
+
+    #[test]
+    fn thread_ids_stable_across_batches() {
+        let pool = WorkerPool::new(2);
+        pool.run(2, &|_i, _ws| {});
+        let ids = pool.thread_ids();
+        for _ in 0..10 {
+            pool.run(2, &|_i, _ws| {});
+        }
+        assert_eq!(pool.thread_ids(), ids, "no worker may be respawned per batch");
+    }
+
+    #[test]
+    fn workspaces_are_pinned_per_worker() {
+        // A buffer put into slot 1's workspace during one batch must come
+        // back (same allocation) in the next batch on the same slot.
+        let pool = WorkerPool::new(2);
+        let ptrs = Mutex::new([0usize; 2]);
+        pool.run(2, &|i, ws| {
+            let buf = ws.take_f32(64);
+            ptrs.lock().unwrap()[i] = buf.as_ptr() as usize;
+            ws.put_f32(buf);
+        });
+        let first = *ptrs.lock().unwrap();
+        pool.run(2, &|i, ws| {
+            let buf = ws.take_f32(64);
+            assert_eq!(
+                buf.as_ptr() as usize,
+                ptrs.lock().unwrap()[i],
+                "slot {i} must reuse its pinned workspace allocation"
+            );
+            ws.put_f32(buf);
+        });
+        assert_ne!(first[0], first[1], "slots own distinct workspaces");
+    }
+
+    #[test]
+    fn workers_for_hardening() {
+        let pool = WorkerPool::new(4);
+        // tiny batches stay serial
+        assert_eq!(pool.workers_for(0), 1);
+        assert_eq!(pool.workers_for(1), 1);
+        assert_eq!(pool.workers_for(MIN_ROWS_PER_WORKER - 1), 1);
+        // one worker's worth of rows: still serial (no point dispatching)
+        assert_eq!(pool.workers_for(MIN_ROWS_PER_WORKER), 1);
+        // enough rows for 2 but not 3 full shares
+        assert_eq!(pool.workers_for(2 * MIN_ROWS_PER_WORKER), 2);
+        // huge batches cap at the pool size
+        assert_eq!(pool.workers_for(10_000), 4);
+        // pool size larger than any batch's row budget degrades gracefully
+        let wide = WorkerPool::new(64);
+        assert_eq!(wide.workers_for(2 * MIN_ROWS_PER_WORKER), 2);
+        // size 0 clamps to 1
+        assert_eq!(WorkerPool::new(0).size(), 1);
+    }
+
+    #[test]
+    fn run_caps_workers_at_pool_size() {
+        let pool = WorkerPool::new(2);
+        let hits = AtomicUsize::new(0);
+        pool.run(8, &|_i, _ws| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn shard_rows_is_disjoint_and_covering() {
+        // gate disabled: every row-count-eligible batch must fan out
+        let pool = WorkerPool::with_min_work(3, 0);
+        for rows in [1usize, 7, 8, 16, 17, 24, 100] {
+            let marks = Mutex::new(vec![0u8; rows]);
+            shard_rows(&pool, rows, 1, &|lo, hi, _slot, _ws| {
+                let mut m = marks.lock().unwrap();
+                for r in lo..hi {
+                    m[r] += 1;
+                }
+            });
+            let m = marks.lock().unwrap();
+            assert!(m.iter().all(|c| *c == 1), "rows={rows}: {m:?}");
+        }
+    }
+
+    #[test]
+    fn work_gate_keeps_cheap_batches_serial() {
+        let pool = WorkerPool::with_min_work(4, 1000);
+        // plenty of rows, but 10 units each: 320 units total < 1000/worker
+        assert_eq!(pool.workers_for_work(32, 10), 1);
+        // 2000 units total: one extra worker's worth
+        assert_eq!(pool.workers_for_work(32, 63), 2);
+        // heavy rows: row-count floor still caps the fan-out
+        assert_eq!(pool.workers_for_work(16, 1_000_000), 2);
+        assert_eq!(pool.workers_for_work(7, 1_000_000), 1);
+        // gate disabled -> row rule only
+        let ungated = WorkerPool::with_min_work(4, 0);
+        assert_eq!(ungated.workers_for_work(32, 1), 4);
+        // overflow-proof
+        assert_eq!(pool.workers_for_work(usize::MAX, usize::MAX), 4);
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_and_complete() {
+        // the whole point of the transmute: workers mutate caller-borrowed
+        // buffers, and run() returns only after every write landed.
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u32; 64];
+        {
+            let ptr = data.as_mut_ptr() as usize;
+            pool.run(4, &|i, _ws| {
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut((ptr as *mut u32).add(i * 16), 16)
+                };
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (i * 16 + j) as u32;
+                }
+            });
+        }
+        for (j, v) in data.iter().enumerate() {
+            assert_eq!(*v, j as u32);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &|i, _ws| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must propagate to the caller");
+        // the pool still works afterwards
+        let hits = AtomicUsize::new(0);
+        pool.run(2, &|_i, _ws| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = WorkerPool::global() as *const WorkerPool;
+        let b = WorkerPool::global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(WorkerPool::global().size() >= 1);
+    }
+}

@@ -14,7 +14,10 @@ use std::thread::JoinHandle;
 enum Cmd {
     Run {
         name: String,
-        inputs: Vec<Vec<f32>>,
+        /// Shared buffers: callers with long-lived parameters (the
+        /// coordinator backends) pass `Arc` clones so nothing is deep-copied
+        /// per request; one-shot callers wrap owned vectors.
+        inputs: Vec<Arc<Vec<f32>>>,
         reply: mpsc::Sender<Result<Output, ExecError>>,
     },
     Names {
@@ -42,8 +45,20 @@ impl RuntimeHandle {
             .map_err(|_| ExecError("runtime thread gone".into()))
     }
 
-    /// Execute an artifact by name (blocking).
+    /// Execute an artifact by name (blocking), taking ownership of the
+    /// input buffers. Thin wrapper over [`RuntimeHandle::run_shared`].
     pub fn run(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Output, ExecError> {
+        self.run_shared(name, inputs.into_iter().map(Arc::new).collect())
+    }
+
+    /// Execute an artifact by name (blocking) over shared input buffers:
+    /// cached parameters cross the thread boundary as refcount bumps, not
+    /// deep copies.
+    pub fn run_shared(
+        &self,
+        name: &str,
+        inputs: Vec<Arc<Vec<f32>>>,
+    ) -> Result<Output, ExecError> {
         let (reply, rx) = mpsc::channel();
         self.send(Cmd::Run {
             name: name.to_string(),

@@ -10,7 +10,8 @@
 use super::logistic::{gram_t, LogisticProblem};
 use crate::linalg::dense::solve_spd;
 use crate::linalg::fwht::next_pow2;
-use crate::linalg::{Mat, WorkspacePool};
+use crate::linalg::Mat;
+use crate::runtime::WorkerPool;
 use crate::transform::{make, Family, Transform};
 use crate::util::rng::Rng;
 
@@ -110,9 +111,9 @@ pub fn sketch_apply(kind: SketchKind, b: &Mat, m: usize, rng: &mut Rng) -> Mat {
             let t: Box<dyn Transform> = make(f, m, np, np.min(m.max(1)), rng);
             let scale = (1.0 / m as f64).sqrt() as f32;
             // batch-first: the d columns of B become the d rows of one
-            // zero-padded batch, sketched in a single multi-worker
-            // apply_batch_into sweep — O(d · n log n) with no per-column
-            // allocation.
+            // zero-padded batch, sketched in a single sweep over the
+            // process-wide persistent worker pool — O(d · n log n) with no
+            // per-column allocation and no per-call thread spawns.
             let mut cols = vec![0.0f32; d * np];
             for j in 0..d {
                 for i in 0..n {
@@ -120,8 +121,7 @@ pub fn sketch_apply(kind: SketchKind, b: &Mat, m: usize, rng: &mut Rng) -> Mat {
                 }
             }
             let mut proj = vec![0.0f32; d * m];
-            let mut pool = WorkspacePool::from_env();
-            t.apply_batch_into(&cols, &mut proj, &mut pool);
+            t.apply_batch_into(&cols, &mut proj, WorkerPool::global());
             let mut out = Mat::zeros(m, d);
             for j in 0..d {
                 for i in 0..m {

@@ -89,9 +89,9 @@ impl Transform for StackedTransform {
     }
 
     /// Batch kernel: iterate **blocks outer, rows inner**, so each square
-    /// block's parameters stay hot while its batch kernel (level-major FWHT
-    /// / FFT scratch reuse) sweeps all rows; truncated prefixes are then
-    /// scattered into the interleaved output rows.
+    /// block's parameters stay hot while its batch kernel (row-resident
+    /// pipeline, FFT scratch reuse) sweeps all rows; truncated prefixes are
+    /// then scattered into the interleaved output rows.
     fn apply_batch_serial(&self, xs: &[f32], out: &mut [f32], ws: &mut Workspace) {
         let n = self.n;
         let k = self.k;
@@ -112,6 +112,11 @@ impl Transform for StackedTransform {
             }
         }
         ws.put_f32(buf);
+    }
+
+    /// Every block's square kernel runs per row.
+    fn batch_work_per_row(&self) -> usize {
+        self.blocks.iter().map(|b| b.batch_work_per_row()).sum()
     }
 
     fn name(&self) -> &'static str {

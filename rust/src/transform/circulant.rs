@@ -7,8 +7,8 @@
 
 use super::Transform;
 use crate::linalg::fft::ConvPlan;
-use crate::linalg::fwht::{fwht, fwht_batch};
-use crate::linalg::vecops::{scale_by, scale_rows};
+use crate::linalg::fwht::fwht;
+use crate::linalg::vecops::scale_by;
 use crate::linalg::Workspace;
 use crate::util::rng::Rng;
 
@@ -172,32 +172,57 @@ impl Transform for StructuredGaussian {
         ws.put_f64(re);
     }
 
-    /// Batch kernel: the whole sub-batch goes through `D1` + FWHT at batch
-    /// level (level-major butterflies), then the FFT top block runs per row
-    /// with the `ConvPlan` scratch buffers reused across every row.
+    /// Batch kernel, row-major with blocked FFT scratch: each row runs
+    /// `D1` + FWHT while L1-resident and is promoted straight into its f64
+    /// FFT row; the top block then runs through
+    /// [`ConvPlan::apply_batch_in_place`] over the block — shared twiddle
+    /// tables, scratch reused across every block of every batch (a
+    /// full-batch `D1`/FWHT pre-pass was reverted with the other
+    /// level-major sweeps; see [`crate::linalg::fwht::fwht_batch`]).
     fn apply_batch_serial(&self, xs: &[f32], out: &mut [f32], ws: &mut Workspace) {
         debug_assert_eq!(xs.len(), out.len());
         let n = self.n;
-        out.copy_from_slice(xs);
-        scale_rows(out, &self.d1);
-        fwht_batch(out, n);
         let m = self.plan.len();
-        let mut re = ws.take_f64(m);
-        let mut im = ws.take_f64(m);
-        for row in out.chunks_exact_mut(n) {
-            self.load_fft_input(row, &mut re);
-            // re-zero the embedding padding the previous row's convolution
-            // left behind
-            for v in re[n..].iter_mut() {
-                *v = 0.0;
+        let block = self.plan.batch_block_rows();
+        let mut re = ws.take_f64(block * m);
+        let mut im = ws.take_f64(block * m);
+        for (xchunk, ochunk) in xs.chunks(block * n).zip(out.chunks_mut(block * n)) {
+            let crows = xchunk.len() / n;
+            for ((src, stage), dst) in xchunk
+                .chunks_exact(n)
+                .zip(ochunk.chunks_exact_mut(n))
+                .zip(re.chunks_exact_mut(m))
+            {
+                stage.copy_from_slice(src);
+                scale_by(stage, &self.d1);
+                fwht(stage);
+                self.load_fft_input(stage, dst);
+                // re-zero the embedding padding a previous block's
+                // convolution left behind
+                for v in dst[n..].iter_mut() {
+                    *v = 0.0;
+                }
             }
-            self.plan.apply_in_place(&mut re, &mut im);
-            for i in 0..n {
-                row[i] = re[i] as f32;
+            self.plan
+                .apply_batch_in_place(&mut re[..crows * m], &mut im[..crows * m]);
+            for (dst, src) in ochunk.chunks_exact_mut(n).zip(re.chunks_exact(m)) {
+                for i in 0..n {
+                    dst[i] = src[i] as f32;
+                }
             }
         }
         ws.put_f64(im);
         ws.put_f64(re);
+    }
+
+    /// One FWHT pass plus two f64 FFTs of the (possibly 2n-embedded) plan
+    /// length — complex f64 butterflies cost ~8x an f32 add/sub pair, so
+    /// FFT families clear the pool's work gate at much smaller batches
+    /// than plain HD chains.
+    fn batch_work_per_row(&self) -> usize {
+        let n = self.n.max(2);
+        let m = self.plan.len().max(2);
+        n * (n.ilog2() as usize + 1) + 8 * (2 * m * (m.ilog2() as usize + 1) + m)
     }
 
     fn name(&self) -> &'static str {

@@ -38,6 +38,12 @@ impl Transform for DenseGaussian {
         self.mat.matvec_into(x, out);
     }
 
+    /// A dense matvec is `m * n` multiply-adds — far above the structured
+    /// families, so dense batches clear the pool's work gate early.
+    fn batch_work_per_row(&self) -> usize {
+        self.mat.rows * self.mat.cols
+    }
+
     fn name(&self) -> &'static str {
         "dense"
     }

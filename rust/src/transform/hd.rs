@@ -11,8 +11,8 @@
 //! chain is `O(k · n log n)` with zero stored floats for the discrete case.
 
 use super::Transform;
-use crate::linalg::fwht::{fwht, fwht_batch};
-use crate::linalg::vecops::{scale_by, scale_rows};
+use crate::linalg::fwht::fwht;
+use crate::linalg::vecops::scale_by;
 use crate::linalg::Workspace;
 use crate::util::rng::Rng;
 
@@ -139,16 +139,18 @@ impl Transform for HdChain {
         self.apply_in_place(out);
     }
 
-    /// Batch kernel: each `D` scaling and each FWHT butterfly level runs
-    /// across the whole sub-batch (level-major, cache-blocked) instead of
-    /// row at a time.
-    fn apply_batch_serial(&self, xs: &[f32], out: &mut [f32], _ws: &mut Workspace) {
-        debug_assert_eq!(xs.len(), out.len());
-        out.copy_from_slice(xs);
-        for d in &self.diags {
-            scale_rows(out, d);
-            fwht_batch(out, self.n);
-        }
+    // NOTE: no `apply_batch_serial` override. The trait default (per-row
+    // `apply_into`) is the measured-fastest organization for HD chains:
+    // each row runs all `k` spins while L1-resident. The PR-1 spin-major
+    // override (every spin swept across the whole sub-batch before the
+    // next) was reverted after C-mirror calibration showed it 5–30% slower
+    // at n >= 256 — three full-batch sweeps trade row-local L1 reuse for
+    // repeated L2 streaming (PR 2, tools/bench_mirror.c).
+
+    /// `k` spins of (scale + FWHT) per row.
+    fn batch_work_per_row(&self) -> usize {
+        let n = self.n.max(2);
+        self.diags.len() * n * (n.ilog2() as usize + 1)
     }
 
     fn name(&self) -> &'static str {

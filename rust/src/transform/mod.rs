@@ -29,8 +29,8 @@ pub use circulant::StructuredGaussian;
 pub use dense_gaussian::DenseGaussian;
 pub use hd::HdChain;
 
-use crate::linalg::workspace::MIN_ROWS_PER_WORKER;
-use crate::linalg::{Workspace, WorkspacePool};
+use crate::linalg::Workspace;
+use crate::runtime::pool::{shard_rows, WorkerPool};
 use crate::util::rng::Rng;
 
 /// A randomized linear transform `R^{dim_in} -> R^{dim_out}` standing in for
@@ -39,9 +39,11 @@ use crate::util::rng::Rng;
 /// The execution surface is **batch-first and zero-allocation**: the one
 /// required compute method is [`Transform::apply_into`], which draws every
 /// intermediate buffer from a caller-owned [`Workspace`]. Batches go through
-/// [`Transform::apply_batch_into`], which shards rows across scoped worker
-/// threads (env-tunable via `TS_WORKERS`), each worker driving the family's
-/// serial batch kernel with its own reused workspace. The allocating
+/// [`Transform::apply_batch_into`], which shards rows across the persistent
+/// [`WorkerPool`] (env-tunable via `TS_WORKERS`) — worker threads are
+/// spawned once and live for the pool's lifetime, each driving the family's
+/// serial batch kernel with its own pinned workspace, so steady state pays
+/// zero thread spawns and zero heap allocations per batch. The allocating
 /// [`Transform::apply`] / [`Transform::apply_batch`] remain as thin wrappers
 /// for call sites off the hot path.
 pub trait Transform: Send + Sync {
@@ -89,9 +91,22 @@ pub trait Transform: Send + Sync {
         }
     }
 
+    /// Estimated per-row batch cost in ~f32-butterfly-op units, feeding the
+    /// worker pool's work gate ([`WorkerPool::workers_for_work`]): batches
+    /// whose total estimate cannot give every worker
+    /// `min_work_per_worker` units stay on the caller thread. The default
+    /// assumes one FWHT-like `n log n` pass; families with heavier kernels
+    /// (f64 FFTs, dense matvecs) override it so their batches fan out
+    /// sooner.
+    fn batch_work_per_row(&self) -> usize {
+        let n = self.dim_in().max(2);
+        n * (n.ilog2() as usize + 1)
+    }
+
     /// Single-threaded batch kernel over row-major rows. Families override
-    /// this with batch-level kernels (level-major FWHT over all rows, FFT
-    /// scratch reuse across rows); the default loops [`Transform::apply_into`].
+    /// this with batch-level kernels (row-resident multi-stage pipelines,
+    /// FFT scratch reuse across rows); the default loops
+    /// [`Transform::apply_into`].
     fn apply_batch_serial(&self, xs: &[f32], out: &mut [f32], ws: &mut Workspace) {
         let n = self.dim_in();
         let m = self.dim_out();
@@ -104,47 +119,43 @@ pub trait Transform: Send + Sync {
 
     /// Batch-first entry point: apply to each row of a row-major batch,
     /// writing row outputs into `out` (`rows * dim_out()` elements). Rows
-    /// are sharded across `std::thread::scope` workers — at most
-    /// `pool.workers()` of them, and no thread is spawned unless every
-    /// worker gets at least [`MIN_ROWS_PER_WORKER`] full shares of rows —
-    /// each worker reusing its own [`Workspace`] from the pool across
-    /// calls.
-    fn apply_batch_into(&self, xs: &[f32], out: &mut [f32], pool: &mut WorkspacePool) {
+    /// shard across the persistent [`WorkerPool`] — at most
+    /// [`WorkerPool::workers_for`] workers (so no worker gets fewer than
+    /// `MIN_ROWS_PER_WORKER` rows), each executing the family's serial
+    /// batch kernel against its pinned, batch-to-batch-reused
+    /// [`Workspace`]. Sub-threshold batches run on the caller thread and
+    /// never start the pool.
+    fn apply_batch_into(&self, xs: &[f32], out: &mut [f32], pool: &WorkerPool) {
         let n = self.dim_in();
         let m = self.dim_out();
-        debug_assert_eq!(xs.len() % n, 0);
-        let rows = xs.len() / n;
+        debug_assert_eq!(xs.len() % n.max(1), 0);
+        let rows = if n == 0 { 0 } else { xs.len() / n };
         debug_assert_eq!(out.len(), rows * m);
         if rows == 0 {
             return;
         }
-        let workers = pool.workers().min((rows / MIN_ROWS_PER_WORKER).max(1));
-        if workers <= 1 {
-            self.apply_batch_serial(xs, out, pool.slot(0));
-            return;
-        }
-        let rows_per = rows.div_ceil(workers);
-        let slots = pool.slots_mut(workers);
-        std::thread::scope(|s| {
-            for ((xc, oc), ws) in xs
-                .chunks(rows_per * n)
-                .zip(out.chunks_mut(rows_per * m))
-                .zip(slots.iter_mut())
-            {
-                s.spawn(move || self.apply_batch_serial(xc, oc, ws));
-            }
+        let out_ptr = out.as_mut_ptr() as usize;
+        shard_rows(pool, rows, self.batch_work_per_row(), &|lo, hi, _slot, ws| {
+            let xc = &xs[lo * n..hi * n];
+            // Safety: shard_rows hands out disjoint, covering row ranges,
+            // and WorkerPool::run blocks until every worker acked — no two
+            // workers alias, no write outlives this call.
+            let oc = unsafe {
+                std::slice::from_raw_parts_mut((out_ptr as *mut f32).add(lo * m), (hi - lo) * m)
+            };
+            self.apply_batch_serial(xc, oc, ws);
         });
     }
 
     /// Apply to each row of a row-major batch, concatenating outputs. Thin
-    /// allocating wrapper over [`Transform::apply_batch_into`].
+    /// allocating wrapper over [`Transform::apply_batch_into`] on the
+    /// process-wide pool.
     fn apply_batch(&self, xs: &[f32]) -> Vec<f32> {
         let n = self.dim_in();
         debug_assert_eq!(xs.len() % n, 0);
         let rows = xs.len() / n;
         let mut out = vec![0.0f32; rows * self.dim_out()];
-        let mut pool = WorkspacePool::from_env();
-        self.apply_batch_into(xs, &mut out, &mut pool);
+        self.apply_batch_into(xs, &mut out, WorkerPool::global());
         out
     }
 
@@ -442,11 +453,13 @@ mod tests {
                 expect.extend_from_slice(&t.apply(r));
             }
             for workers in [1usize, 2, 4] {
-                let mut pool = WorkspacePool::new(workers);
+                // gate disabled so small shapes exercise the parallel path
+                let pool = WorkerPool::with_min_work(workers, 0);
                 let mut out = vec![0.0f32; rows * m_out];
-                // twice through the same pool: reused workspaces stay clean
+                // twice through the same pool: reused pinned workspaces
+                // stay clean across batches
                 for _ in 0..2 {
-                    t.apply_batch_into(&xs, &mut out, &mut pool);
+                    t.apply_batch_into(&xs, &mut out, &pool);
                     assert_eq!(out, expect, "{fam:?} n={n} rows={rows} workers={workers}");
                 }
             }
@@ -456,22 +469,43 @@ mod tests {
 
     #[test]
     fn large_batch_deterministically_hits_the_parallel_path() {
-        // rows = 70 with 4 workers guarantees threads actually spawn
+        // rows = 70 with 4 workers guarantees the pool actually engages
         // (70 / MIN_ROWS_PER_WORKER >= 4) for every family.
         let n = 32;
         let rows = 70;
         let xs = Rng::new(21).gaussian_vec(rows * n);
+        let pool = WorkerPool::with_min_work(4, 0);
         for fam in ALL_FAMILIES {
             let t = make_square(fam, n, &mut Rng::new(22));
             let mut expect = Vec::with_capacity(rows * n);
             for r in xs.chunks_exact(n) {
                 expect.extend_from_slice(&t.apply(r));
             }
-            let mut pool = WorkspacePool::new(4);
             let mut out = vec![0.0f32; rows * n];
-            t.apply_batch_into(&xs, &mut out, &mut pool);
+            t.apply_batch_into(&xs, &mut out, &pool);
             assert_eq!(out, expect, "{fam:?}");
         }
+        assert!(pool.started(), "this batch shape must engage the worker threads");
+    }
+
+    #[test]
+    fn small_batches_never_start_the_pool() {
+        // below MIN_ROWS_PER_WORKER * 2 rows there is nothing to fan out:
+        // the serial path must run on the caller thread with no spawns.
+        let n = 32;
+        let pool = WorkerPool::new(8);
+        let t = make_square(Family::Hd3, n, &mut Rng::new(33));
+        for rows in [1usize, 3, 7, 15] {
+            let xs = Rng::new(34).gaussian_vec(rows * n);
+            let mut out = vec![0.0f32; rows * n];
+            t.apply_batch_into(&xs, &mut out, &pool);
+            let mut expect = Vec::new();
+            for r in xs.chunks_exact(n) {
+                expect.extend_from_slice(&t.apply(r));
+            }
+            assert_eq!(out, expect, "rows={rows}");
+        }
+        assert!(!pool.started(), "small batches must stay single-threaded");
     }
 
     #[test]

@@ -1,6 +1,15 @@
-//! Verifies the execution-engine acceptance criterion: after a `Workspace`
-//! has been warmed, `Transform::apply_into` performs **zero heap
-//! allocations** — all scratch comes from the reused workspace.
+//! Verifies the execution-engine acceptance criteria:
+//!
+//! 1. after a `Workspace` has been warmed, `Transform::apply_into` performs
+//!    **zero heap allocations** — all scratch comes from the reused
+//!    workspace;
+//! 2. after one warmup batch, `Transform::apply_batch_into` through a
+//!    persistent `WorkerPool` performs **zero heap allocations and zero
+//!    thread spawns** per batch — worker threads and their pinned
+//!    workspaces are reused verbatim (thread ids stay stable);
+//! 3. `NativeBackend::run_batch` allocates only its output buffers
+//!    (bounded constant per call — a per-batch thread spawn would blow the
+//!    bound by an order of magnitude).
 //!
 //! A counting global allocator intercepts every alloc/realloc; the file
 //! holds exactly one `#[test]` so no concurrent test can perturb the
@@ -9,6 +18,8 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use triplespin::coordinator::{Backend, NativeBackend};
+use triplespin::runtime::{Op, WorkerPool};
 use triplespin::transform::{make, make_square, Family, Transform};
 use triplespin::util::rng::Rng;
 
@@ -40,8 +51,11 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
 
-#[test]
-fn apply_into_is_allocation_free_after_workspace_warmup() {
+fn alloc_count() -> usize {
+    ALLOCATIONS.load(Ordering::SeqCst)
+}
+
+fn check_apply_into_zero_alloc() {
     let n = 128;
     let transforms: Vec<Box<dyn Transform>> = vec![
         make_square(Family::Hd3, n, &mut Rng::new(1)),
@@ -62,11 +76,11 @@ fn apply_into_is_allocation_free_after_workspace_warmup() {
         // one more apply through the exact call path under test, so even a
         // first-use pool path cannot be blamed on the measured region
         t.apply_into(&x, &mut out, &mut ws);
-        let before = ALLOCATIONS.load(Ordering::SeqCst);
+        let before = alloc_count();
         for _ in 0..16 {
             t.apply_into(&x, &mut out, &mut ws);
         }
-        let after = ALLOCATIONS.load(Ordering::SeqCst);
+        let after = alloc_count();
         assert_eq!(
             before,
             after,
@@ -75,4 +89,83 @@ fn apply_into_is_allocation_free_after_workspace_warmup() {
             after - before
         );
     }
+}
+
+fn check_pooled_batch_zero_alloc_and_no_spawns() {
+    let n = 128;
+    let rows = 64; // 64 / MIN_ROWS_PER_WORKER = 8 >= 4 workers -> parallel
+    let xs = Rng::new(20).gaussian_vec(rows * n);
+    let transforms: Vec<Box<dyn Transform>> = vec![
+        make_square(Family::Hd3, n, &mut Rng::new(21)),
+        make_square(Family::Hdg, n, &mut Rng::new(22)),
+        make_square(Family::Circulant, n, &mut Rng::new(23)),
+        make_square(Family::Toeplitz, n, &mut Rng::new(24)),
+        make_square(Family::Hankel, n, &mut Rng::new(25)),
+        make_square(Family::SkewCirculant, n, &mut Rng::new(26)),
+        make(Family::Hd3, 2 * n, n, n, &mut Rng::new(27)),
+    ];
+    // work gate disabled: these shapes must deterministically exercise the
+    // parallel path (the gate itself is covered by unit tests)
+    let pool = WorkerPool::with_min_work(4, 0);
+    for t in &transforms {
+        let mut out = vec![0.0f32; rows * t.dim_out()];
+        // warmup: spawns the pool (first transform only) and warms every
+        // worker's pinned workspace for this family's scratch shapes
+        t.apply_batch_into(&xs, &mut out, &pool);
+        t.apply_batch_into(&xs, &mut out, &pool);
+        assert!(pool.started(), "this shape must engage the worker threads");
+        let ids_before = pool.thread_ids();
+        let before = alloc_count();
+        for _ in 0..8 {
+            t.apply_batch_into(&xs, &mut out, &pool);
+        }
+        let after = alloc_count();
+        assert_eq!(
+            before,
+            after,
+            "{}: pooled apply_batch_into allocated {} time(s) after warmup",
+            t.name(),
+            after - before
+        );
+        assert_eq!(
+            pool.thread_ids(),
+            ids_before,
+            "{}: worker threads must be reused, never respawned per batch",
+            t.name()
+        );
+    }
+}
+
+fn check_native_backend_bounded_allocs() {
+    let n = 256;
+    let rows = 64;
+    let xs = Rng::new(30).gaussian_vec(rows * n);
+    let be = NativeBackend::with_workers(&[n], 1.0, 31, 4);
+    // (op, output allocations per call: result buffers only)
+    let lanes = [(Op::Transform, 1usize), (Op::Rff, 2), (Op::CrossPolytope, 2)];
+    for (op, allowed) in lanes {
+        // warmup spawns the backend pool / warms scratch
+        be.run_batch(op, n, rows, &xs).unwrap();
+        be.run_batch(op, n, rows, &xs).unwrap();
+        let iters = 8;
+        let before = alloc_count();
+        for _ in 0..iters {
+            std::hint::black_box(be.run_batch(op, n, rows, &xs).unwrap());
+        }
+        let after = alloc_count();
+        assert!(
+            after - before <= iters * allowed,
+            "{op}: {} allocations over {iters} batches (allowed {} per batch: \
+             output buffers only — a per-batch thread spawn would far exceed this)",
+            after - before,
+            allowed
+        );
+    }
+}
+
+#[test]
+fn hot_paths_are_allocation_free_after_warmup() {
+    check_apply_into_zero_alloc();
+    check_pooled_batch_zero_alloc_and_no_spawns();
+    check_native_backend_bounded_allocs();
 }
