@@ -8,7 +8,12 @@
 //! * `pooled`   — `apply_batch_into` on a persistent [`WorkerPool`]
 //!   (`TS_WORKERS`-tunable, threads spawned once and reused).
 //!
-//! Plus the NativeBackend `Op::Transform` / `Op::Rff` batch lanes.
+//! Plus the NativeBackend `Op::Transform` / `Op::Rff` batch lanes, a
+//! `simd_vs_scalar` sweep (the serial batch kernel under the detected SIMD
+//! dispatch level vs forced `TS_NO_SIMD`-style scalar — both paths are
+//! bit-identical, so this isolates pure throughput), and a `diag_micro`
+//! entry timing the packed sign-XOR diagonal against the dense f32
+//! multiply it replaced.
 //!
 //! Writes `BENCH_transform_throughput.json` at the repo root to extend the
 //! perf trajectory. Set `TS_FULL=1` for the larger dims / row counts and
@@ -17,8 +22,10 @@
 //!     cargo bench --bench transform_throughput
 
 use triplespin::coordinator::{Backend, NativeBackend};
+use triplespin::linalg::simd;
+use triplespin::linalg::vecops::scale_by;
 use triplespin::runtime::{Op, WorkerPool};
-use triplespin::transform::{make_square, Family};
+use triplespin::transform::{make_square, Family, SignDiag};
 use triplespin::util::bench;
 use triplespin::util::json::Json;
 use triplespin::util::rng::Rng;
@@ -169,11 +176,94 @@ fn main() {
         }
     }
 
+    // SIMD-vs-scalar sweep: the serial batch kernel (one worker, no pool
+    // noise) under the detected dispatch level vs forced scalar. The two
+    // paths are bit-identical (tests/simd_equivalence.rs), so the ratio is
+    // pure kernel throughput.
+    let simd_level = simd::active();
+    println!("\n== simd vs scalar (level={simd_level}) ==\n");
+    for fam in [
+        Family::Hd3,
+        Family::Hdg,
+        Family::Circulant,
+        Family::Toeplitz,
+    ] {
+        for &n in &dims {
+            let t = make_square(fam, n, &mut Rng::new(1));
+            let rows = *row_counts.last().unwrap();
+            let xs = Rng::new(2).gaussian_vec(rows * n);
+            let mut out = vec![0.0f32; rows * n];
+            let label = format!("{} n={n} rows={rows}", fam.name());
+            simd::force(Some(simd::Level::Scalar));
+            let scalar = bench::bench(&format!("{label} scalar"), opts, || {
+                t.apply_batch_into(&xs, &mut out, &serial_pool);
+                std::hint::black_box(&out);
+            });
+            simd::force(None);
+            let vectored = bench::bench(&format!("{label} {simd_level}"), opts, || {
+                t.apply_batch_into(&xs, &mut out, &serial_pool);
+                std::hint::black_box(&out);
+            });
+            println!(
+                "{label:<34} scalar {:>10}  {simd_level} {:>10}  x{:.2}",
+                bench::fmt_ns(scalar.mean_ns),
+                bench::fmt_ns(vectored.mean_ns),
+                scalar.mean_ns / vectored.mean_ns
+            );
+            entries.push(Json::obj(vec![
+                ("kind", Json::Str("simd_vs_scalar".into())),
+                ("family", Json::Str(fam.name().into())),
+                ("n", Json::Num(n as f64)),
+                ("rows", Json::Num(rows as f64)),
+                ("scalar_ns", Json::Num(scalar.mean_ns)),
+                ("simd_ns", Json::Num(vectored.mean_ns)),
+                ("simd_level", Json::Str(simd_level.into())),
+                ("simd_speedup", Json::Num(scalar.mean_ns / vectored.mean_ns)),
+            ]));
+        }
+    }
+
+    // Diagonal micro: packed sign-XOR application vs the dense f32
+    // multiply it replaced (same ±1 diagonal, bit-identical results; the
+    // packed operand stream is 32x smaller — the win shows once the dense
+    // diagonal stops fitting in L1 next to the data, hence the 64k size).
+    println!("\n== diagonal micro (sign-xor vs f32 multiply) ==\n");
+    for &n in dims.iter().chain(&[1usize << 16]) {
+        let dense = Rng::new(5).rademacher_vec(n);
+        let sd = SignDiag::from_f32(&dense);
+        let mut buf = Rng::new(6).gaussian_vec(n);
+        let mul = bench::bench(&format!("diag mul n={n}"), opts, || {
+            scale_by(&mut buf, &dense);
+            std::hint::black_box(&buf);
+        });
+        let xor = bench::bench(&format!("diag xor n={n}"), opts, || {
+            sd.apply(&mut buf);
+            std::hint::black_box(&buf);
+        });
+        println!(
+            "diag n={n:<6} f32-mul {:>10}  sign-xor {:>10}  x{:.2}",
+            bench::fmt_ns(mul.mean_ns),
+            bench::fmt_ns(xor.mean_ns),
+            mul.mean_ns / xor.mean_ns
+        );
+        entries.push(Json::obj(vec![
+            ("kind", Json::Str("diag_micro".into())),
+            ("family", Json::Str("sign_diag".into())),
+            ("n", Json::Num(n as f64)),
+            ("rows", Json::Num(1.0)),
+            ("mul_ns", Json::Num(mul.mean_ns)),
+            ("xor_ns", Json::Num(xor.mean_ns)),
+            ("simd_level", Json::Str(simd_level.into())),
+            ("xor_speedup", Json::Num(mul.mean_ns / xor.mean_ns)),
+        ]));
+    }
+
     let doc = Json::obj(vec![
         ("bench", Json::Str("transform_throughput".into())),
         ("generated", Json::Bool(true)),
         ("provenance", Json::Str("cargo_bench".into())),
         ("workers", Json::Num(workers as f64)),
+        ("simd_level", Json::Str(simd_level.into())),
         ("full_sweep", Json::Bool(full)),
         ("entries", Json::Arr(entries)),
     ]);

@@ -10,9 +10,9 @@
 //!   the runtime service (the paper-faithful "three-layer" path).
 
 use crate::linalg::fwht::fwht;
-use crate::linalg::vecops::scale_by;
 use crate::runtime::pool::{shard_rows as pool_shard_rows, WorkerPool};
 use crate::runtime::{Op, Output, RuntimeHandle};
+use crate::transform::SignDiag;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -60,21 +60,34 @@ pub trait Backend: Send + Sync + 'static {
 
 /// Pure-Rust backend: the L3-native hot path. Batches run through the
 /// chain kernel (all three spins per L1-resident row)
-/// with rows sharded over the backend's persistent [`WorkerPool`]
+/// with rows sharded over the **process-wide** [`WorkerPool::global`]
 /// (`TS_WORKERS`-tunable) — worker threads are spawned once on the first
-/// large-enough batch and reused for every batch after, so steady-state
-/// serving performs no thread spawns.
+/// large-enough batch and shared with every other pool consumer
+/// (transform trait path, feature maps, LSH, sketches), so steady-state
+/// serving keeps exactly one set of warm workers no matter which
+/// subsystem a request hits. Tests/benches that need a pinned worker
+/// count get a private pool via [`NativeBackend::with_workers`].
 pub struct NativeBackend {
     params: HashMap<usize, NativeParams>,
-    pool: WorkerPool,
+    /// `None` = run on [`WorkerPool::global`]; `Some` = privately owned
+    /// pinned-count pool (the `with_workers` constructor).
+    pool: Option<WorkerPool>,
 }
 
-/// [`ModelParams`] plus the perf-folded last diagonal: the chain's global
-/// `1/n` normalization commutes with the linear FWHT, so it is premultiplied
-/// into `d3` — one fewer pass over the row per request (§Perf L3 iter 1).
+/// [`ModelParams`] packed for the hot loop: the three Rademacher diagonals
+/// as [`SignDiag`] bitmasks (applied as SIMD sign XORs — bit-identical to
+/// the f32 multiply for ±1 entries), plus the chain's global `1/n`
+/// normalization riding as the uniform post-scale of the last sign pass
+/// (it commutes with the linear FWHT; one fewer pass per request, §Perf L3
+/// iter 1 — and `1/n` is a power of two, so `±1/n` folds exactly). The
+/// dense [`ModelParams`] vectors are dropped after packing — only the RFF
+/// bandwidth survives — so the backend really holds ~3n bits per dim.
 struct NativeParams {
-    base: ModelParams,
-    d3_scaled: Vec<f32>,
+    d1: SignDiag,
+    d2: SignDiag,
+    d3: SignDiag,
+    d3_scale: f32,
+    inv_sigma: f32,
 }
 
 impl NativeBackend {
@@ -84,12 +97,17 @@ impl NativeBackend {
                 .iter()
                 .map(|&n| {
                     let base = ModelParams::generate(n, sigma, seed);
-                    let s = 1.0 / n as f32;
-                    let d3_scaled = base.d3.iter().map(|v| v * s).collect();
-                    (n, NativeParams { base, d3_scaled })
+                    let packed = NativeParams {
+                        d1: SignDiag::from_f32(&base.d1),
+                        d2: SignDiag::from_f32(&base.d2),
+                        d3: SignDiag::from_f32(&base.d3),
+                        d3_scale: 1.0 / n as f32,
+                        inv_sigma: base.inv_sigma,
+                    };
+                    (n, packed)
                 })
                 .collect(),
-            pool: WorkerPool::from_env(),
+            pool: None, // execute on the shared WorkerPool::global()
         }
     }
 
@@ -99,8 +117,14 @@ impl NativeBackend {
     /// wherever the row count allows" — the test/bench constructor.
     pub fn with_workers(dims: &[usize], sigma: f64, seed: u64, workers: usize) -> NativeBackend {
         let mut be = NativeBackend::new(dims, sigma, seed);
-        be.pool = WorkerPool::with_min_work(workers, 0);
+        be.pool = Some(WorkerPool::with_min_work(workers, 0));
         be
+    }
+
+    /// The pool batches execute on: the private pinned-count pool when one
+    /// was requested, otherwise the process-wide shared pool.
+    fn pool(&self) -> &WorkerPool {
+        self.pool.as_ref().unwrap_or_else(WorkerPool::global)
     }
 
     fn params(&self, n: usize) -> Result<&NativeParams, String> {
@@ -111,17 +135,17 @@ impl NativeBackend {
 
     /// In-place chain over a row-major sub-batch: `√n · H D3 H D2 H D1 x`
     /// per row (normalized H). Three unnormalized FWHTs contribute n^{3/2};
-    /// the remaining `√n/n^{3/2} = 1/n` factor is pre-folded into
-    /// `d3_scaled`. Each row runs all three stages while L1-resident —
+    /// the remaining `√n/n^{3/2} = 1/n` factor rides the last sign pass as
+    /// `d3_scale`. Each row runs all three stages while L1-resident —
     /// stage-major full-batch sweeps were reverted with the other
     /// level-major kernels (see [`crate::linalg::fwht::fwht_batch`]).
     fn chain_batch(p: &NativeParams, data: &mut [f32], n: usize) {
         for row in data.chunks_exact_mut(n) {
-            scale_by(row, &p.base.d1);
+            p.d1.apply(row);
             fwht(row);
-            scale_by(row, &p.base.d2);
+            p.d2.apply(row);
             fwht(row);
-            scale_by(row, &p.d3_scaled);
+            p.d3.apply_scaled(row, p.d3_scale);
             fwht(row);
         }
     }
@@ -183,7 +207,7 @@ impl Backend for NativeBackend {
                 {
                     let out_ptr = out.as_mut_ptr() as usize;
                     let work = Self::chain_work(n);
-                    pool_shard_rows(&self.pool, rows, work, &|lo, hi, _slot, _ws| {
+                    pool_shard_rows(self.pool(), rows, work, &|lo, hi, _slot, _ws| {
                         // Safety: disjoint covering row ranges; the pool
                         // blocks until every worker acked.
                         let chunk = unsafe {
@@ -200,11 +224,11 @@ impl Backend for NativeBackend {
             Op::Rff => {
                 let mut proj = xs.to_vec();
                 let mut out = vec![0.0f32; rows * 2 * n];
-                let inv_sigma = p.base.inv_sigma;
+                let inv_sigma = p.inv_sigma;
                 let feat_scale = (1.0 / (n as f64).sqrt()) as f32;
                 // chain + ~8 units per cos/sin output
                 let work = Self::chain_work(n) + 16 * n;
-                shard_proj_out(&self.pool, &mut proj, &mut out, rows, n, 2 * n, work, |pc, oc| {
+                shard_proj_out(self.pool(), &mut proj, &mut out, rows, n, 2 * n, work, |pc, oc| {
                     Self::chain_batch(p, pc, n);
                     for (prow, orow) in pc.chunks_exact(n).zip(oc.chunks_exact_mut(2 * n)) {
                         let (cos_half, sin_half) = orow.split_at_mut(n);
@@ -222,7 +246,7 @@ impl Backend for NativeBackend {
                 let mut proj = xs.to_vec();
                 let mut out = vec![0i32; rows];
                 let work = Self::chain_work(n) + n;
-                shard_proj_out(&self.pool, &mut proj, &mut out, rows, n, 1, work, |pc, oc| {
+                shard_proj_out(self.pool(), &mut proj, &mut out, rows, n, 1, work, |pc, oc| {
                     Self::chain_batch(p, pc, n);
                     for (prow, o) in pc.chunks_exact(n).zip(oc.iter_mut()) {
                         *o = crate::linalg::vecops::argmax_abs_signed(prow) as i32;

@@ -68,7 +68,7 @@ impl FeatureMap {
         assert!(x.len() <= n, "input dim {} exceeds transform dim {n}", x.len());
         debug_assert_eq!(out.len(), self.dim_features());
         let k = self.transform.dim_out();
-        let mut proj = ws.take_f32(k);
+        let mut proj = ws.take_f32_uninit(k); // fully overwritten below
         self.transform.apply_padded_into(x, &mut proj, ws);
         self.nonlin_into(&proj, out);
         ws.put_f32(proj);
@@ -128,7 +128,7 @@ impl FeatureMap {
         let d = self.dim_features();
         debug_assert_eq!(out.len(), rows * d);
         let k = self.transform.dim_out();
-        let mut proj = pool.with_serial_workspace(|ws| ws.take_f32(rows * k));
+        let mut proj = pool.with_serial_workspace(|ws| ws.take_f32_uninit(rows * k));
         self.transform.apply_batch_into(xs, &mut proj, pool);
         // pointwise stage sharded too: for GaussianRff the cos/sin pass is
         // comparable to the projection itself, so leaving it serial would

@@ -13,20 +13,32 @@
 //!
 //! ## Execution engine
 //!
-//! The hot path is **zero-allocation, batch-first and pool-resident**.
-//! Every [`transform::Transform`] computes through
+//! The hot path is **zero-allocation, batch-first, pool-resident and
+//! SIMD-dispatched**. Every [`transform::Transform`] computes through
 //! [`transform::Transform::apply_into`], drawing all scratch from a reused
-//! [`linalg::Workspace`]; batches go through
-//! [`transform::Transform::apply_batch_into`], which runs each family's
-//! batch kernel (row-resident multi-stage pipelines, the twiddle-table
-//! multi-row FFT of [`linalg::fft::ConvPlan`]) and shards
-//! rows over the persistent [`runtime::WorkerPool`] — worker threads spawn
-//! once and keep one pinned workspace each for their lifetime, env-tunable
-//! via `TS_WORKERS` (`0` = single-threaded), so steady state performs zero
-//! thread spawns and zero heap allocations per batch. The allocating
-//! `apply` / `apply_batch` remain as thin wrappers. `cargo bench --bench
-//! transform_throughput` records per-row-loop vs serial-batch vs
-//! pooled-batch speedups in `BENCH_transform_throughput.json`.
+//! [`linalg::Workspace`] (zeroed checkouts for padding-reliant buffers,
+//! dirty `take_*_uninit` checkouts for fully-overwritten ones); batches go
+//! through [`transform::Transform::apply_batch_into`], which runs each
+//! family's batch kernel (row-resident multi-stage pipelines, the
+//! twiddle-table multi-row FFT of [`linalg::fft::ConvPlan`]) and
+//! distributes rows over the persistent [`runtime::WorkerPool`] by atomic
+//! chunk claiming (work stealing — a slow worker gates at most one chunk).
+//! Worker threads spawn once and keep one pinned workspace each for their
+//! lifetime, env-tunable via `TS_WORKERS` (`0` = single-threaded), so
+//! steady state performs zero thread spawns and zero heap allocations per
+//! batch.
+//!
+//! All arithmetic inner loops (FWHT butterflies, complex FFT butterflies
+//! and spectrum multiplies, diagonal passes) dispatch at runtime through
+//! [`linalg::simd`] — AVX2/SSE2/NEON with an always-compiled scalar path
+//! (`TS_NO_SIMD=1`), every level **bit-identical**. Rademacher diagonals
+//! are stored as packed [`transform::SignDiag`] `u64` bitmasks (~`n` bits
+//! per discrete diagonal instead of `32n`; see
+//! [`transform::Transform::stored_bits`]) and applied as SIMD sign XORs.
+//! The allocating `apply` / `apply_batch` remain as thin wrappers.
+//! `cargo bench --bench transform_throughput` records per-row-loop vs
+//! serial-batch vs pooled-batch speedups plus a `simd_vs_scalar` sweep and
+//! a sign-xor diagonal micro in `BENCH_transform_throughput.json`.
 //!
 //! ## Layout
 //!

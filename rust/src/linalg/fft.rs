@@ -9,6 +9,7 @@
 //! precision is free at these sizes and keeps the structured matvec within
 //! f32 round-off of the dense reference.
 
+use crate::linalg::simd;
 use std::f64::consts::PI;
 
 /// In-place iterative radix-2 Cooley–Tukey FFT.
@@ -112,8 +113,10 @@ fn bit_reverse(re: &mut [f64], im: &mut [f64]) {
 /// One radix-2 butterfly level (span `len`) over one row, twiddles looked
 /// up from a precomputed `exp(-2πi k/n)` table (stride `n/len`). The table
 /// drive replaces the per-stage trig recurrence of [`fft`]: no serial
-/// dependency in the inner loop, and every row of a batch reuses the same
-/// table entries.
+/// dependency in the inner loop, every row of a batch reuses the same
+/// table entries, and each block's complex butterflies run through the
+/// dispatched SIMD kernel ([`simd::fft_butterfly`] — bit-identical to its
+/// scalar path, no FMA contraction).
 #[inline]
 fn butterfly_level(
     re: &mut [f64],
@@ -129,20 +132,9 @@ fn butterfly_level(
     let sign = if inverse { -1.0 } else { 1.0 };
     let mut i = 0;
     while i < n {
-        for j in 0..half {
-            let wr = twr[j * stride];
-            let wi = sign * twi[j * stride];
-            let k = i + j;
-            let (ur, ui) = (re[k], im[k]);
-            let (vr, vi) = (
-                re[k + half] * wr - im[k + half] * wi,
-                re[k + half] * wi + im[k + half] * wr,
-            );
-            re[k] = ur + vr;
-            im[k] = ui + vi;
-            re[k + half] = ur - vr;
-            im[k + half] = ui - vi;
-        }
+        let (re_h, re_t) = re[i..i + len].split_at_mut(half);
+        let (im_h, im_t) = im[i..i + len].split_at_mut(half);
+        simd::fft_butterfly(re_h, im_h, re_t, im_t, twr, twi, stride, sign);
         i += len;
     }
 }
@@ -269,14 +261,7 @@ impl ConvPlan {
         }
         for (rr, ri) in re.chunks_exact_mut(n).zip(im.chunks_exact_mut(n)) {
             fft_tabled(rr, ri, false, &self.twr, &self.twi);
-            for i in 0..n {
-                let (r, m) = (
-                    rr[i] * self.kr[i] - ri[i] * self.ki[i],
-                    rr[i] * self.ki[i] + ri[i] * self.kr[i],
-                );
-                rr[i] = r;
-                ri[i] = m;
-            }
+            simd::cmul(rr, ri, &self.kr, &self.ki);
             fft_tabled(rr, ri, true, &self.twr, &self.twi);
         }
     }

@@ -8,6 +8,13 @@
 //! ±1); the paper's `H` is the L2-normalized matrix, i.e. `fwht` output
 //! scaled by `1/sqrt(n)` — use [`fwht_normalized`]. Both operate in place on
 //! power-of-two lengths.
+//!
+//! Butterfly levels with `h >= 4` run through the runtime-dispatched SIMD
+//! kernels in [`crate::linalg::simd`] (AVX2/SSE2/NEON with a `TS_NO_SIMD=1`
+//! scalar path) — every dispatch level is bit-identical, so the transform's
+//! output does not depend on the host CPU.
+
+use crate::linalg::simd;
 
 /// In-place unnormalized FWHT. `x.len()` must be a power of two.
 ///
@@ -16,10 +23,11 @@ pub fn fwht(x: &mut [f32]) {
     let n = x.len();
     debug_assert!(n.is_power_of_two(), "FWHT length must be a power of two");
     // First two levels fused in blocks of 4 (in-register radix-4 head);
-    // the remaining levels run radix-2 with a contiguous inner loop that
-    // auto-vectorizes. A full radix-4 sweep was tried and REVERTED: its
-    // 4-way strided inner loop defeats vectorization and measured 13%
-    // slower at n=8192 (see EXPERIMENTS.md §Perf, L3 iteration 2).
+    // the remaining levels run radix-2 through the dispatched SIMD
+    // butterfly with a contiguous inner loop. A full radix-4 sweep was
+    // tried and REVERTED: its 4-way strided inner loop defeats
+    // vectorization and measured 13% slower at n=8192 (see EXPERIMENTS.md
+    // §Perf, L3 iteration 2).
     if n == 2 {
         let (a, b) = (x[0], x[1]);
         x[0] = a + b;
@@ -46,12 +54,7 @@ pub fn fwht(x: &mut [f32]) {
         let mut i = 0;
         while i < n {
             let (head, tail) = x[i..i + 2 * h].split_at_mut(h);
-            for (u, v) in head.iter_mut().zip(tail.iter_mut()) {
-                let a = *u;
-                let b = *v;
-                *u = a + b;
-                *v = a - b;
-            }
+            simd::butterfly(head, tail);
             i += h * 2;
         }
         h *= 2;
@@ -109,12 +112,7 @@ pub fn fwht_normalized(x: &mut [f32]) {
         let mut i = 0;
         while i < n {
             let (head, tail) = x[i..i + 2 * h].split_at_mut(h);
-            for (u, v) in head.iter_mut().zip(tail.iter_mut()) {
-                let a = *u;
-                let b = *v;
-                *u = a + b;
-                *v = a - b;
-            }
+            simd::butterfly(head, tail);
             i += h * 2;
         }
         h *= 2;
@@ -123,12 +121,7 @@ pub fn fwht_normalized(x: &mut [f32]) {
     // 1/√n normalization fused into the butterfly outputs
     debug_assert_eq!(h, n / 2);
     let (head, tail) = x.split_at_mut(n / 2);
-    for (u, v) in head.iter_mut().zip(tail.iter_mut()) {
-        let a = *u;
-        let b = *v;
-        *u = (a + b) * s;
-        *v = (a - b) * s;
-    }
+    simd::butterfly_scaled(head, tail, s);
 }
 
 /// Unnormalized FWHT over every row of a row-major `rows x n` batch,

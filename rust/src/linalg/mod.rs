@@ -1,10 +1,12 @@
 //! Linear-algebra substrate: FWHT, FFT-based structured matvecs, dense
-//! matrices, small SPD solvers, and the reusable scratch workspaces behind
-//! the zero-allocation transform execution path.
+//! matrices, small SPD solvers, the runtime-dispatched SIMD inner kernels,
+//! and the reusable scratch workspaces behind the zero-allocation transform
+//! execution path.
 
 pub mod dense;
 pub mod fft;
 pub mod fwht;
+pub mod simd;
 pub mod vecops;
 pub mod workspace;
 

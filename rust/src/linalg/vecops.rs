@@ -22,13 +22,14 @@ pub fn normalize(a: &mut [f32]) {
     }
 }
 
-/// Elementwise multiply in place: `a[i] *= d[i]` — the `D` of every `HD`.
+/// Elementwise multiply in place: `a[i] *= d[i]` — the `D` of every `HD`
+/// that still stores dense (float) entries. Routes through the dispatched
+/// SIMD kernel; packed ±1 diagonals use
+/// [`crate::transform::hd::SignDiag::apply`] instead.
 #[inline]
 pub fn scale_by(a: &mut [f32], d: &[f32]) {
     debug_assert_eq!(a.len(), d.len());
-    for (x, s) in a.iter_mut().zip(d) {
-        *x *= *s;
-    }
+    crate::linalg::simd::scale(a, d);
 }
 
 /// Zero-pad `x` to length `n` (returns a new vector).

@@ -16,6 +16,14 @@
 //! blocks borrow FFT scratch) trivially safe. Check-outs are LIFO: as long
 //! as a call site takes and returns buffers in a consistent order, the same
 //! allocation is recycled every call.
+//!
+//! Two checkout flavors exist: the zeroed `take_*` (for buffers whose
+//! padding/prefix semantics rely on zeros) and the **dirty**
+//! `take_*_uninit` (length set, contents arbitrary — stale data from the
+//! previous checkout). Call sites that fully overwrite their buffer
+//! (FWHT stage rows, FFT row blocks, batch stacking scratch) use the dirty
+//! variant and skip the zeroing sweep the zeroed variant pays on every
+//! checkout.
 
 /// Minimum batch rows assigned to one worker before another thread is
 /// engaged — below this, dispatch latency dominates the kernel time.
@@ -42,7 +50,19 @@ impl Workspace {
         b
     }
 
-    /// Return a buffer checked out with [`Workspace::take_f32`].
+    /// Dirty checkout: an f32 buffer of exactly `len` elements whose
+    /// contents are **arbitrary** (stale data from a previous checkout;
+    /// only net growth beyond the recycled length is zero-filled). For
+    /// call sites that fully overwrite the buffer — skips the full zeroing
+    /// sweep [`Workspace::take_f32`] pays.
+    pub fn take_f32_uninit(&mut self, len: usize) -> Vec<f32> {
+        let mut b = self.f32_pool.pop().unwrap_or_default();
+        b.resize(len, 0.0);
+        b
+    }
+
+    /// Return a buffer checked out with [`Workspace::take_f32`] /
+    /// [`Workspace::take_f32_uninit`].
     pub fn put_f32(&mut self, buf: Vec<f32>) {
         self.f32_pool.push(buf);
     }
@@ -55,7 +75,16 @@ impl Workspace {
         b
     }
 
-    /// Return a buffer checked out with [`Workspace::take_f64`].
+    /// Dirty checkout: an f64 buffer of exactly `len` elements, contents
+    /// arbitrary (see [`Workspace::take_f32_uninit`]).
+    pub fn take_f64_uninit(&mut self, len: usize) -> Vec<f64> {
+        let mut b = self.f64_pool.pop().unwrap_or_default();
+        b.resize(len, 0.0);
+        b
+    }
+
+    /// Return a buffer checked out with [`Workspace::take_f64`] /
+    /// [`Workspace::take_f64_uninit`].
     pub fn put_f64(&mut self, buf: Vec<f64>) {
         self.f64_pool.push(buf);
     }
@@ -108,6 +137,42 @@ mod tests {
         assert_eq!(b.as_ptr(), ptr, "same allocation must be recycled");
         assert_eq!(b[0], 0.0, "recycled buffer must be re-zeroed");
         ws.put_f32(b);
+    }
+
+    #[test]
+    fn uninit_take_sets_length_and_reuses_allocation() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_f32(16);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        let ptr = a.as_ptr();
+        ws.put_f32(a);
+        // dirty checkout: same allocation, same length, stale contents
+        // permitted (no zeroing sweep) — callers must fully overwrite
+        let b = ws.take_f32_uninit(16);
+        assert_eq!(b.as_ptr(), ptr);
+        assert_eq!(b.len(), 16);
+        ws.put_f32(b);
+        // growth beyond the recycled length is still zero-filled
+        let c = ws.take_f32_uninit(32);
+        assert_eq!(c.len(), 32);
+        assert!(c[16..].iter().all(|v| *v == 0.0));
+        ws.put_f32(c);
+        // and the zeroed variant continues to clear recycled contents
+        let d = ws.take_f32(32);
+        assert!(d.iter().all(|v| *v == 0.0));
+        ws.put_f32(d);
+
+        let mut e = ws.take_f64_uninit(8);
+        e[0] = 3.0;
+        let eptr = e.as_ptr();
+        ws.put_f64(e);
+        let f = ws.take_f64_uninit(8);
+        assert_eq!(f.as_ptr(), eptr);
+        assert_eq!(f.len(), 8);
+        let g = ws.take_f64(8);
+        assert!(g.iter().all(|v| *v == 0.0));
+        ws.put_f64(g);
+        ws.put_f64(f);
     }
 
     #[test]

@@ -194,6 +194,11 @@ fn cmd_transform(opts: &HashMap<String, String>) -> i32 {
         t.param_bits(),
         t.param_bits() as f64 / 8192.0
     );
+    println!(
+        "stored   : {} bits ({:.1} KiB actual in-memory parameter footprint)",
+        t.stored_bits(),
+        t.stored_bits() as f64 / 8192.0
+    );
     println!("apply    : {dt:?}");
     println!(
         "||y||/√n : {:.4} (≈1 for Gaussian-like rows)",

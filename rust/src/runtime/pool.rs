@@ -20,6 +20,13 @@
 //!   worker threads at all — they run on the caller thread against a
 //!   thread-local serial workspace, so concurrent lane threads stay fully
 //!   parallel with each other, and do not start the pool.
+//! * Row distribution inside a batch ([`shard_rows`]) is work-stealing by
+//!   **atomic chunk claim**: every engaged worker deterministically
+//!   processes one seed chunk (keeping its pinned workspace warm on every
+//!   batch), then workers grab further fixed-size row chunks off a shared
+//!   counter until the batch drains — ragged per-row costs or a
+//!   descheduled worker cost at most one chunk of tail latency instead of
+//!   gating the whole batch behind a static split.
 //!
 //! Sizing comes from `TS_WORKERS` (`0` and `1` both mean "stay
 //! single-threaded"; unset falls back to `available_parallelism` capped at
@@ -32,6 +39,7 @@
 //! private pool, whose threads are shut down and joined on drop.
 
 use crate::linalg::workspace::{worker_count_from_env, Workspace, MIN_ROWS_PER_WORKER};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Mutex, OnceLock};
 use std::thread::{JoinHandle, ThreadId};
@@ -295,6 +303,11 @@ fn worker_loop(index: usize, rx: Receiver<Job>, ack: SyncSender<bool>) {
     }
 }
 
+/// Rows per claimed chunk: aim for several chunks per engaged worker so a
+/// slow worker (cache-cold shard, noisy-neighbor core, ragged per-row
+/// cost) gates at most one chunk instead of a whole static share.
+const CHUNKS_PER_WORKER: usize = 4;
+
 /// Shard `rows` rows across the pool: `task(lo, hi, slot, ws)` is invoked
 /// with disjoint, covering `lo..hi` row ranges. `work_per_row` is the
 /// caller's per-row cost estimate (see
@@ -302,6 +315,20 @@ fn worker_loop(index: usize, rx: Receiver<Job>, ack: SyncSender<bool>) {
 /// gate. The standard row-parallel driver used by the transform trait path
 /// and the native backend; callers supply the (unsafe, range-disjoint)
 /// buffer slicing.
+///
+/// Distribution is **work-stealing by chunk claim**, not a static split:
+/// each engaged worker first processes one statically assigned seed chunk
+/// (chunk `slot` — this keeps warm-up deterministic: every engaged
+/// worker's pinned workspace is touched on every batch, so "zero
+/// allocations after one warm batch" cannot depend on who wins a race),
+/// then grabs further fixed-size chunks off a shared atomic counter until
+/// the batch is drained. A slow or descheduled worker therefore gates at
+/// most its one seed chunk — the others claim the rows it would have been
+/// assigned under a static split. A worker may invoke `task` several times
+/// (ranges are still disjoint and covering, and results are per-row, so
+/// output bytes are identical to any other split). The
+/// [`WorkerPool::workers_for_work`] gate is unchanged: sub-threshold
+/// batches run serially as a single `task(0, rows, 0, ..)`.
 pub fn shard_rows(
     pool: &WorkerPool,
     rows: usize,
@@ -316,13 +343,22 @@ pub fn shard_rows(
         pool.with_serial_workspace(|ws| task(0, rows, 0, ws));
         return;
     }
-    let rows_per = rows.div_ceil(workers);
-    let shards = rows.div_ceil(rows_per);
-    pool.run(shards, &|i, ws| {
-        let lo = i * rows_per;
-        let hi = rows.min(lo + rows_per);
-        if lo < hi {
-            task(lo, hi, i, ws);
+    let chunk = rows.div_ceil(workers * CHUNKS_PER_WORKER).max(1);
+    // chunks [0, workers) are seeds (one per engaged worker, deterministic);
+    // the claim counter hands out the rest
+    let seeded = (workers * chunk).min(rows);
+    let next = AtomicUsize::new(seeded);
+    pool.run(workers, &|slot, ws| {
+        let lo = slot * chunk;
+        if lo < rows {
+            task(lo, rows.min(lo + chunk), slot, ws);
+        }
+        loop {
+            let lo = next.fetch_add(chunk, Ordering::Relaxed);
+            if lo >= rows {
+                break;
+            }
+            task(lo, rows.min(lo + chunk), slot, ws);
         }
     });
 }
@@ -440,6 +476,66 @@ mod tests {
             let m = marks.lock().unwrap();
             assert!(m.iter().all(|c| *c == 1), "rows={rows}: {m:?}");
         }
+    }
+
+    #[test]
+    fn shard_rows_chunks_dynamically() {
+        // with the chunk-claim counter a large batch must be split into
+        // more ranges than workers (so there is something to steal), while
+        // every row is still covered exactly once.
+        let pool = WorkerPool::with_min_work(2, 0);
+        let rows = 64;
+        let marks = Mutex::new(vec![0u8; rows]);
+        let invocations = AtomicUsize::new(0);
+        shard_rows(&pool, rows, 1, &|lo, hi, slot, _ws| {
+            assert!(slot < 2);
+            invocations.fetch_add(1, Ordering::SeqCst);
+            let mut m = marks.lock().unwrap();
+            for r in lo..hi {
+                m[r] += 1;
+            }
+        });
+        assert!(marks.lock().unwrap().iter().all(|c| *c == 1));
+        assert!(
+            invocations.load(Ordering::SeqCst) > 2,
+            "chunk claiming must produce more ranges than workers"
+        );
+    }
+
+    #[test]
+    fn ragged_shards_are_stolen_from_a_stalled_worker() {
+        // Deliberately imbalanced per-row cost: whichever worker claims the
+        // chunk containing row 0 BLOCKS until every other chunk has been
+        // claimed — with the old static split the batch could never finish
+        // (half the rows would sit behind the stalled worker). Under chunk
+        // claiming the other worker drains the counter, the stalled worker
+        // unblocks, and the batch completes with every row covered once.
+        let pool = WorkerPool::with_min_work(2, 0);
+        let rows = 64;
+        let marks = Mutex::new(vec![0u8; rows]);
+        let claimed = AtomicUsize::new(0);
+        shard_rows(&pool, rows, 1, &|lo, hi, _slot, _ws| {
+            claimed.fetch_add(hi - lo, Ordering::SeqCst);
+            if lo == 0 {
+                // the "slow" shard: wait until the rest of the batch has
+                // been claimed by someone else (bounded, so a regression
+                // fails loudly instead of hanging)
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+                while claimed.load(Ordering::SeqCst) < rows {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "no other worker stole the remaining chunks"
+                    );
+                    std::thread::yield_now();
+                }
+            }
+            let mut m = marks.lock().unwrap();
+            for r in lo..hi {
+                m[r] += 1;
+            }
+        });
+        let m = marks.lock().unwrap();
+        assert!(m.iter().all(|c| *c == 1), "{m:?}");
     }
 
     #[test]

@@ -73,8 +73,9 @@ impl Transform for StackedTransform {
         debug_assert_eq!(out.len(), self.k);
         // One reused square scratch row: each block writes its full output
         // there and only the kept (truncated) prefix is copied out — no
-        // per-block allocation, no materialized n×n block results.
-        let mut buf = ws.take_f32(self.n);
+        // per-block allocation, no materialized n×n block results. Dirty
+        // checkout: every element is overwritten by the block apply.
+        let mut buf = ws.take_f32_uninit(self.n);
         let mut off = 0;
         for b in &self.blocks {
             b.apply_into(x, &mut buf, ws);
@@ -98,7 +99,8 @@ impl Transform for StackedTransform {
         debug_assert_eq!(xs.len() % n, 0);
         let rows = xs.len() / n;
         debug_assert_eq!(out.len(), rows * k);
-        let mut buf = ws.take_f32(rows * n);
+        // dirty checkout: each block's batch kernel overwrites every row
+        let mut buf = ws.take_f32_uninit(rows * n);
         let mut off = 0;
         for b in &self.blocks {
             b.apply_batch_serial(xs, &mut buf, ws);
@@ -125,6 +127,10 @@ impl Transform for StackedTransform {
 
     fn param_bits(&self) -> usize {
         self.blocks.iter().map(|b| b.param_bits()).sum()
+    }
+
+    fn stored_bits(&self) -> usize {
+        self.blocks.iter().map(|b| b.stored_bits()).sum()
     }
 }
 

@@ -5,10 +5,11 @@
 //! top block multiplies in `O(n log n)` via an FFT circulant embedding whose
 //! spectrum is precomputed once at construction ([`ConvPlan`]).
 
+use super::hd::SignDiag;
 use super::Transform;
 use crate::linalg::fft::ConvPlan;
 use crate::linalg::fwht::fwht;
-use crate::linalg::vecops::scale_by;
+use crate::linalg::simd;
 use crate::linalg::Workspace;
 use crate::util::rng::Rng;
 
@@ -22,10 +23,15 @@ enum TopKind {
 }
 
 /// A `G_top · D2 · H D1` transform (square, `n` a power of two).
+///
+/// The two Rademacher diagonals are stored as packed [`SignDiag`] bitmasks
+/// (their `2n` model bits really occupy ~`2n` bits) and applied as SIMD
+/// sign XORs — `D1` directly on the f32 stage, `D2` fused into the
+/// f32→f64 FFT promotion together with the `1/√n` normalization.
 pub struct StructuredGaussian {
     n: usize,
-    d1: Vec<f32>,
-    d2: Vec<f32>,
+    d1: SignDiag,
+    d2: SignDiag,
     /// Precomputed spectrum of the circulant embedding of `G_top`.
     plan: ConvPlan,
     /// Hankel is reduced to Toeplitz on the *reversed* input — the only
@@ -41,8 +47,9 @@ pub struct StructuredGaussian {
 impl StructuredGaussian {
     fn build(n: usize, kind: TopKind, rng: &mut Rng) -> StructuredGaussian {
         assert!(n.is_power_of_two(), "needs power-of-two n, got {n}");
-        let d1 = rng.rademacher_vec(n);
-        let d2 = rng.rademacher_vec(n);
+        // same RNG stream as the historical Vec<f32> layout, packed to bits
+        let d1 = SignDiag::random(n, rng);
+        let d2 = SignDiag::random(n, rng);
         let (plan, gaussians, name) = match kind {
             TopKind::Circulant => {
                 // first row r; first column col[i] = r[(n-i) % n]
@@ -94,18 +101,20 @@ impl StructuredGaussian {
     /// Promote the FWHT stage output to the f64 FFT buffer, fusing the
     /// `1/√n · d2` scaling (and the Hankel input reversal). `re[n..]` is
     /// the circulant-embedding padding and must be zeroed by the caller.
+    /// Forward order runs the SIMD sign+scale+promote kernel; the reversed
+    /// (Hankel) gather is scalar on every dispatch level, so both stay
+    /// bit-identical across levels.
     #[inline]
     fn load_fft_input(&self, stage: &[f32], re: &mut [f64]) {
         let n = self.n;
         if self.reverse_input {
             for i in 0..n {
                 let j = n - 1 - i;
-                re[i] = (stage[j] * self.d2[j] * self.inv_sqrt_n) as f64;
+                let flipped = f32::from_bits(stage[j].to_bits() ^ self.d2.sign_mask(j));
+                re[i] = (flipped * self.inv_sqrt_n) as f64;
             }
         } else {
-            for i in 0..n {
-                re[i] = (stage[i] * self.d2[i] * self.inv_sqrt_n) as f64;
-            }
+            simd::promote_signs_scaled(stage, self.d2.words(), self.inv_sqrt_n, &mut re[..n]);
         }
     }
 
@@ -153,17 +162,23 @@ impl Transform for StructuredGaussian {
         debug_assert_eq!(x.len(), self.n);
         debug_assert_eq!(out.len(), self.n);
         let n = self.n;
-        // `out` doubles as the f32 stage buffer: D1, then unnormalized FWHT;
-        // the 1/√n normalization is fused into the D2 promotion below.
+        // `out` doubles as the f32 stage buffer: D1 (sign XOR), then
+        // unnormalized FWHT; the 1/√n normalization is fused into the D2
+        // promotion below.
         out.copy_from_slice(x);
-        scale_by(out, &self.d1);
+        self.d1.apply(out);
         fwht(out);
-        // FFT top block on reused workspace scratch (`take_*` zeroes, so the
-        // embedding padding `re[n..]` is already clear).
+        // FFT top block on reused workspace scratch. Dirty checkouts: every
+        // element below `n` is overwritten by the promotion, `im` is
+        // cleared inside the plan kernel — only the circulant-embedding
+        // padding `re[n..]` needs an explicit zero.
         let m = self.plan.len();
-        let mut re = ws.take_f64(m);
-        let mut im = ws.take_f64(m);
+        let mut re = ws.take_f64_uninit(m);
+        let mut im = ws.take_f64_uninit(m);
         self.load_fft_input(out, &mut re);
+        for v in re[n..].iter_mut() {
+            *v = 0.0;
+        }
         self.plan.apply_in_place(&mut re, &mut im);
         for i in 0..n {
             out[i] = re[i] as f32;
@@ -184,8 +199,11 @@ impl Transform for StructuredGaussian {
         let n = self.n;
         let m = self.plan.len();
         let block = self.plan.batch_block_rows();
-        let mut re = ws.take_f64(block * m);
-        let mut im = ws.take_f64(block * m);
+        // dirty checkouts: every row's `dst[..n]` is written by the
+        // promotion and `dst[n..]` is explicitly zeroed below; `im` is
+        // cleared inside the plan kernel.
+        let mut re = ws.take_f64_uninit(block * m);
+        let mut im = ws.take_f64_uninit(block * m);
         for (xchunk, ochunk) in xs.chunks(block * n).zip(out.chunks_mut(block * n)) {
             let crows = xchunk.len() / n;
             for ((src, stage), dst) in xchunk
@@ -194,11 +212,11 @@ impl Transform for StructuredGaussian {
                 .zip(re.chunks_exact_mut(m))
             {
                 stage.copy_from_slice(src);
-                scale_by(stage, &self.d1);
+                self.d1.apply(stage);
                 fwht(stage);
                 self.load_fft_input(stage, dst);
                 // re-zero the embedding padding a previous block's
-                // convolution left behind
+                // convolution (or the dirty checkout) left behind
                 for v in dst[n..].iter_mut() {
                     *v = 0.0;
                 }
@@ -231,6 +249,14 @@ impl Transform for StructuredGaussian {
 
     fn param_bits(&self) -> usize {
         32 * self.gaussians + 2 * self.n
+    }
+
+    /// Real packed footprint of the random parameters: the Gaussian top
+    /// block as f32s plus the two sign diagonals at one bit per entry
+    /// (whole `u64` words). The precomputed spectrum/twiddles are derived
+    /// caches, not parameters.
+    fn stored_bits(&self) -> usize {
+        32 * self.gaussians + self.d1.storage_bits() + self.d2.storage_bits()
     }
 }
 
@@ -361,5 +387,16 @@ mod tests {
             StructuredGaussian::toeplitz(n, &mut rng).param_bits(),
             32 * (2 * n - 1) + 2 * n
         );
+    }
+
+    #[test]
+    fn stored_bits_packs_sign_diagonals() {
+        // with n a multiple of 64 the packed footprint is exactly the
+        // model-theoretic count: 32 bits per Gaussian + 1 bit per sign.
+        let mut rng = Rng::new(1);
+        let n = 128;
+        let t = StructuredGaussian::circulant(n, &mut rng);
+        assert_eq!(t.stored_bits(), 32 * n + 2 * n);
+        assert_eq!(t.stored_bits(), t.param_bits());
     }
 }

@@ -7,11 +7,30 @@
 //! matrix it replaces. `HDg HD2 HD1` swaps the last diagonal for Gaussian
 //! entries (Lemma 1's second member).
 //!
-//! Each `H D` factor costs one elementwise scaling plus one FWHT — the whole
+//! Each `H D` factor costs one elementwise pass plus one FWHT — the whole
 //! chain is `O(k · n log n)` with zero stored floats for the discrete case.
+//!
+//! ## Packed-bit diagonal layout
+//!
+//! Rademacher diagonals are **not stored as `Vec<f32>`**. A [`SignDiag`]
+//! packs the `n` signs into `⌈n/64⌉` `u64` words — bit `i` of word `i/64`
+//! set means "negate element `i`" — so the flagship `hd3` chain really does
+//! store ~`3n` bits instead of `96n`. Application is a SIMD sign-bit XOR
+//! ([`crate::linalg::simd::apply_signs`]): for every non-NaN input,
+//! `x ^ sign_bit` is exactly `x * ±1.0`, so the packed path is bit-for-bit
+//! identical to the old dense-f32 diagonal multiply (enforced by tests
+//! here and in `tests/simd_equivalence.rs`). The chain's global
+//! `√n · n^{-k/2}` normalization is a *derived* constant (not a stored
+//! parameter): it rides along as a uniform post-scale on the last
+//! diagonal — `(±x) · s ≡ x · (±s)` exactly — or is pre-multiplied into
+//! the last diagonal's entries when that diagonal is Gaussian.
+//!
+//! Dispatch rules (AVX2 / SSE2 / NEON / scalar, `TS_NO_SIMD=1` to pin
+//! scalar) live in [`crate::linalg::simd`]; every level is bit-identical.
 
 use super::Transform;
 use crate::linalg::fwht::fwht;
+use crate::linalg::simd;
 use crate::linalg::vecops::scale_by;
 use crate::linalg::Workspace;
 use crate::util::rng::Rng;
@@ -25,13 +44,115 @@ pub enum DiagKind {
     Gaussian,
 }
 
+/// A ±1 diagonal packed into `u64` sign bitmasks: bit `i` of
+/// `words()[i / 64]` (position `i % 64`) set means "flip the sign of
+/// element `i`". 64 diagonal entries per stored word — the bit-matrix
+/// compression the paper's discrete chains are prized for. Application is
+/// a sign-bit XOR with a 32× smaller parameter stream; measured against
+/// the dispatched f32 multiply it replaces (`diag_micro` in
+/// BENCH_transform_throughput.json) the apply itself is ~at parity — the
+/// packed layout is about footprint (and keeping the dense diagonal out
+/// of cache next to the data), while the chain's FWHT sweeps dominate its
+/// runtime.
+#[derive(Clone, Debug)]
+pub struct SignDiag {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl SignDiag {
+    /// Pack the signs of `d` (bit set where `d[i]` is negative). The
+    /// canonical constructor: building from `rng.rademacher_vec(n)` keeps
+    /// the RNG stream identical to the historical dense-f32 construction,
+    /// so seeds reproduce the exact same transforms.
+    pub fn from_f32(d: &[f32]) -> SignDiag {
+        let mut words = vec![0u64; d.len().div_ceil(64)];
+        for (i, v) in d.iter().enumerate() {
+            if v.is_sign_negative() {
+                words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        SignDiag { words, len: d.len() }
+    }
+
+    /// Fresh random ±1 diagonal (consumes the RNG exactly like
+    /// `rng.rademacher_vec(n)`).
+    pub fn random(n: usize, rng: &mut Rng) -> SignDiag {
+        SignDiag::from_f32(&rng.rademacher_vec(n))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The packed sign words (bit `i%64` of word `i/64` = negate `x[i]`).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Actual storage footprint in bits (whole words, so `64 · ⌈n/64⌉`).
+    pub fn storage_bits(&self) -> usize {
+        self.words.len() * 64
+    }
+
+    /// Sign of entry `i` as an f32 sign-bit mask (`0` or `0x8000_0000`).
+    #[inline]
+    pub fn sign_mask(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len);
+        (((self.words[i / 64] >> (i % 64)) & 1) as u32) << 31
+    }
+
+    /// Entry `i` as ±1.0.
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        f32::from_bits(1.0f32.to_bits() | self.sign_mask(i))
+    }
+
+    /// `x[i] = ±x[i]` — the SIMD sign-XOR diagonal application.
+    #[inline]
+    pub fn apply(&self, x: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.len);
+        simd::apply_signs(x, &self.words);
+    }
+
+    /// `x[i] = ±x[i] · s` — sign application with a fused uniform scale
+    /// (bit-identical to multiplying by a dense diagonal of `±s`).
+    #[inline]
+    pub fn apply_scaled(&self, x: &mut [f32], s: f32) {
+        debug_assert_eq!(x.len(), self.len);
+        simd::apply_signs_scaled(x, &self.words, s);
+    }
+
+    /// Expand to a dense ±scale f32 diagonal (test / dense-reference path).
+    pub fn to_f32_scaled(&self, scale: f32) -> Vec<f32> {
+        (0..self.len)
+            .map(|i| f32::from_bits(scale.to_bits() ^ self.sign_mask(i)))
+            .collect()
+    }
+}
+
+/// One `D_i` of the chain: packed sign bits for Rademacher draws, dense
+/// floats for Gaussian ones.
+enum Diag {
+    /// ±1 signs packed 64-per-word with a uniform post-scale (`1.0` for
+    /// inner diagonals; the folded `√n · n^{-k/2}` on the last one).
+    Signs { signs: SignDiag, scale: f32 },
+    /// Dense f32 entries (Gaussian; the global scale is pre-multiplied in
+    /// when this is the last diagonal).
+    Dense(Vec<f32>),
+}
+
 /// `√n · H D_k ··· H D_1` chain transform (square, `n` a power of two).
 pub struct HdChain {
     n: usize,
     /// Diagonals in application order (`diags[0]` = `D_1`), with the global
-    /// `√n · n^{-k/2}` normalization pre-folded into the last one.
-    diags: Vec<Vec<f32>>,
-    /// Stored-parameter bits: `n` per Rademacher diagonal, `32n` per
+    /// `√n · n^{-k/2}` normalization folded into the last one.
+    diags: Vec<Diag>,
+    /// Model-parameter bits: `n` per Rademacher diagonal, `32n` per
     /// Gaussian one (fixed at construction).
     bits: usize,
     name: &'static str,
@@ -43,11 +164,14 @@ impl HdChain {
     pub fn with_kinds(n: usize, kinds: &[DiagKind], rng: &mut Rng, name: &'static str) -> HdChain {
         assert!(n.is_power_of_two(), "HdChain needs power-of-two n, got {n}");
         assert!(!kinds.is_empty());
-        let mut diags: Vec<Vec<f32>> = kinds
+        let mut diags: Vec<Diag> = kinds
             .iter()
             .map(|k| match k {
-                DiagKind::Rademacher => rng.rademacher_vec(n),
-                DiagKind::Gaussian => rng.gaussian_vec(n),
+                DiagKind::Rademacher => Diag::Signs {
+                    signs: SignDiag::random(n, rng),
+                    scale: 1.0,
+                },
+                DiagKind::Gaussian => Diag::Dense(rng.gaussian_vec(n)),
             })
             .collect();
         let k = kinds.len() as i32;
@@ -55,11 +179,16 @@ impl HdChain {
         let scale = ((n as f64).sqrt() * (n as f64).powf(-0.5 * k as f64)) as f32;
         // perf: scaling commutes with the linear FWHT chain, so fold the
         // global scalar into the *last* diagonal — saves one full pass
-        // over the output per apply (§Perf L3 iteration 1).
-        if let Some(last) = diags.last_mut() {
-            for v in last.iter_mut() {
-                *v *= scale;
+        // over the output per apply (§Perf L3 iteration 1). For a packed
+        // last diagonal it becomes the uniform post-scale of the sign XOR.
+        match diags.last_mut() {
+            Some(Diag::Signs { scale: s, .. }) => *s = scale,
+            Some(Diag::Dense(v)) => {
+                for e in v.iter_mut() {
+                    *e *= scale;
+                }
             }
+            None => unreachable!(),
         }
         let bits = kinds
             .iter()
@@ -113,11 +242,47 @@ impl HdChain {
         self.diags.len()
     }
 
-    /// Apply in place into `buf` (`buf.len() == n`), the alloc-free hot path.
+    /// Diagonal `i` expanded to dense f32 (with any folded scale applied) —
+    /// the dense-reference / serialization expansion path. Not for the hot
+    /// loop.
+    pub fn diag_dense(&self, i: usize) -> Vec<f32> {
+        match &self.diags[i] {
+            Diag::Signs { signs, scale } => signs.to_f32_scaled(*scale),
+            Diag::Dense(v) => v.clone(),
+        }
+    }
+
+    /// Actual stored parameter footprint in bits: `64 · ⌈n/64⌉` per packed
+    /// Rademacher diagonal (≈ `n`, the paper's bit-matrix claim), `32n` per
+    /// Gaussian one. The folded normalization constant is derived from
+    /// `(n, k)`, not stored. Contrast with [`Transform::param_bits`], which
+    /// reports the model-theoretic count.
+    pub fn stored_bits(&self) -> usize {
+        self.diags
+            .iter()
+            .map(|d| match d {
+                Diag::Signs { signs, .. } => signs.storage_bits(),
+                Diag::Dense(v) => 32 * v.len(),
+            })
+            .sum()
+    }
+
+    /// Apply in place into `buf` (`buf.len() == n`), the alloc-free hot
+    /// path: per spin, one diagonal pass (sign-XOR for packed, multiply
+    /// for dense) then one FWHT.
     pub fn apply_in_place(&self, buf: &mut [f32]) {
         debug_assert_eq!(buf.len(), self.n);
         for d in &self.diags {
-            scale_by(buf, d);
+            match d {
+                Diag::Signs { signs, scale } => {
+                    if *scale == 1.0 {
+                        signs.apply(buf);
+                    } else {
+                        signs.apply_scaled(buf, *scale);
+                    }
+                }
+                Diag::Dense(v) => scale_by(buf, v),
+            }
             fwht(buf);
         }
     }
@@ -147,7 +312,7 @@ impl Transform for HdChain {
     // at n >= 256 — three full-batch sweeps trade row-local L1 reuse for
     // repeated L2 streaming (PR 2, tools/bench_mirror.c).
 
-    /// `k` spins of (scale + FWHT) per row.
+    /// `k` spins of (diagonal pass + FWHT) per row.
     fn batch_work_per_row(&self) -> usize {
         let n = self.n.max(2);
         self.diags.len() * n * (n.ilog2() as usize + 1)
@@ -160,6 +325,10 @@ impl Transform for HdChain {
     fn param_bits(&self) -> usize {
         self.bits
     }
+
+    fn stored_bits(&self) -> usize {
+        HdChain::stored_bits(self)
+    }
 }
 
 #[cfg(test)]
@@ -171,7 +340,8 @@ mod tests {
 
     /// Dense reference: build the chain exactly as `apply` computes it —
     /// unnormalized H̃ per spin over the *stored* diagonals (the global
-    /// √n·n^{-k/2} normalization is folded into the last stored diagonal).
+    /// √n·n^{-k/2} normalization is folded into the last stored diagonal,
+    /// expanded here through [`HdChain::diag_dense`]).
     fn dense_reference(chain: &HdChain, n: usize) -> Vec<f32> {
         let h = hadamard_dense(n); // unnormalized ±1
         // start with identity
@@ -179,7 +349,8 @@ mod tests {
         for i in 0..n {
             m[i * n + i] = 1.0;
         }
-        for d in &chain.diags {
+        for di in 0..chain.num_spins() {
+            let d = chain.diag_dense(di);
             // m = H̃ * D * m
             let mut scaled = m.clone();
             for i in 0..n {
@@ -222,6 +393,60 @@ mod tests {
     }
 
     #[test]
+    fn packed_diag_matches_dense_f32_reference_bitwise() {
+        // The packed sign-XOR chain must reproduce the historical dense
+        // Vec<f32>-diagonal implementation byte for byte: same seeds, same
+        // RNG stream, the diagonal pass done by explicit f32 multiplies
+        // against diag_dense().
+        for_all(20, |g| {
+            let n = g.pow2_in(1, 9);
+            let seed = g.u64();
+            let gaussian_last = g.bool();
+            let chain = if gaussian_last {
+                HdChain::hdg(n, &mut Rng::new(seed))
+            } else {
+                HdChain::hd3(n, &mut Rng::new(seed))
+            };
+            let x = g.gaussian_vec(n);
+            let got = chain.apply(&x);
+            // old-style evaluation: dense f32 diagonals + fwht per spin
+            let mut old = x;
+            for d in 0..chain.num_spins() {
+                let dd = chain.diag_dense(d);
+                for (v, s) in old.iter_mut().zip(&dd) {
+                    *v *= *s;
+                }
+                crate::linalg::fwht::fwht(&mut old);
+            }
+            assert_eq!(got, old, "n={n} gaussian_last={gaussian_last}");
+        });
+    }
+
+    #[test]
+    fn sign_diag_round_trip_and_storage() {
+        let mut rng = Rng::new(12);
+        for n in [1usize, 63, 64, 65, 200] {
+            let d = rng.rademacher_vec(n);
+            let sd = SignDiag::from_f32(&d);
+            assert_eq!(sd.len(), n);
+            assert_eq!(sd.storage_bits(), n.div_ceil(64) * 64);
+            for i in 0..n {
+                assert_eq!(sd.get(i), d[i], "n={n} i={i}");
+            }
+            assert_eq!(sd.to_f32_scaled(1.0), d);
+            // application == multiply, bitwise
+            let x = rng.gaussian_vec(n);
+            let mut a = x.clone();
+            sd.apply(&mut a);
+            let mut b = x;
+            for (v, s) in b.iter_mut().zip(&d) {
+                *v *= *s;
+            }
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
     fn norm_scaling_exact_for_discrete_chain() {
         // (HD)^k with H an isometry and D ±1 is an isometry, so the √n-scaled
         // chain maps unit vectors to norm exactly √n.
@@ -247,6 +472,25 @@ mod tests {
         let hdg = HdChain::hdg(64, &mut rng);
         assert_eq!(hd3.param_bits(), 3 * 64);
         assert_eq!(hdg.param_bits(), 2 * 64 + 32 * 64);
+    }
+
+    #[test]
+    fn stored_bits_reports_packed_footprint() {
+        let mut rng = Rng::new(3);
+        // n = 128: each Rademacher diagonal packs into two u64 words.
+        let hd3 = HdChain::hd3(128, &mut rng);
+        assert_eq!(hd3.stored_bits(), 3 * 128, "hd3 must store ~n bits/diag");
+        let hdg = HdChain::hdg(128, &mut rng);
+        assert_eq!(hdg.stored_bits(), 2 * 128 + 32 * 128);
+        // the packed footprint is exactly 32x below the dense f32 layout
+        // the diagonals expand to (diag_dense is that expansion)
+        let dense_bits: usize = (0..hd3.num_spins())
+            .map(|i| 32 * hd3.diag_dense(i).len())
+            .sum();
+        assert_eq!(32 * hd3.stored_bits(), dense_bits);
+        // Transform-trait view agrees
+        let t: &dyn crate::transform::Transform = &hd3;
+        assert_eq!(t.stored_bits(), 3 * 128);
     }
 
     #[test]

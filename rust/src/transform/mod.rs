@@ -27,7 +27,7 @@ pub mod hd;
 pub use blocks::StackedTransform;
 pub use circulant::StructuredGaussian;
 pub use dense_gaussian::DenseGaussian;
-pub use hd::HdChain;
+pub use hd::{HdChain, SignDiag};
 
 use crate::linalg::Workspace;
 use crate::runtime::pool::{shard_rows, WorkerPool};
@@ -64,6 +64,15 @@ pub trait Transform: Send + Sync {
     /// Number of stored parameters, counting a ±1 entry as one bit and a
     /// float as 32 bits. Reported by the compression tables.
     fn param_bits(&self) -> usize;
+
+    /// Bits the parameters *actually occupy in memory*. Families whose
+    /// Rademacher diagonals are packed into `u64` sign bitmasks
+    /// ([`hd::SignDiag`]) report the real packed footprint (≈ `n` bits per
+    /// discrete diagonal, not `32n`); the default assumes storage matches
+    /// the model-theoretic [`Transform::param_bits`].
+    fn stored_bits(&self) -> usize {
+        self.param_bits()
+    }
 
     /// `y = G_struct x`. Thin allocating wrapper over
     /// [`Transform::apply_into`].

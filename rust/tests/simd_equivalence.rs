@@ -1,0 +1,162 @@
+//! Bit-for-bit SIMD/scalar equivalence suite.
+//!
+//! The SIMD layer's contract is that **every dispatch level computes
+//! byte-identical outputs** — `TS_NO_SIMD=1`, a SIMD-less host and the
+//! AVX2 build must be interchangeable down to the last bit. This suite
+//! enforces it end to end: for every transform family × shape × batch
+//! shape, `apply_into` and `apply_batch_into` run under every forcible
+//! SIMD tier (the detected level, plus SSE2 on x86-64 — baseline there,
+//! so AVX2-only CI runners still cover the SSE2 kernels) and under the
+//! forced scalar level, and the outputs must be identical bytes. The
+//! packed `SignDiag` diagonals are additionally checked against the
+//! historical dense f32-diagonal reference.
+//!
+//! `simd::force` mutates process-global dispatch state, so everything runs
+//! inside one `#[test]` (no intra-process races; the CI `TS_NO_SIMD=1`
+//! lane separately runs the whole suite pinned to scalar).
+
+use triplespin::linalg::simd;
+use triplespin::runtime::WorkerPool;
+use triplespin::transform::{make, make_square, Family, SignDiag, Transform};
+use triplespin::util::rng::Rng;
+
+const ALL_FAMILIES: [Family; 7] = [
+    Family::Dense,
+    Family::Hd3,
+    Family::Hdg,
+    Family::Circulant,
+    Family::Toeplitz,
+    Family::Hankel,
+    Family::SkewCirculant,
+];
+
+/// Run `f` under the given dispatch level, restoring auto-detection after.
+fn with_level<R>(level: Option<simd::Level>, f: impl FnOnce() -> R) -> R {
+    simd::force(level);
+    let r = f();
+    simd::force(None);
+    r
+}
+
+/// The non-scalar tiers to pit against the scalar oracle. Always the
+/// detected level; on x86-64 additionally SSE2 (part of the architecture
+/// baseline, so forcing it is always executable) — otherwise the SSE2
+/// kernels would ship with zero coverage on AVX2-only CI runners.
+fn levels_under_test() -> Vec<simd::Level> {
+    let mut levels = vec![simd::level()];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if !levels.contains(&simd::Level::Sse2) {
+            levels.push(simd::Level::Sse2);
+        }
+    }
+    levels.retain(|l| *l != simd::Level::Scalar);
+    levels
+}
+
+fn apply_all(t: &dyn Transform, x: &[f32]) -> Vec<f32> {
+    let mut ws = t.make_workspace();
+    let mut out = vec![0.0f32; t.dim_out()];
+    t.apply_into(x, &mut out, &mut ws);
+    out
+}
+
+fn apply_batch_all(t: &dyn Transform, xs: &[f32], rows: usize, pool: &WorkerPool) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * t.dim_out()];
+    t.apply_batch_into(xs, &mut out, pool);
+    out
+}
+
+fn check_family_equivalence() {
+    let levels = levels_under_test();
+    // shapes: square (small, odd-ish pow2, large enough for full SIMD
+    // bodies + ragged batch rows) and stacked/truncated rectangles
+    let dims = [4usize, 32, 256];
+    let row_counts = [1usize, 3, 17, 40];
+    let pool = WorkerPool::with_min_work(4, 0); // gate off: force the parallel path
+    for fam in ALL_FAMILIES {
+        for &n in &dims {
+            let seed = 1000 + n as u64;
+            // NOTE: constructors must be re-run per level only if they
+            // depended on dispatch — they don't (construction is pure RNG +
+            // f64 trig) — so one instance is shared across levels.
+            let square = make_square(fam, n, &mut Rng::new(seed));
+            let stacked = make(fam, n + n / 2 + 1, n, (n / 2).max(1), &mut Rng::new(seed));
+            for t in [&square, &stacked] {
+                let x = Rng::new(seed ^ 0xF00D).gaussian_vec(n);
+                let scalar_out = with_level(Some(simd::Level::Scalar), || apply_all(t.as_ref(), &x));
+                for &level in &levels {
+                    let simd_out = with_level(Some(level), || apply_all(t.as_ref(), &x));
+                    assert_eq!(
+                        simd_out,
+                        scalar_out,
+                        "{fam:?} n={n} {}: apply_into differs between {} and scalar",
+                        t.name(),
+                        level.name(),
+                    );
+                }
+                for &rows in &row_counts {
+                    let xs = Rng::new(seed ^ rows as u64).gaussian_vec(rows * n);
+                    let scalar_out = with_level(Some(simd::Level::Scalar), || {
+                        apply_batch_all(t.as_ref(), &xs, rows, &pool)
+                    });
+                    for &level in &levels {
+                        let simd_out =
+                            with_level(Some(level), || apply_batch_all(t.as_ref(), &xs, rows, &pool));
+                        assert_eq!(
+                            simd_out,
+                            scalar_out,
+                            "{fam:?} n={n} rows={rows} {}: apply_batch_into differs between {} and scalar",
+                            t.name(),
+                            level.name(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn check_sign_diag_against_f32_reference() {
+    // packed SignDiag application == the old dense Vec<f32> ±1 diagonal
+    // multiply, bitwise, under every dispatch level
+    let mut levels = levels_under_test();
+    levels.push(simd::Level::Scalar);
+    let mut rng = Rng::new(77);
+    for n in [1usize, 31, 64, 100, 1024] {
+        let dense = rng.rademacher_vec(n);
+        let sd = SignDiag::from_f32(&dense);
+        let x = rng.gaussian_vec(n);
+        let mut reference = x.clone();
+        for (v, s) in reference.iter_mut().zip(&dense) {
+            *v *= *s;
+        }
+        for &level in &levels {
+            let mut got = x.clone();
+            with_level(Some(level), || sd.apply(&mut got));
+            assert_eq!(got, reference, "n={n} level={}", level.name());
+        }
+        // scaled variant == multiplying by a ±s dense diagonal
+        let s = 0.0625f32;
+        let mut reference = x.clone();
+        for (v, d) in reference.iter_mut().zip(&dense) {
+            *v *= *d * s;
+        }
+        for &level in &levels {
+            let mut got = x.clone();
+            with_level(Some(level), || sd.apply_scaled(&mut got, s));
+            assert_eq!(got, reference, "scaled n={n} level={}", level.name());
+        }
+    }
+}
+
+#[test]
+fn simd_and_scalar_paths_are_byte_identical() {
+    println!(
+        "detected SIMD level: {}; tiers under test vs scalar: {:?}",
+        simd::level().name(),
+        levels_under_test().iter().map(|l| l.name()).collect::<Vec<_>>()
+    );
+    check_sign_diag_against_f32_reference();
+    check_family_equivalence();
+}

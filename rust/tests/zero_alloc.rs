@@ -19,6 +19,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use triplespin::coordinator::{Backend, NativeBackend};
+use triplespin::linalg::Workspace;
 use triplespin::runtime::{Op, WorkerPool};
 use triplespin::transform::{make, make_square, Family, Transform};
 use triplespin::util::rng::Rng;
@@ -163,8 +164,41 @@ fn check_native_backend_bounded_allocs() {
     }
 }
 
+fn check_workspace_checkouts_zero_alloc() {
+    // Both checkout flavors must be allocation-free once the pool holds a
+    // buffer of the right capacity: the zeroed take_* pays only a memset,
+    // the dirty take_*_uninit not even that.
+    let mut ws = Workspace::new();
+    for len in [64usize, 4096] {
+        // warm: one allocation each for the f32 and f64 pool entries
+        let warm32 = ws.take_f32(len);
+        ws.put_f32(warm32);
+        let warm64 = ws.take_f64(len);
+        ws.put_f64(warm64);
+        let before = alloc_count();
+        for _ in 0..16 {
+            let a = ws.take_f32_uninit(len);
+            ws.put_f32(a);
+            let b = ws.take_f32(len);
+            ws.put_f32(b);
+            let c = ws.take_f64_uninit(len);
+            ws.put_f64(c);
+            let d = ws.take_f64(len);
+            ws.put_f64(d);
+        }
+        let after = alloc_count();
+        assert_eq!(
+            before,
+            after,
+            "len={len}: warm take/put (zeroed + uninit) allocated {} time(s)",
+            after - before
+        );
+    }
+}
+
 #[test]
 fn hot_paths_are_allocation_free_after_warmup() {
+    check_workspace_checkouts_zero_alloc();
     check_apply_into_zero_alloc();
     check_pooled_batch_zero_alloc_and_no_spawns();
     check_native_backend_bounded_allocs();
