@@ -11,9 +11,11 @@
 //! Plus the NativeBackend `Op::Transform` / `Op::Rff` batch lanes, a
 //! `simd_vs_scalar` sweep (the serial batch kernel under the detected SIMD
 //! dispatch level vs forced `TS_NO_SIMD`-style scalar — both paths are
-//! bit-identical, so this isolates pure throughput), and a `diag_micro`
-//! entry timing the packed sign-XOR diagonal against the dense f32
-//! multiply it replaced.
+//! bit-identical, so this isolates pure throughput), an `fft_variant`
+//! sweep (the default RFFT radix-4 convolution engine vs the legacy
+//! complex radix-2 `TS_FFT=complex` lane on the same circulant/Toeplitz
+//! transforms, serial + pooled), and a `diag_micro` entry timing the
+//! packed sign-XOR diagonal against the dense f32 multiply it replaced.
 //!
 //! Writes `BENCH_transform_throughput.json` at the repo root to extend the
 //! perf trajectory. Set `TS_FULL=1` for the larger dims / row counts and
@@ -22,6 +24,7 @@
 //!     cargo bench --bench transform_throughput
 
 use triplespin::coordinator::{Backend, NativeBackend};
+use triplespin::linalg::fft;
 use triplespin::linalg::simd;
 use triplespin::linalg::vecops::scale_by;
 use triplespin::runtime::{Op, WorkerPool};
@@ -223,6 +226,68 @@ fn main() {
         }
     }
 
+    // FFT-variant sweep: the same circulant/Toeplitz transform (same
+    // seeds, same inputs) built on the default RFFT radix-4 engine vs the
+    // legacy complex radix-2 path (the TS_FFT=complex lane), serial and
+    // pooled. Outputs agree to f64 round-off (tests/fft_variant.rs), so
+    // the ratio is pure convolution-engine throughput.
+    println!("\n== fft variant (complex radix-2 vs rfft radix-4) ==\n");
+    for fam in [Family::Circulant, Family::Toeplitz] {
+        for &n in &dims {
+            let rows = *row_counts.last().unwrap();
+            let xs = Rng::new(2).gaussian_vec(rows * n);
+            let mut out = vec![0.0f32; rows * n];
+            fft::force_variant(Some(fft::FftVariant::Complex));
+            let t_c = make_square(fam, n, &mut Rng::new(1));
+            fft::force_variant(Some(fft::FftVariant::Rfft));
+            let t_r = make_square(fam, n, &mut Rng::new(1));
+            fft::force_variant(None);
+            let label = format!("{} n={n} rows={rows}", fam.name());
+            let c_serial = bench::bench(&format!("{label} complex serial"), opts, || {
+                t_c.apply_batch_into(&xs, &mut out, &serial_pool);
+                std::hint::black_box(&out);
+            });
+            let r_serial = bench::bench(&format!("{label} rfft serial"), opts, || {
+                t_r.apply_batch_into(&xs, &mut out, &serial_pool);
+                std::hint::black_box(&out);
+            });
+            let c_pooled = bench::bench(&format!("{label} complex pooled"), opts, || {
+                t_c.apply_batch_into(&xs, &mut out, &pool);
+                std::hint::black_box(&out);
+            });
+            let r_pooled = bench::bench(&format!("{label} rfft pooled"), opts, || {
+                t_r.apply_batch_into(&xs, &mut out, &pool);
+                std::hint::black_box(&out);
+            });
+            println!(
+                "{label:<34} complex {:>10}  rfft {:>10}  serial x{:.2}  pooled x{:.2}",
+                bench::fmt_ns(c_serial.mean_ns),
+                bench::fmt_ns(r_serial.mean_ns),
+                c_serial.mean_ns / r_serial.mean_ns,
+                c_pooled.mean_ns / r_pooled.mean_ns
+            );
+            entries.push(Json::obj(vec![
+                ("kind", Json::Str("fft_variant".into())),
+                ("family", Json::Str(fam.name().into())),
+                ("n", Json::Num(n as f64)),
+                ("rows", Json::Num(rows as f64)),
+                ("complex_serial_ns", Json::Num(c_serial.mean_ns)),
+                ("rfft_serial_ns", Json::Num(r_serial.mean_ns)),
+                ("complex_pooled_ns", Json::Num(c_pooled.mean_ns)),
+                ("rfft_pooled_ns", Json::Num(r_pooled.mean_ns)),
+                ("simd_level", Json::Str(simd_level.into())),
+                (
+                    "rfft_speedup_serial",
+                    Json::Num(c_serial.mean_ns / r_serial.mean_ns),
+                ),
+                (
+                    "rfft_speedup_pooled",
+                    Json::Num(c_pooled.mean_ns / r_pooled.mean_ns),
+                ),
+            ]));
+        }
+    }
+
     // Diagonal micro: packed sign-XOR application vs the dense f32
     // multiply it replaced (same ±1 diagonal, bit-identical results; the
     // packed operand stream is 32x smaller — the win shows once the dense
@@ -264,6 +329,7 @@ fn main() {
         ("provenance", Json::Str("cargo_bench".into())),
         ("workers", Json::Num(workers as f64)),
         ("simd_level", Json::Str(simd_level.into())),
+        ("fft_variant", Json::Str(fft::variant().name().into())),
         ("full_sweep", Json::Bool(full)),
         ("entries", Json::Arr(entries)),
     ]);

@@ -23,6 +23,15 @@
 //! twiddle-table multi-row FFT of [`linalg::fft::ConvPlan`]) and
 //! distributes rows over the persistent [`runtime::WorkerPool`] by atomic
 //! chunk claiming (work stealing — a slow worker gates at most one chunk).
+//!
+//! The circulant/Toeplitz/Hankel/skew families convolve through a
+//! **real-input half-spectrum FFT engine** by default: an `n`-point RFFT
+//! computed as an `n/2`-point radix-4 complex FFT plus a conjugate
+//! split/merge, with `n/2 + 1`-bin kernel spectra and a fused
+//! split·multiply·merge pass ([`linalg::simd::cmul_half`]) — half the
+//! butterflies, spectrum and scratch of the legacy full-complex path,
+//! which stays compiled and selectable via `TS_FFT=complex` as the A/B
+//! baseline and CI cross-check lane (see [`linalg::fft`]).
 //! Worker threads spawn once and keep one pinned workspace each for their
 //! lifetime, env-tunable via `TS_WORKERS` (`0` = single-threaded), so
 //! steady state performs zero thread spawns and zero heap allocations per

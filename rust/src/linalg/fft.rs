@@ -1,4 +1,5 @@
-//! Radix-2 complex FFT and FFT-based structured matvecs.
+//! Real-input (RFFT) and complex FFT engines for the FFT-based structured
+//! matvecs.
 //!
 //! Circulant / Toeplitz / Hankel / skew-circulant Gaussian matrices (the
 //! `G_circ D2 H D1`-style TripleSpin members, Lemma 1 of the paper) multiply
@@ -8,9 +9,127 @@
 //! All transforms work on split complex (re, im) `f64` buffers — the extra
 //! precision is free at these sizes and keeps the structured matvec within
 //! f32 round-off of the dense reference.
+//!
+//! ## Two engines, one [`ConvPlan`]
+//!
+//! Every convolution row in the engine is purely **real**, so the default
+//! engine is an **RFFT**: an `n`-point real transform computed as an
+//! `n/2`-point complex FFT over the packed row `z[k] = x[2k] + i·x[2k+1]`
+//! plus a conjugate-symmetric split/merge pass — half the butterflies,
+//! half the spectrum, half the scratch traffic of the old complex path.
+//!
+//! * **Half-spectrum layout.** A real row's spectrum is Hermitian
+//!   (`X[n-k] = conj(X[k])`), so only bins `0..=n/2` are stored: `n/2 + 1`
+//!   `(re, im)` pairs, with bins `0` and `n/2` real. [`ConvPlan`] keeps the
+//!   kernel spectrum in this layout and multiplies it with
+//!   [`simd::cmul_half`], which fuses split → pointwise multiply → merge in
+//!   one conjugate-pair walk so the full spectrum is never materialized.
+//! * **Radix-4 levels.** The half-size FFT runs fused radix-4 butterfly
+//!   levels ([`simd::fft_butterfly4`]; ~25% fewer twiddle multiplies and
+//!   half the sweeps over the row), with one radix-2 cleanup level first
+//!   when `log2` of the transform size is odd. Twiddle tables cover
+//!   `k < 3n/4` to feed the radix-4 `w, w², w³` accesses.
+//! * **Variant selection.** `TS_FFT=complex` pins the legacy full-complex
+//!   radix-2 path ([`FftVariant::Complex`]) — the A/B baseline and the CI
+//!   cross-check lane; anything else (default) selects
+//!   [`FftVariant::Rfft`]. A plan captures the active variant at
+//!   construction and stays internally consistent regardless of later
+//!   [`force_variant`] calls.
+//!
+//! ## Bit-identity scope
+//!
+//! The RFFT path is **not** bit-identical to the complex path (different
+//! operation order); correctness across the two is pinned by the naive-DFT
+//! and naive-circulant oracles (tolerance) plus the property tests below.
+//! *Within* each path the SIMD dispatch tiers remain bit-identical to
+//! scalar (`tests/simd_equivalence.rs`), and the batch kernel remains
+//! bit-identical to the single-row kernel.
 
 use crate::linalg::simd;
 use std::f64::consts::PI;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which engine [`ConvPlan`] builds: the real-input half-spectrum RFFT
+/// (default) or the legacy full-complex radix-2 path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FftVariant {
+    /// Half-spectrum real-input engine (radix-4 half-size FFT + conjugate
+    /// split/merge). The default.
+    Rfft,
+    /// Full complex radix-2 path — selected by `TS_FFT=complex`; kept
+    /// compiled as the A/B baseline and CI cross-check lane.
+    Complex,
+}
+
+impl FftVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FftVariant::Rfft => "rfft",
+            FftVariant::Complex => "complex",
+        }
+    }
+}
+
+const VARIANT_UNSET: u8 = u8::MAX;
+static VARIANT: AtomicU8 = AtomicU8::new(VARIANT_UNSET);
+
+fn detect_variant() -> FftVariant {
+    match std::env::var("TS_FFT") {
+        Ok(v) if v.eq_ignore_ascii_case("complex") => FftVariant::Complex,
+        _ => FftVariant::Rfft,
+    }
+}
+
+/// The engine new [`ConvPlan`]s are built on (`TS_FFT`-selected, cached;
+/// see [`force_variant`]).
+pub fn variant() -> FftVariant {
+    match VARIANT.load(Ordering::Relaxed) {
+        0 => FftVariant::Rfft,
+        1 => FftVariant::Complex,
+        _ => {
+            let v = detect_variant();
+            VARIANT.store(if v == FftVariant::Complex { 1 } else { 0 }, Ordering::Relaxed);
+            v
+        }
+    }
+}
+
+/// Override the plan-construction variant (`None` = re-read `TS_FFT`).
+/// Bench/test hook for A/B-ing both engines in one process; existing plans
+/// keep the variant they were built with.
+pub fn force_variant(v: Option<FftVariant>) {
+    let enc = match v {
+        Some(FftVariant::Rfft) => 0,
+        Some(FftVariant::Complex) => 1,
+        None => {
+            if detect_variant() == FftVariant::Complex {
+                1
+            } else {
+                0
+            }
+        }
+    };
+    VARIANT.store(enc, Ordering::Relaxed);
+}
+
+/// `exp(-2πi k/n)` for `k <` the variant's read range: the complex
+/// radix-2 levels read `k < n/2`; the RFFT's radix-4 levels read strided
+/// `j, 2j, 3j` indices up to `< 3n/4` and its conjugate split/merge reads
+/// `k < n/4`, so its tables extend to `3n/4`.
+fn build_twiddles(n: usize, variant: FftVariant) -> (Vec<f64>, Vec<f64>) {
+    let len = match variant {
+        FftVariant::Complex => (n / 2).max(1),
+        FftVariant::Rfft => (3 * n / 4).max(1),
+    };
+    let mut twr = Vec::with_capacity(len);
+    let mut twi = Vec::with_capacity(len);
+    for i in 0..len {
+        let ang = -2.0 * PI * i as f64 / n as f64;
+        twr.push(ang.cos());
+        twi.push(ang.sin());
+    }
+    (twr, twi)
+}
 
 /// In-place iterative radix-2 Cooley–Tukey FFT.
 /// `re.len() == im.len()` must be a power of two. `inverse` applies the
@@ -64,27 +183,13 @@ pub fn fft(re: &mut [f64], im: &mut [f64], inverse: bool) {
 }
 
 /// Circular convolution `a ⊛ b` of two real vectors of equal power-of-two
-/// length, via FFT.
+/// length. Routed through a one-shot [`ConvPlan`] so the one-shot and
+/// planned paths share one kernel (and the naive-convolution oracle tests
+/// exercise the active — by default RFFT — engine) instead of paying four
+/// scratch `Vec`s and two full complex FFTs per call.
 pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
-    let n = a.len();
-    debug_assert_eq!(n, b.len());
-    debug_assert!(n.is_power_of_two());
-    let mut ar = a.to_vec();
-    let mut ai = vec![0.0; n];
-    let mut br = b.to_vec();
-    let mut bi = vec![0.0; n];
-    fft(&mut ar, &mut ai, false);
-    fft(&mut br, &mut bi, false);
-    for i in 0..n {
-        let (r, im) = (
-            ar[i] * br[i] - ai[i] * bi[i],
-            ar[i] * bi[i] + ai[i] * br[i],
-        );
-        ar[i] = r;
-        ai[i] = im;
-    }
-    fft(&mut ar, &mut ai, true);
-    ar
+    debug_assert_eq!(a.len(), b.len());
+    ConvPlan::new(a).apply(b)
 }
 
 /// Bit-reversal permutation shared by [`fft`] and the table-driven plan
@@ -111,12 +216,14 @@ fn bit_reverse(re: &mut [f64], im: &mut [f64]) {
 }
 
 /// One radix-2 butterfly level (span `len`) over one row, twiddles looked
-/// up from a precomputed `exp(-2πi k/n)` table (stride `n/len`). The table
-/// drive replaces the per-stage trig recurrence of [`fft`]: no serial
-/// dependency in the inner loop, every row of a batch reuses the same
-/// table entries, and each block's complex butterflies run through the
-/// dispatched SIMD kernel ([`simd::fft_butterfly`] — bit-identical to its
-/// scalar path, no FMA contraction).
+/// up from a precomputed `exp(-2πi k/tab_n)` table (stride `tab_n/len`).
+/// The table drive replaces the per-stage trig recurrence of [`fft`]: no
+/// serial dependency in the inner loop, every row of a batch reuses the
+/// same table entries, and each block's complex butterflies run through
+/// the dispatched SIMD kernel ([`simd::fft_butterfly`] — bit-identical to
+/// its scalar path, no FMA contraction). `tab_n` equals the transform
+/// length for the complex path and `2×` it for the RFFT's half-size
+/// transform (which shares the full-length table).
 #[inline]
 fn butterfly_level(
     re: &mut [f64],
@@ -125,10 +232,11 @@ fn butterfly_level(
     inverse: bool,
     twr: &[f64],
     twi: &[f64],
+    tab_n: usize,
 ) {
     let n = re.len();
     let half = len / 2;
-    let stride = n / len;
+    let stride = tab_n / len;
     let sign = if inverse { -1.0 } else { 1.0 };
     let mut i = 0;
     while i < n {
@@ -139,8 +247,39 @@ fn butterfly_level(
     }
 }
 
-/// Full table-driven FFT over one row (used by the plan kernels; the
-/// standalone [`fft`] keeps its table-free form for one-shot callers).
+/// One fused radix-4 butterfly level (span `len`) — each block's four
+/// quarters run through [`simd::fft_butterfly4`]. Same table convention as
+/// [`butterfly_level`].
+#[inline]
+fn butterfly4_level(
+    re: &mut [f64],
+    im: &mut [f64],
+    len: usize,
+    inverse: bool,
+    twr: &[f64],
+    twi: &[f64],
+    tab_n: usize,
+) {
+    let n = re.len();
+    let q = len / 4;
+    let stride = tab_n / len;
+    let sign = if inverse { -1.0 } else { 1.0 };
+    let mut i = 0;
+    while i < n {
+        let (re0, rr) = re[i..i + len].split_at_mut(q);
+        let (re1, rr) = rr.split_at_mut(q);
+        let (re2, re3) = rr.split_at_mut(q);
+        let (im0, ir) = im[i..i + len].split_at_mut(q);
+        let (im1, ir) = ir.split_at_mut(q);
+        let (im2, im3) = ir.split_at_mut(q);
+        simd::fft_butterfly4(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign);
+        i += len;
+    }
+}
+
+/// Full table-driven radix-2 FFT over one row (the legacy complex plan
+/// kernel; the standalone [`fft`] keeps its table-free form for one-shot
+/// callers).
 #[inline]
 fn fft_tabled(re: &mut [f64], im: &mut [f64], inverse: bool, twr: &[f64], twi: &[f64]) {
     let n = re.len();
@@ -150,7 +289,7 @@ fn fft_tabled(re: &mut [f64], im: &mut [f64], inverse: bool, twr: &[f64], twi: &
     bit_reverse(re, im);
     let mut len = 2;
     while len <= n {
-        butterfly_level(re, im, len, inverse, twr, twi);
+        butterfly_level(re, im, len, inverse, twr, twi, n);
         len <<= 1;
     }
     if inverse {
@@ -164,9 +303,108 @@ fn fft_tabled(re: &mut [f64], im: &mut [f64], inverse: bool, twr: &[f64], twi: &
     }
 }
 
+/// Table-driven FFT with fused radix-4 levels — the engine under the
+/// RFFT's half-size transform. Rule: one radix-2 cleanup level first when
+/// `log2(len)` is odd (it carries no twiddle multiplies), then pure
+/// radix-4 levels `4L ← L`. `tab_n` is the twiddle-table granularity
+/// (`2 × re.len()` when called on the RFFT's packed half-size row).
+fn fft_radix4_tabled(
+    re: &mut [f64],
+    im: &mut [f64],
+    inverse: bool,
+    twr: &[f64],
+    twi: &[f64],
+    tab_n: usize,
+) {
+    let h = re.len();
+    if h <= 1 {
+        return;
+    }
+    debug_assert!(h.is_power_of_two());
+    bit_reverse(re, im);
+    let mut len = if h.trailing_zeros() % 2 == 1 {
+        butterfly_level(re, im, 2, inverse, twr, twi, tab_n);
+        8
+    } else {
+        4
+    };
+    while len <= h {
+        butterfly4_level(re, im, len, inverse, twr, twi, tab_n);
+        len <<= 2;
+    }
+    if inverse {
+        let s = 1.0 / h as f64;
+        for v in re.iter_mut() {
+            *v *= s;
+        }
+        for v in im.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+/// Real-input FFT: the half spectrum (`n/2 + 1` bins, bins `0` and `n/2`
+/// real) of a real power-of-two-length signal, computed as an `n/2`-point
+/// radix-4 complex FFT over the packed row `z[k] = x[2k] + i·x[2k+1]` plus
+/// the conjugate-symmetric split. Matches bins `0..=n/2` of [`fft`] run on
+/// `(x, 0)`.
+pub fn rfft(x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "rfft needs power-of-two len, got {n}");
+    let (twr, twi) = build_twiddles(n, FftVariant::Rfft);
+    rfft_with_tables(x, &twr, &twi)
+}
+
+/// [`rfft`] on caller-provided RFFT-sized twiddle tables — the single
+/// pack → half-size radix-4 FFT → split kernel shared by the standalone
+/// transform and [`ConvPlan`] construction (which reuses the plan's own
+/// tables instead of rebuilding them).
+fn rfft_with_tables(x: &[f64], twr: &[f64], twi: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = x.len();
+    if n <= 1 {
+        return (x.to_vec(), vec![0.0; n]);
+    }
+    let h = n / 2;
+    let mut zre: Vec<f64> = (0..h).map(|k| x[2 * k]).collect();
+    let mut zim: Vec<f64> = (0..h).map(|k| x[2 * k + 1]).collect();
+    fft_radix4_tabled(&mut zre, &mut zim, false, twr, twi, n);
+    let mut xr = vec![0.0; h + 1];
+    let mut xi = vec![0.0; h + 1];
+    simd::rfft_split(&zre, &zim, &mut xr, &mut xi, twr, twi);
+    (xr, xi)
+}
+
+/// Inverse of [`rfft`] (including the `1/n` scaling): the real signal
+/// whose half spectrum is `(xr, xi)` (`n/2 + 1` bins for an `n`-point
+/// signal).
+pub fn irfft(xr: &[f64], xi: &[f64]) -> Vec<f64> {
+    let bins = xr.len();
+    assert_eq!(bins, xi.len());
+    assert!(bins >= 1, "irfft needs at least the DC bin");
+    if bins == 1 {
+        return vec![xr[0]];
+    }
+    let h = bins - 1;
+    let n = 2 * h;
+    assert!(n.is_power_of_two(), "irfft needs power-of-two len, got {n}");
+    let (twr, twi) = build_twiddles(n, FftVariant::Rfft);
+    let mut zre = vec![0.0; h];
+    let mut zim = vec![0.0; h];
+    simd::rfft_merge(xr, xi, &mut zre, &mut zim, &twr, &twi);
+    fft_radix4_tabled(&mut zre, &mut zim, true, &twr, &twi, n);
+    let mut x = vec![0.0; n];
+    for k in 0..h {
+        x[2 * k] = zre[k];
+        x[2 * k + 1] = zim[k];
+    }
+    x
+}
+
 /// Rows per block of the batch convolution kernel: bounds the f64 scratch
-/// (`2 * block * n` doubles) while amortizing the twiddle stream across
-/// rows. Consumers size their workspace scratch with
+/// (`block * n` data doubles plus [`ConvPlan::batch_scratch_len`] of
+/// spectrum scratch — one shared row under the RFFT engine, a full
+/// imaginary image on the complex lane) while amortizing the twiddle
+/// stream across rows. Consumers size their workspace scratch with
 /// [`ConvPlan::batch_block_rows`].
 const MAX_FFT_BLOCK_ROWS: usize = 8;
 
@@ -175,33 +413,60 @@ const MAX_FFT_BLOCK_ROWS: usize = 8;
 /// table-driven FFTs — and batches of rows share one twiddle stream
 /// ([`ConvPlan::apply_batch_in_place`]) instead of re-deriving the
 /// per-stage trig recurrence once per row.
+///
+/// The plan captures the active [`FftVariant`] at construction: the
+/// default RFFT engine stores the kernel's **half spectrum** (`n/2 + 1`
+/// bins) and convolves through the half-size radix-4 FFT; the
+/// `TS_FFT=complex` legacy engine stores the full `n`-bin spectrum and
+/// runs the radix-2 complex path.
 #[derive(Clone, Debug)]
 pub struct ConvPlan {
     n: usize,
+    variant: FftVariant,
+    /// Kernel spectrum: half (`n/2 + 1` bins) for [`FftVariant::Rfft`],
+    /// full (`n` bins) for [`FftVariant::Complex`].
     kr: Vec<f64>,
     ki: Vec<f64>,
-    /// `exp(-2πi k/n)` for `k < max(n/2, 1)` (forward; inverse conjugates).
+    /// `exp(-2πi k/n)` (forward; inverse conjugates), sized per variant
+    /// by [`build_twiddles`]: `n/2` entries for the radix-2 complex lane,
+    /// `3n/4` for the RFFT's radix-4 `w, w², w³` accesses.
     twr: Vec<f64>,
     twi: Vec<f64>,
 }
 
 impl ConvPlan {
-    /// Plan for circular convolution with fixed kernel `k` (power-of-two len).
+    /// Plan for circular convolution with fixed kernel `k` (power-of-two
+    /// len) on the active [`variant`].
     pub fn new(k: &[f64]) -> ConvPlan {
+        ConvPlan::with_variant(k, variant())
+    }
+
+    /// Plan on an explicitly chosen engine, independent of the process
+    /// default — the race-free way for tests/benches to A/B the engines
+    /// without mutating global state.
+    pub fn with_variant(k: &[f64], variant: FftVariant) -> ConvPlan {
         let n = k.len();
         assert!(n.is_power_of_two());
-        let half = (n / 2).max(1);
-        let mut twr = Vec::with_capacity(half);
-        let mut twi = Vec::with_capacity(half);
-        for i in 0..half {
-            let ang = -2.0 * PI * i as f64 / n as f64;
-            twr.push(ang.cos());
-            twi.push(ang.sin());
+        let (twr, twi) = build_twiddles(n, variant);
+        let (kr, ki) = match variant {
+            FftVariant::Complex => {
+                let mut kr = k.to_vec();
+                let mut ki = vec![0.0; n];
+                fft_tabled(&mut kr, &mut ki, false, &twr, &twi);
+                (kr, ki)
+            }
+            // the kernel's half spectrum, on the plan's own twiddle
+            // tables (a plain `rfft(k)` call would rebuild them)
+            FftVariant::Rfft => rfft_with_tables(k, &twr, &twi),
+        };
+        ConvPlan {
+            n,
+            variant,
+            kr,
+            ki,
+            twr,
+            twi,
         }
-        let mut kr = k.to_vec();
-        let mut ki = vec![0.0; n];
-        fft_tabled(&mut kr, &mut ki, false, &twr, &twi);
-        ConvPlan { n, kr, ki, twr, twi }
     }
 
     pub fn len(&self) -> usize {
@@ -212,26 +477,61 @@ impl ConvPlan {
         self.n == 0
     }
 
+    /// The engine this plan was built on (fixed at construction).
+    pub fn variant(&self) -> FftVariant {
+        self.variant
+    }
+
     /// How many rows the batch kernel processes per block — size per-block
-    /// scratch as `batch_block_rows() * len()`.
+    /// data scratch as `batch_block_rows() * len()` (plus
+    /// [`ConvPlan::batch_scratch_len`] of shared spectrum scratch).
     pub fn batch_block_rows(&self) -> usize {
-        // keep a block's two f64 buffers within ~256 KiB
+        // keep a block's f64 buffers within ~256 KiB
         ((1usize << 14) / self.n.max(1)).clamp(1, MAX_FFT_BLOCK_ROWS)
+    }
+
+    /// Scratch doubles the caller must hand to
+    /// [`ConvPlan::apply_batch_in_place`] alongside a `rows`-row data
+    /// buffer. The complex lane needs a full imaginary image (`rows · n`);
+    /// the RFFT lane needs one packed-spectrum row (`n`) shared by every
+    /// row — half the checkout of the old engine for any `rows >= 2`.
+    pub fn batch_scratch_len(&self, rows: usize) -> usize {
+        match self.variant {
+            FftVariant::Complex => rows * self.n,
+            FftVariant::Rfft => self.n,
+        }
+    }
+
+    /// Rough per-matvec cost in the engine's ~f32-butterfly-op units (an
+    /// f64 complex butterfly counts ≈ 8): two full-length radix-2 FFT
+    /// sweeps plus the spectrum multiply for the complex lane; two
+    /// half-length sweeps plus the fused half-spectrum pass for the RFFT
+    /// lane. Feeds `Transform::batch_work_per_row` so the pool's work gate
+    /// tracks the active engine.
+    pub fn matvec_work(&self) -> usize {
+        let m = self.n.max(2);
+        let lg = m.ilog2() as usize + 1;
+        match self.variant {
+            FftVariant::Complex => 8 * (2 * m * lg + m),
+            FftVariant::Rfft => 8 * (m * lg + m),
+        }
     }
 
     /// `out = kernel ⊛ x` (circular).
     pub fn apply(&self, x: &[f64]) -> Vec<f64> {
         debug_assert_eq!(x.len(), self.n);
         let mut re = x.to_vec();
-        let mut im = vec![0.0; self.n];
+        let mut im = vec![0.0; self.batch_scratch_len(1)];
         self.apply_in_place(&mut re, &mut im);
         re
     }
 
     /// `re = kernel ⊛ re` (circular), in place. `im` is caller-provided
-    /// scratch of the same length, overwritten. The single-row case of
-    /// [`ConvPlan::apply_batch_in_place`] — the two share one code path so
-    /// the per-row and batch engines stay bit-for-bit identical.
+    /// scratch of [`ConvPlan::batch_scratch_len`]`(1)` (= `len()`)
+    /// doubles, overwritten — its incoming contents never reach the
+    /// output. The single-row case of [`ConvPlan::apply_batch_in_place`] —
+    /// the two share one code path so the per-row and batch engines stay
+    /// bit-for-bit identical.
     pub fn apply_in_place(&self, re: &mut [f64], im: &mut [f64]) {
         debug_assert_eq!(re.len(), self.n);
         self.apply_batch_in_place(re, im);
@@ -239,19 +539,23 @@ impl ConvPlan {
 
     /// Multi-row circular convolution: `re` holds `rows` row-major rows of
     /// `len()` each (`re = kernel ⊛ re` per row), `im` is caller scratch of
-    /// the same length, overwritten. The plan's precomputed twiddle tables
-    /// and the caller's blocked scratch are shared across every row; within
-    /// the block each row runs to completion (forward FFT, spectrum
-    /// multiply, inverse FFT) so it stays L1-resident — a level-major
-    /// ordering across rows was tried and REVERTED: re-streaming the block
-    /// once per butterfly level measured slower than per-row traversal at
-    /// n >= 512 (C-mirror calibration, PR 2). This is the batch kernel
-    /// under every circulant/Toeplitz/Hankel/skew family.
+    /// [`ConvPlan::batch_scratch_len`]`(rows)` doubles. The plan's
+    /// precomputed twiddle tables and the caller's scratch are shared
+    /// across every row; each row runs to completion (forward FFT,
+    /// spectrum multiply, inverse FFT) so it stays L1-resident — a
+    /// level-major ordering across rows was tried and REVERTED:
+    /// re-streaming the block once per butterfly level measured slower
+    /// than per-row traversal at n >= 512 (C-mirror calibration, PR 2).
+    /// This is the batch kernel under every circulant/Toeplitz/Hankel/skew
+    /// family.
+    ///
+    /// On the RFFT lane the scratch holds the packed half-size spectrum
+    /// and is **fully overwritten** before any read (dirty checkouts need
+    /// no zeroing); on the complex lane it is the semantic all-zero
+    /// imaginary input plane and is cleared here on every call.
     pub fn apply_batch_in_place(&self, re: &mut [f64], im: &mut [f64]) {
         let n = self.n;
         debug_assert_eq!(re.len() % n.max(1), 0);
-        debug_assert_eq!(im.len(), re.len());
-        im.fill(0.0);
         if n <= 1 {
             // 1-point FFT: pointwise scale by the kernel only.
             for v in re.iter_mut() {
@@ -259,16 +563,43 @@ impl ConvPlan {
             }
             return;
         }
-        for (rr, ri) in re.chunks_exact_mut(n).zip(im.chunks_exact_mut(n)) {
-            fft_tabled(rr, ri, false, &self.twr, &self.twi);
-            simd::cmul(rr, ri, &self.kr, &self.ki);
-            fft_tabled(rr, ri, true, &self.twr, &self.twi);
+        match self.variant {
+            FftVariant::Complex => {
+                debug_assert_eq!(im.len(), re.len());
+                im.fill(0.0);
+                for (rr, ri) in re.chunks_exact_mut(n).zip(im.chunks_exact_mut(n)) {
+                    fft_tabled(rr, ri, false, &self.twr, &self.twi);
+                    simd::cmul(rr, ri, &self.kr, &self.ki);
+                    fft_tabled(rr, ri, true, &self.twr, &self.twi);
+                }
+            }
+            FftVariant::Rfft => {
+                debug_assert!(im.len() >= n);
+                let h = n / 2;
+                let (zre, zim) = im[..n].split_at_mut(h);
+                for row in re.chunks_exact_mut(n) {
+                    // pack: z[k] = row[2k] + i·row[2k+1] (overwrites all
+                    // scratch this pass reads)
+                    for k in 0..h {
+                        zre[k] = row[2 * k];
+                        zim[k] = row[2 * k + 1];
+                    }
+                    fft_radix4_tabled(zre, zim, false, &self.twr, &self.twi, n);
+                    simd::cmul_half(zre, zim, &self.kr, &self.ki, &self.twr, &self.twi);
+                    fft_radix4_tabled(zre, zim, true, &self.twr, &self.twi, n);
+                    for k in 0..h {
+                        row[2 * k] = zre[k];
+                        row[2 * k + 1] = zim[k];
+                    }
+                }
+            }
         }
     }
 }
 
 /// Multiply by the circulant matrix whose **first row** is `row`:
-/// `y_i = sum_j row_{(j - i) mod n} x_j`.
+/// `y_i = sum_j row_{(j - i) mod n} x_j`. One-shot [`ConvPlan`] under the
+/// hood — the same kernel every planned matvec runs.
 pub fn circulant_matvec(row: &[f64], x: &[f64]) -> Vec<f64> {
     // first-row circulant C satisfies C x = reverse-shift trick:
     // y = IFFT(FFT(c_col) * FFT(x)) where c_col is the first column:
@@ -278,7 +609,7 @@ pub fn circulant_matvec(row: &[f64], x: &[f64]) -> Vec<f64> {
     for i in 0..n {
         col[i] = row[(n - i) % n];
     }
-    circular_convolve(&col, x)
+    ConvPlan::new(&col).apply(x)
 }
 
 /// Multiply by the Toeplitz matrix `T` with `T[i][j] = diag[j - i + (n-1)]`,
@@ -299,8 +630,9 @@ pub fn toeplitz_matvec(diag: &[f64], x: &[f64]) -> Vec<f64> {
     }
     let mut xx = vec![0.0; m];
     xx[..n].copy_from_slice(x);
-    let y = circular_convolve(&c, &xx);
-    y[..n].to_vec()
+    let mut y = ConvPlan::new(&c).apply(&xx);
+    y.truncate(n);
+    y
 }
 
 /// Multiply by the Hankel matrix `Hk[i][j] = anti[i + j]` where `anti` has
@@ -509,12 +841,12 @@ mod tests {
             let mut expect = Vec::with_capacity(rows * n);
             for row in batch.chunks_exact(n) {
                 let mut re = row.to_vec();
-                let mut im = vec![0.0; n];
+                let mut im = vec![0.0; plan.batch_scratch_len(1)];
                 plan.apply_in_place(&mut re, &mut im);
                 expect.extend_from_slice(&re);
             }
             let mut re = batch;
-            let mut im = vec![0.0; rows * n];
+            let mut im = vec![0.0; plan.batch_scratch_len(rows)];
             plan.apply_batch_in_place(&mut re, &mut im);
             assert_eq!(re, expect, "n={n} rows={rows}");
         });
@@ -523,17 +855,157 @@ mod tests {
     #[test]
     fn plan_scratch_reuse_is_clean() {
         // dirty im scratch (and dirty padding in re from a previous call)
-        // must not leak into results.
+        // must not leak into results — for BOTH engines (the complex lane
+        // clears its imaginary plane internally; the RFFT lane fully
+        // overwrites its packed-spectrum scratch before reading it).
         let mut rng = Rng::new(17);
         let n = 32;
         let k: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
-        let plan = ConvPlan::new(&k);
-        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
-        let clean = plan.apply(&x);
-        let mut re = x.clone();
-        let mut im: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect(); // garbage
-        plan.apply_in_place(&mut re, &mut im);
-        assert_eq!(re, clean);
+        for v in [FftVariant::Rfft, FftVariant::Complex] {
+            let plan = ConvPlan::with_variant(&k, v);
+            assert_eq!(plan.variant(), v);
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let clean = plan.apply(&x);
+            let mut re = x.clone();
+            let mut im: Vec<f64> = (0..plan.batch_scratch_len(1))
+                .map(|_| rng.gaussian())
+                .collect(); // garbage
+            plan.apply_in_place(&mut re, &mut im);
+            assert_eq!(re, clean, "variant={v:?}");
+        }
+    }
+
+    #[test]
+    fn rfft_matches_complex_fft_half_spectrum() {
+        // forward oracle across n ∈ {1 .. 2^14}: the RFFT's half spectrum
+        // must match bins 0..=n/2 of the (naive-DFT-verified) complex FFT.
+        let mut rng = Rng::new(41);
+        for lg in 0..=14usize {
+            let n = 1usize << lg;
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let (xr, xi) = rfft(&x);
+            assert_eq!(xr.len(), n / 2 + 1);
+            assert_eq!(xi.len(), n / 2 + 1);
+            let mut fr = x.clone();
+            let mut fi = vec![0.0; n];
+            fft(&mut fr, &mut fi, false);
+            let tol = 1e-9 * (n as f64).max(1.0);
+            for k in 0..=n / 2 {
+                assert!((xr[k] - fr[k]).abs() < tol, "n={n} k={k}: {} vs {}", xr[k], fr[k]);
+                assert!((xi[k] - fi[k]).abs() < tol, "n={n} k={k}: {} vs {}", xi[k], fi[k]);
+            }
+            // bins 0 and n/2 of a real signal are exactly real
+            assert_eq!(xi[0], 0.0, "n={n}");
+            assert_eq!(xi[n / 2], 0.0, "n={n}");
+        }
+    }
+
+    #[test]
+    fn irfft_matches_complex_inverse() {
+        // inverse oracle: irfft of a Hermitian half spectrum == the
+        // complex inverse FFT of its full Hermitian extension.
+        let mut rng = Rng::new(43);
+        for lg in 1..=14usize {
+            let n = 1usize << lg;
+            let h = n / 2;
+            let xr: Vec<f64> = (0..=h).map(|_| rng.gaussian()).collect();
+            let mut xi: Vec<f64> = (0..=h).map(|_| rng.gaussian()).collect();
+            xi[0] = 0.0;
+            xi[h] = 0.0;
+            let x = irfft(&xr, &xi);
+            // full Hermitian extension -> complex inverse
+            let mut fr = vec![0.0; n];
+            let mut fi = vec![0.0; n];
+            fr[..=h].copy_from_slice(&xr);
+            fi[..=h].copy_from_slice(&xi);
+            for k in h + 1..n {
+                fr[k] = xr[n - k];
+                fi[k] = -xi[n - k];
+            }
+            fft(&mut fr, &mut fi, true);
+            let tol = 1e-11 * (n as f64).max(1.0);
+            for t in 0..n {
+                assert!((x[t] - fr[t]).abs() < tol, "n={n} t={t}");
+                assert!(fi[t].abs() < tol, "n={n} t={t}: inverse not real");
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_round_trip() {
+        for_all(24, |g| {
+            let n = 1usize << g.usize_in(0, 12);
+            let x: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let (xr, xi) = rfft(&x);
+            let back = irfft(&xr, &xi);
+            assert_eq!(back.len(), n);
+            for t in 0..n {
+                assert!((back[t] - x[t]).abs() < 1e-10, "n={n} t={t}");
+            }
+        });
+    }
+
+    #[test]
+    fn rfft_parseval_on_half_spectrum() {
+        // sum x^2 == (|X0|^2 + |X_{n/2}|^2 + 2·sum_{1..n/2} |Xk|^2) / n —
+        // the Hermitian bins carry double weight.
+        for_all(16, |g| {
+            let n = 1usize << g.usize_in(1, 12);
+            let x: Vec<f64> = (0..n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+            let energy: f64 = x.iter().map(|v| v * v).sum();
+            let (xr, xi) = rfft(&x);
+            let h = n / 2;
+            let mut fenergy = xr[0] * xr[0] + xi[0] * xi[0] + xr[h] * xr[h] + xi[h] * xi[h];
+            for k in 1..h {
+                fenergy += 2.0 * (xr[k] * xr[k] + xi[k] * xi[k]);
+            }
+            fenergy /= n as f64;
+            assert!(
+                (energy - fenergy).abs() < 1e-8 * energy.max(1.0),
+                "n={n}: {energy} vs {fenergy}"
+            );
+        });
+    }
+
+    #[test]
+    fn plan_variants_agree() {
+        // same kernel, same input: the RFFT plan and the legacy complex
+        // plan must agree to f64 round-off at every size, single-row and
+        // batch.
+        let mut rng = Rng::new(47);
+        for lg in 0..=10usize {
+            let n = 1usize << lg;
+            let k: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let plan_r = ConvPlan::with_variant(&k, FftVariant::Rfft);
+            let plan_c = ConvPlan::with_variant(&k, FftVariant::Complex);
+            let rows = 3;
+            let xs: Vec<f64> = (0..rows * n).map(|_| rng.gaussian()).collect();
+            let mut got_r = xs.clone();
+            let mut scratch_r = vec![0.0; plan_r.batch_scratch_len(rows)];
+            plan_r.apply_batch_in_place(&mut got_r, &mut scratch_r);
+            let mut got_c = xs.clone();
+            let mut scratch_c = vec![0.0; plan_c.batch_scratch_len(rows)];
+            plan_c.apply_batch_in_place(&mut got_c, &mut scratch_c);
+            let scale: f64 = k.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+            for i in 0..rows * n {
+                assert!(
+                    (got_r[i] - got_c[i]).abs() < 1e-9 * scale,
+                    "n={n} i={i}: rfft {} vs complex {}",
+                    got_r[i],
+                    got_c[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_scratch_halved_under_rfft() {
+        let ones = [1.0f64; 64];
+        let plan_r = ConvPlan::with_variant(&ones, FftVariant::Rfft);
+        let plan_c = ConvPlan::with_variant(&ones, FftVariant::Complex);
+        assert_eq!(plan_r.batch_scratch_len(8), 64); // one shared spectrum row
+        assert_eq!(plan_c.batch_scratch_len(8), 8 * 64); // full imaginary image
+        assert!(plan_r.matvec_work() < plan_c.matvec_work());
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Runtime-dispatched SIMD inner kernels for the transform hot loops.
 //!
 //! Every arithmetic inner loop of the execution engine — FWHT butterflies,
-//! complex FFT butterflies and spectrum multiplies, and the elementwise
-//! diagonal/sign passes — funnels through this module. At first use the
+//! complex FFT butterflies (radix-2 [`fft_butterfly`] and the RFFT
+//! engine's fused radix-4 [`fft_butterfly4`]), spectrum multiplies (full
+//! [`cmul`] and the conjugate-aware half-spectrum [`cmul_half`]), and the
+//! elementwise diagonal/sign passes — funnels through this module. At first use the
 //! module probes the CPU once (`is_x86_feature_detected!` on x86-64, NEON
 //! on aarch64) and caches a dispatch [`Level`]; every public kernel then
 //! routes to the widest available implementation.
@@ -32,7 +34,8 @@
 //!   present on x86-64, 4×f32 / 2×f64).
 //! * aarch64 picks NEON for the pure-f32 kernels (butterflies, scale,
 //!   sign application); the f64 FFT kernels and the f32→f64 promotion
-//!   stay on the (identical-result) scalar path there.
+//!   stay on the (identical-result) scalar path there — as do the
+//!   cold-path [`rfft_split`]/[`rfft_merge`] helpers on every tier.
 //! * [`force`] overrides the cached level at runtime — the hook the
 //!   equivalence tests and the `simd_vs_scalar` bench sweep use to compare
 //!   paths inside one process.
@@ -304,6 +307,142 @@ pub fn fft_butterfly(
     }
 }
 
+/// One block of a **radix-4** complex butterfly level with table twiddles —
+/// the fused form of two consecutive radix-2 levels, used by the RFFT
+/// engine's half-size FFT. The four slices are the block's quarters at
+/// memory offsets `0, L, 2L, 3L`; in bit-reversed order they hold the
+/// sub-DFTs of the residue-`0, 2, 1, 3` subsequences. With
+/// `W_q = exp(-2πi q·j/len) = tw[q·j·stride]` (conjugated when
+/// `sign = -1.0`, the inverse):
+///
+/// ```text
+/// a = q0[j]        c = W2 · q1[j]     b = W1 · q2[j]     d = W3 · q3[j]
+/// t0 = a + c   t1 = a - c   t2 = b + d   t3 = b - d
+/// q0[j] = t0 + t2          q2[j] = t0 - t2
+/// q1[j] = t1 - i·sign·t3   q3[j] = t1 + i·sign·t3
+/// ```
+///
+/// Twiddle indices reach `3·(L-1)·stride`, so the plan tables extend to
+/// `3n/4` entries (see `linalg::fft`). One radix-2 cleanup level handles
+/// odd `log2` sizes.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn fft_butterfly4(
+    re0: &mut [f64],
+    im0: &mut [f64],
+    re1: &mut [f64],
+    im1: &mut [f64],
+    re2: &mut [f64],
+    im2: &mut [f64],
+    re3: &mut [f64],
+    im3: &mut [f64],
+    twr: &[f64],
+    twi: &[f64],
+    stride: usize,
+    sign: f64,
+) {
+    let l = re0.len();
+    for s in [&*im0, &*re1, &*im1, &*re2, &*im2, &*re3, &*im3] {
+        assert_eq!(s.len(), l);
+    }
+    assert!(l == 0 || twr.len() > 3 * (l - 1) * stride);
+    assert!(l == 0 || twi.len() > 3 * (l - 1) * stride);
+    if l < 4 {
+        // sub-vector blocks (the len=4/len=8 levels): the SIMD bodies
+        // would run their scalar tail for every lane anyway, so skip the
+        // vector entry entirely (identical results by construction).
+        return scalar::fft_butterfly4(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign);
+    }
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe {
+            x86::fft_butterfly4_avx2(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe {
+            x86::fft_butterfly4_sse2(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign)
+        },
+        _ => scalar::fft_butterfly4(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign),
+    }
+}
+
+/// Conjugate-aware half-spectrum convolution multiply — the RFFT
+/// replacement for [`cmul`]. `zre`/`zim` hold the `h = n/2`-point spectrum
+/// `Z` of a packed real row (`z[k] = x[2k] + i·x[2k+1]`); `kr`/`ki` hold
+/// the kernel's half spectrum (`h + 1` bins, `ki[0] == ki[h] == 0` for a
+/// real kernel). In one pass over conjugate pairs `(k, h-k)` this fuses:
+/// the split recovering the real row's n-point half spectrum
+/// `X[k] = Ze[k] + w_n^k·Zo[k]`, the pointwise multiply `X[k] *= K[k]`,
+/// and the merge back to the packed spectrum `Z'` that the half-size
+/// inverse FFT turns into the convolved row. Only `tw[k] = exp(-2πi k/n)`
+/// for `k < h/2` is read (bins `0`, `h` and the middle bin fold their
+/// twiddles analytically).
+#[inline]
+pub fn cmul_half(
+    zre: &mut [f64],
+    zim: &mut [f64],
+    kr: &[f64],
+    ki: &[f64],
+    twr: &[f64],
+    twi: &[f64],
+) {
+    let h = zre.len();
+    assert!(h <= 1 || h % 2 == 0, "cmul_half needs even h (got {h})");
+    assert_eq!(zim.len(), h);
+    assert_eq!(kr.len(), h + 1);
+    assert_eq!(ki.len(), h + 1);
+    assert!(twr.len() >= h / 2 && twi.len() >= h / 2);
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::cmul_half_avx2(zre, zim, kr, ki, twr, twi) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { x86::cmul_half_sse2(zre, zim, kr, ki, twr, twi) },
+        _ => scalar::cmul_half(zre, zim, kr, ki, twr, twi),
+    }
+}
+
+/// Conjugate-symmetric split: half spectrum `X` (bins `0..=h`) of a real
+/// `n = 2h`-point row from the `h`-point spectrum `Z` of its packed form.
+/// Construction/one-shot path only (the hot loop fuses the split into
+/// [`cmul_half`]), so every tier runs the identical-result scalar body —
+/// the same rule the f64 kernels follow on NEON.
+#[inline]
+pub fn rfft_split(
+    zre: &[f64],
+    zim: &[f64],
+    xr: &mut [f64],
+    xi: &mut [f64],
+    twr: &[f64],
+    twi: &[f64],
+) {
+    let h = zre.len();
+    assert_eq!(zim.len(), h);
+    assert_eq!(xr.len(), h + 1);
+    assert_eq!(xi.len(), h + 1);
+    assert!(twr.len() >= h / 2 && twi.len() >= h / 2); // only k < h/2 is read
+    scalar::rfft_split(zre, zim, xr, xi, twr, twi);
+}
+
+/// Inverse of [`rfft_split`]: merge the half spectrum `X` back into the
+/// packed `h`-point spectrum `Z` whose (scaled) inverse FFT is the real
+/// row. Construction/one-shot path only; scalar body on every tier.
+#[inline]
+pub fn rfft_merge(
+    xr: &[f64],
+    xi: &[f64],
+    zre: &mut [f64],
+    zim: &mut [f64],
+    twr: &[f64],
+    twi: &[f64],
+) {
+    let h = zre.len();
+    assert_eq!(zim.len(), h);
+    assert_eq!(xr.len(), h + 1);
+    assert_eq!(xi.len(), h + 1);
+    assert!(twr.len() >= h / 2 && twi.len() >= h / 2); // only k < h/2 is read
+    scalar::rfft_merge(xr, xi, zre, zim, twr, twi);
+}
+
 // ---------------------------------------------------------------------------
 // Scalar reference path (always compiled; the TS_NO_SIMD=1 lane and the
 // per-op bit-identity oracle for the unit tests below)
@@ -385,6 +524,243 @@ pub(crate) mod scalar {
             im_h[j] = ui + vi;
             re_t[j] = ur - vr;
             im_t[j] = ui - vi;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn fft_butterfly4(
+        re0: &mut [f64],
+        im0: &mut [f64],
+        re1: &mut [f64],
+        im1: &mut [f64],
+        re2: &mut [f64],
+        im2: &mut [f64],
+        re3: &mut [f64],
+        im3: &mut [f64],
+        twr: &[f64],
+        twi: &[f64],
+        stride: usize,
+        sign: f64,
+    ) {
+        fft_butterfly4_from(
+            re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, 0,
+        );
+    }
+
+    /// [`fft_butterfly4`] starting at lane `j0` — the SIMD paths' tail
+    /// cleanup. The twiddle indices `j, 2j, 3j` are affine in `j`, so the
+    /// tail cannot simply rebase the twiddle slices the way the radix-2
+    /// kernel does; it keeps absolute indexing instead.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn fft_butterfly4_from(
+        re0: &mut [f64],
+        im0: &mut [f64],
+        re1: &mut [f64],
+        im1: &mut [f64],
+        re2: &mut [f64],
+        im2: &mut [f64],
+        re3: &mut [f64],
+        im3: &mut [f64],
+        twr: &[f64],
+        twi: &[f64],
+        stride: usize,
+        sign: f64,
+        j0: usize,
+    ) {
+        for j in j0..re0.len() {
+            let w1r = twr[j * stride];
+            let w1i = sign * twi[j * stride];
+            let w2r = twr[2 * j * stride];
+            let w2i = sign * twi[2 * j * stride];
+            let w3r = twr[3 * j * stride];
+            let w3i = sign * twi[3 * j * stride];
+            let (ar, ai) = (re0[j], im0[j]);
+            // bit-reversed residue order: offset L holds the residue-2
+            // sub-DFT, offset 2L the residue-1 one
+            let (cr, ci) = (re1[j] * w2r - im1[j] * w2i, re1[j] * w2i + im1[j] * w2r);
+            let (br, bi) = (re2[j] * w1r - im2[j] * w1i, re2[j] * w1i + im2[j] * w1r);
+            let (dr, di) = (re3[j] * w3r - im3[j] * w3i, re3[j] * w3i + im3[j] * w3r);
+            let (t0r, t0i) = (ar + cr, ai + ci);
+            let (t1r, t1i) = (ar - cr, ai - ci);
+            let (t2r, t2i) = (br + dr, bi + di);
+            let (t3r, t3i) = (br - dr, bi - di);
+            re0[j] = t0r + t2r;
+            im0[j] = t0i + t2i;
+            re2[j] = t0r - t2r;
+            im2[j] = t0i - t2i;
+            // X[j+L] = t1 - i·sign·t3, X[j+3L] = t1 + i·sign·t3
+            re1[j] = t1r + sign * t3i;
+            im1[j] = t1i - sign * t3r;
+            re3[j] = t1r - sign * t3i;
+            im3[j] = t1i + sign * t3r;
+        }
+    }
+
+    /// The conjugate-pair body of [`cmul_half`] over `k` in `k0..k1`
+    /// (paired with `h - k`): split → kernel multiply → merge, all from
+    /// the single twiddle `w = tw[k]`. Shared by the SIMD paths as their
+    /// head/tail cleanup so every tier performs the identical per-pair
+    /// operations.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn cmul_half_pairs(
+        zre: &mut [f64],
+        zim: &mut [f64],
+        kr: &[f64],
+        ki: &[f64],
+        twr: &[f64],
+        twi: &[f64],
+        k0: usize,
+        k1: usize,
+    ) {
+        let h = zre.len();
+        for k in k0..k1 {
+            let j = h - k;
+            let (wr, wi) = (twr[k], twi[k]);
+            let (zkr, zki) = (zre[k], zim[k]);
+            let (zjr, zji) = (zre[j], zim[j]);
+            // split: Ze = (Z[k] + conj(Z[j]))/2, P = w^k·Zo with
+            // Zo = (Z[k] - conj(Z[j]))/(2i)
+            let er = 0.5 * (zkr + zjr);
+            let ei = 0.5 * (zki - zji);
+            let onr = 0.5 * (zki + zji);
+            let oni = 0.5 * (zjr - zkr);
+            let pr = onr * wr - oni * wi;
+            let pi = onr * wi + oni * wr;
+            // X[k] = Ze + P ; X[j] = conj(Ze - P)
+            let (xkr, xki) = (er + pr, ei + pi);
+            let (xjr, xji) = (er - pr, pi - ei);
+            // pointwise kernel multiply on both bins of the pair
+            let (ykr, yki) = (xkr * kr[k] - xki * ki[k], xkr * ki[k] + xki * kr[k]);
+            let (yjr, yji) = (xjr * kr[j] - xji * ki[j], xjr * ki[j] + xji * kr[j]);
+            // merge: E = (Yk + conj(Yj))/2, Q = conj(w^k)·(Yk - conj(Yj))/2
+            let epr = 0.5 * (ykr + yjr);
+            let epi = 0.5 * (yki - yji);
+            let dr = 0.5 * (ykr - yjr);
+            let di = 0.5 * (yki + yji);
+            let qr = dr * wr + di * wi;
+            let qi = di * wr - dr * wi;
+            // Z'[k] = E + i·Q ; Z'[j] = conj(E) + i·conj(Q)
+            zre[k] = epr - qi;
+            zim[k] = epi + qr;
+            zre[j] = epr + qi;
+            zim[j] = qr - epi;
+        }
+    }
+
+    /// The twiddle-free ends of the half-spectrum multiply: bins `0` and
+    /// `h` (both real combinations of `Z[0]`, `w^0 = 1`) and — when `h` is
+    /// even and positive — the self-paired middle bin (`w^{h/2} = -i`
+    /// folded analytically: `X = conj(Z)`, `Z' = conj(X·K)`).
+    pub(crate) fn cmul_half_ends(zre: &mut [f64], zim: &mut [f64], kr: &[f64], ki: &[f64]) {
+        let h = zre.len();
+        if h == 0 {
+            return;
+        }
+        let (r0, i0) = (zre[0], zim[0]);
+        let x0 = r0 + i0; // X[0], real
+        let xh = r0 - i0; // X[h], real
+        let (y0r, y0i) = (x0 * kr[0], x0 * ki[0]);
+        let (yhr, yhi) = (xh * kr[h], xh * ki[h]);
+        let (er, ei) = (0.5 * (y0r + yhr), 0.5 * (y0i - yhi));
+        let (dr, di) = (0.5 * (y0r - yhr), 0.5 * (y0i + yhi));
+        zre[0] = er - di;
+        zim[0] = ei + dr;
+        if h >= 2 {
+            let m = h / 2;
+            let (xr, xi) = (zre[m], -zim[m]);
+            let (yr, yi) = (xr * kr[m] - xi * ki[m], xr * ki[m] + xi * kr[m]);
+            zre[m] = yr;
+            zim[m] = -yi;
+        }
+    }
+
+    pub fn cmul_half(
+        zre: &mut [f64],
+        zim: &mut [f64],
+        kr: &[f64],
+        ki: &[f64],
+        twr: &[f64],
+        twi: &[f64],
+    ) {
+        let h = zre.len();
+        cmul_half_ends(zre, zim, kr, ki);
+        cmul_half_pairs(zre, zim, kr, ki, twr, twi, 1, h / 2);
+    }
+
+    pub fn rfft_split(
+        zre: &[f64],
+        zim: &[f64],
+        xr: &mut [f64],
+        xi: &mut [f64],
+        twr: &[f64],
+        twi: &[f64],
+    ) {
+        let h = zre.len();
+        if h == 0 {
+            return;
+        }
+        xr[0] = zre[0] + zim[0];
+        xi[0] = 0.0;
+        xr[h] = zre[0] - zim[0];
+        xi[h] = 0.0;
+        if h >= 2 {
+            let m = h / 2;
+            xr[m] = zre[m];
+            xi[m] = -zim[m];
+        }
+        for k in 1..h / 2 {
+            let j = h - k;
+            let (wr, wi) = (twr[k], twi[k]);
+            let (zkr, zki) = (zre[k], zim[k]);
+            let (zjr, zji) = (zre[j], zim[j]);
+            let er = 0.5 * (zkr + zjr);
+            let ei = 0.5 * (zki - zji);
+            let onr = 0.5 * (zki + zji);
+            let oni = 0.5 * (zjr - zkr);
+            let pr = onr * wr - oni * wi;
+            let pi = onr * wi + oni * wr;
+            xr[k] = er + pr;
+            xi[k] = ei + pi;
+            xr[j] = er - pr;
+            xi[j] = pi - ei;
+        }
+    }
+
+    pub fn rfft_merge(
+        xr: &[f64],
+        xi: &[f64],
+        zre: &mut [f64],
+        zim: &mut [f64],
+        twr: &[f64],
+        twi: &[f64],
+    ) {
+        let h = zre.len();
+        if h == 0 {
+            return;
+        }
+        // pair (0, h): w^0 = 1
+        let (er, ei) = (0.5 * (xr[0] + xr[h]), 0.5 * (xi[0] - xi[h]));
+        let (dr, di) = (0.5 * (xr[0] - xr[h]), 0.5 * (xi[0] + xi[h]));
+        zre[0] = er - di;
+        zim[0] = ei + dr;
+        if h >= 2 {
+            let m = h / 2;
+            zre[m] = xr[m];
+            zim[m] = -xi[m];
+        }
+        for k in 1..h / 2 {
+            let j = h - k;
+            let (wr, wi) = (twr[k], twi[k]);
+            let epr = 0.5 * (xr[k] + xr[j]);
+            let epi = 0.5 * (xi[k] - xi[j]);
+            let dr = 0.5 * (xr[k] - xr[j]);
+            let di = 0.5 * (xi[k] + xi[j]);
+            let qr = dr * wr + di * wi;
+            let qi = di * wr - dr * wi;
+            zre[k] = epr - qi;
+            zim[k] = epi + qr;
+            zre[j] = epr + qi;
+            zim[j] = qr - epi;
         }
     }
 }
@@ -758,6 +1134,295 @@ mod x86 {
         }
     }
 
+    /// 4 twiddles at `(j..j+4)·stride`; contiguous load when `stride == 1`.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn tw_gather4(t: &[f64], stride: usize, j: usize) -> __m256d {
+        if stride == 1 {
+            _mm256_loadu_pd(t.as_ptr().add(j))
+        } else {
+            _mm256_setr_pd(
+                t[j * stride],
+                t[(j + 1) * stride],
+                t[(j + 2) * stride],
+                t[(j + 3) * stride],
+            )
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    #[inline]
+    unsafe fn tw_gather2(t: &[f64], stride: usize, j: usize) -> __m128d {
+        if stride == 1 {
+            _mm_loadu_pd(t.as_ptr().add(j))
+        } else {
+            _mm_setr_pd(t[j * stride], t[(j + 1) * stride])
+        }
+    }
+
+    /// Reversed 4-lane load: lanes `[p[3], p[2], p[1], p[0]]` — the
+    /// descending `h - k` side of a conjugate-pair walk.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn rev_load4(p: *const f64) -> __m256d {
+        _mm256_permute4x64_pd::<0x1B>(_mm256_loadu_pd(p))
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn rev_store4(p: *mut f64, v: __m256d) {
+        _mm256_storeu_pd(p, _mm256_permute4x64_pd::<0x1B>(v));
+    }
+
+    #[target_feature(enable = "sse2")]
+    #[inline]
+    unsafe fn rev_load2(p: *const f64) -> __m128d {
+        let v = _mm_loadu_pd(p);
+        _mm_shuffle_pd::<0b01>(v, v)
+    }
+
+    #[target_feature(enable = "sse2")]
+    #[inline]
+    unsafe fn rev_store2(p: *mut f64, v: __m128d) {
+        _mm_storeu_pd(p, _mm_shuffle_pd::<0b01>(v, v));
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn cmul_half_avx2(
+        zre: &mut [f64],
+        zim: &mut [f64],
+        kr: &[f64],
+        ki: &[f64],
+        twr: &[f64],
+        twi: &[f64],
+    ) {
+        let h = zre.len();
+        scalar::cmul_half_ends(zre, zim, kr, ki);
+        let k1 = h / 2;
+        let half = _mm256_set1_pd(0.5);
+        let mut k = 1usize;
+        while k + 4 <= k1 {
+            let jb = h - k - 3; // memory base of the descending j = h-k side
+            let wr = _mm256_loadu_pd(twr.as_ptr().add(k));
+            let wi = _mm256_loadu_pd(twi.as_ptr().add(k));
+            let zkr = _mm256_loadu_pd(zre.as_ptr().add(k));
+            let zki = _mm256_loadu_pd(zim.as_ptr().add(k));
+            let zjr = rev_load4(zre.as_ptr().add(jb));
+            let zji = rev_load4(zim.as_ptr().add(jb));
+            let er = _mm256_mul_pd(half, _mm256_add_pd(zkr, zjr));
+            let ei = _mm256_mul_pd(half, _mm256_sub_pd(zki, zji));
+            let onr = _mm256_mul_pd(half, _mm256_add_pd(zki, zji));
+            let oni = _mm256_mul_pd(half, _mm256_sub_pd(zjr, zkr));
+            let pr = _mm256_sub_pd(_mm256_mul_pd(onr, wr), _mm256_mul_pd(oni, wi));
+            let pi = _mm256_add_pd(_mm256_mul_pd(onr, wi), _mm256_mul_pd(oni, wr));
+            let xkr = _mm256_add_pd(er, pr);
+            let xki = _mm256_add_pd(ei, pi);
+            let xjr = _mm256_sub_pd(er, pr);
+            let xji = _mm256_sub_pd(pi, ei);
+            let kkr = _mm256_loadu_pd(kr.as_ptr().add(k));
+            let kki = _mm256_loadu_pd(ki.as_ptr().add(k));
+            let kjr = rev_load4(kr.as_ptr().add(jb));
+            let kji = rev_load4(ki.as_ptr().add(jb));
+            let ykr = _mm256_sub_pd(_mm256_mul_pd(xkr, kkr), _mm256_mul_pd(xki, kki));
+            let yki = _mm256_add_pd(_mm256_mul_pd(xkr, kki), _mm256_mul_pd(xki, kkr));
+            let yjr = _mm256_sub_pd(_mm256_mul_pd(xjr, kjr), _mm256_mul_pd(xji, kji));
+            let yji = _mm256_add_pd(_mm256_mul_pd(xjr, kji), _mm256_mul_pd(xji, kjr));
+            let epr = _mm256_mul_pd(half, _mm256_add_pd(ykr, yjr));
+            let epi = _mm256_mul_pd(half, _mm256_sub_pd(yki, yji));
+            let dr = _mm256_mul_pd(half, _mm256_sub_pd(ykr, yjr));
+            let di = _mm256_mul_pd(half, _mm256_add_pd(yki, yji));
+            let qr = _mm256_add_pd(_mm256_mul_pd(dr, wr), _mm256_mul_pd(di, wi));
+            let qi = _mm256_sub_pd(_mm256_mul_pd(di, wr), _mm256_mul_pd(dr, wi));
+            _mm256_storeu_pd(zre.as_mut_ptr().add(k), _mm256_sub_pd(epr, qi));
+            _mm256_storeu_pd(zim.as_mut_ptr().add(k), _mm256_add_pd(epi, qr));
+            rev_store4(zre.as_mut_ptr().add(jb), _mm256_add_pd(epr, qi));
+            rev_store4(zim.as_mut_ptr().add(jb), _mm256_sub_pd(qr, epi));
+            k += 4;
+        }
+        scalar::cmul_half_pairs(zre, zim, kr, ki, twr, twi, k, k1);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn cmul_half_sse2(
+        zre: &mut [f64],
+        zim: &mut [f64],
+        kr: &[f64],
+        ki: &[f64],
+        twr: &[f64],
+        twi: &[f64],
+    ) {
+        let h = zre.len();
+        scalar::cmul_half_ends(zre, zim, kr, ki);
+        let k1 = h / 2;
+        let half = _mm_set1_pd(0.5);
+        let mut k = 1usize;
+        while k + 2 <= k1 {
+            let jb = h - k - 1;
+            let wr = _mm_loadu_pd(twr.as_ptr().add(k));
+            let wi = _mm_loadu_pd(twi.as_ptr().add(k));
+            let zkr = _mm_loadu_pd(zre.as_ptr().add(k));
+            let zki = _mm_loadu_pd(zim.as_ptr().add(k));
+            let zjr = rev_load2(zre.as_ptr().add(jb));
+            let zji = rev_load2(zim.as_ptr().add(jb));
+            let er = _mm_mul_pd(half, _mm_add_pd(zkr, zjr));
+            let ei = _mm_mul_pd(half, _mm_sub_pd(zki, zji));
+            let onr = _mm_mul_pd(half, _mm_add_pd(zki, zji));
+            let oni = _mm_mul_pd(half, _mm_sub_pd(zjr, zkr));
+            let pr = _mm_sub_pd(_mm_mul_pd(onr, wr), _mm_mul_pd(oni, wi));
+            let pi = _mm_add_pd(_mm_mul_pd(onr, wi), _mm_mul_pd(oni, wr));
+            let xkr = _mm_add_pd(er, pr);
+            let xki = _mm_add_pd(ei, pi);
+            let xjr = _mm_sub_pd(er, pr);
+            let xji = _mm_sub_pd(pi, ei);
+            let kkr = _mm_loadu_pd(kr.as_ptr().add(k));
+            let kki = _mm_loadu_pd(ki.as_ptr().add(k));
+            let kjr = rev_load2(kr.as_ptr().add(jb));
+            let kji = rev_load2(ki.as_ptr().add(jb));
+            let ykr = _mm_sub_pd(_mm_mul_pd(xkr, kkr), _mm_mul_pd(xki, kki));
+            let yki = _mm_add_pd(_mm_mul_pd(xkr, kki), _mm_mul_pd(xki, kkr));
+            let yjr = _mm_sub_pd(_mm_mul_pd(xjr, kjr), _mm_mul_pd(xji, kji));
+            let yji = _mm_add_pd(_mm_mul_pd(xjr, kji), _mm_mul_pd(xji, kjr));
+            let epr = _mm_mul_pd(half, _mm_add_pd(ykr, yjr));
+            let epi = _mm_mul_pd(half, _mm_sub_pd(yki, yji));
+            let dr = _mm_mul_pd(half, _mm_sub_pd(ykr, yjr));
+            let di = _mm_mul_pd(half, _mm_add_pd(yki, yji));
+            let qr = _mm_add_pd(_mm_mul_pd(dr, wr), _mm_mul_pd(di, wi));
+            let qi = _mm_sub_pd(_mm_mul_pd(di, wr), _mm_mul_pd(dr, wi));
+            _mm_storeu_pd(zre.as_mut_ptr().add(k), _mm_sub_pd(epr, qi));
+            _mm_storeu_pd(zim.as_mut_ptr().add(k), _mm_add_pd(epi, qr));
+            rev_store2(zre.as_mut_ptr().add(jb), _mm_add_pd(epr, qi));
+            rev_store2(zim.as_mut_ptr().add(jb), _mm_sub_pd(qr, epi));
+            k += 2;
+        }
+        scalar::cmul_half_pairs(zre, zim, kr, ki, twr, twi, k, k1);
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn fft_butterfly4_avx2(
+        re0: &mut [f64],
+        im0: &mut [f64],
+        re1: &mut [f64],
+        im1: &mut [f64],
+        re2: &mut [f64],
+        im2: &mut [f64],
+        re3: &mut [f64],
+        im3: &mut [f64],
+        twr: &[f64],
+        twi: &[f64],
+        stride: usize,
+        sign: f64,
+    ) {
+        let l = re0.len();
+        let sv = _mm256_set1_pd(sign);
+        let mut j = 0;
+        while j + 4 <= l {
+            let w1r = tw_gather4(twr, stride, j);
+            let w1i = _mm256_mul_pd(sv, tw_gather4(twi, stride, j));
+            let w2r = tw_gather4(twr, 2 * stride, j);
+            let w2i = _mm256_mul_pd(sv, tw_gather4(twi, 2 * stride, j));
+            let w3r = tw_gather4(twr, 3 * stride, j);
+            let w3i = _mm256_mul_pd(sv, tw_gather4(twi, 3 * stride, j));
+            let ar = _mm256_loadu_pd(re0.as_ptr().add(j));
+            let ai = _mm256_loadu_pd(im0.as_ptr().add(j));
+            let q1r = _mm256_loadu_pd(re1.as_ptr().add(j));
+            let q1i = _mm256_loadu_pd(im1.as_ptr().add(j));
+            let q2r = _mm256_loadu_pd(re2.as_ptr().add(j));
+            let q2i = _mm256_loadu_pd(im2.as_ptr().add(j));
+            let q3r = _mm256_loadu_pd(re3.as_ptr().add(j));
+            let q3i = _mm256_loadu_pd(im3.as_ptr().add(j));
+            let cr = _mm256_sub_pd(_mm256_mul_pd(q1r, w2r), _mm256_mul_pd(q1i, w2i));
+            let ci = _mm256_add_pd(_mm256_mul_pd(q1r, w2i), _mm256_mul_pd(q1i, w2r));
+            let br = _mm256_sub_pd(_mm256_mul_pd(q2r, w1r), _mm256_mul_pd(q2i, w1i));
+            let bi = _mm256_add_pd(_mm256_mul_pd(q2r, w1i), _mm256_mul_pd(q2i, w1r));
+            let dr = _mm256_sub_pd(_mm256_mul_pd(q3r, w3r), _mm256_mul_pd(q3i, w3i));
+            let di = _mm256_add_pd(_mm256_mul_pd(q3r, w3i), _mm256_mul_pd(q3i, w3r));
+            let t0r = _mm256_add_pd(ar, cr);
+            let t0i = _mm256_add_pd(ai, ci);
+            let t1r = _mm256_sub_pd(ar, cr);
+            let t1i = _mm256_sub_pd(ai, ci);
+            let t2r = _mm256_add_pd(br, dr);
+            let t2i = _mm256_add_pd(bi, di);
+            let t3r = _mm256_mul_pd(sv, _mm256_sub_pd(br, dr));
+            let t3i = _mm256_mul_pd(sv, _mm256_sub_pd(bi, di));
+            _mm256_storeu_pd(re0.as_mut_ptr().add(j), _mm256_add_pd(t0r, t2r));
+            _mm256_storeu_pd(im0.as_mut_ptr().add(j), _mm256_add_pd(t0i, t2i));
+            _mm256_storeu_pd(re2.as_mut_ptr().add(j), _mm256_sub_pd(t0r, t2r));
+            _mm256_storeu_pd(im2.as_mut_ptr().add(j), _mm256_sub_pd(t0i, t2i));
+            _mm256_storeu_pd(re1.as_mut_ptr().add(j), _mm256_add_pd(t1r, t3i));
+            _mm256_storeu_pd(im1.as_mut_ptr().add(j), _mm256_sub_pd(t1i, t3r));
+            _mm256_storeu_pd(re3.as_mut_ptr().add(j), _mm256_sub_pd(t1r, t3i));
+            _mm256_storeu_pd(im3.as_mut_ptr().add(j), _mm256_add_pd(t1i, t3r));
+            j += 4;
+        }
+        if j < l {
+            scalar::fft_butterfly4_from(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, j);
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn fft_butterfly4_sse2(
+        re0: &mut [f64],
+        im0: &mut [f64],
+        re1: &mut [f64],
+        im1: &mut [f64],
+        re2: &mut [f64],
+        im2: &mut [f64],
+        re3: &mut [f64],
+        im3: &mut [f64],
+        twr: &[f64],
+        twi: &[f64],
+        stride: usize,
+        sign: f64,
+    ) {
+        let l = re0.len();
+        let sv = _mm_set1_pd(sign);
+        let mut j = 0;
+        while j + 2 <= l {
+            let w1r = tw_gather2(twr, stride, j);
+            let w1i = _mm_mul_pd(sv, tw_gather2(twi, stride, j));
+            let w2r = tw_gather2(twr, 2 * stride, j);
+            let w2i = _mm_mul_pd(sv, tw_gather2(twi, 2 * stride, j));
+            let w3r = tw_gather2(twr, 3 * stride, j);
+            let w3i = _mm_mul_pd(sv, tw_gather2(twi, 3 * stride, j));
+            let ar = _mm_loadu_pd(re0.as_ptr().add(j));
+            let ai = _mm_loadu_pd(im0.as_ptr().add(j));
+            let q1r = _mm_loadu_pd(re1.as_ptr().add(j));
+            let q1i = _mm_loadu_pd(im1.as_ptr().add(j));
+            let q2r = _mm_loadu_pd(re2.as_ptr().add(j));
+            let q2i = _mm_loadu_pd(im2.as_ptr().add(j));
+            let q3r = _mm_loadu_pd(re3.as_ptr().add(j));
+            let q3i = _mm_loadu_pd(im3.as_ptr().add(j));
+            let cr = _mm_sub_pd(_mm_mul_pd(q1r, w2r), _mm_mul_pd(q1i, w2i));
+            let ci = _mm_add_pd(_mm_mul_pd(q1r, w2i), _mm_mul_pd(q1i, w2r));
+            let br = _mm_sub_pd(_mm_mul_pd(q2r, w1r), _mm_mul_pd(q2i, w1i));
+            let bi = _mm_add_pd(_mm_mul_pd(q2r, w1i), _mm_mul_pd(q2i, w1r));
+            let dr = _mm_sub_pd(_mm_mul_pd(q3r, w3r), _mm_mul_pd(q3i, w3i));
+            let di = _mm_add_pd(_mm_mul_pd(q3r, w3i), _mm_mul_pd(q3i, w3r));
+            let t0r = _mm_add_pd(ar, cr);
+            let t0i = _mm_add_pd(ai, ci);
+            let t1r = _mm_sub_pd(ar, cr);
+            let t1i = _mm_sub_pd(ai, ci);
+            let t2r = _mm_add_pd(br, dr);
+            let t2i = _mm_add_pd(bi, di);
+            let t3r = _mm_mul_pd(sv, _mm_sub_pd(br, dr));
+            let t3i = _mm_mul_pd(sv, _mm_sub_pd(bi, di));
+            _mm_storeu_pd(re0.as_mut_ptr().add(j), _mm_add_pd(t0r, t2r));
+            _mm_storeu_pd(im0.as_mut_ptr().add(j), _mm_add_pd(t0i, t2i));
+            _mm_storeu_pd(re2.as_mut_ptr().add(j), _mm_sub_pd(t0r, t2r));
+            _mm_storeu_pd(im2.as_mut_ptr().add(j), _mm_sub_pd(t0i, t2i));
+            _mm_storeu_pd(re1.as_mut_ptr().add(j), _mm_add_pd(t1r, t3i));
+            _mm_storeu_pd(im1.as_mut_ptr().add(j), _mm_sub_pd(t1i, t3r));
+            _mm_storeu_pd(re3.as_mut_ptr().add(j), _mm_sub_pd(t1r, t3i));
+            _mm_storeu_pd(im3.as_mut_ptr().add(j), _mm_add_pd(t1i, t3r));
+            j += 2;
+        }
+        if j < l {
+            scalar::fft_butterfly4_from(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, j);
+        }
+    }
+
     #[target_feature(enable = "sse2")]
     #[allow(clippy::too_many_arguments)]
     pub(super) unsafe fn fft_butterfly_sse2(
@@ -998,6 +1663,80 @@ mod tests {
                     assert_eq!(c, g, "fft_butterfly half={half} stride={stride}");
                     assert_eq!(d, h, "fft_butterfly half={half} stride={stride}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_radix4_butterfly_matches_scalar_bitwise() {
+        let mut rng = Rng::new(21);
+        for l in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 16, 64, 100] {
+            let mk = |rng: &mut Rng| -> Vec<f64> { (0..l).map(|_| rng.gaussian()).collect() };
+            for stride in [1usize, 2, 4] {
+                let tw_len = 3 * l.saturating_sub(1) * stride + 1;
+                let twr: Vec<f64> = (0..tw_len).map(|_| rng.gaussian()).collect();
+                let twi: Vec<f64> = (0..tw_len).map(|_| rng.gaussian()).collect();
+                for sign in [1.0f64, -1.0] {
+                    let qs0: [Vec<f64>; 8] = std::array::from_fn(|_| mk(&mut rng));
+                    let mut a = qs0.clone();
+                    let mut b = qs0.clone();
+                    {
+                        let [r0, i0, r1, i1, r2, i2, r3, i3] = a.each_mut();
+                        fft_butterfly4(r0, i0, r1, i1, r2, i2, r3, i3, &twr, &twi, stride, sign);
+                    }
+                    {
+                        let [r0, i0, r1, i1, r2, i2, r3, i3] = b.each_mut();
+                        scalar::fft_butterfly4(r0, i0, r1, i1, r2, i2, r3, i3, &twr, &twi, stride, sign);
+                    }
+                    assert_eq!(a, b, "fft_butterfly4 l={l} stride={stride} sign={sign}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_cmul_half_matches_scalar_bitwise() {
+        let mut rng = Rng::new(23);
+        for h in [0usize, 1, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let mk = |len: usize, rng: &mut Rng| -> Vec<f64> {
+                (0..len).map(|_| rng.gaussian()).collect()
+            };
+            let (zre0, zim0) = (mk(h, &mut rng), mk(h, &mut rng));
+            let (kr, ki) = (mk(h + 1, &mut rng), mk(h + 1, &mut rng));
+            let tw_len = (h / 2).max(1);
+            let (twr, twi) = (mk(tw_len, &mut rng), mk(tw_len, &mut rng));
+            let (mut r1, mut i1) = (zre0.clone(), zim0.clone());
+            let (mut r2, mut i2) = (zre0.clone(), zim0.clone());
+            cmul_half(&mut r1, &mut i1, &kr, &ki, &twr, &twi);
+            scalar::cmul_half(&mut r2, &mut i2, &kr, &ki, &twr, &twi);
+            assert_eq!(r1, r2, "cmul_half h={h}");
+            assert_eq!(i1, i2, "cmul_half h={h}");
+        }
+    }
+
+    #[test]
+    fn rfft_split_merge_round_trip() {
+        // merge(split(Z)) must reproduce Z (up to |w|^2 rounding) — the
+        // pairing the RFFT engine's forward/inverse hand-off relies on.
+        let mut rng = Rng::new(29);
+        for h in [1usize, 2, 4, 8, 64, 256] {
+            let n = 2 * h;
+            let mut twr = Vec::with_capacity(h / 2 + 1);
+            let mut twi = Vec::with_capacity(h / 2 + 1);
+            for k in 0..=h / 2 {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                twr.push(ang.cos());
+                twi.push(ang.sin());
+            }
+            let zre0: Vec<f64> = (0..h).map(|_| rng.gaussian()).collect();
+            let zim0: Vec<f64> = (0..h).map(|_| rng.gaussian()).collect();
+            let (mut xr, mut xi) = (vec![0.0; h + 1], vec![0.0; h + 1]);
+            rfft_split(&zre0, &zim0, &mut xr, &mut xi, &twr, &twi);
+            let (mut zre, mut zim) = (vec![0.0; h], vec![0.0; h]);
+            rfft_merge(&xr, &xi, &mut zre, &mut zim, &twr, &twi);
+            for k in 0..h {
+                assert!((zre[k] - zre0[k]).abs() < 1e-12, "h={h} k={k}");
+                assert!((zim[k] - zim0[k]).abs() < 1e-12, "h={h} k={k}");
             }
         }
     }

@@ -23,7 +23,11 @@
 //! previous checkout). Call sites that fully overwrite their buffer
 //! (FWHT stage rows, FFT row blocks, batch stacking scratch) use the dirty
 //! variant and skip the zeroing sweep the zeroed variant pays on every
-//! checkout.
+//! checkout. The FFT families' spectrum scratch is dirty too: the default
+//! RFFT engine checks out **one plan-length row** per batch
+//! (`ConvPlan::batch_scratch_len`) and fully overwrites it per row, while
+//! the legacy complex lane's full-batch imaginary plane is re-zeroed
+//! inside the plan kernel where it is semantically required.
 
 /// Minimum batch rows assigned to one worker before another thread is
 /// engaged — below this, dispatch latency dominates the kernel time.

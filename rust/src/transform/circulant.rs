@@ -3,7 +3,11 @@
 //!
 //! Pipeline for one matvec: `x → D1 x → H x → D2 x → G_top x`, where the
 //! top block multiplies in `O(n log n)` via an FFT circulant embedding whose
-//! spectrum is precomputed once at construction ([`ConvPlan`]).
+//! spectrum is precomputed once at construction ([`ConvPlan`]). Every row
+//! entering the convolution is real, so the plan runs the half-spectrum
+//! RFFT engine by default (half the butterflies, kernel spectrum and
+//! scratch; `TS_FFT=complex` selects the legacy full-complex lane — see
+//! [`crate::linalg::fft`]).
 
 use super::hd::SignDiag;
 use super::Transform;
@@ -169,12 +173,13 @@ impl Transform for StructuredGaussian {
         self.d1.apply(out);
         fwht(out);
         // FFT top block on reused workspace scratch. Dirty checkouts: every
-        // element below `n` is overwritten by the promotion, `im` is
-        // cleared inside the plan kernel — only the circulant-embedding
+        // element below `n` is overwritten by the promotion, the spectrum
+        // scratch is fully overwritten (RFFT) or cleared (complex legacy
+        // lane) inside the plan kernel — only the circulant-embedding
         // padding `re[n..]` needs an explicit zero.
         let m = self.plan.len();
         let mut re = ws.take_f64_uninit(m);
-        let mut im = ws.take_f64_uninit(m);
+        let mut im = ws.take_f64_uninit(self.plan.batch_scratch_len(1));
         self.load_fft_input(out, &mut re);
         for v in re[n..].iter_mut() {
             *v = 0.0;
@@ -200,10 +205,12 @@ impl Transform for StructuredGaussian {
         let m = self.plan.len();
         let block = self.plan.batch_block_rows();
         // dirty checkouts: every row's `dst[..n]` is written by the
-        // promotion and `dst[n..]` is explicitly zeroed below; `im` is
-        // cleared inside the plan kernel.
+        // promotion and `dst[n..]` is explicitly zeroed below; the
+        // spectrum scratch is the plan kernel's concern (fully overwritten
+        // on the RFFT lane — one shared row, half the old checkout — and
+        // cleared on the complex lane).
         let mut re = ws.take_f64_uninit(block * m);
-        let mut im = ws.take_f64_uninit(block * m);
+        let mut im = ws.take_f64_uninit(self.plan.batch_scratch_len(block));
         for (xchunk, ochunk) in xs.chunks(block * n).zip(out.chunks_mut(block * n)) {
             let crows = xchunk.len() / n;
             for ((src, stage), dst) in xchunk
@@ -221,8 +228,10 @@ impl Transform for StructuredGaussian {
                     *v = 0.0;
                 }
             }
-            self.plan
-                .apply_batch_in_place(&mut re[..crows * m], &mut im[..crows * m]);
+            self.plan.apply_batch_in_place(
+                &mut re[..crows * m],
+                &mut im[..self.plan.batch_scratch_len(crows)],
+            );
             for (dst, src) in ochunk.chunks_exact_mut(n).zip(re.chunks_exact(m)) {
                 for i in 0..n {
                     dst[i] = src[i] as f32;
@@ -233,14 +242,14 @@ impl Transform for StructuredGaussian {
         ws.put_f64(re);
     }
 
-    /// One FWHT pass plus two f64 FFTs of the (possibly 2n-embedded) plan
-    /// length — complex f64 butterflies cost ~8x an f32 add/sub pair, so
-    /// FFT families clear the pool's work gate at much smaller batches
-    /// than plain HD chains.
+    /// One FWHT pass plus the plan's matvec (two f64 FFT sweeps — full
+    /// length on the complex lane, half length under the default RFFT —
+    /// at ~8x an f32 add/sub pair per complex butterfly), so FFT families
+    /// clear the pool's work gate at much smaller batches than plain HD
+    /// chains and the gate tracks the active engine.
     fn batch_work_per_row(&self) -> usize {
         let n = self.n.max(2);
-        let m = self.plan.len().max(2);
-        n * (n.ilog2() as usize + 1) + 8 * (2 * m * (m.ilog2() as usize + 1) + m)
+        n * (n.ilog2() as usize + 1) + self.plan.matvec_work()
     }
 
     fn name(&self) -> &'static str {

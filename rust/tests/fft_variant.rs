@@ -1,0 +1,111 @@
+//! Cross-engine FFT variant suite.
+//!
+//! The execution engine ships two convolution engines: the default
+//! real-input half-spectrum RFFT (radix-4) and the legacy full-complex
+//! radix-2 path kept selectable via `TS_FFT=complex` (the CI cross-check
+//! lane runs this whole test binary under that env). The two are NOT
+//! bit-identical (different operation order), so this suite pins:
+//!
+//! * every FFT-backed transform family computes the same result on both
+//!   engines to f64-round-off tolerance (single row and batch);
+//! * `fft::variant()` honors the `TS_FFT` environment contract;
+//! * plan construction is variant-stable: a plan built under one forced
+//!   variant keeps producing deterministic, engine-consistent results
+//!   after the global default changes.
+//!
+//! `fft::force_variant` mutates process-global construction state, so
+//! everything runs inside one `#[test]`.
+
+use triplespin::linalg::fft::{self, ConvPlan, FftVariant};
+use triplespin::runtime::WorkerPool;
+use triplespin::transform::{make_square, Family, Transform};
+use triplespin::util::rng::Rng;
+
+const FFT_FAMILIES: [Family; 4] = [
+    Family::Circulant,
+    Family::Toeplitz,
+    Family::Hankel,
+    Family::SkewCirculant,
+];
+
+fn with_variant<R>(v: FftVariant, f: impl FnOnce() -> R) -> R {
+    fft::force_variant(Some(v));
+    let r = f();
+    fft::force_variant(None);
+    r
+}
+
+fn env_contract() {
+    // The cached default must reflect TS_FFT after a forced re-detect.
+    fft::force_variant(None);
+    let expect = match std::env::var("TS_FFT") {
+        Ok(v) if v.eq_ignore_ascii_case("complex") => FftVariant::Complex,
+        _ => FftVariant::Rfft,
+    };
+    assert_eq!(fft::variant(), expect, "TS_FFT contract violated");
+}
+
+fn families_agree_across_engines() {
+    let pool = WorkerPool::with_min_work(2, 0);
+    for fam in FFT_FAMILIES {
+        for n in [4usize, 32, 256, 1024] {
+            let seed = 4242 + n as u64;
+            let t_r = with_variant(FftVariant::Rfft, || make_square(fam, n, &mut Rng::new(seed)));
+            let t_c =
+                with_variant(FftVariant::Complex, || make_square(fam, n, &mut Rng::new(seed)));
+            let x = Rng::new(seed ^ 0xBEEF).gaussian_vec(n);
+            let y_r = t_r.apply(&x);
+            let y_c = t_c.apply(&x);
+            for i in 0..n {
+                let tol = 1e-3 * (1.0 + y_c[i].abs());
+                assert!(
+                    (y_r[i] - y_c[i]).abs() < tol,
+                    "{fam:?} n={n} i={i}: rfft {} vs complex {}",
+                    y_r[i],
+                    y_c[i]
+                );
+            }
+            // batch path through the pool: engines still agree row-wise
+            let rows = 17;
+            let xs = Rng::new(seed ^ 0xF00D).gaussian_vec(rows * n);
+            let mut b_r = vec![0.0f32; rows * n];
+            let mut b_c = vec![0.0f32; rows * n];
+            t_r.apply_batch_into(&xs, &mut b_r, &pool);
+            t_c.apply_batch_into(&xs, &mut b_c, &pool);
+            for i in 0..rows * n {
+                let tol = 1e-3 * (1.0 + b_c[i].abs());
+                assert!(
+                    (b_r[i] - b_c[i]).abs() < tol,
+                    "{fam:?} n={n} batch i={i}: rfft {} vs complex {}",
+                    b_r[i],
+                    b_c[i]
+                );
+            }
+        }
+    }
+}
+
+fn plans_are_variant_stable() {
+    // A plan captures its engine at construction: flipping the global
+    // default afterwards must not change what it computes.
+    let mut rng = Rng::new(7);
+    let n = 128;
+    let k: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let plan_r = with_variant(FftVariant::Rfft, || ConvPlan::new(&k));
+    assert_eq!(plan_r.variant(), FftVariant::Rfft);
+    let before = plan_r.apply(&x);
+    let after = with_variant(FftVariant::Complex, || plan_r.apply(&x));
+    assert_eq!(before, after, "plan output changed with the global default");
+    // and the half-spectrum plan really checks out half the batch scratch
+    assert_eq!(plan_r.batch_scratch_len(8), n);
+    let plan_c = with_variant(FftVariant::Complex, || ConvPlan::new(&k));
+    assert_eq!(plan_c.batch_scratch_len(8), 8 * n);
+}
+
+#[test]
+fn fft_variants_are_interchangeable() {
+    env_contract();
+    plans_are_variant_stable();
+    families_agree_across_engines();
+}

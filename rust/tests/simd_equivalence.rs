@@ -15,6 +15,7 @@
 //! inside one `#[test]` (no intra-process races; the CI `TS_NO_SIMD=1`
 //! lane separately runs the whole suite pinned to scalar).
 
+use triplespin::linalg::fft::{self, ConvPlan, FftVariant};
 use triplespin::linalg::simd;
 use triplespin::runtime::WorkerPool;
 use triplespin::transform::{make, make_square, Family, SignDiag, Transform};
@@ -150,6 +151,57 @@ fn check_sign_diag_against_f32_reference() {
     }
 }
 
+/// The RFFT engine's kernels — radix-4 butterflies, the fused
+/// split/multiply/merge `cmul_half`, and the standalone split/merge —
+/// must be byte-identical across every forcible dispatch tier, both at
+/// the kernel level (via `rfft`/`irfft`/`ConvPlan`, which exercise
+/// `fft_butterfly4` + `rfft_split`/`rfft_merge` + `cmul_half` end to end)
+/// and for whole plans of both [`FftVariant`]s.
+fn check_fft_kernel_equivalence() {
+    let levels = levels_under_test();
+    let mut rng = Rng::new(555);
+    for lg in 0..=11usize {
+        let n = 1usize << lg;
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let scalar_spec = with_level(Some(simd::Level::Scalar), || fft::rfft(&x));
+        let scalar_back =
+            with_level(Some(simd::Level::Scalar), || fft::irfft(&scalar_spec.0, &scalar_spec.1));
+        for &level in &levels {
+            let spec = with_level(Some(level), || fft::rfft(&x));
+            assert_eq!(spec, scalar_spec, "rfft n={n} differs at {}", level.name());
+            let back = with_level(Some(level), || fft::irfft(&spec.0, &spec.1));
+            assert_eq!(back, scalar_back, "irfft n={n} differs at {}", level.name());
+        }
+        // whole plans, both engines, single-row + batch
+        let kern: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let rows = 5;
+        let xs: Vec<f64> = (0..rows * n).map(|_| rng.gaussian()).collect();
+        for variant in [FftVariant::Rfft, FftVariant::Complex] {
+            let plan = ConvPlan::with_variant(&kern, variant);
+            let scalar_out = with_level(Some(simd::Level::Scalar), || {
+                let mut re = xs.clone();
+                let mut im = vec![0.0; plan.batch_scratch_len(rows)];
+                plan.apply_batch_in_place(&mut re, &mut im);
+                re
+            });
+            for &level in &levels {
+                let simd_out = with_level(Some(level), || {
+                    let mut re = xs.clone();
+                    let mut im = vec![0.0; plan.batch_scratch_len(rows)];
+                    plan.apply_batch_in_place(&mut re, &mut im);
+                    re
+                });
+                assert_eq!(
+                    simd_out,
+                    scalar_out,
+                    "ConvPlan {variant:?} n={n}: batch differs between {} and scalar",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn simd_and_scalar_paths_are_byte_identical() {
     println!(
@@ -158,5 +210,6 @@ fn simd_and_scalar_paths_are_byte_identical() {
         levels_under_test().iter().map(|l| l.name()).collect::<Vec<_>>()
     );
     check_sign_diag_against_f32_reference();
+    check_fft_kernel_equivalence();
     check_family_equivalence();
 }
