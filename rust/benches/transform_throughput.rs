@@ -14,8 +14,11 @@
 //! bit-identical, so this isolates pure throughput), an `fft_variant`
 //! sweep (the default RFFT radix-4 convolution engine vs the legacy
 //! complex radix-2 `TS_FFT=complex` lane on the same circulant/Toeplitz
-//! transforms, serial + pooled), and a `diag_micro` entry timing the
-//! packed sign-XOR diagonal against the dense f32 multiply it replaced.
+//! transforms, serial + pooled), a `binary_vs_float` sweep (sign-quantized
+//! packed embedding vs the f32 batch on the same transform, a popcount
+//! Hamming vs f32-dot rerank micro, and the bytes-per-embedding ledger),
+//! and a `diag_micro` entry timing the packed sign-XOR diagonal against
+//! the dense f32 multiply it replaced.
 //!
 //! Writes `BENCH_transform_throughput.json` at the repo root to extend the
 //! perf trajectory. Set `TS_FULL=1` for the larger dims / row counts and
@@ -23,10 +26,11 @@
 //!
 //!     cargo bench --bench transform_throughput
 
+use triplespin::binary::{BinaryEmbedding, BitMatrix};
 use triplespin::coordinator::{Backend, NativeBackend};
 use triplespin::linalg::fft;
 use triplespin::linalg::simd;
-use triplespin::linalg::vecops::scale_by;
+use triplespin::linalg::vecops::{dot, scale_by};
 use triplespin::runtime::{Op, WorkerPool};
 use triplespin::transform::{make_square, Family, SignDiag};
 use triplespin::util::bench;
@@ -284,6 +288,82 @@ fn main() {
                     "rfft_speedup_pooled",
                     Json::Num(c_pooled.mean_ns / r_pooled.mean_ns),
                 ),
+            ]));
+        }
+    }
+
+    // Binary-vs-float sweep: the sign-quantized packed lane against the
+    // f32 lane it compresses — (a) embed (transform + fused pack) vs the
+    // plain float batch on the same transform/seeds/inputs, (b) a rerank
+    // micro (one query against every stored row: popcount Hamming over
+    // packed codes vs f32 dot over dense outputs), (c) the
+    // bytes-per-embedding ledger behind the 32x serving story.
+    println!("\n== binary vs float (sign-quantized packed lane) ==\n");
+    for fam in [Family::Hd3, Family::Toeplitz] {
+        for &n in &dims {
+            let rows = *row_counts.last().unwrap();
+            let t = make_square(fam, n, &mut Rng::new(1));
+            let emb = BinaryEmbedding::new(make_square(fam, n, &mut Rng::new(1)));
+            let xs = Rng::new(2).gaussian_vec(rows * n);
+            let label = format!("{} n={n} rows={rows}", fam.name());
+            let mut fout = vec![0.0f32; rows * n];
+            let float_b = bench::bench(&format!("{label} float batch"), opts, || {
+                t.apply_batch_into(&xs, &mut fout, &serial_pool);
+                std::hint::black_box(&fout);
+            });
+            let mut codes = BitMatrix::zeros(rows, n);
+            let embed_b = bench::bench(&format!("{label} binary embed"), opts, || {
+                emb.embed_batch_into(&xs, &mut codes, &serial_pool);
+                std::hint::black_box(&codes);
+            });
+            let q = fout[..n].to_vec();
+            let qcode: Vec<u64> = codes.row(0).to_vec();
+            let dot_b = bench::bench(&format!("{label} f32 dot rerank"), opts, || {
+                let mut acc = 0.0f64;
+                for r in fout.chunks_exact(n) {
+                    acc += dot(r, &q);
+                }
+                std::hint::black_box(acc);
+            });
+            let ham_b = bench::bench(&format!("{label} hamming rerank"), opts, || {
+                let mut acc = 0u64;
+                for r in 0..rows {
+                    acc += codes.hamming_to(r, &qcode);
+                }
+                std::hint::black_box(acc);
+            });
+            let bytes_float = 4 * n;
+            let bytes_binary = codes.words_per_row() * 8;
+            println!(
+                "{label:<34} float {:>10}  embed {:>10}  dot {:>10}  hamming {:>10}  x{:.1}  {}B->{}B",
+                bench::fmt_ns(float_b.mean_ns),
+                bench::fmt_ns(embed_b.mean_ns),
+                bench::fmt_ns(dot_b.mean_ns),
+                bench::fmt_ns(ham_b.mean_ns),
+                dot_b.mean_ns / ham_b.mean_ns,
+                bytes_float,
+                bytes_binary,
+            );
+            entries.push(Json::obj(vec![
+                ("kind", Json::Str("binary_vs_float".into())),
+                ("family", Json::Str(fam.name().into())),
+                ("n", Json::Num(n as f64)),
+                ("rows", Json::Num(rows as f64)),
+                ("float_batch_ns", Json::Num(float_b.mean_ns)),
+                ("binary_embed_ns", Json::Num(embed_b.mean_ns)),
+                (
+                    "embed_overhead",
+                    Json::Num(embed_b.mean_ns / float_b.mean_ns),
+                ),
+                ("dot_ns", Json::Num(dot_b.mean_ns)),
+                ("hamming_ns", Json::Num(ham_b.mean_ns)),
+                (
+                    "hamming_speedup",
+                    Json::Num(dot_b.mean_ns / ham_b.mean_ns),
+                ),
+                ("bytes_per_embedding_float", Json::Num(bytes_float as f64)),
+                ("bytes_per_embedding_binary", Json::Num(bytes_binary as f64)),
+                ("simd_level", Json::Str(simd_level.into())),
             ]));
         }
     }

@@ -1,0 +1,456 @@
+//! Binary embeddings: sign-quantized structured projections packed into
+//! bit matrices (the paper's "certain models … apply only bit matrices"
+//! compressibility claim, built out per "Binary embeddings with structured
+//! hashed projections" [Choromanska et al.] and the ternary/1-bit feature
+//! maps of Tiomoko Ali & Liao).
+//!
+//! The pipeline is `code(x) = sign(G_struct x)` with `G_struct` any
+//! [`Transform`] family: the projection keeps angular geometry (per-bit
+//! flip probability between two inputs is exactly `θ/π`, the SimHash
+//! identity), so packed codes support Hamming-distance search and 1-bit
+//! kernel estimates at 1/32 the bytes of the f32 feature vector.
+//!
+//! ## Packed word layout
+//!
+//! A code of `k = dim_out()` bits occupies `⌈k/64⌉` `u64` words: bit
+//! `i % 64` of word `i / 64` is set iff projection coordinate `i` is
+//! **sign-negative** (`f32::is_sign_negative`, i.e. the raw IEEE sign
+//! bit — the same "bit set = negative" convention as
+//! [`crate::transform::SignDiag`], and exactly what the x86 `movemask`
+//! kernels extract, so every SIMD tier packs identical words). Trailing
+//! bits of the last word are always zero, which keeps bucket keys and
+//! Hamming distances well-defined. Rows of a [`BitMatrix`] are contiguous
+//! at a stride of `words_per_row` words.
+//!
+//! Quantization runs **fused into the last transform stage**: the batch
+//! path shards rows over the persistent [`WorkerPool`], and each worker
+//! projects its row block into scratch drawn from its pinned
+//! [`Workspace`] and immediately packs the signs — the f32 projection of
+//! the whole batch is never materialized. Distances are popcounts over
+//! the XOR stream ([`simd::hamming`], AVX2 `vpshufb`+`vpsadbw` with a
+//! bit-identical scalar lane).
+//!
+//! ## Footprint accounting
+//!
+//! [`Transform::stored_bits`] already reports the *parameter* footprint
+//! (~`3n` bits for the fully discrete chain). [`BinaryEmbedding::output_bits`]
+//! reports the *per-embedding output* footprint: `k` bits vs `32k` for the
+//! f32 vector — the 32× response compression the serving layer's
+//! `binary_embed` lane ships.
+
+use crate::linalg::simd;
+use crate::linalg::Workspace;
+use crate::runtime::pool::{shard_rows, WorkerPool};
+use crate::transform::{make_square, Family, Transform};
+use crate::util::rng::Rng;
+
+/// A packed bit vector (one binary embedding): `bits` valid bits in
+/// `⌈bits/64⌉` words, trailing bits zero.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    bits: usize,
+}
+
+impl BitVec {
+    /// All-zero code of `bits` bits.
+    pub fn zeros(bits: usize) -> BitVec {
+        BitVec {
+            words: vec![0u64; bits.div_ceil(64)],
+            bits,
+        }
+    }
+
+    /// Sign-quantize a float vector: bit `i` set iff `y[i]` is
+    /// sign-negative (see the module docs for the exact convention).
+    pub fn from_signs(y: &[f32]) -> BitVec {
+        let mut v = BitVec::zeros(y.len());
+        simd::pack_signs(y, &mut v.words);
+        v
+    }
+
+    /// Wrap already-packed words as a `bits`-bit code. Trailing bits of
+    /// the last word are cleared so distances stay well-defined.
+    pub fn from_words(mut words: Vec<u64>, bits: usize) -> BitVec {
+        assert_eq!(words.len(), bits.div_ceil(64));
+        if bits % 64 != 0 {
+            if let Some(last) = words.last_mut() {
+                *last &= (1u64 << (bits % 64)) - 1;
+            }
+        }
+        BitVec { words, bits }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    /// The packed words (read-only; trailing bits guaranteed zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Bit `i` as a bool (`true` = the projection coordinate was negative).
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.bits);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Bytes this code occupies in memory (whole words).
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Hamming distance to another code of the same width.
+    pub fn hamming(&self, other: &BitVec) -> u64 {
+        assert_eq!(self.bits, other.bits, "code widths differ");
+        simd::hamming(&self.words, &other.words)
+    }
+}
+
+/// A row-major matrix of packed codes: `rows` codes of `bits` bits each,
+/// one row every `words_per_row()` words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitMatrix {
+    words: Vec<u64>,
+    rows: usize,
+    bits: usize,
+    words_per_row: usize,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, bits: usize) -> BitMatrix {
+        let words_per_row = bits.div_ceil(64);
+        BitMatrix {
+            words: vec![0u64; rows * words_per_row],
+            rows,
+            bits,
+            words_per_row,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Code `r` as its packed words.
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [u64] {
+        &mut self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// The whole packed buffer (row-major, `rows * words_per_row` words).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Hamming distance between row `r` and an external code's words.
+    pub fn hamming_to(&self, r: usize, code: &[u64]) -> u64 {
+        simd::hamming(self.row(r), code)
+    }
+
+    /// Total bytes of the packed matrix.
+    pub fn storage_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// Angular-similarity estimate from a Hamming distance over `bits`-bit
+/// codes: `1 - 2·d_H/k`. For sign codes of the same random projection this
+/// equals the dense angular sign-feature estimate `Φ(x)ᵀΦ(y)` (each
+/// agreeing bit contributes `+1/k`, each differing bit `-1/k`), and its
+/// expectation is the exact angular kernel `1 - 2θ/π`.
+pub fn angular_estimate(hamming: u64, bits: usize) -> f64 {
+    assert!(bits > 0);
+    1.0 - 2.0 * hamming as f64 / bits as f64
+}
+
+/// Sign-quantize one (possibly short, zero-padded) input through `t` into
+/// packed words (`out.len() == t.dim_out().div_ceil(64)`), all scratch
+/// drawn from `ws`. The single fused project+pack primitive every binary
+/// code producer ([`BinaryEmbedding`], the `kernels` 1-bit feature path)
+/// routes through: the projection lives only in workspace scratch, `out`
+/// receives nothing but sign bits.
+pub fn pack_projection_into(t: &dyn Transform, x: &[f32], out: &mut [u64], ws: &mut Workspace) {
+    let k = t.dim_out();
+    debug_assert_eq!(out.len(), k.div_ceil(64));
+    let mut proj = ws.take_f32_uninit(k); // fully overwritten
+    t.apply_padded_into(x, &mut proj, ws);
+    simd::pack_signs(&proj, out);
+    ws.put_f32(proj);
+}
+
+/// Batch counterpart of [`pack_projection_into`]: `xs` holds row-major
+/// inputs of `t.dim_in()` (already padded), `out` one packed code row per
+/// input. Rows shard over the persistent [`WorkerPool`]; each worker
+/// projects its row block through the family's serial batch kernel into
+/// its pinned workspace and packs the signs in place — the sign pass is
+/// fused into the last transform stage, so the batch's f32 projection is
+/// never materialized. Bit-identical per row to the single-input path.
+/// This is the one audited unsafe row-sharding for binary codes.
+pub fn pack_projection_batch_into(
+    t: &dyn Transform,
+    xs: &[f32],
+    out: &mut BitMatrix,
+    pool: &WorkerPool,
+) {
+    let n = t.dim_in();
+    debug_assert_eq!(xs.len() % n.max(1), 0);
+    let rows = if n == 0 { 0 } else { xs.len() / n };
+    let k = t.dim_out();
+    assert_eq!(out.rows(), rows);
+    assert_eq!(out.bits(), k);
+    if rows == 0 {
+        return;
+    }
+    let wpr = out.words_per_row();
+    let out_ptr = out.words_mut().as_mut_ptr() as usize;
+    // pack cost is ~k/32 of the projection's — batch_work_per_row alone is
+    // the right gate estimate
+    let work = t.batch_work_per_row();
+    shard_rows(pool, rows, work, &|lo, hi, _slot, ws| {
+        let block = hi - lo;
+        let mut proj = ws.take_f32_uninit(block * k); // fully overwritten
+        t.apply_batch_serial(&xs[lo * n..hi * n], &mut proj, ws);
+        // Safety: shard_rows hands out disjoint, covering row ranges and
+        // blocks until every worker acked — no aliasing, no write outlives
+        // this call.
+        let oc = unsafe {
+            std::slice::from_raw_parts_mut((out_ptr as *mut u64).add(lo * wpr), block * wpr)
+        };
+        for (prow, orow) in proj.chunks_exact(k).zip(oc.chunks_exact_mut(wpr)) {
+            simd::pack_signs(prow, orow);
+        }
+        ws.put_f32(proj);
+    });
+}
+
+/// A binary embedding: `code(x) = sign(G_struct x)` packed into `u64`
+/// words. Wraps any [`Transform`]; the code width is the transform's
+/// `dim_out()`.
+pub struct BinaryEmbedding {
+    transform: Box<dyn Transform>,
+}
+
+impl BinaryEmbedding {
+    pub fn new(transform: Box<dyn Transform>) -> BinaryEmbedding {
+        BinaryEmbedding { transform }
+    }
+
+    /// Square construction of the given family (`n` bits out for `n` in).
+    pub fn with_family(family: Family, n: usize, rng: &mut Rng) -> BinaryEmbedding {
+        BinaryEmbedding {
+            transform: make_square(family, n, rng),
+        }
+    }
+
+    /// Input dimensionality (shorter inputs are zero-padded).
+    pub fn dim_in(&self) -> usize {
+        self.transform.dim_in()
+    }
+
+    /// Code width in bits (= the transform's output dimensionality).
+    pub fn code_bits(&self) -> usize {
+        self.transform.dim_out()
+    }
+
+    /// Packed words per code (`⌈code_bits/64⌉`).
+    pub fn words_per_code(&self) -> usize {
+        self.code_bits().div_ceil(64)
+    }
+
+    /// Per-embedding output footprint in bits — the serving-response size.
+    /// The f32 vector this code replaces costs `32 · code_bits()` bits.
+    pub fn output_bits(&self) -> usize {
+        self.words_per_code() * 64
+    }
+
+    /// Parameter footprint of the wrapped transform (see
+    /// [`Transform::stored_bits`]); with a discrete family the whole model
+    /// is bits end to end — parameters and outputs.
+    pub fn stored_bits(&self) -> usize {
+        self.transform.stored_bits()
+    }
+
+    /// The wrapped transform.
+    pub fn transform(&self) -> &dyn Transform {
+        self.transform.as_ref()
+    }
+
+    /// Embed one (possibly short) input into `out` packed words
+    /// (`out.len() == words_per_code()`), all scratch drawn from `ws` —
+    /// the zero-allocation path (see [`pack_projection_into`]).
+    pub fn embed_into(&self, x: &[f32], out: &mut [u64], ws: &mut Workspace) {
+        pack_projection_into(self.transform.as_ref(), x, out, ws);
+    }
+
+    /// Embed one input. Thin allocating wrapper over
+    /// [`BinaryEmbedding::embed_into`].
+    pub fn embed(&self, x: &[f32]) -> BitVec {
+        let mut v = BitVec::zeros(self.code_bits());
+        let mut ws = Workspace::new();
+        self.embed_into(x, &mut v.words, &mut ws);
+        v
+    }
+
+    /// Batch embed: `xs` holds `rows` row-major inputs of `dim_in()`
+    /// (already padded), `out` receives `rows` packed codes — the fused
+    /// pool-sharded path (see [`pack_projection_batch_into`]).
+    /// Bit-identical per row to [`BinaryEmbedding::embed_into`].
+    pub fn embed_batch_into(&self, xs: &[f32], out: &mut BitMatrix, pool: &WorkerPool) {
+        pack_projection_batch_into(self.transform.as_ref(), xs, out, pool);
+    }
+
+    /// Allocating wrapper over [`BinaryEmbedding::embed_batch_into`] on the
+    /// process-wide pool.
+    pub fn embed_batch(&self, xs: &[f32]) -> BitMatrix {
+        let n = self.transform.dim_in();
+        debug_assert_eq!(xs.len() % n, 0);
+        let rows = xs.len() / n;
+        let mut out = BitMatrix::zeros(rows, self.code_bits());
+        self.embed_batch_into(xs, &mut out, WorkerPool::global());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::make;
+
+    const ALL_FAMILIES: [Family; 7] = [
+        Family::Dense,
+        Family::Hd3,
+        Family::Hdg,
+        Family::Circulant,
+        Family::Toeplitz,
+        Family::Hankel,
+        Family::SkewCirculant,
+    ];
+
+    /// The naive contract: packed embed == sign(dense apply), bit for bit.
+    fn naive_code(t: &dyn Transform, x: &[f32]) -> BitVec {
+        let n = t.dim_in();
+        let mut padded = vec![0.0f32; n];
+        padded[..x.len()].copy_from_slice(x);
+        let y = t.apply(&padded);
+        let mut v = BitVec::zeros(y.len());
+        for (i, val) in y.iter().enumerate() {
+            if val.is_sign_negative() {
+                v.words[i / 64] |= 1 << (i % 64);
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn embed_matches_naive_sign_of_dense_apply() {
+        for fam in ALL_FAMILIES {
+            for n in [16usize, 64, 128] {
+                let emb = BinaryEmbedding::with_family(fam, n, &mut Rng::new(5 + n as u64));
+                let x = Rng::new(9).gaussian_vec(n);
+                let got = emb.embed(&x);
+                let want = naive_code(emb.transform(), &x);
+                assert_eq!(got, want, "{fam:?} n={n}");
+                assert_eq!(got.bits(), n);
+            }
+        }
+    }
+
+    #[test]
+    fn embed_batch_matches_single_rowwise() {
+        let n = 64;
+        for fam in [Family::Hd3, Family::Toeplitz] {
+            // stacked/truncated shape too: 96-bit codes from 64-dim inputs
+            let t = make(fam, 96, n, 32, &mut Rng::new(11));
+            let emb = BinaryEmbedding::new(t);
+            let rows = 40;
+            let xs = Rng::new(12).gaussian_vec(rows * n);
+            let pool = WorkerPool::with_min_work(4, 0); // force the parallel path
+            let mut batch = BitMatrix::zeros(rows, emb.code_bits());
+            // twice through the same pool: reused pinned workspaces stay clean
+            for _ in 0..2 {
+                emb.embed_batch_into(&xs, &mut batch, &pool);
+                for (r, row) in xs.chunks_exact(n).enumerate() {
+                    let single = emb.embed(row);
+                    assert_eq!(batch.row(r), single.words(), "{fam:?} row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hamming_and_angular_estimate() {
+        let a = BitVec::from_signs(&[1.0, -1.0, 1.0, -1.0]);
+        let b = BitVec::from_signs(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.hamming(&b), 2);
+        assert_eq!(a.hamming(&a), 0);
+        assert_eq!(angular_estimate(a.hamming(&b), 4), 0.0);
+        assert_eq!(angular_estimate(0, 4), 1.0);
+        assert_eq!(angular_estimate(4, 4), -1.0);
+    }
+
+    #[test]
+    fn antipodal_codes_are_complementary() {
+        // sign(G(-x)) = ¬sign(G x) for sign-symmetric outputs: Hamming
+        // distance between x and -x codes is the full code width.
+        let n = 128;
+        let emb = BinaryEmbedding::with_family(Family::Hd3, n, &mut Rng::new(3));
+        let x = Rng::new(4).unit_vec(n);
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        assert_eq!(emb.embed(&x).hamming(&emb.embed(&neg)), n as u64);
+    }
+
+    #[test]
+    fn footprint_accounting_is_32x() {
+        let n = 256;
+        let emb = BinaryEmbedding::with_family(Family::Hd3, n, &mut Rng::new(7));
+        assert_eq!(emb.code_bits(), n);
+        assert_eq!(emb.words_per_code(), 4);
+        assert_eq!(emb.output_bits(), n);
+        // 32x smaller than the f32 output it replaces: the f32 lane ships
+        // 32 bits per coordinate, the packed lane 1
+        assert_eq!((32 * emb.code_bits()) / emb.output_bits(), 32);
+        let ones = vec![1.0f32; n];
+        // 32 bytes packed vs 4n bytes of f32
+        assert_eq!(emb.embed(&ones).storage_bytes() * 32, 4 * n);
+        // parameters are bits too for the discrete chain
+        assert_eq!(emb.stored_bits(), 3 * n);
+    }
+
+    #[test]
+    fn bitmatrix_layout() {
+        let mut m = BitMatrix::zeros(3, 100);
+        assert_eq!(m.words_per_row(), 2);
+        assert_eq!(m.storage_bytes(), 3 * 2 * 8);
+        m.row_mut(1)[0] = 0b1011;
+        assert_eq!(m.row(0), &[0, 0]);
+        assert_eq!(m.row(1), &[0b1011, 0]);
+        assert_eq!(m.hamming_to(1, &[0b1000, 0]), 2);
+        let empty = BitMatrix::zeros(0, 64);
+        assert!(empty.is_empty());
+    }
+}

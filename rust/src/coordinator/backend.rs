@@ -47,12 +47,15 @@ impl ModelParams {
 /// A batch-execution backend. `xs` is a row-major `(rows, n)` buffer.
 pub trait Backend: Send + Sync + 'static {
     fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String>;
-    /// Output elements **per request row** for (op, n).
+    /// Output elements **per request row** for (op, n). For
+    /// [`Op::BinaryEmbed`] an "element" is one packed `u64` word
+    /// (`⌈n/64⌉` of them — 64 sign bits each).
     fn out_elems(&self, op: Op, n: usize) -> usize {
         match op {
             Op::Transform => n,
             Op::Rff => 2 * n,
             Op::CrossPolytope => 1,
+            Op::BinaryEmbed => n.div_ceil(64),
         }
     }
     fn name(&self) -> &'static str;
@@ -198,6 +201,7 @@ impl Backend for NativeBackend {
         if rows == 0 {
             return Ok(match op {
                 Op::CrossPolytope => Output::I32(Vec::new()),
+                Op::BinaryEmbed => Output::Bits(Vec::new()),
                 _ => Output::F32(Vec::new()),
             });
         }
@@ -253,6 +257,33 @@ impl Backend for NativeBackend {
                     }
                 });
                 Ok(Output::I32(out))
+            }
+            Op::BinaryEmbed => {
+                // chain then sign-quantize in place per shard: each worker
+                // packs its own projection rows, so the response payload is
+                // bits end to end (⌈n/64⌉ words per row — 32x below the
+                // f32 transform lane)
+                let mut proj = xs.to_vec();
+                let words = n.div_ceil(64);
+                let mut out = vec![0u64; rows * words];
+                // pack cost ~n/32 of the chain's — chain_work dominates
+                let work = Self::chain_work(n) + n;
+                shard_proj_out(
+                    self.pool(),
+                    &mut proj,
+                    &mut out,
+                    rows,
+                    n,
+                    words,
+                    work,
+                    |pc, oc| {
+                        Self::chain_batch(p, pc, n);
+                        for (prow, orow) in pc.chunks_exact(n).zip(oc.chunks_exact_mut(words)) {
+                            crate::linalg::simd::pack_signs(prow, orow);
+                        }
+                    },
+                );
+                Ok(Output::Bits(out))
             }
         }
     }
@@ -354,21 +385,26 @@ impl PjrtBackend {
             // split into chunks of <= b rows, concatenate
             let mut f32_out: Vec<f32> = Vec::new();
             let mut i32_out: Vec<i32> = Vec::new();
-            let mut is_i32 = false;
+            let mut bits_out: Vec<u64> = Vec::new();
+            let mut kind = 'f';
             for chunk in xs.chunks(b * n) {
                 let r = chunk.len() / n;
                 match self.run_padded(op, n, r, chunk)? {
                     Output::F32(v) => f32_out.extend_from_slice(&v),
                     Output::I32(v) => {
-                        is_i32 = true;
+                        kind = 'i';
                         i32_out.extend_from_slice(&v);
+                    }
+                    Output::Bits(v) => {
+                        kind = 'b';
+                        bits_out.extend_from_slice(&v);
                     }
                 }
             }
-            return Ok(if is_i32 {
-                Output::I32(i32_out)
-            } else {
-                Output::F32(f32_out)
+            return Ok(match kind {
+                'i' => Output::I32(i32_out),
+                'b' => Output::Bits(bits_out),
+                _ => Output::F32(f32_out),
             });
         }
         // pad to exactly b rows
@@ -395,6 +431,7 @@ impl PjrtBackend {
         Ok(match out {
             Output::F32(v) => Output::F32(v[..rows * per].to_vec()),
             Output::I32(v) => Output::I32(v[..rows * per].to_vec()),
+            Output::Bits(v) => Output::Bits(v[..rows * per].to_vec()),
         })
     }
 }

@@ -68,12 +68,26 @@ pub struct LaneMetrics {
     pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_rows: AtomicU64,
+    /// Total payload bits shipped in responses — the footprint ledger the
+    /// binary lane's 32× compression shows up in (f32/i32 elements count
+    /// 32 bits, packed words 64).
+    pub output_bits: AtomicU64,
     pub latency: Histogram,
 }
 
 impl LaneMetrics {
     pub fn new() -> LaneMetrics {
         LaneMetrics::default()
+    }
+
+    /// Mean response payload in bytes (completed requests only).
+    pub fn mean_response_bytes(&self) -> f64 {
+        let c = self.completed.load(Ordering::Relaxed);
+        if c == 0 {
+            0.0
+        } else {
+            self.output_bits.load(Ordering::Relaxed) as f64 / 8.0 / c as f64
+        }
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -108,6 +122,11 @@ impl LaneMetrics {
                 Json::Num(self.batches.load(Ordering::Relaxed) as f64),
             ),
             ("mean_batch", Json::Num(self.mean_batch_size())),
+            (
+                "output_bits",
+                Json::Num(self.output_bits.load(Ordering::Relaxed) as f64),
+            ),
+            ("mean_response_bytes", Json::Num(self.mean_response_bytes())),
             ("latency_mean_us", Json::Num(self.latency.mean_us())),
             (
                 "latency_p50_us",

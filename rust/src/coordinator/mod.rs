@@ -55,7 +55,12 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         Config {
-            lanes: vec![(Op::Transform, 256), (Op::Rff, 256), (Op::CrossPolytope, 256)],
+            lanes: vec![
+                (Op::Transform, 256),
+                (Op::Rff, 256),
+                (Op::CrossPolytope, 256),
+                (Op::BinaryEmbed, 256),
+            ],
             max_batch: 64,
             max_wait: Duration::from_micros(200),
             queue_cap: 1024,
@@ -263,7 +268,18 @@ fn lane_loop(
                     let slice = match &out {
                         Output::F32(v) => Output::F32(v[i * per..(i + 1) * per].to_vec()),
                         Output::I32(v) => Output::I32(v[i * per..(i + 1) * per].to_vec()),
+                        Output::Bits(v) => Output::Bits(v[i * per..(i + 1) * per].to_vec()),
                     };
+                    // footprint ledger: packed words carry 64 bits/elem,
+                    // floats and ids 32 — what makes the binary lane's 32×
+                    // response compression visible in metrics
+                    let bits_per_elem = match &slice {
+                        Output::Bits(_) => 64,
+                        _ => 32,
+                    };
+                    metrics
+                        .output_bits
+                        .fetch_add((per * bits_per_elem) as u64, Ordering::Relaxed);
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
                     metrics
                         .latency
@@ -358,6 +374,49 @@ mod tests {
             let want = direct.run_batch(Op::Rff, 64, 1, &v).unwrap();
             assert_eq!(got, want);
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn binary_embed_lane_matches_backend_and_ships_32x_less() {
+        let config = Config {
+            lanes: vec![(Op::Transform, 64), (Op::BinaryEmbed, 64)],
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 64,
+            sigma: 1.0,
+            seed: 21,
+        };
+        let backend = Arc::new(NativeBackend::new(&[64], 1.0, 21));
+        let direct = NativeBackend::new(&[64], 1.0, 21);
+        let c = Coordinator::start(config, backend);
+        let mut rng = Rng::new(22);
+        for _ in 0..20 {
+            let v = rng.gaussian_vec(64);
+            let got = c.call(Op::BinaryEmbed, v.clone()).unwrap();
+            let want = direct.run_batch(Op::BinaryEmbed, 64, 1, &v).unwrap();
+            assert_eq!(got, want);
+            assert_eq!(got.as_bits().unwrap().len(), 1); // 64 bits = 1 word
+            // the packed code is the sign pattern of the f32 transform lane
+            let dense = c.call(Op::Transform, v).unwrap();
+            let word = got.as_bits().unwrap()[0];
+            for (i, y) in dense.as_f32().unwrap().iter().enumerate() {
+                assert_eq!((word >> i) & 1 == 1, y.is_sign_negative(), "bit {i}");
+            }
+        }
+        // footprint ledger: 64 bits/response vs 64*32 on the float lane
+        let m = c.metrics();
+        let bits = |op: Op| {
+            m.iter()
+                .find(|((o, _), _)| *o == op)
+                .unwrap()
+                .1
+                .output_bits
+                .load(Ordering::Relaxed)
+        };
+        assert_eq!(bits(Op::Transform), 20 * 64 * 32);
+        assert_eq!(bits(Op::BinaryEmbed), 20 * 64);
+        assert_eq!(bits(Op::Transform), 32 * bits(Op::BinaryEmbed));
         c.shutdown();
     }
 

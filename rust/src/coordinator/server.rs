@@ -5,8 +5,16 @@
 //! ```text
 //! -> {"id": 7, "op": "transform", "vector": [0.1, -0.3, ...]}
 //! <- {"id": 7, "ok": true, "result": [ ... ]}
-//! <- {"id": 7, "ok": false, "error": "lane queue full"}
+//! -> {"id": 8, "op": "binary_embed", "vector": [0.1, -0.3, ...]}
+//! <- {"id": 8, "ok": true, "result": ["a3ff00125e9c7b01", ...]}
+//! <- {"id": 8, "ok": false, "error": "lane queue full"}
 //! ```
+//!
+//! `transform`/`rff` results are f32 arrays, `crosspolytope` a one-element
+//! id array, and `binary_embed` ships each packed `u64` sign word as a
+//! fixed-width 16-digit lowercase hex string (bit `i % 64` of word
+//! `i / 64` = projection coordinate `i` negative) — exact, and ~5× fewer
+//! response bytes than the float lane on the wire (32× in decoded form).
 //!
 //! Each connection gets a handler thread; requests within a connection are
 //! pipelined (responses come back in submit order, matching the lane's
@@ -15,20 +23,42 @@
 //! runs on the backend's persistent [`crate::runtime::WorkerPool`]: the
 //! steady-state thread census is `1 accept + 1/connection + 1/lane +
 //! TS_WORKERS pool workers`, fixed for the life of the server.
+//!
+//! Handler threads are **tracked and joined** on [`TcpServer::shutdown`]:
+//! connection sockets carry a read timeout so a blocked reader notices the
+//! stop flag within [`READ_POLL`], finishes any in-flight response line,
+//! and exits — shutdown cannot race a half-written response, and no
+//! detached handler outlives the server.
 
 use super::{Coordinator, SubmitError};
 use crate::runtime::{Op, Output};
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How often a blocked connection reader re-checks the stop flag.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// Per-syscall write stall limit. Without it a client that stops reading
+/// (full kernel send buffer) would block a handler in `write_all`
+/// forever — and since shutdown now *joins* handlers, that would hang
+/// shutdown itself. A stalled write errors out instead, tearing the
+/// connection down; a draining-but-slow client is unaffected (the limit
+/// is per write syscall, and `write_all` keeps going as long as each
+/// write makes progress).
+const WRITE_STALL_LIMIT: Duration = Duration::from_secs(5);
 
 /// Handle to a running TCP server.
 pub struct TcpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_join: Option<std::thread::JoinHandle<()>>,
+    /// Live connection-handler threads, joined on shutdown (finished
+    /// handlers are pruned opportunistically as new connections arrive).
+    conn_joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl TcpServer {
@@ -38,6 +68,8 @@ impl TcpServer {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let conn_joins = Arc::new(Mutex::new(Vec::new()));
+        let joins2 = Arc::clone(&conn_joins);
         let accept_join = std::thread::Builder::new()
             .name("tcp-accept".into())
             .spawn(move || {
@@ -48,9 +80,17 @@ impl TcpServer {
                     match conn {
                         Ok(stream) => {
                             let c = Arc::clone(&coordinator);
-                            let _ = std::thread::Builder::new()
+                            let flag = Arc::clone(&stop2);
+                            let spawned = std::thread::Builder::new()
                                 .name("tcp-conn".into())
-                                .spawn(move || handle_connection(stream, c));
+                                .spawn(move || handle_connection(stream, c, flag));
+                            if let Ok(handle) = spawned {
+                                let mut joins = joins2.lock().unwrap();
+                                // prune handlers whose connections already
+                                // closed so the vec tracks live threads only
+                                joins.retain(|j: &std::thread::JoinHandle<()>| !j.is_finished());
+                                joins.push(handle);
+                            }
                         }
                         Err(_) => break,
                     }
@@ -60,6 +100,7 @@ impl TcpServer {
             addr: local,
             stop,
             accept_join: Some(accept_join),
+            conn_joins,
         })
     }
 
@@ -68,8 +109,12 @@ impl TcpServer {
         self.addr
     }
 
-    /// Stop accepting connections and join the accept thread. Existing
-    /// connection handlers finish their in-flight lines and exit on EOF.
+    /// Stop accepting connections, then join the accept thread **and every
+    /// connection handler**. Handlers notice the stop flag within
+    /// [`READ_POLL`], complete any response line they were writing, and
+    /// exit — so shutdown returns only after the last byte of the last
+    /// in-flight response has been flushed (the pre-fix detached handlers
+    /// could race a half-written line against process teardown).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // unblock accept() with a no-op connection
@@ -77,33 +122,71 @@ impl TcpServer {
         if let Some(j) = self.accept_join.take() {
             let _ = j.join();
         }
+        let handlers = std::mem::take(&mut *self.conn_joins.lock().unwrap());
+        for j in handlers {
+            let _ = j.join();
+        }
     }
 }
 
-fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>) {
-    let peer = stream.peer_addr().ok();
+fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<AtomicBool>) {
+    // bounded read: a quiet connection re-checks the stop flag every
+    // READ_POLL instead of blocking shutdown forever; bounded write: a
+    // client that stops draining cannot pin the (joined-on-shutdown)
+    // handler in write_all
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_STALL_LIMIT));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    let mut reader = BufReader::new(stream);
+    // bytes, not String: read_line's UTF-8 guard would DROP buffered bytes
+    // when a read timeout lands mid-multi-byte character — read_until
+    // keeps every consumed byte across timeouts
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        match reader.read_until(b'\n', &mut line) {
+            Ok(0) => {
+                // EOF — but a read timeout may have left a complete-but-
+                // unterminated final request buffered; serve it before
+                // closing (the protocol promise for newline-less tails)
+                let text = String::from_utf8_lossy(&line);
+                if !text.trim().is_empty() {
+                    let reply = process_line(text.trim_end(), &coordinator);
+                    let _ = writer.write_all(format!("{reply}\n").as_bytes());
+                }
+                break;
+            }
+            Ok(_) => {
+                let text = String::from_utf8_lossy(&line);
+                if !text.trim().is_empty() {
+                    let reply = process_line(text.trim_end(), &coordinator);
+                    if writer.write_all(format!("{reply}\n").as_bytes()).is_err() {
+                        break;
+                    }
+                }
+                if line.last() != Some(&b'\n') {
+                    break; // EOF without trailing newline: final line served
+                }
+                line.clear();
+                // a continuously-pipelining client never hits the read
+                // timeout, so the stop flag must also gate here or one
+                // busy connection could hang the joining shutdown forever
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                // timeout — any partial line stays buffered in `line` and
+                // the next read continues appending to it
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
             Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = process_line(&line, &coordinator);
-        if writer
-            .write_all(format!("{reply}\n").as_bytes())
-            .is_err()
-        {
-            break;
         }
     }
-    let _ = peer; // connection closed
 }
 
 /// Parse one request line, execute, format the response (pure function —
@@ -144,8 +227,26 @@ fn ok_response(id: Json, out: Output) -> Json {
     let result = match out {
         Output::F32(v) => Json::Arr(v.into_iter().map(|x| Json::Num(x as f64)).collect()),
         Output::I32(v) => Json::Arr(v.into_iter().map(|x| Json::Num(x as f64)).collect()),
+        // packed sign words as fixed-width hex: exact (a u64 does not
+        // round-trip through a JSON f64) and compact on the wire
+        Output::Bits(v) => Json::Arr(v.into_iter().map(|w| Json::Str(word_to_hex(w))).collect()),
     };
     Json::obj(vec![("id", id), ("ok", Json::Bool(true)), ("result", result)])
+}
+
+/// One packed word as 16 lowercase hex digits (most significant first).
+pub fn word_to_hex(w: u64) -> String {
+    format!("{w:016x}")
+}
+
+/// Parse a response-side hex word (the client-side decoder; also used by
+/// the serving smoke test). Strict: exactly 16 hex digits — no sign
+/// prefix (`from_str_radix` alone would accept `+` + 15 digits).
+pub fn hex_to_word(s: &str) -> Option<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
 }
 
 fn err_response(id: Json, msg: &str) -> Json {
@@ -164,7 +265,11 @@ mod tests {
 
     fn coordinator() -> Arc<Coordinator> {
         let config = Config {
-            lanes: vec![(Op::Transform, 64), (Op::CrossPolytope, 64)],
+            lanes: vec![
+                (Op::Transform, 64),
+                (Op::CrossPolytope, 64),
+                (Op::BinaryEmbed, 64),
+            ],
             max_batch: 8,
             max_wait: Duration::from_micros(200),
             queue_cap: 64,
@@ -204,6 +309,82 @@ mod tests {
         // wrong dim -> unknown lane
         let r = process_line(r#"{"id":4,"op":"transform","vector":[1,2]}"#, &c);
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn process_line_binary_embed_ships_hex_words() {
+        let c = coordinator();
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", i as f32 - 31.5)).collect();
+        let line = format!(
+            r#"{{"id": 9, "op": "binary_embed", "vector": [{}]}}"#,
+            vec_str.join(",")
+        );
+        let resp = process_line(&line, &c);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let words = resp.get("result").unwrap().as_arr().unwrap();
+        assert_eq!(words.len(), 1, "64-bit code = one packed word");
+        let word = hex_to_word(words[0].as_str().unwrap()).expect("16 hex digits");
+        // cross-check against the float lane: hex bits == sign pattern
+        let tline = format!(
+            r#"{{"id": 10, "op": "transform", "vector": [{}]}}"#,
+            vec_str.join(",")
+        );
+        let tresp = process_line(&tline, &c);
+        let dense = tresp.get("result").unwrap().as_arr().unwrap();
+        for (i, y) in dense.iter().enumerate() {
+            let neg = y.as_f64().unwrap().is_sign_negative();
+            assert_eq!((word >> i) & 1 == 1, neg, "bit {i}");
+        }
+        // wire footprint: 18 bytes ("...") per packed word vs ~12 per f32
+        // number × 64 — the response line is ~20x shorter
+        assert!(resp.to_string().len() * 10 < tresp.to_string().len() * 2);
+    }
+
+    #[test]
+    fn hex_word_round_trip() {
+        for w in [0u64, 1, 0xdead_beef_0123_4567, u64::MAX] {
+            assert_eq!(hex_to_word(&word_to_hex(w)), Some(w));
+        }
+        assert_eq!(hex_to_word("xyz"), None);
+        assert_eq!(hex_to_word("00"), None);
+        // sign prefixes are 16 chars but not 16 hex digits
+        assert_eq!(hex_to_word("+00000000000000f"), None);
+        assert_eq!(hex_to_word("-00000000000000f"), None);
+    }
+
+    #[test]
+    fn shutdown_joins_connection_handlers() {
+        let c = coordinator();
+        let server = TcpServer::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        // open connections and leave them idle — the pre-fix server leaked
+        // these handler threads; shutdown must now stop and join them
+        // within the read-poll interval instead of hanging or detaching
+        let idle1 = TcpStream::connect(addr).unwrap();
+        let mut busy = TcpStream::connect(addr).unwrap();
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", (i % 3) as f32)).collect();
+        busy.write_all(
+            format!(
+                "{{\"id\": 1, \"op\": \"transform\", \"vector\": [{}]}}\n",
+                vec_str.join(",")
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut reader = BufReader::new(busy.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(
+            Json::parse(resp.trim()).unwrap().get("ok"),
+            Some(&Json::Bool(true))
+        );
+        let t0 = std::time::Instant::now();
+        server.shutdown(); // joins accept + both handlers
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "shutdown must not hang on idle connections"
+        );
+        drop(idle1);
     }
 
     #[test]

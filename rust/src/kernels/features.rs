@@ -55,6 +55,12 @@ impl FeatureMap {
         }
     }
 
+    /// Projection dimensionality `k` (= the 1-bit code width of
+    /// [`FeatureMap::binary_codes_into`]).
+    pub fn dim_projection(&self) -> usize {
+        self.transform.dim_out()
+    }
+
     pub fn kind(&self) -> FeatureKind {
         self.kind
     }
@@ -172,6 +178,54 @@ impl FeatureMap {
         let fy = self.features(y);
         crate::linalg::vecops::dot(&fx, &fy)
     }
+
+    /// 1-bit feature code: the sign bits of the raw projection `Gx`,
+    /// packed into `u64` words (`⌈dim_out/64⌉` of them) — the binarized
+    /// feature-map path, routed through the shared
+    /// [`crate::binary::pack_projection_into`] primitive. For
+    /// [`FeatureKind::Angular`] this is the sign feature vector quantized
+    /// losslessly to one bit per projection (the ±scale magnitude carries
+    /// no information), so the 1-bit Gram estimate
+    /// [`FeatureMap::approx_kernel_1bit`] reproduces the dense angular
+    /// estimate exactly; for the other kinds it estimates the angular
+    /// kernel of the same projection at 1/32 the bytes.
+    pub fn binary_codes_into(&self, x: &[f32], out: &mut [u64], ws: &mut Workspace) {
+        crate::binary::pack_projection_into(self.transform.as_ref(), x, out, ws);
+    }
+
+    /// Allocating wrapper over [`FeatureMap::binary_codes_into`].
+    pub fn binary_codes(&self, x: &[f32]) -> crate::binary::BitVec {
+        let mut ws = Workspace::new();
+        let k = self.transform.dim_out();
+        let mut words = vec![0u64; k.div_ceil(64)];
+        self.binary_codes_into(x, &mut words, &mut ws);
+        crate::binary::BitVec::from_words(words, k)
+    }
+
+    /// Batch 1-bit codes: `rows` inputs of `dim_in()` (already padded) to
+    /// one packed code row each, through the shared fused pool-sharded
+    /// [`crate::binary::pack_projection_batch_into`] (the float projection
+    /// of the batch is never materialized). Bit-identical per row to
+    /// [`FeatureMap::binary_codes_into`].
+    pub fn binary_codes_batch_into(
+        &self,
+        xs: &[f32],
+        out: &mut crate::binary::BitMatrix,
+        pool: &WorkerPool,
+    ) {
+        crate::binary::pack_projection_batch_into(self.transform.as_ref(), xs, out, pool);
+    }
+
+    /// 1-bit Gram estimate between two codes from
+    /// [`FeatureMap::binary_codes_into`]: `1 - 2·d_H/k` — one XOR/popcount
+    /// sweep per pair, no float features materialized. Pinned against the
+    /// dense [`FeatureKind::Angular`] estimate in the tests below.
+    pub fn approx_kernel_1bit(&self, a: &[u64], b: &[u64]) -> f64 {
+        crate::binary::angular_estimate(
+            crate::linalg::simd::hamming(a, b),
+            self.transform.dim_out(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -278,6 +332,50 @@ mod tests {
                     "{kind:?} row {r}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn one_bit_gram_estimate_pinned_against_dense_angular() {
+        // For Angular sign features the 1-bit code is a lossless
+        // quantization: 1 - 2·d_H/k must reproduce the dense Φ(x)ᵀΦ(y)
+        // estimate up to f32 dot-product round-off, for every family.
+        let n = 64;
+        let k = 256;
+        for fam in [Family::Dense, Family::Hd3, Family::Toeplitz] {
+            let tr = make(fam, k, n, n, &mut Rng::new(70));
+            let fm = FeatureMap::new(tr, FeatureKind::Angular, 1.0);
+            let mut rng = Rng::new(71);
+            for _ in 0..5 {
+                let x = rng.unit_vec(n);
+                let y = rng.unit_vec(n);
+                let dense = fm.approx_kernel(&x, &y);
+                let cx = fm.binary_codes(&x);
+                let cy = fm.binary_codes(&y);
+                let one_bit = fm.approx_kernel_1bit(cx.words(), cy.words());
+                assert!(
+                    (dense - one_bit).abs() < 1e-4,
+                    "{fam:?}: dense {dense} vs 1-bit {one_bit}"
+                );
+                // and the code is 32x smaller than the feature vector
+                assert_eq!(cx.storage_bytes(), k / 8);
+            }
+        }
+    }
+
+    #[test]
+    fn binary_codes_batch_matches_rowwise_bitwise() {
+        let n = 32;
+        let rows = 40;
+        let tr = make(Family::Hdg, 96, n, 16, &mut Rng::new(13));
+        let fm = FeatureMap::new(tr, FeatureKind::Angular, 1.0);
+        let xs = Rng::new(14).gaussian_vec(rows * n);
+        let pool = crate::runtime::WorkerPool::with_min_work(4, 0);
+        let mut batch = crate::binary::BitMatrix::zeros(rows, 96);
+        fm.binary_codes_batch_into(&xs, &mut batch, &pool);
+        for (r, row) in xs.chunks_exact(n).enumerate() {
+            let single = fm.binary_codes(row);
+            assert_eq!(batch.row(r), single.words(), "row {r}");
         }
     }
 

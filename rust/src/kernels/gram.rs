@@ -13,11 +13,7 @@ use crate::runtime::WorkerPool;
 pub fn feature_matrix(map: &FeatureMap, points: &[Vec<f32>]) -> Mat {
     let d = map.dim_features();
     let n = map.dim_in();
-    let mut xs = vec![0.0f32; points.len() * n];
-    for (p, row) in points.iter().zip(xs.chunks_exact_mut(n)) {
-        assert!(p.len() <= n, "point dim {} exceeds map dim {n}", p.len());
-        row[..p.len()].copy_from_slice(p);
-    }
+    let xs = crate::linalg::dense::flatten_padded(points, n);
     let mut out = Mat::zeros(points.len(), d);
     map.features_batch_into(&xs, &mut out.data, WorkerPool::global());
     out
@@ -33,6 +29,35 @@ pub fn approx_gram(map: &FeatureMap, points: &[Vec<f32>]) -> Mat {
 /// `||K̃ - K||_F / ||K||_F`.
 pub fn reconstruction_error(map: &FeatureMap, points: &[Vec<f32>], exact: &Mat) -> f64 {
     approx_gram(map, points).rel_frob_err(exact)
+}
+
+/// Packed code matrix: one 1-bit sign code per point (the binarized
+/// feature path), computed as a single pooled batch — the bit-matrix
+/// analogue of [`feature_matrix`] at 1/32 the bytes.
+pub fn binary_code_matrix(map: &FeatureMap, points: &[Vec<f32>]) -> crate::binary::BitMatrix {
+    let n = map.dim_in();
+    let xs = crate::linalg::dense::flatten_padded(points, n);
+    let mut out = crate::binary::BitMatrix::zeros(points.len(), map.dim_projection());
+    map.binary_codes_batch_into(&xs, &mut out, WorkerPool::global());
+    out
+}
+
+/// 1-bit approximate Gram matrix: `K̃1[i][j] = 1 - 2·d_H(c_i, c_j)/k` over
+/// the packed codes — pure XOR/popcount, no float features. For the
+/// angular kernel this matches [`approx_gram`] of the sign feature map up
+/// to f32 dot round-off (pinned in `kernels::features` tests).
+pub fn binary_gram(map: &FeatureMap, points: &[Vec<f32>]) -> Mat {
+    let codes = binary_code_matrix(map, points);
+    let n = codes.rows();
+    let mut out = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let est = map.approx_kernel_1bit(codes.row(i), codes.row(j));
+            out.data[i * n + j] = est as f32;
+            out.data[j * n + i] = est as f32;
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -93,6 +118,32 @@ mod tests {
             hd3 < dense * 1.6,
             "hd3 err {hd3} should be comparable to dense err {dense}"
         );
+    }
+
+    #[test]
+    fn binary_gram_pinned_against_dense_angular_gram() {
+        // matrix-level pin: for the angular kernel, the XOR/popcount Gram
+        // equals the dense sign-feature Gram up to f32 round-off, and both
+        // approximate the exact angular Gram.
+        let n = 32;
+        let pts = sphere_points(20, n, 8);
+        let tr = make(Family::Hd3, 128, n, n, &mut Rng::new(80));
+        let fm = FeatureMap::new(tr, FeatureKind::Angular, 1.0);
+        let dense = approx_gram(&fm, &pts);
+        let one_bit = binary_gram(&fm, &pts);
+        assert_eq!(one_bit.rows, dense.rows);
+        for i in 0..dense.rows {
+            for j in 0..dense.cols {
+                let (a, b) = (dense.data[i * dense.cols + j], one_bit.data[i * dense.cols + j]);
+                assert!((a - b).abs() < 1e-4, "[{i}][{j}]: dense {a} vs 1-bit {b}");
+            }
+        }
+        let k_exact = exact::gram(&pts, exact::angular);
+        let err = one_bit.rel_frob_err(&k_exact);
+        assert!(err < 0.35, "1-bit angular gram err {err}");
+        // footprint: 128-bit codes vs 128 f32 features per point (bytes)
+        let codes = binary_code_matrix(&fm, &pts);
+        assert_eq!(codes.storage_bytes() * 32, pts.len() * 128 * 4);
     }
 
     #[test]

@@ -49,6 +49,21 @@
 //! serial-batch vs pooled-batch speedups plus a `simd_vs_scalar` sweep and
 //! a sign-xor diagonal micro in `BENCH_transform_throughput.json`.
 //!
+//! ## Binary lane
+//!
+//! The paper's compressibility pillar — "certain models … apply only bit
+//! matrices" — is served end to end by the [`binary`] subsystem:
+//! sign-quantized embeddings `sign(G_struct x)` packed into `u64` words
+//! ([`binary::BitVec`] / [`binary::BitMatrix`], quantization fused into
+//! the last transform stage via [`linalg::simd::pack_signs`]), popcount
+//! Hamming distances ([`linalg::simd::hamming`], AVX2/scalar tiers,
+//! bit-identical), a Hamming LSH index bucketing on packed prefixes
+//! ([`lsh::HammingLsh`]), 1-bit Gram estimates in [`kernels`], and a
+//! `binary_embed` serving op whose responses are 32× smaller than the
+//! f32 lane's. With a discrete family the whole model is bits end to end:
+//! ~`3n` parameter bits ([`transform::Transform::stored_bits`]) and `m`
+//! output bits per embedding ([`binary::BinaryEmbedding::output_bits`]).
+//!
 //! ## Layout
 //!
 //! * [`util`] / [`linalg`] — substrates: seeded RNG, JSON, bench/property
@@ -56,10 +71,14 @@
 //!   the [`linalg::Workspace`] scratch arenas.
 //! * [`transform`] — the TripleSpin family itself (the paper's §3),
 //!   including block stacking (§3.1).
+//! * [`binary`] — packed binary embeddings: sign-quantized feature maps,
+//!   bit-matrix storage, Hamming-distance machinery (the bit-matrix
+//!   mobile-footprint story).
 //! * [`kernels`] — random-feature kernel approximation (paper §4):
 //!   Gaussian/angular/arc-cosine and general PNG kernels, Gram-matrix
-//!   reconstruction metrics.
-//! * [`lsh`] — cross-polytope LSH (paper §2/§5, Figure 1).
+//!   reconstruction metrics, plus the 1-bit binarized feature path.
+//! * [`lsh`] — cross-polytope LSH (paper §2/§5, Figure 1) and the packed
+//!   Hamming-prefix index.
 //! * [`sketch`] — Newton sketch for convex optimization (paper §6.3,
 //!   Figure 3), with logistic regression.
 //! * [`data`] — synthetic datasets standing in for USPST / G50C and the
@@ -68,8 +87,10 @@
 //!   PJRT executor loading `artifacts/*.hlo.txt` that
 //!   `python/compile/aot.py` lowered from the JAX/Pallas layers.
 //! * [`coordinator`] — L3 serving layer: request router, dynamic batcher,
-//!   worker pool, metrics, backpressure.
+//!   worker pool, metrics, backpressure; ops `transform` / `rff` /
+//!   `crosspolytope` / `binary_embed` over newline-JSON TCP.
 
+pub mod binary;
 pub mod coordinator;
 pub mod data;
 pub mod jlt;

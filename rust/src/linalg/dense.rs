@@ -10,6 +10,19 @@
 
 use crate::util::rng::Rng;
 
+/// Flatten a point set into one row-major `(points.len(), n)` buffer,
+/// zero-padding each point (dims `<= n`) — the shared staging step every
+/// batch-projection consumer (Gram feature matrices, binary code
+/// matrices, LSH index builds) runs before handing rows to the pool.
+pub fn flatten_padded(points: &[Vec<f32>], n: usize) -> Vec<f32> {
+    let mut xs = vec![0.0f32; points.len() * n];
+    for (p, row) in points.iter().zip(xs.chunks_exact_mut(n)) {
+        assert!(p.len() <= n, "point dim {} exceeds batch dim {n}", p.len());
+        row[..p.len()].copy_from_slice(p);
+    }
+    xs
+}
+
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {

@@ -3,8 +3,10 @@
 //! Every arithmetic inner loop of the execution engine — FWHT butterflies,
 //! complex FFT butterflies (radix-2 [`fft_butterfly`] and the RFFT
 //! engine's fused radix-4 [`fft_butterfly4`]), spectrum multiplies (full
-//! [`cmul`] and the conjugate-aware half-spectrum [`cmul_half`]), and the
-//! elementwise diagonal/sign passes — funnels through this module. At first use the
+//! [`cmul`] and the conjugate-aware half-spectrum [`cmul_half`]), the
+//! elementwise diagonal/sign passes, and the binary lane's sign
+//! quantization + Hamming popcount ([`pack_signs`] / [`hamming`]) —
+//! funnels through this module. At first use the
 //! module probes the CPU once (`is_x86_feature_detected!` on x86-64, NEON
 //! on aarch64) and caches a dispatch [`Level`]; every public kernel then
 //! routes to the widest available implementation.
@@ -300,9 +302,13 @@ pub fn fft_butterfly(
     assert!(twi.len() >= (re_h.len().saturating_sub(1)) * stride + 1 || re_h.is_empty());
     match level() {
         #[cfg(target_arch = "x86_64")]
-        Level::Avx2 => unsafe { x86::fft_butterfly_avx2(re_h, im_h, re_t, im_t, twr, twi, stride, sign) },
+        Level::Avx2 => unsafe {
+            x86::fft_butterfly_avx2(re_h, im_h, re_t, im_t, twr, twi, stride, sign)
+        },
         #[cfg(target_arch = "x86_64")]
-        Level::Sse2 => unsafe { x86::fft_butterfly_sse2(re_h, im_h, re_t, im_t, twr, twi, stride, sign) },
+        Level::Sse2 => unsafe {
+            x86::fft_butterfly_sse2(re_h, im_h, re_t, im_t, twr, twi, stride, sign)
+        },
         _ => scalar::fft_butterfly(re_h, im_h, re_t, im_t, twr, twi, stride, sign),
     }
 }
@@ -351,7 +357,9 @@ pub fn fft_butterfly4(
         // sub-vector blocks (the len=4/len=8 levels): the SIMD bodies
         // would run their scalar tail for every lane anyway, so skip the
         // vector entry entirely (identical results by construction).
-        return scalar::fft_butterfly4(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign);
+        return scalar::fft_butterfly4(
+            re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign,
+        );
     }
     match level() {
         #[cfg(target_arch = "x86_64")]
@@ -443,6 +451,45 @@ pub fn rfft_merge(
     scalar::rfft_merge(xr, xi, zre, zim, twr, twi);
 }
 
+/// Pack the IEEE sign bits of `src` into `dst` words: bit `i % 64` of
+/// `dst[i / 64]` is set iff `src[i]` is sign-negative — the same "bit set =
+/// negative" convention as [`crate::transform::SignDiag`], and exactly
+/// `f32::is_sign_negative` for every input including `-0.0` and negative
+/// NaNs. Trailing bits of the last word are cleared. This is the
+/// sign-quantization kernel of the binary embedding lane
+/// (`binary::BinaryEmbedding`): on x86 a `movemask` sweep extracts 8 (AVX2)
+/// or 4 (SSE2) sign bits per instruction, which reads precisely the sign
+/// bit, so every tier is bit-identical by construction.
+#[inline]
+pub fn pack_signs(src: &[f32], dst: &mut [u64]) {
+    assert_eq!(dst.len(), src.len().div_ceil(64));
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::pack_signs_avx2(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { x86::pack_signs_sse2(src, dst) },
+        _ => scalar::pack_signs(src, dst),
+    }
+}
+
+/// Hamming distance between two packed bit vectors of equal word length:
+/// `popcount(a ^ b)` summed over the words. The distance kernel of the
+/// binary serving lane (packed codes from [`pack_signs`]). AVX2 runs the
+/// nibble-LUT popcount (`vpshufb` + `vpsadbw`, 256 bits per step); the
+/// SSE2 tier dispatches to the scalar `count_ones` loop (no byte shuffle
+/// below SSSE3 — the same "identical-result fallback" rule the NEON f64
+/// kernels use). Integer arithmetic, so every tier is trivially
+/// bit-identical.
+#[inline]
+pub fn hamming(a: &[u64], b: &[u64]) -> u64 {
+    assert_eq!(a.len(), b.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { x86::hamming_avx2(a, b) },
+        _ => scalar::hamming(a, b),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Scalar reference path (always compiled; the TS_NO_SIMD=1 lane and the
 // per-op bit-identity oracle for the unit tests below)
@@ -494,6 +541,20 @@ pub(crate) mod scalar {
         for (i, (v, o)) in src.iter().zip(dst.iter_mut()).enumerate() {
             *o = (f32::from_bits(v.to_bits() ^ sign_mask(signs, i)) * s) as f64;
         }
+    }
+
+    pub fn pack_signs(src: &[f32], dst: &mut [u64]) {
+        dst.fill(0);
+        for (i, v) in src.iter().enumerate() {
+            dst[i >> 6] |= ((v.to_bits() >> 31) as u64) << (i & 63);
+        }
+    }
+
+    pub fn hamming(a: &[u64], b: &[u64]) -> u64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x ^ y).count_ones() as u64)
+            .sum()
     }
 
     pub fn cmul(re: &mut [f64], im: &mut [f64], kr: &[f64], ki: &[f64]) {
@@ -903,7 +964,8 @@ mod x86 {
             let word = signs[i >> 6];
             let mut k = 0;
             while k < 8 {
-                xor_byte_mask_avx2(x.as_mut_ptr().add(i + 8 * k), ((word >> (8 * k)) & 0xFF) as usize);
+                let byte = ((word >> (8 * k)) & 0xFF) as usize;
+                xor_byte_mask_avx2(x.as_mut_ptr().add(i + 8 * k), byte);
                 k += 1;
             }
             i += 64;
@@ -987,7 +1049,12 @@ mod x86 {
     }
 
     #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn promote_signs_scaled_avx2(src: &[f32], signs: &[u64], s: f32, dst: &mut [f64]) {
+    pub(super) unsafe fn promote_signs_scaled_avx2(
+        src: &[f32],
+        signs: &[u64],
+        s: f32,
+        dst: &mut [f64],
+    ) {
         let n = src.len();
         let sv = _mm_set1_ps(s);
         let mut i = 0;
@@ -1002,7 +1069,12 @@ mod x86 {
     }
 
     #[target_feature(enable = "sse2")]
-    pub(super) unsafe fn promote_signs_scaled_sse2(src: &[f32], signs: &[u64], s: f32, dst: &mut [f64]) {
+    pub(super) unsafe fn promote_signs_scaled_sse2(
+        src: &[f32],
+        signs: &[u64],
+        s: f32,
+        dst: &mut [f64],
+    ) {
         let n = src.len();
         let sv = _mm_set1_ps(s);
         let mut i = 0;
@@ -1030,6 +1102,73 @@ mod x86 {
             Some(w) => [w >> (i & 63)],
             None => [0],
         }
+    }
+
+    // --- sign quantization + Hamming popcount (the binary embedding lane) ---
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn pack_signs_avx2(src: &[f32], dst: &mut [u64]) {
+        let full_words = src.len() / 64;
+        for (w, slot) in dst[..full_words].iter_mut().enumerate() {
+            // eight movemasks assemble one sign word; movemask reads the
+            // IEEE sign bit, matching is_sign_negative for every value
+            let mut word = 0u64;
+            let mut k = 0;
+            while k < 64 {
+                let v = _mm256_loadu_ps(src.as_ptr().add(w * 64 + k));
+                word |= (_mm256_movemask_ps(v) as u32 as u64) << k;
+                k += 8;
+            }
+            *slot = word;
+        }
+        scalar::pack_signs(&src[full_words * 64..], &mut dst[full_words..]);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn pack_signs_sse2(src: &[f32], dst: &mut [u64]) {
+        let full_words = src.len() / 64;
+        for (w, slot) in dst[..full_words].iter_mut().enumerate() {
+            let mut word = 0u64;
+            let mut k = 0;
+            while k < 64 {
+                let v = _mm_loadu_ps(src.as_ptr().add(w * 64 + k));
+                word |= (_mm_movemask_ps(v) as u32 as u64) << k;
+                k += 4;
+            }
+            *slot = word;
+        }
+        scalar::pack_signs(&src[full_words * 64..], &mut dst[full_words..]);
+    }
+
+    /// Nibble-LUT popcount over the XOR stream: `vpshufb` looks up per-byte
+    /// bit counts for both nibbles, `vpsadbw` folds the 32 byte counts into
+    /// four u64 lanes. Exact integer arithmetic — identical to the scalar
+    /// `count_ones` loop by construction.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn hamming_avx2(a: &[u64], b: &[u64]) -> u64 {
+        let n = a.len();
+        #[rustfmt::skip]
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let mut acc = zero;
+        let mut i = 0;
+        while i + 4 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            let x = _mm256_xor_si256(va, vb);
+            let lo = _mm256_and_si256(x, low_mask);
+            let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(x), low_mask);
+            let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+            i += 4;
+        }
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        lanes.iter().sum::<u64>() + scalar::hamming(&a[i..], &b[i..])
     }
 
     // --- f64 complex kernels ---
@@ -1356,7 +1495,9 @@ mod x86 {
             j += 4;
         }
         if j < l {
-            scalar::fft_butterfly4_from(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, j);
+            scalar::fft_butterfly4_from(
+                re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, j,
+            );
         }
     }
 
@@ -1419,7 +1560,9 @@ mod x86 {
             j += 2;
         }
         if j < l {
-            scalar::fft_butterfly4_from(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, j);
+            scalar::fft_butterfly4_from(
+                re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, j,
+            );
         }
     }
 
@@ -1686,7 +1829,9 @@ mod tests {
                     }
                     {
                         let [r0, i0, r1, i1, r2, i2, r3, i3] = b.each_mut();
-                        scalar::fft_butterfly4(r0, i0, r1, i1, r2, i2, r3, i3, &twr, &twi, stride, sign);
+                        scalar::fft_butterfly4(
+                            r0, i0, r1, i1, r2, i2, r3, i3, &twr, &twi, stride, sign,
+                        );
                     }
                     assert_eq!(a, b, "fft_butterfly4 l={l} stride={stride} sign={sign}");
                 }
@@ -1738,6 +1883,42 @@ mod tests {
                 assert!((zre[k] - zre0[k]).abs() < 1e-12, "h={h} k={k}");
                 assert!((zim[k] - zim0[k]).abs() < 1e-12, "h={h} k={k}");
             }
+        }
+    }
+
+    #[test]
+    fn dispatched_pack_signs_and_hamming_match_scalar() {
+        let mut rng = Rng::new(63);
+        for n in [0usize, 1, 5, 8, 31, 63, 64, 65, 128, 200, 513] {
+            let mut src = rng.gaussian_vec(n);
+            if n > 2 {
+                // sign-bit corner cases: movemask and to_bits()>>31 must
+                // agree on negative zero and NaN payloads too
+                src[0] = -0.0;
+                src[1] = f32::NAN;
+                src[2] = f32::from_bits(0xFFC0_0000); // negative NaN
+            }
+            let words = n.div_ceil(64);
+            let mut d1 = vec![u64::MAX; words]; // dirty: kernels must clear
+            let mut d2 = vec![u64::MAX; words];
+            pack_signs(&src, &mut d1);
+            scalar::pack_signs(&src, &mut d2);
+            assert_eq!(d1, d2, "pack_signs n={n}");
+            for (i, v) in src.iter().enumerate() {
+                let bit = (d1[i / 64] >> (i % 64)) & 1 == 1;
+                assert_eq!(bit, v.is_sign_negative(), "n={n} i={i}");
+            }
+            // bits beyond n stay clear (stable bucket keys / distances)
+            if words > 0 && n % 64 != 0 {
+                assert_eq!(d1[words - 1] >> (n % 64), 0, "trailing bits n={n}");
+            }
+
+            let a = rand_signs(words, &mut rng);
+            let b = rand_signs(words, &mut rng);
+            let naive: u64 = a.iter().zip(&b).map(|(x, y)| (x ^ y).count_ones() as u64).sum();
+            assert_eq!(hamming(&a, &b), naive, "hamming words={words}");
+            assert_eq!(scalar::hamming(&a, &b), naive);
+            assert_eq!(hamming(&a, &a), 0);
         }
     }
 

@@ -1,0 +1,271 @@
+//! Hamming-distance LSH over packed binary embeddings.
+//!
+//! The binary counterpart of the cross-polytope [`super::index::LshIndex`]:
+//! instead of bucketing on the argmax of a float projection, every table
+//! sign-quantizes a short structured projection
+//! ([`crate::binary::BinaryEmbedding`]) and buckets on the **packed
+//! prefix** — a `prefix_bits`-bit code is one `u64` word, used as the
+//! bucket key directly, no float ever stored. Candidates from matching
+//! buckets are re-ranked by popcount Hamming distance against a full-width
+//! code per point ([`crate::linalg::simd::hamming`]), so the entire index
+//! — parameters, stored points and query arithmetic — is bit matrices and
+//! XOR/popcount.
+//!
+//! Per-bit collision behaves like SimHash: two unit vectors at angle `θ`
+//! disagree on each code bit with probability exactly `θ/π`, so expected
+//! normalized Hamming distance is `θ/π` and a `b`-bit prefix bucket
+//! collides with probability `(1 - θ/π)^b` (independent projections) —
+//! pinned against the angular-distance oracle in
+//! `tests/binary_embedding.rs`.
+
+use crate::binary::{BinaryEmbedding, BitMatrix};
+use crate::linalg::Workspace;
+use crate::runtime::WorkerPool;
+use crate::transform::{make, Family};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// One table: a `prefix_bits`-bit binary embedding whose single packed
+/// word is the bucket key.
+struct Table {
+    embed: BinaryEmbedding,
+    buckets: HashMap<u64, Vec<usize>>,
+}
+
+impl Table {
+    fn key(&self, q: &[f32], ws: &mut Workspace) -> u64 {
+        let mut code = [0u64; 1];
+        self.embed.embed_into(q, &mut code, ws);
+        code[0]
+    }
+}
+
+/// Multi-table Hamming LSH index over packed codes.
+pub struct HammingLsh {
+    tables: Vec<Table>,
+    /// Full-width re-ranking embedding (one `code_bits`-bit code per point).
+    coder: BinaryEmbedding,
+    codes: BitMatrix,
+}
+
+impl HammingLsh {
+    /// Build over `points` (dims `<= n`, zero-padded): `l` tables bucketing
+    /// on `prefix_bits`-bit packed prefixes (`1..=64`), re-ranking against
+    /// `n`-bit full codes. All projections run as bulk batches over the
+    /// persistent worker pool.
+    pub fn build(
+        points: &[Vec<f32>],
+        family: Family,
+        n: usize,
+        l: usize,
+        prefix_bits: usize,
+        seed: u64,
+    ) -> HammingLsh {
+        assert!(
+            (1..=64).contains(&prefix_bits),
+            "prefix_bits must be in 1..=64 (one packed word), got {prefix_bits}"
+        );
+        let mut master = Rng::new(seed);
+        let coder = BinaryEmbedding::with_family(family, n, &mut master.fork());
+        let mut tables: Vec<Table> = (0..l)
+            .map(|_| Table {
+                // stacked/truncated shape: exactly prefix_bits code bits
+                embed: BinaryEmbedding::new(make(family, prefix_bits, n, n, &mut master.fork())),
+                buckets: HashMap::new(),
+            })
+            .collect();
+
+        let rows = points.len();
+        let pool = WorkerPool::global();
+        let flat = crate::linalg::dense::flatten_padded(points, n);
+        let mut codes = BitMatrix::zeros(rows, n);
+        coder.embed_batch_into(&flat, &mut codes, pool);
+        let mut prefix = BitMatrix::zeros(rows, prefix_bits);
+        for tb in tables.iter_mut() {
+            tb.embed.embed_batch_into(&flat, &mut prefix, pool);
+            for i in 0..rows {
+                tb.buckets.entry(prefix.row(i)[0]).or_default().push(i);
+            }
+        }
+        HammingLsh {
+            tables,
+            coder,
+            codes,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Width of the re-ranking codes in bits.
+    pub fn code_bits(&self) -> usize {
+        self.codes.bits()
+    }
+
+    /// Total packed bytes the index's point payload occupies (codes only —
+    /// the mobile-footprint number; no float points are retained).
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.storage_bytes()
+    }
+
+    /// Candidate set: union of the query's prefix buckets, deduplicated
+    /// (sorted ascending). Cost scales with the candidate count, not the
+    /// index size — no O(N) seen-bitmap sweep per query.
+    pub fn candidates(&self, q: &[f32]) -> Vec<usize> {
+        self.candidates_with(q, &mut Workspace::new())
+    }
+
+    /// [`HammingLsh::candidates`] with caller-owned scratch — one
+    /// workspace serves every table's prefix embed.
+    fn candidates_with(&self, q: &[f32], ws: &mut Workspace) -> Vec<usize> {
+        let mut out = Vec::new();
+        for tb in &self.tables {
+            if let Some(ids) = tb.buckets.get(&tb.key(q, ws)) {
+                out.extend_from_slice(ids);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Approximate k-NN: candidates re-ranked by popcount Hamming distance
+    /// between full codes. Returns `(index, hamming)` pairs, nearest
+    /// first. One workspace threads through the full-code embed and every
+    /// table key.
+    pub fn query(&self, q: &[f32], k: usize) -> Vec<(usize, u64)> {
+        let mut ws = Workspace::new();
+        let mut qcode = vec![0u64; self.coder.words_per_code()];
+        self.coder.embed_into(q, &mut qcode, &mut ws);
+        let mut cands: Vec<(usize, u64)> = self
+            .candidates_with(q, &mut ws)
+            .into_iter()
+            .map(|i| (i, self.codes.hamming_to(i, &qcode)))
+            .collect();
+        cands.sort_by_key(|(i, d)| (*d, *i));
+        cands.truncate(k);
+        cands
+    }
+
+    /// Exact k-NN in code space by brute-force popcount scan (recall
+    /// baseline — still no float arithmetic).
+    pub fn brute_force(&self, q: &[f32], k: usize) -> Vec<(usize, u64)> {
+        let mut ws = Workspace::new();
+        let mut qcode = vec![0u64; self.coder.words_per_code()];
+        self.coder.embed_into(q, &mut qcode, &mut ws);
+        let mut all: Vec<(usize, u64)> = (0..self.len())
+            .map(|i| (i, self.codes.hamming_to(i, &qcode)))
+            .collect();
+        all.sort_by_key(|(i, d)| (*d, *i));
+        all.truncate(k);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::collision::pair_at_distance;
+
+    fn cluster_dataset(n: usize, clusters: usize, per: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let mut pts = Vec::new();
+        for _ in 0..clusters {
+            let center = rng.unit_vec(n);
+            for _ in 0..per {
+                let (_, nearby) = pair_at_distance(n, 0.25, &mut rng);
+                let mut p: Vec<f32> = center
+                    .iter()
+                    .zip(&nearby)
+                    .map(|(c, q)| 0.9 * c + 0.1 * q)
+                    .collect();
+                crate::linalg::vecops::normalize(&mut p);
+                pts.push(p);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn finds_exact_duplicates_at_distance_zero() {
+        let n = 64;
+        let pts = cluster_dataset(n, 4, 20, 1);
+        let idx = HammingLsh::build(&pts, Family::Hd3, n, 8, 12, 99);
+        assert_eq!(idx.len(), 80);
+        assert_eq!(idx.code_bits(), n);
+        for i in [0usize, 17, 40, 79] {
+            let res = idx.query(&pts[i], 1);
+            assert!(!res.is_empty(), "point {i} not found in any bucket");
+            assert_eq!(res[0].0, i);
+            assert_eq!(res[0].1, 0, "self-query must be at Hamming distance 0");
+        }
+    }
+
+    #[test]
+    fn recall_reasonable_on_clustered_data() {
+        let n = 64;
+        let pts = cluster_dataset(n, 5, 30, 2);
+        let idx = HammingLsh::build(&pts, Family::Hd3, n, 10, 10, 7);
+        let mut rng = Rng::new(3);
+        let mut hits = 0;
+        let trials = 30;
+        for _ in 0..trials {
+            let qi = rng.below(pts.len() as u64) as usize;
+            let mut q = pts[qi].clone();
+            q[0] += 0.05;
+            crate::linalg::vecops::normalize(&mut q);
+            // oracle and query both rank in code space — this isolates the
+            // bucketing loss from the quantization loss
+            let truth = idx.brute_force(&q, 1)[0].0;
+            if idx.query(&q, 1).first().map(|r| r.0) == Some(truth) {
+                hits += 1;
+            }
+        }
+        let recall = hits as f64 / trials as f64;
+        assert!(recall > 0.6, "recall@1 = {recall}");
+    }
+
+    #[test]
+    fn candidates_dedup_and_in_range() {
+        let n = 32;
+        let pts = cluster_dataset(n, 3, 10, 4);
+        let idx = HammingLsh::build(&pts, Family::Hdg, n, 6, 8, 8);
+        let c = idx.candidates(&pts[0]);
+        let mut sorted = c.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), c.len(), "candidates must be deduplicated");
+        assert!(c.iter().all(|i| *i < pts.len()));
+    }
+
+    #[test]
+    fn storage_is_codes_only() {
+        let n = 128;
+        let pts = cluster_dataset(n, 2, 16, 5);
+        let idx = HammingLsh::build(&pts, Family::Hd3, n, 4, 16, 6);
+        // 32 points × 128 bits = 512 bytes of payload — 1/32 of the f32
+        // point set the cross-polytope index retains
+        assert_eq!(idx.storage_bytes(), 32 * n / 8);
+    }
+
+    #[test]
+    fn empty_index() {
+        let idx = HammingLsh::build(&[], Family::Hd3, 16, 2, 8, 1);
+        assert!(idx.is_empty());
+        assert_eq!(idx.len(), 0);
+        assert!(idx.query(&[0.0; 16], 3).is_empty());
+    }
+
+    #[test]
+    fn prefix_bits_bounds_enforced() {
+        let r = std::panic::catch_unwind(|| {
+            HammingLsh::build(&[], Family::Hd3, 16, 1, 65, 1);
+        });
+        assert!(r.is_err(), "prefix_bits > 64 must be rejected");
+    }
+}

@@ -66,11 +66,7 @@ impl LshIndex {
         // Key combination matches Table::key exactly (FNV over sub-hashes).
         let rows = points.len();
         let pool = WorkerPool::global();
-        let mut flat = vec![0.0f32; rows * n];
-        for (p, row) in points.iter().zip(flat.chunks_exact_mut(n)) {
-            assert!(p.len() <= n, "point dim {} exceeds hash dim {n}", p.len());
-            row[..p.len()].copy_from_slice(p);
-        }
+        let flat = crate::linalg::dense::flatten_padded(points, n);
         let mut codes = vec![0usize; rows];
         for tb in tables.iter_mut() {
             let mut keys = vec![FNV_OFFSET; rows];

@@ -7,9 +7,15 @@
 //! curve (Theorem 5.3 bounds the total-variation gap over convex sets) while
 //! hashing in `O(n log n)`.
 
+//! A binary sibling lives alongside: [`hamming::HammingLsh`] buckets on
+//! packed sign-code prefixes and re-ranks by popcount, serving the same
+//! queries from 1-bit codes (see [`crate::binary`]).
+
 pub mod collision;
 pub mod crosspolytope;
+pub mod hamming;
 pub mod index;
 
 pub use crosspolytope::CrossPolytopeHash;
+pub use hamming::HammingLsh;
 pub use index::LshIndex;

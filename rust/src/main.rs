@@ -54,10 +54,12 @@ COMMANDS:
   info            list artifacts in --artifacts (default: artifacts/)
   verify          execute every artifact against its Python golden vectors
   serve           start coordinator; drive --requests N at --rate req/s
-                  (--backend native|pjrt, --n 256, --op transform|rff|crosspolytope,
+                  (--backend native|pjrt, --n 256,
+                   --op transform|rff|crosspolytope|binary_embed,
                    --max-batch 64, --queue 1024)
   transform       one-shot transform (--family hd3|hdg|circulant|toeplitz|
-                  hankel|skew|dense, --n 256, --seed 42)
+                  hankel|skew|dense, --n 256, --seed 42; --binary adds the
+                  packed sign-quantized embedding + footprint accounting)
   metrics-demo    short native-backend burst, dumps metrics JSON
 "
     );
@@ -205,6 +207,30 @@ fn cmd_transform(opts: &HashMap<String, String>) -> i32 {
         norm / (n as f64).sqrt()
     );
     println!("y[..8]   : {:?}", &y[..8.min(n)]);
+    if opts.contains_key("binary") {
+        // the bit-matrix serving story: sign-quantize the same transform's
+        // output and account for the end-to-end bit footprint
+        let mut rng2 = Rng::new(seed);
+        let emb = triplespin::binary::BinaryEmbedding::with_family(family, n, &mut rng2);
+        let code = emb.embed(&x);
+        for (i, yi) in y.iter().enumerate() {
+            assert_eq!(code.get(i), yi.is_sign_negative(), "embed contract bit {i}");
+        }
+        println!("binary   : {} code bits ({} B packed words)", code.bits(), code.storage_bytes());
+        println!(
+            "output   : {} bits/embedding vs {} bits f32 (32x smaller responses)",
+            emb.output_bits(),
+            32 * n
+        );
+        println!(
+            "code[..4]: {:?}",
+            code.words()
+                .iter()
+                .take(4)
+                .map(|w| format!("{w:016x}"))
+                .collect::<Vec<_>>()
+        );
+    }
     0
 }
 
@@ -249,14 +275,16 @@ fn build_coordinator(
 
 fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
     let n: usize = opt(opts, "n", 256);
+    // binary_embed is native-only: the PJRT artifact set has no packed-bit
+    // op, so requests on that lane would all fail at runtime
+    let is_pjrt = opts.get("backend").map(String::as_str) == Some("pjrt");
     // --tcp <addr>: serve the newline-JSON protocol instead of the
     // built-in load driver. E.g. `triplespin serve --tcp 127.0.0.1:7878`.
     if let Some(addr) = opts.get("tcp") {
-        let lanes = vec![
-            (Op::Transform, n),
-            (Op::Rff, n),
-            (Op::CrossPolytope, n),
-        ];
+        let mut lanes = vec![(Op::Transform, n), (Op::Rff, n), (Op::CrossPolytope, n)];
+        if !is_pjrt {
+            lanes.push((Op::BinaryEmbed, n));
+        }
         let (c, _svc) = match build_coordinator(opts, lanes) {
             Ok(v) => v,
             Err(e) => {
@@ -272,9 +300,15 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
                 return 1;
             }
         };
+        let ops = if is_pjrt {
+            "transform/rff/crosspolytope"
+        } else {
+            "transform/rff/crosspolytope/binary_embed"
+        };
         println!(
-            "listening on {} (ops: transform/rff/crosspolytope, n={n});\n\
+            "listening on {} (ops: {ops}, n={n});\n\
              protocol: one JSON per line: {{\"id\":1,\"op\":\"transform\",\"vector\":[..]}}\n\
+             (binary_embed results are packed sign words as 16-digit hex strings)\n\
              Ctrl-C to stop.",
             server.addr()
         );
@@ -292,6 +326,10 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         eprintln!("unknown op '{op_s}'");
         return 2;
     };
+    if is_pjrt && op == Op::BinaryEmbed {
+        eprintln!("binary_embed is native-only (no PJRT artifact); use --backend native");
+        return 2;
+    }
     let (c, svc) = match build_coordinator(opts, vec![(op, n)]) {
         Ok(v) => v,
         Err(e) => {

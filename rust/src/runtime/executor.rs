@@ -17,11 +17,14 @@ use std::collections::HashMap;
 use std::fmt;
 use std::path::Path;
 
-/// Execution output: f32 tensor or i32 tensor (crosspolytope ids).
+/// Execution output: f32 tensor, i32 tensor (crosspolytope ids), or
+/// packed bit words (binary embeddings — `⌈n/64⌉` `u64` words per row,
+/// bit `i % 64` of word `i / 64` = projection coordinate `i` negative).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Output {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    Bits(Vec<u64>),
 }
 
 impl Output {
@@ -35,6 +38,13 @@ impl Output {
     pub fn as_i32(&self) -> Option<&[i32]> {
         match self {
             Output::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bits(&self) -> Option<&[u64]> {
+        match self {
+            Output::Bits(v) => Some(v),
             _ => None,
         }
     }
@@ -186,6 +196,9 @@ impl Executor {
         let got_f64: Vec<f64> = match &got {
             Output::F32(v) => v.iter().map(|x| *x as f64).collect(),
             Output::I32(v) => v.iter().map(|x| *x as f64).collect(),
+            // no compiled artifact emits packed words today; compare bits
+            // as integers if one ever does
+            Output::Bits(v) => v.iter().map(|x| *x as f64).collect(),
         };
         if got_f64.len() != want.len() {
             return Err(ExecError(format!(

@@ -13,6 +13,10 @@ pub enum Op {
     Rff,
     /// Cross-polytope hash ids — (b, n) f32 -> (b,) i32.
     CrossPolytope,
+    /// Sign-quantized packed embedding `sign(√n·HD3 HD2 HD1 x)` —
+    /// (b, n) f32 -> (b, ⌈n/64⌉) u64 words (native backend only; 32×
+    /// smaller responses than the f32 transform lane).
+    BinaryEmbed,
 }
 
 impl Op {
@@ -21,6 +25,7 @@ impl Op {
             "transform" => Op::Transform,
             "rff" => Op::Rff,
             "crosspolytope" => Op::CrossPolytope,
+            "binary_embed" => Op::BinaryEmbed,
             _ => return None,
         })
     }
@@ -30,6 +35,7 @@ impl Op {
             Op::Transform => "transform",
             Op::Rff => "rff",
             Op::CrossPolytope => "crosspolytope",
+            Op::BinaryEmbed => "binary_embed",
         }
     }
 }

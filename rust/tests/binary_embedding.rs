@@ -1,0 +1,174 @@
+//! Statistical contract of the binary embedding subsystem.
+//!
+//! Sign codes of random projections obey the SimHash identity: two unit
+//! vectors at angle `θ` disagree on any one code bit with probability
+//! exactly `θ/π` (for a Gaussian projection; the TripleSpin families match
+//! it up to the paper's distributional guarantees). This file pins
+//!
+//! * the expected normalized Hamming distance against the angular-distance
+//!   oracle `θ/π`, for the dense baseline and the fully discrete `hd3`;
+//! * the Hamming LSH bucket-collision probability against the independent
+//!   per-bit model `(1 - θ/π)^prefix_bits`;
+//! * the 1-bit Gram estimate's expectation against the exact angular
+//!   kernel `1 - 2θ/π`.
+
+use triplespin::binary::{angular_estimate, BinaryEmbedding};
+use triplespin::kernels::exact;
+use triplespin::lsh::collision::pair_at_distance;
+use triplespin::lsh::HammingLsh;
+use triplespin::transform::Family;
+use triplespin::util::rng::Rng;
+
+/// Angle between two unit vectors at Euclidean distance `d` on the sphere.
+fn theta(dist: f64) -> f64 {
+    (1.0 - dist * dist / 2.0).clamp(-1.0, 1.0).acos()
+}
+
+/// Mean normalized Hamming distance between codes of pairs at `dist`,
+/// averaged over `draws` independent embeddings × `pairs` pairs each.
+fn mean_bit_flip_rate(family: Family, n: usize, dist: f64, draws: u64, pairs: usize) -> f64 {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for d in 0..draws {
+        let emb = BinaryEmbedding::with_family(family, n, &mut Rng::new(500 + d));
+        let mut rng = Rng::new(9_000 + d * 31 + (dist * 1e3) as u64);
+        for _ in 0..pairs {
+            let (x, y) = pair_at_distance(n, dist, &mut rng);
+            let h = emb.embed(&x).hamming(&emb.embed(&y));
+            total += h as f64 / n as f64;
+            count += 1;
+        }
+    }
+    total / count as f64
+}
+
+#[test]
+fn bit_flip_rate_matches_angular_oracle_dense() {
+    // Gaussian projection: P[bit differs] = θ/π exactly — tight pin.
+    let n = 256;
+    for dist in [0.3f64, 0.7, 1.0, 1.4] {
+        let want = theta(dist) / std::f64::consts::PI;
+        let got = mean_bit_flip_rate(Family::Dense, n, dist, 6, 12);
+        // ~18k bit samples per point: 4σ of a Bernoulli mean is well
+        // under 0.02 at these rates
+        assert!(
+            (got - want).abs() < 0.02,
+            "dense dist={dist}: flip rate {got} vs θ/π = {want}"
+        );
+    }
+}
+
+#[test]
+fn bit_flip_rate_matches_angular_oracle_hd3() {
+    // The paper's claim: the discrete chain reproduces the Gaussian
+    // collision curve (Theorem 5.3 bounds the gap). Slightly looser pin —
+    // hd3 code bits within one draw are correlated, so the variance of the
+    // mean is higher than the independent-bit model.
+    let n = 256;
+    for dist in [0.3f64, 0.7, 1.0, 1.4] {
+        let want = theta(dist) / std::f64::consts::PI;
+        let got = mean_bit_flip_rate(Family::Hd3, n, dist, 8, 10);
+        assert!(
+            (got - want).abs() < 0.035,
+            "hd3 dist={dist}: flip rate {got} vs θ/π = {want}"
+        );
+    }
+}
+
+#[test]
+fn flip_rate_monotone_in_distance() {
+    // closer pairs must collide more — the LSH property itself
+    let n = 128;
+    let rates: Vec<f64> = [0.2f64, 0.6, 1.0, 1.4, 1.8]
+        .iter()
+        .map(|&d| mean_bit_flip_rate(Family::Hd3, n, d, 4, 10))
+        .collect();
+    for w in rates.windows(2) {
+        assert!(w[0] < w[1], "flip rate must increase with distance: {rates:?}");
+    }
+}
+
+#[test]
+fn prefix_bucket_collision_matches_independent_bit_model() {
+    // A HammingLsh table's bucket key is a b-bit packed prefix code:
+    // under the oracle, two points at angle θ share a bucket with
+    // probability (1 - θ/π)^b. Pin the empirical collision rate of the
+    // full index machinery (build + candidates) against that closed form.
+    let n = 64;
+    let b = 8;
+    for dist in [0.4f64, 0.9] {
+        let p_bit = 1.0 - theta(dist) / std::f64::consts::PI;
+        let want = p_bit.powi(b as i32);
+        let mut collisions = 0usize;
+        let mut total = 0usize;
+        for trial in 0..60u64 {
+            let mut rng = Rng::new(3_000 + trial);
+            let (x, y) = pair_at_distance(n, dist, &mut rng);
+            // index holding only x, one table: y colliding == candidate hit
+            let idx = HammingLsh::build(&[x], Family::Dense, n, 1, b, 40 + trial);
+            if !idx.candidates(&y).is_empty() {
+                collisions += 1;
+            }
+            total += 1;
+        }
+        let got = collisions as f64 / total as f64;
+        // 60 Bernoulli trials: 3σ ≈ 0.19 at p=0.5; keep a generous band
+        // but tight enough to catch a wrong exponent or broken bucketing
+        assert!(
+            (got - want).abs() < 0.2,
+            "dist={dist}: bucket collision {got} vs (1-θ/π)^{b} = {want}"
+        );
+    }
+    // and the two distances must order correctly
+    let near = {
+        let mut c = 0;
+        for t in 0..40u64 {
+            let mut rng = Rng::new(7_000 + t);
+            let (x, y) = pair_at_distance(n, 0.3, &mut rng);
+            let idx = HammingLsh::build(&[x], Family::Dense, n, 1, b, 80 + t);
+            c += usize::from(!idx.candidates(&y).is_empty());
+        }
+        c
+    };
+    let far = {
+        let mut c = 0;
+        for t in 0..40u64 {
+            let mut rng = Rng::new(7_000 + t);
+            let (x, y) = pair_at_distance(n, 1.6, &mut rng);
+            let idx = HammingLsh::build(&[x], Family::Dense, n, 1, b, 80 + t);
+            c += usize::from(!idx.candidates(&y).is_empty());
+        }
+        c
+    };
+    assert!(near > far, "near pairs must collide more: near={near} far={far}");
+}
+
+#[test]
+fn one_bit_kernel_estimate_is_unbiased_for_angular() {
+    // E[1 - 2·d_H/k] = 1 - 2θ/π = the exact angular kernel.
+    let n = 64;
+    let k_bits = 256;
+    let mut rng = Rng::new(11);
+    let (x, y) = pair_at_distance(n, 0.8, &mut rng);
+    let exact_val = exact::angular(&x, &y);
+    for family in [Family::Dense, Family::Hd3] {
+        let mut est = 0.0;
+        let draws = 12u64;
+        for d in 0..draws {
+            let emb = BinaryEmbedding::new(triplespin::transform::make(
+                family,
+                k_bits,
+                n,
+                n,
+                &mut Rng::new(600 + d),
+            ));
+            let h = emb.embed(&x).hamming(&emb.embed(&y));
+            est += angular_estimate(h, k_bits);
+        }
+        est /= draws as f64;
+        assert!(
+            (est - exact_val).abs() < 0.06,
+            "{family:?}: 1-bit estimate {est} vs exact angular {exact_val}"
+        );
+    }
+}

@@ -40,6 +40,34 @@ fn transform_prints_stats() {
 }
 
 #[test]
+fn transform_binary_prints_packed_footprint() {
+    let out = bin()
+        .args(["transform", "--family", "hd3", "--n", "128", "--seed", "7", "--binary"])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("128 code bits"));
+    assert!(text.contains("32x smaller responses"));
+    assert!(text.contains("code[..4]"));
+}
+
+#[test]
+fn serve_binary_embed_op_smoke() {
+    let out = bin()
+        .args([
+            "serve", "--requests", "50", "--n", "64", "--backend", "native", "--op",
+            "binary_embed",
+        ])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("done: 50 requests"));
+    assert!(text.contains("binary_embed_n64"));
+}
+
+#[test]
 fn transform_rejects_bad_family_and_dim() {
     let out = bin()
         .args(["transform", "--family", "nope"])

@@ -9,12 +9,16 @@
 //! so AVX2-only CI runners still cover the SSE2 kernels) and under the
 //! forced scalar level, and the outputs must be identical bytes. The
 //! packed `SignDiag` diagonals are additionally checked against the
-//! historical dense f32-diagonal reference.
+//! historical dense f32-diagonal reference, and the binary lane's
+//! sign-quantized `binary::embed` codes are pinned against the naive
+//! `sign(dense apply)` oracle at every tier (with the Hamming popcount
+//! kernel cross-checked against `count_ones`).
 //!
 //! `simd::force` mutates process-global dispatch state, so everything runs
 //! inside one `#[test]` (no intra-process races; the CI `TS_NO_SIMD=1`
 //! lane separately runs the whole suite pinned to scalar).
 
+use triplespin::binary::{BinaryEmbedding, BitMatrix};
 use triplespin::linalg::fft::{self, ConvPlan, FftVariant};
 use triplespin::linalg::simd;
 use triplespin::runtime::WorkerPool;
@@ -85,7 +89,8 @@ fn check_family_equivalence() {
             let stacked = make(fam, n + n / 2 + 1, n, (n / 2).max(1), &mut Rng::new(seed));
             for t in [&square, &stacked] {
                 let x = Rng::new(seed ^ 0xF00D).gaussian_vec(n);
-                let scalar_out = with_level(Some(simd::Level::Scalar), || apply_all(t.as_ref(), &x));
+                let scalar_out =
+                    with_level(Some(simd::Level::Scalar), || apply_all(t.as_ref(), &x));
                 for &level in &levels {
                     let simd_out = with_level(Some(level), || apply_all(t.as_ref(), &x));
                     assert_eq!(
@@ -102,8 +107,9 @@ fn check_family_equivalence() {
                         apply_batch_all(t.as_ref(), &xs, rows, &pool)
                     });
                     for &level in &levels {
-                        let simd_out =
-                            with_level(Some(level), || apply_batch_all(t.as_ref(), &xs, rows, &pool));
+                        let simd_out = with_level(Some(level), || {
+                            apply_batch_all(t.as_ref(), &xs, rows, &pool)
+                        });
                         assert_eq!(
                             simd_out,
                             scalar_out,
@@ -202,6 +208,99 @@ fn check_fft_kernel_equivalence() {
     }
 }
 
+/// Sign-quantization contract: packed `binary::embed` must equal the
+/// naive `sign(dense apply)` oracle bit for bit — for every family, square
+/// and stacked shapes, single and pooled batch paths, at every forcible
+/// SIMD tier (the transform output is tier-bit-identical and `pack_signs`
+/// reads exactly the IEEE sign bit, so the codes must never vary).
+fn check_binary_embed_equivalence() {
+    let mut levels = levels_under_test();
+    levels.push(simd::Level::Scalar);
+    let row_counts = [1usize, 3, 17, 40];
+    let pool = WorkerPool::with_min_work(4, 0); // gate off: force the parallel path
+    for fam in ALL_FAMILIES {
+        for &n in &[32usize, 128] {
+            let seed = 9_000 + n as u64;
+            let square = BinaryEmbedding::new(make_square(fam, n, &mut Rng::new(seed)));
+            let stacked = BinaryEmbedding::new(make(
+                fam,
+                n + n / 2 + 1,
+                n,
+                (n / 2).max(1),
+                &mut Rng::new(seed),
+            ));
+            for emb in [&square, &stacked] {
+                // naive oracle: sign of the allocating dense apply path
+                let x = Rng::new(seed ^ 0xBEEF).gaussian_vec(n);
+                let y = with_level(Some(simd::Level::Scalar), || emb.transform().apply(&x));
+                let mut naive = vec![0u64; emb.words_per_code()];
+                for (i, v) in y.iter().enumerate() {
+                    if v.is_sign_negative() {
+                        naive[i / 64] |= 1 << (i % 64);
+                    }
+                }
+                for &level in &levels {
+                    let code = with_level(Some(level), || emb.embed(&x));
+                    assert_eq!(
+                        code.words(),
+                        &naive[..],
+                        "{fam:?} n={n} k={}: embed differs from sign(dense apply) at {}",
+                        emb.code_bits(),
+                        level.name(),
+                    );
+                }
+                for &rows in &row_counts {
+                    let xs = Rng::new(seed ^ rows as u64).gaussian_vec(rows * n);
+                    let scalar_batch = with_level(Some(simd::Level::Scalar), || {
+                        let mut m = BitMatrix::zeros(rows, emb.code_bits());
+                        emb.embed_batch_into(&xs, &mut m, &pool);
+                        m
+                    });
+                    // batch rows must equal the per-row embed path
+                    for (r, row) in xs.chunks_exact(n).enumerate() {
+                        let single = with_level(Some(simd::Level::Scalar), || emb.embed(row));
+                        assert_eq!(
+                            scalar_batch.row(r),
+                            single.words(),
+                            "{fam:?} n={n} rows={rows} r={r}: batch != per-row"
+                        );
+                    }
+                    for &level in &levels {
+                        let simd_batch = with_level(Some(level), || {
+                            let mut m = BitMatrix::zeros(rows, emb.code_bits());
+                            emb.embed_batch_into(&xs, &mut m, &pool);
+                            m
+                        });
+                        assert_eq!(
+                            simd_batch,
+                            scalar_batch,
+                            "{fam:?} n={n} rows={rows}: embed_batch differs between {} and scalar",
+                            level.name(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The popcount kernel must agree across tiers on the codes the embeddings
+/// actually produce (integer arithmetic — any divergence is a kernel bug).
+fn check_hamming_equivalence() {
+    let mut levels = levels_under_test();
+    levels.push(simd::Level::Scalar);
+    let mut rng = Rng::new(4242);
+    for words in [0usize, 1, 2, 3, 4, 5, 8, 17, 64] {
+        let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        let naive: u64 = a.iter().zip(&b).map(|(x, y)| (x ^ y).count_ones() as u64).sum();
+        for &level in &levels {
+            let got = with_level(Some(level), || simd::hamming(&a, &b));
+            assert_eq!(got, naive, "hamming words={words} level={}", level.name());
+        }
+    }
+}
+
 #[test]
 fn simd_and_scalar_paths_are_byte_identical() {
     println!(
@@ -212,4 +311,6 @@ fn simd_and_scalar_paths_are_byte_identical() {
     check_sign_diag_against_f32_reference();
     check_fft_kernel_equivalence();
     check_family_equivalence();
+    check_binary_embed_equivalence();
+    check_hamming_equivalence();
 }

@@ -1,0 +1,143 @@
+//! Serving smoke: the TCP layer end to end on an ephemeral port.
+//!
+//! CI runs this as a named step (`cargo test --test tcp_serving`): start a
+//! real `TcpServer`, round-trip one `transform` and one `binary_embed`
+//! request over a socket, decode the packed hex words against the float
+//! lane, and force the bounded lane queue over capacity so backpressure
+//! provably surfaces as `ok:false / "lane queue full"` on the wire.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use triplespin::coordinator::{
+    server::hex_to_word, Backend, Config, Coordinator, NativeBackend, TcpServer,
+};
+use triplespin::runtime::{Op, Output};
+use triplespin::util::json::Json;
+
+const N: usize = 64;
+
+fn config(queue_cap: usize, max_wait: Duration) -> Config {
+    Config {
+        lanes: vec![(Op::Transform, N), (Op::BinaryEmbed, N)],
+        max_batch: 1,
+        max_wait,
+        queue_cap,
+        sigma: 1.0,
+        seed: 17,
+    }
+}
+
+fn vector_json() -> String {
+    let vals: Vec<String> = (0..N).map(|i| format!("{}", i as f32 / 8.0 - 4.0)).collect();
+    vals.join(",")
+}
+
+fn request(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, id: u64, op: &str) -> Json {
+    let line = format!("{{\"id\": {id}, \"op\": \"{op}\", \"vector\": [{}]}}\n", vector_json());
+    stream.write_all(line.as_bytes()).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    Json::parse(resp.trim()).unwrap()
+}
+
+#[test]
+fn round_trip_transform_and_binary_embed() {
+    let backend = Arc::new(NativeBackend::new(&[N], 1.0, 17));
+    let c = Arc::new(Coordinator::start(
+        config(64, Duration::from_micros(200)),
+        backend,
+    ));
+    let server = TcpServer::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let t = request(&mut stream, &mut reader, 1, "transform");
+    assert_eq!(t.get("ok"), Some(&Json::Bool(true)), "{t}");
+    let dense = t.get("result").unwrap().as_arr().unwrap();
+    assert_eq!(dense.len(), N);
+
+    let b = request(&mut stream, &mut reader, 2, "binary_embed");
+    assert_eq!(b.get("ok"), Some(&Json::Bool(true)), "{b}");
+    let words = b.get("result").unwrap().as_arr().unwrap();
+    assert_eq!(words.len(), N.div_ceil(64), "one packed word per 64 bits");
+    let word = hex_to_word(words[0].as_str().unwrap()).expect("fixed-width hex");
+    // the hex code must be the sign pattern of the float lane's response
+    for (i, y) in dense.iter().enumerate() {
+        let neg = y.as_f64().unwrap().is_sign_negative();
+        assert_eq!((word >> i) & 1 == 1, neg, "bit {i}");
+    }
+
+    drop(reader);
+    drop(stream);
+    server.shutdown();
+}
+
+/// Backend wrapper that stalls each batch long enough for the test to fill
+/// the lane queue behind it.
+struct SlowBackend {
+    inner: NativeBackend,
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+        std::thread::sleep(self.delay);
+        self.inner.run_batch(op, n, rows, xs)
+    }
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+}
+
+#[test]
+fn backpressure_surfaces_as_ok_false_on_the_wire() {
+    // queue_cap 1 + a 300ms backend: the first request occupies the
+    // backend, the second fills the queue, later arrivals MUST be shed
+    // with ok:false "lane queue full" — the load-shedding contract.
+    let backend = Arc::new(SlowBackend {
+        inner: NativeBackend::new(&[N], 1.0, 17),
+        delay: Duration::from_millis(300),
+    });
+    let c = Arc::new(Coordinator::start(
+        config(1, Duration::from_micros(50)),
+        backend,
+    ));
+    let server = TcpServer::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    let mut joins = Vec::new();
+    for t in 0..6u64 {
+        joins.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let doc = request(&mut stream, &mut reader, t, "binary_embed");
+            match doc.get("ok") {
+                Some(&Json::Bool(true)) => (true, String::new()),
+                _ => (
+                    false,
+                    doc.get("error")
+                        .and_then(|e| e.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                ),
+            }
+        }));
+    }
+    let results: Vec<(bool, String)> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let ok = results.iter().filter(|(s, _)| *s).count();
+    let shed: Vec<&String> = results.iter().filter(|(s, _)| !*s).map(|(_, e)| e).collect();
+    assert!(ok >= 1, "at least one request must be served: {results:?}");
+    assert!(
+        !shed.is_empty(),
+        "6 concurrent requests against a cap-1 queue + 300ms backend must shed load"
+    );
+    for e in &shed {
+        assert_eq!(e.as_str(), "lane queue full", "shed requests must cite backpressure");
+    }
+    server.shutdown();
+}
