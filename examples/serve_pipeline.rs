@@ -75,6 +75,7 @@ fn main() {
         queue_cap: 512,
         sigma,
         seed,
+        ..Config::default()
     };
 
     // --- three-layer path: Pallas/JAX artifacts via PJRT ---

@@ -62,6 +62,7 @@ fn bench_backend(name: &str, make_backend: &dyn Fn() -> Arc<dyn Backend>) {
                 queue_cap: 1024,
                 sigma: 1.0,
                 seed: 42,
+                ..Config::default()
             };
             let c = Coordinator::start(config, make_backend());
             let (rps, p50, p95) = throughput(&c, op);

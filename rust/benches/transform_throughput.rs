@@ -17,8 +17,11 @@
 //! transforms, serial + pooled), a `binary_vs_float` sweep (sign-quantized
 //! packed embedding vs the f32 batch on the same transform, a popcount
 //! Hamming vs f32-dot rerank micro, and the bytes-per-embedding ledger),
-//! and a `diag_micro` entry timing the packed sign-XOR diagonal against
-//! the dense f32 multiply it replaced.
+//! a `diag_micro` entry timing the packed sign-XOR diagonal against
+//! the dense f32 multiply it replaced, and a `serving_fault` sweep timing
+//! the coordinator's terminal error paths (healthy call vs injected
+//! backend error vs injected backend panic through `catch_unwind`) so
+//! error-path latency is measured rather than assumed zero.
 //!
 //! Writes `BENCH_transform_throughput.json` at the repo root to extend the
 //! perf trajectory. Set `TS_FULL=1` for the larger dims / row counts and
@@ -26,8 +29,13 @@
 //!
 //!     cargo bench --bench transform_throughput
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use triplespin::binary::{BinaryEmbedding, BitMatrix};
-use triplespin::coordinator::{Backend, NativeBackend};
+use triplespin::coordinator::{
+    Backend, Config, Coordinator, FaultInjectingBackend, FaultPlan, NativeBackend,
+};
 use triplespin::linalg::fft;
 use triplespin::linalg::simd;
 use triplespin::linalg::vecops::{dot, scale_by};
@@ -400,6 +408,76 @@ fn main() {
             ("xor_ns", Json::Num(xor.mean_ns)),
             ("simd_level", Json::Str(simd_level.into())),
             ("xor_speedup", Json::Num(mul.mean_ns / xor.mean_ns)),
+        ]));
+    }
+
+    // Serving-fault sweep: the coordinator's terminal paths end to end —
+    // a healthy call vs an injected backend error vs an injected backend
+    // panic (caught by the lane's `catch_unwind`, answered as a typed
+    // error). Error replies still pay admission, batching, channel and
+    // unwind costs; measuring them keeps the degraded-mode latency story
+    // honest instead of assumed-zero.
+    println!("\n== serving fault paths (ok vs err vs panic) ==\n");
+    for &n in &dims {
+        let serve = |plan: &str| {
+            let be = Arc::new(FaultInjectingBackend::new(
+                Arc::new(NativeBackend::new(&[n], 1.0, 3)),
+                FaultPlan::parse(plan).expect("bench fault plan"),
+            ));
+            Coordinator::start(
+                Config {
+                    lanes: vec![(Op::Transform, n)],
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(50),
+                    queue_cap: 256,
+                    sigma: 1.0,
+                    seed: 3,
+                    // measure the raw error paths, not breaker shedding
+                    breaker_threshold: 0,
+                    ..Config::default()
+                },
+                be,
+            )
+        };
+        let x = Rng::new(8).gaussian_vec(n);
+        let c_ok = serve("");
+        let ok_b = bench::bench(&format!("serve ok n={n}"), opts, || {
+            std::hint::black_box(c_ok.call(Op::Transform, x.clone()).expect("healthy lane"));
+        });
+        let c_err = serve("err:1,seed:5");
+        let err_b = bench::bench(&format!("serve err n={n}"), opts, || {
+            std::hint::black_box(c_err.call(Op::Transform, x.clone()).expect_err("err plan"));
+        });
+        let c_panic = serve("panic:1,seed:5");
+        // the injected panics ARE the measurement — silence the default
+        // hook's per-panic stderr spam for the duration, then restore it
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let panic_b = bench::bench(&format!("serve panic n={n}"), opts, || {
+            std::hint::black_box(c_panic.call(Op::Transform, x.clone()).expect_err("panic plan"));
+        });
+        std::panic::set_hook(hook);
+        for c in [c_ok, c_err, c_panic] {
+            c.shutdown();
+        }
+        println!(
+            "serve n={n:<6} ok {:>10}  err {:>10} (x{:.2})  panic {:>10} (x{:.2})",
+            bench::fmt_ns(ok_b.mean_ns),
+            bench::fmt_ns(err_b.mean_ns),
+            err_b.mean_ns / ok_b.mean_ns,
+            bench::fmt_ns(panic_b.mean_ns),
+            panic_b.mean_ns / ok_b.mean_ns
+        );
+        entries.push(Json::obj(vec![
+            ("kind", Json::Str("serving_fault".into())),
+            ("family", Json::Str("hd3_chain".into())),
+            ("n", Json::Num(n as f64)),
+            ("rows", Json::Num(1.0)),
+            ("ok_call_ns", Json::Num(ok_b.mean_ns)),
+            ("err_call_ns", Json::Num(err_b.mean_ns)),
+            ("panic_call_ns", Json::Num(panic_b.mean_ns)),
+            ("err_overhead", Json::Num(err_b.mean_ns / ok_b.mean_ns)),
+            ("panic_overhead", Json::Num(panic_b.mean_ns / ok_b.mean_ns)),
         ]));
     }
 

@@ -45,6 +45,15 @@ impl ModelParams {
 }
 
 /// A batch-execution backend. `xs` is a row-major `(rows, n)` buffer.
+///
+/// Failure contract with the coordinator lane: an `Err` fails the batch's
+/// requests but costs nothing else; a **panic** out of [`Backend::run_batch`]
+/// is caught per call (the batch is retried as singletons to isolate the
+/// poisoned row); but a **malformed output shape** — anything other than
+/// `rows * out_elems(op, n)` elements — is lane-fatal by design (the lane
+/// thread dies and is restarted by its supervisor), because slicing a
+/// wrong-shape buffer into per-request responses would hand clients
+/// silently corrupt data.
 pub trait Backend: Send + Sync + 'static {
     fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String>;
     /// Output elements **per request row** for (op, n). For

@@ -1,0 +1,234 @@
+//! Per-lane health state: liveness phase + a consecutive-failure circuit
+//! breaker.
+//!
+//! Every lane owns one [`LaneState`] shared between three parties:
+//!
+//! * the **lane thread** records per-backend-call outcomes
+//!   ([`LaneState::record_success`] / [`LaneState::record_failure`]);
+//! * the **supervisor** flips the phase to `Dead` while the lane is down
+//!   and back to `Open` after a restart ([`LaneState::set_dead`] /
+//!   [`LaneState::restart`]);
+//! * **submitters** consult [`LaneState::phase`] and [`LaneState::admit`]
+//!   to fail fast instead of queueing doomed work.
+//!
+//! The breaker is the classic three-state machine collapsed onto the lane
+//! phase: `Open` (healthy) → `Degraded` (breaker open: shed with
+//! `Unavailable`) after `threshold` *consecutive* failures → half-open
+//! probing once `cooldown` elapses (admit() starts returning true again) →
+//! back to `Open` on the first success, or re-armed for another cooldown
+//! window by any failure while degraded. `threshold == 0` disables the
+//! breaker entirely (failures are still counted for health reporting).
+//!
+//! Everything is atomics — no locks on the submit path — and time is
+//! measured as microseconds since a per-state [`Instant`] epoch so the
+//! cooldown comparison is a single `u64` load.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::time::{Duration, Instant};
+
+const PHASE_OPEN: u8 = 0;
+const PHASE_DEGRADED: u8 = 1;
+const PHASE_DEAD: u8 = 2;
+
+/// Lane liveness phase, reported verbatim by the `health` wire op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Healthy: accepting and serving traffic.
+    Open,
+    /// Circuit breaker open: the lane thread is alive but the backend has
+    /// failed `threshold` consecutive calls; submits shed until cooldown.
+    Degraded,
+    /// The lane thread died (lane-fatal panic) and the supervisor is in
+    /// its restart backoff.
+    Dead,
+}
+
+impl Phase {
+    /// Wire name, as shipped by the `health` op.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Open => "open",
+            Phase::Degraded => "degraded",
+            Phase::Dead => "dead-restarting",
+        }
+    }
+}
+
+/// Shared lane health state (see module docs).
+pub struct LaneState {
+    epoch: Instant,
+    phase: AtomicU8,
+    consecutive_failures: AtomicU32,
+    /// µs-since-epoch until which an open breaker sheds; only meaningful
+    /// while the phase is `Degraded`.
+    open_until_us: AtomicU64,
+    threshold: u32,
+    cooldown: Duration,
+}
+
+impl LaneState {
+    /// `threshold` consecutive backend failures open the breaker for
+    /// `cooldown`; `threshold == 0` disables the breaker.
+    pub fn new(threshold: u32, cooldown: Duration) -> LaneState {
+        LaneState {
+            epoch: Instant::now(),
+            phase: AtomicU8::new(PHASE_OPEN),
+            consecutive_failures: AtomicU32::new(0),
+            open_until_us: AtomicU64::new(0),
+            threshold,
+            cooldown,
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn phase(&self) -> Phase {
+        match self.phase.load(Ordering::Relaxed) {
+            PHASE_DEGRADED => Phase::Degraded,
+            PHASE_DEAD => Phase::Dead,
+            _ => Phase::Open,
+        }
+    }
+
+    /// Current consecutive-failure count (health reporting).
+    pub fn consecutive_failures(&self) -> u32 {
+        self.consecutive_failures.load(Ordering::Relaxed)
+    }
+
+    /// Supervisor: the lane thread died; shed everything until restart.
+    pub fn set_dead(&self) {
+        self.phase.store(PHASE_DEAD, Ordering::Relaxed);
+    }
+
+    /// Supervisor: the lane thread was restarted — clean slate (the
+    /// restarted lane gets a fresh breaker window rather than inheriting
+    /// the failure streak that killed its predecessor).
+    pub fn restart(&self) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        self.open_until_us.store(0, Ordering::Relaxed);
+        self.phase.store(PHASE_OPEN, Ordering::Relaxed);
+    }
+
+    /// Lane thread: a backend call succeeded. Resets the failure streak
+    /// and closes an open breaker (the half-open probe worked).
+    pub fn record_success(&self) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+        if self.phase.load(Ordering::Relaxed) == PHASE_DEGRADED {
+            self.open_until_us.store(0, Ordering::Relaxed);
+            self.phase.store(PHASE_OPEN, Ordering::Relaxed);
+        }
+    }
+
+    /// Lane thread: a backend call failed (error or caught panic).
+    /// Returns `true` when this failure *newly* opened the breaker (the
+    /// caller counts `breaker_opens` on that edge); a failure while
+    /// already degraded re-arms the cooldown window instead.
+    pub fn record_failure(&self) -> bool {
+        if self.threshold == 0 {
+            self.consecutive_failures.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let streak = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if streak >= self.threshold {
+            let until = self.now_us() + self.cooldown.as_micros() as u64;
+            self.open_until_us.store(until, Ordering::Relaxed);
+            let was = self.phase.swap(PHASE_DEGRADED, Ordering::Relaxed);
+            return was != PHASE_DEGRADED;
+        }
+        false
+    }
+
+    /// Submitter: may this request be queued? `Open` always admits;
+    /// `Degraded` admits only once the cooldown has elapsed (half-open
+    /// probes); `Dead` never admits (the caller maps that to `LaneDown`
+    /// rather than `Unavailable`).
+    pub fn admit(&self) -> bool {
+        match self.phase() {
+            Phase::Open => true,
+            Phase::Dead => false,
+            Phase::Degraded => self.now_us() >= self.open_until_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opens_after_threshold_consecutive_failures() {
+        let s = LaneState::new(3, Duration::from_millis(50));
+        assert_eq!(s.phase(), Phase::Open);
+        assert!(!s.record_failure());
+        assert!(!s.record_failure());
+        assert!(s.admit(), "below threshold: still admitting");
+        assert!(s.record_failure(), "third failure newly opens the breaker");
+        assert_eq!(s.phase(), Phase::Degraded);
+        assert!(!s.admit(), "open breaker sheds during cooldown");
+        assert!(!s.record_failure(), "already open: no second open edge");
+    }
+
+    #[test]
+    fn success_resets_the_streak() {
+        let s = LaneState::new(3, Duration::from_millis(50));
+        s.record_failure();
+        s.record_failure();
+        s.record_success();
+        assert_eq!(s.consecutive_failures(), 0);
+        s.record_failure();
+        s.record_failure();
+        assert_eq!(s.phase(), Phase::Open, "streak restarted after success");
+    }
+
+    #[test]
+    fn half_open_after_cooldown_then_closes_on_success() {
+        let s = LaneState::new(1, Duration::from_millis(10));
+        assert!(s.record_failure());
+        assert!(!s.admit());
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(s.admit(), "cooldown elapsed: half-open probe admitted");
+        assert_eq!(s.phase(), Phase::Degraded, "still degraded until a success");
+        s.record_success();
+        assert_eq!(s.phase(), Phase::Open);
+        assert!(s.admit());
+    }
+
+    #[test]
+    fn failure_while_degraded_rearms_the_window() {
+        let s = LaneState::new(1, Duration::from_millis(20));
+        assert!(s.record_failure());
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(s.admit(), "first window elapsed");
+        // the probe fails -> a fresh cooldown window opens
+        assert!(!s.record_failure());
+        assert!(!s.admit(), "failed probe re-arms the cooldown");
+    }
+
+    #[test]
+    fn zero_threshold_disables_the_breaker() {
+        let s = LaneState::new(0, Duration::from_millis(10));
+        for _ in 0..100 {
+            assert!(!s.record_failure());
+        }
+        assert_eq!(s.phase(), Phase::Open);
+        assert!(s.admit());
+        assert_eq!(s.consecutive_failures(), 100, "failures still counted");
+    }
+
+    #[test]
+    fn dead_never_admits_and_restart_resets() {
+        let s = LaneState::new(2, Duration::from_millis(10));
+        s.record_failure();
+        s.record_failure();
+        s.set_dead();
+        assert_eq!(s.phase(), Phase::Dead);
+        assert!(!s.admit());
+        assert_eq!(s.phase().name(), "dead-restarting");
+        s.restart();
+        assert_eq!(s.phase(), Phase::Open);
+        assert_eq!(s.consecutive_failures(), 0);
+        assert!(s.admit());
+    }
+}

@@ -1,0 +1,306 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! [`FaultInjectingBackend`] wraps any [`Backend`] and, per batch call,
+//! draws from the repo's seeded [`Rng`] whether to delay, panic, or return
+//! an error before delegating to the inner backend. The chaos suite and
+//! the `serving_fault` bench sweep interpose it directly; the `serve` CLI
+//! interposes it from the environment so a running server can be
+//! chaos-tested without a rebuild:
+//!
+//! ```text
+//! TS_FAULT=panic:0.1,err:0.05,delay_ms:3,seed:9 triplespin serve --tcp ...
+//! ```
+//!
+//! Grammar: comma-separated `key:value` pairs, any subset, any order —
+//! `panic:p` / `err:p` are probabilities in `[0, 1]`, `delay_ms:d` a
+//! per-call sleep in milliseconds, `seed:s` the RNG seed (default
+//! `0x5EED`). Unknown keys are rejected loudly (a typo'd fault plan that
+//! silently injects nothing would invalidate a whole chaos run).
+//!
+//! Determinism: the decision stream is a pure function of the plan — one
+//! `Mutex<Rng>` serializes draws, and all decisions for a call are drawn
+//! *before* acting (so an injected panic can never poison the lock
+//! mid-draw). Two backends built from equal plans inject the identical
+//! fault sequence, which is what lets chaos tests assert exact recovery
+//! scenarios instead of probabilistic ones.
+
+use super::backend::Backend;
+use crate::runtime::{Op, Output};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Parsed `TS_FAULT` plan. See the module docs for the grammar.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Probability a call panics (after any delay).
+    pub panic_p: f64,
+    /// Probability a call returns an injected backend error.
+    pub err_p: f64,
+    /// Sleep applied to every call (models a slow dependency).
+    pub delay: Duration,
+    /// Seed for the decision stream.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            panic_p: 0.0,
+            err_p: 0.0,
+            delay: Duration::ZERO,
+            seed: 0x5EED,
+        }
+    }
+}
+
+fn parse_prob(key: &str, v: &str) -> Result<f64, String> {
+    let p: f64 = v
+        .trim()
+        .parse()
+        .map_err(|_| format!("TS_FAULT: '{key}:{v}' is not a number"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("TS_FAULT: '{key}:{v}' must be in [0, 1]"));
+    }
+    Ok(p)
+}
+
+impl FaultPlan {
+    /// Parse a plan string like `"panic:0.1,err:0.05,delay_ms:3,seed:9"`.
+    /// Empty string (or only separators) parses to the no-op plan.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once(':')
+                .ok_or_else(|| format!("TS_FAULT: '{part}' is not key:value"))?;
+            match k.trim() {
+                "panic" => plan.panic_p = parse_prob("panic", v)?,
+                "err" => plan.err_p = parse_prob("err", v)?,
+                "delay_ms" => {
+                    let ms: u64 = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("TS_FAULT: 'delay_ms:{v}' is not an integer"))?;
+                    plan.delay = Duration::from_millis(ms);
+                }
+                "seed" => {
+                    plan.seed = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("TS_FAULT: 'seed:{v}' is not an integer"))?;
+                }
+                other => {
+                    return Err(format!(
+                        "TS_FAULT: unknown key '{other}' (expected panic|err|delay_ms|seed)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read the plan from `TS_FAULT`. `Ok(None)` when unset/empty,
+    /// `Err` on a malformed value (never silently ignored).
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var("TS_FAULT") {
+            Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// A plan that injects nothing (wrapping with it is pointless).
+    pub fn is_noop(&self) -> bool {
+        self.panic_p <= 0.0 && self.err_p <= 0.0 && self.delay.is_zero()
+    }
+}
+
+/// [`Backend`] wrapper injecting faults per [`FaultPlan`] (module docs).
+pub struct FaultInjectingBackend {
+    inner: Arc<dyn Backend>,
+    plan: FaultPlan,
+    rng: Mutex<Rng>,
+    /// Calls that panicked by injection (not inner-backend panics).
+    pub injected_panics: AtomicU64,
+    /// Calls that returned an injected error.
+    pub injected_errors: AtomicU64,
+    /// Total calls seen (delayed or not).
+    pub calls: AtomicU64,
+}
+
+impl FaultInjectingBackend {
+    pub fn new(inner: Arc<dyn Backend>, plan: FaultPlan) -> FaultInjectingBackend {
+        FaultInjectingBackend {
+            inner,
+            plan,
+            rng: Mutex::new(Rng::new(plan.seed)),
+            injected_panics: AtomicU64::new(0),
+            injected_errors: AtomicU64::new(0),
+            calls: AtomicU64::new(0),
+        }
+    }
+
+    /// Wrap `inner` per `TS_FAULT`, returning it untouched when the env
+    /// var is unset or the plan is a no-op. `Err` on a malformed plan.
+    pub fn wrap_env(inner: Arc<dyn Backend>) -> Result<Arc<dyn Backend>, String> {
+        match FaultPlan::from_env()? {
+            Some(plan) if !plan.is_noop() => Ok(Arc::new(FaultInjectingBackend::new(inner, plan))),
+            _ => Ok(inner),
+        }
+    }
+
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+}
+
+impl Backend for FaultInjectingBackend {
+    fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        // Draw every decision for this call under the lock, then release it
+        // BEFORE acting: an injected panic while holding the lock would
+        // poison it and turn one fault into a permanently broken injector.
+        let (do_panic, do_err) = {
+            let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
+            (
+                self.plan.panic_p > 0.0 && rng.uniform() < self.plan.panic_p,
+                self.plan.err_p > 0.0 && rng.uniform() < self.plan.err_p,
+            )
+        };
+        if !self.plan.delay.is_zero() {
+            std::thread::sleep(self.plan.delay);
+        }
+        if do_panic {
+            self.injected_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("injected fault: backend panic");
+        }
+        if do_err {
+            self.injected_errors.fetch_add(1, Ordering::Relaxed);
+            return Err("injected fault: backend error".into());
+        }
+        self.inner.run_batch(op, n, rows, xs)
+    }
+
+    fn out_elems(&self, op: Op, n: usize) -> usize {
+        self.inner.out_elems(op, n)
+    }
+
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeBackend;
+
+    #[test]
+    fn grammar_round_trips() {
+        let p = FaultPlan::parse("panic:0.1,err:0.05,delay_ms:3,seed:9").unwrap();
+        assert_eq!(p.panic_p, 0.1);
+        assert_eq!(p.err_p, 0.05);
+        assert_eq!(p.delay, Duration::from_millis(3));
+        assert_eq!(p.seed, 9);
+        assert!(!p.is_noop());
+        // subsets, whitespace, trailing separators
+        let p = FaultPlan::parse(" err:1 , seed:4 ,").unwrap();
+        assert_eq!(p.err_p, 1.0);
+        assert_eq!(p.seed, 4);
+        assert_eq!(p.panic_p, 0.0);
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+    }
+
+    #[test]
+    fn grammar_rejects_garbage_loudly() {
+        assert!(FaultPlan::parse("panic").is_err(), "missing value");
+        assert!(FaultPlan::parse("panic:1.5").is_err(), "prob out of range");
+        assert!(FaultPlan::parse("panic:x").is_err(), "not a number");
+        assert!(FaultPlan::parse("delay_ms:1.5").is_err(), "fractional ms");
+        assert!(FaultPlan::parse("oops:1").is_err(), "unknown key");
+    }
+
+    #[test]
+    fn noop_plan_is_a_pure_passthrough() {
+        let n = 64;
+        let inner = Arc::new(NativeBackend::new(&[n], 1.0, 7));
+        let direct = NativeBackend::new(&[n], 1.0, 7);
+        let fb = FaultInjectingBackend::new(inner, FaultPlan::default());
+        let mut rng = Rng::new(3);
+        for _ in 0..5 {
+            let x = rng.gaussian_vec(n);
+            let got = fb.run_batch(Op::Transform, n, 1, &x).unwrap();
+            let want = direct.run_batch(Op::Transform, n, 1, &x).unwrap();
+            assert_eq!(got, want);
+        }
+        assert_eq!(fb.injected_panics.load(Ordering::Relaxed), 0);
+        assert_eq!(fb.injected_errors.load(Ordering::Relaxed), 0);
+        assert_eq!(fb.out_elems(Op::BinaryEmbed, n), n.div_ceil(64));
+    }
+
+    /// Run `calls` batches against a fresh injector, recording the
+    /// per-call outcome (p = panicked, e = injected error, . = ok).
+    fn outcome_trace(plan: FaultPlan, calls: usize) -> String {
+        let n = 64;
+        let inner = Arc::new(NativeBackend::new(&[n], 1.0, 7));
+        let fb = FaultInjectingBackend::new(inner, plan);
+        let x = vec![1.0f32; n];
+        (0..calls)
+            .map(|_| {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    fb.run_batch(Op::Transform, n, 1, &x)
+                }));
+                match r {
+                    Err(_) => 'p',
+                    Ok(Err(_)) => 'e',
+                    Ok(Ok(_)) => '.',
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fault_stream_is_deterministic_per_seed() {
+        let plan = FaultPlan::parse("panic:0.3,err:0.3,seed:11").unwrap();
+        let a = outcome_trace(plan, 60);
+        let b = outcome_trace(plan, 60);
+        assert_eq!(a, b, "same plan must inject the same fault sequence");
+        assert!(a.contains('p') && a.contains('e') && a.contains('.'), "{a}");
+        let other = FaultPlan::parse("panic:0.3,err:0.3,seed:12").unwrap();
+        assert_ne!(a, outcome_trace(other, 60), "seed must steer the stream");
+    }
+
+    #[test]
+    fn injector_survives_its_own_panics() {
+        // drawing decisions before acting means a panic cannot poison the
+        // RNG lock: the injector keeps working (deterministically) after.
+        let plan = FaultPlan::parse("panic:1,seed:1").unwrap();
+        let n = 64;
+        let fb = FaultInjectingBackend::new(Arc::new(NativeBackend::new(&[n], 1.0, 7)), plan);
+        let x = vec![1.0f32; n];
+        for _ in 0..3 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                fb.run_batch(Op::Transform, n, 1, &x)
+            }));
+            assert!(r.is_err());
+        }
+        assert_eq!(fb.injected_panics.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn wrap_env_passthrough_when_unset() {
+        // NOTE: relies on the test process not exporting TS_FAULT; the
+        // chaos suite constructs plans directly to avoid env races.
+        if std::env::var("TS_FAULT").is_ok() {
+            return;
+        }
+        let inner: Arc<dyn Backend> = Arc::new(NativeBackend::new(&[64], 1.0, 7));
+        let wrapped = FaultInjectingBackend::wrap_env(Arc::clone(&inner)).unwrap();
+        assert_eq!(wrapped.name(), inner.name(), "no TS_FAULT: same backend");
+    }
+}

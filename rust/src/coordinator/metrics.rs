@@ -72,6 +72,21 @@ pub struct LaneMetrics {
     /// binary lane's 32× compression shows up in (f32/i32 elements count
     /// 32 bits, packed words 64).
     pub output_bits: AtomicU64,
+    /// Requests answered with `Deadline` (expired while queued, dropped
+    /// before backend time was spent on them).
+    pub expired: AtomicU64,
+    /// Backend calls that panicked and were caught by the lane (the
+    /// fine-grained isolation path, not lane deaths).
+    pub panics: AtomicU64,
+    /// Lane-thread deaths (lane-fatal panics caught by the supervisor).
+    pub lane_failures: AtomicU64,
+    /// Supervisor restarts of this lane (each follows a `lane_failures`
+    /// increment after the backoff sleep).
+    pub restarts: AtomicU64,
+    /// Submits shed with `Unavailable` while the circuit breaker was open.
+    pub shed_unavailable: AtomicU64,
+    /// Times the circuit breaker newly opened (closed→open edges only).
+    pub breaker_opens: AtomicU64,
     pub latency: Histogram,
 }
 
@@ -127,6 +142,30 @@ impl LaneMetrics {
                 Json::Num(self.output_bits.load(Ordering::Relaxed) as f64),
             ),
             ("mean_response_bytes", Json::Num(self.mean_response_bytes())),
+            (
+                "expired",
+                Json::Num(self.expired.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "panics",
+                Json::Num(self.panics.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "lane_failures",
+                Json::Num(self.lane_failures.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "restarts",
+                Json::Num(self.restarts.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "shed_unavailable",
+                Json::Num(self.shed_unavailable.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "breaker_opens",
+                Json::Num(self.breaker_opens.load(Ordering::Relaxed) as f64),
+            ),
             ("latency_mean_us", Json::Num(self.latency.mean_us())),
             (
                 "latency_p50_us",
@@ -186,9 +225,19 @@ mod tests {
         m.completed.store(9, Ordering::Relaxed);
         m.batches.store(3, Ordering::Relaxed);
         m.batched_rows.store(9, Ordering::Relaxed);
+        m.lane_failures.store(2, Ordering::Relaxed);
+        m.restarts.store(2, Ordering::Relaxed);
+        m.breaker_opens.store(1, Ordering::Relaxed);
         let j = m.to_json();
         assert_eq!(j.get("submitted").unwrap().as_f64(), Some(10.0));
         assert_eq!(j.get("mean_batch").unwrap().as_f64(), Some(3.0));
+        // fault-isolation counters are part of the exported schema
+        assert_eq!(j.get("lane_failures").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("restarts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("breaker_opens").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("expired").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("panics").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("shed_unavailable").unwrap().as_f64(), Some(0.0));
         // serializes to valid JSON
         let s = j.to_string();
         assert!(Json::parse(&s).is_ok());

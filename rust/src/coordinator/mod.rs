@@ -1,39 +1,90 @@
 //! Layer-3 serving coordinator: request router → per-lane dynamic batcher →
 //! backend execution (PJRT artifacts or native Rust), with bounded-queue
-//! backpressure and per-lane metrics.
+//! backpressure, per-lane metrics, and fault-isolated lanes.
 //!
 //! Topology: one ingress per lane (an `(op, n)` pair). [`Coordinator::submit`]
 //! routes a request to its lane's bounded channel — a full channel rejects
 //! with [`SubmitError::Busy`] (explicit load-shedding, never unbounded
 //! memory). Each lane runs a thread that drains up to `max_batch` requests
-//! (waiting at most `max_wait` after the first), pads the tail, executes one
-//! backend call, and fans responses back out on per-request channels.
-//! Backend batch execution shards over the backend's **persistent**
-//! [`crate::runtime::WorkerPool`] — lane threads never spawn per-batch
-//! workers, so steady-state serving touches a fixed set of long-lived
-//! threads.
+//! (waiting at most `max_wait` after the first), answers any whose deadline
+//! expired while queued, executes one backend call, and fans responses back
+//! out on per-request channels. Backend batch execution shards over the
+//! backend's **persistent** [`crate::runtime::WorkerPool`] — lane threads
+//! never spawn per-batch workers, so steady-state serving touches a fixed
+//! set of long-lived threads.
+//!
+//! ## Fault isolation
+//!
+//! Failure taxonomy, from cheapest to most severe:
+//!
+//! * **Backend error** — `run_batch` returns `Err`: every request in the
+//!   batch gets [`RequestError::Backend`]; the lane keeps running.
+//! * **Backend panic** — `run_batch` panics: caught with `catch_unwind`,
+//!   and the batch is retried once as singletons so one poisoned input
+//!   cannot fail its batchmates; only the request(s) that panic alone get
+//!   [`RequestError::Panic`].
+//! * **Deadline** — a request whose deadline passed while queued is
+//!   answered with [`RequestError::Deadline`] *before* backend time is
+//!   spent on it ([`Coordinator::submit_with_deadline`], or the per-lane
+//!   [`Config::deadline`] default).
+//! * **Circuit breaker** — [`Config::breaker_threshold`] consecutive
+//!   backend failures flip the lane to `Degraded`: submits fail fast with
+//!   [`SubmitError::Unavailable`] for [`Config::breaker_cooldown`], then
+//!   half-open probes either close the breaker or re-arm it (see
+//!   [`breaker`]).
+//! * **Lane death** — a lane-fatal invariant violation (e.g. a backend
+//!   returning a malformed batch shape) panics the lane thread. A
+//!   supervisor catches it, counts it (`lane_failures`), fails submits
+//!   fast with [`SubmitError::LaneDown`] meanwhile, and restarts the lane
+//!   with bounded exponential backoff ([`Config::restart_backoff`] →
+//!   [`Config::restart_backoff_max`], reset after a healthy run). Queued
+//!   jobs survive the restart; only the batch in flight is lost (its
+//!   callers observe a disconnected reply channel, surfaced by
+//!   [`Coordinator::call_timeout`] as an error, never a hang).
+//!
+//! Fault *injection* for all of the above is [`fault::FaultInjectingBackend`]
+//! (`TS_FAULT=panic:p,err:p,delay_ms:d,seed:s`), exercised by the chaos
+//! suite (`rust/tests/chaos_serving.rs`).
 //!
 //! Invariants (property-tested below and in `rust/tests/`):
-//! * every accepted request receives exactly one response;
+//! * every accepted request receives exactly one terminal response (or,
+//!   across a lane death, a visibly disconnected reply channel — never a
+//!   silent hang);
 //! * batch sizes never exceed `max_batch`;
 //! * padding rows never leak into responses;
 //! * routing is a pure function of `(op, dim)`;
-//! * FIFO order within a lane.
+//! * FIFO order within a lane (preserved by the singleton retry path).
 
 pub mod backend;
-pub mod server;
+pub mod breaker;
+pub mod fault;
 pub mod metrics;
+pub mod server;
 
 pub use backend::{Backend, ModelParams, NativeBackend, PjrtBackend};
+pub use breaker::{LaneState, Phase};
+pub use fault::{FaultInjectingBackend, FaultPlan};
 pub use metrics::LaneMetrics;
 pub use server::TcpServer;
 
 use crate::runtime::{Op, Output};
+use crate::util::panic_message;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Default request deadline for [`Coordinator::call`] — generous, so the
+/// blocking convenience wrapper can never hang on a dead lane, but far
+/// above any sane batch latency.
+pub const DEFAULT_CALL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Extra wait on the *response* channel beyond the request deadline: the
+/// lane's own typed `Deadline` answer (sent when it pops the expired job)
+/// should normally win the race against the caller's receive timeout.
+pub const RESPONSE_GRACE: Duration = Duration::from_millis(250);
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -50,6 +101,20 @@ pub struct Config {
     pub sigma: f64,
     /// Model seed (both backends derive identical diagonals from it).
     pub seed: u64,
+    /// Default per-request deadline applied at submit time (`None` = no
+    /// deadline). [`Coordinator::submit_with_deadline`] overrides per call.
+    pub deadline: Option<Duration>,
+    /// Consecutive backend failures that open the lane's circuit breaker
+    /// (`0` disables the breaker).
+    pub breaker_threshold: u32,
+    /// How long an open breaker sheds with [`SubmitError::Unavailable`]
+    /// before admitting half-open probe traffic.
+    pub breaker_cooldown: Duration,
+    /// Initial supervisor backoff before restarting a dead lane thread.
+    pub restart_backoff: Duration,
+    /// Backoff ceiling (doubles up to this; a lane that ran healthy longer
+    /// than this before dying restarts at `restart_backoff` again).
+    pub restart_backoff_max: Duration,
 }
 
 impl Default for Config {
@@ -66,15 +131,56 @@ impl Default for Config {
             queue_cap: 1024,
             sigma: 1.0,
             seed: 42,
+            deadline: None,
+            breaker_threshold: 8,
+            breaker_cooldown: Duration::from_millis(250),
+            restart_backoff: Duration::from_millis(10),
+            restart_backoff_max: Duration::from_secs(2),
         }
     }
 }
 
-/// A response: the per-request slice of the batch output.
+/// Typed per-request failure (the terminal error in a [`Response`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestError {
+    /// The request's deadline passed while it was queued; no backend time
+    /// was spent on it.
+    Deadline,
+    /// The backend panicked executing this request (caught and isolated);
+    /// carries the panic message.
+    Panic(String),
+    /// The backend returned an error; carries its message verbatim.
+    Backend(String),
+}
+
+impl RequestError {
+    /// Stable machine-readable tag (the wire protocol's `code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            RequestError::Deadline => "deadline",
+            RequestError::Panic(_) => "panic",
+            RequestError::Backend(_) => "backend",
+        }
+    }
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Deadline => write!(f, "deadline exceeded"),
+            RequestError::Panic(m) => write!(f, "backend panicked: {m}"),
+            // backend messages pass through verbatim (pre-existing wire
+            // contract: e.g. a bare "injected failure")
+            RequestError::Backend(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+/// A response: the per-request slice of the batch output, or a typed error.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    pub result: Result<Output, String>,
+    pub result: Result<Output, RequestError>,
 }
 
 /// Submission failure modes.
@@ -88,6 +194,25 @@ pub enum SubmitError {
     BadDim,
     /// Coordinator is shutting down.
     Closed,
+    /// The lane thread died; the supervisor is restarting it.
+    LaneDown,
+    /// The lane's circuit breaker is open (consecutive backend failures);
+    /// fail fast instead of queueing doomed work.
+    Unavailable,
+}
+
+impl SubmitError {
+    /// Stable machine-readable tag (the wire protocol's `code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            SubmitError::Busy => "busy",
+            SubmitError::UnknownLane => "unknown_lane",
+            SubmitError::BadDim => "bad_dim",
+            SubmitError::Closed => "closed",
+            SubmitError::LaneDown => "lane_down",
+            SubmitError::Unavailable => "unavailable",
+        }
+    }
 }
 
 impl std::fmt::Display for SubmitError {
@@ -97,6 +222,8 @@ impl std::fmt::Display for SubmitError {
             SubmitError::UnknownLane => write!(f, "no lane for (op, dim)"),
             SubmitError::BadDim => write!(f, "input dim mismatch"),
             SubmitError::Closed => write!(f, "coordinator closed"),
+            SubmitError::LaneDown => write!(f, "lane down (restarting)"),
+            SubmitError::Unavailable => write!(f, "lane unavailable (circuit open)"),
         }
     }
 }
@@ -106,11 +233,15 @@ struct Job {
     vector: Vec<f32>,
     reply: mpsc::Sender<Response>,
     enqueued: Instant,
+    /// Absolute expiry; the lane answers `Deadline` instead of executing
+    /// once this passes.
+    deadline: Option<Instant>,
 }
 
 struct Lane {
     tx: SyncSender<Job>,
     metrics: Arc<LaneMetrics>,
+    state: Arc<LaneState>,
     n: usize,
 }
 
@@ -118,11 +249,12 @@ struct Lane {
 pub struct Coordinator {
     lanes: HashMap<(Op, usize), Lane>,
     next_id: AtomicU64,
+    default_deadline: Option<Duration>,
     joins: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start one batcher thread per lane over a shared backend.
+    /// Start one supervised batcher thread per lane over a shared backend.
     pub fn start(config: Config, backend: Arc<dyn Backend>) -> Coordinator {
         let mut lanes = HashMap::new();
         let mut joins = Vec::new();
@@ -130,30 +262,66 @@ impl Coordinator {
             let (op, n) = (*op, *n);
             let (tx, rx) = mpsc::sync_channel::<Job>(config.queue_cap);
             let metrics = Arc::new(LaneMetrics::new());
-            let be = Arc::clone(&backend);
-            let m = Arc::clone(&metrics);
-            let max_batch = config.max_batch;
-            let max_wait = config.max_wait;
+            let state = Arc::new(LaneState::new(
+                config.breaker_threshold,
+                config.breaker_cooldown,
+            ));
+            let worker = LaneWorker {
+                backend: Arc::clone(&backend),
+                op,
+                n,
+                per: backend.out_elems(op, n),
+                max_batch: config.max_batch,
+                max_wait: config.max_wait,
+                metrics: Arc::clone(&metrics),
+                state: Arc::clone(&state),
+                backoff: config.restart_backoff,
+                backoff_max: config.restart_backoff_max,
+            };
             let join = std::thread::Builder::new()
                 .name(format!("lane-{op}-{n}"))
-                .spawn(move || lane_loop(rx, be, op, n, max_batch, max_wait, m))
+                .spawn(move || worker.supervise(rx))
                 .expect("spawn lane thread");
             joins.push(join);
-            lanes.insert((op, n), Lane { tx, metrics, n });
+            lanes.insert(
+                (op, n),
+                Lane {
+                    tx,
+                    metrics,
+                    state,
+                    n,
+                },
+            );
         }
         Coordinator {
             lanes,
             next_id: AtomicU64::new(1),
+            default_deadline: config.deadline,
             joins,
         }
     }
 
-    /// Submit a request. Returns the request id and a receiver for the
-    /// response. Non-blocking: a full lane returns [`SubmitError::Busy`].
+    /// Submit a request with the lane's default deadline (if any). Returns
+    /// the request id and a receiver for the response. Non-blocking: a
+    /// full lane returns [`SubmitError::Busy`], a dead lane
+    /// [`SubmitError::LaneDown`], an open breaker
+    /// [`SubmitError::Unavailable`].
     pub fn submit(
         &self,
         op: Op,
         vector: Vec<f32>,
+    ) -> Result<(u64, Receiver<Response>), SubmitError> {
+        self.submit_with_deadline(op, vector, None)
+    }
+
+    /// [`Coordinator::submit`] with an explicit per-request deadline
+    /// (`None` falls back to [`Config::deadline`]). The deadline is
+    /// resolved to an absolute instant here, at admission.
+    pub fn submit_with_deadline(
+        &self,
+        op: Op,
+        vector: Vec<f32>,
+        deadline: Option<Duration>,
     ) -> Result<(u64, Receiver<Response>), SubmitError> {
         let lane = self
             .lanes
@@ -162,31 +330,67 @@ impl Coordinator {
         if vector.len() != lane.n {
             return Err(SubmitError::BadDim);
         }
+        lane.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match lane.state.phase() {
+            Phase::Dead => return Err(SubmitError::LaneDown),
+            Phase::Degraded if !lane.state.admit() => {
+                lane.metrics.shed_unavailable.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Unavailable);
+            }
+            _ => {}
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
+        let now = Instant::now();
         let job = Job {
             id,
             vector,
             reply,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: deadline.or(self.default_deadline).map(|d| now + d),
         };
-        lane.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match lane.tx.try_send(job) {
             Ok(()) => Ok((id, rx)),
             Err(TrySendError::Full(_)) => {
                 lane.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Busy)
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            // the receiver lives in the supervisor, which only exits on
+            // clean shutdown — while the coordinator is alive a
+            // disconnected lane means the supervisor itself died
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::LaneDown),
         }
     }
 
     /// Submit and wait for the response (convenience for examples / CLI).
+    /// Bounded by [`DEFAULT_CALL_TIMEOUT`] — never hangs, even across a
+    /// lane death.
     pub fn call(&self, op: Op, vector: Vec<f32>) -> Result<Output, String> {
-        let (_, rx) = self.submit(op, vector).map_err(|e| e.to_string())?;
-        rx.recv()
-            .map_err(|_| "coordinator dropped response".to_string())?
-            .result
+        self.call_timeout(op, vector, DEFAULT_CALL_TIMEOUT)
+    }
+
+    /// [`Coordinator::call`] with an explicit deadline: the request
+    /// carries `timeout` as its deadline, and the response wait is bounded
+    /// by `timeout + `[`RESPONSE_GRACE`] so the lane's typed `Deadline`
+    /// answer normally arrives first.
+    pub fn call_timeout(
+        &self,
+        op: Op,
+        vector: Vec<f32>,
+        timeout: Duration,
+    ) -> Result<Output, String> {
+        let (_, rx) = self
+            .submit_with_deadline(op, vector, Some(timeout))
+            .map_err(|e| e.to_string())?;
+        match rx.recv_timeout(timeout.saturating_add(RESPONSE_GRACE)) {
+            Ok(resp) => resp.result.map_err(|e| e.to_string()),
+            Err(RecvTimeoutError::Timeout) => {
+                Err(format!("response timed out after {timeout:?}"))
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err("lane dropped response (restarted mid-request)".to_string())
+            }
+        }
     }
 
     /// Per-lane metrics handles.
@@ -211,6 +415,40 @@ impl Coordinator {
         )
     }
 
+    /// Per-lane health as a JSON document (the `health` wire op): current
+    /// phase (`open` / `degraded` / `dead-restarting`) plus the
+    /// supervision counters.
+    pub fn health_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::Obj(
+            self.lanes
+                .iter()
+                .map(|((op, n), lane)| {
+                    (
+                        format!("{op}_n{n}"),
+                        Json::obj(vec![
+                            ("state", Json::Str(lane.state.phase().name().into())),
+                            (
+                                "consecutive_failures",
+                                Json::Num(lane.state.consecutive_failures() as f64),
+                            ),
+                            (
+                                "lane_failures",
+                                Json::Num(
+                                    lane.metrics.lane_failures.load(Ordering::Relaxed) as f64
+                                ),
+                            ),
+                            (
+                                "restarts",
+                                Json::Num(lane.metrics.restarts.load(Ordering::Relaxed) as f64),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
     /// Stop accepting requests, drain lanes, join threads.
     pub fn shutdown(mut self) {
         // dropping the senders closes the lanes
@@ -221,85 +459,214 @@ impl Coordinator {
     }
 }
 
-fn lane_loop(
-    rx: mpsc::Receiver<Job>,
+/// Everything one lane's thread needs, owned by its supervisor loop.
+struct LaneWorker {
     backend: Arc<dyn Backend>,
     op: Op,
     n: usize,
+    /// Output elements per request row.
+    per: usize,
     max_batch: usize,
     max_wait: Duration,
     metrics: Arc<LaneMetrics>,
-) {
-    let per = backend.out_elems(op, n);
-    loop {
-        // block for the first job of the batch
-        let first = match rx.recv() {
-            Ok(j) => j,
-            Err(_) => return, // all senders dropped -> shutdown
-        };
-        let mut jobs = vec![first];
-        let deadline = Instant::now() + max_wait;
-        while jobs.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(j) => jobs.push(j),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+    state: Arc<LaneState>,
+    /// Current restart backoff (doubles per consecutive death).
+    backoff: Duration,
+    backoff_max: Duration,
+}
+
+impl LaneWorker {
+    /// Supervisor: run [`LaneWorker::lane_loop`] until clean shutdown,
+    /// restarting it after lane-fatal panics with bounded exponential
+    /// backoff. Owns the receiver, so jobs queued while the lane is down
+    /// survive the restart.
+    fn supervise(mut self, rx: Receiver<Job>) {
+        let initial_backoff = self.backoff;
+        loop {
+            let started = Instant::now();
+            match catch_unwind(AssertUnwindSafe(|| self.lane_loop(&rx))) {
+                // channel disconnected: clean coordinator shutdown
+                Ok(()) => return,
+                Err(payload) => {
+                    let msg = panic_message(&*payload);
+                    self.metrics.lane_failures.fetch_add(1, Ordering::Relaxed);
+                    self.state.set_dead();
+                    // a healthy run longer than the ceiling resets the
+                    // backoff — only *rapid* death loops escalate
+                    if started.elapsed() > self.backoff_max {
+                        self.backoff = initial_backoff;
+                    }
+                    eprintln!(
+                        "lane-{}-{}: lane-fatal panic ({msg}); restarting in {:?}",
+                        self.op, self.n, self.backoff
+                    );
+                    std::thread::sleep(self.backoff);
+                    self.backoff = (self.backoff * 2).min(self.backoff_max);
+                    self.metrics.restarts.fetch_add(1, Ordering::Relaxed);
+                    self.state.restart();
+                }
             }
         }
-        debug_assert!(jobs.len() <= max_batch);
+    }
 
-        // assemble the batch buffer
+    /// One lane incarnation: batch, expire, execute, fan out. Returns on
+    /// channel disconnect (shutdown); panics only on lane-fatal invariant
+    /// violations (the supervisor's job).
+    fn lane_loop(&self, rx: &Receiver<Job>) {
+        loop {
+            // block for the first job of the batch
+            let first = match rx.recv() {
+                Ok(j) => j,
+                Err(_) => return, // all senders dropped -> shutdown
+            };
+            let mut jobs = vec![first];
+            let fill_deadline = Instant::now() + self.max_wait;
+            while jobs.len() < self.max_batch {
+                let now = Instant::now();
+                if now >= fill_deadline {
+                    break;
+                }
+                match rx.recv_timeout(fill_deadline - now) {
+                    Ok(j) => jobs.push(j),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            debug_assert!(jobs.len() <= self.max_batch);
+
+            // answer expired jobs before spending backend time on them
+            let now = Instant::now();
+            let mut live = Vec::with_capacity(jobs.len());
+            for job in jobs {
+                match job.deadline {
+                    Some(d) if now >= d => {
+                        self.metrics.expired.fetch_add(1, Ordering::Relaxed);
+                        let _ = job.reply.send(Response {
+                            id: job.id,
+                            result: Err(RequestError::Deadline),
+                        });
+                    }
+                    _ => live.push(job),
+                }
+            }
+            if live.is_empty() {
+                continue;
+            }
+            self.run_jobs(live);
+        }
+    }
+
+    /// Execute one batch of live jobs and answer every one of them.
+    fn run_jobs(&self, mut jobs: Vec<Job>) {
         let rows = jobs.len();
-        let mut xs = Vec::with_capacity(rows * n);
+        let mut xs = Vec::with_capacity(rows * self.n);
         for j in &jobs {
             xs.extend_from_slice(&j.vector);
         }
-        let result = backend.run_batch(op, n, rows, &xs);
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
-
-        match result {
-            Ok(out) => {
-                for (i, job) in jobs.into_iter().enumerate() {
-                    let slice = match &out {
-                        Output::F32(v) => Output::F32(v[i * per..(i + 1) * per].to_vec()),
-                        Output::I32(v) => Output::I32(v[i * per..(i + 1) * per].to_vec()),
-                        Output::Bits(v) => Output::Bits(v[i * per..(i + 1) * per].to_vec()),
-                    };
-                    // footprint ledger: packed words carry 64 bits/elem,
-                    // floats and ids 32 — what makes the binary lane's 32×
-                    // response compression visible in metrics
-                    let bits_per_elem = match &slice {
-                        Output::Bits(_) => 64,
-                        _ => 32,
-                    };
-                    metrics
-                        .output_bits
-                        .fetch_add((per * bits_per_elem) as u64, Ordering::Relaxed);
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .latency
-                        .record_us(job.enqueued.elapsed().as_micros() as u64);
-                    let _ = job.reply.send(Response {
-                        id: job.id,
-                        result: Ok(slice),
-                    });
+        match self.exec_recorded(rows, &xs) {
+            Ok(out) => self.respond_ok(out, jobs),
+            Err(RequestError::Panic(msg)) => {
+                if rows == 1 {
+                    self.respond_err(RequestError::Panic(msg), jobs.pop().unwrap());
+                } else {
+                    // one poisoned input must not fail its batchmates:
+                    // retry each job alone, once (FIFO order preserved);
+                    // only the request(s) that panic solo wear the error
+                    for job in jobs {
+                        match self.exec_recorded(1, &job.vector) {
+                            Ok(out) => self.respond_ok(out, vec![job]),
+                            Err(e) => self.respond_err(e, job),
+                        }
+                    }
                 }
             }
             Err(e) => {
                 for job in jobs {
-                    metrics.failed.fetch_add(1, Ordering::Relaxed);
-                    let _ = job.reply.send(Response {
-                        id: job.id,
-                        result: Err(e.clone()),
-                    });
+                    self.respond_err(e.clone(), job);
                 }
             }
         }
+    }
+
+    /// One isolated backend call: panics are caught and typed, outcomes
+    /// feed the circuit breaker, and a malformed output shape is
+    /// *lane-fatal* (deliberately panics out to the supervisor — slicing
+    /// garbage into responses would be worse than a counted restart).
+    fn exec_recorded(&self, rows: usize, xs: &[f32]) -> Result<Output, RequestError> {
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .batched_rows
+            .fetch_add(rows as u64, Ordering::Relaxed);
+        let result = match catch_unwind(AssertUnwindSafe(|| {
+            self.backend.run_batch(self.op, self.n, rows, xs)
+        })) {
+            Ok(Ok(out)) => Ok(out),
+            Ok(Err(e)) => Err(RequestError::Backend(e)),
+            Err(payload) => {
+                self.metrics.panics.fetch_add(1, Ordering::Relaxed);
+                Err(RequestError::Panic(panic_message(&*payload)))
+            }
+        };
+        match &result {
+            Ok(out) => {
+                let got = match out {
+                    Output::F32(v) => v.len(),
+                    Output::I32(v) => v.len(),
+                    Output::Bits(v) => v.len(),
+                };
+                assert_eq!(
+                    got,
+                    rows * self.per,
+                    "backend '{}' returned a malformed batch shape",
+                    self.backend.name()
+                );
+                self.state.record_success();
+            }
+            Err(_) => {
+                if self.state.record_failure() {
+                    self.metrics.breaker_opens.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        result
+    }
+
+    /// Fan a successful batch output back out to its requests.
+    fn respond_ok(&self, out: Output, jobs: Vec<Job>) {
+        let per = self.per;
+        for (i, job) in jobs.into_iter().enumerate() {
+            let slice = match &out {
+                Output::F32(v) => Output::F32(v[i * per..(i + 1) * per].to_vec()),
+                Output::I32(v) => Output::I32(v[i * per..(i + 1) * per].to_vec()),
+                Output::Bits(v) => Output::Bits(v[i * per..(i + 1) * per].to_vec()),
+            };
+            // footprint ledger: packed words carry 64 bits/elem,
+            // floats and ids 32 — what makes the binary lane's 32×
+            // response compression visible in metrics
+            let bits_per_elem = match &slice {
+                Output::Bits(_) => 64,
+                _ => 32,
+            };
+            self.metrics
+                .output_bits
+                .fetch_add((per * bits_per_elem) as u64, Ordering::Relaxed);
+            self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            self.metrics
+                .latency
+                .record_us(job.enqueued.elapsed().as_micros() as u64);
+            let _ = job.reply.send(Response {
+                id: job.id,
+                result: Ok(slice),
+            });
+        }
+    }
+
+    fn respond_err(&self, e: RequestError, job: Job) {
+        self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = job.reply.send(Response {
+            id: job.id,
+            result: Err(e),
+        });
     }
 }
 
@@ -320,6 +687,7 @@ mod tests {
             queue_cap,
             sigma: 1.0,
             seed: 9,
+            ..Config::default()
         };
         let backend = Arc::new(NativeBackend::new(&[64], config.sigma, config.seed));
         Coordinator::start(config, backend)
@@ -363,6 +731,7 @@ mod tests {
             queue_cap: 64,
             sigma: 2.0,
             seed: 11,
+            ..Config::default()
         };
         let backend = Arc::new(NativeBackend::new(&[64], 2.0, 11));
         let direct = NativeBackend::new(&[64], 2.0, 11);
@@ -386,6 +755,7 @@ mod tests {
             queue_cap: 64,
             sigma: 1.0,
             seed: 21,
+            ..Config::default()
         };
         let backend = Arc::new(NativeBackend::new(&[64], 1.0, 21));
         let direct = NativeBackend::new(&[64], 1.0, 21);
@@ -449,6 +819,7 @@ mod tests {
             queue_cap: 2,
             sigma: 1.0,
             seed: 1,
+            ..Config::default()
         };
         let backend = Arc::new(NativeBackend::new(&[64], 1.0, 1));
         let c = Coordinator::start(config, backend);
@@ -488,9 +859,22 @@ mod tests {
         assert_eq!(tm.submitted.load(Ordering::Relaxed), 30);
         assert_eq!(tm.completed.load(Ordering::Relaxed), 30);
         assert_eq!(tm.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(tm.lane_failures.load(Ordering::Relaxed), 0);
+        assert_eq!(tm.restarts.load(Ordering::Relaxed), 0);
         assert!(tm.latency.count() == 30);
         let j = c.metrics_json().to_string();
         assert!(crate::util::json::Json::parse(&j).is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn health_json_reports_open_lanes() {
+        let c = test_coordinator(8, 256);
+        let h = c.health_json();
+        let lane = h.get("transform_n64").expect("transform lane in health");
+        assert_eq!(lane.get("state").unwrap().as_str(), Some("open"));
+        assert_eq!(lane.get("restarts").unwrap().as_f64(), Some(0.0));
+        assert!(crate::util::json::Json::parse(&h.to_string()).is_ok());
         c.shutdown();
     }
 
@@ -546,6 +930,7 @@ mod tests {
 mod failure_tests {
     use super::*;
     use crate::util::rng::Rng;
+    use std::sync::atomic::AtomicBool;
 
     /// Backend that fails every call — exercises the error fan-out path.
     struct FailingBackend;
@@ -585,6 +970,66 @@ mod failure_tests {
         }
     }
 
+    /// Backend that panics whenever the batch contains a poisoned row
+    /// (first element above 900) — singleton retries then isolate it.
+    struct PanickyBackend {
+        inner: NativeBackend,
+    }
+
+    impl Backend for PanickyBackend {
+        fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+            for row in xs.chunks_exact(n) {
+                if row[0] > 900.0 {
+                    panic!("poisoned input row");
+                }
+            }
+            self.inner.run_batch(op, n, rows, xs)
+        }
+        fn name(&self) -> &'static str {
+            "panicky"
+        }
+    }
+
+    /// Backend returning a wrong-shape batch for its first `bad` calls —
+    /// the lane-fatal invariant violation the supervisor must absorb.
+    struct MalformedBackend {
+        inner: NativeBackend,
+        bad: std::sync::atomic::AtomicU64,
+    }
+
+    impl Backend for MalformedBackend {
+        fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+            let left = self.bad.load(Ordering::Relaxed);
+            if left > 0 {
+                self.bad.store(left - 1, Ordering::Relaxed);
+                return Ok(Output::F32(vec![0.0])); // wrong length
+            }
+            self.inner.run_batch(op, n, rows, xs)
+        }
+        fn name(&self) -> &'static str {
+            "malformed"
+        }
+    }
+
+    /// Backend whose failure mode is toggled at runtime (breaker tests).
+    struct SwitchableBackend {
+        inner: NativeBackend,
+        failing: AtomicBool,
+    }
+
+    impl Backend for SwitchableBackend {
+        fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+            if self.failing.load(Ordering::Relaxed) {
+                Err("switched off".into())
+            } else {
+                self.inner.run_batch(op, n, rows, xs)
+            }
+        }
+        fn name(&self) -> &'static str {
+            "switchable"
+        }
+    }
+
     fn config() -> Config {
         Config {
             lanes: vec![(Op::Transform, 64)],
@@ -593,6 +1038,10 @@ mod failure_tests {
             queue_cap: 64,
             sigma: 1.0,
             seed: 1,
+            // most failure tests drive long failure streaks on purpose;
+            // the breaker has its own dedicated test below
+            breaker_threshold: 0,
+            ..Config::default()
         }
     }
 
@@ -607,7 +1056,10 @@ mod failure_tests {
         for (id, rx) in rxs {
             let resp = rx.recv().expect("a response, even on failure");
             assert_eq!(resp.id, id);
-            assert_eq!(resp.result.unwrap_err(), "injected failure");
+            assert_eq!(
+                resp.result.unwrap_err(),
+                RequestError::Backend("injected failure".into())
+            );
         }
         let m = c.metrics();
         let (_, lm) = &m[0];
@@ -640,6 +1092,184 @@ mod failure_tests {
         }
         assert!(ok > 0, "some requests must succeed");
         assert!(err > 0, "some requests must fail (flaky backend)");
+        c.shutdown();
+    }
+
+    #[test]
+    fn panicking_batch_is_retried_as_singletons() {
+        let be = PanickyBackend {
+            inner: NativeBackend::new(&[64], 1.0, 1),
+        };
+        let cfg = Config {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            ..config()
+        };
+        let c = Coordinator::start(cfg, Arc::new(be));
+        let mut rng = Rng::new(3);
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let mut v = rng.gaussian_vec(64);
+            if i == 2 {
+                v[0] = 1000.0; // the poisoned request
+            }
+            rxs.push((i, c.submit(Op::Transform, v).unwrap()));
+        }
+        for (i, (id, rx)) in rxs {
+            let resp = rx.recv().expect("terminal response despite panics");
+            assert_eq!(resp.id, id);
+            if i == 2 {
+                let err = resp.result.unwrap_err();
+                assert!(
+                    matches!(&err, RequestError::Panic(m) if m.contains("poisoned")),
+                    "poisoned request must wear the panic: {err:?}"
+                );
+            } else {
+                assert_eq!(
+                    resp.result.unwrap().as_f32().unwrap().len(),
+                    64,
+                    "batchmates of a poisoned request must still succeed"
+                );
+            }
+        }
+        let m = c.metrics();
+        let (_, lm) = &m[0];
+        assert!(lm.panics.load(Ordering::Relaxed) >= 1, "panic counted");
+        assert_eq!(lm.lane_failures.load(Ordering::Relaxed), 0, "lane lived");
+        c.shutdown();
+    }
+
+    #[test]
+    fn deadline_expires_queued_jobs_before_backend_time() {
+        // a 150ms-per-call backend: the second request queues behind the
+        // first and expires (20ms deadline) before the lane reaches it
+        let inner: Arc<dyn Backend> = Arc::new(NativeBackend::new(&[64], 1.0, 1));
+        let plan = FaultPlan::parse("delay_ms:150").unwrap();
+        let be = Arc::new(FaultInjectingBackend::new(inner, plan));
+        let cfg = Config {
+            max_batch: 1,
+            ..config()
+        };
+        let c = Coordinator::start(cfg, be);
+        let mut rng = Rng::new(4);
+        let (_, rx1) = c.submit(Op::Transform, rng.gaussian_vec(64)).unwrap();
+        let (_, rx2) = c
+            .submit_with_deadline(
+                Op::Transform,
+                rng.gaussian_vec(64),
+                Some(Duration::from_millis(20)),
+            )
+            .unwrap();
+        assert!(rx1.recv().unwrap().result.is_ok(), "undeadlined job runs");
+        assert_eq!(
+            rx2.recv().unwrap().result.unwrap_err(),
+            RequestError::Deadline
+        );
+        let m = c.metrics();
+        let (_, lm) = &m[0];
+        assert_eq!(lm.expired.load(Ordering::Relaxed), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn call_timeout_never_hangs_on_a_slow_backend() {
+        let inner: Arc<dyn Backend> = Arc::new(NativeBackend::new(&[64], 1.0, 1));
+        let plan = FaultPlan::parse("delay_ms:800").unwrap();
+        let be = Arc::new(FaultInjectingBackend::new(inner, plan));
+        let c = Coordinator::start(config(), be);
+        let t0 = Instant::now();
+        let r = c.call_timeout(
+            Op::Transform,
+            vec![1.0; 64],
+            Duration::from_millis(50),
+        );
+        let err = r.unwrap_err();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_millis(700),
+            "call_timeout must return before the slow backend does"
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn breaker_opens_sheds_then_recovers() {
+        let be = Arc::new(SwitchableBackend {
+            inner: NativeBackend::new(&[64], 1.0, 1),
+            failing: AtomicBool::new(true),
+        });
+        let cfg = Config {
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_millis(100),
+            ..config()
+        };
+        let c = Coordinator::start(cfg, Arc::clone(&be));
+        // two consecutive failing calls open the breaker (record happens
+        // before the response is sent, so after call() returns it's set)
+        for _ in 0..2 {
+            assert!(c.call(Op::Transform, vec![1.0; 64]).is_err());
+        }
+        let shed = c.submit(Op::Transform, vec![1.0; 64]).unwrap_err();
+        assert_eq!(shed, SubmitError::Unavailable, "open breaker sheds");
+        let m = c.metrics();
+        let (_, lm) = &m[0];
+        assert_eq!(lm.breaker_opens.load(Ordering::Relaxed), 1);
+        assert!(lm.shed_unavailable.load(Ordering::Relaxed) >= 1);
+        // heal the backend, wait out the cooldown: the half-open probe
+        // succeeds and the breaker closes
+        be.failing.store(false, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(120));
+        c.call(Op::Transform, vec![1.0; 64])
+            .expect("half-open probe after cooldown must be admitted");
+        c.call(Op::Transform, vec![1.0; 64])
+            .expect("breaker closed after a successful probe");
+        c.shutdown();
+    }
+
+    #[test]
+    fn dead_lane_is_detected_counted_and_restarted() {
+        let be = Arc::new(MalformedBackend {
+            inner: NativeBackend::new(&[64], 1.0, 1),
+            bad: std::sync::atomic::AtomicU64::new(1),
+        });
+        let cfg = Config {
+            restart_backoff: Duration::from_millis(5),
+            restart_backoff_max: Duration::from_millis(40),
+            ..config()
+        };
+        let c = Coordinator::start(cfg, be);
+        // first call hits the malformed output -> lane-fatal panic; the
+        // in-flight reply channel disconnects but call_timeout surfaces it
+        let err = c
+            .call_timeout(Op::Transform, vec![1.0; 64], Duration::from_secs(2))
+            .unwrap_err();
+        assert!(
+            err.contains("restarted") || err.contains("timed out"),
+            "lost in-flight request must surface an error: {err}"
+        );
+        // the supervisor restarts the lane within the backoff window
+        let m = c.metrics();
+        let (_, lm) = &m[0];
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while lm.restarts.load(Ordering::Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "lane must restart");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(lm.lane_failures.load(Ordering::Relaxed) >= 1);
+        // restarted lane serves traffic again
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match c.call_timeout(Op::Transform, vec![1.0; 64], Duration::from_secs(1)) {
+                Ok(out) => {
+                    assert_eq!(out.as_f32().unwrap().len(), 64);
+                    break;
+                }
+                Err(_) => {
+                    assert!(Instant::now() < deadline, "restarted lane must serve");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
         c.shutdown();
     }
 }

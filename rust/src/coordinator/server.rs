@@ -5,9 +5,11 @@
 //! ```text
 //! -> {"id": 7, "op": "transform", "vector": [0.1, -0.3, ...]}
 //! <- {"id": 7, "ok": true, "result": [ ... ]}
-//! -> {"id": 8, "op": "binary_embed", "vector": [0.1, -0.3, ...]}
+//! -> {"id": 8, "op": "binary_embed", "vector": [0.1, -0.3, ...], "timeout_ms": 50}
 //! <- {"id": 8, "ok": true, "result": ["a3ff00125e9c7b01", ...]}
-//! <- {"id": 8, "ok": false, "error": "lane queue full"}
+//! <- {"id": 8, "ok": false, "error": "lane queue full", "code": "busy"}
+//! -> {"id": 9, "op": "metrics"}            (also: "health")
+//! <- {"id": 9, "ok": true, "result": { per-lane counters / states }}
 //! ```
 //!
 //! `transform`/`rff` results are f32 arrays, `crosspolytope` a one-element
@@ -15,6 +17,14 @@
 //! fixed-width 16-digit lowercase hex string (bit `i % 64` of word
 //! `i / 64` = projection coordinate `i` negative) — exact, and ~5× fewer
 //! response bytes than the float lane on the wire (32× in decoded form).
+//!
+//! Failure responses carry a stable machine-readable `code` alongside the
+//! human-readable `error`: admission codes (`busy`, `unavailable`,
+//! `lane_down`, ...), terminal request codes (`deadline`, `panic`,
+//! `backend`), `timeout` (response-side wait exceeded), and `bad_request`
+//! for malformed lines. An optional `timeout_ms` field sets the request's
+//! deadline: expired-in-queue requests are answered `code: "deadline"`
+//! without spending backend time.
 //!
 //! Each connection gets a handler thread; requests within a connection are
 //! pipelined (responses come back in submit order, matching the lane's
@@ -30,13 +40,13 @@
 //! and exits — shutdown cannot race a half-written response, and no
 //! detached handler outlives the server.
 
-use super::{Coordinator, SubmitError};
+use super::{Coordinator, SubmitError, DEFAULT_CALL_TIMEOUT, RESPONSE_GRACE};
 use crate::runtime::{Op, Output};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 /// How often a blocked connection reader re-checks the stop flag.
@@ -194,32 +204,77 @@ fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc
 pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
     let doc = match Json::parse(line) {
         Ok(d) => d,
-        Err(e) => return err_response(Json::Null, &format!("bad json: {e}")),
+        Err(e) => return err_response(Json::Null, &format!("bad json: {e}"), "bad_request"),
     };
     let id = doc.get("id").cloned().unwrap_or(Json::Null);
-    let Some(op) = doc.get("op").and_then(|o| o.as_str()).and_then(Op::parse) else {
-        return err_response(id, "missing or unknown 'op'");
+    let op_str = doc.get("op").and_then(|o| o.as_str());
+    // introspection ops carry no vector and answer from shared state
+    match op_str {
+        Some("metrics") => {
+            return Json::obj(vec![
+                ("id", id),
+                ("ok", Json::Bool(true)),
+                ("result", coordinator.metrics_json()),
+            ])
+        }
+        Some("health") => {
+            return Json::obj(vec![
+                ("id", id),
+                ("ok", Json::Bool(true)),
+                ("result", coordinator.health_json()),
+            ])
+        }
+        _ => {}
+    }
+    let Some(op) = op_str.and_then(Op::parse) else {
+        return err_response(id, "missing or unknown 'op'", "bad_request");
+    };
+    let timeout = match doc.get("timeout_ms") {
+        None => None,
+        Some(t) => match t.as_f64() {
+            Some(ms) if ms.is_finite() && ms >= 0.0 => Some(Duration::from_millis(ms as u64)),
+            _ => {
+                return err_response(
+                    id,
+                    "'timeout_ms' must be a non-negative number",
+                    "bad_request",
+                )
+            }
+        },
     };
     let Some(vec_json) = doc.get("vector").and_then(|v| v.as_arr()) else {
-        return err_response(id, "missing 'vector' array");
+        return err_response(id, "missing 'vector' array", "bad_request");
     };
     let mut vector = Vec::with_capacity(vec_json.len());
     for v in vec_json {
         match v.as_f64() {
             Some(f) => vector.push(f as f32),
-            None => return err_response(id, "'vector' must contain numbers"),
+            None => return err_response(id, "'vector' must contain numbers", "bad_request"),
         }
     }
-    match coordinator.submit(op, vector) {
-        Ok((_, rx)) => match rx.recv() {
-            Ok(resp) => match resp.result {
-                Ok(out) => ok_response(id, out),
-                Err(e) => err_response(id, &e),
-            },
-            Err(_) => err_response(id, "coordinator dropped response"),
-        },
-        Err(SubmitError::Busy) => err_response(id, "lane queue full"),
-        Err(e) => err_response(id, &e.to_string()),
+    match coordinator.submit_with_deadline(op, vector, timeout) {
+        Ok((_, rx)) => {
+            // bounded wait: the lane's own typed Deadline answer should win
+            // the race (RESPONSE_GRACE), but a dead or wedged lane must
+            // surface an error here, never hang the connection handler
+            let wait = timeout.unwrap_or(DEFAULT_CALL_TIMEOUT).saturating_add(RESPONSE_GRACE);
+            match rx.recv_timeout(wait) {
+                Ok(resp) => match resp.result {
+                    Ok(out) => ok_response(id, out),
+                    Err(e) => err_response(id, &e.to_string(), e.code()),
+                },
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    err_response(id, "response timed out", "timeout")
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => err_response(
+                    id,
+                    "lane dropped response (restarted mid-request)",
+                    "lane_down",
+                ),
+            }
+        }
+        Err(SubmitError::Busy) => err_response(id, "lane queue full", "busy"),
+        Err(e) => err_response(id, &e.to_string(), e.code()),
     }
 }
 
@@ -249,11 +304,12 @@ pub fn hex_to_word(s: &str) -> Option<u64> {
     u64::from_str_radix(s, 16).ok()
 }
 
-fn err_response(id: Json, msg: &str) -> Json {
+fn err_response(id: Json, msg: &str, code: &str) -> Json {
     Json::obj(vec![
         ("id", id),
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.to_string())),
+        ("code", Json::Str(code.to_string())),
     ])
 }
 
@@ -275,6 +331,7 @@ mod tests {
             queue_cap: 64,
             sigma: 1.0,
             seed: 3,
+            ..Config::default()
         };
         let backend = Arc::new(NativeBackend::new(&[64], 1.0, 3));
         Arc::new(Coordinator::start(config, backend))
@@ -338,6 +395,61 @@ mod tests {
         // wire footprint: 18 bytes ("...") per packed word vs ~12 per f32
         // number × 64 — the response line is ~20x shorter
         assert!(resp.to_string().len() * 10 < tresp.to_string().len() * 2);
+    }
+
+    #[test]
+    fn process_line_error_responses_carry_codes() {
+        let c = coordinator();
+        let r = process_line("{nope", &c);
+        assert_eq!(r.get("code").unwrap().as_str(), Some("bad_request"));
+        let r = process_line(r#"{"id":4,"op":"transform","vector":[1,2]}"#, &c);
+        assert_eq!(r.get("code").unwrap().as_str(), Some("unknown_lane"));
+    }
+
+    #[test]
+    fn process_line_metrics_and_health_ops() {
+        let c = coordinator();
+        // serve one real request so the counters are non-trivial
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", i as f32 / 64.0)).collect();
+        let line = format!(
+            r#"{{"id": 1, "op": "transform", "vector": [{}]}}"#,
+            vec_str.join(",")
+        );
+        assert_eq!(process_line(&line, &c).get("ok"), Some(&Json::Bool(true)));
+        // metrics op: per-lane counters, consistent with metrics_json()
+        let m = process_line(r#"{"id": 2, "op": "metrics"}"#, &c);
+        assert_eq!(m.get("ok"), Some(&Json::Bool(true)));
+        let lane = m.get("result").unwrap().get("transform_n64").unwrap();
+        assert_eq!(lane.get("completed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(lane.get("lane_failures").unwrap().as_f64(), Some(0.0));
+        // health op: lane states
+        let h = process_line(r#"{"id": 3, "op": "health"}"#, &c);
+        assert_eq!(h.get("ok"), Some(&Json::Bool(true)));
+        let lane = h.get("result").unwrap().get("transform_n64").unwrap();
+        assert_eq!(lane.get("state").unwrap().as_str(), Some("open"));
+        // both responses are valid JSON on the wire
+        assert!(Json::parse(&m.to_string()).is_ok());
+        assert!(Json::parse(&h.to_string()).is_ok());
+    }
+
+    #[test]
+    fn process_line_rejects_bad_timeout() {
+        let c = coordinator();
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", i as f32)).collect();
+        let line = format!(
+            r#"{{"id": 5, "op": "transform", "vector": [{}], "timeout_ms": -3}}"#,
+            vec_str.join(",")
+        );
+        let r = process_line(&line, &c);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("timeout_ms"));
+        // a generous explicit timeout passes through and succeeds
+        let line = format!(
+            r#"{{"id": 6, "op": "transform", "vector": [{}], "timeout_ms": 5000}}"#,
+            vec_str.join(",")
+        );
+        assert_eq!(process_line(&line, &c).get("ok"), Some(&Json::Bool(true)));
     }
 
     #[test]

@@ -64,6 +64,25 @@
 //! ~`3n` parameter bits ([`transform::Transform::stored_bits`]) and `m`
 //! output bits per embedding ([`binary::BinaryEmbedding::output_bits`]).
 //!
+//! ## Fault-isolated serving
+//!
+//! The serving stack treats the backend as untrusted: every backend batch
+//! call runs under `catch_unwind`, a panicking batch is retried as
+//! singletons so one poisoned input cannot fail its batchmates, and a
+//! lane-fatal invariant violation (malformed output shape) kills only that
+//! lane's thread — a supervisor counts the death, fails submits fast with
+//! `LaneDown`, and restarts the lane with bounded exponential backoff.
+//! Requests carry optional deadlines (dropped with a typed `Deadline`
+//! error before backend time is spent once expired), each lane has a
+//! consecutive-failure circuit breaker (`Unavailable` fail-fast shedding
+//! with half-open probing), and the `health` / `metrics` wire ops expose
+//! per-lane state (`open` / `degraded` / `dead-restarting`) and the
+//! failure counters. Deterministic chaos comes from
+//! [`coordinator::FaultInjectingBackend`]
+//! (`TS_FAULT=panic:p,err:p,delay_ms:d,seed:s`), driven by
+//! `rust/tests/chaos_serving.rs` and the `serving_fault` bench sweep
+//! (error-path latency is measured, not assumed zero).
+//!
 //! ## Layout
 //!
 //! * [`util`] / [`linalg`] — substrates: seeded RNG, JSON, bench/property
@@ -87,8 +106,10 @@
 //!   PJRT executor loading `artifacts/*.hlo.txt` that
 //!   `python/compile/aot.py` lowered from the JAX/Pallas layers.
 //! * [`coordinator`] — L3 serving layer: request router, dynamic batcher,
-//!   worker pool, metrics, backpressure; ops `transform` / `rff` /
-//!   `crosspolytope` / `binary_embed` over newline-JSON TCP.
+//!   worker pool, metrics, backpressure, lane supervision (panic
+//!   isolation, circuit breaker, deadline propagation, fault injection);
+//!   ops `transform` / `rff` / `crosspolytope` / `binary_embed` (plus
+//!   `metrics` / `health` introspection) over newline-JSON TCP.
 
 pub mod binary;
 pub mod coordinator;

@@ -16,7 +16,9 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use triplespin::coordinator::{Backend, Config, Coordinator, NativeBackend, PjrtBackend};
+use triplespin::coordinator::{
+    Backend, Config, Coordinator, FaultInjectingBackend, NativeBackend, PjrtBackend,
+};
 use triplespin::runtime::{Op, RuntimeService};
 use triplespin::transform::{make_square, Family};
 use triplespin::util::rng::Rng;
@@ -56,7 +58,11 @@ COMMANDS:
   serve           start coordinator; drive --requests N at --rate req/s
                   (--backend native|pjrt, --n 256,
                    --op transform|rff|crosspolytope|binary_embed,
-                   --max-batch 64, --queue 1024)
+                   --max-batch 64, --queue 1024,
+                   --deadline-ms 0 [0 = none], --breaker-threshold 8,
+                   --breaker-cooldown-ms 250)
+                  TS_FAULT=panic:p,err:p,delay_ms:d,seed:s injects
+                  deterministic backend faults (chaos testing)
   transform       one-shot transform (--family hd3|hdg|circulant|toeplitz|
                   hankel|skew|dense, --n 256, --seed 42; --binary adds the
                   packed sign-quantized embedding + footprint accounting)
@@ -246,6 +252,7 @@ fn build_coordinator(
         d.dedup();
         d
     };
+    let deadline_ms: u64 = opt(opts, "deadline-ms", 0);
     let config = Config {
         lanes,
         max_batch: opt(opts, "max-batch", 64),
@@ -253,24 +260,33 @@ fn build_coordinator(
         queue_cap: opt(opts, "queue", 1024),
         sigma,
         seed,
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        breaker_threshold: opt(opts, "breaker-threshold", 8),
+        breaker_cooldown: Duration::from_millis(opt(opts, "breaker-cooldown-ms", 250)),
+        ..Config::default()
     };
     let backend_s = opts
         .get("backend")
         .cloned()
         .unwrap_or_else(|| "native".into());
-    match backend_s.as_str() {
-        "native" => {
-            let be: Arc<dyn Backend> = Arc::new(NativeBackend::new(&dims, sigma, seed));
-            Ok((Coordinator::start(config, be), None))
-        }
+    let (be, svc): (Arc<dyn Backend>, Option<RuntimeService>) = match backend_s.as_str() {
+        "native" => (Arc::new(NativeBackend::new(&dims, sigma, seed)), None),
         "pjrt" => {
             let svc = RuntimeService::spawn(artifact_dir(opts)).map_err(|e| e.to_string())?;
             let be: Arc<dyn Backend> =
                 Arc::new(PjrtBackend::new(svc.handle(), &dims, sigma, seed)?);
-            Ok((Coordinator::start(config, be), Some(svc)))
+            (be, Some(svc))
         }
-        other => Err(format!("unknown backend '{other}' (native|pjrt)")),
+        other => return Err(format!("unknown backend '{other}' (native|pjrt)")),
+    };
+    // chaos testing: TS_FAULT wraps whichever backend was selected; a
+    // malformed plan aborts startup rather than silently injecting nothing
+    let be = FaultInjectingBackend::wrap_env(be)?;
+    if be.name() == "fault" {
+        let plan = std::env::var("TS_FAULT").unwrap_or_default();
+        eprintln!("TS_FAULT active: injecting backend faults ({plan})");
     }
+    Ok((Coordinator::start(config, be), svc))
 }
 
 fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
@@ -308,6 +324,9 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         println!(
             "listening on {} (ops: {ops}, n={n});\n\
              protocol: one JSON per line: {{\"id\":1,\"op\":\"transform\",\"vector\":[..]}}\n\
+             optional \"timeout_ms\" per request; ops \"metrics\" and \"health\"\n\
+             report per-lane counters / breaker state; errors carry a \"code\"\n\
+             (busy|deadline|unavailable|lane_down|backend|panic|timeout|bad_request)\n\
              (binary_embed results are packed sign words as 16-digit hex strings)\n\
              Ctrl-C to stop.",
             server.addr()

@@ -59,10 +59,14 @@ struct Job {
 
 /// Channel ends the submitting side holds; one mutex serializes whole
 /// batches (submit + drain), which also keeps ack accounting trivially
-/// correct under concurrent callers.
+/// correct under concurrent callers. An ack is `None` for success or
+/// `Some(panic message)` — carrying the message (instead of a bare bool)
+/// lets `run()`'s propagated panic say *what* failed inside the worker,
+/// which is what lane supervisors log when a shard kills a lane. Success
+/// acks are still allocation-free (`None` carries nothing).
 struct ExecState {
     job_txs: Vec<SyncSender<Job>>,
-    done_rx: Receiver<bool>,
+    done_rx: Receiver<Option<String>>,
 }
 
 struct PoolInner {
@@ -223,10 +227,14 @@ impl WorkerPool {
             }
             dispatched += 1;
         }
-        let mut task_panicked = false;
+        let mut task_panic: Option<String> = None;
         for _ in 0..dispatched {
             match exec.done_rx.recv() {
-                Ok(ok) => task_panicked |= !ok,
+                Ok(ack) => {
+                    if task_panic.is_none() {
+                        task_panic = ack; // keep the first panic message
+                    }
+                }
                 // Err: every worker is gone, so no outstanding borrows.
                 Err(_) => {
                     worker_gone = true;
@@ -236,12 +244,14 @@ impl WorkerPool {
         }
         drop(exec);
         assert!(!worker_gone, "worker pool: a worker thread died");
-        assert!(!task_panicked, "worker pool: a worker task panicked");
+        if let Some(msg) = task_panic {
+            panic!("worker pool: a worker task panicked: {msg}");
+        }
     }
 
     fn inner(&self) -> &PoolInner {
         self.inner.get_or_init(|| {
-            let (done_tx, done_rx) = sync_channel::<bool>(self.size);
+            let (done_tx, done_rx) = sync_channel::<Option<String>>(self.size);
             let mut job_txs = Vec::with_capacity(self.size);
             let mut handles = Vec::with_capacity(self.size);
             for i in 0..self.size {
@@ -288,16 +298,17 @@ impl std::fmt::Debug for WorkerPool {
     }
 }
 
-fn worker_loop(index: usize, rx: Receiver<Job>, ack: SyncSender<bool>) {
+fn worker_loop(index: usize, rx: Receiver<Job>, ack: SyncSender<Option<String>>) {
     // The pinned workspace: lives exactly as long as the worker thread, so
     // scratch warmed by one batch is reused by every later batch.
     let mut ws = Workspace::new();
     while let Ok(job) = rx.recv() {
-        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             (job.task)(index, &mut ws);
         }))
-        .is_ok();
-        if ack.send(ok).is_err() {
+        .err()
+        .map(|p| crate::util::panic_message(&*p));
+        if ack.send(outcome).is_err() {
             return; // pool dropped mid-ack; nothing left to do
         }
     }
@@ -588,6 +599,9 @@ mod tests {
             });
         }));
         assert!(r.is_err(), "worker panic must propagate to the caller");
+        // the propagated panic carries the worker task's own message
+        let msg = crate::util::panic_message(&*r.unwrap_err());
+        assert!(msg.contains("boom"), "panic message lost: {msg}");
         // the pool still works afterwards
         let hits = AtomicUsize::new(0);
         pool.run(2, &|_i, _ws| {

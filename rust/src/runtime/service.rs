@@ -4,6 +4,12 @@
 //! threads. [`RuntimeService::spawn`] starts one dedicated thread that owns
 //! the [`Executor`]; [`RuntimeHandle`] is a cheap, cloneable, `Send + Sync`
 //! front the coordinator's workers use to execute artifacts.
+//!
+//! The service thread is a single point of failure shared by every lane of
+//! a PJRT-backed coordinator, so executor calls are panic-isolated: a panic
+//! inside `run`/`verify_golden` is caught and returned to the caller as an
+//! [`ExecError`] instead of killing the thread (which would turn one bad
+//! request into `runtime thread gone` for every lane, permanently).
 
 use super::executor::{ExecError, Executor, Output};
 use std::path::PathBuf;
@@ -88,6 +94,18 @@ impl RuntimeHandle {
     }
 }
 
+/// Run one executor call with panic isolation: a panicking artifact
+/// surfaces as an `ExecError` on that request's reply channel while the
+/// service thread (and every other lane's requests) keeps going.
+fn isolated<T>(f: impl FnOnce() -> Result<T, ExecError>) -> Result<T, ExecError> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).unwrap_or_else(|p| {
+        Err(ExecError(format!(
+            "executor panicked: {}",
+            crate::util::panic_message(&*p)
+        )))
+    })
+}
+
 /// The running service (join on drop via [`RuntimeService::shutdown`]).
 pub struct RuntimeService {
     handle: RuntimeHandle,
@@ -122,7 +140,7 @@ impl RuntimeService {
                         } => {
                             let refs: Vec<&[f32]> =
                                 inputs.iter().map(|v| v.as_slice()).collect();
-                            let _ = reply.send(exec.run(&name, &refs));
+                            let _ = reply.send(isolated(|| exec.run(&name, &refs)));
                         }
                         Cmd::Names { reply } => {
                             let _ = reply.send(
@@ -130,7 +148,7 @@ impl RuntimeService {
                             );
                         }
                         Cmd::VerifyGolden { name, reply } => {
-                            let _ = reply.send(exec.verify_golden(&name));
+                            let _ = reply.send(isolated(|| exec.verify_golden(&name)));
                         }
                         Cmd::Shutdown => break,
                     }

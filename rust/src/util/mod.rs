@@ -4,3 +4,17 @@ pub mod bench;
 pub mod json;
 pub mod prop;
 pub mod rng;
+
+/// Best-effort text of a caught panic payload. `panic!("...")` and
+/// `panic!("{x}")` produce `&str` / `String` payloads; anything else (a
+/// custom `panic_any` value) collapses to a placeholder so fault reports
+/// never lose the *fact* of the panic even when its payload is opaque.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}

@@ -1,0 +1,373 @@
+//! Chaos suite: the serving stack under deterministic fault injection.
+//!
+//! CI runs this as a named step (`cargo test --test chaos_serving`). Every
+//! scenario drives a real `Coordinator` (some over a real `TcpServer`)
+//! against a `FaultInjectingBackend` or a purpose-built hostile backend,
+//! and asserts the fault-isolation contract:
+//!
+//! * every accepted request reaches a terminal response — no silent hangs;
+//! * a backend panic fails at most its own request, never the lane;
+//! * a lane-fatal failure is detected, counted, and healed by the
+//!   supervisor (the lane serves again after its restart backoff);
+//! * the circuit breaker opens under a failure streak, sheds fast, and
+//!   closes after a successful half-open probe;
+//! * a fault-free (no-op-plan) stack is bit-identical to the direct
+//!   backend — the isolation machinery costs no determinism.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use triplespin::coordinator::{
+    Backend, Config, Coordinator, FaultInjectingBackend, FaultPlan, NativeBackend, SubmitError,
+    TcpServer,
+};
+use triplespin::runtime::{Op, Output};
+use triplespin::util::json::Json;
+use triplespin::util::rng::Rng;
+
+const N: usize = 64;
+
+fn base_config() -> Config {
+    Config {
+        lanes: vec![(Op::Transform, N)],
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 64,
+        sigma: 1.0,
+        seed: 5,
+        restart_backoff: Duration::from_millis(5),
+        restart_backoff_max: Duration::from_millis(50),
+        ..Config::default()
+    }
+}
+
+fn native() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new(&[N], 1.0, 5))
+}
+
+fn faulty(plan: &str) -> Arc<FaultInjectingBackend> {
+    Arc::new(FaultInjectingBackend::new(
+        native(),
+        FaultPlan::parse(plan).unwrap(),
+    ))
+}
+
+#[test]
+fn every_request_reaches_a_terminal_response_under_faults() {
+    // a hostile mix: panics, errors, and delays — yet every accepted
+    // request must get exactly one terminal answer within bounded time
+    let be = faulty("panic:0.2,err:0.2,delay_ms:1,seed:11");
+    let cfg = Config {
+        breaker_threshold: 0, // isolate: the breaker has its own scenario
+        ..base_config()
+    };
+    let c = Coordinator::start(cfg, Arc::clone(&be) as Arc<dyn Backend>);
+    let mut rng = Rng::new(1);
+    let mut rxs = Vec::new();
+    let mut accepted = 0;
+    for _ in 0..150 {
+        loop {
+            match c.submit(Op::Transform, rng.gaussian_vec(N)) {
+                Ok(p) => {
+                    rxs.push(p);
+                    accepted += 1;
+                    break;
+                }
+                // transient shedding is legal; terminal silence is not
+                Err(SubmitError::Busy | SubmitError::Unavailable | SubmitError::LaneDown) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => panic!("unexpected submit error: {e:?}"),
+            }
+        }
+    }
+    let (mut oks, mut errs) = (0, 0);
+    for (id, rx) in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("terminal response under chaos");
+        assert_eq!(resp.id, id);
+        match resp.result {
+            Ok(out) => {
+                assert_eq!(out.as_f32().unwrap().len(), N);
+                oks += 1;
+            }
+            Err(_) => errs += 1,
+        }
+    }
+    assert_eq!(oks + errs, accepted);
+    assert!(oks > 0, "the fault mix must let some requests through");
+    assert!(errs > 0, "a 40% fault rate must fail some requests");
+    assert!(be.injected_panics.load(Ordering::Relaxed) > 0);
+    let m = c.metrics();
+    let (_, lm) = &m[0];
+    assert!(lm.panics.load(Ordering::Relaxed) > 0, "panics counted");
+    assert_eq!(
+        lm.lane_failures.load(Ordering::Relaxed),
+        0,
+        "injected panics are caught per call — the lane itself never dies"
+    );
+    c.shutdown();
+}
+
+/// Backend returning a wrong-shape batch for its first `bad` calls — the
+/// lane-fatal violation the supervisor must absorb and heal.
+struct MalformedBackend {
+    inner: NativeBackend,
+    bad: AtomicU64,
+}
+
+impl Backend for MalformedBackend {
+    fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+        let left = self.bad.load(Ordering::Relaxed);
+        if left > 0 {
+            self.bad.store(left - 1, Ordering::Relaxed);
+            return Ok(Output::F32(vec![0.0])); // wrong length
+        }
+        self.inner.run_batch(op, n, rows, xs)
+    }
+    fn name(&self) -> &'static str {
+        "malformed"
+    }
+}
+
+#[test]
+fn lane_recovers_after_lane_fatal_failures() {
+    let be = Arc::new(MalformedBackend {
+        inner: NativeBackend::new(&[N], 1.0, 5),
+        bad: AtomicU64::new(2), // two consecutive lane deaths -> backoff doubles
+    });
+    let c = Coordinator::start(base_config(), be);
+    let m = c.metrics();
+    let (_, lm) = &m[0];
+    // drive traffic until both malformed calls have each killed the lane;
+    // requests may be lost to a death (disconnected reply -> error) or
+    // shed with LaneDown during the backoff — but they must never hang
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while lm.restarts.load(Ordering::Relaxed) < 2 {
+        assert!(Instant::now() < deadline, "supervisor must restart the lane");
+        let _ = c.call_timeout(Op::Transform, vec![1.0; N], Duration::from_millis(500));
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(lm.lane_failures.load(Ordering::Relaxed) >= 2);
+    // the healed lane serves again, and health reports it open
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match c.call_timeout(Op::Transform, vec![1.0; N], Duration::from_secs(1)) {
+            Ok(out) => {
+                assert_eq!(out.as_f32().unwrap().len(), N);
+                break;
+            }
+            Err(_) => {
+                assert!(Instant::now() < deadline, "restarted lane must serve");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+    let h = c.health_json();
+    let lane = h.get(&format!("transform_n{N}")).unwrap();
+    assert_eq!(lane.get("state").unwrap().as_str(), Some("open"));
+    assert!(lane.get("restarts").unwrap().as_f64().unwrap() >= 2.0);
+    c.shutdown();
+}
+
+/// Backend whose failure mode is toggled at runtime.
+struct SwitchableBackend {
+    inner: NativeBackend,
+    failing: AtomicBool,
+}
+
+impl Backend for SwitchableBackend {
+    fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+        if self.failing.load(Ordering::Relaxed) {
+            Err("dependency down".into())
+        } else {
+            self.inner.run_batch(op, n, rows, xs)
+        }
+    }
+    fn name(&self) -> &'static str {
+        "switchable"
+    }
+}
+
+#[test]
+fn breaker_opens_and_closes_on_the_wire() {
+    let be = Arc::new(SwitchableBackend {
+        inner: NativeBackend::new(&[N], 1.0, 5),
+        failing: AtomicBool::new(true),
+    });
+    let cfg = Config {
+        breaker_threshold: 2,
+        breaker_cooldown: Duration::from_millis(100),
+        ..base_config()
+    };
+    let c = Coordinator::start(cfg, Arc::clone(&be));
+    let vec_json: String = (0..N)
+        .map(|i| format!("{}", i as f32 / 8.0))
+        .collect::<Vec<_>>()
+        .join(",");
+    let line = |id: u64| format!(r#"{{"id": {id}, "op": "transform", "vector": [{vec_json}]}}"#);
+    // two consecutive failures open the breaker...
+    for id in 1..=2 {
+        let r = triplespin::coordinator::server::process_line(&line(id), &c);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("code").unwrap().as_str(), Some("backend"));
+    }
+    // ...so the next request is shed fast with code "unavailable"
+    let r = triplespin::coordinator::server::process_line(&line(3), &c);
+    assert_eq!(r.get("code").unwrap().as_str(), Some("unavailable"), "{r}");
+    let h = c.health_json();
+    let lane = h.get(&format!("transform_n{N}")).unwrap();
+    assert_eq!(lane.get("state").unwrap().as_str(), Some("degraded"));
+    // heal the dependency and wait out the cooldown: the half-open probe
+    // closes the breaker and traffic flows again
+    be.failing.store(false, Ordering::Relaxed);
+    std::thread::sleep(Duration::from_millis(120));
+    let r = triplespin::coordinator::server::process_line(&line(4), &c);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
+    let h = c.health_json();
+    let lane = h.get(&format!("transform_n{N}")).unwrap();
+    assert_eq!(lane.get("state").unwrap().as_str(), Some("open"));
+    c.shutdown();
+}
+
+#[test]
+fn tcp_chaos_every_line_gets_a_parseable_reply() {
+    // three pipelining clients against a panicky/flaky backend over a real
+    // socket: the wire contract (one valid JSON reply per line, with ok
+    // bool and, on failure, a code) must hold under chaos, and shutdown
+    // must still join cleanly
+    let be = faulty("panic:0.3,err:0.3,seed:3");
+    let cfg = Config {
+        breaker_threshold: 0,
+        ..base_config()
+    };
+    let c = Arc::new(Coordinator::start(cfg, be as Arc<dyn Backend>));
+    let server = TcpServer::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let mut joins = Vec::new();
+    for t in 0..3u64 {
+        joins.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let vals: Vec<String> = (0..N).map(|i| format!("{}", (i as f32) + t as f32)).collect();
+            let per_client = 20;
+            for id in 0..per_client {
+                let line = format!(
+                    "{{\"id\": {id}, \"op\": \"transform\", \"vector\": [{}]}}\n",
+                    vals.join(",")
+                );
+                stream.write_all(line.as_bytes()).unwrap();
+            }
+            let (mut oks, mut errs) = (0, 0);
+            for id in 0..per_client {
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                let doc = Json::parse(resp.trim()).expect("every reply parses");
+                assert_eq!(doc.get("id").unwrap().as_f64(), Some(id as f64));
+                match doc.get("ok") {
+                    Some(&Json::Bool(true)) => oks += 1,
+                    Some(&Json::Bool(false)) => {
+                        assert!(doc.get("code").is_some(), "failures carry a code: {doc}");
+                        errs += 1;
+                    }
+                    other => panic!("reply without ok bool: {other:?}"),
+                }
+            }
+            (oks, errs)
+        }));
+    }
+    let (mut oks, mut errs) = (0, 0);
+    for j in joins {
+        let (o, e) = j.join().unwrap();
+        oks += o;
+        errs += e;
+    }
+    assert_eq!(oks + errs, 60, "every line answered");
+    assert!(oks > 0 && errs > 0, "chaos mix: {oks} ok / {errs} err");
+    server.shutdown();
+}
+
+#[test]
+fn deadline_expires_on_the_wire() {
+    // a 150ms backend with a single-row batch: a queued request with a
+    // 30ms timeout_ms must come back code "deadline" without waiting for
+    // the backend to reach it
+    let be = faulty("delay_ms:150");
+    let cfg = Config {
+        max_batch: 1,
+        ..base_config()
+    };
+    let c = Arc::new(Coordinator::start(cfg, be as Arc<dyn Backend>));
+    let server = TcpServer::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let vals: Vec<String> = (0..N).map(|i| format!("{}", i as f32)).collect();
+    // connection A occupies the lane with an undeadlined request
+    let mut a = TcpStream::connect(addr).unwrap();
+    let mut a_reader = BufReader::new(a.try_clone().unwrap());
+    a.write_all(
+        format!("{{\"id\": 1, \"op\": \"transform\", \"vector\": [{}]}}\n", vals.join(","))
+            .as_bytes(),
+    )
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(20)); // let A reach the backend
+    // connection B queues behind it with a 30ms deadline
+    let mut b = TcpStream::connect(addr).unwrap();
+    let mut b_reader = BufReader::new(b.try_clone().unwrap());
+    b.write_all(
+        format!(
+            "{{\"id\": 2, \"op\": \"transform\", \"vector\": [{}], \"timeout_ms\": 30}}\n",
+            vals.join(",")
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut resp = String::new();
+    b_reader.read_line(&mut resp).unwrap();
+    let doc = Json::parse(resp.trim()).unwrap();
+    assert_eq!(doc.get("ok"), Some(&Json::Bool(false)), "{doc}");
+    assert_eq!(doc.get("code").unwrap().as_str(), Some("deadline"), "{doc}");
+    assert_eq!(
+        doc.get("error").unwrap().as_str(),
+        Some("deadline exceeded")
+    );
+    // A's request still completes normally
+    let mut resp = String::new();
+    a_reader.read_line(&mut resp).unwrap();
+    let doc = Json::parse(resp.trim()).unwrap();
+    assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{doc}");
+    let m = c.metrics();
+    let (_, lm) = &m[0];
+    assert_eq!(lm.expired.load(Ordering::Relaxed), 1);
+    server.shutdown();
+}
+
+#[test]
+fn fault_free_stack_is_bit_identical_to_direct_backend() {
+    // determinism unaffected when faults are off: the whole supervised /
+    // breakered / deadline-aware stack over a no-op-plan injector must
+    // produce byte-identical outputs to a direct backend call
+    let inner = native();
+    let wrapped = Arc::new(FaultInjectingBackend::new(
+        Arc::clone(&inner),
+        FaultPlan::default(),
+    ));
+    let direct = NativeBackend::new(&[N], 1.0, 5);
+    let c = Coordinator::start(base_config(), wrapped);
+    let mut rng = Rng::new(9);
+    for _ in 0..25 {
+        let v = rng.gaussian_vec(N);
+        let got = c.call(Op::Transform, v.clone()).unwrap();
+        let want = direct.run_batch(Op::Transform, N, 1, &v).unwrap();
+        assert_eq!(got, want, "fault-free serving must be bit-identical");
+    }
+    let m = c.metrics();
+    let (_, lm) = &m[0];
+    assert_eq!(lm.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(lm.panics.load(Ordering::Relaxed), 0);
+    assert_eq!(lm.lane_failures.load(Ordering::Relaxed), 0);
+    c.shutdown();
+}

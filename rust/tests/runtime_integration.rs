@@ -110,6 +110,7 @@ fn coordinator_over_pjrt_end_to_end() {
         queue_cap: 256,
         sigma,
         seed,
+        ..coordinator::Config::default()
     };
     let c = Coordinator::start(config, backend);
     let native = NativeBackend::new(&[256], sigma, seed);

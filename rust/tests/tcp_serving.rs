@@ -27,6 +27,7 @@ fn config(queue_cap: usize, max_wait: Duration) -> Config {
         queue_cap,
         sigma: 1.0,
         seed: 17,
+        ..Config::default()
     }
 }
 
@@ -70,6 +71,57 @@ fn round_trip_transform_and_binary_embed() {
     for (i, y) in dense.iter().enumerate() {
         let neg = y.as_f64().unwrap().is_sign_negative();
         assert_eq!((word >> i) & 1 == 1, neg, "bit {i}");
+    }
+
+    drop(reader);
+    drop(stream);
+    server.shutdown();
+}
+
+#[test]
+fn metrics_and_health_ops_round_trip_on_the_wire() {
+    let backend = Arc::new(NativeBackend::new(&[N], 1.0, 17));
+    let c = Arc::new(Coordinator::start(
+        config(64, Duration::from_micros(200)),
+        backend,
+    ));
+    let server = TcpServer::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // serve two real requests so the counters have something to say
+    for id in 1..=2 {
+        let t = request(&mut stream, &mut reader, id, "transform");
+        assert_eq!(t.get("ok"), Some(&Json::Bool(true)), "{t}");
+    }
+    // metrics op: per-lane counters, including the fault-isolation schema
+    stream.write_all(b"{\"id\": 10, \"op\": \"metrics\"}\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let m = Json::parse(resp.trim()).unwrap();
+    assert_eq!(m.get("ok"), Some(&Json::Bool(true)), "{m}");
+    let lane = m
+        .get("result")
+        .and_then(|r| r.get(&format!("transform_n{N}")))
+        .expect("transform lane in metrics");
+    assert_eq!(lane.get("completed").unwrap().as_f64(), Some(2.0));
+    for key in ["lane_failures", "restarts", "breaker_opens", "expired", "panics"] {
+        assert_eq!(lane.get(key).unwrap().as_f64(), Some(0.0), "{key}");
+    }
+    // health op: every lane open on a healthy server
+    stream.write_all(b"{\"id\": 11, \"op\": \"health\"}\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let h = Json::parse(resp.trim()).unwrap();
+    assert_eq!(h.get("ok"), Some(&Json::Bool(true)), "{h}");
+    for op in ["transform", "binary_embed"] {
+        let lane = h
+            .get("result")
+            .and_then(|r| r.get(&format!("{op}_n{N}")))
+            .expect("lane in health");
+        assert_eq!(lane.get("state").unwrap().as_str(), Some("open"), "{op}");
     }
 
     drop(reader);
