@@ -197,7 +197,7 @@ pub fn angular_estimate(hamming: u64, bits: usize) -> f64 {
 pub fn pack_projection_into(t: &dyn Transform, x: &[f32], out: &mut [u64], ws: &mut Workspace) {
     let k = t.dim_out();
     debug_assert_eq!(out.len(), k.div_ceil(64));
-    let mut proj = ws.take_f32_uninit(k); // fully overwritten
+    let mut proj = ws.take_f32_uninit(k); // OVERWRITE: fully overwritten
     t.apply_padded_into(x, &mut proj, ws);
     simd::pack_signs(&proj, out);
     ws.put_f32(proj);
@@ -233,9 +233,9 @@ pub fn pack_projection_batch_into(
     let work = t.batch_work_per_row();
     shard_rows(pool, rows, work, &|lo, hi, _slot, ws| {
         let block = hi - lo;
-        let mut proj = ws.take_f32_uninit(block * k); // fully overwritten
+        let mut proj = ws.take_f32_uninit(block * k); // OVERWRITE: fully overwritten
         t.apply_batch_serial(&xs[lo * n..hi * n], &mut proj, ws);
-        // Safety: shard_rows hands out disjoint, covering row ranges and
+        // SAFETY: shard_rows hands out disjoint, covering row ranges and
         // blocks until every worker acked — no aliasing, no write outlives
         // this call.
         let oc = unsafe {

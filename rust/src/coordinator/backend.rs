@@ -190,7 +190,7 @@ fn shard_proj_out<T, F>(
     let proj_ptr = proj.as_mut_ptr() as usize;
     let out_ptr = out.as_mut_ptr() as usize;
     pool_shard_rows(pool, rows, work_per_row, &|lo, hi, _slot, _ws| {
-        // Safety: shard_rows hands out disjoint, covering row ranges and
+        // SAFETY: shard_rows hands out disjoint, covering row ranges and
         // blocks until every worker finished, so the raw-slice views below
         // never alias and never outlive the borrow of proj/out.
         let pc = unsafe {
@@ -221,7 +221,7 @@ impl Backend for NativeBackend {
                     let out_ptr = out.as_mut_ptr() as usize;
                     let work = Self::chain_work(n);
                     pool_shard_rows(self.pool(), rows, work, &|lo, hi, _slot, _ws| {
-                        // Safety: disjoint covering row ranges; the pool
+                        // SAFETY: disjoint covering row ranges; the pool
                         // blocks until every worker acked.
                         let chunk = unsafe {
                             std::slice::from_raw_parts_mut(

@@ -23,7 +23,10 @@
 //! measured as microseconds since a per-state [`Instant`] epoch so the
 //! cooldown comparison is a single `u64` load.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+// Atomics come through the loom façade so the `--cfg loom` lane can model
+// every interleaving of this file's lock-free protocol (see
+// `crate::loom_models::breaker_*`); a normal build gets std atomics.
+use crate::util::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::time::{Duration, Instant};
 
 const PHASE_OPEN: u8 = 0;
@@ -85,6 +88,9 @@ impl LaneState {
     }
 
     pub fn phase(&self) -> Phase {
+        // ORDERING: Relaxed — an advisory snapshot for admission/health; a
+        // momentarily stale phase only means one extra queued request or a
+        // slightly dated health report, never a safety violation.
         match self.phase.load(Ordering::Relaxed) {
             PHASE_DEGRADED => Phase::Degraded,
             PHASE_DEAD => Phase::Dead,
@@ -94,11 +100,14 @@ impl LaneState {
 
     /// Current consecutive-failure count (health reporting).
     pub fn consecutive_failures(&self) -> u32 {
+        // ORDERING: Relaxed — reporting-only read of a monotonic-ish gauge.
         self.consecutive_failures.load(Ordering::Relaxed)
     }
 
     /// Supervisor: the lane thread died; shed everything until restart.
     pub fn set_dead(&self) {
+        // ORDERING: Relaxed — the phase byte is self-contained: no other
+        // memory is published through it, submitters re-read it per call.
         self.phase.store(PHASE_DEAD, Ordering::Relaxed);
     }
 
@@ -106,6 +115,10 @@ impl LaneState {
     /// restarted lane gets a fresh breaker window rather than inheriting
     /// the failure streak that killed its predecessor).
     pub fn restart(&self) {
+        // ORDERING: Relaxed — the three fields are independently meaningful
+        // (each is re-read per decision); a submitter racing this reset can
+        // at worst shed one request against the dying configuration, which
+        // the Dead phase was already doing.
         self.consecutive_failures.store(0, Ordering::Relaxed);
         self.open_until_us.store(0, Ordering::Relaxed);
         self.phase.store(PHASE_OPEN, Ordering::Relaxed);
@@ -114,8 +127,15 @@ impl LaneState {
     /// Lane thread: a backend call succeeded. Resets the failure streak
     /// and closes an open breaker (the half-open probe worked).
     pub fn record_success(&self) {
+        // ORDERING: Relaxed — outcomes are recorded only by the single lane
+        // thread, so these fields have one writer here; concurrent readers
+        // (submitters) tolerate staleness as documented on `phase()`.
         self.consecutive_failures.store(0, Ordering::Relaxed);
         if self.phase.load(Ordering::Relaxed) == PHASE_DEGRADED {
+            // ORDERING: Relaxed — closing the breaker: clearing the window
+            // before the phase flip means a racing submitter sees either a
+            // shed (old phase) or a clean open breaker, never a stale shed
+            // window attached to an open phase.
             self.open_until_us.store(0, Ordering::Relaxed);
             self.phase.store(PHASE_OPEN, Ordering::Relaxed);
         }
@@ -127,12 +147,22 @@ impl LaneState {
     /// already degraded re-arms the cooldown window instead.
     pub fn record_failure(&self) -> bool {
         if self.threshold == 0 {
+            // ORDERING: Relaxed — pure health counter when disabled.
             self.consecutive_failures.fetch_add(1, Ordering::Relaxed);
             return false;
         }
+        // ORDERING: Relaxed — fetch_add is atomic RMW, so every failure gets
+        // a distinct streak value even if outcomes ever raced; no other
+        // memory hangs off the counter.
         let streak = self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
         if streak >= self.threshold {
             let until = self.now_us() + self.cooldown.as_micros() as u64;
+            // ORDERING: Relaxed — window written before the phase flip; a
+            // submitter that sees DEGRADED with the *old* window admits one
+            // extra half-open probe, which the protocol already tolerates
+            // (probes are safe by design). The swap's RMW atomicity — not
+            // its ordering — is what guarantees exactly one caller observes
+            // the open edge and counts `breaker_opens`.
             self.open_until_us.store(until, Ordering::Relaxed);
             let was = self.phase.swap(PHASE_DEGRADED, Ordering::Relaxed);
             return was != PHASE_DEGRADED;
@@ -148,6 +178,8 @@ impl LaneState {
         match self.phase() {
             Phase::Open => true,
             Phase::Dead => false,
+            // ORDERING: Relaxed — admission is advisory (see `phase()`): a
+            // stale window admits at most one early half-open probe.
             Phase::Degraded => self.now_us() >= self.open_until_us.load(Ordering::Relaxed),
         }
     }

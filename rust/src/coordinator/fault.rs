@@ -161,6 +161,8 @@ impl FaultInjectingBackend {
 
 impl Backend for FaultInjectingBackend {
     fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+        // ORDERING: Relaxed — injector observability counter, read only by
+        // test assertions after the threads under test are joined.
         self.calls.fetch_add(1, Ordering::Relaxed);
         // Draw every decision for this call under the lock, then release it
         // BEFORE acting: an injected panic while holding the lock would
@@ -176,10 +178,12 @@ impl Backend for FaultInjectingBackend {
             std::thread::sleep(self.plan.delay);
         }
         if do_panic {
+            // ORDERING: Relaxed — observability counter (see `calls` above).
             self.injected_panics.fetch_add(1, Ordering::Relaxed);
             panic!("injected fault: backend panic");
         }
         if do_err {
+            // ORDERING: Relaxed — observability counter (see `calls` above).
             self.injected_errors.fetch_add(1, Ordering::Relaxed);
             return Err("injected fault: backend error".into());
         }

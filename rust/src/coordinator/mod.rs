@@ -339,6 +339,9 @@ impl Coordinator {
             }
             _ => {}
         }
+        // ORDERING: Relaxed — fetch_add's RMW atomicity alone guarantees
+        // unique ids; ids never order other memory (responses are matched
+        // by value over the reply channel, which synchronizes).
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
         let now = Instant::now();
@@ -691,6 +694,52 @@ mod tests {
         };
         let backend = Arc::new(NativeBackend::new(&[64], config.sigma, config.seed));
         Coordinator::start(config, backend)
+    }
+
+    #[test]
+    fn wire_codes_round_trip_and_match_roadmap() {
+        // one entry per variant; the matches in code() are exhaustive, so
+        // a new variant missing from these lists surfaces below as a code
+        // absent from ROADMAP's table (or vice versa).
+        let request = [
+            RequestError::Deadline,
+            RequestError::Panic("boom".into()),
+            RequestError::Backend("bad".into()),
+        ];
+        let submit = [
+            SubmitError::Busy,
+            SubmitError::UnknownLane,
+            SubmitError::BadDim,
+            SubmitError::Closed,
+            SubmitError::LaneDown,
+            SubmitError::Unavailable,
+        ];
+        // round trip: the wire code alone identifies the variant
+        for e in &request {
+            let back = request.iter().find(|c| c.code() == e.code()).expect("code resolves");
+            assert_eq!(std::mem::discriminant(back), std::mem::discriminant(e));
+        }
+        for e in &submit {
+            let back = submit.iter().find(|c| c.code() == e.code()).expect("code resolves");
+            assert_eq!(std::mem::discriminant(back), std::mem::discriminant(e));
+        }
+        // global uniqueness across both enums plus the server-side consts
+        let mut codes: Vec<&str> = request.iter().map(RequestError::code).collect();
+        codes.extend(submit.iter().map(SubmitError::code));
+        codes.push(server::CODE_BAD_REQUEST);
+        codes.push(server::CODE_TIMEOUT);
+        let unique: std::collections::BTreeSet<&str> = codes.iter().copied().collect();
+        assert_eq!(unique.len(), codes.len(), "duplicate wire codes: {codes:?}");
+        // exact set equality against ROADMAP.md's failure-model table —
+        // the same cross-check `cargo xtask lint` (R4) runs pre-build
+        let roadmap =
+            std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/../ROADMAP.md"))
+                .expect("ROADMAP.md sits at the repo root");
+        let table: std::collections::BTreeSet<&str> = roadmap
+            .lines()
+            .filter_map(|l| l.strip_prefix("| `")?.split_once("` |").map(|(code, _)| code))
+            .collect();
+        assert_eq!(table, unique, "ROADMAP failure-model table out of sync with the code");
     }
 
     #[test]

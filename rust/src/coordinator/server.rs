@@ -61,6 +61,15 @@ const READ_POLL: Duration = Duration::from_millis(100);
 /// write makes progress).
 const WRITE_STALL_LIMIT: Duration = Duration::from_secs(5);
 
+/// Server-side wire codes: failure modes born in the TCP layer itself,
+/// before a request reaches the coordinator (unparseable line, bad shape)
+/// or after its typed answer was lost (response-channel timeout). Declared
+/// as named consts so `cargo xtask lint` and the wire-taxonomy round-trip
+/// test can enumerate them mechanically against ROADMAP's failure-model
+/// table, alongside the `RequestError`/`SubmitError` `code()` sets.
+pub const CODE_BAD_REQUEST: &str = "bad_request";
+pub const CODE_TIMEOUT: &str = "timeout";
+
 /// Handle to a running TCP server.
 pub struct TcpServer {
     addr: SocketAddr,
@@ -84,6 +93,9 @@ impl TcpServer {
             .name("tcp-accept".into())
             .spawn(move || {
                 for conn in listener.incoming() {
+                    // ORDERING: Relaxed — the stop flag is a one-way latch
+                    // polled in a loop; no memory is published through it
+                    // (shutdown correctness comes from join(), below).
                     if stop2.load(Ordering::Relaxed) {
                         break;
                     }
@@ -126,6 +138,9 @@ impl TcpServer {
     /// in-flight response has been flushed (the pre-fix detached handlers
     /// could race a half-written line against process teardown).
     pub fn shutdown(mut self) {
+        // ORDERING: Relaxed — one-way latch; handlers poll it (within
+        // READ_POLL) and this thread then blocks on their joins, which
+        // provide the actual happens-before for everything they wrote.
         self.stop.store(true, Ordering::Relaxed);
         // unblock accept() with a no-op connection
         let _ = TcpStream::connect(self.addr);
@@ -183,6 +198,7 @@ fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc
                 // a continuously-pipelining client never hits the read
                 // timeout, so the stop flag must also gate here or one
                 // busy connection could hang the joining shutdown forever
+                // ORDERING: Relaxed — one-way latch poll (see shutdown()).
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }
@@ -190,6 +206,7 @@ fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc
             Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
                 // timeout — any partial line stays buffered in `line` and
                 // the next read continues appending to it
+                // ORDERING: Relaxed — one-way latch poll (see shutdown()).
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }
@@ -204,7 +221,7 @@ fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc
 pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
     let doc = match Json::parse(line) {
         Ok(d) => d,
-        Err(e) => return err_response(Json::Null, &format!("bad json: {e}"), "bad_request"),
+        Err(e) => return err_response(Json::Null, &format!("bad json: {e}"), CODE_BAD_REQUEST),
     };
     let id = doc.get("id").cloned().unwrap_or(Json::Null);
     let op_str = doc.get("op").and_then(|o| o.as_str());
@@ -227,7 +244,7 @@ pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
         _ => {}
     }
     let Some(op) = op_str.and_then(Op::parse) else {
-        return err_response(id, "missing or unknown 'op'", "bad_request");
+        return err_response(id, "missing or unknown 'op'", CODE_BAD_REQUEST);
     };
     let timeout = match doc.get("timeout_ms") {
         None => None,
@@ -237,19 +254,19 @@ pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
                 return err_response(
                     id,
                     "'timeout_ms' must be a non-negative number",
-                    "bad_request",
+                    CODE_BAD_REQUEST,
                 )
             }
         },
     };
     let Some(vec_json) = doc.get("vector").and_then(|v| v.as_arr()) else {
-        return err_response(id, "missing 'vector' array", "bad_request");
+        return err_response(id, "missing 'vector' array", CODE_BAD_REQUEST);
     };
     let mut vector = Vec::with_capacity(vec_json.len());
     for v in vec_json {
         match v.as_f64() {
             Some(f) => vector.push(f as f32),
-            None => return err_response(id, "'vector' must contain numbers", "bad_request"),
+            None => return err_response(id, "'vector' must contain numbers", CODE_BAD_REQUEST),
         }
     }
     match coordinator.submit_with_deadline(op, vector, timeout) {
@@ -264,7 +281,7 @@ pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
                     Err(e) => err_response(id, &e.to_string(), e.code()),
                 },
                 Err(mpsc::RecvTimeoutError::Timeout) => {
-                    err_response(id, "response timed out", "timeout")
+                    err_response(id, "response timed out", CODE_TIMEOUT)
                 }
                 Err(mpsc::RecvTimeoutError::Disconnected) => err_response(
                     id,

@@ -74,7 +74,7 @@ impl FeatureMap {
         assert!(x.len() <= n, "input dim {} exceeds transform dim {n}", x.len());
         debug_assert_eq!(out.len(), self.dim_features());
         let k = self.transform.dim_out();
-        let mut proj = ws.take_f32_uninit(k); // fully overwritten below
+        let mut proj = ws.take_f32_uninit(k); // OVERWRITE: fully overwritten below
         self.transform.apply_padded_into(x, &mut proj, ws);
         self.nonlin_into(&proj, out);
         ws.put_f32(proj);
@@ -134,6 +134,7 @@ impl FeatureMap {
         let d = self.dim_features();
         debug_assert_eq!(out.len(), rows * d);
         let k = self.transform.dim_out();
+        // OVERWRITE: apply_batch_into writes every row of the projection.
         let mut proj = pool.with_serial_workspace(|ws| ws.take_f32_uninit(rows * k));
         self.transform.apply_batch_into(xs, &mut proj, pool);
         // pointwise stage sharded too: for GaussianRff the cos/sin pass is
@@ -146,7 +147,7 @@ impl FeatureMap {
             // dominate the pointwise stage)
             shard_rows(pool, rows, 8 * d, &|lo, hi, _slot, _ws| {
                 let pc = &proj_ref[lo * k..hi * k];
-                // Safety: disjoint covering row ranges, joined before return.
+                // SAFETY: disjoint covering row ranges, joined before return.
                 let oc = unsafe {
                     std::slice::from_raw_parts_mut(
                         (out_ptr as *mut f32).add(lo * d),

@@ -100,7 +100,7 @@ impl PngComponent {
                 *v *= *s;
             }
         }
-        let mut proj = ws.take_f32_uninit(k); // fully overwritten by apply_into
+        let mut proj = ws.take_f32_uninit(k); // OVERWRITE: fully overwritten by apply_into
         self.transform.apply_into(&xs, &mut proj, ws);
         // μᵀx over the zero-padded input == μ[..len]ᵀ x
         let mu_dot = self

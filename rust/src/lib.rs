@@ -83,6 +83,33 @@
 //! `rust/tests/chaos_serving.rs` and the `serving_fault` bench sweep
 //! (error-path latency is measured, not assumed zero).
 //!
+//! ## Correctness tooling
+//!
+//! The invariants the engine lives by are machine-checked in layers:
+//!
+//! * **`cargo xtask lint`** — the repo-native static pass (first, fastest
+//!   CI gate). Every `unsafe` needs an adjacent `// SAFETY:` rationale and
+//!   may only appear in the allowlisted modules; every non-counter atomic
+//!   needs `// ORDERING:`; every `take_*_uninit` dirty checkout needs
+//!   `// OVERWRITE:`; every public [`linalg::simd`] kernel must be named
+//!   in `tests/simd_equivalence.rs`; wire error codes must be unique and
+//!   match ROADMAP's failure-model table. The linter is self-testing
+//!   (`cargo test -p xtask`) and mirrored for toolchain-less environments
+//!   by `tools/lint_mirror.py`.
+//! * **`#![deny(unsafe_op_in_unsafe_fn)]`** — every unsafe operation sits
+//!   in an explicit `unsafe {}` block with its own justification, even
+//!   inside `unsafe fn`s.
+//! * **loom** — `RUSTFLAGS="--cfg loom" cargo test --lib loom` replays
+//!   every interleaving of the two lock-free hot spots (the
+//!   [`coordinator`] circuit breaker and the [`runtime`] chunk-claim
+//!   sharder) through the `util::sync` atomics façade; see `loom_models`.
+//! * **Miri** — `MIRIFLAGS=-Zmiri-disable-isolation TS_NO_SIMD=1 cargo
+//!   miri test` (unit tests, `#[cfg(miri)]`-shrunk sizes) checks the
+//!   uninit-checkout and packed-bit paths for UB.
+//! * **ThreadSanitizer** — nightly `RUSTFLAGS=-Zsanitizer=thread` over
+//!   the threaded pool/coordinator tests; `tools/bench_mirror.c` runs its
+//!   startup self-tests under `-fsanitize=address,undefined`.
+//!
 //! ## Layout
 //!
 //! * [`util`] / [`linalg`] — substrates: seeded RNG, JSON, bench/property
@@ -111,12 +138,21 @@
 //!   ops `transform` / `rff` / `crosspolytope` / `binary_embed` (plus
 //!   `metrics` / `health` introspection) over newline-JSON TCP.
 
+// Every unsafe *operation* must sit in an explicit `unsafe {}` block with
+// its own `// SAFETY:` rationale — an `unsafe fn` signature alone does not
+// discharge the obligation. Enforced together with `cargo xtask lint`.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod binary;
 pub mod coordinator;
 pub mod data;
 pub mod jlt;
 pub mod kernels;
 pub mod linalg;
+// Exhaustive interleaving models of the breaker and the chunk-claim
+// sharder; compiled only under `RUSTFLAGS="--cfg loom"` (loom CI lane).
+#[cfg(loom)]
+mod loom_models;
 pub mod lsh;
 pub mod quantize;
 pub mod runtime;

@@ -83,11 +83,14 @@ fn detect_variant() -> FftVariant {
 /// The engine new [`ConvPlan`]s are built on (`TS_FFT`-selected, cached;
 /// see [`force_variant`]).
 pub fn variant() -> FftVariant {
+    // ORDERING: Relaxed — VARIANT is an idempotent cache of an env probe;
+    // racing fills store the same value and nothing else is published.
     match VARIANT.load(Ordering::Relaxed) {
         0 => FftVariant::Rfft,
         1 => FftVariant::Complex,
         _ => {
             let v = detect_variant();
+            // ORDERING: Relaxed — same-value cache fill (see load above).
             VARIANT.store(if v == FftVariant::Complex { 1 } else { 0 }, Ordering::Relaxed);
             v
         }
@@ -109,6 +112,8 @@ pub fn force_variant(v: Option<FftVariant>) {
             }
         }
     };
+    // ORDERING: Relaxed — bench/test hook; plans capture the variant at
+    // construction on the calling thread, so no release/acquire pairing.
     VARIANT.store(enc, Ordering::Relaxed);
 }
 

@@ -126,11 +126,15 @@ fn encode(l: Level) -> u8 {
 /// The active dispatch level (detected once, cached; see [`force`]).
 #[inline]
 pub fn level() -> Level {
+    // ORDERING: Relaxed — LEVEL is an idempotent cache of a pure CPU probe;
+    // racing threads may both run detect() and store the same value, and no
+    // other memory is published through this atomic.
     let v = LEVEL.load(Ordering::Relaxed);
     if v != LEVEL_UNSET {
         return decode(v);
     }
     let l = detect();
+    // ORDERING: Relaxed — same-value idempotent cache fill (see load above).
     LEVEL.store(encode(l), Ordering::Relaxed);
     l
 }
@@ -142,6 +146,9 @@ pub fn level() -> Level {
 /// Forcing a level the CPU cannot execute is the caller's responsibility
 /// (stick to `Scalar` and the detected level).
 pub fn force(l: Option<Level>) {
+    // ORDERING: Relaxed — test/bench hook; callers only read the level back
+    // through `level()` on the same thread, and kernels re-load it per call,
+    // so no cross-thread ordering is implied or needed.
     match l {
         Some(l) => LEVEL.store(encode(l), Ordering::Relaxed),
         None => LEVEL.store(encode(detect()), Ordering::Relaxed),
@@ -165,10 +172,19 @@ pub fn butterfly(head: &mut [f32], tail: &mut [f32]) {
     assert_eq!(head.len(), tail.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe { x86::butterfly_avx2(head, tail) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe { x86::butterfly_sse2(head, tail) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: this arm runs only when `level()` resolved Neon, so the
+        // NEON target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Neon => unsafe { neon::butterfly_neon(head, tail) },
         _ => scalar::butterfly(head, tail),
     }
@@ -182,10 +198,19 @@ pub fn butterfly_scaled(head: &mut [f32], tail: &mut [f32], s: f32) {
     assert_eq!(head.len(), tail.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe { x86::butterfly_scaled_avx2(head, tail, s) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe { x86::butterfly_scaled_sse2(head, tail, s) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: this arm runs only when `level()` resolved Neon, so the
+        // NEON target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Neon => unsafe { neon::butterfly_scaled_neon(head, tail, s) },
         _ => scalar::butterfly_scaled(head, tail, s),
     }
@@ -197,10 +222,19 @@ pub fn scale(a: &mut [f32], d: &[f32]) {
     assert_eq!(a.len(), d.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe { x86::scale_avx2(a, d) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe { x86::scale_sse2(a, d) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: this arm runs only when `level()` resolved Neon, so the
+        // NEON target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Neon => unsafe { neon::scale_neon(a, d) },
         _ => scalar::scale(a, d),
     }
@@ -215,10 +249,19 @@ pub fn apply_signs(x: &mut [f32], signs: &[u64]) {
     assert!(signs.len() * 64 >= x.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe { x86::apply_signs_avx2(x, signs) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe { x86::apply_signs_sse2(x, signs) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: this arm runs only when `level()` resolved Neon, so the
+        // NEON target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Neon => unsafe { neon::apply_signs_neon(x, signs) },
         _ => scalar::apply_signs(x, signs),
     }
@@ -232,10 +275,19 @@ pub fn apply_signs_scaled(x: &mut [f32], signs: &[u64], s: f32) {
     assert!(signs.len() * 64 >= x.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe { x86::apply_signs_scaled_avx2(x, signs, s) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe { x86::apply_signs_scaled_sse2(x, signs, s) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: this arm runs only when `level()` resolved Neon, so the
+        // NEON target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Neon => unsafe { neon::apply_signs_scaled_neon(x, signs, s) },
         _ => scalar::apply_signs_scaled(x, signs, s),
     }
@@ -250,8 +302,14 @@ pub fn promote_signs_scaled(src: &[f32], signs: &[u64], s: f32, dst: &mut [f64])
     assert!(signs.len() * 64 >= src.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe { x86::promote_signs_scaled_avx2(src, signs, s, dst) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe { x86::promote_signs_scaled_sse2(src, signs, s, dst) },
         _ => scalar::promote_signs_scaled(src, signs, s, dst),
     }
@@ -266,8 +324,14 @@ pub fn cmul(re: &mut [f64], im: &mut [f64], kr: &[f64], ki: &[f64]) {
     assert_eq!(re.len(), ki.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe { x86::cmul_avx2(re, im, kr, ki) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe { x86::cmul_sse2(re, im, kr, ki) },
         _ => scalar::cmul(re, im, kr, ki),
     }
@@ -302,10 +366,16 @@ pub fn fft_butterfly(
     assert!(twi.len() >= (re_h.len().saturating_sub(1)) * stride + 1 || re_h.is_empty());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe {
             x86::fft_butterfly_avx2(re_h, im_h, re_t, im_t, twr, twi, stride, sign)
         },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe {
             x86::fft_butterfly_sse2(re_h, im_h, re_t, im_t, twr, twi, stride, sign)
         },
@@ -363,10 +433,16 @@ pub fn fft_butterfly4(
     }
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe {
             x86::fft_butterfly4_avx2(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign)
         },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe {
             x86::fft_butterfly4_sse2(re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign)
         },
@@ -402,8 +478,14 @@ pub fn cmul_half(
     assert!(twr.len() >= h / 2 && twi.len() >= h / 2);
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe { x86::cmul_half_avx2(zre, zim, kr, ki, twr, twi) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe { x86::cmul_half_sse2(zre, zim, kr, ki, twr, twi) },
         _ => scalar::cmul_half(zre, zim, kr, ki, twr, twi),
     }
@@ -465,8 +547,14 @@ pub fn pack_signs(src: &[f32], dst: &mut [u64]) {
     assert_eq!(dst.len(), src.len().div_ceil(64));
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe { x86::pack_signs_avx2(src, dst) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Sse2, so the
+        // SSE2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Sse2 => unsafe { x86::pack_signs_sse2(src, dst) },
         _ => scalar::pack_signs(src, dst),
     }
@@ -485,6 +573,9 @@ pub fn hamming(a: &[u64], b: &[u64]) -> u64 {
     assert_eq!(a.len(), b.len());
     match level() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: this arm runs only when `level()` resolved Avx2, so the
+        // AVX2 target feature is present; slice preconditions are the
+        // kernel's own documented contract, checked by the caller.
         Level::Avx2 => unsafe { x86::hamming_avx2(a, b) },
         _ => scalar::hamming(a, b),
     }
@@ -839,89 +930,137 @@ mod x86 {
     // --- f32 butterflies ---
 
     #[target_feature(enable = "avx2")]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn butterfly_avx2(head: &mut [f32], tail: &mut [f32]) {
-        let n = head.len();
-        let mut i = 0;
-        while i + 8 <= n {
-            let a = _mm256_loadu_ps(head.as_ptr().add(i));
-            let b = _mm256_loadu_ps(tail.as_ptr().add(i));
-            _mm256_storeu_ps(head.as_mut_ptr().add(i), _mm256_add_ps(a, b));
-            _mm256_storeu_ps(tail.as_mut_ptr().add(i), _mm256_sub_ps(a, b));
-            i += 8;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = head.len();
+            let mut i = 0;
+            while i + 8 <= n {
+                let a = _mm256_loadu_ps(head.as_ptr().add(i));
+                let b = _mm256_loadu_ps(tail.as_ptr().add(i));
+                _mm256_storeu_ps(head.as_mut_ptr().add(i), _mm256_add_ps(a, b));
+                _mm256_storeu_ps(tail.as_mut_ptr().add(i), _mm256_sub_ps(a, b));
+                i += 8;
+            }
+            scalar::butterfly(&mut head[i..], &mut tail[i..]);
         }
-        scalar::butterfly(&mut head[i..], &mut tail[i..]);
     }
 
     #[target_feature(enable = "sse2")]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn butterfly_sse2(head: &mut [f32], tail: &mut [f32]) {
-        let n = head.len();
-        let mut i = 0;
-        while i + 4 <= n {
-            let a = _mm_loadu_ps(head.as_ptr().add(i));
-            let b = _mm_loadu_ps(tail.as_ptr().add(i));
-            _mm_storeu_ps(head.as_mut_ptr().add(i), _mm_add_ps(a, b));
-            _mm_storeu_ps(tail.as_mut_ptr().add(i), _mm_sub_ps(a, b));
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = head.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let a = _mm_loadu_ps(head.as_ptr().add(i));
+                let b = _mm_loadu_ps(tail.as_ptr().add(i));
+                _mm_storeu_ps(head.as_mut_ptr().add(i), _mm_add_ps(a, b));
+                _mm_storeu_ps(tail.as_mut_ptr().add(i), _mm_sub_ps(a, b));
+                i += 4;
+            }
+            scalar::butterfly(&mut head[i..], &mut tail[i..]);
         }
-        scalar::butterfly(&mut head[i..], &mut tail[i..]);
     }
 
     #[target_feature(enable = "avx2")]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn butterfly_scaled_avx2(head: &mut [f32], tail: &mut [f32], s: f32) {
-        let n = head.len();
-        let sv = _mm256_set1_ps(s);
-        let mut i = 0;
-        while i + 8 <= n {
-            let a = _mm256_loadu_ps(head.as_ptr().add(i));
-            let b = _mm256_loadu_ps(tail.as_ptr().add(i));
-            _mm256_storeu_ps(head.as_mut_ptr().add(i), _mm256_mul_ps(_mm256_add_ps(a, b), sv));
-            _mm256_storeu_ps(tail.as_mut_ptr().add(i), _mm256_mul_ps(_mm256_sub_ps(a, b), sv));
-            i += 8;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = head.len();
+            let sv = _mm256_set1_ps(s);
+            let mut i = 0;
+            while i + 8 <= n {
+                let a = _mm256_loadu_ps(head.as_ptr().add(i));
+                let b = _mm256_loadu_ps(tail.as_ptr().add(i));
+                _mm256_storeu_ps(head.as_mut_ptr().add(i), _mm256_mul_ps(_mm256_add_ps(a, b), sv));
+                _mm256_storeu_ps(tail.as_mut_ptr().add(i), _mm256_mul_ps(_mm256_sub_ps(a, b), sv));
+                i += 8;
+            }
+            scalar::butterfly_scaled(&mut head[i..], &mut tail[i..], s);
         }
-        scalar::butterfly_scaled(&mut head[i..], &mut tail[i..], s);
     }
 
     #[target_feature(enable = "sse2")]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn butterfly_scaled_sse2(head: &mut [f32], tail: &mut [f32], s: f32) {
-        let n = head.len();
-        let sv = _mm_set1_ps(s);
-        let mut i = 0;
-        while i + 4 <= n {
-            let a = _mm_loadu_ps(head.as_ptr().add(i));
-            let b = _mm_loadu_ps(tail.as_ptr().add(i));
-            _mm_storeu_ps(head.as_mut_ptr().add(i), _mm_mul_ps(_mm_add_ps(a, b), sv));
-            _mm_storeu_ps(tail.as_mut_ptr().add(i), _mm_mul_ps(_mm_sub_ps(a, b), sv));
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = head.len();
+            let sv = _mm_set1_ps(s);
+            let mut i = 0;
+            while i + 4 <= n {
+                let a = _mm_loadu_ps(head.as_ptr().add(i));
+                let b = _mm_loadu_ps(tail.as_ptr().add(i));
+                _mm_storeu_ps(head.as_mut_ptr().add(i), _mm_mul_ps(_mm_add_ps(a, b), sv));
+                _mm_storeu_ps(tail.as_mut_ptr().add(i), _mm_mul_ps(_mm_sub_ps(a, b), sv));
+                i += 4;
+            }
+            scalar::butterfly_scaled(&mut head[i..], &mut tail[i..], s);
         }
-        scalar::butterfly_scaled(&mut head[i..], &mut tail[i..], s);
     }
 
     // --- f32 elementwise scale ---
 
     #[target_feature(enable = "avx2")]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn scale_avx2(a: &mut [f32], d: &[f32]) {
-        let n = a.len();
-        let mut i = 0;
-        while i + 8 <= n {
-            let x = _mm256_loadu_ps(a.as_ptr().add(i));
-            let s = _mm256_loadu_ps(d.as_ptr().add(i));
-            _mm256_storeu_ps(a.as_mut_ptr().add(i), _mm256_mul_ps(x, s));
-            i += 8;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = a.len();
+            let mut i = 0;
+            while i + 8 <= n {
+                let x = _mm256_loadu_ps(a.as_ptr().add(i));
+                let s = _mm256_loadu_ps(d.as_ptr().add(i));
+                _mm256_storeu_ps(a.as_mut_ptr().add(i), _mm256_mul_ps(x, s));
+                i += 8;
+            }
+            scalar::scale(&mut a[i..], &d[i..]);
         }
-        scalar::scale(&mut a[i..], &d[i..]);
     }
 
     #[target_feature(enable = "sse2")]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn scale_sse2(a: &mut [f32], d: &[f32]) {
-        let n = a.len();
-        let mut i = 0;
-        while i + 4 <= n {
-            let x = _mm_loadu_ps(a.as_ptr().add(i));
-            let s = _mm_loadu_ps(d.as_ptr().add(i));
-            _mm_storeu_ps(a.as_mut_ptr().add(i), _mm_mul_ps(x, s));
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = a.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let x = _mm_loadu_ps(a.as_ptr().add(i));
+                let s = _mm_loadu_ps(d.as_ptr().add(i));
+                _mm_storeu_ps(a.as_mut_ptr().add(i), _mm_mul_ps(x, s));
+                i += 4;
+            }
+            scalar::scale(&mut a[i..], &d[i..]);
         }
-        scalar::scale(&mut a[i..], &d[i..]);
     }
 
     // --- packed-sign application ---
@@ -950,146 +1089,218 @@ mod x86 {
 
     #[target_feature(enable = "avx2")]
     #[inline]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     unsafe fn xor_byte_mask_avx2(p: *mut f32, byte: usize) {
-        let mask = _mm256_loadu_si256(SIGN_LUT[byte].as_ptr() as *const __m256i);
-        _mm256_storeu_ps(p, _mm256_xor_ps(_mm256_loadu_ps(p), _mm256_castsi256_ps(mask)));
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let mask = _mm256_loadu_si256(SIGN_LUT[byte].as_ptr() as *const __m256i);
+            _mm256_storeu_ps(p, _mm256_xor_ps(_mm256_loadu_ps(p), _mm256_castsi256_ps(mask)));
+        }
     }
 
     #[target_feature(enable = "avx2")]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn apply_signs_avx2(x: &mut [f32], signs: &[u64]) {
-        let n = x.len();
-        let mut i = 0;
-        // word-hoisted main loop: one sign word feeds eight 8-lane XORs
-        while i + 64 <= n {
-            let word = signs[i >> 6];
-            let mut k = 0;
-            while k < 8 {
-                let byte = ((word >> (8 * k)) & 0xFF) as usize;
-                xor_byte_mask_avx2(x.as_mut_ptr().add(i + 8 * k), byte);
-                k += 1;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = x.len();
+            let mut i = 0;
+            // word-hoisted main loop: one sign word feeds eight 8-lane XORs
+            while i + 64 <= n {
+                let word = signs[i >> 6];
+                let mut k = 0;
+                while k < 8 {
+                    let byte = ((word >> (8 * k)) & 0xFF) as usize;
+                    xor_byte_mask_avx2(x.as_mut_ptr().add(i + 8 * k), byte);
+                    k += 1;
+                }
+                i += 64;
             }
-            i += 64;
+            while i + 8 <= n {
+                let byte = ((signs[i >> 6] >> (i & 63)) & 0xFF) as usize;
+                xor_byte_mask_avx2(x.as_mut_ptr().add(i), byte);
+                i += 8;
+            }
+            scalar::apply_signs(&mut x[i..], &shifted_signs(signs, i));
         }
-        while i + 8 <= n {
-            let byte = ((signs[i >> 6] >> (i & 63)) & 0xFF) as usize;
-            xor_byte_mask_avx2(x.as_mut_ptr().add(i), byte);
-            i += 8;
-        }
-        scalar::apply_signs(&mut x[i..], &shifted_signs(signs, i));
     }
 
     #[target_feature(enable = "avx2")]
     #[inline]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     unsafe fn xor_byte_mask_scaled_avx2(p: *mut f32, byte: usize, sv: __m256) {
-        let mask = _mm256_loadu_si256(SIGN_LUT[byte].as_ptr() as *const __m256i);
-        let flipped = _mm256_xor_ps(_mm256_loadu_ps(p), _mm256_castsi256_ps(mask));
-        _mm256_storeu_ps(p, _mm256_mul_ps(flipped, sv));
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let mask = _mm256_loadu_si256(SIGN_LUT[byte].as_ptr() as *const __m256i);
+            let flipped = _mm256_xor_ps(_mm256_loadu_ps(p), _mm256_castsi256_ps(mask));
+            _mm256_storeu_ps(p, _mm256_mul_ps(flipped, sv));
+        }
     }
 
     #[target_feature(enable = "avx2")]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn apply_signs_scaled_avx2(x: &mut [f32], signs: &[u64], s: f32) {
-        let n = x.len();
-        let sv = _mm256_set1_ps(s);
-        let mut i = 0;
-        while i + 64 <= n {
-            let word = signs[i >> 6];
-            let mut k = 0;
-            while k < 8 {
-                xor_byte_mask_scaled_avx2(
-                    x.as_mut_ptr().add(i + 8 * k),
-                    ((word >> (8 * k)) & 0xFF) as usize,
-                    sv,
-                );
-                k += 1;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = x.len();
+            let sv = _mm256_set1_ps(s);
+            let mut i = 0;
+            while i + 64 <= n {
+                let word = signs[i >> 6];
+                let mut k = 0;
+                while k < 8 {
+                    xor_byte_mask_scaled_avx2(
+                        x.as_mut_ptr().add(i + 8 * k),
+                        ((word >> (8 * k)) & 0xFF) as usize,
+                        sv,
+                    );
+                    k += 1;
+                }
+                i += 64;
             }
-            i += 64;
+            while i + 8 <= n {
+                let byte = ((signs[i >> 6] >> (i & 63)) & 0xFF) as usize;
+                xor_byte_mask_scaled_avx2(x.as_mut_ptr().add(i), byte, sv);
+                i += 8;
+            }
+            scalar::apply_signs_scaled(&mut x[i..], &shifted_signs(signs, i), s);
         }
-        while i + 8 <= n {
-            let byte = ((signs[i >> 6] >> (i & 63)) & 0xFF) as usize;
-            xor_byte_mask_scaled_avx2(x.as_mut_ptr().add(i), byte, sv);
-            i += 8;
-        }
-        scalar::apply_signs_scaled(&mut x[i..], &shifted_signs(signs, i), s);
     }
 
     /// 4-lane sign mask for bits `[i, i+4)`: the nibble indexes the shared
     /// LUT (whose upper four lanes are zero for entries < 16).
     #[target_feature(enable = "sse2")]
     #[inline]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     unsafe fn quad_sign_mask_sse2(signs: &[u64], i: usize) -> __m128 {
-        let nib = ((signs[i >> 6] >> (i & 63)) & 0xF) as usize;
-        _mm_castsi128_ps(_mm_loadu_si128(SIGN_LUT[nib].as_ptr() as *const __m128i))
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let nib = ((signs[i >> 6] >> (i & 63)) & 0xF) as usize;
+            _mm_castsi128_ps(_mm_loadu_si128(SIGN_LUT[nib].as_ptr() as *const __m128i))
+        }
     }
 
     #[target_feature(enable = "sse2")]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn apply_signs_sse2(x: &mut [f32], signs: &[u64]) {
-        let n = x.len();
-        let mut i = 0;
-        while i + 4 <= n {
-            let mask = quad_sign_mask_sse2(signs, i);
-            let v = _mm_loadu_ps(x.as_ptr().add(i));
-            _mm_storeu_ps(x.as_mut_ptr().add(i), _mm_xor_ps(v, mask));
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = x.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let mask = quad_sign_mask_sse2(signs, i);
+                let v = _mm_loadu_ps(x.as_ptr().add(i));
+                _mm_storeu_ps(x.as_mut_ptr().add(i), _mm_xor_ps(v, mask));
+                i += 4;
+            }
+            scalar::apply_signs(&mut x[i..], &shifted_signs(signs, i));
         }
-        scalar::apply_signs(&mut x[i..], &shifted_signs(signs, i));
     }
 
     #[target_feature(enable = "sse2")]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn apply_signs_scaled_sse2(x: &mut [f32], signs: &[u64], s: f32) {
-        let n = x.len();
-        let sv = _mm_set1_ps(s);
-        let mut i = 0;
-        while i + 4 <= n {
-            let mask = quad_sign_mask_sse2(signs, i);
-            let v = _mm_loadu_ps(x.as_ptr().add(i));
-            _mm_storeu_ps(x.as_mut_ptr().add(i), _mm_mul_ps(_mm_xor_ps(v, mask), sv));
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = x.len();
+            let sv = _mm_set1_ps(s);
+            let mut i = 0;
+            while i + 4 <= n {
+                let mask = quad_sign_mask_sse2(signs, i);
+                let v = _mm_loadu_ps(x.as_ptr().add(i));
+                _mm_storeu_ps(x.as_mut_ptr().add(i), _mm_mul_ps(_mm_xor_ps(v, mask), sv));
+                i += 4;
+            }
+            scalar::apply_signs_scaled(&mut x[i..], &shifted_signs(signs, i), s);
         }
-        scalar::apply_signs_scaled(&mut x[i..], &shifted_signs(signs, i), s);
     }
 
     #[target_feature(enable = "avx2")]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn promote_signs_scaled_avx2(
         src: &[f32],
         signs: &[u64],
         s: f32,
         dst: &mut [f64],
     ) {
-        let n = src.len();
-        let sv = _mm_set1_ps(s);
-        let mut i = 0;
-        while i + 4 <= n {
-            let mask = quad_sign_mask_sse2(signs, i);
-            let v = _mm_loadu_ps(src.as_ptr().add(i));
-            let scaled = _mm_mul_ps(_mm_xor_ps(v, mask), sv);
-            _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_cvtps_pd(scaled));
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = src.len();
+            let sv = _mm_set1_ps(s);
+            let mut i = 0;
+            while i + 4 <= n {
+                let mask = quad_sign_mask_sse2(signs, i);
+                let v = _mm_loadu_ps(src.as_ptr().add(i));
+                let scaled = _mm_mul_ps(_mm_xor_ps(v, mask), sv);
+                _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_cvtps_pd(scaled));
+                i += 4;
+            }
+            scalar::promote_signs_scaled(&src[i..], &shifted_signs(signs, i), s, &mut dst[i..]);
         }
-        scalar::promote_signs_scaled(&src[i..], &shifted_signs(signs, i), s, &mut dst[i..]);
     }
 
     #[target_feature(enable = "sse2")]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn promote_signs_scaled_sse2(
         src: &[f32],
         signs: &[u64],
         s: f32,
         dst: &mut [f64],
     ) {
-        let n = src.len();
-        let sv = _mm_set1_ps(s);
-        let mut i = 0;
-        while i + 4 <= n {
-            let mask = quad_sign_mask_sse2(signs, i);
-            let v = _mm_loadu_ps(src.as_ptr().add(i));
-            let scaled = _mm_mul_ps(_mm_xor_ps(v, mask), sv);
-            _mm_storeu_pd(dst.as_mut_ptr().add(i), _mm_cvtps_pd(scaled));
-            _mm_storeu_pd(
-                dst.as_mut_ptr().add(i + 2),
-                _mm_cvtps_pd(_mm_movehl_ps(scaled, scaled)),
-            );
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = src.len();
+            let sv = _mm_set1_ps(s);
+            let mut i = 0;
+            while i + 4 <= n {
+                let mask = quad_sign_mask_sse2(signs, i);
+                let v = _mm_loadu_ps(src.as_ptr().add(i));
+                let scaled = _mm_mul_ps(_mm_xor_ps(v, mask), sv);
+                _mm_storeu_pd(dst.as_mut_ptr().add(i), _mm_cvtps_pd(scaled));
+                _mm_storeu_pd(
+                    dst.as_mut_ptr().add(i + 2),
+                    _mm_cvtps_pd(_mm_movehl_ps(scaled, scaled)),
+                );
+                i += 4;
+            }
+            scalar::promote_signs_scaled(&src[i..], &shifted_signs(signs, i), s, &mut dst[i..]);
         }
-        scalar::promote_signs_scaled(&src[i..], &shifted_signs(signs, i), s, &mut dst[i..]);
     }
 
     /// Rebase a packed sign stream so the scalar tail sees its bits from
@@ -1107,37 +1318,53 @@ mod x86 {
     // --- sign quantization + Hamming popcount (the binary embedding lane) ---
 
     #[target_feature(enable = "avx2")]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn pack_signs_avx2(src: &[f32], dst: &mut [u64]) {
-        let full_words = src.len() / 64;
-        for (w, slot) in dst[..full_words].iter_mut().enumerate() {
-            // eight movemasks assemble one sign word; movemask reads the
-            // IEEE sign bit, matching is_sign_negative for every value
-            let mut word = 0u64;
-            let mut k = 0;
-            while k < 64 {
-                let v = _mm256_loadu_ps(src.as_ptr().add(w * 64 + k));
-                word |= (_mm256_movemask_ps(v) as u32 as u64) << k;
-                k += 8;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let full_words = src.len() / 64;
+            for (w, slot) in dst[..full_words].iter_mut().enumerate() {
+                // eight movemasks assemble one sign word; movemask reads the
+                // IEEE sign bit, matching is_sign_negative for every value
+                let mut word = 0u64;
+                let mut k = 0;
+                while k < 64 {
+                    let v = _mm256_loadu_ps(src.as_ptr().add(w * 64 + k));
+                    word |= (_mm256_movemask_ps(v) as u32 as u64) << k;
+                    k += 8;
+                }
+                *slot = word;
             }
-            *slot = word;
+            scalar::pack_signs(&src[full_words * 64..], &mut dst[full_words..]);
         }
-        scalar::pack_signs(&src[full_words * 64..], &mut dst[full_words..]);
     }
 
     #[target_feature(enable = "sse2")]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn pack_signs_sse2(src: &[f32], dst: &mut [u64]) {
-        let full_words = src.len() / 64;
-        for (w, slot) in dst[..full_words].iter_mut().enumerate() {
-            let mut word = 0u64;
-            let mut k = 0;
-            while k < 64 {
-                let v = _mm_loadu_ps(src.as_ptr().add(w * 64 + k));
-                word |= (_mm_movemask_ps(v) as u32 as u64) << k;
-                k += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let full_words = src.len() / 64;
+            for (w, slot) in dst[..full_words].iter_mut().enumerate() {
+                let mut word = 0u64;
+                let mut k = 0;
+                while k < 64 {
+                    let v = _mm_loadu_ps(src.as_ptr().add(w * 64 + k));
+                    word |= (_mm_movemask_ps(v) as u32 as u64) << k;
+                    k += 4;
+                }
+                *slot = word;
             }
-            *slot = word;
+            scalar::pack_signs(&src[full_words * 64..], &mut dst[full_words..]);
         }
-        scalar::pack_signs(&src[full_words * 64..], &mut dst[full_words..]);
     }
 
     /// Nibble-LUT popcount over the XOR stream: `vpshufb` looks up per-byte
@@ -1145,72 +1372,100 @@ mod x86 {
     /// four u64 lanes. Exact integer arithmetic — identical to the scalar
     /// `count_ones` loop by construction.
     #[target_feature(enable = "avx2")]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn hamming_avx2(a: &[u64], b: &[u64]) -> u64 {
-        let n = a.len();
-        #[rustfmt::skip]
-        let lut = _mm256_setr_epi8(
-            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
-            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
-        );
-        let low_mask = _mm256_set1_epi8(0x0f);
-        let zero = _mm256_setzero_si256();
-        let mut acc = zero;
-        let mut i = 0;
-        while i + 4 <= n {
-            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
-            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
-            let x = _mm256_xor_si256(va, vb);
-            let lo = _mm256_and_si256(x, low_mask);
-            let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(x), low_mask);
-            let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
-            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = a.len();
+            #[rustfmt::skip]
+            let lut = _mm256_setr_epi8(
+                0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+                0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            );
+            let low_mask = _mm256_set1_epi8(0x0f);
+            let zero = _mm256_setzero_si256();
+            let mut acc = zero;
+            let mut i = 0;
+            while i + 4 <= n {
+                let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+                let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+                let x = _mm256_xor_si256(va, vb);
+                let lo = _mm256_and_si256(x, low_mask);
+                let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(x), low_mask);
+                let cnt =
+                    _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+                i += 4;
+            }
+            let mut lanes = [0u64; 4];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+            lanes.iter().sum::<u64>() + scalar::hamming(&a[i..], &b[i..])
         }
-        let mut lanes = [0u64; 4];
-        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
-        lanes.iter().sum::<u64>() + scalar::hamming(&a[i..], &b[i..])
     }
 
     // --- f64 complex kernels ---
 
     #[target_feature(enable = "avx2")]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn cmul_avx2(re: &mut [f64], im: &mut [f64], kr: &[f64], ki: &[f64]) {
-        let n = re.len();
-        let mut i = 0;
-        while i + 4 <= n {
-            let a = _mm256_loadu_pd(re.as_ptr().add(i));
-            let b = _mm256_loadu_pd(im.as_ptr().add(i));
-            let cr = _mm256_loadu_pd(kr.as_ptr().add(i));
-            let ci = _mm256_loadu_pd(ki.as_ptr().add(i));
-            let r = _mm256_sub_pd(_mm256_mul_pd(a, cr), _mm256_mul_pd(b, ci));
-            let m = _mm256_add_pd(_mm256_mul_pd(a, ci), _mm256_mul_pd(b, cr));
-            _mm256_storeu_pd(re.as_mut_ptr().add(i), r);
-            _mm256_storeu_pd(im.as_mut_ptr().add(i), m);
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = re.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let a = _mm256_loadu_pd(re.as_ptr().add(i));
+                let b = _mm256_loadu_pd(im.as_ptr().add(i));
+                let cr = _mm256_loadu_pd(kr.as_ptr().add(i));
+                let ci = _mm256_loadu_pd(ki.as_ptr().add(i));
+                let r = _mm256_sub_pd(_mm256_mul_pd(a, cr), _mm256_mul_pd(b, ci));
+                let m = _mm256_add_pd(_mm256_mul_pd(a, ci), _mm256_mul_pd(b, cr));
+                _mm256_storeu_pd(re.as_mut_ptr().add(i), r);
+                _mm256_storeu_pd(im.as_mut_ptr().add(i), m);
+                i += 4;
+            }
+            scalar::cmul(&mut re[i..], &mut im[i..], &kr[i..], &ki[i..]);
         }
-        scalar::cmul(&mut re[i..], &mut im[i..], &kr[i..], &ki[i..]);
     }
 
     #[target_feature(enable = "sse2")]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn cmul_sse2(re: &mut [f64], im: &mut [f64], kr: &[f64], ki: &[f64]) {
-        let n = re.len();
-        let mut i = 0;
-        while i + 2 <= n {
-            let a = _mm_loadu_pd(re.as_ptr().add(i));
-            let b = _mm_loadu_pd(im.as_ptr().add(i));
-            let cr = _mm_loadu_pd(kr.as_ptr().add(i));
-            let ci = _mm_loadu_pd(ki.as_ptr().add(i));
-            let r = _mm_sub_pd(_mm_mul_pd(a, cr), _mm_mul_pd(b, ci));
-            let m = _mm_add_pd(_mm_mul_pd(a, ci), _mm_mul_pd(b, cr));
-            _mm_storeu_pd(re.as_mut_ptr().add(i), r);
-            _mm_storeu_pd(im.as_mut_ptr().add(i), m);
-            i += 2;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = re.len();
+            let mut i = 0;
+            while i + 2 <= n {
+                let a = _mm_loadu_pd(re.as_ptr().add(i));
+                let b = _mm_loadu_pd(im.as_ptr().add(i));
+                let cr = _mm_loadu_pd(kr.as_ptr().add(i));
+                let ci = _mm_loadu_pd(ki.as_ptr().add(i));
+                let r = _mm_sub_pd(_mm_mul_pd(a, cr), _mm_mul_pd(b, ci));
+                let m = _mm_add_pd(_mm_mul_pd(a, ci), _mm_mul_pd(b, cr));
+                _mm_storeu_pd(re.as_mut_ptr().add(i), r);
+                _mm_storeu_pd(im.as_mut_ptr().add(i), m);
+                i += 2;
+            }
+            scalar::cmul(&mut re[i..], &mut im[i..], &kr[i..], &ki[i..]);
         }
-        scalar::cmul(&mut re[i..], &mut im[i..], &kr[i..], &ki[i..]);
     }
 
     #[target_feature(enable = "avx2")]
     #[allow(clippy::too_many_arguments)]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn fft_butterfly_avx2(
         re_h: &mut [f64],
         im_h: &mut [f64],
@@ -1221,81 +1476,102 @@ mod x86 {
         stride: usize,
         sign: f64,
     ) {
-        let half = re_h.len();
-        let sv = _mm256_set1_pd(sign);
-        let mut j = 0;
-        while j + 4 <= half {
-            let (wr, wi_raw) = if stride == 1 {
-                (
-                    _mm256_loadu_pd(twr.as_ptr().add(j)),
-                    _mm256_loadu_pd(twi.as_ptr().add(j)),
-                )
-            } else {
-                (
-                    _mm256_setr_pd(
-                        twr[j * stride],
-                        twr[(j + 1) * stride],
-                        twr[(j + 2) * stride],
-                        twr[(j + 3) * stride],
-                    ),
-                    _mm256_setr_pd(
-                        twi[j * stride],
-                        twi[(j + 1) * stride],
-                        twi[(j + 2) * stride],
-                        twi[(j + 3) * stride],
-                    ),
-                )
-            };
-            let wi = _mm256_mul_pd(sv, wi_raw);
-            let ur = _mm256_loadu_pd(re_h.as_ptr().add(j));
-            let ui = _mm256_loadu_pd(im_h.as_ptr().add(j));
-            let tr = _mm256_loadu_pd(re_t.as_ptr().add(j));
-            let ti = _mm256_loadu_pd(im_t.as_ptr().add(j));
-            let vr = _mm256_sub_pd(_mm256_mul_pd(tr, wr), _mm256_mul_pd(ti, wi));
-            let vi = _mm256_add_pd(_mm256_mul_pd(tr, wi), _mm256_mul_pd(ti, wr));
-            _mm256_storeu_pd(re_h.as_mut_ptr().add(j), _mm256_add_pd(ur, vr));
-            _mm256_storeu_pd(im_h.as_mut_ptr().add(j), _mm256_add_pd(ui, vi));
-            _mm256_storeu_pd(re_t.as_mut_ptr().add(j), _mm256_sub_pd(ur, vr));
-            _mm256_storeu_pd(im_t.as_mut_ptr().add(j), _mm256_sub_pd(ui, vi));
-            j += 4;
-        }
-        if j < half {
-            scalar::fft_butterfly(
-                &mut re_h[j..],
-                &mut im_h[j..],
-                &mut re_t[j..],
-                &mut im_t[j..],
-                &twr[j * stride..],
-                &twi[j * stride..],
-                stride,
-                sign,
-            );
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let half = re_h.len();
+            let sv = _mm256_set1_pd(sign);
+            let mut j = 0;
+            while j + 4 <= half {
+                let (wr, wi_raw) = if stride == 1 {
+                    (
+                        _mm256_loadu_pd(twr.as_ptr().add(j)),
+                        _mm256_loadu_pd(twi.as_ptr().add(j)),
+                    )
+                } else {
+                    (
+                        _mm256_setr_pd(
+                            twr[j * stride],
+                            twr[(j + 1) * stride],
+                            twr[(j + 2) * stride],
+                            twr[(j + 3) * stride],
+                        ),
+                        _mm256_setr_pd(
+                            twi[j * stride],
+                            twi[(j + 1) * stride],
+                            twi[(j + 2) * stride],
+                            twi[(j + 3) * stride],
+                        ),
+                    )
+                };
+                let wi = _mm256_mul_pd(sv, wi_raw);
+                let ur = _mm256_loadu_pd(re_h.as_ptr().add(j));
+                let ui = _mm256_loadu_pd(im_h.as_ptr().add(j));
+                let tr = _mm256_loadu_pd(re_t.as_ptr().add(j));
+                let ti = _mm256_loadu_pd(im_t.as_ptr().add(j));
+                let vr = _mm256_sub_pd(_mm256_mul_pd(tr, wr), _mm256_mul_pd(ti, wi));
+                let vi = _mm256_add_pd(_mm256_mul_pd(tr, wi), _mm256_mul_pd(ti, wr));
+                _mm256_storeu_pd(re_h.as_mut_ptr().add(j), _mm256_add_pd(ur, vr));
+                _mm256_storeu_pd(im_h.as_mut_ptr().add(j), _mm256_add_pd(ui, vi));
+                _mm256_storeu_pd(re_t.as_mut_ptr().add(j), _mm256_sub_pd(ur, vr));
+                _mm256_storeu_pd(im_t.as_mut_ptr().add(j), _mm256_sub_pd(ui, vi));
+                j += 4;
+            }
+            if j < half {
+                scalar::fft_butterfly(
+                    &mut re_h[j..],
+                    &mut im_h[j..],
+                    &mut re_t[j..],
+                    &mut im_t[j..],
+                    &twr[j * stride..],
+                    &twi[j * stride..],
+                    stride,
+                    sign,
+                );
+            }
         }
     }
 
     /// 4 twiddles at `(j..j+4)·stride`; contiguous load when `stride == 1`.
     #[target_feature(enable = "avx2")]
     #[inline]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     unsafe fn tw_gather4(t: &[f64], stride: usize, j: usize) -> __m256d {
-        if stride == 1 {
-            _mm256_loadu_pd(t.as_ptr().add(j))
-        } else {
-            _mm256_setr_pd(
-                t[j * stride],
-                t[(j + 1) * stride],
-                t[(j + 2) * stride],
-                t[(j + 3) * stride],
-            )
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            if stride == 1 {
+                _mm256_loadu_pd(t.as_ptr().add(j))
+            } else {
+                _mm256_setr_pd(
+                    t[j * stride],
+                    t[(j + 1) * stride],
+                    t[(j + 2) * stride],
+                    t[(j + 3) * stride],
+                )
+            }
         }
     }
 
     #[target_feature(enable = "sse2")]
     #[inline]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     unsafe fn tw_gather2(t: &[f64], stride: usize, j: usize) -> __m128d {
-        if stride == 1 {
-            _mm_loadu_pd(t.as_ptr().add(j))
-        } else {
-            _mm_setr_pd(t[j * stride], t[(j + 1) * stride])
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            if stride == 1 {
+                _mm_loadu_pd(t.as_ptr().add(j))
+            } else {
+                _mm_setr_pd(t[j * stride], t[(j + 1) * stride])
+            }
         }
     }
 
@@ -1303,30 +1579,65 @@ mod x86 {
     /// descending `h - k` side of a conjugate-pair walk.
     #[target_feature(enable = "avx2")]
     #[inline]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     unsafe fn rev_load4(p: *const f64) -> __m256d {
-        _mm256_permute4x64_pd::<0x1B>(_mm256_loadu_pd(p))
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            _mm256_permute4x64_pd::<0x1B>(_mm256_loadu_pd(p))
+        }
     }
 
     #[target_feature(enable = "avx2")]
     #[inline]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     unsafe fn rev_store4(p: *mut f64, v: __m256d) {
-        _mm256_storeu_pd(p, _mm256_permute4x64_pd::<0x1B>(v));
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            _mm256_storeu_pd(p, _mm256_permute4x64_pd::<0x1B>(v));
+        }
     }
 
     #[target_feature(enable = "sse2")]
     #[inline]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     unsafe fn rev_load2(p: *const f64) -> __m128d {
-        let v = _mm_loadu_pd(p);
-        _mm_shuffle_pd::<0b01>(v, v)
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let v = _mm_loadu_pd(p);
+            _mm_shuffle_pd::<0b01>(v, v)
+        }
     }
 
     #[target_feature(enable = "sse2")]
     #[inline]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     unsafe fn rev_store2(p: *mut f64, v: __m128d) {
-        _mm_storeu_pd(p, _mm_shuffle_pd::<0b01>(v, v));
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            _mm_storeu_pd(p, _mm_shuffle_pd::<0b01>(v, v));
+        }
     }
 
     #[target_feature(enable = "avx2")]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn cmul_half_avx2(
         zre: &mut [f64],
         zim: &mut [f64],
@@ -1335,53 +1646,61 @@ mod x86 {
         twr: &[f64],
         twi: &[f64],
     ) {
-        let h = zre.len();
-        scalar::cmul_half_ends(zre, zim, kr, ki);
-        let k1 = h / 2;
-        let half = _mm256_set1_pd(0.5);
-        let mut k = 1usize;
-        while k + 4 <= k1 {
-            let jb = h - k - 3; // memory base of the descending j = h-k side
-            let wr = _mm256_loadu_pd(twr.as_ptr().add(k));
-            let wi = _mm256_loadu_pd(twi.as_ptr().add(k));
-            let zkr = _mm256_loadu_pd(zre.as_ptr().add(k));
-            let zki = _mm256_loadu_pd(zim.as_ptr().add(k));
-            let zjr = rev_load4(zre.as_ptr().add(jb));
-            let zji = rev_load4(zim.as_ptr().add(jb));
-            let er = _mm256_mul_pd(half, _mm256_add_pd(zkr, zjr));
-            let ei = _mm256_mul_pd(half, _mm256_sub_pd(zki, zji));
-            let onr = _mm256_mul_pd(half, _mm256_add_pd(zki, zji));
-            let oni = _mm256_mul_pd(half, _mm256_sub_pd(zjr, zkr));
-            let pr = _mm256_sub_pd(_mm256_mul_pd(onr, wr), _mm256_mul_pd(oni, wi));
-            let pi = _mm256_add_pd(_mm256_mul_pd(onr, wi), _mm256_mul_pd(oni, wr));
-            let xkr = _mm256_add_pd(er, pr);
-            let xki = _mm256_add_pd(ei, pi);
-            let xjr = _mm256_sub_pd(er, pr);
-            let xji = _mm256_sub_pd(pi, ei);
-            let kkr = _mm256_loadu_pd(kr.as_ptr().add(k));
-            let kki = _mm256_loadu_pd(ki.as_ptr().add(k));
-            let kjr = rev_load4(kr.as_ptr().add(jb));
-            let kji = rev_load4(ki.as_ptr().add(jb));
-            let ykr = _mm256_sub_pd(_mm256_mul_pd(xkr, kkr), _mm256_mul_pd(xki, kki));
-            let yki = _mm256_add_pd(_mm256_mul_pd(xkr, kki), _mm256_mul_pd(xki, kkr));
-            let yjr = _mm256_sub_pd(_mm256_mul_pd(xjr, kjr), _mm256_mul_pd(xji, kji));
-            let yji = _mm256_add_pd(_mm256_mul_pd(xjr, kji), _mm256_mul_pd(xji, kjr));
-            let epr = _mm256_mul_pd(half, _mm256_add_pd(ykr, yjr));
-            let epi = _mm256_mul_pd(half, _mm256_sub_pd(yki, yji));
-            let dr = _mm256_mul_pd(half, _mm256_sub_pd(ykr, yjr));
-            let di = _mm256_mul_pd(half, _mm256_add_pd(yki, yji));
-            let qr = _mm256_add_pd(_mm256_mul_pd(dr, wr), _mm256_mul_pd(di, wi));
-            let qi = _mm256_sub_pd(_mm256_mul_pd(di, wr), _mm256_mul_pd(dr, wi));
-            _mm256_storeu_pd(zre.as_mut_ptr().add(k), _mm256_sub_pd(epr, qi));
-            _mm256_storeu_pd(zim.as_mut_ptr().add(k), _mm256_add_pd(epi, qr));
-            rev_store4(zre.as_mut_ptr().add(jb), _mm256_add_pd(epr, qi));
-            rev_store4(zim.as_mut_ptr().add(jb), _mm256_sub_pd(qr, epi));
-            k += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let h = zre.len();
+            scalar::cmul_half_ends(zre, zim, kr, ki);
+            let k1 = h / 2;
+            let half = _mm256_set1_pd(0.5);
+            let mut k = 1usize;
+            while k + 4 <= k1 {
+                let jb = h - k - 3; // memory base of the descending j = h-k side
+                let wr = _mm256_loadu_pd(twr.as_ptr().add(k));
+                let wi = _mm256_loadu_pd(twi.as_ptr().add(k));
+                let zkr = _mm256_loadu_pd(zre.as_ptr().add(k));
+                let zki = _mm256_loadu_pd(zim.as_ptr().add(k));
+                let zjr = rev_load4(zre.as_ptr().add(jb));
+                let zji = rev_load4(zim.as_ptr().add(jb));
+                let er = _mm256_mul_pd(half, _mm256_add_pd(zkr, zjr));
+                let ei = _mm256_mul_pd(half, _mm256_sub_pd(zki, zji));
+                let onr = _mm256_mul_pd(half, _mm256_add_pd(zki, zji));
+                let oni = _mm256_mul_pd(half, _mm256_sub_pd(zjr, zkr));
+                let pr = _mm256_sub_pd(_mm256_mul_pd(onr, wr), _mm256_mul_pd(oni, wi));
+                let pi = _mm256_add_pd(_mm256_mul_pd(onr, wi), _mm256_mul_pd(oni, wr));
+                let xkr = _mm256_add_pd(er, pr);
+                let xki = _mm256_add_pd(ei, pi);
+                let xjr = _mm256_sub_pd(er, pr);
+                let xji = _mm256_sub_pd(pi, ei);
+                let kkr = _mm256_loadu_pd(kr.as_ptr().add(k));
+                let kki = _mm256_loadu_pd(ki.as_ptr().add(k));
+                let kjr = rev_load4(kr.as_ptr().add(jb));
+                let kji = rev_load4(ki.as_ptr().add(jb));
+                let ykr = _mm256_sub_pd(_mm256_mul_pd(xkr, kkr), _mm256_mul_pd(xki, kki));
+                let yki = _mm256_add_pd(_mm256_mul_pd(xkr, kki), _mm256_mul_pd(xki, kkr));
+                let yjr = _mm256_sub_pd(_mm256_mul_pd(xjr, kjr), _mm256_mul_pd(xji, kji));
+                let yji = _mm256_add_pd(_mm256_mul_pd(xjr, kji), _mm256_mul_pd(xji, kjr));
+                let epr = _mm256_mul_pd(half, _mm256_add_pd(ykr, yjr));
+                let epi = _mm256_mul_pd(half, _mm256_sub_pd(yki, yji));
+                let dr = _mm256_mul_pd(half, _mm256_sub_pd(ykr, yjr));
+                let di = _mm256_mul_pd(half, _mm256_add_pd(yki, yji));
+                let qr = _mm256_add_pd(_mm256_mul_pd(dr, wr), _mm256_mul_pd(di, wi));
+                let qi = _mm256_sub_pd(_mm256_mul_pd(di, wr), _mm256_mul_pd(dr, wi));
+                _mm256_storeu_pd(zre.as_mut_ptr().add(k), _mm256_sub_pd(epr, qi));
+                _mm256_storeu_pd(zim.as_mut_ptr().add(k), _mm256_add_pd(epi, qr));
+                rev_store4(zre.as_mut_ptr().add(jb), _mm256_add_pd(epr, qi));
+                rev_store4(zim.as_mut_ptr().add(jb), _mm256_sub_pd(qr, epi));
+                k += 4;
+            }
+            scalar::cmul_half_pairs(zre, zim, kr, ki, twr, twi, k, k1);
         }
-        scalar::cmul_half_pairs(zre, zim, kr, ki, twr, twi, k, k1);
     }
 
     #[target_feature(enable = "sse2")]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn cmul_half_sse2(
         zre: &mut [f64],
         zim: &mut [f64],
@@ -1390,54 +1709,62 @@ mod x86 {
         twr: &[f64],
         twi: &[f64],
     ) {
-        let h = zre.len();
-        scalar::cmul_half_ends(zre, zim, kr, ki);
-        let k1 = h / 2;
-        let half = _mm_set1_pd(0.5);
-        let mut k = 1usize;
-        while k + 2 <= k1 {
-            let jb = h - k - 1;
-            let wr = _mm_loadu_pd(twr.as_ptr().add(k));
-            let wi = _mm_loadu_pd(twi.as_ptr().add(k));
-            let zkr = _mm_loadu_pd(zre.as_ptr().add(k));
-            let zki = _mm_loadu_pd(zim.as_ptr().add(k));
-            let zjr = rev_load2(zre.as_ptr().add(jb));
-            let zji = rev_load2(zim.as_ptr().add(jb));
-            let er = _mm_mul_pd(half, _mm_add_pd(zkr, zjr));
-            let ei = _mm_mul_pd(half, _mm_sub_pd(zki, zji));
-            let onr = _mm_mul_pd(half, _mm_add_pd(zki, zji));
-            let oni = _mm_mul_pd(half, _mm_sub_pd(zjr, zkr));
-            let pr = _mm_sub_pd(_mm_mul_pd(onr, wr), _mm_mul_pd(oni, wi));
-            let pi = _mm_add_pd(_mm_mul_pd(onr, wi), _mm_mul_pd(oni, wr));
-            let xkr = _mm_add_pd(er, pr);
-            let xki = _mm_add_pd(ei, pi);
-            let xjr = _mm_sub_pd(er, pr);
-            let xji = _mm_sub_pd(pi, ei);
-            let kkr = _mm_loadu_pd(kr.as_ptr().add(k));
-            let kki = _mm_loadu_pd(ki.as_ptr().add(k));
-            let kjr = rev_load2(kr.as_ptr().add(jb));
-            let kji = rev_load2(ki.as_ptr().add(jb));
-            let ykr = _mm_sub_pd(_mm_mul_pd(xkr, kkr), _mm_mul_pd(xki, kki));
-            let yki = _mm_add_pd(_mm_mul_pd(xkr, kki), _mm_mul_pd(xki, kkr));
-            let yjr = _mm_sub_pd(_mm_mul_pd(xjr, kjr), _mm_mul_pd(xji, kji));
-            let yji = _mm_add_pd(_mm_mul_pd(xjr, kji), _mm_mul_pd(xji, kjr));
-            let epr = _mm_mul_pd(half, _mm_add_pd(ykr, yjr));
-            let epi = _mm_mul_pd(half, _mm_sub_pd(yki, yji));
-            let dr = _mm_mul_pd(half, _mm_sub_pd(ykr, yjr));
-            let di = _mm_mul_pd(half, _mm_add_pd(yki, yji));
-            let qr = _mm_add_pd(_mm_mul_pd(dr, wr), _mm_mul_pd(di, wi));
-            let qi = _mm_sub_pd(_mm_mul_pd(di, wr), _mm_mul_pd(dr, wi));
-            _mm_storeu_pd(zre.as_mut_ptr().add(k), _mm_sub_pd(epr, qi));
-            _mm_storeu_pd(zim.as_mut_ptr().add(k), _mm_add_pd(epi, qr));
-            rev_store2(zre.as_mut_ptr().add(jb), _mm_add_pd(epr, qi));
-            rev_store2(zim.as_mut_ptr().add(jb), _mm_sub_pd(qr, epi));
-            k += 2;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let h = zre.len();
+            scalar::cmul_half_ends(zre, zim, kr, ki);
+            let k1 = h / 2;
+            let half = _mm_set1_pd(0.5);
+            let mut k = 1usize;
+            while k + 2 <= k1 {
+                let jb = h - k - 1;
+                let wr = _mm_loadu_pd(twr.as_ptr().add(k));
+                let wi = _mm_loadu_pd(twi.as_ptr().add(k));
+                let zkr = _mm_loadu_pd(zre.as_ptr().add(k));
+                let zki = _mm_loadu_pd(zim.as_ptr().add(k));
+                let zjr = rev_load2(zre.as_ptr().add(jb));
+                let zji = rev_load2(zim.as_ptr().add(jb));
+                let er = _mm_mul_pd(half, _mm_add_pd(zkr, zjr));
+                let ei = _mm_mul_pd(half, _mm_sub_pd(zki, zji));
+                let onr = _mm_mul_pd(half, _mm_add_pd(zki, zji));
+                let oni = _mm_mul_pd(half, _mm_sub_pd(zjr, zkr));
+                let pr = _mm_sub_pd(_mm_mul_pd(onr, wr), _mm_mul_pd(oni, wi));
+                let pi = _mm_add_pd(_mm_mul_pd(onr, wi), _mm_mul_pd(oni, wr));
+                let xkr = _mm_add_pd(er, pr);
+                let xki = _mm_add_pd(ei, pi);
+                let xjr = _mm_sub_pd(er, pr);
+                let xji = _mm_sub_pd(pi, ei);
+                let kkr = _mm_loadu_pd(kr.as_ptr().add(k));
+                let kki = _mm_loadu_pd(ki.as_ptr().add(k));
+                let kjr = rev_load2(kr.as_ptr().add(jb));
+                let kji = rev_load2(ki.as_ptr().add(jb));
+                let ykr = _mm_sub_pd(_mm_mul_pd(xkr, kkr), _mm_mul_pd(xki, kki));
+                let yki = _mm_add_pd(_mm_mul_pd(xkr, kki), _mm_mul_pd(xki, kkr));
+                let yjr = _mm_sub_pd(_mm_mul_pd(xjr, kjr), _mm_mul_pd(xji, kji));
+                let yji = _mm_add_pd(_mm_mul_pd(xjr, kji), _mm_mul_pd(xji, kjr));
+                let epr = _mm_mul_pd(half, _mm_add_pd(ykr, yjr));
+                let epi = _mm_mul_pd(half, _mm_sub_pd(yki, yji));
+                let dr = _mm_mul_pd(half, _mm_sub_pd(ykr, yjr));
+                let di = _mm_mul_pd(half, _mm_add_pd(yki, yji));
+                let qr = _mm_add_pd(_mm_mul_pd(dr, wr), _mm_mul_pd(di, wi));
+                let qi = _mm_sub_pd(_mm_mul_pd(di, wr), _mm_mul_pd(dr, wi));
+                _mm_storeu_pd(zre.as_mut_ptr().add(k), _mm_sub_pd(epr, qi));
+                _mm_storeu_pd(zim.as_mut_ptr().add(k), _mm_add_pd(epi, qr));
+                rev_store2(zre.as_mut_ptr().add(jb), _mm_add_pd(epr, qi));
+                rev_store2(zim.as_mut_ptr().add(jb), _mm_sub_pd(qr, epi));
+                k += 2;
+            }
+            scalar::cmul_half_pairs(zre, zim, kr, ki, twr, twi, k, k1);
         }
-        scalar::cmul_half_pairs(zre, zim, kr, ki, twr, twi, k, k1);
     }
 
     #[target_feature(enable = "avx2")]
     #[allow(clippy::too_many_arguments)]
+    // SAFETY: contract — the executing CPU must support AVX2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn fft_butterfly4_avx2(
         re0: &mut [f64],
         im0: &mut [f64],
@@ -1452,57 +1779,65 @@ mod x86 {
         stride: usize,
         sign: f64,
     ) {
-        let l = re0.len();
-        let sv = _mm256_set1_pd(sign);
-        let mut j = 0;
-        while j + 4 <= l {
-            let w1r = tw_gather4(twr, stride, j);
-            let w1i = _mm256_mul_pd(sv, tw_gather4(twi, stride, j));
-            let w2r = tw_gather4(twr, 2 * stride, j);
-            let w2i = _mm256_mul_pd(sv, tw_gather4(twi, 2 * stride, j));
-            let w3r = tw_gather4(twr, 3 * stride, j);
-            let w3i = _mm256_mul_pd(sv, tw_gather4(twi, 3 * stride, j));
-            let ar = _mm256_loadu_pd(re0.as_ptr().add(j));
-            let ai = _mm256_loadu_pd(im0.as_ptr().add(j));
-            let q1r = _mm256_loadu_pd(re1.as_ptr().add(j));
-            let q1i = _mm256_loadu_pd(im1.as_ptr().add(j));
-            let q2r = _mm256_loadu_pd(re2.as_ptr().add(j));
-            let q2i = _mm256_loadu_pd(im2.as_ptr().add(j));
-            let q3r = _mm256_loadu_pd(re3.as_ptr().add(j));
-            let q3i = _mm256_loadu_pd(im3.as_ptr().add(j));
-            let cr = _mm256_sub_pd(_mm256_mul_pd(q1r, w2r), _mm256_mul_pd(q1i, w2i));
-            let ci = _mm256_add_pd(_mm256_mul_pd(q1r, w2i), _mm256_mul_pd(q1i, w2r));
-            let br = _mm256_sub_pd(_mm256_mul_pd(q2r, w1r), _mm256_mul_pd(q2i, w1i));
-            let bi = _mm256_add_pd(_mm256_mul_pd(q2r, w1i), _mm256_mul_pd(q2i, w1r));
-            let dr = _mm256_sub_pd(_mm256_mul_pd(q3r, w3r), _mm256_mul_pd(q3i, w3i));
-            let di = _mm256_add_pd(_mm256_mul_pd(q3r, w3i), _mm256_mul_pd(q3i, w3r));
-            let t0r = _mm256_add_pd(ar, cr);
-            let t0i = _mm256_add_pd(ai, ci);
-            let t1r = _mm256_sub_pd(ar, cr);
-            let t1i = _mm256_sub_pd(ai, ci);
-            let t2r = _mm256_add_pd(br, dr);
-            let t2i = _mm256_add_pd(bi, di);
-            let t3r = _mm256_mul_pd(sv, _mm256_sub_pd(br, dr));
-            let t3i = _mm256_mul_pd(sv, _mm256_sub_pd(bi, di));
-            _mm256_storeu_pd(re0.as_mut_ptr().add(j), _mm256_add_pd(t0r, t2r));
-            _mm256_storeu_pd(im0.as_mut_ptr().add(j), _mm256_add_pd(t0i, t2i));
-            _mm256_storeu_pd(re2.as_mut_ptr().add(j), _mm256_sub_pd(t0r, t2r));
-            _mm256_storeu_pd(im2.as_mut_ptr().add(j), _mm256_sub_pd(t0i, t2i));
-            _mm256_storeu_pd(re1.as_mut_ptr().add(j), _mm256_add_pd(t1r, t3i));
-            _mm256_storeu_pd(im1.as_mut_ptr().add(j), _mm256_sub_pd(t1i, t3r));
-            _mm256_storeu_pd(re3.as_mut_ptr().add(j), _mm256_sub_pd(t1r, t3i));
-            _mm256_storeu_pd(im3.as_mut_ptr().add(j), _mm256_add_pd(t1i, t3r));
-            j += 4;
-        }
-        if j < l {
-            scalar::fft_butterfly4_from(
-                re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, j,
-            );
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let l = re0.len();
+            let sv = _mm256_set1_pd(sign);
+            let mut j = 0;
+            while j + 4 <= l {
+                let w1r = tw_gather4(twr, stride, j);
+                let w1i = _mm256_mul_pd(sv, tw_gather4(twi, stride, j));
+                let w2r = tw_gather4(twr, 2 * stride, j);
+                let w2i = _mm256_mul_pd(sv, tw_gather4(twi, 2 * stride, j));
+                let w3r = tw_gather4(twr, 3 * stride, j);
+                let w3i = _mm256_mul_pd(sv, tw_gather4(twi, 3 * stride, j));
+                let ar = _mm256_loadu_pd(re0.as_ptr().add(j));
+                let ai = _mm256_loadu_pd(im0.as_ptr().add(j));
+                let q1r = _mm256_loadu_pd(re1.as_ptr().add(j));
+                let q1i = _mm256_loadu_pd(im1.as_ptr().add(j));
+                let q2r = _mm256_loadu_pd(re2.as_ptr().add(j));
+                let q2i = _mm256_loadu_pd(im2.as_ptr().add(j));
+                let q3r = _mm256_loadu_pd(re3.as_ptr().add(j));
+                let q3i = _mm256_loadu_pd(im3.as_ptr().add(j));
+                let cr = _mm256_sub_pd(_mm256_mul_pd(q1r, w2r), _mm256_mul_pd(q1i, w2i));
+                let ci = _mm256_add_pd(_mm256_mul_pd(q1r, w2i), _mm256_mul_pd(q1i, w2r));
+                let br = _mm256_sub_pd(_mm256_mul_pd(q2r, w1r), _mm256_mul_pd(q2i, w1i));
+                let bi = _mm256_add_pd(_mm256_mul_pd(q2r, w1i), _mm256_mul_pd(q2i, w1r));
+                let dr = _mm256_sub_pd(_mm256_mul_pd(q3r, w3r), _mm256_mul_pd(q3i, w3i));
+                let di = _mm256_add_pd(_mm256_mul_pd(q3r, w3i), _mm256_mul_pd(q3i, w3r));
+                let t0r = _mm256_add_pd(ar, cr);
+                let t0i = _mm256_add_pd(ai, ci);
+                let t1r = _mm256_sub_pd(ar, cr);
+                let t1i = _mm256_sub_pd(ai, ci);
+                let t2r = _mm256_add_pd(br, dr);
+                let t2i = _mm256_add_pd(bi, di);
+                let t3r = _mm256_mul_pd(sv, _mm256_sub_pd(br, dr));
+                let t3i = _mm256_mul_pd(sv, _mm256_sub_pd(bi, di));
+                _mm256_storeu_pd(re0.as_mut_ptr().add(j), _mm256_add_pd(t0r, t2r));
+                _mm256_storeu_pd(im0.as_mut_ptr().add(j), _mm256_add_pd(t0i, t2i));
+                _mm256_storeu_pd(re2.as_mut_ptr().add(j), _mm256_sub_pd(t0r, t2r));
+                _mm256_storeu_pd(im2.as_mut_ptr().add(j), _mm256_sub_pd(t0i, t2i));
+                _mm256_storeu_pd(re1.as_mut_ptr().add(j), _mm256_add_pd(t1r, t3i));
+                _mm256_storeu_pd(im1.as_mut_ptr().add(j), _mm256_sub_pd(t1i, t3r));
+                _mm256_storeu_pd(re3.as_mut_ptr().add(j), _mm256_sub_pd(t1r, t3i));
+                _mm256_storeu_pd(im3.as_mut_ptr().add(j), _mm256_add_pd(t1i, t3r));
+                j += 4;
+            }
+            if j < l {
+                scalar::fft_butterfly4_from(
+                    re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, j,
+                );
+            }
         }
     }
 
     #[target_feature(enable = "sse2")]
     #[allow(clippy::too_many_arguments)]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn fft_butterfly4_sse2(
         re0: &mut [f64],
         im0: &mut [f64],
@@ -1517,57 +1852,65 @@ mod x86 {
         stride: usize,
         sign: f64,
     ) {
-        let l = re0.len();
-        let sv = _mm_set1_pd(sign);
-        let mut j = 0;
-        while j + 2 <= l {
-            let w1r = tw_gather2(twr, stride, j);
-            let w1i = _mm_mul_pd(sv, tw_gather2(twi, stride, j));
-            let w2r = tw_gather2(twr, 2 * stride, j);
-            let w2i = _mm_mul_pd(sv, tw_gather2(twi, 2 * stride, j));
-            let w3r = tw_gather2(twr, 3 * stride, j);
-            let w3i = _mm_mul_pd(sv, tw_gather2(twi, 3 * stride, j));
-            let ar = _mm_loadu_pd(re0.as_ptr().add(j));
-            let ai = _mm_loadu_pd(im0.as_ptr().add(j));
-            let q1r = _mm_loadu_pd(re1.as_ptr().add(j));
-            let q1i = _mm_loadu_pd(im1.as_ptr().add(j));
-            let q2r = _mm_loadu_pd(re2.as_ptr().add(j));
-            let q2i = _mm_loadu_pd(im2.as_ptr().add(j));
-            let q3r = _mm_loadu_pd(re3.as_ptr().add(j));
-            let q3i = _mm_loadu_pd(im3.as_ptr().add(j));
-            let cr = _mm_sub_pd(_mm_mul_pd(q1r, w2r), _mm_mul_pd(q1i, w2i));
-            let ci = _mm_add_pd(_mm_mul_pd(q1r, w2i), _mm_mul_pd(q1i, w2r));
-            let br = _mm_sub_pd(_mm_mul_pd(q2r, w1r), _mm_mul_pd(q2i, w1i));
-            let bi = _mm_add_pd(_mm_mul_pd(q2r, w1i), _mm_mul_pd(q2i, w1r));
-            let dr = _mm_sub_pd(_mm_mul_pd(q3r, w3r), _mm_mul_pd(q3i, w3i));
-            let di = _mm_add_pd(_mm_mul_pd(q3r, w3i), _mm_mul_pd(q3i, w3r));
-            let t0r = _mm_add_pd(ar, cr);
-            let t0i = _mm_add_pd(ai, ci);
-            let t1r = _mm_sub_pd(ar, cr);
-            let t1i = _mm_sub_pd(ai, ci);
-            let t2r = _mm_add_pd(br, dr);
-            let t2i = _mm_add_pd(bi, di);
-            let t3r = _mm_mul_pd(sv, _mm_sub_pd(br, dr));
-            let t3i = _mm_mul_pd(sv, _mm_sub_pd(bi, di));
-            _mm_storeu_pd(re0.as_mut_ptr().add(j), _mm_add_pd(t0r, t2r));
-            _mm_storeu_pd(im0.as_mut_ptr().add(j), _mm_add_pd(t0i, t2i));
-            _mm_storeu_pd(re2.as_mut_ptr().add(j), _mm_sub_pd(t0r, t2r));
-            _mm_storeu_pd(im2.as_mut_ptr().add(j), _mm_sub_pd(t0i, t2i));
-            _mm_storeu_pd(re1.as_mut_ptr().add(j), _mm_add_pd(t1r, t3i));
-            _mm_storeu_pd(im1.as_mut_ptr().add(j), _mm_sub_pd(t1i, t3r));
-            _mm_storeu_pd(re3.as_mut_ptr().add(j), _mm_sub_pd(t1r, t3i));
-            _mm_storeu_pd(im3.as_mut_ptr().add(j), _mm_add_pd(t1i, t3r));
-            j += 2;
-        }
-        if j < l {
-            scalar::fft_butterfly4_from(
-                re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, j,
-            );
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let l = re0.len();
+            let sv = _mm_set1_pd(sign);
+            let mut j = 0;
+            while j + 2 <= l {
+                let w1r = tw_gather2(twr, stride, j);
+                let w1i = _mm_mul_pd(sv, tw_gather2(twi, stride, j));
+                let w2r = tw_gather2(twr, 2 * stride, j);
+                let w2i = _mm_mul_pd(sv, tw_gather2(twi, 2 * stride, j));
+                let w3r = tw_gather2(twr, 3 * stride, j);
+                let w3i = _mm_mul_pd(sv, tw_gather2(twi, 3 * stride, j));
+                let ar = _mm_loadu_pd(re0.as_ptr().add(j));
+                let ai = _mm_loadu_pd(im0.as_ptr().add(j));
+                let q1r = _mm_loadu_pd(re1.as_ptr().add(j));
+                let q1i = _mm_loadu_pd(im1.as_ptr().add(j));
+                let q2r = _mm_loadu_pd(re2.as_ptr().add(j));
+                let q2i = _mm_loadu_pd(im2.as_ptr().add(j));
+                let q3r = _mm_loadu_pd(re3.as_ptr().add(j));
+                let q3i = _mm_loadu_pd(im3.as_ptr().add(j));
+                let cr = _mm_sub_pd(_mm_mul_pd(q1r, w2r), _mm_mul_pd(q1i, w2i));
+                let ci = _mm_add_pd(_mm_mul_pd(q1r, w2i), _mm_mul_pd(q1i, w2r));
+                let br = _mm_sub_pd(_mm_mul_pd(q2r, w1r), _mm_mul_pd(q2i, w1i));
+                let bi = _mm_add_pd(_mm_mul_pd(q2r, w1i), _mm_mul_pd(q2i, w1r));
+                let dr = _mm_sub_pd(_mm_mul_pd(q3r, w3r), _mm_mul_pd(q3i, w3i));
+                let di = _mm_add_pd(_mm_mul_pd(q3r, w3i), _mm_mul_pd(q3i, w3r));
+                let t0r = _mm_add_pd(ar, cr);
+                let t0i = _mm_add_pd(ai, ci);
+                let t1r = _mm_sub_pd(ar, cr);
+                let t1i = _mm_sub_pd(ai, ci);
+                let t2r = _mm_add_pd(br, dr);
+                let t2i = _mm_add_pd(bi, di);
+                let t3r = _mm_mul_pd(sv, _mm_sub_pd(br, dr));
+                let t3i = _mm_mul_pd(sv, _mm_sub_pd(bi, di));
+                _mm_storeu_pd(re0.as_mut_ptr().add(j), _mm_add_pd(t0r, t2r));
+                _mm_storeu_pd(im0.as_mut_ptr().add(j), _mm_add_pd(t0i, t2i));
+                _mm_storeu_pd(re2.as_mut_ptr().add(j), _mm_sub_pd(t0r, t2r));
+                _mm_storeu_pd(im2.as_mut_ptr().add(j), _mm_sub_pd(t0i, t2i));
+                _mm_storeu_pd(re1.as_mut_ptr().add(j), _mm_add_pd(t1r, t3i));
+                _mm_storeu_pd(im1.as_mut_ptr().add(j), _mm_sub_pd(t1i, t3r));
+                _mm_storeu_pd(re3.as_mut_ptr().add(j), _mm_sub_pd(t1r, t3i));
+                _mm_storeu_pd(im3.as_mut_ptr().add(j), _mm_add_pd(t1i, t3r));
+                j += 2;
+            }
+            if j < l {
+                scalar::fft_butterfly4_from(
+                    re0, im0, re1, im1, re2, im2, re3, im3, twr, twi, stride, sign, j,
+                );
+            }
         }
     }
 
     #[target_feature(enable = "sse2")]
     #[allow(clippy::too_many_arguments)]
+    // SAFETY: contract — the executing CPU must support SSE2 (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn fft_butterfly_sse2(
         re_h: &mut [f64],
         im_h: &mut [f64],
@@ -1578,45 +1921,50 @@ mod x86 {
         stride: usize,
         sign: f64,
     ) {
-        let half = re_h.len();
-        let sv = _mm_set1_pd(sign);
-        let mut j = 0;
-        while j + 2 <= half {
-            let (wr, wi_raw) = if stride == 1 {
-                (
-                    _mm_loadu_pd(twr.as_ptr().add(j)),
-                    _mm_loadu_pd(twi.as_ptr().add(j)),
-                )
-            } else {
-                (
-                    _mm_setr_pd(twr[j * stride], twr[(j + 1) * stride]),
-                    _mm_setr_pd(twi[j * stride], twi[(j + 1) * stride]),
-                )
-            };
-            let wi = _mm_mul_pd(sv, wi_raw);
-            let ur = _mm_loadu_pd(re_h.as_ptr().add(j));
-            let ui = _mm_loadu_pd(im_h.as_ptr().add(j));
-            let tr = _mm_loadu_pd(re_t.as_ptr().add(j));
-            let ti = _mm_loadu_pd(im_t.as_ptr().add(j));
-            let vr = _mm_sub_pd(_mm_mul_pd(tr, wr), _mm_mul_pd(ti, wi));
-            let vi = _mm_add_pd(_mm_mul_pd(tr, wi), _mm_mul_pd(ti, wr));
-            _mm_storeu_pd(re_h.as_mut_ptr().add(j), _mm_add_pd(ur, vr));
-            _mm_storeu_pd(im_h.as_mut_ptr().add(j), _mm_add_pd(ui, vi));
-            _mm_storeu_pd(re_t.as_mut_ptr().add(j), _mm_sub_pd(ur, vr));
-            _mm_storeu_pd(im_t.as_mut_ptr().add(j), _mm_sub_pd(ui, vi));
-            j += 2;
-        }
-        if j < half {
-            scalar::fft_butterfly(
-                &mut re_h[j..],
-                &mut im_h[j..],
-                &mut re_t[j..],
-                &mut im_t[j..],
-                &twr[j * stride..],
-                &twi[j * stride..],
-                stride,
-                sign,
-            );
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let half = re_h.len();
+            let sv = _mm_set1_pd(sign);
+            let mut j = 0;
+            while j + 2 <= half {
+                let (wr, wi_raw) = if stride == 1 {
+                    (
+                        _mm_loadu_pd(twr.as_ptr().add(j)),
+                        _mm_loadu_pd(twi.as_ptr().add(j)),
+                    )
+                } else {
+                    (
+                        _mm_setr_pd(twr[j * stride], twr[(j + 1) * stride]),
+                        _mm_setr_pd(twi[j * stride], twi[(j + 1) * stride]),
+                    )
+                };
+                let wi = _mm_mul_pd(sv, wi_raw);
+                let ur = _mm_loadu_pd(re_h.as_ptr().add(j));
+                let ui = _mm_loadu_pd(im_h.as_ptr().add(j));
+                let tr = _mm_loadu_pd(re_t.as_ptr().add(j));
+                let ti = _mm_loadu_pd(im_t.as_ptr().add(j));
+                let vr = _mm_sub_pd(_mm_mul_pd(tr, wr), _mm_mul_pd(ti, wi));
+                let vi = _mm_add_pd(_mm_mul_pd(tr, wi), _mm_mul_pd(ti, wr));
+                _mm_storeu_pd(re_h.as_mut_ptr().add(j), _mm_add_pd(ur, vr));
+                _mm_storeu_pd(im_h.as_mut_ptr().add(j), _mm_add_pd(ui, vi));
+                _mm_storeu_pd(re_t.as_mut_ptr().add(j), _mm_sub_pd(ur, vr));
+                _mm_storeu_pd(im_t.as_mut_ptr().add(j), _mm_sub_pd(ui, vi));
+                j += 2;
+            }
+            if j < half {
+                scalar::fft_butterfly(
+                    &mut re_h[j..],
+                    &mut im_h[j..],
+                    &mut re_t[j..],
+                    &mut im_t[j..],
+                    &twr[j * stride..],
+                    &twi[j * stride..],
+                    stride,
+                    sign,
+                );
+            }
         }
     }
 }
@@ -1631,90 +1979,138 @@ mod neon {
     use std::arch::aarch64::*;
 
     #[target_feature(enable = "neon")]
+    // SAFETY: contract — the executing CPU must support NEON (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn butterfly_neon(head: &mut [f32], tail: &mut [f32]) {
-        let n = head.len();
-        let mut i = 0;
-        while i + 4 <= n {
-            let a = vld1q_f32(head.as_ptr().add(i));
-            let b = vld1q_f32(tail.as_ptr().add(i));
-            vst1q_f32(head.as_mut_ptr().add(i), vaddq_f32(a, b));
-            vst1q_f32(tail.as_mut_ptr().add(i), vsubq_f32(a, b));
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = head.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let a = vld1q_f32(head.as_ptr().add(i));
+                let b = vld1q_f32(tail.as_ptr().add(i));
+                vst1q_f32(head.as_mut_ptr().add(i), vaddq_f32(a, b));
+                vst1q_f32(tail.as_mut_ptr().add(i), vsubq_f32(a, b));
+                i += 4;
+            }
+            scalar::butterfly(&mut head[i..], &mut tail[i..]);
         }
-        scalar::butterfly(&mut head[i..], &mut tail[i..]);
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: contract — the executing CPU must support NEON (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn butterfly_scaled_neon(head: &mut [f32], tail: &mut [f32], s: f32) {
-        let n = head.len();
-        let sv = vdupq_n_f32(s);
-        let mut i = 0;
-        while i + 4 <= n {
-            let a = vld1q_f32(head.as_ptr().add(i));
-            let b = vld1q_f32(tail.as_ptr().add(i));
-            vst1q_f32(head.as_mut_ptr().add(i), vmulq_f32(vaddq_f32(a, b), sv));
-            vst1q_f32(tail.as_mut_ptr().add(i), vmulq_f32(vsubq_f32(a, b), sv));
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = head.len();
+            let sv = vdupq_n_f32(s);
+            let mut i = 0;
+            while i + 4 <= n {
+                let a = vld1q_f32(head.as_ptr().add(i));
+                let b = vld1q_f32(tail.as_ptr().add(i));
+                vst1q_f32(head.as_mut_ptr().add(i), vmulq_f32(vaddq_f32(a, b), sv));
+                vst1q_f32(tail.as_mut_ptr().add(i), vmulq_f32(vsubq_f32(a, b), sv));
+                i += 4;
+            }
+            scalar::butterfly_scaled(&mut head[i..], &mut tail[i..], s);
         }
-        scalar::butterfly_scaled(&mut head[i..], &mut tail[i..], s);
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: contract — the executing CPU must support NEON (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn scale_neon(a: &mut [f32], d: &[f32]) {
-        let n = a.len();
-        let mut i = 0;
-        while i + 4 <= n {
-            let x = vld1q_f32(a.as_ptr().add(i));
-            let s = vld1q_f32(d.as_ptr().add(i));
-            vst1q_f32(a.as_mut_ptr().add(i), vmulq_f32(x, s));
-            i += 4;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = a.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let x = vld1q_f32(a.as_ptr().add(i));
+                let s = vld1q_f32(d.as_ptr().add(i));
+                vst1q_f32(a.as_mut_ptr().add(i), vmulq_f32(x, s));
+                i += 4;
+            }
+            scalar::scale(&mut a[i..], &d[i..]);
         }
-        scalar::scale(&mut a[i..], &d[i..]);
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: contract — the executing CPU must support NEON (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     unsafe fn quad_sign_mask(signs: &[u64], i: usize) -> uint32x4_t {
-        let w = signs[i >> 6] >> (i & 63);
-        let lanes: [u32; 4] = [
-            ((w & 1) as u32) << 31,
-            (((w >> 1) & 1) as u32) << 31,
-            (((w >> 2) & 1) as u32) << 31,
-            (((w >> 3) & 1) as u32) << 31,
-        ];
-        vld1q_u32(lanes.as_ptr())
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let w = signs[i >> 6] >> (i & 63);
+            let lanes: [u32; 4] = [
+                ((w & 1) as u32) << 31,
+                (((w >> 1) & 1) as u32) << 31,
+                (((w >> 2) & 1) as u32) << 31,
+                (((w >> 3) & 1) as u32) << 31,
+            ];
+            vld1q_u32(lanes.as_ptr())
+        }
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: contract — the executing CPU must support NEON (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn apply_signs_neon(x: &mut [f32], signs: &[u64]) {
-        let n = x.len();
-        let mut i = 0;
-        while i + 4 <= n {
-            let mask = quad_sign_mask(signs, i);
-            let v = vreinterpretq_u32_f32(vld1q_f32(x.as_ptr().add(i)));
-            vst1q_f32(x.as_mut_ptr().add(i), vreinterpretq_f32_u32(veorq_u32(v, mask)));
-            i += 4;
-        }
-        for k in i..n {
-            let m = (((signs[k >> 6] >> (k & 63)) & 1) as u32) << 31;
-            x[k] = f32::from_bits(x[k].to_bits() ^ m);
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = x.len();
+            let mut i = 0;
+            while i + 4 <= n {
+                let mask = quad_sign_mask(signs, i);
+                let v = vreinterpretq_u32_f32(vld1q_f32(x.as_ptr().add(i)));
+                vst1q_f32(x.as_mut_ptr().add(i), vreinterpretq_f32_u32(veorq_u32(v, mask)));
+                i += 4;
+            }
+            for k in i..n {
+                let m = (((signs[k >> 6] >> (k & 63)) & 1) as u32) << 31;
+                x[k] = f32::from_bits(x[k].to_bits() ^ m);
+            }
         }
     }
 
     #[target_feature(enable = "neon")]
+    // SAFETY: contract — the executing CPU must support NEON (the
+    // dispatcher only routes here after detection, and tests only force
+    // levels the host reported); no other preconditions.
     pub(super) unsafe fn apply_signs_scaled_neon(x: &mut [f32], signs: &[u64], s: f32) {
-        let n = x.len();
-        let sv = vdupq_n_f32(s);
-        let mut i = 0;
-        while i + 4 <= n {
-            let mask = quad_sign_mask(signs, i);
-            let v = vreinterpretq_u32_f32(vld1q_f32(x.as_ptr().add(i)));
-            let flipped = vreinterpretq_f32_u32(veorq_u32(v, mask));
-            vst1q_f32(x.as_mut_ptr().add(i), vmulq_f32(flipped, sv));
-            i += 4;
-        }
-        for k in i..n {
-            let m = (((signs[k >> 6] >> (k & 63)) & 1) as u32) << 31;
-            x[k] = f32::from_bits(x[k].to_bits() ^ m) * s;
+        // SAFETY: the intrinsics below require only the target feature the
+        // fn contract establishes; every pointer is derived from a slice
+        // argument and stays within its length by the loop bounds.
+        unsafe {
+            let n = x.len();
+            let sv = vdupq_n_f32(s);
+            let mut i = 0;
+            while i + 4 <= n {
+                let mask = quad_sign_mask(signs, i);
+                let v = vreinterpretq_u32_f32(vld1q_f32(x.as_ptr().add(i)));
+                let flipped = vreinterpretq_f32_u32(veorq_u32(v, mask));
+                vst1q_f32(x.as_mut_ptr().add(i), vmulq_f32(flipped, sv));
+                i += 4;
+            }
+            for k in i..n {
+                let m = (((signs[k >> 6] >> (k & 63)) & 1) as u32) << 31;
+                x[k] = f32::from_bits(x[k].to_bits() ^ m) * s;
+            }
         }
     }
 }

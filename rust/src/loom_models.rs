@@ -1,0 +1,171 @@
+//! Exhaustive interleaving models of the two lock-free hot spots, run by
+//! the `loom` CI lane: `RUSTFLAGS="--cfg loom" cargo test --lib loom`.
+//!
+//! These drive the *production* code — [`crate::coordinator::breaker`] and
+//! [`crate::runtime::pool::claim_chunks`] import their atomics through the
+//! [`crate::util::sync`] façade, which re-exports `loom::sync::atomic`
+//! under `--cfg loom` — so loom explores every thread interleaving *and*
+//! every value a `Relaxed` load may legally observe, not a model of the
+//! algorithm but the algorithm itself.
+//!
+//! What is deliberately *not* asserted matters as much as what is: the
+//! breaker's protocol tolerates stale phase reads (admission is advisory;
+//! see the `ORDERING:` rationale at each site), so the models pin the
+//! properties the coordinator actually relies on — exactly one open edge
+//! per degradation (the `breaker_opens` metric), monotonic streak
+//! accounting, and a clean slate after restart — rather than any stronger
+//! linearization the Relaxed orderings never promised.
+
+#[cfg(test)]
+mod models {
+    use crate::coordinator::breaker::{LaneState, Phase};
+    use crate::runtime::pool::claim_chunks;
+    use crate::util::sync::atomic::AtomicUsize;
+    use loom::sync::Arc;
+    use loom::thread;
+    use std::time::Duration;
+
+    /// Long enough that a degraded breaker never half-opens mid-model
+    /// (models must not depend on wall-clock time passing).
+    const LONG: Duration = Duration::from_secs(3600);
+
+    #[test]
+    fn breaker_racing_failures_open_exactly_once() {
+        // threshold 1: BOTH failures independently qualify to open the
+        // breaker, so this pins the strongest claim — the phase swap's RMW
+        // atomicity hands the open edge to exactly one of them, under
+        // every interleaving and every Relaxed value assignment.
+        loom::model(|| {
+            let s = Arc::new(LaneState::new(1, LONG));
+            let a = {
+                let s = Arc::clone(&s);
+                thread::spawn(move || s.record_failure())
+            };
+            let b = {
+                let s = Arc::clone(&s);
+                thread::spawn(move || s.record_failure())
+            };
+            let edges = [a.join().unwrap(), b.join().unwrap()];
+            assert_eq!(
+                edges.iter().filter(|e| **e).count(),
+                1,
+                "exactly one racing failure may claim the open edge: {edges:?}"
+            );
+            assert_eq!(s.phase(), Phase::Degraded);
+            assert_eq!(s.consecutive_failures(), 2, "RMW streak: no lost increment");
+            assert!(!s.admit(), "degraded breaker sheds until cooldown");
+        });
+    }
+
+    #[test]
+    fn breaker_threshold_counts_racing_failures_without_loss() {
+        // threshold 2, two racing failures: the fetch_add streak hands out
+        // distinct values 1 and 2, so the breaker must end up open no
+        // matter which thread observed the threshold crossing.
+        loom::model(|| {
+            let s = Arc::new(LaneState::new(2, LONG));
+            let a = {
+                let s = Arc::clone(&s);
+                thread::spawn(move || s.record_failure())
+            };
+            let edge_b = s.record_failure();
+            let edge_a = a.join().unwrap();
+            assert_eq!(
+                u32::from(edge_a) + u32::from(edge_b),
+                1,
+                "exactly one thread sees the streak cross the threshold"
+            );
+            assert_eq!(s.phase(), Phase::Degraded);
+            assert_eq!(s.consecutive_failures(), 2);
+        });
+    }
+
+    #[test]
+    fn breaker_success_failure_race_stays_coherent() {
+        // A success and a failure racing (can happen across a restart
+        // boundary: the old lane thread's last outcome vs the new one's
+        // first). Either order is acceptable; what may never happen is an
+        // incoherent composite — an open phase that still sheds, or a
+        // streak the counter lost entirely.
+        loom::model(|| {
+            let s = Arc::new(LaneState::new(1, LONG));
+            let f = {
+                let s = Arc::clone(&s);
+                thread::spawn(move || s.record_failure())
+            };
+            s.record_success();
+            f.join().unwrap();
+            let streak = s.consecutive_failures();
+            assert!(streak <= 1, "store(0) and fetch_add can only interleave to 0 or 1");
+            match s.phase() {
+                // failure ordered last (or its swap landed after the
+                // success's close): breaker open, shedding
+                Phase::Degraded => assert!(!s.admit()),
+                // success ordered last: breaker closed, admitting
+                Phase::Open => assert!(s.admit()),
+                Phase::Dead => unreachable!("nothing sets Dead in this model"),
+            }
+        });
+    }
+
+    #[test]
+    fn breaker_restart_wipes_state_under_concurrent_admission() {
+        // Supervisor kills and restarts the lane while a submitter polls
+        // admit(): mid-flight admission may land either way (advisory by
+        // design), but after the restart is sequenced the slate is clean.
+        loom::model(|| {
+            let s = Arc::new(LaneState::new(1, LONG));
+            assert!(s.record_failure());
+            let submitter = {
+                let s = Arc::clone(&s);
+                thread::spawn(move || {
+                    // racing reads: must not crash or deadlock; the value
+                    // is free to be either side of the transition
+                    let _ = s.admit();
+                    let _ = s.phase();
+                })
+            };
+            s.set_dead();
+            s.restart();
+            submitter.join().unwrap();
+            assert_eq!(s.phase(), Phase::Open, "restart leaves a clean lane");
+            assert_eq!(s.consecutive_failures(), 0);
+            assert!(s.admit());
+        });
+    }
+
+    #[test]
+    fn claim_chunks_ranges_are_disjoint_and_covering() {
+        // Two workers drain a 5-row batch in chunks of 2 (ragged tail
+        // included): every interleaving must partition 0..5 exactly —
+        // fetch_add's RMW atomicity is the only thing making that true,
+        // which is precisely what the ORDERING: rationale at the site
+        // claims Relaxed is sufficient for.
+        loom::model(|| {
+            const ROWS: usize = 5;
+            const CHUNK: usize = 2;
+            let next = Arc::new(AtomicUsize::new(0));
+            let worker = |next: Arc<AtomicUsize>| {
+                thread::spawn(move || {
+                    let mut claimed = Vec::new();
+                    claim_chunks(&next, ROWS, CHUNK, |lo, hi| claimed.push((lo, hi)));
+                    claimed
+                })
+            };
+            let a = worker(Arc::clone(&next));
+            // second claimant runs concurrently from the main thread so
+            // loom only schedules two entities; claim_chunks is symmetric
+            let mut ranges = Vec::new();
+            claim_chunks(&next, ROWS, CHUNK, |lo, hi| ranges.push((lo, hi)));
+            ranges.extend(a.join().unwrap());
+            let mut cover = [0u8; ROWS];
+            for (lo, hi) in ranges {
+                assert!(lo < hi && hi <= ROWS, "claimed range {lo}..{hi} out of bounds");
+                for c in &mut cover[lo..hi] {
+                    *c += 1;
+                }
+            }
+            assert!(cover.iter().all(|c| *c == 1), "rows not partitioned: {cover:?}");
+        });
+    }
+}

@@ -46,7 +46,7 @@ impl CrossPolytopeHash {
     /// the LSH index drives (one workspace shared across every table, hash
     /// function and point).
     pub fn hash_with(&self, x: &[f32], ws: &mut Workspace) -> usize {
-        let mut y = ws.take_f32_uninit(self.transform.dim_out()); // fully overwritten
+        let mut y = ws.take_f32_uninit(self.transform.dim_out()); // OVERWRITE: fully overwritten
         self.transform.apply_padded_into(x, &mut y, ws);
         let h = argmax_abs_signed(&y);
         ws.put_f32(y);
@@ -71,6 +71,7 @@ impl CrossPolytopeHash {
         debug_assert_eq!(xs.len() % n, 0);
         let rows = xs.len() / n;
         debug_assert_eq!(out.len(), rows);
+        // OVERWRITE: apply_batch_into writes every row of the projection.
         let mut proj = pool.with_serial_workspace(|ws| ws.take_f32_uninit(rows * k));
         self.transform.apply_batch_into(xs, &mut proj, pool);
         for (o, prow) in out.iter_mut().zip(proj.chunks_exact(k)) {

@@ -39,7 +39,10 @@
 //! private pool, whose threads are shut down and joined on drop.
 
 use crate::linalg::workspace::{worker_count_from_env, Workspace, MIN_ROWS_PER_WORKER};
-use std::sync::atomic::{AtomicUsize, Ordering};
+// Atomics come through the loom façade so the `--cfg loom` lane can model
+// the chunk-claim counter (see `crate::loom_models`); normal builds get
+// std atomics.
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Mutex, OnceLock};
 use std::thread::{JoinHandle, ThreadId};
@@ -209,7 +212,7 @@ impl WorkerPool {
         }
         let workers = workers.min(self.size);
         let inner = self.inner();
-        // Safety: the borrow is erased to 'static only for the duration of
+        // SAFETY: the borrow is erased to 'static only for the duration of
         // this call; the ack-drain below guarantees no worker touches the
         // task after `run` returns (see the send-failure path, which still
         // drains every ack for a successfully dispatched job).
@@ -364,14 +367,34 @@ pub fn shard_rows(
         if lo < rows {
             task(lo, rows.min(lo + chunk), slot, ws);
         }
-        loop {
-            let lo = next.fetch_add(chunk, Ordering::Relaxed);
-            if lo >= rows {
-                break;
-            }
-            task(lo, rows.min(lo + chunk), slot, ws);
-        }
+        claim_chunks(&next, rows, chunk, |lo, hi| task(lo, hi, slot, ws));
     });
+}
+
+/// The chunk-claim loop at the heart of [`shard_rows`]: repeatedly claim
+/// `chunk`-sized ranges off the shared counter until `rows` is drained,
+/// invoking `claim(lo, hi)` for each claimed range. Factored out — and
+/// routed through the loom atomics façade — so the `--cfg loom` CI lane
+/// can exhaustively verify that concurrent claimants produce disjoint,
+/// covering ranges (`crate::loom_models`), against the production loop
+/// rather than a reimplementation.
+pub(crate) fn claim_chunks(
+    next: &AtomicUsize,
+    rows: usize,
+    chunk: usize,
+    mut claim: impl FnMut(usize, usize),
+) {
+    loop {
+        // ORDERING: Relaxed — fetch_add's RMW atomicity alone makes claimed
+        // ranges disjoint and covering; the counter publishes no other
+        // memory (row buffers are handed to workers by `pool.run`'s channel
+        // send/ack, which synchronize), so no release/acquire is needed.
+        let lo = next.fetch_add(chunk, Ordering::Relaxed);
+        if lo >= rows {
+            break;
+        }
+        claim(lo, rows.min(lo + chunk));
+    }
 }
 
 #[cfg(test)]
@@ -575,6 +598,8 @@ mod tests {
         {
             let ptr = data.as_mut_ptr() as usize;
             pool.run(4, &|i, _ws| {
+                // SAFETY: each worker slot writes a disjoint 16-element
+                // window of the 64-element Vec, which outlives the call.
                 let chunk = unsafe {
                     std::slice::from_raw_parts_mut((ptr as *mut u32).add(i * 16), 16)
                 };

@@ -73,8 +73,9 @@ impl Transform for StackedTransform {
         debug_assert_eq!(out.len(), self.k);
         // One reused square scratch row: each block writes its full output
         // there and only the kept (truncated) prefix is copied out — no
-        // per-block allocation, no materialized n×n block results. Dirty
-        // checkout: every element is overwritten by the block apply.
+        // per-block allocation, no materialized n×n block results.
+        // OVERWRITE: dirty checkout — every element is overwritten by the
+        // block apply before the truncated prefix is copied out.
         let mut buf = ws.take_f32_uninit(self.n);
         let mut off = 0;
         for b in &self.blocks {
@@ -99,7 +100,8 @@ impl Transform for StackedTransform {
         debug_assert_eq!(xs.len() % n, 0);
         let rows = xs.len() / n;
         debug_assert_eq!(out.len(), rows * k);
-        // dirty checkout: each block's batch kernel overwrites every row
+        // OVERWRITE: dirty checkout — each block's batch kernel overwrites
+        // every row before the kept prefix is copied out.
         let mut buf = ws.take_f32_uninit(rows * n);
         let mut off = 0;
         for b in &self.blocks {

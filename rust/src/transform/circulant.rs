@@ -172,7 +172,8 @@ impl Transform for StructuredGaussian {
         out.copy_from_slice(x);
         self.d1.apply(out);
         fwht(out);
-        // FFT top block on reused workspace scratch. Dirty checkouts: every
+        // FFT top block on reused workspace scratch.
+        // OVERWRITE: dirty checkouts — every
         // element below `n` is overwritten by the promotion, the spectrum
         // scratch is fully overwritten (RFFT) or cleared (complex legacy
         // lane) inside the plan kernel — only the circulant-embedding
@@ -204,7 +205,8 @@ impl Transform for StructuredGaussian {
         let n = self.n;
         let m = self.plan.len();
         let block = self.plan.batch_block_rows();
-        // dirty checkouts: every row's `dst[..n]` is written by the
+        // OVERWRITE: dirty checkouts — every row's `dst[..n]` is written by
+        // the
         // promotion and `dst[n..]` is explicitly zeroed below; the
         // spectrum scratch is the plan kernel's concern (fully overwritten
         // on the RFFT lane — one shared row, half the old checkout — and

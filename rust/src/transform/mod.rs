@@ -146,7 +146,7 @@ pub trait Transform: Send + Sync {
         let out_ptr = out.as_mut_ptr() as usize;
         shard_rows(pool, rows, self.batch_work_per_row(), &|lo, hi, _slot, ws| {
             let xc = &xs[lo * n..hi * n];
-            // Safety: shard_rows hands out disjoint, covering row ranges,
+            // SAFETY: shard_rows hands out disjoint, covering row ranges,
             // and WorkerPool::run blocks until every worker acked — no two
             // workers alias, no write outlives this call.
             let oc = unsafe {

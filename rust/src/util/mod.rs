@@ -4,6 +4,7 @@ pub mod bench;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub(crate) mod sync;
 
 /// Best-effort text of a caught panic payload. `panic!("...")` and
 /// `panic!("{x}")` produce `&str` / `String` payloads; anything else (a

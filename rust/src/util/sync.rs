@@ -1,0 +1,19 @@
+//! Atomics façade for the two lock-free hot spots that have loom models.
+//!
+//! Compiled with `--cfg loom` (the `loom` CI lane: `RUSTFLAGS="--cfg loom"
+//! cargo test --lib loom`), this re-exports [`loom::sync::atomic`] so the
+//! exhaustive interleaving models in [`crate::loom_models`] drive the
+//! *production* breaker and chunk-claim code, not reimplementations. In a
+//! normal build it is exactly [`std::sync::atomic`] — zero overhead.
+//!
+//! Only `coordinator::breaker` and `runtime::pool::claim_chunks` import
+//! through this façade. The dispatch caches (`linalg::simd::LEVEL`,
+//! `linalg::fft::VARIANT`) deliberately do not: they are `static`s needing
+//! `const` construction, which loom's atomics do not provide — and as
+//! idempotent same-value caches they have no interleaving state space
+//! worth modeling.
+
+#[cfg(loom)]
+pub(crate) use loom::sync::atomic;
+#[cfg(not(loom))]
+pub(crate) use std::sync::atomic;

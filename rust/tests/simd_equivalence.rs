@@ -301,6 +301,168 @@ fn check_hamming_equivalence() {
     }
 }
 
+/// Run `f` under scalar and under every tier, asserting identical results.
+fn assert_tiers_match<T: PartialEq + std::fmt::Debug>(
+    levels: &[simd::Level],
+    name: &str,
+    run: impl Fn() -> T,
+) {
+    let scalar = with_level(Some(simd::Level::Scalar), &run);
+    for &level in levels {
+        let got = with_level(Some(level), &run);
+        assert_eq!(got, scalar, "{name}: differs between {} and scalar", level.name());
+    }
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every public SIMD kernel driven *directly*, not through the transform
+/// stack: `cargo xtask lint` requires each `pub fn` kernel of
+/// `linalg/simd.rs` to be named in this file, and this sweep is the
+/// coverage backing that rule — a new kernel cannot land without per-tier
+/// bit-identity here (comparisons are on raw IEEE bits, so `-0.0 == 0.0`
+/// cannot mask a divergence). Length grids cover empty inputs,
+/// sub-vector-width tails, exact vector multiples and sign-word straddles.
+fn check_raw_kernel_equivalence() {
+    let levels = levels_under_test();
+    let mut rng = Rng::new(31337);
+    let s32 = 0.37f32;
+
+    // f32 kernels: butterfly, butterfly_scaled, scale, apply_signs,
+    // apply_signs_scaled, promote_signs_scaled, pack_signs
+    for n in [0usize, 1, 3, 4, 7, 8, 9, 15, 16, 31, 33, 64, 65, 100, 256] {
+        let head = rng.gaussian_vec(n);
+        let tail = rng.gaussian_vec(n);
+        let diag = rng.gaussian_vec(n);
+        let signs: Vec<u64> = (0..n.div_ceil(64)).map(|_| rng.next_u64()).collect();
+        assert_tiers_match(&levels, &format!("butterfly n={n}"), || {
+            let (mut h, mut t) = (head.clone(), tail.clone());
+            simd::butterfly(&mut h, &mut t);
+            (bits32(&h), bits32(&t))
+        });
+        assert_tiers_match(&levels, &format!("butterfly_scaled n={n}"), || {
+            let (mut h, mut t) = (head.clone(), tail.clone());
+            simd::butterfly_scaled(&mut h, &mut t, s32);
+            (bits32(&h), bits32(&t))
+        });
+        assert_tiers_match(&levels, &format!("scale n={n}"), || {
+            let mut a = head.clone();
+            simd::scale(&mut a, &diag);
+            bits32(&a)
+        });
+        assert_tiers_match(&levels, &format!("apply_signs n={n}"), || {
+            let mut x = head.clone();
+            simd::apply_signs(&mut x, &signs);
+            bits32(&x)
+        });
+        assert_tiers_match(&levels, &format!("apply_signs_scaled n={n}"), || {
+            let mut x = head.clone();
+            simd::apply_signs_scaled(&mut x, &signs, s32);
+            bits32(&x)
+        });
+        assert_tiers_match(&levels, &format!("promote_signs_scaled n={n}"), || {
+            let mut dst = vec![0.0f64; n];
+            simd::promote_signs_scaled(&head, &signs, s32, &mut dst);
+            bits64(&dst)
+        });
+        assert_tiers_match(&levels, &format!("pack_signs n={n}"), || {
+            let mut dst = vec![u64::MAX; n.div_ceil(64)];
+            simd::pack_signs(&head, &mut dst);
+            dst
+        });
+    }
+
+    // f64 kernels: cmul, fft_butterfly, fft_butterfly4, cmul_half, and the
+    // construction-path rfft_split / rfft_merge
+    let gauss = |rng: &mut Rng, m: usize| -> Vec<f64> { (0..m).map(|_| rng.gaussian()).collect() };
+    for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 16, 33, 64] {
+        let a = gauss(&mut rng, n);
+        let b = gauss(&mut rng, n);
+        let c = gauss(&mut rng, n);
+        let d = gauss(&mut rng, n);
+        assert_tiers_match(&levels, &format!("cmul n={n}"), || {
+            let (mut re, mut im) = (a.clone(), b.clone());
+            simd::cmul(&mut re, &mut im, &c, &d);
+            (bits64(&re), bits64(&im))
+        });
+        for stride in [1usize, 3] {
+            for sign in [1.0f64, -1.0] {
+                let tw = if n == 0 { 0 } else { (n - 1) * stride + 1 };
+                let twr = gauss(&mut rng, tw);
+                let twi = gauss(&mut rng, tw);
+                let label = format!("fft_butterfly n={n} stride={stride} sign={sign}");
+                assert_tiers_match(&levels, &label, || {
+                    let (mut rh, mut ih) = (a.clone(), b.clone());
+                    let (mut rt, mut it) = (c.clone(), d.clone());
+                    simd::fft_butterfly(
+                        &mut rh, &mut ih, &mut rt, &mut it, &twr, &twi, stride, sign,
+                    );
+                    (bits64(&rh), bits64(&ih), bits64(&rt), bits64(&it))
+                });
+                let tw4 = if n == 0 { 0 } else { 3 * (n - 1) * stride + 1 };
+                let twr4 = gauss(&mut rng, tw4);
+                let twi4 = gauss(&mut rng, tw4);
+                let label = format!("fft_butterfly4 n={n} stride={stride} sign={sign}");
+                let quads: Vec<Vec<f64>> = (0..8).map(|_| gauss(&mut rng, n)).collect();
+                assert_tiers_match(&levels, &label, || {
+                    let mut q: Vec<Vec<f64>> = quads.clone();
+                    let (q0, rest) = q.split_at_mut(1);
+                    let (q1, rest) = rest.split_at_mut(1);
+                    let (q2, rest) = rest.split_at_mut(1);
+                    let (q3, rest) = rest.split_at_mut(1);
+                    let (q4, rest) = rest.split_at_mut(1);
+                    let (q5, rest) = rest.split_at_mut(1);
+                    let (q6, q7) = rest.split_at_mut(1);
+                    simd::fft_butterfly4(
+                        &mut q0[0], &mut q1[0], &mut q2[0], &mut q3[0], &mut q4[0], &mut q5[0],
+                        &mut q6[0], &mut q7[0], &twr4, &twi4, stride, sign,
+                    );
+                    q.iter().map(|v| bits64(v)).collect::<Vec<_>>()
+                });
+            }
+        }
+        // half-spectrum kernels need even h (or the h <= 1 degenerate)
+        if n <= 1 || n % 2 == 0 {
+            let h = n;
+            let kr = gauss(&mut rng, h + 1);
+            let ki = gauss(&mut rng, h + 1);
+            let twr = gauss(&mut rng, h / 2);
+            let twi = gauss(&mut rng, h / 2);
+            assert_tiers_match(&levels, &format!("cmul_half h={h}"), || {
+                let (mut zre, mut zim) = (a.clone(), b.clone());
+                simd::cmul_half(&mut zre, &mut zim, &kr, &ki, &twr, &twi);
+                (bits64(&zre), bits64(&zim))
+            });
+            assert_tiers_match(&levels, &format!("rfft_split h={h}"), || {
+                let (mut xr, mut xi) = (vec![0.0f64; h + 1], vec![0.0f64; h + 1]);
+                simd::rfft_split(&a, &b, &mut xr, &mut xi, &twr, &twi);
+                (bits64(&xr), bits64(&xi))
+            });
+            assert_tiers_match(&levels, &format!("rfft_merge h={h}"), || {
+                let (mut zre, mut zim) = (vec![0.0f64; h], vec![0.0f64; h]);
+                simd::rfft_merge(&kr, &ki, &mut zre, &mut zim, &twr, &twi);
+                (bits64(&zre), bits64(&zim))
+            });
+        }
+    }
+
+    // hamming: integer popcount over XOR — sweep word counts around the
+    // AVX2 4-word block boundary
+    for words in [0usize, 1, 3, 4, 5, 8, 17] {
+        let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        assert_tiers_match(&levels, &format!("hamming words={words}"), || {
+            simd::hamming(&a, &b)
+        });
+    }
+}
+
 #[test]
 fn simd_and_scalar_paths_are_byte_identical() {
     println!(
@@ -308,6 +470,7 @@ fn simd_and_scalar_paths_are_byte_identical() {
         simd::level().name(),
         levels_under_test().iter().map(|l| l.name()).collect::<Vec<_>>()
     );
+    check_raw_kernel_equivalence();
     check_sign_diag_against_f32_reference();
     check_fft_kernel_equivalence();
     check_family_equivalence();

@@ -1,0 +1,710 @@
+//! `cargo xtask lint` — the repo-native invariant linter.
+//!
+//! Walks `rust/src` (plus the equivalence suite and ROADMAP.md) and
+//! enforces the invariants the engine's unsafe/atomic code lives by. This
+//! is the first, fastest CI gate: it compiles with zero dependencies and
+//! fails the build before the expensive matrix starts.
+//!
+//! Rules (rule IDs are stable; `tools/lint_mirror.py` reimplements the
+//! same rules for authoring environments without a Rust toolchain — keep
+//! the two in lockstep):
+//!
+//! * **R1** — every line whose *code* (comments/strings stripped) contains
+//!   the token `unsafe` must have a `// SAFETY:` comment on the same line
+//!   or within the 8 preceding lines, and `unsafe` may only appear at all
+//!   in the allowlisted modules (`linalg::simd`, `runtime::pool`,
+//!   `binary`, `transform`, `kernels::features`, `coordinator::backend`).
+//! * **R2** — every atomic-memory `Ordering::` use (`Relaxed`/`Acquire`/
+//!   `Release`/`AcqRel`/`SeqCst`; `std::cmp::Ordering` is not matched)
+//!   must have a `// ORDERING:` rationale within the same window. Exempt,
+//!   per the LaneMetrics carve-out: `coordinator/metrics.rs` itself,
+//!   counter bumps whose receiver chain goes through `metrics` (the site
+//!   line or its 2 preceding continuation lines mention `metrics`), and
+//!   `#[cfg(test)]` / `#[cfg(miri)]` modules.
+//! * **R3** — every public SIMD kernel (`pub fn` at column 0 in
+//!   `linalg/simd.rs`, minus the dispatch-introspection fns
+//!   `level`/`force`/`active`) must be named in
+//!   `rust/tests/simd_equivalence.rs`.
+//! * **R4** — wire error codes (the `=> "..."` arms of the two
+//!   `fn code()` bodies in `coordinator/mod.rs` plus the `CODE_*` consts
+//!   in `coordinator/server.rs`) must be unique and exactly equal the set
+//!   in ROADMAP.md's "Serving failure model" table.
+//! * **R5** — every `take_f32_uninit` / `take_f64_uninit` call site
+//!   outside `linalg/workspace.rs` (where they are defined and
+//!   self-tested) and outside test modules must carry a `// OVERWRITE:`
+//!   comment within the window.
+//! * **R6** — `rust/src/lib.rs` must carry
+//!   `#![deny(unsafe_op_in_unsafe_fn)]` (what makes R1's per-operation
+//!   granularity sound inside `unsafe fn`s).
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Marker may sit on the site line or up to this many lines above. 8, not
+/// less: rationale blocks span several comment lines and one block
+/// legitimately covers the two or three stores of a single tiny method.
+const WINDOW: usize = 8;
+
+/// Modules allowed to contain `unsafe` at all (paths relative to
+/// `rust/src`; a trailing `/` allowlists the whole directory).
+const UNSAFE_ALLOWLIST: [&str; 6] = [
+    "linalg/simd.rs",
+    "runtime/pool.rs",
+    "binary/",
+    "transform/",
+    "kernels/features.rs",
+    "coordinator/backend.rs",
+];
+
+/// `pub fn`s in `linalg/simd.rs` that are dispatch introspection, not
+/// kernels — exempt from the equivalence-suite rule.
+const KERNEL_ALLOWLIST: [&str; 3] = ["level", "force", "active"];
+
+/// The five atomic-memory orderings (`std::cmp::Ordering` variants do not
+/// appear here, so comparison code never trips R2).
+const ATOMIC_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+fn is_word(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// `\b needle \b` word-boundary search (needle is ASCII).
+fn contains_word(hay: &str, needle: &str) -> bool {
+    let mut start = 0;
+    while let Some(p) = hay[start..].find(needle) {
+        let at = start + p;
+        let end = at + needle.len();
+        let before_ok = at == 0 || !is_word(hay[..at].chars().next_back().unwrap());
+        let after_ok = hay[end..].chars().next().is_none_or(|c| !is_word(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+/// Does this code line use an atomic-memory ordering (`Ordering::Relaxed`
+/// etc.)? Word-boundary on both sides, so `MyOrdering::Relaxed` and
+/// `Ordering::RelaxedExtra` do not match.
+fn has_atomic_ordering(code: &str) -> bool {
+    const TOK: &str = "Ordering::";
+    let mut start = 0;
+    while let Some(p) = code[start..].find(TOK) {
+        let at = start + p;
+        let before_ok = at == 0 || !is_word(code[..at].chars().next_back().unwrap());
+        let rest = &code[at + TOK.len()..];
+        let hit = before_ok
+            && ATOMIC_ORDERINGS.iter().any(|v| {
+                rest.starts_with(v) && rest[v.len()..].chars().next().is_none_or(|c| !is_word(c))
+            });
+        if hit {
+            return true;
+        }
+        start = at + TOK.len();
+    }
+    false
+}
+
+/// One scanned source line: code with comments/strings stripped, the
+/// comment text, and whether the line sits inside a `#[cfg(test)]` /
+/// `#[cfg(miri)]` module.
+struct Row {
+    code: String,
+    comment: String,
+    in_test: bool,
+}
+
+/// Split one source line into (code, comment) given the running block
+/// comment depth (Rust block comments nest). String and char literals are
+/// blanked out of the code part so a quote or `//` inside them cannot
+/// confuse detection; raw strings are handled for the `r"..."` form (no
+/// `#` guards are used in this repo).
+fn strip_line(line: &str, block_depth: &mut usize) -> (String, String) {
+    let b: Vec<char> = line.chars().collect();
+    let n = b.len();
+    let (mut code, mut comment) = (String::new(), String::new());
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        let nxt = if i + 1 < n { b[i + 1] } else { '\0' };
+        if *block_depth > 0 {
+            if c == '*' && nxt == '/' {
+                *block_depth -= 1;
+                comment.push_str("*/");
+                i += 2;
+            } else if c == '/' && nxt == '*' {
+                *block_depth += 1;
+                comment.push_str("/*");
+                i += 2;
+            } else {
+                comment.push(c);
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && nxt == '/' {
+            comment.extend(&b[i..]);
+            break;
+        }
+        if c == '/' && nxt == '*' {
+            *block_depth += 1;
+            comment.push_str("/*");
+            i += 2;
+            continue;
+        }
+        if c == '"' || (c == 'r' && nxt == '"') {
+            if c == 'r' {
+                code.push('r');
+                i += 1;
+            }
+            code.push_str("\"\"");
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    i += 2;
+                } else if b[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == '\'' {
+            // char literal ('x' or '\x') vs lifetime ('static)
+            if nxt == '\\' && i + 3 < n && b[i + 3] == '\'' {
+                code.push_str("' '");
+                i += 4;
+                continue;
+            }
+            if nxt != '\\' && nxt != '\'' && i + 2 < n && b[i + 2] == '\'' {
+                code.push_str("' '");
+                i += 3;
+                continue;
+            }
+            code.push(c);
+            i += 1;
+            continue;
+        }
+        code.push(c);
+        i += 1;
+    }
+    (code, comment)
+}
+
+/// Is this (stripped) line a `#[cfg(test)]`-family attribute?
+/// Matches `#[cfg(test…`, `#[cfg(miri…`, `#[cfg(all(test…`,
+/// `#[cfg(all(miri…` with a word boundary after the keyword.
+fn is_test_cfg_attr(stripped: &str) -> bool {
+    ["#[cfg(test", "#[cfg(miri", "#[cfg(all(test", "#[cfg(all(miri"]
+        .iter()
+        .any(|pre| {
+            stripped.find(pre).is_some_and(|p| {
+                stripped[p + pre.len()..].chars().next().is_none_or(|c| !is_word(c))
+            })
+        })
+}
+
+/// Scan a whole file into rows, tracking nested block comments and
+/// `#[cfg(test)] mod` / `#[cfg(miri)] mod` spans by brace depth.
+fn scan_source(text: &str) -> Vec<Row> {
+    let mut block_depth = 0usize;
+    let mut rows = Vec::new();
+    let mut pending_test_attr = false;
+    let mut test_depth: Option<i64> = None;
+    let mut depth: i64 = 0;
+    for raw in text.lines() {
+        let (code, comment) = strip_line(raw, &mut block_depth);
+        let stripped = code.trim();
+        let mut in_test = test_depth.is_some();
+        if test_depth.is_none() {
+            if is_test_cfg_attr(stripped) {
+                pending_test_attr = true;
+            } else if pending_test_attr && stripped.starts_with("mod ") {
+                test_depth = Some(depth);
+                in_test = true;
+                pending_test_attr = false;
+            } else if !stripped.is_empty() && !stripped.starts_with("#[") {
+                pending_test_attr = false;
+            }
+        }
+        depth += code.matches('{').count() as i64 - code.matches('}').count() as i64;
+        if let Some(td) = test_depth {
+            if depth <= td && code.contains('}') {
+                // the closing brace line itself still counts as test code
+                rows.push(Row { code, comment, in_test: true });
+                test_depth = None;
+                continue;
+            }
+        }
+        rows.push(Row { code, comment, in_test });
+    }
+    rows
+}
+
+/// Is `marker` present in a comment on the site line or within the
+/// preceding WINDOW lines?
+fn has_marker(rows: &[Row], idx: usize, marker: &str) -> bool {
+    let lo = idx.saturating_sub(WINDOW);
+    rows[lo..=idx].iter().any(|r| r.comment.contains(marker))
+}
+
+/// R1 / R2 / R5 over a single source file (`rel` is the path relative to
+/// `rust/src`, forward slashes).
+fn lint_annotations(rel: &str, text: &str, errors: &mut Vec<String>) {
+    let rows = scan_source(text);
+    let allowed_unsafe = UNSAFE_ALLOWLIST
+        .iter()
+        .any(|a| rel == *a || (a.ends_with('/') && rel.starts_with(a)));
+    for (i, row) in rows.iter().enumerate() {
+        let loc = format!("rust/src/{}:{}", rel, i + 1);
+        if contains_word(&row.code, "unsafe") {
+            if !allowed_unsafe {
+                errors.push(format!("R1 {loc}: `unsafe` outside the module allowlist"));
+            }
+            if !has_marker(&rows, i, "SAFETY:") {
+                errors.push(format!("R1 {loc}: `unsafe` without an adjacent // SAFETY: comment"));
+            }
+        }
+        let metrics_recv = rows[i.saturating_sub(2)..=i].iter().any(|r| r.code.contains("metrics"));
+        if has_atomic_ordering(&row.code)
+            && rel != "coordinator/metrics.rs"
+            && !metrics_recv
+            && !row.in_test
+            && !has_marker(&rows, i, "ORDERING:")
+        {
+            errors.push(format!(
+                "R2 {loc}: atomic Ordering:: without an adjacent // ORDERING: comment"
+            ));
+        }
+        let takes_uninit = contains_word(&row.code, "take_f32_uninit")
+            || contains_word(&row.code, "take_f64_uninit");
+        if takes_uninit
+            && rel != "linalg/workspace.rs"
+            && !row.in_test
+            && !has_marker(&rows, i, "OVERWRITE:")
+        {
+            errors.push(format!(
+                "R5 {loc}: take_*_uninit without an adjacent // OVERWRITE: comment"
+            ));
+        }
+    }
+}
+
+/// Column-0 `pub fn` names in `linalg/simd.rs`, minus the introspection
+/// allowlist — the kernel surface the equivalence suite must cover.
+fn extract_kernels(simd: &str) -> Vec<String> {
+    simd.lines()
+        .filter_map(|l| {
+            let rest = l.strip_prefix("pub fn ")?;
+            let name: String = rest.chars().take_while(|c| is_word(*c)).collect();
+            (!name.is_empty() && !KERNEL_ALLOWLIST.contains(&name.as_str())).then_some(name)
+        })
+        .collect()
+}
+
+/// R3: every kernel name must appear (word-boundary) in the equivalence
+/// suite source.
+fn lint_kernels(simd: &str, equiv: &str, errors: &mut Vec<String>) -> usize {
+    let kernels = extract_kernels(simd);
+    for k in &kernels {
+        if !contains_word(equiv, k) {
+            errors.push(format!(
+                "R3 rust/src/linalg/simd.rs: public kernel `{k}` is not exercised by \
+                 rust/tests/simd_equivalence.rs"
+            ));
+        }
+    }
+    kernels.len()
+}
+
+fn is_code_ident(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+}
+
+/// `=> "code"` arms inside the `fn code(&self) -> &'static str` bodies of
+/// coordinator/mod.rs.
+fn extract_match_codes(coord: &str) -> Vec<String> {
+    const HEAD: &str = "fn code(&self) -> &'static str {";
+    let mut out = Vec::new();
+    let mut rest = coord;
+    while let Some(p) = rest.find(HEAD) {
+        let body = &rest[p + HEAD.len()..];
+        let end = body.find("\n    }").unwrap_or(body.len());
+        for line in body[..end].lines() {
+            if let Some(q) = line.find("=> \"") {
+                if let Some(e) = line[q + 4..].find('"') {
+                    let code = &line[q + 4..q + 4 + e];
+                    if is_code_ident(code) {
+                        out.push(code.to_string());
+                    }
+                }
+            }
+        }
+        rest = &body[end..];
+    }
+    out
+}
+
+/// `const CODE_*: &str = "code";` declarations in coordinator/server.rs.
+fn extract_const_codes(server: &str) -> Vec<String> {
+    const HEAD: &str = "const CODE_";
+    const MID: &str = ": &str = \"";
+    server
+        .lines()
+        .filter_map(|l| {
+            let p = l.find(HEAD)?;
+            let rest = &l[p + HEAD.len()..];
+            let eq = rest.find(MID)?;
+            let name = &rest[..eq];
+            if !name.chars().all(|c| c.is_ascii_uppercase() || c == '_') {
+                return None;
+            }
+            let tail = &rest[eq + MID.len()..];
+            let code = &tail[..tail.find("\";")?];
+            is_code_ident(code).then(|| code.to_string())
+        })
+        .collect()
+}
+
+/// `` | `code` | `` rows of ROADMAP.md's failure-model table.
+fn extract_roadmap_codes(roadmap: &str) -> Vec<String> {
+    roadmap
+        .lines()
+        .filter_map(|l| {
+            let rest = l.strip_prefix("| `")?;
+            let code = &rest[..rest.find("` |")?];
+            is_code_ident(code).then(|| code.to_string())
+        })
+        .collect()
+}
+
+fn dupes(v: &[String]) -> Vec<String> {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut out = std::collections::BTreeSet::new();
+    for c in v {
+        if !seen.insert(c) {
+            out.insert(c.clone());
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// R4: wire codes unique and exactly the ROADMAP table set.
+fn lint_wire_codes(coord: &str, server: &str, roadmap: &str, errors: &mut Vec<String>) -> usize {
+    let mut codes = extract_match_codes(coord);
+    codes.extend(extract_const_codes(server));
+    let d = dupes(&codes);
+    if !d.is_empty() {
+        errors.push(format!("R4 coordinator: duplicate wire codes: {d:?}"));
+    }
+    let table = extract_roadmap_codes(roadmap);
+    let dt = dupes(&table);
+    if !dt.is_empty() {
+        errors.push("R4 ROADMAP.md: duplicate rows in the failure-model table".into());
+    }
+    let code_set: std::collections::BTreeSet<_> = codes.iter().collect();
+    let table_set: std::collections::BTreeSet<_> = table.iter().collect();
+    let missing: Vec<_> = code_set.difference(&table_set).collect();
+    let stale: Vec<_> = table_set.difference(&code_set).collect();
+    if !missing.is_empty() {
+        errors
+            .push(format!("R4 ROADMAP.md: failure-model table is missing wire codes {missing:?}"));
+    }
+    if !stale.is_empty() {
+        errors.push(format!("R4 ROADMAP.md: failure-model table lists unknown codes {stale:?}"));
+    }
+    codes.len()
+}
+
+/// R6: the deny attribute that makes R1's per-operation rule sound.
+fn lint_deny_attr(lib: &str, errors: &mut Vec<String>) {
+    if !lib.contains("#![deny(unsafe_op_in_unsafe_fn)]") {
+        errors.push("R6 rust/src/lib.rs: missing #![deny(unsafe_op_in_unsafe_fn)]".into());
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn read(root: &Path, rel: &str, errors: &mut Vec<String>) -> String {
+    std::fs::read_to_string(root.join(rel)).unwrap_or_else(|e| {
+        errors.push(format!("lint: cannot read {rel}: {e}"));
+        String::new()
+    })
+}
+
+/// Run every rule over the repo at `root`; returns (errors, kernel count,
+/// wire-code count) for the summary line.
+fn run_lint(root: &Path) -> (Vec<String>, usize, usize) {
+    let mut errors = Vec::new();
+    let src = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files);
+    files.sort();
+    if files.is_empty() {
+        errors.push(format!("lint: no .rs files under {}", src.display()));
+    }
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src)
+            .expect("collected under src")
+            .to_string_lossy()
+            .replace('\\', "/");
+        match std::fs::read_to_string(path) {
+            Ok(text) => lint_annotations(&rel, &text, &mut errors),
+            Err(e) => errors.push(format!("lint: cannot read rust/src/{rel}: {e}")),
+        }
+    }
+    let simd = read(root, "rust/src/linalg/simd.rs", &mut errors);
+    let equiv = read(root, "rust/tests/simd_equivalence.rs", &mut errors);
+    let kernels = lint_kernels(&simd, &equiv, &mut errors);
+    let coord = read(root, "rust/src/coordinator/mod.rs", &mut errors);
+    let server = read(root, "rust/src/coordinator/server.rs", &mut errors);
+    let roadmap = read(root, "ROADMAP.md", &mut errors);
+    let codes = lint_wire_codes(&coord, &server, &roadmap, &mut errors);
+    let lib = read(root, "rust/src/lib.rs", &mut errors);
+    lint_deny_attr(&lib, &mut errors);
+    (errors, kernels, codes)
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_default();
+    if cmd != "lint" {
+        eprintln!("usage: cargo xtask lint [repo-root]");
+        return ExitCode::from(2);
+    }
+    let root = args.next().map(PathBuf::from).unwrap_or_else(|| {
+        // the xtask manifest lives at <root>/xtask
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("xtask sits one level under the repo root")
+            .to_path_buf()
+    });
+    let (errors, kernels, codes) = run_lint(&root);
+    for e in &errors {
+        println!("{e}");
+    }
+    println!("xtask lint: {} violation(s), {kernels} kernels, {codes} wire codes", errors.len());
+    if errors.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+// The linter is self-testing: every rule has at least one fixture it
+// provably rejects and one it accepts, so a regression in the scanner
+// (comment stripping, test-mod tracking, window math) fails `cargo test
+// -p xtask` before it silently stops flagging real code.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn annotate(rel: &str, text: &str) -> Vec<String> {
+        let mut errors = Vec::new();
+        lint_annotations(rel, text, &mut errors);
+        errors
+    }
+
+    #[test]
+    fn strip_separates_line_comments_and_blanks_strings() {
+        let mut d = 0;
+        let (code, comment) = strip_line(r#"let x = "unsafe // not"; // SAFETY: real"#, &mut d);
+        assert!(!code.contains("unsafe"));
+        assert!(comment.contains("SAFETY:"));
+        assert_eq!(d, 0);
+    }
+
+    #[test]
+    fn strip_handles_nested_block_comments() {
+        let mut d = 0;
+        let (code, _) = strip_line("a /* x /* y */ still comment", &mut d);
+        assert_eq!(code.trim(), "a");
+        assert_eq!(d, 1, "inner close leaves one open level");
+        let (code, _) = strip_line("z */ b", &mut d);
+        assert_eq!(code.trim(), "b");
+        assert_eq!(d, 0);
+    }
+
+    #[test]
+    fn strip_handles_char_literals_and_lifetimes() {
+        let mut d = 0;
+        let (code, comment) = strip_line(r"let q = '\''; let s: &'static str = f('/');", &mut d);
+        assert!(comment.is_empty(), "quoted '/' must not open a comment: {comment}");
+        assert!(code.contains("'static"));
+    }
+
+    #[test]
+    fn r1_rejects_unmarked_unsafe_and_accepts_marked() {
+        let bad = "pub fn f() {\n    unsafe { g() }\n}\n";
+        let errs = annotate("linalg/simd.rs", bad);
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("R1") && errs[0].contains("SAFETY"));
+
+        let good = "pub fn f() {\n    // SAFETY: g has no preconditions.\n    unsafe { g() }\n}\n";
+        assert!(annotate("linalg/simd.rs", good).is_empty());
+    }
+
+    #[test]
+    fn r1_rejects_unsafe_outside_allowlist() {
+        let text = "// SAFETY: marked, but the module is not allowlisted.\nunsafe { g() }\n";
+        let errs = annotate("lsh/crosspolytope.rs", text);
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("outside the module allowlist"));
+        // directory allowlisting: anything under binary/ passes
+        assert!(annotate("binary/mod.rs", text).is_empty());
+    }
+
+    #[test]
+    fn r1_ignores_unsafe_in_comments_strings_and_substrings() {
+        let text =
+            "// unsafe in a comment is fine\nlet s = \"unsafe\";\n#![deny(unsafe_op_in_unsafe_fn)]\n";
+        assert!(annotate("lsh/crosspolytope.rs", text).is_empty());
+    }
+
+    #[test]
+    fn r1_marker_outside_window_is_rejected() {
+        let filler = "    let x = 1;\n".repeat(WINDOW + 1);
+        let text = format!("// SAFETY: too far away.\n{filler}    unsafe {{ g() }}\n");
+        let errs = annotate("linalg/simd.rs", &text);
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        let text = "// SAFETY: close enough.\n    let x = 1;\n    unsafe { g() }\n";
+        assert!(annotate("linalg/simd.rs", text).is_empty());
+    }
+
+    #[test]
+    fn r2_rejects_bare_atomic_ordering_and_accepts_marked() {
+        let bad = "x.store(1, Ordering::Relaxed);\n";
+        let errs = annotate("runtime/pool.rs", bad);
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("R2"));
+        let good =
+            "// ORDERING: Relaxed — advisory flag.\nx.store(1, Ordering::Relaxed);\n";
+        assert!(annotate("runtime/pool.rs", good).is_empty());
+    }
+
+    #[test]
+    fn r2_exempts_metrics_counters_and_metrics_file() {
+        // receiver chain through `metrics` on the site line
+        let one_line = "lane.metrics.submitted.fetch_add(1, Ordering::Relaxed);\n";
+        assert!(annotate("coordinator/mod.rs", one_line).is_empty());
+        // rustfmt-split receiver chain: `metrics` two lines above the use
+        let split = "self.metrics\n    .batched_rows\n    .fetch_add(n, Ordering::Relaxed);\n";
+        assert!(annotate("coordinator/mod.rs", split).is_empty());
+        // the metrics module itself is exempt wholesale
+        assert!(annotate("coordinator/metrics.rs", "x.load(Ordering::Relaxed);\n").is_empty());
+        // but a non-metrics receiver still trips
+        assert_eq!(annotate("coordinator/mod.rs", "x.load(Ordering::Relaxed);\n").len(), 1);
+    }
+
+    #[test]
+    fn r2_ignores_cmp_ordering_and_test_mods() {
+        let cmp = "if a.cmp(&b) == Ordering::Less {\n}\n";
+        assert!(annotate("runtime/pool.rs", cmp).is_empty());
+        let test_mod =
+            "#[cfg(test)]\nmod tests {\n    fn f() {\n        x.load(Ordering::SeqCst);\n    }\n}\n";
+        assert!(annotate("runtime/pool.rs", test_mod).is_empty());
+        // code after the test mod closes is checked again
+        let after = format!("{test_mod}fn g() {{\n    x.load(Ordering::SeqCst);\n}}\n");
+        assert_eq!(annotate("runtime/pool.rs", &after).len(), 1);
+    }
+
+    #[test]
+    fn r5_rejects_unmarked_uninit_checkout() {
+        let bad = "let y = ws.take_f32_uninit(n);\n";
+        let errs = annotate("lsh/crosspolytope.rs", bad);
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("R5"));
+        let good = "let y = ws.take_f64_uninit(n); // OVERWRITE: fully overwritten below\n";
+        assert!(annotate("lsh/crosspolytope.rs", good).is_empty());
+        // the defining module is exempt (it self-tests the contract)
+        assert!(annotate("linalg/workspace.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn r3_flags_uncovered_kernels() {
+        let simd =
+            "pub fn butterfly(x: &mut [f32]) {}\npub fn level() {}\n    pub fn indented() {}\n";
+        let mut errors = Vec::new();
+        let n = lint_kernels(simd, "calls butterfly here", &mut errors);
+        assert_eq!(n, 1, "level is allowlisted, indented fn is not column-0 public API");
+        assert!(errors.is_empty());
+        let mut errors = Vec::new();
+        lint_kernels(simd, "no mention at all", &mut errors);
+        assert_eq!(errors.len(), 1);
+        assert!(errors[0].contains("butterfly"));
+        // substring mentions don't count: `butterfly4` is not `butterfly`
+        let mut errors = Vec::new();
+        lint_kernels(simd, "only butterfly4 is named", &mut errors);
+        assert_eq!(errors.len(), 1, "{errors:?}");
+    }
+
+    const COORD_FIXTURE: &str = concat!(
+        "impl RequestError {\n",
+        "    fn code(&self) -> &'static str {\n",
+        "        match self {\n",
+        "            RequestError::Deadline => \"deadline\",\n",
+        "            RequestError::Backend(_) => \"backend\",\n",
+        "        }\n",
+        "    }\n",
+        "}\n",
+    );
+    const SERVER_FIXTURE: &str = "pub const CODE_TIMEOUT: &str = \"timeout\";\n";
+
+    #[test]
+    fn r4_accepts_exact_roadmap_match() {
+        let roadmap = "| `deadline` | x |\n| `backend` | x |\n| `timeout` | x |\n";
+        let mut errors = Vec::new();
+        let n = lint_wire_codes(COORD_FIXTURE, SERVER_FIXTURE, roadmap, &mut errors);
+        assert_eq!(n, 3);
+        assert!(errors.is_empty(), "{errors:?}");
+    }
+
+    #[test]
+    fn r4_rejects_missing_stale_and_duplicate_codes() {
+        let mut errors = Vec::new();
+        lint_wire_codes(COORD_FIXTURE, SERVER_FIXTURE, "| `deadline` | x |\n", &mut errors);
+        assert!(errors.iter().any(|e| e.contains("missing wire codes")), "{errors:?}");
+        let mut errors = Vec::new();
+        let stale = "| `deadline` | x |\n| `backend` | x |\n| `timeout` | x |\n| `ghost` | x |\n";
+        lint_wire_codes(COORD_FIXTURE, SERVER_FIXTURE, stale, &mut errors);
+        assert!(errors.iter().any(|e| e.contains("unknown codes")), "{errors:?}");
+        let mut errors = Vec::new();
+        let dup_server = "pub const CODE_A: &str = \"deadline\";\n";
+        let table = "| `deadline` | x |\n| `backend` | x |\n";
+        lint_wire_codes(COORD_FIXTURE, dup_server, table, &mut errors);
+        assert!(errors.iter().any(|e| e.contains("duplicate wire codes")), "{errors:?}");
+    }
+
+    #[test]
+    fn r6_requires_the_deny_attribute() {
+        let mut errors = Vec::new();
+        lint_deny_attr("#![deny(unsafe_op_in_unsafe_fn)]\npub mod x;\n", &mut errors);
+        assert!(errors.is_empty());
+        lint_deny_attr("pub mod x;\n", &mut errors);
+        assert_eq!(errors.len(), 1);
+    }
+
+    #[test]
+    fn the_repo_itself_is_clean() {
+        // the ultimate fixture: the live tree must pass its own linter
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+        let (errors, kernels, codes) = run_lint(root);
+        assert!(errors.is_empty(), "{errors:#?}");
+        assert!(kernels >= 14, "kernel surface shrank unexpectedly: {kernels}");
+        assert!(codes >= 11, "wire-code taxonomy shrank unexpectedly: {codes}");
+    }
+}
