@@ -21,7 +21,11 @@
 //! the dense f32 multiply it replaced, and a `serving_fault` sweep timing
 //! the coordinator's terminal error paths (healthy call vs injected
 //! backend error vs injected backend panic through `catch_unwind`) so
-//! error-path latency is measured rather than assumed zero.
+//! error-path latency is measured rather than assumed zero. An
+//! `admission` sweep does the same for the overload-refusal paths: a
+//! granted call through an active token bucket vs a `throttled` refusal
+//! vs an `overloaded` shed — refusals must be far cheaper than serving,
+//! or shedding would not shed load.
 //!
 //! Writes `BENCH_transform_throughput.json` at the repo root to extend the
 //! perf trajectory. Set `TS_FULL=1` for the larger dims / row counts and
@@ -34,7 +38,8 @@ use std::time::Duration;
 
 use triplespin::binary::{BinaryEmbedding, BitMatrix};
 use triplespin::coordinator::{
-    Backend, Config, Coordinator, FaultInjectingBackend, FaultPlan, NativeBackend,
+    admission, Backend, Config, Coordinator, FaultInjectingBackend, FaultPlan, NativeBackend,
+    SubmitOptions,
 };
 use triplespin::linalg::fft;
 use triplespin::linalg::simd;
@@ -478,6 +483,109 @@ fn main() {
             ("panic_call_ns", Json::Num(panic_b.mean_ns)),
             ("err_overhead", Json::Num(err_b.mean_ns / ok_b.mean_ns)),
             ("panic_overhead", Json::Num(panic_b.mean_ns / ok_b.mean_ns)),
+        ]));
+    }
+
+    // Admission sweep: the overload-refusal paths next to the path they
+    // protect. `accept` is a full healthy call through an active token
+    // bucket (admission is on, budget ample); `throttle` is a submit
+    // against a drained bucket (refused before any backend time);
+    // `shed` is a low-priority submit against a primed queue-delay
+    // shedder. Refusals must be orders cheaper than serving — that gap
+    // is the entire value of admission control under overload.
+    println!("\n== admission paths (accept vs throttle vs shed) ==\n");
+    for &n in &dims {
+        let mk = |rate: f64, shed_target: Duration| {
+            Coordinator::start(
+                Config {
+                    lanes: vec![(Op::Transform, n)],
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(50),
+                    queue_cap: 256,
+                    sigma: 1.0,
+                    seed: 3,
+                    breaker_threshold: 0,
+                    admission_rate: rate,
+                    shed_target,
+                    // zero window: one over-target observation arms, the
+                    // next escalates — deterministic for the bench
+                    shed_window: Duration::ZERO,
+                    ..Config::default()
+                },
+                Arc::new(NativeBackend::new(&[n], 1.0, 3)) as Arc<dyn Backend>,
+            )
+        };
+        let x = Rng::new(8).gaussian_vec(n);
+        // accept: bucket active but ample — the admission check is paid
+        // on the granted path
+        let c_acc = mk(1e12, Duration::ZERO);
+        let acc_b = bench::bench(&format!("admit accept n={n}"), opts, || {
+            std::hint::black_box(c_acc.call(Op::Transform, x.clone()).expect("ample budget"));
+        });
+        // throttle: a bucket that effectively never refills — every
+        // submit after the first is a `throttled` refusal
+        let c_thr = mk(1e-9, Duration::ZERO);
+        let thr_b = bench::bench(&format!("admit throttle n={n}"), opts, || {
+            match c_thr.submit_with_opts(Op::Transform, x.clone(), SubmitOptions::default()) {
+                Err(e) => {
+                    std::hint::black_box(e.code());
+                }
+                // ~one stray grant per second of refill is possible;
+                // drain it so the lane never backs up
+                Ok((_, rx)) => {
+                    let _ = rx.recv();
+                }
+            }
+        });
+        // shed: prime the shedder past its 1µs target (real queue delays
+        // are tens of µs under max_wait batching), then measure the
+        // low-priority refusal path
+        let c_shed = mk(0.0, Duration::from_micros(1));
+        let low = SubmitOptions {
+            priority: admission::PRIORITY_LOW,
+            ..Default::default()
+        };
+        let mut primed = false;
+        for _ in 0..1000 {
+            let _ = c_shed.call(Op::Transform, x.clone());
+            match c_shed.submit_with_opts(Op::Transform, x.clone(), low) {
+                Err(_) => {
+                    primed = true;
+                    break;
+                }
+                Ok((_, rx)) => {
+                    let _ = rx.recv();
+                }
+            }
+        }
+        assert!(primed, "shedder must engage under sustained queue delay");
+        let shed_b = bench::bench(&format!("admit shed n={n}"), opts, || {
+            let e = c_shed
+                .submit_with_opts(Op::Transform, x.clone(), low)
+                .expect_err("primed shedder sheds low priority");
+            std::hint::black_box(e.code());
+        });
+        for c in [c_acc, c_thr, c_shed] {
+            c.shutdown();
+        }
+        println!(
+            "admit n={n:<6} accept {:>10}  throttle {:>10} (x{:.1})  shed {:>10} (x{:.1})",
+            bench::fmt_ns(acc_b.mean_ns),
+            bench::fmt_ns(thr_b.mean_ns),
+            acc_b.mean_ns / thr_b.mean_ns,
+            bench::fmt_ns(shed_b.mean_ns),
+            acc_b.mean_ns / shed_b.mean_ns
+        );
+        entries.push(Json::obj(vec![
+            ("kind", Json::Str("admission".into())),
+            ("family", Json::Str("hd3_chain".into())),
+            ("n", Json::Num(n as f64)),
+            ("rows", Json::Num(1.0)),
+            ("accept_ns", Json::Num(acc_b.mean_ns)),
+            ("throttle_ns", Json::Num(thr_b.mean_ns)),
+            ("shed_ns", Json::Num(shed_b.mean_ns)),
+            ("throttle_speedup", Json::Num(acc_b.mean_ns / thr_b.mean_ns)),
+            ("shed_speedup", Json::Num(acc_b.mean_ns / shed_b.mean_ns)),
         ]));
     }
 

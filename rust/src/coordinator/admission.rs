@@ -1,0 +1,404 @@
+//! Overload protection for the serving front door: a per-client
+//! token-bucket rate limiter denominated in **work units**, and a
+//! CoDel-style adaptive queue-delay shedder.
+//!
+//! ## Cost model
+//!
+//! Admission tokens are not request counts — a 32-byte `binary_embed`
+//! probe and a 4096-dim RFF matvec are wildly different amounts of work.
+//! [`request_work`] mirrors the backend's `batch_work_per_row` estimate
+//! (the same model the worker pool uses to decide sharding): the
+//! butterfly chain costs `3·n·(log2(n)+1)` ops, and each op adds its
+//! per-row epilogue (RFF's cos/sin expansion, the hash argmax, the sign
+//! pack). One token == one estimated butterfly-op.
+//!
+//! ## Token bucket ([`AdmissionControl`])
+//!
+//! One bucket per client key (the wire `client_id`, falling back to the
+//! peer address). Buckets refill at [`Config::admission_rate`] work
+//! units/second up to a burst capacity; a request costing more than the
+//! bucket holds is refused with [`SubmitError::Throttled`] carrying a
+//! `retry_after_ms` hint computed from the refill rate — the client
+//! knows exactly how long until the tokens exist. The client map is
+//! bounded ([`MAX_TRACKED_CLIENTS`]): when full, the stalest bucket is
+//! evicted, so an adversary cycling client ids costs O(1) memory.
+//!
+//! ## Queue-delay shedder ([`OverloadShedder`])
+//!
+//! Token buckets bound *per-client* rates but not aggregate overload.
+//! The shedder watches each lane's admission→dequeue latency (the
+//! signal CoDel uses: *sojourn time*, not queue length). When the delay
+//! stays above [`Config::shed_target`] continuously for
+//! [`Config::shed_window`], the lane starts shedding priority-0 work
+//! with [`SubmitError::Overloaded`]; after a second window it sheds
+//! priority ≤ 1 too. Priority-2 (interactive) work is never
+//! shedder-shed — it still backpressures via `Busy` when the queue
+//! fills. One observed dip below target resets the shedder instantly.
+//!
+//! [`SubmitError::Throttled`]: super::SubmitError::Throttled
+//! [`SubmitError::Overloaded`]: super::SubmitError::Overloaded
+//! [`Config::admission_rate`]: super::Config::admission_rate
+//! [`Config::shed_target`]: super::Config::shed_target
+//! [`Config::shed_window`]: super::Config::shed_window
+
+use crate::runtime::Op;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Upper bound on distinct client buckets tracked at once; beyond this
+/// the stalest bucket is evicted (memory stays O(1) under id churn).
+pub const MAX_TRACKED_CLIENTS: usize = 1024;
+
+/// Estimated work units for one request row of `(op, n)` — mirrors the
+/// backend's `batch_work_per_row` model so admission and pool sharding
+/// price work identically. The chain is `3·n·(log2(n)+1)` butterfly ops
+/// (three HD blocks, each a Walsh–Hadamard pass plus the diagonal).
+pub fn request_work(op: Op, n: usize) -> u64 {
+    let n = n.max(2) as u64;
+    let chain = 3 * n * (n.ilog2() as u64 + 1);
+    match op {
+        Op::Transform => chain,
+        // cos/sin expansion to 2n outputs dominates the epilogue
+        Op::Rff => chain + 16 * n,
+        Op::CrossPolytope => chain + n,
+        Op::BinaryEmbed => chain + n,
+    }
+}
+
+/// One client's token bucket plus its lifetime admission counters.
+struct Bucket {
+    /// Current tokens (work units), ≤ burst.
+    tokens: f64,
+    /// Last refill instant (also the eviction staleness key).
+    last: Instant,
+    admitted: u64,
+    throttled: u64,
+}
+
+/// Outcome of an admission check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    Granted,
+    /// Refused; retry once the bucket has refilled (hint in ms).
+    Throttled { retry_after_ms: u64 },
+}
+
+/// Per-client work-unit token buckets (see module docs).
+pub struct AdmissionControl {
+    /// Refill rate in work units per second per client.
+    rate: f64,
+    /// Bucket capacity (work units); buckets start full.
+    burst: f64,
+    clients: Mutex<HashMap<String, Bucket>>,
+}
+
+impl AdmissionControl {
+    /// `rate` in work units/second; `burst` ≤ 0 defaults to one second
+    /// of refill. Panics if `rate` is not finite and positive.
+    pub fn new(rate: f64, burst: f64) -> AdmissionControl {
+        assert!(
+            rate.is_finite() && rate > 0.0,
+            "admission rate must be finite and positive"
+        );
+        let burst = if burst > 0.0 { burst } else { rate };
+        AdmissionControl {
+            rate,
+            burst,
+            clients: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Charge `cost` work units against `client`'s bucket. A cost above
+    /// the burst capacity is clamped to it, so one oversized request
+    /// drains the full bucket instead of being unservable forever.
+    pub fn check(&self, client: &str, cost: u64) -> Admit {
+        let cost = (cost as f64).min(self.burst);
+        let now = Instant::now();
+        let mut map = self
+            .clients
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        if !map.contains_key(client) && map.len() >= MAX_TRACKED_CLIENTS {
+            // evict the stalest bucket (oldest refill instant)
+            if let Some(stalest) = map
+                .iter()
+                .min_by_key(|(_, b)| b.last)
+                .map(|(k, _)| k.clone())
+            {
+                map.remove(&stalest);
+            }
+        }
+        let b = map.entry(client.to_string()).or_insert(Bucket {
+            tokens: self.burst,
+            last: now,
+            admitted: 0,
+            throttled: 0,
+        });
+        let dt = now.saturating_duration_since(b.last).as_secs_f64();
+        b.tokens = (b.tokens + dt * self.rate).min(self.burst);
+        b.last = now;
+        if b.tokens >= cost {
+            b.tokens -= cost;
+            b.admitted += 1;
+            Admit::Granted
+        } else {
+            b.throttled += 1;
+            let wait_s = (cost - b.tokens) / self.rate;
+            Admit::Throttled {
+                retry_after_ms: ((wait_s * 1000.0).ceil() as u64).max(1),
+            }
+        }
+    }
+
+    /// Per-client admission counters (sorted by client key) — exported
+    /// under the `admission` key of the `metrics` wire op.
+    pub fn to_json(&self) -> Json {
+        let map = self
+            .clients
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        Json::Obj(
+            map.iter()
+                .map(|(k, b)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("admitted", Json::Num(b.admitted as f64)),
+                            ("throttled", Json::Num(b.throttled as f64)),
+                            ("tokens", Json::Num(b.tokens)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Priority of work the shedder drops first (the wire `priority` field;
+/// anything above [`PRIORITY_HIGH`] is treated as high).
+pub const PRIORITY_LOW: u8 = 0;
+/// Default priority when the wire omits the field.
+pub const PRIORITY_NORMAL: u8 = 1;
+/// Never shedder-shed (still subject to `Busy` backpressure).
+pub const PRIORITY_HIGH: u8 = 2;
+
+/// CoDel-style per-lane queue-delay shedder (see module docs). All
+/// state is atomics updated by the lane thread (`observe`) and read by
+/// submitters (`should_shed`) — races cost at most one mis-shed
+/// decision on a heuristic, never an invariant.
+pub struct OverloadShedder {
+    /// Sojourn-time target in µs; delays at or above it count as overload.
+    target_us: u64,
+    /// How long the delay must stay above target before shedding starts.
+    window_us: u64,
+    /// Epoch for encoding instants into the atomics.
+    epoch: Instant,
+    /// Microseconds-since-epoch when the delay first went above target;
+    /// 0 = currently below target.
+    above_since_us: AtomicU64,
+    /// 0 = admit all; 1 = shed priority 0; 2 = shed priority ≤ 1.
+    level: AtomicU8,
+    /// Most recent observed queue delay (µs) — the retry hint basis.
+    last_delay_us: AtomicU64,
+}
+
+impl OverloadShedder {
+    /// A zero `target` disables the shedder entirely.
+    pub fn new(target: Duration, window: Duration) -> OverloadShedder {
+        OverloadShedder {
+            target_us: target.as_micros() as u64,
+            window_us: window.as_micros() as u64,
+            epoch: Instant::now(),
+            above_since_us: AtomicU64::new(0),
+            level: AtomicU8::new(0),
+            last_delay_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.target_us > 0
+    }
+
+    /// Current shed level (0 / 1 / 2) — exported for tests and metrics.
+    pub fn level(&self) -> u8 {
+        // ORDERING: Relaxed — single heuristic flag, no data guarded by it.
+        self.level.load(Ordering::Relaxed)
+    }
+
+    /// Called by the lane thread for every dequeued job with its
+    /// admission→dequeue sojourn time.
+    pub fn observe(&self, delay: Duration) {
+        if !self.enabled() {
+            return;
+        }
+        let delay_us = delay.as_micros() as u64;
+        // ORDERING: Relaxed throughout — the shedder is a heuristic
+        // controller; readers tolerate stale values (one request mis-shed
+        // or mis-admitted at a level transition), and no other memory is
+        // published through these atomics.
+        self.last_delay_us.store(delay_us, Ordering::Relaxed);
+        if delay_us < self.target_us {
+            // one good sojourn time resets the controller (CoDel's exit)
+            self.above_since_us.store(0, Ordering::Relaxed);
+            self.level.store(0, Ordering::Relaxed);
+            return;
+        }
+        let now_us = (self.epoch.elapsed().as_micros() as u64).max(1);
+        // ORDERING: Relaxed — heuristic controller state, see above.
+        let since = self.above_since_us.load(Ordering::Relaxed);
+        if since == 0 {
+            // arm: first over-target observation starts the window clock
+            // ORDERING: Relaxed — heuristic controller state, see above.
+            self.above_since_us.store(now_us, Ordering::Relaxed);
+            return;
+        }
+        let over_us = now_us.saturating_sub(since);
+        let want = if over_us >= 2 * self.window_us {
+            2
+        } else if over_us >= self.window_us {
+            1
+        } else {
+            0
+        };
+        // only escalate here; de-escalation is the sub-target reset above
+        // ORDERING: Relaxed — heuristic controller state, see above.
+        if want > self.level.load(Ordering::Relaxed) {
+            self.level.store(want, Ordering::Relaxed);
+        }
+    }
+
+    /// Should a submit at `priority` be shed right now? Returns the
+    /// `retry_after_ms` hint when it should.
+    pub fn should_shed(&self, priority: u8) -> Option<u64> {
+        if !self.enabled() || priority >= PRIORITY_HIGH {
+            return None;
+        }
+        // ORDERING: Relaxed — heuristic read, see `observe`.
+        let level = self.level.load(Ordering::Relaxed);
+        let shed = match level {
+            0 => false,
+            1 => priority == PRIORITY_LOW,
+            _ => priority <= PRIORITY_NORMAL,
+        };
+        if !shed {
+            return None;
+        }
+        // hint: the larger of the observed backlog delay and the target,
+        // clamped to something a client can reasonably sleep
+        // ORDERING: Relaxed — heuristic read, see `observe`.
+        let delay_us = self.last_delay_us.load(Ordering::Relaxed);
+        Some((delay_us.max(self.target_us) / 1000).clamp(1, 10_000))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_work_orders_ops_and_grows_with_n() {
+        // chain-only transform is the floor; rff's expansion dominates
+        assert!(request_work(Op::Transform, 64) < request_work(Op::CrossPolytope, 64));
+        assert!(request_work(Op::CrossPolytope, 64) < request_work(Op::Rff, 64));
+        assert_eq!(
+            request_work(Op::CrossPolytope, 64),
+            request_work(Op::BinaryEmbed, 64)
+        );
+        assert!(request_work(Op::Transform, 64) < request_work(Op::Transform, 4096));
+        // exact chain model: 3·n·(log2(n)+1)
+        assert_eq!(request_work(Op::Transform, 64), 3 * 64 * 7);
+    }
+
+    #[test]
+    fn bucket_admits_until_drained_then_throttles_with_hint() {
+        // 1k units/s, burst 100: one 60-unit request fits, the next does
+        // not (tokens ≈ 40), and the hint says when the missing ~20
+        // units will exist (≈20ms at 1k/s; generous upper bound below)
+        let a = AdmissionControl::new(1000.0, 100.0);
+        assert_eq!(a.check("alice", 60), Admit::Granted);
+        match a.check("alice", 60) {
+            Admit::Throttled { retry_after_ms } => {
+                assert!(
+                    (1..=100).contains(&retry_after_ms),
+                    "hint {retry_after_ms}ms should approximate the refill gap"
+                );
+            }
+            Admit::Granted => panic!("second 60-unit request must throttle"),
+        }
+        // an unrelated client has its own full bucket
+        assert_eq!(a.check("bob", 60), Admit::Granted);
+    }
+
+    #[test]
+    fn bucket_refills_over_time() {
+        let a = AdmissionControl::new(10_000.0, 50.0);
+        assert_eq!(a.check("c", 50), Admit::Granted);
+        assert!(matches!(a.check("c", 50), Admit::Throttled { .. }));
+        // 10k units/s refills the 50-unit burst in 5ms
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(a.check("c", 50), Admit::Granted);
+    }
+
+    #[test]
+    fn oversized_cost_is_clamped_to_burst_not_starved() {
+        let a = AdmissionControl::new(1000.0, 100.0);
+        // cost 10× the burst still admits (drains the bucket fully)
+        assert_eq!(a.check("big", 1000), Admit::Granted);
+        assert!(matches!(a.check("big", 1), Admit::Throttled { .. }));
+    }
+
+    #[test]
+    fn client_map_is_bounded_with_stalest_eviction() {
+        let a = AdmissionControl::new(1000.0, 100.0);
+        for i in 0..(MAX_TRACKED_CLIENTS + 50) {
+            a.check(&format!("client-{i}"), 1);
+        }
+        let map = a.clients.lock().unwrap();
+        assert!(map.len() <= MAX_TRACKED_CLIENTS, "map stays bounded");
+    }
+
+    #[test]
+    fn admission_json_carries_per_client_counters() {
+        let a = AdmissionControl::new(1000.0, 10.0);
+        a.check("alice", 5);
+        a.check("alice", 100);
+        let j = a.to_json();
+        let alice = j.get("alice").expect("client row");
+        assert_eq!(alice.get("admitted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(alice.get("throttled").unwrap().as_f64(), Some(1.0));
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn shedder_escalates_by_priority_and_resets_on_good_delay() {
+        // window 0: a single above-target sojourn escalates straight to
+        // level 2 on the next observation — deterministic for tests
+        let s = OverloadShedder::new(Duration::from_micros(100), Duration::ZERO);
+        assert!(s.should_shed(PRIORITY_LOW).is_none(), "starts cold");
+        s.observe(Duration::from_millis(5)); // arms above_since
+        s.observe(Duration::from_millis(5)); // over ≥ 2·window → level 2
+        assert_eq!(s.level(), 2);
+        assert!(s.should_shed(PRIORITY_LOW).is_some());
+        let hint = s.should_shed(PRIORITY_NORMAL).expect("normal shed at L2");
+        assert!(hint >= 1, "retry hint must be actionable");
+        assert!(
+            s.should_shed(PRIORITY_HIGH).is_none(),
+            "priority-2 work is never shedder-shed"
+        );
+        // one sub-target sojourn resets everything
+        s.observe(Duration::from_micros(10));
+        assert_eq!(s.level(), 0);
+        assert!(s.should_shed(PRIORITY_LOW).is_none());
+    }
+
+    #[test]
+    fn disabled_shedder_never_sheds() {
+        let s = OverloadShedder::new(Duration::ZERO, Duration::ZERO);
+        assert!(!s.enabled());
+        s.observe(Duration::from_secs(10));
+        assert!(s.should_shed(PRIORITY_LOW).is_none());
+    }
+}

@@ -1,0 +1,445 @@
+//! Resilient TCP client for the serving protocol: typed retry policy
+//! with exponential backoff, full jitter, and a retry *budget*.
+//!
+//! ## Retry contract
+//!
+//! The wire taxonomy is closed (machine-checked by lint R4), so the
+//! retryable set can be too: [`RETRYABLE_CODES`] lists exactly the
+//! codes that mean "the request was refused without being executed and
+//! a later attempt may succeed" — queue backpressure (`busy`), breaker
+//! and restart windows (`unavailable`, `lane_down`), overload refusals
+//! (`throttled`, `overloaded`) and shutdown (`draining`). Everything
+//! else is terminal on the first answer: caller mistakes
+//! (`bad_request`, `bad_dim`, `unknown_lane`) would fail identically
+//! forever, and executed-but-failed outcomes (`backend`, `panic`,
+//! `deadline`, `timeout`) are not refusals at all.
+//!
+//! Retrying after an **I/O error** (connection drop mid-request) is
+//! safe here even though the request may have executed: every op is a
+//! deterministic pure function of the model seed and the input vector,
+//! so re-executing is idempotent. A client of a mutating service could
+//! not reuse this policy blindly.
+//!
+//! ## Backoff and budget
+//!
+//! Sleep before attempt `k` is `hint + U(0, min(max_backoff,
+//! base·2^k))` — the server's `retry_after_ms` hint is the floor (it
+//! knows when capacity will exist), full jitter decorrelates the
+//! retrying herd. The token *budget* (spent per retry, refilled
+//! fractionally per success) caps the retry amplification a broken
+//! server sees at `1 + budget_per_success : 1` in steady state —
+//! per-request attempt caps alone cannot bound fleet-wide retry storms.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// The closed set of wire codes a retry may fix. Kept in lockstep with
+/// the taxonomy by `wire_codes_round_trip_and_match_roadmap` (every
+/// member must carry a `retry_after_ms` hint server-side).
+pub const RETRYABLE_CODES: [&str; 6] = [
+    "busy",
+    "unavailable",
+    "lane_down",
+    "throttled",
+    "overloaded",
+    "draining",
+];
+
+/// Is `code` in [`RETRYABLE_CODES`]?
+pub fn is_retryable(code: &str) -> bool {
+    RETRYABLE_CODES.contains(&code)
+}
+
+/// Retry policy knobs (see module docs for the semantics).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Attempts per logical request (first try included).
+    pub max_attempts: u32,
+    /// Backoff base: attempt `k` waits up to `base·2^(k-1)` plus hint.
+    pub base_backoff: Duration,
+    /// Cap on the jittered component of any single backoff.
+    pub max_backoff: Duration,
+    /// Retry-budget capacity in tokens (1 token = 1 retry).
+    pub budget_max: f64,
+    /// Tokens refunded per successful request (keeps steady-state retry
+    /// amplification ≤ 1 + this).
+    pub budget_per_success: f64,
+    /// Per-attempt server-side deadline, sent as the wire `timeout_ms`.
+    pub request_timeout: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 8,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(500),
+            budget_max: 10.0,
+            budget_per_success: 0.1,
+            request_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Terminal outcome of [`RetryClient::call`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientError {
+    /// Non-retryable coded answer — surfaced immediately, never retried.
+    Rejected { code: String, error: String },
+    /// Retryable code every time, but `max_attempts` exhausted.
+    Exhausted { code: String, attempts: u32 },
+    /// Retryable, but the client-wide retry budget is empty.
+    BudgetExhausted { code: String },
+    /// I/O failure on the final attempt.
+    Io(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Rejected { code, error } => {
+                write!(f, "rejected ({code}): {error}")
+            }
+            ClientError::Exhausted { code, attempts } => {
+                write!(f, "retries exhausted after {attempts} attempts (last: {code})")
+            }
+            ClientError::BudgetExhausted { code } => {
+                write!(f, "retry budget exhausted (last: {code})")
+            }
+            ClientError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+/// What one wire attempt produced.
+enum Attempt {
+    Ok(Json),
+    Coded {
+        code: String,
+        error: String,
+        retry_after_ms: Option<u64>,
+    },
+    Io(String),
+}
+
+/// Connection + randomness + budget, serialized under one lock (one
+/// in-flight request per client; spawn one client per concurrent caller).
+struct ClientState {
+    conn: Option<(BufReader<TcpStream>, TcpStream)>,
+    rng: Rng,
+    budget: f64,
+    next_id: u64,
+}
+
+/// See module docs. Construct with [`RetryClient::connect`]; `call` is
+/// the only request path.
+pub struct RetryClient {
+    addr: String,
+    client_id: Option<String>,
+    policy: RetryPolicy,
+    state: Mutex<ClientState>,
+    /// Total wire attempts (first tries + retries) — observability.
+    pub attempts: AtomicU64,
+    /// Retries only (attempts beyond each request's first).
+    pub retries: AtomicU64,
+    /// Reconnects after an I/O error or server-closed connection.
+    pub reconnects: AtomicU64,
+}
+
+impl RetryClient {
+    /// Lazy client: no connection is made until the first call. `addr`
+    /// is `host:port`; `client_id` rides every request for admission
+    /// accounting (`None` lets the server fall back to the peer address).
+    pub fn connect(addr: &str, client_id: Option<&str>, policy: RetryPolicy) -> RetryClient {
+        RetryClient {
+            addr: addr.to_string(),
+            client_id: client_id.map(str::to_string),
+            policy,
+            state: Mutex::new(ClientState {
+                conn: None,
+                rng: Rng::new(0xC11E_4701),
+                budget: policy.budget_max,
+                next_id: 1,
+            }),
+            attempts: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+        }
+    }
+
+    /// One logical request: returns the wire `result` value, retrying
+    /// retryable refusals per the policy. Exactly one terminal outcome
+    /// per call, always.
+    pub fn call(&self, op: &str, vector: &[f32]) -> Result<Json, ClientError> {
+        self.call_priority(op, vector, super::admission::PRIORITY_NORMAL)
+    }
+
+    /// [`RetryClient::call`] with an explicit shedding priority.
+    pub fn call_priority(
+        &self,
+        op: &str,
+        vector: &[f32],
+        priority: u8,
+    ) -> Result<Json, ClientError> {
+        let mut state = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            // ORDERING: Relaxed — observability counters only.
+            self.attempts.fetch_add(1, Ordering::Relaxed);
+            if attempt > 1 {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            let (code, hint) = match self.try_once(&mut state, op, vector, priority) {
+                Attempt::Ok(result) => {
+                    state.budget =
+                        (state.budget + self.policy.budget_per_success).min(self.policy.budget_max);
+                    return Ok(result);
+                }
+                Attempt::Coded {
+                    code,
+                    error,
+                    retry_after_ms,
+                } => {
+                    if !is_retryable(&code) {
+                        return Err(ClientError::Rejected { code, error });
+                    }
+                    (code, retry_after_ms)
+                }
+                Attempt::Io(e) => {
+                    // drop the stream: the next attempt reconnects fresh
+                    // (safe to re-send — the compute is idempotent)
+                    state.conn = None;
+                    if attempt >= self.policy.max_attempts {
+                        return Err(ClientError::Io(e));
+                    }
+                    ("io".to_string(), None)
+                }
+            };
+            if attempt >= self.policy.max_attempts {
+                return Err(ClientError::Exhausted {
+                    code,
+                    attempts: attempt,
+                });
+            }
+            if state.budget < 1.0 {
+                return Err(ClientError::BudgetExhausted { code });
+            }
+            state.budget -= 1.0;
+            let sleep = self.backoff(&mut state.rng, attempt, hint);
+            std::thread::sleep(sleep);
+        }
+    }
+
+    /// Full-jitter backoff before the next attempt: the server's hint is
+    /// the floor, `U(0, min(max, base·2^(attempt-1)))` rides on top.
+    fn backoff(&self, rng: &mut Rng, attempt: u32, hint_ms: Option<u64>) -> Duration {
+        let exp = self
+            .policy
+            .base_backoff
+            .saturating_mul(1u32 << (attempt - 1).min(16));
+        let cap = exp.min(self.policy.max_backoff);
+        let jitter = cap.mul_f64(rng.uniform());
+        Duration::from_millis(hint_ms.unwrap_or(0)) + jitter
+    }
+
+    /// One wire attempt: (re)connect if needed, send, read the matching
+    /// reply line.
+    fn try_once(
+        &self,
+        state: &mut ClientState,
+        op: &str,
+        vector: &[f32],
+        priority: u8,
+    ) -> Attempt {
+        if state.conn.is_none() {
+            match self.dial() {
+                Ok(conn) => {
+                    if state.next_id > 1 {
+                        // ORDERING: Relaxed — observability counter only.
+                        self.reconnects.fetch_add(1, Ordering::Relaxed);
+                    }
+                    state.conn = Some(conn);
+                }
+                Err(e) => return Attempt::Io(e),
+            }
+        }
+        let id = state.next_id;
+        state.next_id += 1;
+        let mut req = vec![
+            ("id".to_string(), Json::Num(id as f64)),
+            ("op".to_string(), Json::Str(op.to_string())),
+            (
+                "vector".to_string(),
+                Json::Arr(vector.iter().map(|x| Json::Num(*x as f64)).collect()),
+            ),
+            (
+                "timeout_ms".to_string(),
+                Json::Num(self.policy.request_timeout.as_millis() as f64),
+            ),
+            ("priority".to_string(), Json::Num(priority as f64)),
+        ];
+        if let Some(cid) = &self.client_id {
+            req.push(("client_id".to_string(), Json::Str(cid.clone())));
+        }
+        let line = format!("{}\n", Json::Obj(req.into_iter().collect()));
+        let (reader, writer) = state.conn.as_mut().expect("connected above");
+        if let Err(e) = writer.write_all(line.as_bytes()).and_then(|()| writer.flush()) {
+            return Attempt::Io(e.to_string());
+        }
+        let mut reply = String::new();
+        match reader.read_line(&mut reply) {
+            Ok(0) => return Attempt::Io("server closed the connection".to_string()),
+            Ok(_) => {}
+            Err(e) => return Attempt::Io(e.to_string()),
+        }
+        let doc = match Json::parse(reply.trim()) {
+            Ok(d) => d,
+            Err(e) => return Attempt::Io(format!("unparseable reply: {e:?}")),
+        };
+        // a reply for a different id means the stream lost framing
+        // (e.g. a partial_write fault truncated the previous reply) —
+        // treat as an I/O failure and reconnect
+        if doc.get("id").and_then(Json::as_f64) != Some(id as f64) {
+            return Attempt::Io("reply id mismatch (stream desynced)".to_string());
+        }
+        if doc.get("ok").and_then(Json::as_bool) == Some(true) {
+            match doc.get("result") {
+                Some(r) => Attempt::Ok(r.clone()),
+                None => Attempt::Io("ok reply without result".to_string()),
+            }
+        } else {
+            Attempt::Coded {
+                code: doc
+                    .get("code")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                error: doc
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                retry_after_ms: doc
+                    .get("retry_after_ms")
+                    .and_then(Json::as_f64)
+                    .map(|v| v as u64),
+            }
+        }
+    }
+
+    fn dial(&self) -> Result<(BufReader<TcpStream>, TcpStream), String> {
+        let stream = TcpStream::connect(&self.addr).map_err(|e| e.to_string())?;
+        // read bound = server deadline + slack, so a hung server surfaces
+        // as a retryable I/O timeout instead of a client hang
+        stream
+            .set_read_timeout(Some(self.policy.request_timeout + Duration::from_secs(1)))
+            .map_err(|e| e.to_string())?;
+        stream
+            .set_write_timeout(Some(Duration::from_secs(5)))
+            .map_err(|e| e.to_string())?;
+        let reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+        Ok((reader, stream))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::server::{CODE_BAD_REQUEST, CODE_TIMEOUT};
+    use super::*;
+
+    #[test]
+    fn retryable_set_matches_taxonomy_hints() {
+        use super::super::SubmitError;
+        // every RETRYABLE_CODES member is a real taxonomy code with a
+        // server-side retry hint; no caller-mistake code sneaks in
+        let submit = [
+            SubmitError::Busy,
+            SubmitError::UnknownLane,
+            SubmitError::BadDim,
+            SubmitError::Closed,
+            SubmitError::LaneDown,
+            SubmitError::Unavailable,
+            SubmitError::Throttled { retry_after_ms: 1 },
+            SubmitError::Overloaded { retry_after_ms: 1 },
+            SubmitError::Draining { retry_after_ms: 1 },
+        ];
+        for code in RETRYABLE_CODES {
+            let e = submit
+                .iter()
+                .find(|e| e.code() == code)
+                .unwrap_or_else(|| panic!("retryable '{code}' must exist in the taxonomy"));
+            assert!(e.retry_after_ms().is_some(), "'{code}' must carry a hint");
+        }
+        assert!(!is_retryable(CODE_BAD_REQUEST));
+        assert!(!is_retryable(CODE_TIMEOUT));
+        assert!(!is_retryable("bad_dim"));
+        assert!(!is_retryable("unknown_lane"));
+        assert!(!is_retryable("deadline"));
+        assert!(!is_retryable("backend"));
+        assert!(!is_retryable("panic"));
+        assert!(!is_retryable("closed"));
+    }
+
+    #[test]
+    fn backoff_is_hint_floored_and_capped() {
+        let policy = RetryPolicy {
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(80),
+            ..RetryPolicy::default()
+        };
+        let client = RetryClient::connect("127.0.0.1:1", None, policy);
+        let mut rng = Rng::new(7);
+        for attempt in 1..=10 {
+            let d = client.backoff(&mut rng, attempt, Some(25));
+            assert!(d >= Duration::from_millis(25), "hint is the floor");
+            assert!(
+                d <= Duration::from_millis(25 + 80),
+                "jitter never exceeds max_backoff above the hint"
+            );
+        }
+        // exponential growth before the cap bites
+        let no_hint: Vec<Duration> = (1..=4)
+            .map(|a| {
+                // max over many draws approximates the envelope
+                (0..200)
+                    .map(|_| client.backoff(&mut rng, a, None))
+                    .max()
+                    .unwrap()
+            })
+            .collect();
+        assert!(no_hint[1] > no_hint[0], "envelope doubles per attempt");
+        assert!(no_hint[3] <= Duration::from_millis(80), "cap holds");
+    }
+
+    #[test]
+    fn budget_exhaustion_is_a_typed_terminal_outcome() {
+        // a dead address: every attempt is an I/O error, and a tiny
+        // budget must stop the loop before max_attempts does
+        let policy = RetryPolicy {
+            max_attempts: 50,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(2),
+            budget_max: 2.0,
+            ..RetryPolicy::default()
+        };
+        // reserved TEST-NET-3 address: connects fail fast (refused) or
+        // not at all — either way attempts consume budget
+        let client = RetryClient::connect("127.0.0.1:9", None, policy);
+        let err = client.call("transform", &[0.0; 4]).unwrap_err();
+        match err {
+            ClientError::BudgetExhausted { .. } | ClientError::Io(_) => {}
+            other => panic!("expected budget/io terminal, got {other:?}"),
+        }
+        let attempts = client.attempts.load(Ordering::Relaxed);
+        assert!(
+            attempts <= 4,
+            "2-token budget must stop retries early, saw {attempts} attempts"
+        );
+    }
+}

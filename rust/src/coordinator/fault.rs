@@ -17,6 +17,14 @@
 //! `0x5EED`). Unknown keys are rejected loudly (a typo'd fault plan that
 //! silently injects nothing would invalidate a whole chaos run).
 //!
+//! The same plan also carries **transport** faults, applied not by this
+//! wrapper but by [`super::TcpServer`] at the socket layer:
+//! `conn_drop:p` (drop the connection instead of writing a reply),
+//! `slow_read_ms:d` (stall before processing each request line), and
+//! `partial_write:p` (truncate a reply mid-line and drop the
+//! connection). [`FaultPlan::has_backend_faults`] /
+//! [`FaultPlan::has_net_faults`] split the two halves.
+//!
 //! Determinism: the decision stream is a pure function of the plan — one
 //! `Mutex<Rng>` serializes draws, and all decisions for a call are drawn
 //! *before* acting (so an injected panic can never poison the lock
@@ -40,6 +48,15 @@ pub struct FaultPlan {
     pub err_p: f64,
     /// Sleep applied to every call (models a slow dependency).
     pub delay: Duration,
+    /// Probability the server drops a connection instead of replying
+    /// (transport fault, applied by `TcpServer`).
+    pub conn_drop_p: f64,
+    /// Server-side stall before processing each request line (transport
+    /// fault, models a slow/congested network).
+    pub slow_read: Duration,
+    /// Probability a reply is truncated mid-line and the connection
+    /// dropped (transport fault).
+    pub partial_write_p: f64,
     /// Seed for the decision stream.
     pub seed: u64,
 }
@@ -50,6 +67,9 @@ impl Default for FaultPlan {
             panic_p: 0.0,
             err_p: 0.0,
             delay: Duration::ZERO,
+            conn_drop_p: 0.0,
+            slow_read: Duration::ZERO,
+            partial_write_p: 0.0,
             seed: 0x5EED,
         }
     }
@@ -89,6 +109,14 @@ impl FaultPlan {
                         .map_err(|_| format!("TS_FAULT: 'delay_ms:{v}' is not an integer"))?;
                     plan.delay = Duration::from_millis(ms);
                 }
+                "conn_drop" => plan.conn_drop_p = parse_prob("conn_drop", v)?,
+                "slow_read_ms" => {
+                    let ms: u64 = v.trim().parse().map_err(|_| {
+                        format!("TS_FAULT: 'slow_read_ms:{v}' is not an integer")
+                    })?;
+                    plan.slow_read = Duration::from_millis(ms);
+                }
+                "partial_write" => plan.partial_write_p = parse_prob("partial_write", v)?,
                 "seed" => {
                     plan.seed = v
                         .trim()
@@ -97,7 +125,8 @@ impl FaultPlan {
                 }
                 other => {
                     return Err(format!(
-                        "TS_FAULT: unknown key '{other}' (expected panic|err|delay_ms|seed)"
+                        "TS_FAULT: unknown key '{other}' (expected panic|err|delay_ms|\
+                         conn_drop|slow_read_ms|partial_write|seed)"
                     ))
                 }
             }
@@ -116,7 +145,17 @@ impl FaultPlan {
 
     /// A plan that injects nothing (wrapping with it is pointless).
     pub fn is_noop(&self) -> bool {
-        self.panic_p <= 0.0 && self.err_p <= 0.0 && self.delay.is_zero()
+        !self.has_backend_faults() && !self.has_net_faults()
+    }
+
+    /// Any backend-layer fault set (what [`FaultInjectingBackend`] applies)?
+    pub fn has_backend_faults(&self) -> bool {
+        self.panic_p > 0.0 || self.err_p > 0.0 || !self.delay.is_zero()
+    }
+
+    /// Any transport-layer fault set (what `TcpServer` applies)?
+    pub fn has_net_faults(&self) -> bool {
+        self.conn_drop_p > 0.0 || self.partial_write_p > 0.0 || !self.slow_read.is_zero()
     }
 }
 
@@ -146,10 +185,13 @@ impl FaultInjectingBackend {
     }
 
     /// Wrap `inner` per `TS_FAULT`, returning it untouched when the env
-    /// var is unset or the plan is a no-op. `Err` on a malformed plan.
+    /// var is unset or carries no *backend* faults (transport-only plans
+    /// belong to `TcpServer`, not the backend). `Err` on a malformed plan.
     pub fn wrap_env(inner: Arc<dyn Backend>) -> Result<Arc<dyn Backend>, String> {
         match FaultPlan::from_env()? {
-            Some(plan) if !plan.is_noop() => Ok(Arc::new(FaultInjectingBackend::new(inner, plan))),
+            Some(plan) if plan.has_backend_faults() => {
+                Ok(Arc::new(FaultInjectingBackend::new(inner, plan)))
+            }
             _ => Ok(inner),
         }
     }
@@ -227,6 +269,29 @@ mod tests {
         assert!(FaultPlan::parse("panic:x").is_err(), "not a number");
         assert!(FaultPlan::parse("delay_ms:1.5").is_err(), "fractional ms");
         assert!(FaultPlan::parse("oops:1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("conn_drop:2").is_err(), "prob out of range");
+        assert!(FaultPlan::parse("slow_read_ms:x").is_err(), "not an integer");
+        assert!(FaultPlan::parse("partial_write:-1").is_err(), "negative prob");
+    }
+
+    #[test]
+    fn transport_keys_parse_and_split_from_backend_faults() {
+        let p = FaultPlan::parse("conn_drop:0.25,slow_read_ms:2,partial_write:0.1").unwrap();
+        assert_eq!(p.conn_drop_p, 0.25);
+        assert_eq!(p.slow_read, Duration::from_millis(2));
+        assert_eq!(p.partial_write_p, 0.1);
+        assert!(p.has_net_faults() && !p.has_backend_faults());
+        assert!(!p.is_noop(), "transport-only plans are not no-ops");
+        let b = FaultPlan::parse("panic:0.1").unwrap();
+        assert!(b.has_backend_faults() && !b.has_net_faults());
+        // a transport-only plan must NOT wrap the backend — those faults
+        // are the TcpServer's to apply
+        let inner: Arc<dyn Backend> = Arc::new(NativeBackend::new(&[64], 1.0, 7));
+        let fb = FaultInjectingBackend::new(Arc::clone(&inner), p);
+        assert!(
+            fb.run_batch(Op::Transform, 64, 1, &[1.0; 64]).is_ok(),
+            "transport keys never fire at the backend layer"
+        );
     }
 
     #[test]

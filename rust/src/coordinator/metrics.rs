@@ -87,6 +87,17 @@ pub struct LaneMetrics {
     pub shed_unavailable: AtomicU64,
     /// Times the circuit breaker newly opened (closed→open edges only).
     pub breaker_opens: AtomicU64,
+    /// Submits refused with `Throttled` by the per-client token bucket.
+    pub throttled: AtomicU64,
+    /// Submits refused with `Overloaded` by the queue-delay shedder.
+    pub shed_overloaded: AtomicU64,
+    /// Submits refused with `Draining` after drain began.
+    pub drained: AtomicU64,
+    /// Gauge: requests admitted to the lane queue but not yet answered.
+    /// Drain polls this to zero. A lane-fatal death loses the in-flight
+    /// batch's decrements, so across lane deaths the gauge can overcount
+    /// — drain is deadline-bounded, never gauge-trusting.
+    pub in_flight: AtomicU64,
     pub latency: Histogram,
 }
 
@@ -166,6 +177,22 @@ impl LaneMetrics {
                 "breaker_opens",
                 Json::Num(self.breaker_opens.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "throttled",
+                Json::Num(self.throttled.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "shed_overloaded",
+                Json::Num(self.shed_overloaded.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "drained",
+                Json::Num(self.drained.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "in_flight",
+                Json::Num(self.in_flight.load(Ordering::Relaxed) as f64),
+            ),
             ("latency_mean_us", Json::Num(self.latency.mean_us())),
             (
                 "latency_p50_us",
@@ -238,6 +265,16 @@ mod tests {
         assert_eq!(j.get("expired").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("panics").unwrap().as_f64(), Some(0.0));
         assert_eq!(j.get("shed_unavailable").unwrap().as_f64(), Some(0.0));
+        // overload-protection counters are part of the exported schema
+        m.throttled.store(4, Ordering::Relaxed);
+        m.shed_overloaded.store(5, Ordering::Relaxed);
+        m.drained.store(6, Ordering::Relaxed);
+        m.in_flight.store(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("throttled").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("shed_overloaded").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("drained").unwrap().as_f64(), Some(6.0));
+        assert_eq!(j.get("in_flight").unwrap().as_f64(), Some(1.0));
         // serializes to valid JSON
         let s = j.to_string();
         assert!(Json::parse(&s).is_ok());

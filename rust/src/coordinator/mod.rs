@@ -43,8 +43,23 @@
 //!   [`Coordinator::call_timeout`] as an error, never a hang).
 //!
 //! Fault *injection* for all of the above is [`fault::FaultInjectingBackend`]
-//! (`TS_FAULT=panic:p,err:p,delay_ms:d,seed:s`), exercised by the chaos
-//! suite (`rust/tests/chaos_serving.rs`).
+//! (`TS_FAULT=panic:p,err:p,delay_ms:d,seed:s`, plus the transport keys
+//! `conn_drop:p,slow_read_ms:d,partial_write:p` applied by [`TcpServer`]),
+//! exercised by the chaos suite (`rust/tests/chaos_serving.rs`).
+//!
+//! ## Overload protection and lifecycle
+//!
+//! Ahead of the queues sits [`admission`]: a per-client work-unit token
+//! bucket ([`SubmitError::Throttled`]) and a CoDel-style queue-delay
+//! shedder ([`SubmitError::Overloaded`]) — both off by default
+//! ([`Config::admission_rate`] / [`Config::shed_target`]) and both
+//! carrying a `retry_after_ms` hint. [`Coordinator::begin_drain`] starts
+//! graceful shutdown: new submits get [`SubmitError::Draining`],
+//! [`Coordinator::drain`] waits for in-flight work under a deadline and
+//! then answers anything still queued with a typed `Deadline` — queued
+//! jobs are never silently dropped. [`client::RetryClient`] is the
+//! matching caller: it retries exactly the retryable codes with full-
+//! jitter backoff under a retry budget.
 //!
 //! Invariants (property-tested below and in `rust/tests/`):
 //! * every accepted request receives exactly one terminal response (or,
@@ -55,23 +70,27 @@
 //! * routing is a pure function of `(op, dim)`;
 //! * FIFO order within a lane (preserved by the singleton retry path).
 
+pub mod admission;
 pub mod backend;
 pub mod breaker;
+pub mod client;
 pub mod fault;
 pub mod metrics;
 pub mod server;
 
+pub use admission::{AdmissionControl, OverloadShedder};
 pub use backend::{Backend, ModelParams, NativeBackend, PjrtBackend};
 pub use breaker::{LaneState, Phase};
+pub use client::{ClientError, RetryClient, RetryPolicy};
 pub use fault::{FaultInjectingBackend, FaultPlan};
 pub use metrics::LaneMetrics;
-pub use server::TcpServer;
+pub use server::{ServerOptions, TcpServer};
 
 use crate::runtime::{Op, Output};
 use crate::util::panic_message;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -115,6 +134,18 @@ pub struct Config {
     /// Backoff ceiling (doubles up to this; a lane that ran healthy longer
     /// than this before dying restarts at `restart_backoff` again).
     pub restart_backoff_max: Duration,
+    /// Per-client token-bucket refill rate in **work units**/second
+    /// ([`admission::request_work`]); `0.0` disables admission control.
+    pub admission_rate: f64,
+    /// Token-bucket burst capacity in work units (`0.0` = one second of
+    /// refill, i.e. `admission_rate`).
+    pub admission_burst: f64,
+    /// Queue-delay target for the overload shedder: sojourn times at or
+    /// above this count as overload. `ZERO` disables the shedder.
+    pub shed_target: Duration,
+    /// How long the delay must stay above target before the shedder
+    /// starts dropping priority-0 work (priority ≤ 1 after 2× window).
+    pub shed_window: Duration,
 }
 
 impl Default for Config {
@@ -136,6 +167,10 @@ impl Default for Config {
             breaker_cooldown: Duration::from_millis(250),
             restart_backoff: Duration::from_millis(10),
             restart_backoff_max: Duration::from_secs(2),
+            admission_rate: 0.0,
+            admission_burst: 0.0,
+            shed_target: Duration::ZERO,
+            shed_window: Duration::from_millis(100),
         }
     }
 }
@@ -199,6 +234,15 @@ pub enum SubmitError {
     /// The lane's circuit breaker is open (consecutive backend failures);
     /// fail fast instead of queueing doomed work.
     Unavailable,
+    /// The client's work-unit token bucket is empty; retry after the
+    /// hinted refill time.
+    Throttled { retry_after_ms: u64 },
+    /// The lane's queue-delay shedder tripped and this request's priority
+    /// is being shed; retry after the hinted backlog time.
+    Overloaded { retry_after_ms: u64 },
+    /// The coordinator is draining for shutdown; retry against another
+    /// replica after the hint.
+    Draining { retry_after_ms: u64 },
 }
 
 impl SubmitError {
@@ -211,6 +255,25 @@ impl SubmitError {
             SubmitError::Closed => "closed",
             SubmitError::LaneDown => "lane_down",
             SubmitError::Unavailable => "unavailable",
+            SubmitError::Throttled { .. } => "throttled",
+            SubmitError::Overloaded { .. } => "overloaded",
+            SubmitError::Draining { .. } => "draining",
+        }
+    }
+
+    /// Retry hint in milliseconds for retryable refusals, `None` for
+    /// errors a retry cannot fix (caller mistakes and `Closed`). This is
+    /// the wire `retry_after_ms` field; [`client::RETRYABLE_CODES`] is
+    /// the matching client-side contract.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            // queue-full and breaker/restart refusals clear quickly
+            SubmitError::Busy => Some(25),
+            SubmitError::LaneDown | SubmitError::Unavailable => Some(100),
+            SubmitError::Throttled { retry_after_ms }
+            | SubmitError::Overloaded { retry_after_ms }
+            | SubmitError::Draining { retry_after_ms } => Some(*retry_after_ms),
+            SubmitError::UnknownLane | SubmitError::BadDim | SubmitError::Closed => None,
         }
     }
 }
@@ -224,9 +287,40 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Closed => write!(f, "coordinator closed"),
             SubmitError::LaneDown => write!(f, "lane down (restarting)"),
             SubmitError::Unavailable => write!(f, "lane unavailable (circuit open)"),
+            SubmitError::Throttled { .. } => write!(f, "client work budget exhausted"),
+            SubmitError::Overloaded { .. } => write!(f, "lane overloaded (shedding)"),
+            SubmitError::Draining { .. } => write!(f, "server draining for shutdown"),
         }
     }
 }
+
+/// Per-submit options beyond the vector itself (all optional; `default()`
+/// reproduces [`Coordinator::submit`]'s behavior exactly).
+#[derive(Clone, Copy, Debug)]
+pub struct SubmitOptions<'a> {
+    /// Per-request deadline (`None` falls back to [`Config::deadline`]).
+    pub deadline: Option<Duration>,
+    /// Admission-control key (the wire `client_id` / peer address);
+    /// `None` charges the shared `"local"` bucket when admission is on.
+    pub client: Option<&'a str>,
+    /// Shedding priority (see [`admission::PRIORITY_LOW`] etc.): the
+    /// shedder drops 0 first, then ≤ 1; ≥ 2 is never shedder-shed.
+    pub priority: u8,
+}
+
+impl Default for SubmitOptions<'_> {
+    fn default() -> Self {
+        SubmitOptions {
+            deadline: None,
+            client: None,
+            priority: admission::PRIORITY_NORMAL,
+        }
+    }
+}
+
+/// Retry hint attached to [`SubmitError::Draining`] refusals: drains are
+/// seconds-scale, so point clients at a peer half a second out.
+pub const DRAINING_RETRY_MS: u64 = 500;
 
 struct Job {
     id: u64,
@@ -242,6 +336,7 @@ struct Lane {
     tx: SyncSender<Job>,
     metrics: Arc<LaneMetrics>,
     state: Arc<LaneState>,
+    shedder: Arc<OverloadShedder>,
     n: usize,
 }
 
@@ -250,6 +345,14 @@ pub struct Coordinator {
     lanes: HashMap<(Op, usize), Lane>,
     next_id: AtomicU64,
     default_deadline: Option<Duration>,
+    /// Per-client token buckets; `None` when admission control is off.
+    admission: Option<AdmissionControl>,
+    /// Set by [`Coordinator::begin_drain`]: new submits refuse with
+    /// [`SubmitError::Draining`].
+    draining: AtomicBool,
+    /// Drain cutoff, shared with every lane: once set, lanes answer all
+    /// queued jobs with `Deadline` instead of executing them.
+    drain_cutoff: Arc<AtomicBool>,
     joins: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -258,6 +361,7 @@ impl Coordinator {
     pub fn start(config: Config, backend: Arc<dyn Backend>) -> Coordinator {
         let mut lanes = HashMap::new();
         let mut joins = Vec::new();
+        let drain_cutoff = Arc::new(AtomicBool::new(false));
         for (op, n) in &config.lanes {
             let (op, n) = (*op, *n);
             let (tx, rx) = mpsc::sync_channel::<Job>(config.queue_cap);
@@ -265,6 +369,10 @@ impl Coordinator {
             let state = Arc::new(LaneState::new(
                 config.breaker_threshold,
                 config.breaker_cooldown,
+            ));
+            let shedder = Arc::new(OverloadShedder::new(
+                config.shed_target,
+                config.shed_window,
             ));
             let worker = LaneWorker {
                 backend: Arc::clone(&backend),
@@ -275,6 +383,8 @@ impl Coordinator {
                 max_wait: config.max_wait,
                 metrics: Arc::clone(&metrics),
                 state: Arc::clone(&state),
+                shedder: Arc::clone(&shedder),
+                drain_cutoff: Arc::clone(&drain_cutoff),
                 backoff: config.restart_backoff,
                 backoff_max: config.restart_backoff_max,
             };
@@ -289,6 +399,7 @@ impl Coordinator {
                     tx,
                     metrics,
                     state,
+                    shedder,
                     n,
                 },
             );
@@ -297,6 +408,10 @@ impl Coordinator {
             lanes,
             next_id: AtomicU64::new(1),
             default_deadline: config.deadline,
+            admission: (config.admission_rate > 0.0)
+                .then(|| AdmissionControl::new(config.admission_rate, config.admission_burst)),
+            draining: AtomicBool::new(false),
+            drain_cutoff,
             joins,
         }
     }
@@ -323,6 +438,27 @@ impl Coordinator {
         vector: Vec<f32>,
         deadline: Option<Duration>,
     ) -> Result<(u64, Receiver<Response>), SubmitError> {
+        self.submit_with_opts(
+            op,
+            vector,
+            SubmitOptions {
+                deadline,
+                ..SubmitOptions::default()
+            },
+        )
+    }
+
+    /// Full-control submit: deadline, admission client key, priority.
+    /// The refusal order is deliberate — drain beats everything (the
+    /// instance is going away), lane health beats admission (don't charge
+    /// tokens for doomed work), the token bucket beats the shedder (a
+    /// throttled client shouldn't consume shedder headroom).
+    pub fn submit_with_opts(
+        &self,
+        op: Op,
+        vector: Vec<f32>,
+        opts: SubmitOptions<'_>,
+    ) -> Result<(u64, Receiver<Response>), SubmitError> {
         let lane = self
             .lanes
             .get(&(op, vector.len()))
@@ -331,6 +467,15 @@ impl Coordinator {
             return Err(SubmitError::BadDim);
         }
         lane.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        // ORDERING: Relaxed — one-way latch; the drain sequence does not
+        // publish data through this flag, and a submit racing begin_drain
+        // is equivalent to one arriving just before it.
+        if self.draining.load(Ordering::Relaxed) {
+            lane.metrics.drained.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Draining {
+                retry_after_ms: DRAINING_RETRY_MS,
+            });
+        }
         match lane.state.phase() {
             Phase::Dead => return Err(SubmitError::LaneDown),
             Phase::Degraded if !lane.state.admit() => {
@@ -338,6 +483,18 @@ impl Coordinator {
                 return Err(SubmitError::Unavailable);
             }
             _ => {}
+        }
+        if let Some(ac) = &self.admission {
+            let cost = admission::request_work(op, lane.n);
+            let key = opts.client.unwrap_or("local");
+            if let admission::Admit::Throttled { retry_after_ms } = ac.check(key, cost) {
+                lane.metrics.throttled.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Throttled { retry_after_ms });
+            }
+        }
+        if let Some(retry_after_ms) = lane.shedder.should_shed(opts.priority) {
+            lane.metrics.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Overloaded { retry_after_ms });
         }
         // ORDERING: Relaxed — fetch_add's RMW atomicity alone guarantees
         // unique ids; ids never order other memory (responses are matched
@@ -350,18 +507,25 @@ impl Coordinator {
             vector,
             reply,
             enqueued: now,
-            deadline: deadline.or(self.default_deadline).map(|d| now + d),
+            deadline: opts.deadline.or(self.default_deadline).map(|d| now + d),
         };
+        // gauge up before try_send: the lane may dequeue (and decrement)
+        // the instant the job lands, so the reverse order could underflow
+        lane.metrics.in_flight.fetch_add(1, Ordering::Relaxed);
         match lane.tx.try_send(job) {
             Ok(()) => Ok((id, rx)),
             Err(TrySendError::Full(_)) => {
+                lane.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
                 lane.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Busy)
             }
             // the receiver lives in the supervisor, which only exits on
             // clean shutdown — while the coordinator is alive a
             // disconnected lane means the supervisor itself died
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::LaneDown),
+            Err(TrySendError::Disconnected(_)) => {
+                lane.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::LaneDown)
+            }
         }
     }
 
@@ -407,15 +571,68 @@ impl Coordinator {
         v
     }
 
-    /// Metrics as a JSON document.
+    /// Refuse all new submits with [`SubmitError::Draining`] from now on.
+    /// Idempotent; already-queued and in-flight work is unaffected (that
+    /// is [`Coordinator::drain`]'s job).
+    pub fn begin_drain(&self) {
+        // ORDERING: Relaxed — one-way latch, see the submit-path load.
+        self.draining.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        // ORDERING: Relaxed — one-way latch, see the submit-path load.
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    /// Requests admitted but not yet given a terminal answer, summed over
+    /// lanes (can overcount across lane deaths — see
+    /// [`LaneMetrics::in_flight`]).
+    pub fn pending(&self) -> u64 {
+        self.lanes
+            .values()
+            .map(|l| l.metrics.in_flight.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Graceful drain: [`Coordinator::begin_drain`], then wait up to
+    /// `deadline` for in-flight work to finish naturally. If work
+    /// remains at the deadline, flip the drain cutoff so lanes answer
+    /// everything still queued with a typed `Deadline` (never a silent
+    /// drop) and give them [`RESPONSE_GRACE`] to flush. Returns `true`
+    /// if everything completed without the cutoff.
+    pub fn drain(&self, deadline: Duration) -> bool {
+        self.begin_drain();
+        let until = Instant::now() + deadline;
+        while self.pending() > 0 {
+            if Instant::now() >= until {
+                // ORDERING: Relaxed — one-way latch polled by lane loops;
+                // the jobs it guards travel through the lane channel,
+                // which synchronizes.
+                self.drain_cutoff.store(true, Ordering::Relaxed);
+                let grace = Instant::now() + RESPONSE_GRACE;
+                while self.pending() > 0 && Instant::now() < grace {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        true
+    }
+
+    /// Metrics as a JSON document. When admission control is on, the
+    /// extra `admission` key carries per-client counters.
     pub fn metrics_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        Json::Obj(
-            self.metrics()
-                .into_iter()
-                .map(|((op, n), m)| (format!("{op}_n{n}"), m.to_json()))
-                .collect(),
-        )
+        let mut map: std::collections::BTreeMap<String, Json> = self
+            .metrics()
+            .into_iter()
+            .map(|((op, n), m)| (format!("{op}_n{n}"), m.to_json()))
+            .collect();
+        if let Some(ac) = &self.admission {
+            map.insert("admission".to_string(), ac.to_json());
+        }
+        Json::Obj(map)
     }
 
     /// Per-lane health as a JSON document (the `health` wire op): current
@@ -423,7 +640,9 @@ impl Coordinator {
     /// supervision counters.
     pub fn health_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        Json::Obj(
+        let mut map = std::collections::BTreeMap::new();
+        map.insert("draining".to_string(), Json::Bool(self.is_draining()));
+        map.extend(
             self.lanes
                 .iter()
                 .map(|((op, n), lane)| {
@@ -447,9 +666,9 @@ impl Coordinator {
                             ),
                         ]),
                     )
-                })
-                .collect(),
-        )
+                }),
+        );
+        Json::Obj(map)
     }
 
     /// Stop accepting requests, drain lanes, join threads.
@@ -473,6 +692,10 @@ struct LaneWorker {
     max_wait: Duration,
     metrics: Arc<LaneMetrics>,
     state: Arc<LaneState>,
+    /// Queue-delay shedder fed with every dequeued job's sojourn time.
+    shedder: Arc<OverloadShedder>,
+    /// Drain cutoff: once set, every queued job is answered `Deadline`.
+    drain_cutoff: Arc<AtomicBool>,
     /// Current restart backoff (doubles per consecutive death).
     backoff: Duration,
     backoff_max: Duration,
@@ -537,19 +760,26 @@ impl LaneWorker {
             }
             debug_assert!(jobs.len() <= self.max_batch);
 
-            // answer expired jobs before spending backend time on them
+            // answer expired jobs before spending backend time on them;
+            // the drain cutoff expires *everything* still queued (typed
+            // terminal answers, never silent drops)
             let now = Instant::now();
+            // ORDERING: Relaxed — one-way drain latch, see Coordinator::drain.
+            let cutoff = self.drain_cutoff.load(Ordering::Relaxed);
             let mut live = Vec::with_capacity(jobs.len());
             for job in jobs {
-                match job.deadline {
-                    Some(d) if now >= d => {
-                        self.metrics.expired.fetch_add(1, Ordering::Relaxed);
-                        let _ = job.reply.send(Response {
-                            id: job.id,
-                            result: Err(RequestError::Deadline),
-                        });
-                    }
-                    _ => live.push(job),
+                self.shedder
+                    .observe(now.saturating_duration_since(job.enqueued));
+                let expired = cutoff || matches!(job.deadline, Some(d) if now >= d);
+                if expired {
+                    self.metrics.expired.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Response {
+                        id: job.id,
+                        result: Err(RequestError::Deadline),
+                    });
+                } else {
+                    live.push(job);
                 }
             }
             if live.is_empty() {
@@ -654,6 +884,7 @@ impl LaneWorker {
                 .output_bits
                 .fetch_add((per * bits_per_elem) as u64, Ordering::Relaxed);
             self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            self.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
             self.metrics
                 .latency
                 .record_us(job.enqueued.elapsed().as_micros() as u64);
@@ -666,6 +897,7 @@ impl LaneWorker {
 
     fn respond_err(&self, e: RequestError, job: Job) {
         self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.in_flight.fetch_sub(1, Ordering::Relaxed);
         let _ = job.reply.send(Response {
             id: job.id,
             result: Err(e),
@@ -713,7 +945,19 @@ mod tests {
             SubmitError::Closed,
             SubmitError::LaneDown,
             SubmitError::Unavailable,
+            SubmitError::Throttled { retry_after_ms: 1 },
+            SubmitError::Overloaded { retry_after_ms: 1 },
+            SubmitError::Draining { retry_after_ms: 1 },
         ];
+        // retry hints and the client's retryable-code set are the same
+        // contract: exactly the retryable refusals carry `retry_after_ms`
+        for e in &submit {
+            assert_eq!(
+                e.retry_after_ms().is_some(),
+                client::RETRYABLE_CODES.contains(&e.code()),
+                "retry hint must match the retryable contract: {e:?}"
+            );
+        }
         // round trip: the wire code alone identifies the variant
         for e in &request {
             let back = request.iter().find(|c| c.code() == e.code()).expect("code resolves");
@@ -971,6 +1215,59 @@ mod tests {
             "mean batch {} — burst should batch",
             tm.mean_batch_size()
         );
+        c.shutdown();
+    }
+
+    #[test]
+    fn admission_throttles_per_client_with_hint_and_counters() {
+        // burst fits exactly one transform_n64 request (1344 work units);
+        // the refill rate is fast so hints stay small but nonzero
+        let config = Config {
+            lanes: vec![(Op::Transform, 64)],
+            admission_rate: 100_000.0,
+            admission_burst: admission::request_work(Op::Transform, 64) as f64 + 10.0,
+            ..Config::default()
+        };
+        let backend = Arc::new(NativeBackend::new(&[64], 1.0, 7));
+        let c = Coordinator::start(config, backend);
+        let alice = SubmitOptions {
+            client: Some("alice"),
+            ..SubmitOptions::default()
+        };
+        let (_, rx) = c.submit_with_opts(Op::Transform, vec![1.0; 64], alice).unwrap();
+        assert!(rx.recv().unwrap().result.is_ok());
+        match c.submit_with_opts(Op::Transform, vec![1.0; 64], alice) {
+            Err(SubmitError::Throttled { retry_after_ms }) => {
+                assert!(retry_after_ms >= 1, "hint must be actionable");
+            }
+            other => panic!("drained bucket must throttle, got {other:?}"),
+        }
+        // an unrelated client still has a full bucket
+        let bob = SubmitOptions {
+            client: Some("bob"),
+            ..SubmitOptions::default()
+        };
+        let (_, rx) = c.submit_with_opts(Op::Transform, vec![1.0; 64], bob).unwrap();
+        assert!(rx.recv().unwrap().result.is_ok());
+        let m = c.metrics();
+        assert_eq!(m[0].1.throttled.load(Ordering::Relaxed), 1);
+        // per-client counters ride the metrics document
+        let j = c.metrics_json();
+        let adm = j.get("admission").expect("admission section when enabled");
+        assert_eq!(
+            adm.get("alice").unwrap().get("throttled").unwrap().as_f64(),
+            Some(1.0)
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_options_default_matches_submit() {
+        let c = test_coordinator(8, 64);
+        let (_, rx) = c
+            .submit_with_opts(Op::Transform, vec![1.0; 64], SubmitOptions::default())
+            .unwrap();
+        assert!(rx.recv().unwrap().result.is_ok());
         c.shutdown();
     }
 }
@@ -1272,6 +1569,118 @@ mod failure_tests {
             .expect("half-open probe after cooldown must be admitted");
         c.call(Op::Transform, vec![1.0; 64])
             .expect("breaker closed after a successful probe");
+        c.shutdown();
+    }
+
+    #[test]
+    fn shedder_sheds_low_priority_under_queue_delay() {
+        // 50ms-per-call backend + 1µs sojourn target + zero window: the
+        // jobs queued behind the first observe ≥50ms delays, escalating
+        // the shedder to level 2 (sticky until a sub-target observation,
+        // which a shed-everything lane never produces)
+        let inner: Arc<dyn Backend> = Arc::new(NativeBackend::new(&[64], 1.0, 1));
+        let plan = FaultPlan::parse("delay_ms:50").unwrap();
+        let be = Arc::new(FaultInjectingBackend::new(inner, plan));
+        let cfg = Config {
+            max_batch: 1,
+            shed_target: Duration::from_micros(1),
+            shed_window: Duration::ZERO,
+            ..config()
+        };
+        let c = Coordinator::start(cfg, be);
+        let high = SubmitOptions {
+            priority: admission::PRIORITY_HIGH,
+            ..SubmitOptions::default()
+        };
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            rxs.push(c.submit_with_opts(Op::Transform, vec![1.0; 64], high).unwrap());
+        }
+        for (_, rx) in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let low = SubmitOptions {
+            priority: admission::PRIORITY_LOW,
+            ..SubmitOptions::default()
+        };
+        match c.submit_with_opts(Op::Transform, vec![1.0; 64], low) {
+            Err(SubmitError::Overloaded { retry_after_ms }) => {
+                assert!(retry_after_ms >= 1, "hint must be actionable");
+            }
+            other => panic!("overloaded lane must shed priority-0 work, got {other:?}"),
+        }
+        // priority-2 work is never shedder-shed
+        let (_, rx) = c.submit_with_opts(Op::Transform, vec![1.0; 64], high).unwrap();
+        assert!(rx.recv().unwrap().result.is_ok());
+        let m = c.metrics();
+        assert!(m[0].1.shed_overloaded.load(Ordering::Relaxed) >= 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn drain_refuses_new_gives_queued_typed_answers_and_empties() {
+        // 100ms-per-call backend, 4 queued jobs: drain with a 10ms
+        // deadline lets the in-flight job finish, expires the rest with
+        // typed Deadline answers, and leaves nothing pending
+        let inner: Arc<dyn Backend> = Arc::new(NativeBackend::new(&[64], 1.0, 1));
+        let plan = FaultPlan::parse("delay_ms:100").unwrap();
+        let be = Arc::new(FaultInjectingBackend::new(inner, plan));
+        let cfg = Config {
+            max_batch: 1,
+            ..config()
+        };
+        let c = Coordinator::start(cfg, be);
+        let mut rxs = Vec::new();
+        for _ in 0..4 {
+            rxs.push(c.submit(Op::Transform, vec![1.0; 64]).unwrap());
+        }
+        std::thread::sleep(Duration::from_millis(20)); // first job in flight
+        c.begin_drain();
+        assert!(c.is_draining());
+        match c.submit(Op::Transform, vec![1.0; 64]) {
+            Err(SubmitError::Draining { retry_after_ms }) => {
+                assert_eq!(retry_after_ms, DRAINING_RETRY_MS);
+            }
+            other => panic!("draining coordinator must refuse, got {other:?}"),
+        }
+        assert!(
+            !c.drain(Duration::from_millis(10)),
+            "a 10ms deadline cannot drain 400ms of backlog naturally"
+        );
+        let mut ok = 0;
+        let mut expired = 0;
+        for (_, rx) in rxs {
+            match rx
+                .recv_timeout(Duration::from_secs(2))
+                .expect("every admitted request gets a terminal answer")
+                .result
+            {
+                Ok(_) => ok += 1,
+                Err(RequestError::Deadline) => expired += 1,
+                Err(e) => panic!("unexpected terminal error {e:?}"),
+            }
+        }
+        assert!(ok >= 1, "the in-flight job must complete");
+        assert!(expired >= 1, "cutoff must expire still-queued jobs");
+        assert_eq!(ok + expired, 4);
+        // the drain counter and gauge tell the story in metrics
+        let m = c.metrics();
+        assert_eq!(m[0].1.drained.load(Ordering::Relaxed), 1);
+        assert_eq!(c.pending(), 0, "nothing may remain in flight after drain");
+        assert_eq!(
+            c.health_json().get("draining").unwrap(),
+            &crate::util::json::Json::Bool(true)
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn drain_returns_true_when_work_finishes_under_deadline() {
+        let c = Coordinator::start(config(), Arc::new(NativeBackend::new(&[64], 1.0, 1)));
+        let (_, rx) = c.submit(Op::Transform, vec![1.0; 64]).unwrap();
+        assert!(c.drain(Duration::from_secs(5)), "fast lane drains cleanly");
+        assert!(rx.recv().unwrap().result.is_ok());
+        assert_eq!(c.pending(), 0);
         c.shutdown();
     }
 

@@ -39,10 +39,32 @@
 //! stop flag within [`READ_POLL`], finishes any in-flight response line,
 //! and exits — shutdown cannot race a half-written response, and no
 //! detached handler outlives the server.
+//!
+//! ## Overload protection and drain
+//!
+//! Requests may carry `client_id` (admission-control key; the peer
+//! address is the fallback) and `priority` (0–2; the shedder drops low
+//! first). Refusals the taxonomy marks retryable additionally carry a
+//! `retry_after_ms` hint. [`ServerOptions::max_conns`] bounds concurrent
+//! handler threads — excess connections get a one-line `overloaded`
+//! refusal instead of a thread. [`TcpServer::begin_drain`] flips the
+//! server into drain: new connections get a one-line `draining` refusal,
+//! existing connections' new requests get `draining` from the
+//! coordinator, and [`TcpServer::shutdown_graceful`] then waits out
+//! in-flight work under [`ServerOptions::drain_deadline`] before
+//! joining. Transport-level fault injection
+//! ([`ServerOptions::net_faults`]: `conn_drop` / `slow_read_ms` /
+//! `partial_write`) lives here too, so the chaos suite can prove the
+//! retry client converges under real network misbehavior.
 
-use super::{Coordinator, SubmitError, DEFAULT_CALL_TIMEOUT, RESPONSE_GRACE};
+use super::{
+    Coordinator, SubmitError, SubmitOptions, DEFAULT_CALL_TIMEOUT, DRAINING_RETRY_MS,
+    RESPONSE_GRACE,
+};
+use crate::coordinator::FaultPlan;
 use crate::runtime::{Op, Output};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -70,10 +92,62 @@ const WRITE_STALL_LIMIT: Duration = Duration::from_secs(5);
 pub const CODE_BAD_REQUEST: &str = "bad_request";
 pub const CODE_TIMEOUT: &str = "timeout";
 
+/// Retry hint attached to accept-loop `overloaded` refusals (connection
+/// cap hit). Connection slots churn fast, so the hint is short.
+const MAX_CONNS_RETRY_MS: u64 = 50;
+
+/// Tuning for [`TcpServer::start_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOptions {
+    /// Maximum concurrent connection-handler threads; further connections
+    /// get a one-line `overloaded` refusal. `0` = unlimited.
+    pub max_conns: usize,
+    /// How long [`TcpServer::shutdown_graceful`] waits for in-flight work
+    /// before cutting queued jobs over to typed `deadline` answers.
+    pub drain_deadline: Duration,
+    /// Transport-level fault injection (`conn_drop` / `slow_read_ms` /
+    /// `partial_write` keys of the `TS_FAULT` grammar); backend-fault keys
+    /// in the plan are ignored here.
+    pub net_faults: FaultPlan,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            max_conns: 256,
+            drain_deadline: Duration::from_secs(5),
+            net_faults: FaultPlan::default(),
+        }
+    }
+}
+
+/// Transport fault state shared by connection handlers: one RNG so drop /
+/// truncation decisions are a single deterministic stream per server.
+struct NetFaults {
+    plan: FaultPlan,
+    rng: Mutex<Rng>,
+}
+
+impl NetFaults {
+    /// Draw (drop this reply & close, truncate this reply & close).
+    fn decide(&self) -> (bool, bool) {
+        let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
+        (
+            self.plan.conn_drop_p > 0.0 && rng.uniform() < self.plan.conn_drop_p,
+            self.plan.partial_write_p > 0.0 && rng.uniform() < self.plan.partial_write_p,
+        )
+    }
+}
+
 /// Handle to a running TCP server.
 pub struct TcpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    /// Drain latch: accept loop refuses new connections with `draining`
+    /// while existing handlers keep serving until shutdown.
+    draining: Arc<AtomicBool>,
+    coordinator: Arc<Coordinator>,
+    drain_deadline: Duration,
     accept_join: Option<std::thread::JoinHandle<()>>,
     /// Live connection-handler threads, joined on shutdown (finished
     /// handlers are pruned opportunistically as new connections arrive).
@@ -81,14 +155,34 @@ pub struct TcpServer {
 }
 
 impl TcpServer {
-    /// Bind `addr` (use port 0 for ephemeral) and serve `coordinator`.
+    /// Bind `addr` (use port 0 for ephemeral) and serve `coordinator`
+    /// with default [`ServerOptions`].
     pub fn start(coordinator: Arc<Coordinator>, addr: &str) -> std::io::Result<TcpServer> {
+        Self::start_with(coordinator, addr, ServerOptions::default())
+    }
+
+    /// Bind `addr` and serve `coordinator` with explicit options.
+    pub fn start_with(
+        coordinator: Arc<Coordinator>,
+        addr: &str,
+        opts: ServerOptions,
+    ) -> std::io::Result<TcpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let draining = Arc::new(AtomicBool::new(false));
+        let draining2 = Arc::clone(&draining);
         let conn_joins = Arc::new(Mutex::new(Vec::new()));
         let joins2 = Arc::clone(&conn_joins);
+        let c_accept = Arc::clone(&coordinator);
+        let net: Option<Arc<NetFaults>> = opts.net_faults.has_net_faults().then(|| {
+            Arc::new(NetFaults {
+                plan: opts.net_faults,
+                rng: Mutex::new(Rng::new(opts.net_faults.seed)),
+            })
+        });
+        let max_conns = opts.max_conns;
         let accept_join = std::thread::Builder::new()
             .name("tcp-accept".into())
             .spawn(move || {
@@ -101,16 +195,39 @@ impl TcpServer {
                     }
                     match conn {
                         Ok(stream) => {
-                            let c = Arc::clone(&coordinator);
+                            // ORDERING: Relaxed — drain latch is one-way;
+                            // refusing a connection needs no ordering with
+                            // other memory.
+                            if draining2.load(Ordering::Relaxed) {
+                                refuse_connection(
+                                    stream,
+                                    &SubmitError::Draining {
+                                        retry_after_ms: DRAINING_RETRY_MS,
+                                    },
+                                );
+                                continue;
+                            }
+                            let mut joins = joins2.lock().unwrap();
+                            // prune handlers whose connections already
+                            // closed so the vec tracks live threads only
+                            joins.retain(|j: &std::thread::JoinHandle<()>| !j.is_finished());
+                            if max_conns > 0 && joins.len() >= max_conns {
+                                drop(joins);
+                                refuse_connection(
+                                    stream,
+                                    &SubmitError::Overloaded {
+                                        retry_after_ms: MAX_CONNS_RETRY_MS,
+                                    },
+                                );
+                                continue;
+                            }
+                            let c = Arc::clone(&c_accept);
                             let flag = Arc::clone(&stop2);
+                            let nf = net.clone();
                             let spawned = std::thread::Builder::new()
                                 .name("tcp-conn".into())
-                                .spawn(move || handle_connection(stream, c, flag));
+                                .spawn(move || handle_connection(stream, c, flag, nf));
                             if let Ok(handle) = spawned {
-                                let mut joins = joins2.lock().unwrap();
-                                // prune handlers whose connections already
-                                // closed so the vec tracks live threads only
-                                joins.retain(|j: &std::thread::JoinHandle<()>| !j.is_finished());
                                 joins.push(handle);
                             }
                         }
@@ -121,6 +238,9 @@ impl TcpServer {
         Ok(TcpServer {
             addr: local,
             stop,
+            draining,
+            coordinator,
+            drain_deadline: opts.drain_deadline,
             accept_join: Some(accept_join),
             conn_joins,
         })
@@ -129,6 +249,29 @@ impl TcpServer {
     /// The bound address (resolves ephemeral ports).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Enter drain: the accept loop starts refusing new connections with a
+    /// one-line `draining` answer, and the coordinator refuses new
+    /// submissions the same way, while in-flight work keeps running.
+    /// Idempotent.
+    pub fn begin_drain(&self) {
+        // ORDERING: Relaxed — one-way latch polled by the accept loop;
+        // refusal behavior needs no cross-thread data ordering.
+        self.draining.store(true, Ordering::Relaxed);
+        self.coordinator.begin_drain();
+    }
+
+    /// Graceful stop: [`begin_drain`](Self::begin_drain), wait for
+    /// in-flight coordinator work under the configured drain deadline
+    /// (queued jobs past it get typed `deadline` answers — never silence),
+    /// then [`shutdown`](Self::shutdown). Returns `true` if every queued
+    /// job completed before the deadline.
+    pub fn shutdown_graceful(self) -> bool {
+        self.begin_drain();
+        let drained = self.coordinator.drain(self.drain_deadline);
+        self.shutdown();
+        drained
     }
 
     /// Stop accepting connections, then join the accept thread **and every
@@ -154,7 +297,26 @@ impl TcpServer {
     }
 }
 
-fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<AtomicBool>) {
+/// Write a single coded refusal line (id `null`, with `retry_after_ms`)
+/// to a connection the accept loop will not service, then close it.
+fn refuse_connection(stream: TcpStream, err: &SubmitError) {
+    let _ = stream.set_write_timeout(Some(WRITE_STALL_LIMIT));
+    let mut stream = stream;
+    let reply =
+        err_response_with_hint(Json::Null, &err.to_string(), err.code(), err.retry_after_ms());
+    let _ = stream.write_all(format!("{reply}\n").as_bytes());
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    net: Option<Arc<NetFaults>>,
+) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "unknown".into());
     // bounded read: a quiet connection re-checks the stop flag every
     // READ_POLL instead of blocking shutdown forever; bounded write: a
     // client that stops draining cannot pin the (joined-on-shutdown)
@@ -178,7 +340,7 @@ fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc
                 // closing (the protocol promise for newline-less tails)
                 let text = String::from_utf8_lossy(&line);
                 if !text.trim().is_empty() {
-                    let reply = process_line(text.trim_end(), &coordinator);
+                    let reply = process_line_from(text.trim_end(), &coordinator, &peer);
                     let _ = writer.write_all(format!("{reply}\n").as_bytes());
                 }
                 break;
@@ -186,8 +348,32 @@ fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc
             Ok(_) => {
                 let text = String::from_utf8_lossy(&line);
                 if !text.trim().is_empty() {
-                    let reply = process_line(text.trim_end(), &coordinator);
-                    if writer.write_all(format!("{reply}\n").as_bytes()).is_err() {
+                    if let Some(nf) = &net {
+                        // injected read-path latency: the request sits
+                        // "on the wire" before the server acts on it
+                        if !nf.plan.slow_read.is_zero() {
+                            std::thread::sleep(nf.plan.slow_read);
+                        }
+                    }
+                    let reply = process_line_from(text.trim_end(), &coordinator, &peer);
+                    let payload = format!("{reply}\n");
+                    let (drop_conn, partial) =
+                        net.as_ref().map(|nf| nf.decide()).unwrap_or((false, false));
+                    if drop_conn {
+                        // injected fault: connection dies instead of
+                        // replying — the client saw the request accepted
+                        // at the TCP level but gets no answer
+                        return;
+                    }
+                    if partial {
+                        // injected fault: half a reply, then the
+                        // connection dies mid-line
+                        let half = payload.len() / 2;
+                        let _ = writer.write_all(&payload.as_bytes()[..half]);
+                        let _ = writer.flush();
+                        return;
+                    }
+                    if writer.write_all(payload.as_bytes()).is_err() {
                         break;
                     }
                 }
@@ -217,8 +403,16 @@ fn handle_connection(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc
 }
 
 /// Parse one request line, execute, format the response (pure function —
-/// unit-testable without sockets).
+/// unit-testable without sockets). Admission falls back to the `"local"`
+/// client key; the TCP path uses [`process_line_from`] with the peer
+/// address instead.
 pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
+    process_line_from(line, coordinator, "local")
+}
+
+/// [`process_line`] with an explicit fallback admission key (`peer`),
+/// used when the request carries no `client_id` field.
+pub fn process_line_from(line: &str, coordinator: &Coordinator, peer: &str) -> Json {
     let doc = match Json::parse(line) {
         Ok(d) => d,
         Err(e) => return err_response(Json::Null, &format!("bad json: {e}"), CODE_BAD_REQUEST),
@@ -259,6 +453,25 @@ pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
             }
         },
     };
+    // admission key: explicit client_id wins, else the peer address; a
+    // present-but-non-string client_id is a malformed request, not a
+    // silent fallback (same strictness as timeout_ms)
+    let client = match doc.get("client_id") {
+        None => peer,
+        Some(c) => match c.as_str() {
+            Some(s) => s,
+            None => return err_response(id, "'client_id' must be a string", CODE_BAD_REQUEST),
+        },
+    };
+    let priority = match doc.get("priority") {
+        None => super::admission::PRIORITY_NORMAL,
+        Some(p) => match p.as_f64() {
+            Some(v) if v.is_finite() && v >= 0.0 && v <= 255.0 && v.fract() == 0.0 => v as u8,
+            _ => {
+                return err_response(id, "'priority' must be an integer 0-255", CODE_BAD_REQUEST)
+            }
+        },
+    };
     let Some(vec_json) = doc.get("vector").and_then(|v| v.as_arr()) else {
         return err_response(id, "missing 'vector' array", CODE_BAD_REQUEST);
     };
@@ -269,7 +482,12 @@ pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
             None => return err_response(id, "'vector' must contain numbers", CODE_BAD_REQUEST),
         }
     }
-    match coordinator.submit_with_deadline(op, vector, timeout) {
+    let opts = SubmitOptions {
+        deadline: timeout,
+        client: Some(client),
+        priority,
+    };
+    match coordinator.submit_with_opts(op, vector, opts) {
         Ok((_, rx)) => {
             // bounded wait: the lane's own typed Deadline answer should win
             // the race (RESPONSE_GRACE), but a dead or wedged lane must
@@ -283,15 +501,17 @@ pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     err_response(id, "response timed out", CODE_TIMEOUT)
                 }
-                Err(mpsc::RecvTimeoutError::Disconnected) => err_response(
+                Err(mpsc::RecvTimeoutError::Disconnected) => err_response_with_hint(
                     id,
                     "lane dropped response (restarted mid-request)",
                     "lane_down",
+                    SubmitError::LaneDown.retry_after_ms(),
                 ),
             }
         }
-        Err(SubmitError::Busy) => err_response(id, "lane queue full", "busy"),
-        Err(e) => err_response(id, &e.to_string(), e.code()),
+        // every taxonomy-retryable refusal carries its retry_after_ms hint
+        // so clients can back off without guessing
+        Err(e) => err_response_with_hint(id, &e.to_string(), e.code(), e.retry_after_ms()),
     }
 }
 
@@ -322,12 +542,23 @@ pub fn hex_to_word(s: &str) -> Option<u64> {
 }
 
 fn err_response(id: Json, msg: &str, code: &str) -> Json {
-    Json::obj(vec![
+    err_response_with_hint(id, msg, code, None)
+}
+
+/// Error response that attaches `retry_after_ms` when the taxonomy marks
+/// the code retryable — the server-side half of the retry-client
+/// contract (clients treat a missing hint as "do not bother retrying").
+fn err_response_with_hint(id: Json, msg: &str, code: &str, retry_after_ms: Option<u64>) -> Json {
+    let mut fields = vec![
         ("id", id),
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.to_string())),
         ("code", Json::Str(code.to_string())),
-    ])
+    ];
+    if let Some(ms) = retry_after_ms {
+        fields.push(("retry_after_ms", Json::Num(ms as f64)));
+    }
+    Json::obj(fields)
 }
 
 #[cfg(test)]
@@ -467,6 +698,54 @@ mod tests {
             vec_str.join(",")
         );
         assert_eq!(process_line(&line, &c).get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn process_line_rejects_bad_client_id_and_priority() {
+        let c = coordinator();
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", i as f32)).collect();
+        let line = format!(
+            r#"{{"id": 7, "op": "transform", "vector": [{}], "client_id": 9}}"#,
+            vec_str.join(",")
+        );
+        let r = process_line(&line, &c);
+        assert_eq!(r.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("client_id"));
+        let line = format!(
+            r#"{{"id": 8, "op": "transform", "vector": [{}], "priority": 1.5}}"#,
+            vec_str.join(",")
+        );
+        let r = process_line(&line, &c);
+        assert_eq!(r.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("priority"));
+        // a valid priority passes through and succeeds
+        let line = format!(
+            r#"{{"id": 9, "op": "transform", "vector": [{}], "priority": 2, "client_id": "t"}}"#,
+            vec_str.join(",")
+        );
+        assert_eq!(process_line(&line, &c).get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn draining_coordinator_refusal_carries_retry_hint_on_the_wire() {
+        let c = coordinator();
+        c.begin_drain();
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", i as f32)).collect();
+        let line = format!(
+            r#"{{"id": 10, "op": "transform", "vector": [{}]}}"#,
+            vec_str.join(",")
+        );
+        let r = process_line(&line, &c);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("code").unwrap().as_str(), Some("draining"));
+        assert_eq!(
+            r.get("retry_after_ms").unwrap().as_f64(),
+            Some(super::DRAINING_RETRY_MS as f64)
+        );
+        // non-retryable refusals must NOT carry a hint
+        let r = process_line(r#"{"id":11,"op":"transform","vector":[1,2]}"#, &c);
+        assert_eq!(r.get("code").unwrap().as_str(), Some("unknown_lane"));
+        assert!(r.get("retry_after_ms").is_none());
     }
 
     #[test]

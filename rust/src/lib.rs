@@ -83,6 +83,40 @@
 //! `rust/tests/chaos_serving.rs` and the `serving_fault` bench sweep
 //! (error-path latency is measured, not assumed zero).
 //!
+//! ## Overload protection
+//!
+//! Refusing work is a feature with a contract, not an accident:
+//!
+//! * **Cost-aware admission** — [`coordinator::AdmissionControl`] is a
+//!   per-client token bucket denominated in *work units* from
+//!   `coordinator::admission::request_work`, the same `O(n log n)` cost
+//!   model the batcher uses, so one client hammering `n=4096` transforms
+//!   spends its budget ~10× faster than one sending `n=256`. Clients are
+//!   keyed by the request's `client_id` field (peer address fallback);
+//!   over budget means a `throttled` refusal.
+//! * **Adaptive shedding** — [`coordinator::OverloadShedder`] watches
+//!   admission→dequeue queue delay per lane (CoDel-style: sustained time
+//!   above a target, not instantaneous spikes). Under sustained overload
+//!   it sheds lowest-`priority` requests first (`overloaded` refusals),
+//!   escalating to normal priority if delay keeps climbing; high priority
+//!   (2) is never shed. One sub-target observation resets it.
+//! * **Graceful drain** — `TcpServer::begin_drain` / `shutdown_graceful`
+//!   (SIGTERM/Ctrl-C in the serve CLI): new connections and new requests
+//!   get `draining` refusals while in-flight work finishes under a drain
+//!   deadline; queued jobs past the deadline get typed `deadline` answers.
+//!   Nothing admitted is ever silently dropped.
+//! * **The retry contract** — exactly the retryable codes (`busy`,
+//!   `unavailable`, `lane_down`, `throttled`, `overloaded`, `draining` —
+//!   [`coordinator::client::RETRYABLE_CODES`]) carry a `retry_after_ms`
+//!   hint on the wire; terminal codes (`bad_request`, `bad_dim`, …) never
+//!   do. [`coordinator::RetryClient`] honors it with hint-floored
+//!   full-jitter exponential backoff under a retry *budget*, so a
+//!   persistent outage degrades to fast typed failures instead of a
+//!   client-side retry storm. Transport chaos (`TS_FAULT`
+//!   `conn_drop:p,slow_read_ms:d,partial_write:p`, applied at the socket
+//!   layer) proves every logical request still reaches exactly one
+//!   terminal outcome.
+//!
 //! ## Correctness tooling
 //!
 //! The invariants the engine lives by are machine-checked in layers:

@@ -61,8 +61,15 @@ COMMANDS:
                    --max-batch 64, --queue 1024,
                    --deadline-ms 0 [0 = none], --breaker-threshold 8,
                    --breaker-cooldown-ms 250)
-                  TS_FAULT=panic:p,err:p,delay_ms:d,seed:s injects
-                  deterministic backend faults (chaos testing)
+                  --tcp ADDR serves newline-JSON instead; then:
+                   --max-conns 256 [0 = unlimited],
+                   --drain-deadline-ms 5000 (SIGTERM/Ctrl-C drain),
+                   --admit-rate R work-units/s per client [0 = off],
+                   --admit-burst B [0 = R], --shed-target-ms T [0 = off],
+                   --shed-window-ms 100
+                  TS_FAULT=panic:p,err:p,delay_ms:d,conn_drop:p,
+                  slow_read_ms:d,partial_write:p,seed:s injects
+                  deterministic backend + transport faults (chaos testing)
   transform       one-shot transform (--family hd3|hdg|circulant|toeplitz|
                   hankel|skew|dense, --n 256, --seed 42; --binary adds the
                   packed sign-quantized embedding + footprint accounting)
@@ -263,6 +270,12 @@ fn build_coordinator(
         deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
         breaker_threshold: opt(opts, "breaker-threshold", 8),
         breaker_cooldown: Duration::from_millis(opt(opts, "breaker-cooldown-ms", 250)),
+        // overload protection: per-client token bucket in work units
+        // (0 = admission off) and queue-delay shedder (0 = shedding off)
+        admission_rate: opt(opts, "admit-rate", 0.0),
+        admission_burst: opt(opts, "admit-burst", 0.0),
+        shed_target: Duration::from_millis(opt(opts, "shed-target-ms", 0)),
+        shed_window: Duration::from_millis(opt(opts, "shed-window-ms", 100)),
         ..Config::default()
     };
     let backend_s = opts
@@ -309,7 +322,27 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
             }
         };
         let c = Arc::new(c);
-        let server = match triplespin::coordinator::TcpServer::start(Arc::clone(&c), addr) {
+        // transport-fault keys of TS_FAULT (conn_drop/slow_read_ms/
+        // partial_write) are applied by the TCP server, not the backend
+        // wrapper; a malformed plan already aborted in build_coordinator
+        let net_faults = triplespin::coordinator::FaultPlan::from_env()
+            .ok()
+            .flatten()
+            .filter(|p| p.has_net_faults())
+            .unwrap_or_default();
+        if net_faults.has_net_faults() {
+            eprintln!("TS_FAULT active: injecting transport faults");
+        }
+        let server_opts = triplespin::coordinator::ServerOptions {
+            max_conns: opt(opts, "max-conns", 256),
+            drain_deadline: Duration::from_millis(opt(opts, "drain-deadline-ms", 5000)),
+            net_faults,
+        };
+        let server = match triplespin::coordinator::TcpServer::start_with(
+            Arc::clone(&c),
+            addr,
+            server_opts,
+        ) {
             Ok(s) => s,
             Err(e) => {
                 eprintln!("bind {addr}: {e}");
@@ -322,18 +355,39 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
             "transform/rff/crosspolytope/binary_embed"
         };
         println!(
-            "listening on {} (ops: {ops}, n={n});\n\
+            "listening on {} (ops: {ops}, n={n}, max_conns={});\n\
              protocol: one JSON per line: {{\"id\":1,\"op\":\"transform\",\"vector\":[..]}}\n\
-             optional \"timeout_ms\" per request; ops \"metrics\" and \"health\"\n\
-             report per-lane counters / breaker state; errors carry a \"code\"\n\
-             (busy|deadline|unavailable|lane_down|backend|panic|timeout|bad_request)\n\
+             optional per request: \"timeout_ms\", \"client_id\" (admission key),\n\
+             \"priority\" 0-2; ops \"metrics\" and \"health\" report per-lane\n\
+             counters / breaker state / drain state; errors carry a \"code\"\n\
+             (busy|deadline|unavailable|lane_down|backend|panic|timeout|bad_request\n\
+             |throttled|overloaded|draining) and retryable ones a \"retry_after_ms\"\n\
              (binary_embed results are packed sign words as 16-digit hex strings)\n\
-             Ctrl-C to stop.",
-            server.addr()
+             SIGTERM/Ctrl-C drains gracefully.",
+            server.addr(),
+            server_opts.max_conns,
         );
-        loop {
-            std::thread::sleep(Duration::from_secs(3600));
+        // block until SIGTERM/SIGINT, then drain instead of dying
+        // mid-request: refuse new work with `draining` + retry hint, let
+        // in-flight work finish under the drain deadline, then join
+        let latch = triplespin::util::signal::termination_latch();
+        // ORDERING: Relaxed — one-way latch polled in a loop; the signal
+        // handler publishes nothing else.
+        while !latch.load(std::sync::atomic::Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(100));
         }
+        eprintln!("termination signal: draining (deadline {:?})", server_opts.drain_deadline);
+        let clean = server.shutdown_graceful();
+        match Arc::try_unwrap(c) {
+            Ok(c) => c.shutdown(),
+            Err(_) => eprintln!("coordinator still referenced at exit; skipping join"),
+        }
+        if clean {
+            eprintln!("drained cleanly: all in-flight work completed");
+            return 0;
+        }
+        eprintln!("drain deadline hit: queued work answered with code \"deadline\"");
+        return 0;
     }
     let requests: usize = opt(opts, "requests", 2000);
     let rate: f64 = opt(opts, "rate", 0.0); // 0 = as fast as possible

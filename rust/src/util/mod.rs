@@ -4,6 +4,7 @@ pub mod bench;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod signal;
 pub(crate) mod sync;
 
 /// Best-effort text of a caught panic payload. `panic!("...")` and

@@ -13,6 +13,13 @@
 //!   closes after a successful half-open probe;
 //! * a fault-free (no-op-plan) stack is bit-identical to the direct
 //!   backend — the isolation machinery costs no determinism.
+//!
+//! The `net_faults_*` scenarios (their own named CI step) add transport
+//! chaos: `TS_FAULT`-grammar `conn_drop`/`slow_read_ms`/`partial_write`
+//! plans applied at the socket layer, driven through the resilient
+//! `RetryClient` — every logical request must reach exactly one terminal
+//! outcome, retryable refusals carry `retry_after_ms`, and non-retryable
+//! codes are never retried.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -21,8 +28,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use triplespin::coordinator::{
-    Backend, Config, Coordinator, FaultInjectingBackend, FaultPlan, NativeBackend, SubmitError,
-    TcpServer,
+    Backend, ClientError, Config, Coordinator, FaultInjectingBackend, FaultPlan, NativeBackend,
+    RetryClient, RetryPolicy, ServerOptions, SubmitError, TcpServer,
 };
 use triplespin::runtime::{Op, Output};
 use triplespin::util::json::Json;
@@ -370,4 +377,235 @@ fn fault_free_stack_is_bit_identical_to_direct_backend() {
     assert_eq!(lm.panics.load(Ordering::Relaxed), 0);
     assert_eq!(lm.lane_failures.load(Ordering::Relaxed), 0);
     c.shutdown();
+}
+
+/// A fast retry policy for tests: tight backoffs and a budget generous
+/// enough that convergence, not budget pressure, is what's under test
+/// (budget exhaustion has its own unit scenario in `coordinator::client`).
+fn test_policy() -> RetryPolicy {
+    RetryPolicy {
+        max_attempts: 8,
+        base_backoff: Duration::from_millis(1),
+        max_backoff: Duration::from_millis(20),
+        budget_max: 50.0,
+        ..RetryPolicy::default()
+    }
+}
+
+#[test]
+fn net_faults_every_logical_request_reaches_exactly_one_terminal_outcome() {
+    // a healthy backend behind a hostile transport: ~25% of replies are
+    // swallowed (connection dropped), ~15% truncated mid-line, every
+    // request stalled 1ms. The retry client must reconnect/resend until
+    // each *logical* request reaches exactly one terminal outcome — and
+    // since compute is deterministic and the backend healthy, that
+    // outcome is success.
+    let c = Arc::new(Coordinator::start(base_config(), native()));
+    let opts = ServerOptions {
+        net_faults: FaultPlan::parse("conn_drop:0.15,partial_write:0.1,slow_read_ms:1,seed:7")
+            .unwrap(),
+        ..Default::default()
+    };
+    let server = TcpServer::start_with(Arc::clone(&c), "127.0.0.1:0", opts).unwrap();
+    let addr = server.addr().to_string();
+    let mut joins = Vec::new();
+    for t in 0..3u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let client = RetryClient::connect(&addr, Some(&format!("c{t}")), test_policy());
+            let v: Vec<f32> = (0..N).map(|i| (i as f32) + t as f32).collect();
+            let mut outcomes = 0u64;
+            for _ in 0..15 {
+                match client.call("transform", &v) {
+                    Ok(result) => {
+                        assert_eq!(result.as_arr().unwrap().len(), N);
+                        outcomes += 1;
+                    }
+                    Err(e) => panic!("healthy backend must converge to success: {e}"),
+                }
+            }
+            (
+                outcomes,
+                client.retries.load(Ordering::Relaxed),
+                client.reconnects.load(Ordering::Relaxed),
+            )
+        }));
+    }
+    let (mut outcomes, mut retries, mut reconnects) = (0, 0, 0);
+    for j in joins {
+        let (o, r, rc) = j.join().unwrap();
+        outcomes += o;
+        retries += r;
+        reconnects += rc;
+    }
+    assert_eq!(outcomes, 45, "exactly one terminal outcome per logical request");
+    assert!(retries > 0, "a ~24% transport fault rate must force retries");
+    assert!(reconnects > 0, "dropped connections must force reconnects");
+    // the server stayed consistent under the chaos: it completed at least
+    // the 45 acknowledged requests (resends of swallowed replies recompute)
+    let m = c.metrics();
+    let (_, lm) = &m[0];
+    assert!(lm.completed.load(Ordering::Relaxed) >= 45);
+    server.shutdown();
+}
+
+#[test]
+fn net_faults_retry_client_never_retries_non_retryable_codes() {
+    let c = Arc::new(Coordinator::start(base_config(), native()));
+    let server = TcpServer::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    let client = RetryClient::connect(&addr, Some("strict"), test_policy());
+    // wrong dimension: a terminal bad_dim — exactly one attempt, no retry
+    match client.call("transform", &[1.0, 2.0]) {
+        Err(ClientError::Rejected { code, .. }) => assert_eq!(code, "bad_dim"),
+        other => panic!("expected a terminal rejection, got {other:?}"),
+    }
+    assert_eq!(client.attempts.load(Ordering::Relaxed), 1);
+    assert_eq!(client.retries.load(Ordering::Relaxed), 0);
+    // unknown op: bad_request, also terminal
+    match client.call("nope", &[1.0; N]) {
+        Err(ClientError::Rejected { code, .. }) => assert_eq!(code, "bad_request"),
+        other => panic!("expected a terminal rejection, got {other:?}"),
+    }
+    assert_eq!(client.retries.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+#[test]
+fn net_faults_throttled_on_the_wire_carries_hint_and_client_converges() {
+    // admission: burst covers exactly one n=64 transform (1344 work units
+    // + slack), refilling at 20k units/s — the second immediate request
+    // must be refused `throttled` with a retry_after_ms the client then
+    // honors to converge on a later attempt
+    let cfg = Config {
+        admission_rate: 20_000.0,
+        admission_burst: 1_400.0,
+        ..base_config()
+    };
+    let c = Arc::new(Coordinator::start(cfg, native()));
+    let server = TcpServer::start(Arc::clone(&c), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+    // raw wire first: observe the refusal shape itself
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let vals: Vec<String> = (0..N).map(|i| format!("{}", i as f32)).collect();
+    let line = |id: u64| {
+        format!(
+            "{{\"id\": {id}, \"op\": \"transform\", \"vector\": [{}], \"client_id\": \"hog\"}}\n",
+            vals.join(",")
+        )
+    };
+    stream.write_all(line(1).as_bytes()).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let doc = Json::parse(resp.trim()).unwrap();
+    assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{doc}");
+    stream.write_all(line(2).as_bytes()).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let doc = Json::parse(resp.trim()).unwrap();
+    assert_eq!(doc.get("ok"), Some(&Json::Bool(false)), "{doc}");
+    assert_eq!(doc.get("code").unwrap().as_str(), Some("throttled"), "{doc}");
+    assert!(
+        doc.get("retry_after_ms").unwrap().as_f64().unwrap() >= 1.0,
+        "throttled must carry a positive retry hint: {doc}"
+    );
+    // re-drain the bucket *immediately* before the client attempt so the
+    // first attempt deterministically lands throttled regardless of how
+    // long the raw-wire section above took (the bucket refills in real
+    // time); then the client waits out the hint and converges
+    let mut id = 3;
+    loop {
+        stream.write_all(line(id).as_bytes()).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let doc = Json::parse(resp.trim()).unwrap();
+        if doc.get("code").and_then(|c| c.as_str()) == Some("throttled") {
+            break;
+        }
+        id += 1;
+        assert!(id < 64, "a 20k/s bucket must exhaust under tight-loop load");
+    }
+    let client = RetryClient::connect(&addr, Some("hog"), test_policy());
+    let v: Vec<f32> = (0..N).map(|i| i as f32).collect();
+    let result = client.call("transform", &v).expect("must converge after refill");
+    assert_eq!(result.as_arr().unwrap().len(), N);
+    assert!(
+        client.retries.load(Ordering::Relaxed) >= 1,
+        "the drained bucket must force at least one throttled retry"
+    );
+    let m = c.metrics();
+    let (_, lm) = &m[0];
+    assert!(lm.throttled.load(Ordering::Relaxed) >= 2);
+    drop(reader);
+    drop(stream);
+    server.shutdown();
+}
+
+#[test]
+fn net_faults_drain_under_load_gives_every_admitted_request_a_terminal_answer() {
+    // 4 requests against a 1-row/50ms lane, then drain with a deadline
+    // shorter than the remaining work: some complete, the rest get typed
+    // `deadline` answers at the cutoff — but every admitted request gets
+    // exactly one terminal reply, and nothing is silently dropped
+    let be = faulty("delay_ms:50");
+    let cfg = Config {
+        max_batch: 1,
+        ..base_config()
+    };
+    let c = Arc::new(Coordinator::start(cfg, be as Arc<dyn Backend>));
+    let opts = ServerOptions {
+        drain_deadline: Duration::from_millis(120),
+        ..Default::default()
+    };
+    let server = TcpServer::start_with(Arc::clone(&c), "127.0.0.1:0", opts).unwrap();
+    let addr = server.addr();
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        joins.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let vals: Vec<String> = (0..N).map(|i| format!("{}", (i + 1) as f32)).collect();
+            stream
+                .write_all(
+                    format!(
+                        "{{\"id\": {t}, \"op\": \"transform\", \"vector\": [{}]}}\n",
+                        vals.join(",")
+                    )
+                    .as_bytes(),
+                )
+                .unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            let doc = Json::parse(resp.trim()).expect("terminal reply parses");
+            match doc.get("ok") {
+                Some(&Json::Bool(true)) => "ok".to_string(),
+                Some(&Json::Bool(false)) => doc
+                    .get("code")
+                    .and_then(|c| c.as_str())
+                    .expect("failures carry a code")
+                    .to_string(),
+                other => panic!("reply without ok bool: {other:?}"),
+            }
+        }));
+    }
+    // let the requests land in the lane queue before draining
+    std::thread::sleep(Duration::from_millis(30));
+    let clean = server.shutdown_graceful();
+    let outcomes: Vec<String> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert_eq!(outcomes.len(), 4, "every admitted request answered");
+    let oks = outcomes.iter().filter(|o| *o == "ok").count();
+    let cut = outcomes.iter().filter(|o| *o == "deadline").count();
+    assert_eq!(
+        oks + cut,
+        4,
+        "outcomes are exactly ok or typed deadline: {outcomes:?}"
+    );
+    assert!(oks >= 1, "work in flight at drain start must complete: {outcomes:?}");
+    if cut > 0 {
+        assert!(!clean, "a cutoff means the drain deadline was hit");
+    }
+    // drain state is observable after the fact
+    assert!(c.is_draining());
+    assert_eq!(c.pending(), 0, "no job left behind after drain");
 }

@@ -14,7 +14,7 @@ Rules (keep in lockstep with xtask/src/main.rs — rule IDs match):
       token `unsafe` must have a `// SAFETY:` comment on the same line or
       within the 8 preceding lines; `unsafe` may only appear at all in the
       allowlisted modules (linalg::simd, runtime::pool, binary, transform,
-      kernels::features, coordinator::backend).
+      kernels::features, coordinator::backend, util::signal).
   R2  every atomic-memory `Ordering::` use (Relaxed/Acquire/Release/
       AcqRel/SeqCst — std::cmp::Ordering is not matched) must have a
       `// ORDERING:` comment within the same 8-line window. Exempt, per
@@ -53,6 +53,7 @@ UNSAFE_ALLOWLIST = (
     "transform/",
     "kernels/features.rs",
     "coordinator/backend.rs",
+    "util/signal.rs",
 )
 
 ATOMIC_ORDERING = re.compile(r"\bOrdering::(Relaxed|Acquire|Release|AcqRel|SeqCst)\b")

@@ -13,7 +13,8 @@
 //!   the token `unsafe` must have a `// SAFETY:` comment on the same line
 //!   or within the 8 preceding lines, and `unsafe` may only appear at all
 //!   in the allowlisted modules (`linalg::simd`, `runtime::pool`,
-//!   `binary`, `transform`, `kernels::features`, `coordinator::backend`).
+//!   `binary`, `transform`, `kernels::features`, `coordinator::backend`,
+//!   `util::signal`).
 //! * **R2** — every atomic-memory `Ordering::` use (`Relaxed`/`Acquire`/
 //!   `Release`/`AcqRel`/`SeqCst`; `std::cmp::Ordering` is not matched)
 //!   must have a `// ORDERING:` rationale within the same window. Exempt,
@@ -47,13 +48,14 @@ const WINDOW: usize = 8;
 
 /// Modules allowed to contain `unsafe` at all (paths relative to
 /// `rust/src`; a trailing `/` allowlists the whole directory).
-const UNSAFE_ALLOWLIST: [&str; 6] = [
+const UNSAFE_ALLOWLIST: [&str; 7] = [
     "linalg/simd.rs",
     "runtime/pool.rs",
     "binary/",
     "transform/",
     "kernels/features.rs",
     "coordinator/backend.rs",
+    "util/signal.rs",
 ];
 
 /// `pub fn`s in `linalg/simd.rs` that are dispatch introspection, not
