@@ -25,7 +25,11 @@
 //! `admission` sweep does the same for the overload-refusal paths: a
 //! granted call through an active token bucket vs a `throttled` refusal
 //! vs an `overloaded` shed — refusals must be far cheaper than serving,
-//! or shedding would not shed load.
+//! or shedding would not shed load. A `router_merge` sweep times the
+//! fleet tier's pure-CPU routing arithmetic (request keying + rendezvous
+//! ordering, and the scatter-gather top-k merge) so the per-query cost
+//! the `ShardRouter` adds on top of the network hops it hides stays
+//! measured.
 //!
 //! Writes `BENCH_transform_throughput.json` at the repo root to extend the
 //! perf trajectory. Set `TS_FULL=1` for the larger dims / row counts and
@@ -44,6 +48,8 @@ use triplespin::coordinator::{
 use triplespin::linalg::fft;
 use triplespin::linalg::simd;
 use triplespin::linalg::vecops::{dot, scale_by};
+use triplespin::router::merge_topk;
+use triplespin::router::topology::{rendezvous_order, request_key};
 use triplespin::runtime::{Op, WorkerPool};
 use triplespin::transform::{make_square, Family, SignDiag};
 use triplespin::util::bench;
@@ -587,6 +593,62 @@ fn main() {
             ("throttle_speedup", Json::Num(acc_b.mean_ns / thr_b.mean_ns)),
             ("shed_speedup", Json::Num(acc_b.mean_ns / shed_b.mean_ns)),
         ]));
+    }
+
+    // Router-merge sweep: the fleet tier's pure-CPU hot path, no sockets.
+    // `route` is what every request pays before a byte moves — hashing the
+    // (op, vector) key and rendezvous-ordering the shard groups; `merge`
+    // is the scatter-gather combine of S per-shard top-k lists. Both must
+    // stay trivially cheap next to a network hop, and this keeps them
+    // measured rather than assumed free.
+    println!("\n== router merge (rendezvous + scatter-gather top-k) ==\n");
+    {
+        let n = *dims.last().unwrap();
+        let k = 16usize;
+        let queries: Vec<Vec<f32>> = (0..64u64).map(|i| Rng::new(9000 + i).unit_vec(n)).collect();
+        for &shards in &[2usize, 4, 8] {
+            let names: Vec<String> = (0..shards).map(|i| format!("s{i}")).collect();
+            let route_b = bench::bench(&format!("route shards={shards}"), opts, || {
+                let mut acc = 0usize;
+                for q in &queries {
+                    acc += rendezvous_order(&names, request_key("lsh_query", q))[0];
+                }
+                std::hint::black_box(acc);
+            });
+            let mut rng = Rng::new(77);
+            let parts: Vec<Vec<(u32, u64)>> = (0..shards)
+                .map(|s| {
+                    let mut dists: Vec<u64> = (0..k)
+                        .map(|_| (rng.gaussian().abs() * 40.0) as u64)
+                        .collect();
+                    dists.sort_unstable();
+                    dists
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &d)| ((s * k + i) as u32, d))
+                        .collect()
+                })
+                .collect();
+            let merge_b = bench::bench(&format!("merge shards={shards}"), opts, || {
+                std::hint::black_box(merge_topk(&parts, k));
+            });
+            let route_ns = route_b.mean_ns / queries.len() as f64;
+            println!(
+                "router shards={shards:<2} route {:>10}/q  merge {:>10}  (n={n}, k={k})",
+                bench::fmt_ns(route_ns),
+                bench::fmt_ns(merge_b.mean_ns),
+            );
+            entries.push(Json::obj(vec![
+                ("kind", Json::Str("router_merge".into())),
+                ("family", Json::Str("fleet".into())),
+                ("n", Json::Num(n as f64)),
+                ("rows", Json::Num(shards as f64)),
+                ("shards", Json::Num(shards as f64)),
+                ("k", Json::Num(k as f64)),
+                ("route_ns", Json::Num(route_ns)),
+                ("merge_ns", Json::Num(merge_b.mean_ns)),
+            ]));
+        }
     }
 
     let doc = Json::obj(vec![

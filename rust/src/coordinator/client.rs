@@ -8,11 +8,15 @@
 //! codes that mean "the request was refused without being executed and
 //! a later attempt may succeed" — queue backpressure (`busy`), breaker
 //! and restart windows (`unavailable`, `lane_down`), overload refusals
-//! (`throttled`, `overloaded`) and shutdown (`draining`). Everything
-//! else is terminal on the first answer: caller mistakes
-//! (`bad_request`, `bad_dim`, `unknown_lane`) would fail identically
-//! forever, and executed-but-failed outcomes (`backend`, `panic`,
-//! `deadline`, `timeout`) are not refusals at all.
+//! (`throttled`, `overloaded`), shutdown (`draining`), and the fleet
+//! tier's replica-exhausted refusal (`shard_down`). Everything else is
+//! terminal on the first answer: caller mistakes (`bad_request`,
+//! `bad_dim`, `unknown_lane`) would fail identically forever, and
+//! executed-but-failed outcomes (`backend`, `panic`, `deadline`,
+//! `timeout`) are not refusals at all. `partial` is not an error code
+//! at all — it rides on `ok: true` answers as a success-with-flag
+//! degradation marker, so it is counted ([`RetryClient::partials`]) and
+//! surfaced via [`RetryClient::call_full`], never retried.
 //!
 //! Retrying after an **I/O error** (connection drop mid-request) is
 //! safe here even though the request may have executed: every op is a
@@ -41,13 +45,14 @@ use std::time::Duration;
 /// The closed set of wire codes a retry may fix. Kept in lockstep with
 /// the taxonomy by `wire_codes_round_trip_and_match_roadmap` (every
 /// member must carry a `retry_after_ms` hint server-side).
-pub const RETRYABLE_CODES: [&str; 6] = [
+pub const RETRYABLE_CODES: [&str; 7] = [
     "busy",
     "unavailable",
     "lane_down",
     "throttled",
     "overloaded",
     "draining",
+    "shard_down",
 ];
 
 /// Is `code` in [`RETRYABLE_CODES`]?
@@ -118,6 +123,8 @@ impl std::fmt::Display for ClientError {
 
 /// What one wire attempt produced.
 enum Attempt {
+    /// `ok: true` — carries the whole reply document (so partial markers
+    /// survive to the caller), with `result` presence already checked.
     Ok(Json),
     Coded {
         code: String,
@@ -149,6 +156,9 @@ pub struct RetryClient {
     pub retries: AtomicU64,
     /// Reconnects after an I/O error or server-closed connection.
     pub reconnects: AtomicU64,
+    /// Successful answers that carried the `partial` degradation marker
+    /// (fleet-tier scatter-gather with at least one shard missing).
+    pub partials: AtomicU64,
 }
 
 impl RetryClient {
@@ -169,6 +179,7 @@ impl RetryClient {
             attempts: AtomicU64::new(0),
             retries: AtomicU64::new(0),
             reconnects: AtomicU64::new(0),
+            partials: AtomicU64::new(0),
         }
     }
 
@@ -186,6 +197,25 @@ impl RetryClient {
         vector: &[f32],
         priority: u8,
     ) -> Result<Json, ClientError> {
+        self.call_full_priority(op, vector, priority)
+            .map(|doc| doc.get("result").cloned().unwrap_or(Json::Null))
+    }
+
+    /// One logical request returning the **whole reply document**, not
+    /// just `result` — callers that care about success-with-flag markers
+    /// (the fleet tier's `code: "partial"` + `degraded` shard list) read
+    /// them from here; [`RetryClient::call`] strips down to `result`.
+    pub fn call_full(&self, op: &str, vector: &[f32]) -> Result<Json, ClientError> {
+        self.call_full_priority(op, vector, super::admission::PRIORITY_NORMAL)
+    }
+
+    /// [`RetryClient::call_full`] with an explicit shedding priority.
+    pub fn call_full_priority(
+        &self,
+        op: &str,
+        vector: &[f32],
+        priority: u8,
+    ) -> Result<Json, ClientError> {
         let mut state = self.state.lock().unwrap_or_else(|p| p.into_inner());
         let mut attempt = 0u32;
         loop {
@@ -196,10 +226,17 @@ impl RetryClient {
                 self.retries.fetch_add(1, Ordering::Relaxed);
             }
             let (code, hint) = match self.try_once(&mut state, op, vector, priority) {
-                Attempt::Ok(result) => {
+                Attempt::Ok(doc) => {
                     state.budget =
                         (state.budget + self.policy.budget_per_success).min(self.policy.budget_max);
-                    return Ok(result);
+                    // a partial is a success on the wire (`ok: true`)
+                    // carrying a degradation marker — counted and
+                    // surfaced, never retried
+                    if doc.get("code").and_then(Json::as_str) == Some(super::codec::CODE_PARTIAL) {
+                        // ORDERING: Relaxed — observability counter only.
+                        self.partials.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(doc);
                 }
                 Attempt::Coded {
                     code,
@@ -310,7 +347,7 @@ impl RetryClient {
         }
         if doc.get("ok").and_then(Json::as_bool) == Some(true) {
             match doc.get("result") {
-                Some(r) => Attempt::Ok(r.clone()),
+                Some(_) => Attempt::Ok(doc),
                 None => Attempt::Io("ok reply without result".to_string()),
             }
         } else {
@@ -370,6 +407,12 @@ mod tests {
             SubmitError::Draining { retry_after_ms: 1 },
         ];
         for code in RETRYABLE_CODES {
+            if code == super::super::codec::CODE_SHARD_DOWN {
+                // fleet-tier refusal: born in the router, not a
+                // SubmitError — the codec pins its server-side hint
+                assert!(super::super::codec::SHARD_DOWN_RETRY_MS > 0);
+                continue;
+            }
             let e = submit
                 .iter()
                 .find(|e| e.code() == code)
@@ -378,6 +421,8 @@ mod tests {
         }
         assert!(!is_retryable(CODE_BAD_REQUEST));
         assert!(!is_retryable(CODE_TIMEOUT));
+        // partial is a success-with-flag marker, never a retryable refusal
+        assert!(!is_retryable(super::super::codec::CODE_PARTIAL));
         assert!(!is_retryable("bad_dim"));
         assert!(!is_retryable("unknown_lane"));
         assert!(!is_retryable("deadline"));

@@ -1,0 +1,522 @@
+//! Transport-agnostic request/response codec for the serving protocol.
+//!
+//! Everything about the newline-delimited JSON wire format that does not
+//! require a socket or a live [`super::Coordinator`] lives here: request
+//! parsing and validation ([`parse_line`]), response rendering
+//! ([`ok_response`] / [`err_response`] / [`err_response_with_hint`] /
+//! [`partial_response`]), the packed-word hex encoding
+//! ([`word_to_hex`] / [`hex_to_word`]), the LSH result pair encoding
+//! ([`lsh_ok_response`] / [`lsh_pairs`]), and the server-side wire codes.
+//! [`super::server`] (the connection core) and [`crate::router`] (the
+//! fleet tier) are both thin shells over this module, which is what lets
+//! the shard router relay and synthesize responses that are
+//! byte-compatible with a single server's.
+//!
+//! The split is covered by round-trip tests below that pin the rendered
+//! bytes of every op, every error code, hex `Bits` words, and
+//! `retry_after_ms` hints against golden pre-split strings — the carve-out
+//! is invisible on the wire.
+
+use super::admission;
+use crate::runtime::{Op, Output};
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Codec-level wire codes: failure modes born before a request reaches a
+/// coordinator (unparseable line, bad shape), after its typed answer was
+/// lost (response-channel timeout), or in the fleet tier (a required
+/// shard with every replica down, a scatter-gather answer missing some
+/// shards' contributions). Declared as named consts so `cargo xtask lint`
+/// (R4) and the wire-taxonomy round-trip test can enumerate them
+/// mechanically against ROADMAP's failure-model table, alongside the
+/// `RequestError`/`SubmitError` `code()` sets.
+pub const CODE_BAD_REQUEST: &str = "bad_request";
+pub const CODE_TIMEOUT: &str = "timeout";
+/// Router refusal: every replica of a shard the query needs is
+/// unreachable or refusing. Retryable — replicas restart and probes
+/// reopen the route — so it always ships with `retry_after_ms`.
+pub const CODE_SHARD_DOWN: &str = "shard_down";
+/// Success-with-flag marker on scatter-gather responses that are missing
+/// at least one shard's contribution: `ok` stays `true`, `code` is set to
+/// this, and a `degraded` array names the missing shards. Never retried
+/// by [`super::client::RetryClient`] (it is not a refusal).
+pub const CODE_PARTIAL: &str = "partial";
+
+/// Retry hint attached to `shard_down` refusals: shard restarts plus a
+/// probe round-trip are sub-second, so point clients a beat out.
+pub const SHARD_DOWN_RETRY_MS: u64 = 250;
+
+/// A validated compute request (the wire fields of a lane-bound line).
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Echoed verbatim in the response (`null` when absent).
+    pub id: Json,
+    pub op: Op,
+    /// Parsed `timeout_ms` (`None` when absent).
+    pub timeout: Option<Duration>,
+    /// Explicit `client_id` admission key (`None` = fall back to peer).
+    pub client_id: Option<String>,
+    pub priority: u8,
+    pub vector: Vec<f32>,
+}
+
+/// What one request line parsed to.
+pub enum ParsedLine {
+    /// A well-formed compute request bound for a lane.
+    Compute(Request),
+    /// Valid JSON whose `op` is not a lane op — introspection
+    /// (`metrics` / `health` / `metrics_text`), fleet ops (`lsh_query`),
+    /// or an unknown op the serving layer must refuse. `op` is `None`
+    /// when the field is absent or not a string.
+    Other {
+        id: Json,
+        op: Option<String>,
+        doc: Json,
+    },
+    /// Malformed line; carries the ready-to-send `bad_request` refusal.
+    Malformed(Json),
+}
+
+/// Parse + validate one request line (pure function, no I/O). Validation
+/// order and error strings are part of the wire contract (pinned by the
+/// round-trip tests): bad JSON, then per-field checks in `timeout_ms`,
+/// `client_id`, `priority`, `vector` order.
+pub fn parse_line(line: &str) -> ParsedLine {
+    let doc = match Json::parse(line) {
+        Ok(d) => d,
+        Err(e) => {
+            return ParsedLine::Malformed(err_response(
+                Json::Null,
+                &format!("bad json: {e}"),
+                CODE_BAD_REQUEST,
+            ))
+        }
+    };
+    let id = doc.get("id").cloned().unwrap_or(Json::Null);
+    let op_str = doc.get("op").and_then(|o| o.as_str());
+    let Some(op) = op_str.and_then(Op::parse) else {
+        let op = op_str.map(str::to_string);
+        return ParsedLine::Other { id, op, doc };
+    };
+    let timeout = match doc.get("timeout_ms") {
+        None => None,
+        Some(t) => match t.as_f64() {
+            Some(ms) if ms.is_finite() && ms >= 0.0 => Some(Duration::from_millis(ms as u64)),
+            _ => {
+                return ParsedLine::Malformed(err_response(
+                    id,
+                    "'timeout_ms' must be a non-negative number",
+                    CODE_BAD_REQUEST,
+                ))
+            }
+        },
+    };
+    // admission key: explicit client_id wins, else the caller's peer; a
+    // present-but-non-string client_id is a malformed request, not a
+    // silent fallback (same strictness as timeout_ms)
+    let client_id = match doc.get("client_id") {
+        None => None,
+        Some(c) => match c.as_str() {
+            Some(s) => Some(s.to_string()),
+            None => {
+                return ParsedLine::Malformed(err_response(
+                    id,
+                    "'client_id' must be a string",
+                    CODE_BAD_REQUEST,
+                ))
+            }
+        },
+    };
+    let priority = match doc.get("priority") {
+        None => admission::PRIORITY_NORMAL,
+        Some(p) => match p.as_f64() {
+            Some(v) if v.is_finite() && v >= 0.0 && v <= 255.0 && v.fract() == 0.0 => v as u8,
+            _ => {
+                return ParsedLine::Malformed(err_response(
+                    id,
+                    "'priority' must be an integer 0-255",
+                    CODE_BAD_REQUEST,
+                ))
+            }
+        },
+    };
+    let Some(vec_json) = doc.get("vector").and_then(|v| v.as_arr()) else {
+        return ParsedLine::Malformed(err_response(id, "missing 'vector' array", CODE_BAD_REQUEST));
+    };
+    let mut vector = Vec::with_capacity(vec_json.len());
+    for v in vec_json {
+        match v.as_f64() {
+            Some(f) => vector.push(f as f32),
+            None => {
+                return ParsedLine::Malformed(err_response(
+                    id,
+                    "'vector' must contain numbers",
+                    CODE_BAD_REQUEST,
+                ))
+            }
+        }
+    }
+    ParsedLine::Compute(Request {
+        id,
+        op,
+        timeout,
+        client_id,
+        priority,
+        vector,
+    })
+}
+
+/// Render a success response for a lane output. `transform`/`rff` results
+/// are f32 arrays, `crosspolytope` a one-element id array, and
+/// `binary_embed` ships each packed `u64` sign word as a fixed-width
+/// 16-digit lowercase hex string.
+pub fn ok_response(id: Json, out: Output) -> Json {
+    let result = match out {
+        Output::F32(v) => Json::Arr(v.into_iter().map(|x| Json::Num(x as f64)).collect()),
+        Output::I32(v) => Json::Arr(v.into_iter().map(|x| Json::Num(x as f64)).collect()),
+        // packed sign words as fixed-width hex: exact (a u64 does not
+        // round-trip through a JSON f64) and compact on the wire
+        Output::Bits(v) => Json::Arr(v.into_iter().map(|w| Json::Str(word_to_hex(w))).collect()),
+    };
+    ok_response_json(id, result)
+}
+
+/// Success response around an already-rendered `result` value.
+pub fn ok_response_json(id: Json, result: Json) -> Json {
+    Json::obj(vec![("id", id), ("ok", Json::Bool(true)), ("result", result)])
+}
+
+/// Partial-success response: `ok` stays `true` (there *is* a result), but
+/// `code` is [`CODE_PARTIAL`] and `degraded` names the shards whose
+/// contribution is missing — degradation is always marked, never silent.
+pub fn partial_response(id: Json, result: Json, degraded: Vec<String>) -> Json {
+    Json::obj(vec![
+        ("id", id),
+        ("ok", Json::Bool(true)),
+        ("result", result),
+        ("code", Json::Str(CODE_PARTIAL.to_string())),
+        (
+            "degraded",
+            Json::Arr(degraded.into_iter().map(Json::Str).collect()),
+        ),
+    ])
+}
+
+/// One packed word as 16 lowercase hex digits (most significant first).
+pub fn word_to_hex(w: u64) -> String {
+    format!("{w:016x}")
+}
+
+/// Parse a response-side hex word (the client-side decoder; also used by
+/// the serving smoke test). Strict: exactly 16 hex digits — no sign
+/// prefix (`from_str_radix` alone would accept `+` + 15 digits).
+pub fn hex_to_word(s: &str) -> Option<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Render `lsh_query` result pairs as a flat interleaved number array
+/// `[id0, dist0, id1, dist1, ...]` — ids are global point ids, distances
+/// Hamming distances (both exact in a JSON f64: ids are u32, distances at
+/// most the code width).
+pub fn lsh_ok_response(id: Json, pairs: &[(u32, u64)]) -> Json {
+    ok_response_json(id, lsh_result(pairs))
+}
+
+/// Just the flat pair array (the router's partial-result path wraps it in
+/// a [`partial_response`] instead of a plain success).
+pub fn lsh_result(pairs: &[(u32, u64)]) -> Json {
+    let mut flat = Vec::with_capacity(pairs.len() * 2);
+    for (pid, d) in pairs {
+        flat.push(Json::Num(*pid as f64));
+        flat.push(Json::Num(*d as f64));
+    }
+    Json::Arr(flat)
+}
+
+/// Decode an `lsh_query` result array back to `(id, distance)` pairs —
+/// the router's scatter-gather merge and any client-side consumer share
+/// this. `None` when the value is not a well-formed flat pair array.
+pub fn lsh_pairs(result: &Json) -> Option<Vec<(u32, u64)>> {
+    let flat = result.as_arr()?;
+    if flat.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(flat.len() / 2);
+    for pair in flat.chunks(2) {
+        let id = pair[0].as_f64()?;
+        let d = pair[1].as_f64()?;
+        if id < 0.0 || id.fract() != 0.0 || d < 0.0 || d.fract() != 0.0 {
+            return None;
+        }
+        out.push((id as u32, d as u64));
+    }
+    Some(out)
+}
+
+/// Error response without a retry hint.
+pub fn err_response(id: Json, msg: &str, code: &str) -> Json {
+    err_response_with_hint(id, msg, code, None)
+}
+
+/// Error response that attaches `retry_after_ms` when the taxonomy marks
+/// the code retryable — the server-side half of the retry-client
+/// contract (clients treat a missing hint as "do not bother retrying").
+pub fn err_response_with_hint(id: Json, msg: &str, code: &str, retry_after_ms: Option<u64>) -> Json {
+    let mut fields = vec![
+        ("id", id),
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+        ("code", Json::Str(code.to_string())),
+    ];
+    if let Some(ms) = retry_after_ms {
+        fields.push(("retry_after_ms", Json::Num(ms as f64)));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{RequestError, SubmitError};
+
+    // ---- byte-identical round trips against the pre-split wire format ----
+    //
+    // The golden strings below are the exact lines the pre-split
+    // `server.rs` emitted (Json::Obj is a BTreeMap, so key order is
+    // stable alphabetical). If the codec carve-out changed a single byte
+    // of the protocol, these pins would catch it.
+
+    #[test]
+    fn ok_responses_render_byte_identically_per_output_kind() {
+        let f = ok_response(Json::Num(7.0), Output::F32(vec![1.0, -0.5]));
+        assert_eq!(f.to_string(), r#"{"id":7,"ok":true,"result":[1,-0.5]}"#);
+        let i = ok_response(Json::Num(8.0), Output::I32(vec![42]));
+        assert_eq!(i.to_string(), r#"{"id":8,"ok":true,"result":[42]}"#);
+        let b = ok_response(
+            Json::Num(9.0),
+            Output::Bits(vec![0xdead_beef_0123_4567, 1, u64::MAX]),
+        );
+        assert_eq!(
+            b.to_string(),
+            r#"{"id":9,"ok":true,"result":["deadbeef01234567","0000000000000001","ffffffffffffffff"]}"#
+        );
+        // id is echoed verbatim, whatever JSON value the client sent
+        let s = ok_response(Json::Str("abc".into()), Output::I32(vec![0]));
+        assert_eq!(s.to_string(), r#"{"id":"abc","ok":true,"result":[0]}"#);
+    }
+
+    #[test]
+    fn every_error_code_renders_byte_identically() {
+        // refusals: every SubmitError, with its hint exactly when the
+        // taxonomy marks it retryable (the pre-split behavior of
+        // err_response_with_hint(e.to_string(), e.code(), e.retry_after_ms()))
+        let submit = [
+            SubmitError::Busy,
+            SubmitError::UnknownLane,
+            SubmitError::BadDim,
+            SubmitError::Closed,
+            SubmitError::LaneDown,
+            SubmitError::Unavailable,
+            SubmitError::Throttled { retry_after_ms: 7 },
+            SubmitError::Overloaded { retry_after_ms: 9 },
+            SubmitError::Draining { retry_after_ms: 500 },
+        ];
+        let golden = [
+            r#"{"code":"busy","error":"lane queue full","id":1,"ok":false,"retry_after_ms":25}"#,
+            r#"{"code":"unknown_lane","error":"no lane for (op, dim)","id":1,"ok":false}"#,
+            r#"{"code":"bad_dim","error":"input dim mismatch","id":1,"ok":false}"#,
+            r#"{"code":"closed","error":"coordinator closed","id":1,"ok":false}"#,
+            r#"{"code":"lane_down","error":"lane down (restarting)","id":1,"ok":false,"retry_after_ms":100}"#,
+            r#"{"code":"unavailable","error":"lane unavailable (circuit open)","id":1,"ok":false,"retry_after_ms":100}"#,
+            r#"{"code":"throttled","error":"client work budget exhausted","id":1,"ok":false,"retry_after_ms":7}"#,
+            r#"{"code":"overloaded","error":"lane overloaded (shedding)","id":1,"ok":false,"retry_after_ms":9}"#,
+            r#"{"code":"draining","error":"server draining for shutdown","id":1,"ok":false,"retry_after_ms":500}"#,
+        ];
+        for (e, want) in submit.iter().zip(golden) {
+            let r = err_response_with_hint(
+                Json::Num(1.0),
+                &e.to_string(),
+                e.code(),
+                e.retry_after_ms(),
+            );
+            assert_eq!(r.to_string(), want, "{e:?}");
+        }
+        // terminal request errors: no hint, ever
+        let request = [
+            RequestError::Deadline,
+            RequestError::Panic("boom".into()),
+            RequestError::Backend("injected failure".into()),
+        ];
+        let golden = [
+            r#"{"code":"deadline","error":"deadline exceeded","id":2,"ok":false}"#,
+            r#"{"code":"panic","error":"backend panicked: boom","id":2,"ok":false}"#,
+            r#"{"code":"backend","error":"injected failure","id":2,"ok":false}"#,
+        ];
+        for (e, want) in request.iter().zip(golden) {
+            let r = err_response(Json::Num(2.0), &e.to_string(), e.code());
+            assert_eq!(r.to_string(), want, "{e:?}");
+        }
+        // server/codec-side codes
+        let r = err_response(Json::Null, "bad json: oops", CODE_BAD_REQUEST);
+        assert_eq!(
+            r.to_string(),
+            r#"{"code":"bad_request","error":"bad json: oops","id":null,"ok":false}"#
+        );
+        let r = err_response(Json::Num(3.0), "response timed out", CODE_TIMEOUT);
+        assert_eq!(
+            r.to_string(),
+            r#"{"code":"timeout","error":"response timed out","id":3,"ok":false}"#
+        );
+        let r = err_response_with_hint(
+            Json::Num(4.0),
+            "all replicas of shard s1 unreachable",
+            CODE_SHARD_DOWN,
+            Some(SHARD_DOWN_RETRY_MS),
+        );
+        assert_eq!(
+            r.to_string(),
+            r#"{"code":"shard_down","error":"all replicas of shard s1 unreachable","id":4,"ok":false,"retry_after_ms":250}"#
+        );
+    }
+
+    #[test]
+    fn partial_responses_are_marked_never_silent() {
+        let r = partial_response(
+            Json::Num(5.0),
+            Json::Arr(vec![Json::Num(3.0), Json::Num(1.0)]),
+            vec!["s2".into()],
+        );
+        assert_eq!(
+            r.to_string(),
+            r#"{"code":"partial","degraded":["s2"],"id":5,"ok":true,"result":[3,1]}"#
+        );
+        // a partial is a success on the wire: ok stays true
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("code").unwrap().as_str(), Some(CODE_PARTIAL));
+    }
+
+    #[test]
+    fn hex_word_round_trip() {
+        for w in [0u64, 1, 0xdead_beef_0123_4567, u64::MAX] {
+            assert_eq!(hex_to_word(&word_to_hex(w)), Some(w));
+        }
+        assert_eq!(hex_to_word("xyz"), None);
+        assert_eq!(hex_to_word("00"), None);
+        // sign prefixes are 16 chars but not 16 hex digits
+        assert_eq!(hex_to_word("+00000000000000f"), None);
+        assert_eq!(hex_to_word("-00000000000000f"), None);
+    }
+
+    #[test]
+    fn lsh_pairs_round_trip() {
+        let pairs = vec![(0u32, 0u64), (917, 3), (u32::MAX, 4096)];
+        let resp = lsh_ok_response(Json::Num(6.0), &pairs);
+        assert_eq!(
+            resp.to_string(),
+            r#"{"id":6,"ok":true,"result":[0,0,917,3,4294967295,4096]}"#
+        );
+        assert_eq!(lsh_pairs(resp.get("result").unwrap()), Some(pairs));
+        // malformed shapes are rejected, not mis-decoded
+        assert_eq!(lsh_pairs(&Json::Arr(vec![Json::Num(1.0)])), None, "odd length");
+        assert_eq!(
+            lsh_pairs(&Json::Arr(vec![Json::Num(-1.0), Json::Num(0.0)])),
+            None,
+            "negative id"
+        );
+        assert_eq!(
+            lsh_pairs(&Json::Arr(vec![Json::Num(1.5), Json::Num(0.0)])),
+            None,
+            "fractional id"
+        );
+        assert_eq!(lsh_pairs(&Json::Str("nope".into())), None);
+    }
+
+    #[test]
+    fn parse_line_validates_every_op_and_every_field() {
+        // every lane op parses to a Compute with the right fields
+        for (op_str, op) in [
+            ("transform", Op::Transform),
+            ("rff", Op::Rff),
+            ("crosspolytope", Op::CrossPolytope),
+            ("binary_embed", Op::BinaryEmbed),
+        ] {
+            let line = format!(
+                r#"{{"id":1,"op":"{op_str}","vector":[0.5,-1],"timeout_ms":50,"client_id":"c","priority":2}}"#
+            );
+            match parse_line(&line) {
+                ParsedLine::Compute(req) => {
+                    assert_eq!(req.op, op);
+                    assert_eq!(req.vector, vec![0.5, -1.0]);
+                    assert_eq!(req.timeout, Some(Duration::from_millis(50)));
+                    assert_eq!(req.client_id.as_deref(), Some("c"));
+                    assert_eq!(req.priority, 2);
+                }
+                _ => panic!("'{op_str}' must parse as a compute request"),
+            }
+        }
+        // defaults: no timeout, peer-fallback client, normal priority
+        match parse_line(r#"{"op":"transform","vector":[1]}"#) {
+            ParsedLine::Compute(req) => {
+                assert_eq!(req.id, Json::Null);
+                assert_eq!(req.timeout, None);
+                assert_eq!(req.client_id, None);
+                assert_eq!(req.priority, admission::PRIORITY_NORMAL);
+            }
+            _ => panic!("minimal request must parse"),
+        }
+        // non-lane ops fall through to Other with the id preserved
+        match parse_line(r#"{"id":9,"op":"metrics"}"#) {
+            ParsedLine::Other { id, op, .. } => {
+                assert_eq!(id.as_f64(), Some(9.0));
+                assert_eq!(op.as_deref(), Some("metrics"));
+            }
+            _ => panic!("introspection ops are Other"),
+        }
+        // missing / non-string op: Other with op None
+        match parse_line(r#"{"id":10,"vector":[1]}"#) {
+            ParsedLine::Other { op, .. } => assert_eq!(op, None),
+            _ => panic!("missing op is Other"),
+        }
+        // field validation refusals, byte-identical with the pre-split
+        // server's messages
+        let cases = [
+            (
+                r#"{"id":5,"op":"transform","vector":[1],"timeout_ms":-3}"#,
+                r#"{"code":"bad_request","error":"'timeout_ms' must be a non-negative number","id":5,"ok":false}"#,
+            ),
+            (
+                r#"{"id":7,"op":"transform","vector":[1],"client_id":9}"#,
+                r#"{"code":"bad_request","error":"'client_id' must be a string","id":7,"ok":false}"#,
+            ),
+            (
+                r#"{"id":8,"op":"transform","vector":[1],"priority":1.5}"#,
+                r#"{"code":"bad_request","error":"'priority' must be an integer 0-255","id":8,"ok":false}"#,
+            ),
+            (
+                r#"{"id":3,"op":"transform"}"#,
+                r#"{"code":"bad_request","error":"missing 'vector' array","id":3,"ok":false}"#,
+            ),
+            (
+                r#"{"id":4,"op":"transform","vector":["x"]}"#,
+                r#"{"code":"bad_request","error":"'vector' must contain numbers","id":4,"ok":false}"#,
+            ),
+        ];
+        for (line, want) in cases {
+            match parse_line(line) {
+                ParsedLine::Malformed(reply) => assert_eq!(reply.to_string(), want, "{line}"),
+                _ => panic!("{line} must be Malformed"),
+            }
+        }
+        // unparseable JSON: id null refusal
+        match parse_line("{nope") {
+            ParsedLine::Malformed(reply) => {
+                assert_eq!(reply.get("code").unwrap().as_str(), Some(CODE_BAD_REQUEST));
+                assert_eq!(reply.get("id"), Some(&Json::Null));
+            }
+            _ => panic!("bad json must be Malformed"),
+        }
+    }
+}

@@ -20,9 +20,15 @@
 //! The same plan also carries **transport** faults, applied not by this
 //! wrapper but by [`super::TcpServer`] at the socket layer:
 //! `conn_drop:p` (drop the connection instead of writing a reply),
-//! `slow_read_ms:d` (stall before processing each request line), and
+//! `slow_read_ms:d` (stall before processing each request line),
 //! `partial_write:p` (truncate a reply mid-line and drop the
-//! connection). [`FaultPlan::has_backend_faults`] /
+//! connection), and the deterministic shard-kill window
+//! `down_after_ms:t` / `down_for_ms:d` (from `t` after server start the
+//! whole server plays dead — new connections dropped byteless, open ones
+//! killed without a reply — for `d` ms; `down_for_ms` absent or `0`
+//! means it never comes back). The window is what lets the chaos suite
+//! kill one shard of a fleet mid-load and watch the router degrade and
+//! recover on schedule. [`FaultPlan::has_backend_faults`] /
 //! [`FaultPlan::has_net_faults`] split the two halves.
 //!
 //! Determinism: the decision stream is a pure function of the plan — one
@@ -57,6 +63,11 @@ pub struct FaultPlan {
     /// Probability a reply is truncated mid-line and the connection
     /// dropped (transport fault).
     pub partial_write_p: f64,
+    /// Shard-kill window start: this long after server start, the server
+    /// plays dead (transport fault; `None` = never).
+    pub down_after: Option<Duration>,
+    /// Shard-kill window length; `ZERO` = down forever once it starts.
+    pub down_for: Duration,
     /// Seed for the decision stream.
     pub seed: u64,
 }
@@ -70,6 +81,8 @@ impl Default for FaultPlan {
             conn_drop_p: 0.0,
             slow_read: Duration::ZERO,
             partial_write_p: 0.0,
+            down_after: None,
+            down_for: Duration::ZERO,
             seed: 0x5EED,
         }
     }
@@ -117,6 +130,18 @@ impl FaultPlan {
                     plan.slow_read = Duration::from_millis(ms);
                 }
                 "partial_write" => plan.partial_write_p = parse_prob("partial_write", v)?,
+                "down_after_ms" => {
+                    let ms: u64 = v.trim().parse().map_err(|_| {
+                        format!("TS_FAULT: 'down_after_ms:{v}' is not an integer")
+                    })?;
+                    plan.down_after = Some(Duration::from_millis(ms));
+                }
+                "down_for_ms" => {
+                    let ms: u64 = v.trim().parse().map_err(|_| {
+                        format!("TS_FAULT: 'down_for_ms:{v}' is not an integer")
+                    })?;
+                    plan.down_for = Duration::from_millis(ms);
+                }
                 "seed" => {
                     plan.seed = v
                         .trim()
@@ -126,10 +151,15 @@ impl FaultPlan {
                 other => {
                     return Err(format!(
                         "TS_FAULT: unknown key '{other}' (expected panic|err|delay_ms|\
-                         conn_drop|slow_read_ms|partial_write|seed)"
+                         conn_drop|slow_read_ms|partial_write|down_after_ms|down_for_ms|seed)"
                     ))
                 }
             }
+        }
+        if plan.down_after.is_none() && !plan.down_for.is_zero() {
+            return Err(
+                "TS_FAULT: 'down_for_ms' needs 'down_after_ms' to anchor the window".to_string(),
+            );
         }
         Ok(plan)
     }
@@ -155,7 +185,10 @@ impl FaultPlan {
 
     /// Any transport-layer fault set (what `TcpServer` applies)?
     pub fn has_net_faults(&self) -> bool {
-        self.conn_drop_p > 0.0 || self.partial_write_p > 0.0 || !self.slow_read.is_zero()
+        self.conn_drop_p > 0.0
+            || self.partial_write_p > 0.0
+            || !self.slow_read.is_zero()
+            || self.down_after.is_some()
     }
 }
 
@@ -272,6 +305,24 @@ mod tests {
         assert!(FaultPlan::parse("conn_drop:2").is_err(), "prob out of range");
         assert!(FaultPlan::parse("slow_read_ms:x").is_err(), "not an integer");
         assert!(FaultPlan::parse("partial_write:-1").is_err(), "negative prob");
+        assert!(FaultPlan::parse("down_after_ms:1.5").is_err(), "fractional ms");
+        assert!(
+            FaultPlan::parse("down_for_ms:100").is_err(),
+            "a window length without a start is a typo, not a plan"
+        );
+    }
+
+    #[test]
+    fn shard_kill_window_parses_as_a_net_fault() {
+        let p = FaultPlan::parse("down_after_ms:50,down_for_ms:200").unwrap();
+        assert_eq!(p.down_after, Some(Duration::from_millis(50)));
+        assert_eq!(p.down_for, Duration::from_millis(200));
+        assert!(p.has_net_faults() && !p.has_backend_faults());
+        assert!(!p.is_noop());
+        // down_for absent = the shard never comes back
+        let forever = FaultPlan::parse("down_after_ms:10").unwrap();
+        assert_eq!(forever.down_for, Duration::ZERO);
+        assert!(forever.has_net_faults());
     }
 
     #[test]

@@ -74,8 +74,10 @@ pub mod admission;
 pub mod backend;
 pub mod breaker;
 pub mod client;
+pub mod codec;
 pub mod fault;
 pub mod metrics;
+pub mod prom;
 pub mod server;
 
 pub use admission::{AdmissionControl, OverloadShedder};
@@ -84,7 +86,7 @@ pub use breaker::{LaneState, Phase};
 pub use client::{ClientError, RetryClient, RetryPolicy};
 pub use fault::{FaultInjectingBackend, FaultPlan};
 pub use metrics::LaneMetrics;
-pub use server::{ServerOptions, TcpServer};
+pub use server::{CoordinatorService, LineService, ServerOptions, TcpServer};
 
 use crate::runtime::{Op, Output};
 use crate::util::panic_message;
@@ -972,6 +974,13 @@ mod tests {
         codes.extend(submit.iter().map(SubmitError::code));
         codes.push(server::CODE_BAD_REQUEST);
         codes.push(server::CODE_TIMEOUT);
+        codes.push(codec::CODE_SHARD_DOWN);
+        codes.push(codec::CODE_PARTIAL);
+        // fleet-tier contract: shard_down is a retryable refusal (and the
+        // codec pins its hint); partial is a success-with-flag marker, so
+        // the retry client must never treat it as retryable
+        assert!(client::RETRYABLE_CODES.contains(&codec::CODE_SHARD_DOWN));
+        assert!(!client::RETRYABLE_CODES.contains(&codec::CODE_PARTIAL));
         let unique: std::collections::BTreeSet<&str> = codes.iter().copied().collect();
         assert_eq!(unique.len(), codes.len(), "duplicate wire codes: {codes:?}");
         // exact set equality against ROADMAP.md's failure-model table —

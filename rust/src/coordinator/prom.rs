@@ -1,0 +1,355 @@
+//! Prometheus-style text exposition for serving metrics.
+//!
+//! Renders the coordinator's per-lane counters ([`crate::coordinator::
+//! LaneMetrics`] via `metrics_json()`) and the router's fleet counters in
+//! the standard `# TYPE`/`name{label="v"} value` text format, served over
+//! the wire as the `metrics_text` op (the payload is one JSON string —
+//! the codec's escaping keeps the multi-line exposition intact).
+//!
+//! The module carries its own [`parse`] so the format is round-trip
+//! tested: anything [`render`] emits parses back to the same families,
+//! which is what keeps the exposition grammatically valid for real
+//! scrapers without taking a dependency on one.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One labeled measurement within a family.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    /// Label pairs in render order (e.g. `[("lane", "transform_n64")]`).
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// One metric family: a `# TYPE` header plus its samples.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Family {
+    pub name: String,
+    /// `"counter"` or `"gauge"`.
+    pub kind: String,
+    pub samples: Vec<Sample>,
+}
+
+/// Format a value the way the JSON layer does: integers render without a
+/// fractional part, so counters stay clean and the text round-trips.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render families in the Prometheus text exposition format.
+pub fn render(families: &[Family]) -> String {
+    let mut out = String::new();
+    for f in families {
+        let _ = writeln!(out, "# TYPE {} {}", f.name, f.kind);
+        for s in &f.samples {
+            if s.labels.is_empty() {
+                let _ = writeln!(out, "{} {}", f.name, fmt_value(s.value));
+            } else {
+                let labels: Vec<String> = s
+                    .labels
+                    .iter()
+                    .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+                    .collect();
+                let _ = writeln!(out, "{}{{{}}} {}", f.name, labels.join(","), fmt_value(s.value));
+            }
+        }
+    }
+    out
+}
+
+/// Parse a text exposition back into families (the round-trip half; also
+/// usable against any scraper-compatible source). Strict about what
+/// [`render`] emits: every sample line must follow a `# TYPE` header for
+/// its family, label values must be quoted, values must parse as f64.
+pub fn parse(text: &str) -> Result<Vec<Family>, String> {
+    let mut families: Vec<Family> = Vec::new();
+    let mut index: BTreeMap<String, usize> = BTreeMap::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest
+                .split_once(' ')
+                .ok_or_else(|| format!("line {}: malformed TYPE header", ln + 1))?;
+            if kind != "counter" && kind != "gauge" {
+                return Err(format!("line {}: unknown metric kind '{kind}'", ln + 1));
+            }
+            if index.contains_key(name) {
+                return Err(format!("line {}: duplicate family '{name}'", ln + 1));
+            }
+            index.insert(name.to_string(), families.len());
+            families.push(Family {
+                name: name.to_string(),
+                kind: kind.to_string(),
+                samples: Vec::new(),
+            });
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // other comments (e.g. HELP) are legal noise
+        }
+        let (name, labels, value_str) = split_sample(line, ln + 1)?;
+        let value: f64 = value_str
+            .trim()
+            .parse()
+            .map_err(|_| format!("line {}: bad value '{value_str}'", ln + 1))?;
+        let fi = *index
+            .get(&name)
+            .ok_or_else(|| format!("line {}: sample before TYPE for '{name}'", ln + 1))?;
+        families[fi].samples.push(Sample { labels, value });
+    }
+    Ok(families)
+}
+
+/// Split one sample line into (name, labels, value text).
+#[allow(clippy::type_complexity)]
+fn split_sample(line: &str, ln: usize) -> Result<(String, Vec<(String, String)>, String), String> {
+    let Some(brace) = line.find('{') else {
+        // unlabeled: "name value"
+        let (name, value) = line
+            .split_once(' ')
+            .ok_or_else(|| format!("line {ln}: malformed sample"))?;
+        return Ok((name.to_string(), Vec::new(), value.to_string()));
+    };
+    let name = line[..brace].to_string();
+    let mut labels = Vec::new();
+    let chars: Vec<char> = line.chars().collect();
+    let mut i = brace + 1;
+    loop {
+        if i >= chars.len() {
+            return Err(format!("line {ln}: unterminated label block"));
+        }
+        if chars[i] == '}' {
+            i += 1;
+            break;
+        }
+        let key_start = i;
+        while i < chars.len() && chars[i] != '=' {
+            i += 1;
+        }
+        let key: String = chars[key_start..i].iter().collect();
+        i += 1; // past '='
+        if i >= chars.len() || chars[i] != '"' {
+            return Err(format!("line {ln}: unquoted label value for '{key}'"));
+        }
+        i += 1; // past opening quote
+        let mut value = String::new();
+        while i < chars.len() && chars[i] != '"' {
+            if chars[i] == '\\' && i + 1 < chars.len() {
+                i += 1;
+                match chars[i] {
+                    'n' => value.push('\n'),
+                    c => value.push(c),
+                }
+            } else {
+                value.push(chars[i]);
+            }
+            i += 1;
+        }
+        if i >= chars.len() {
+            return Err(format!("line {ln}: unterminated label value"));
+        }
+        i += 1; // past closing quote
+        labels.push((key, value));
+        if i < chars.len() && chars[i] == ',' {
+            i += 1;
+        }
+    }
+    let value: String = chars[i..].iter().collect();
+    Ok((name, labels, value))
+}
+
+/// Is this per-lane metric key a point-in-time gauge (vs a monotonic
+/// counter)? Latency summaries, means, and in-flight depth move both ways.
+fn is_gauge_key(key: &str) -> bool {
+    key.starts_with("latency_") || key.starts_with("mean_") || key == "in_flight"
+}
+
+/// Convert a coordinator `metrics_json()` document into exposition
+/// families: every per-lane numeric metric becomes `ts_lane_<key>{lane=
+/// "<op>_n<dim>"}`, and the optional admission block becomes
+/// `ts_admission_<key>` (process-wide, unlabeled). Generic over the keys
+/// so new `LaneMetrics` counters show up without touching this module.
+pub fn coordinator_families(metrics: &Json) -> Vec<Family> {
+    let mut acc: BTreeMap<String, Family> = BTreeMap::new();
+    let Some(top) = metrics.as_obj() else {
+        return Vec::new();
+    };
+    for (lane, doc) in top {
+        let Some(fields) = doc.as_obj() else { continue };
+        for (key, value) in fields {
+            let Some(v) = value.as_f64() else { continue };
+            let (name, labels) = if lane == "admission" {
+                (format!("ts_admission_{key}"), Vec::new())
+            } else {
+                (
+                    format!("ts_lane_{key}"),
+                    vec![("lane".to_string(), lane.clone())],
+                )
+            };
+            let kind = if is_gauge_key(key) { "gauge" } else { "counter" };
+            let fam = acc.entry(name.clone()).or_insert_with(|| Family {
+                name,
+                kind: kind.to_string(),
+                samples: Vec::new(),
+            });
+            fam.samples.push(Sample { labels, value: v });
+        }
+    }
+    acc.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Vec<Family> {
+        vec![
+            Family {
+                name: "ts_lane_completed".into(),
+                kind: "counter".into(),
+                samples: vec![
+                    Sample {
+                        labels: vec![("lane".into(), "transform_n64".into())],
+                        value: 41.0,
+                    },
+                    Sample {
+                        labels: vec![("lane".into(), "binary_embed_n64".into())],
+                        value: 7.0,
+                    },
+                ],
+            },
+            Family {
+                name: "ts_lane_latency_p95_us".into(),
+                kind: "gauge".into(),
+                samples: vec![Sample {
+                    labels: vec![("lane".into(), "transform_n64".into())],
+                    value: 812.5,
+                }],
+            },
+            Family {
+                name: "ts_router_queries".into(),
+                kind: "counter".into(),
+                samples: vec![Sample {
+                    labels: vec![],
+                    value: 3.0,
+                }],
+            },
+        ]
+    }
+
+    #[test]
+    fn render_emits_type_headers_and_labeled_samples() {
+        let text = render(&demo());
+        let want = "# TYPE ts_lane_completed counter\n\
+                    ts_lane_completed{lane=\"transform_n64\"} 41\n\
+                    ts_lane_completed{lane=\"binary_embed_n64\"} 7\n\
+                    # TYPE ts_lane_latency_p95_us gauge\n\
+                    ts_lane_latency_p95_us{lane=\"transform_n64\"} 812.5\n\
+                    # TYPE ts_router_queries counter\n\
+                    ts_router_queries 3\n";
+        assert_eq!(text, want);
+    }
+
+    #[test]
+    fn format_round_trips() {
+        let families = demo();
+        let text = render(&families);
+        let parsed = parse(&text).expect("rendered text must parse");
+        assert_eq!(parsed, families);
+        // and render is a fixed point of parse ∘ render
+        assert_eq!(render(&parsed), text);
+    }
+
+    #[test]
+    fn label_escaping_round_trips() {
+        let families = vec![Family {
+            name: "ts_shard_up".into(),
+            kind: "gauge".into(),
+            samples: vec![Sample {
+                labels: vec![
+                    ("shard".into(), "s\"quote\\slash\nline".into()),
+                    ("addr".into(), "127.0.0.1:9".into()),
+                ],
+                value: 1.0,
+            }],
+        }];
+        let text = render(&families);
+        assert_eq!(parse(&text).unwrap(), families);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_expositions() {
+        assert!(parse("# TYPE broken\n").is_err(), "headerless kind");
+        assert!(parse("# TYPE m histogram\nm 1\n").is_err(), "unknown kind");
+        assert!(parse("orphan 3\n").is_err(), "sample before TYPE");
+        assert!(
+            parse("# TYPE m counter\nm{x=\"unterminated} 1\n").is_err(),
+            "unterminated label"
+        );
+        assert!(parse("# TYPE m counter\nm nope\n").is_err(), "bad value");
+        assert!(
+            parse("# TYPE m counter\n# TYPE m counter\n").is_err(),
+            "duplicate family"
+        );
+        // HELP comments and blank lines are tolerated noise
+        let ok = parse("# HELP m something\n\n# TYPE m counter\nm 1\n").unwrap();
+        assert_eq!(ok.len(), 1);
+    }
+
+    #[test]
+    fn coordinator_families_map_lanes_and_admission() {
+        let metrics = Json::obj(vec![
+            (
+                "transform_n64",
+                Json::obj(vec![
+                    ("completed", Json::Num(5.0)),
+                    ("latency_p95_us", Json::Num(120.0)),
+                    ("in_flight", Json::Num(1.0)),
+                ]),
+            ),
+            (
+                "admission",
+                Json::obj(vec![("tokens", Json::Num(9.5))]),
+            ),
+        ]);
+        let fams = coordinator_families(&metrics);
+        let by_name: BTreeMap<&str, &Family> =
+            fams.iter().map(|f| (f.name.as_str(), f)).collect();
+        let completed = by_name["ts_lane_completed"];
+        assert_eq!(completed.kind, "counter");
+        assert_eq!(
+            completed.samples[0].labels,
+            vec![("lane".to_string(), "transform_n64".to_string())]
+        );
+        assert_eq!(by_name["ts_lane_latency_p95_us"].kind, "gauge");
+        assert_eq!(by_name["ts_lane_in_flight"].kind, "gauge");
+        let adm = by_name["ts_admission_tokens"];
+        assert!(adm.samples[0].labels.is_empty());
+        assert_eq!(adm.samples[0].value, 9.5);
+        // the whole thing renders and round-trips
+        let text = render(&fams);
+        assert_eq!(parse(&text).unwrap(), fams);
+    }
+}

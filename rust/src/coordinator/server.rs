@@ -8,7 +8,7 @@
 //! -> {"id": 8, "op": "binary_embed", "vector": [0.1, -0.3, ...], "timeout_ms": 50}
 //! <- {"id": 8, "ok": true, "result": ["a3ff00125e9c7b01", ...]}
 //! <- {"id": 8, "ok": false, "error": "lane queue full", "code": "busy"}
-//! -> {"id": 9, "op": "metrics"}            (also: "health")
+//! -> {"id": 9, "op": "metrics"}            (also: "health", "metrics_text")
 //! <- {"id": 9, "ok": true, "result": { per-lane counters / states }}
 //! ```
 //!
@@ -25,6 +25,18 @@
 //! for malformed lines. An optional `timeout_ms` field sets the request's
 //! deadline: expired-in-queue requests are answered `code: "deadline"`
 //! without spending backend time.
+//!
+//! ## Codec / connection-core split
+//!
+//! Everything about the wire *format* — request parsing + validation,
+//! response rendering, hex word packing, the server-side wire codes —
+//! lives in [`super::codec`] (re-exported here for compatibility). This
+//! module is the connection core: sockets, handler threads, shutdown,
+//! drain, and transport-fault injection. The core serves any
+//! [`LineService`], not just a [`Coordinator`] — [`serve`] binds one to a
+//! listener, and [`crate::router::ShardRouter`] (the fleet tier) plugs in
+//! the same way, which is how one connection core fronts both a single
+//! shard and a whole fleet without a protocol fork.
 //!
 //! Each connection gets a handler thread; requests within a connection are
 //! pipelined (responses come back in submit order, matching the lane's
@@ -54,22 +66,29 @@
 //! in-flight work under [`ServerOptions::drain_deadline`] before
 //! joining. Transport-level fault injection
 //! ([`ServerOptions::net_faults`]: `conn_drop` / `slow_read_ms` /
-//! `partial_write`) lives here too, so the chaos suite can prove the
-//! retry client converges under real network misbehavior.
+//! `partial_write`, plus the `down_after_ms`/`down_for_ms` shard-kill
+//! window that makes the whole server play dead) lives here too, so the
+//! chaos suite can prove the retry client and the shard router converge
+//! under real network misbehavior.
 
+use super::codec::{self, ParsedLine};
+use super::prom;
 use super::{
     Coordinator, SubmitError, SubmitOptions, DEFAULT_CALL_TIMEOUT, DRAINING_RETRY_MS,
     RESPONSE_GRACE,
 };
 use crate::coordinator::FaultPlan;
-use crate::runtime::{Op, Output};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+// Compatibility re-exports: these names predate the codec split and are
+// part of this module's public surface (used by the client, main, tests).
+pub use super::codec::{hex_to_word, word_to_hex, CODE_BAD_REQUEST, CODE_TIMEOUT};
 
 /// How often a blocked connection reader re-checks the stop flag.
 const READ_POLL: Duration = Duration::from_millis(100);
@@ -83,18 +102,57 @@ const READ_POLL: Duration = Duration::from_millis(100);
 /// write makes progress).
 const WRITE_STALL_LIMIT: Duration = Duration::from_secs(5);
 
-/// Server-side wire codes: failure modes born in the TCP layer itself,
-/// before a request reaches the coordinator (unparseable line, bad shape)
-/// or after its typed answer was lost (response-channel timeout). Declared
-/// as named consts so `cargo xtask lint` and the wire-taxonomy round-trip
-/// test can enumerate them mechanically against ROADMAP's failure-model
-/// table, alongside the `RequestError`/`SubmitError` `code()` sets.
-pub const CODE_BAD_REQUEST: &str = "bad_request";
-pub const CODE_TIMEOUT: &str = "timeout";
-
 /// Retry hint attached to accept-loop `overloaded` refusals (connection
 /// cap hit). Connection slots churn fast, so the hint is short.
 const MAX_CONNS_RETRY_MS: u64 = 50;
+
+/// What the connection core serves: one request line in, one response
+/// document out. [`CoordinatorService`] wires a single coordinator's
+/// lanes behind it; [`crate::router::ShardRouter`] wires a whole fleet.
+/// Implementations must be cheap to call concurrently — the core invokes
+/// `handle_line` from one thread per connection.
+pub trait LineService: Send + Sync + 'static {
+    /// Answer one request line. `peer` is the fallback admission key for
+    /// requests that carry no `client_id`.
+    fn handle_line(&self, line: &str, peer: &str) -> Json;
+
+    /// Enter drain: refuse new work with a typed `draining` answer while
+    /// in-flight work keeps running. Default: nothing to drain.
+    fn begin_drain(&self) {}
+
+    /// Wait out in-flight work under `deadline`; `true` when everything
+    /// completed in time. Default: nothing to wait for.
+    fn drain(&self, _deadline: Duration) -> bool {
+        true
+    }
+}
+
+/// The single-node [`LineService`]: a [`Coordinator`]'s lanes behind the
+/// wire codec (plus the `metrics`/`health`/`metrics_text` introspection
+/// ops).
+pub struct CoordinatorService {
+    coordinator: Arc<Coordinator>,
+}
+
+impl CoordinatorService {
+    pub fn new(coordinator: Arc<Coordinator>) -> Self {
+        CoordinatorService { coordinator }
+    }
+}
+
+impl LineService for CoordinatorService {
+    fn handle_line(&self, line: &str, peer: &str) -> Json {
+        process_line_from(line, &self.coordinator, peer)
+    }
+
+    fn begin_drain(&self) {
+        self.coordinator.begin_drain();
+    }
+
+    fn drain(&self, deadline: Duration) -> bool {
+        self.coordinator.drain(deadline)
+    }
+}
 
 /// Tuning for [`TcpServer::start_with`].
 #[derive(Clone, Copy, Debug)]
@@ -106,8 +164,9 @@ pub struct ServerOptions {
     /// before cutting queued jobs over to typed `deadline` answers.
     pub drain_deadline: Duration,
     /// Transport-level fault injection (`conn_drop` / `slow_read_ms` /
-    /// `partial_write` keys of the `TS_FAULT` grammar); backend-fault keys
-    /// in the plan are ignored here.
+    /// `partial_write` / `down_after_ms` / `down_for_ms` keys of the
+    /// `TS_FAULT` grammar); backend-fault keys in the plan are ignored
+    /// here.
     pub net_faults: FaultPlan,
 }
 
@@ -122,10 +181,12 @@ impl Default for ServerOptions {
 }
 
 /// Transport fault state shared by connection handlers: one RNG so drop /
-/// truncation decisions are a single deterministic stream per server.
+/// truncation decisions are a single deterministic stream per server, and
+/// one start-of-life instant anchoring the shard-kill window.
 struct NetFaults {
     plan: FaultPlan,
     rng: Mutex<Rng>,
+    started: Instant,
 }
 
 impl NetFaults {
@@ -137,6 +198,19 @@ impl NetFaults {
             self.plan.partial_write_p > 0.0 && rng.uniform() < self.plan.partial_write_p,
         )
     }
+
+    /// Inside the injected shard-kill window? While true the server plays
+    /// dead: new connections are dropped without a byte and existing
+    /// handlers exit without replying — exactly what a killed shard
+    /// process looks like from the router's side. `down_for` zero means
+    /// the shard never comes back.
+    fn down_now(&self) -> bool {
+        let Some(after) = self.plan.down_after else {
+            return false;
+        };
+        let t = self.started.elapsed();
+        t >= after && (self.plan.down_for.is_zero() || t < after + self.plan.down_for)
+    }
 }
 
 /// Handle to a running TCP server.
@@ -146,7 +220,7 @@ pub struct TcpServer {
     /// Drain latch: accept loop refuses new connections with `draining`
     /// while existing handlers keep serving until shutdown.
     draining: Arc<AtomicBool>,
-    coordinator: Arc<Coordinator>,
+    service: Arc<dyn LineService>,
     drain_deadline: Duration,
     accept_join: Option<std::thread::JoinHandle<()>>,
     /// Live connection-handler threads, joined on shutdown (finished
@@ -167,83 +241,7 @@ impl TcpServer {
         addr: &str,
         opts: ServerOptions,
     ) -> std::io::Result<TcpServer> {
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let draining = Arc::new(AtomicBool::new(false));
-        let draining2 = Arc::clone(&draining);
-        let conn_joins = Arc::new(Mutex::new(Vec::new()));
-        let joins2 = Arc::clone(&conn_joins);
-        let c_accept = Arc::clone(&coordinator);
-        let net: Option<Arc<NetFaults>> = opts.net_faults.has_net_faults().then(|| {
-            Arc::new(NetFaults {
-                plan: opts.net_faults,
-                rng: Mutex::new(Rng::new(opts.net_faults.seed)),
-            })
-        });
-        let max_conns = opts.max_conns;
-        let accept_join = std::thread::Builder::new()
-            .name("tcp-accept".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    // ORDERING: Relaxed — the stop flag is a one-way latch
-                    // polled in a loop; no memory is published through it
-                    // (shutdown correctness comes from join(), below).
-                    if stop2.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    match conn {
-                        Ok(stream) => {
-                            // ORDERING: Relaxed — drain latch is one-way;
-                            // refusing a connection needs no ordering with
-                            // other memory.
-                            if draining2.load(Ordering::Relaxed) {
-                                refuse_connection(
-                                    stream,
-                                    &SubmitError::Draining {
-                                        retry_after_ms: DRAINING_RETRY_MS,
-                                    },
-                                );
-                                continue;
-                            }
-                            let mut joins = joins2.lock().unwrap();
-                            // prune handlers whose connections already
-                            // closed so the vec tracks live threads only
-                            joins.retain(|j: &std::thread::JoinHandle<()>| !j.is_finished());
-                            if max_conns > 0 && joins.len() >= max_conns {
-                                drop(joins);
-                                refuse_connection(
-                                    stream,
-                                    &SubmitError::Overloaded {
-                                        retry_after_ms: MAX_CONNS_RETRY_MS,
-                                    },
-                                );
-                                continue;
-                            }
-                            let c = Arc::clone(&c_accept);
-                            let flag = Arc::clone(&stop2);
-                            let nf = net.clone();
-                            let spawned = std::thread::Builder::new()
-                                .name("tcp-conn".into())
-                                .spawn(move || handle_connection(stream, c, flag, nf));
-                            if let Ok(handle) = spawned {
-                                joins.push(handle);
-                            }
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        Ok(TcpServer {
-            addr: local,
-            stop,
-            draining,
-            coordinator,
-            drain_deadline: opts.drain_deadline,
-            accept_join: Some(accept_join),
-            conn_joins,
-        })
+        serve(Arc::new(CoordinatorService::new(coordinator)), addr, opts)
     }
 
     /// The bound address (resolves ephemeral ports).
@@ -252,24 +250,23 @@ impl TcpServer {
     }
 
     /// Enter drain: the accept loop starts refusing new connections with a
-    /// one-line `draining` answer, and the coordinator refuses new
-    /// submissions the same way, while in-flight work keeps running.
-    /// Idempotent.
+    /// one-line `draining` answer, and the service refuses new work the
+    /// same way, while in-flight work keeps running. Idempotent.
     pub fn begin_drain(&self) {
         // ORDERING: Relaxed — one-way latch polled by the accept loop;
         // refusal behavior needs no cross-thread data ordering.
         self.draining.store(true, Ordering::Relaxed);
-        self.coordinator.begin_drain();
+        self.service.begin_drain();
     }
 
     /// Graceful stop: [`begin_drain`](Self::begin_drain), wait for
-    /// in-flight coordinator work under the configured drain deadline
-    /// (queued jobs past it get typed `deadline` answers — never silence),
-    /// then [`shutdown`](Self::shutdown). Returns `true` if every queued
-    /// job completed before the deadline.
+    /// in-flight work under the configured drain deadline (queued jobs
+    /// past it get typed `deadline` answers — never silence), then
+    /// [`shutdown`](Self::shutdown). Returns `true` if every queued job
+    /// completed before the deadline.
     pub fn shutdown_graceful(self) -> bool {
         self.begin_drain();
-        let drained = self.coordinator.drain(self.drain_deadline);
+        let drained = self.service.drain(self.drain_deadline);
         self.shutdown();
         drained
     }
@@ -297,19 +294,119 @@ impl TcpServer {
     }
 }
 
+/// Bind `addr` and serve an arbitrary [`LineService`] — the
+/// transport-agnostic entry point the coordinator path
+/// ([`TcpServer::start_with`]) and the fleet tier
+/// ([`crate::router::ShardRouter`]) share.
+pub fn serve(
+    service: Arc<dyn LineService>,
+    addr: &str,
+    opts: ServerOptions,
+) -> std::io::Result<TcpServer> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let draining = Arc::new(AtomicBool::new(false));
+    let draining2 = Arc::clone(&draining);
+    let conn_joins = Arc::new(Mutex::new(Vec::new()));
+    let joins2 = Arc::clone(&conn_joins);
+    let svc_accept = Arc::clone(&service);
+    let net: Option<Arc<NetFaults>> = opts.net_faults.has_net_faults().then(|| {
+        Arc::new(NetFaults {
+            plan: opts.net_faults,
+            rng: Mutex::new(Rng::new(opts.net_faults.seed)),
+            started: Instant::now(),
+        })
+    });
+    let max_conns = opts.max_conns;
+    let accept_join = std::thread::Builder::new()
+        .name("tcp-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                // ORDERING: Relaxed — the stop flag is a one-way latch
+                // polled in a loop; no memory is published through it
+                // (shutdown correctness comes from join(), below).
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        // injected shard-kill window: a dead process
+                        // accepts nothing — drop the connection without a
+                        // single byte so peers see it as unreachable
+                        if net.as_ref().map_or(false, |nf| nf.down_now()) {
+                            drop(stream);
+                            continue;
+                        }
+                        // ORDERING: Relaxed — drain latch is one-way;
+                        // refusing a connection needs no ordering with
+                        // other memory.
+                        if draining2.load(Ordering::Relaxed) {
+                            refuse_connection(
+                                stream,
+                                &SubmitError::Draining {
+                                    retry_after_ms: DRAINING_RETRY_MS,
+                                },
+                            );
+                            continue;
+                        }
+                        let mut joins = joins2.lock().unwrap();
+                        // prune handlers whose connections already
+                        // closed so the vec tracks live threads only
+                        joins.retain(|j: &std::thread::JoinHandle<()>| !j.is_finished());
+                        if max_conns > 0 && joins.len() >= max_conns {
+                            drop(joins);
+                            refuse_connection(
+                                stream,
+                                &SubmitError::Overloaded {
+                                    retry_after_ms: MAX_CONNS_RETRY_MS,
+                                },
+                            );
+                            continue;
+                        }
+                        let svc = Arc::clone(&svc_accept);
+                        let flag = Arc::clone(&stop2);
+                        let nf = net.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("tcp-conn".into())
+                            .spawn(move || handle_connection(stream, svc, flag, nf));
+                        if let Ok(handle) = spawned {
+                            joins.push(handle);
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+    Ok(TcpServer {
+        addr: local,
+        stop,
+        draining,
+        service,
+        drain_deadline: opts.drain_deadline,
+        accept_join: Some(accept_join),
+        conn_joins,
+    })
+}
+
 /// Write a single coded refusal line (id `null`, with `retry_after_ms`)
 /// to a connection the accept loop will not service, then close it.
 fn refuse_connection(stream: TcpStream, err: &SubmitError) {
     let _ = stream.set_write_timeout(Some(WRITE_STALL_LIMIT));
     let mut stream = stream;
-    let reply =
-        err_response_with_hint(Json::Null, &err.to_string(), err.code(), err.retry_after_ms());
+    let reply = codec::err_response_with_hint(
+        Json::Null,
+        &err.to_string(),
+        err.code(),
+        err.retry_after_ms(),
+    );
     let _ = stream.write_all(format!("{reply}\n").as_bytes());
 }
 
 fn handle_connection(
     stream: TcpStream,
-    coordinator: Arc<Coordinator>,
+    service: Arc<dyn LineService>,
     stop: Arc<AtomicBool>,
     net: Option<Arc<NetFaults>>,
 ) {
@@ -333,6 +430,11 @@ fn handle_connection(
     // keeps every consumed byte across timeouts
     let mut line: Vec<u8> = Vec::new();
     loop {
+        // injected shard-kill window: a dead process answers nothing —
+        // the handler dies mid-conversation, exactly like a kill -9
+        if net.as_ref().map_or(false, |nf| nf.down_now()) {
+            return;
+        }
         match reader.read_until(b'\n', &mut line) {
             Ok(0) => {
                 // EOF — but a read timeout may have left a complete-but-
@@ -340,7 +442,7 @@ fn handle_connection(
                 // closing (the protocol promise for newline-less tails)
                 let text = String::from_utf8_lossy(&line);
                 if !text.trim().is_empty() {
-                    let reply = process_line_from(text.trim_end(), &coordinator, &peer);
+                    let reply = service.handle_line(text.trim_end(), &peer);
                     let _ = writer.write_all(format!("{reply}\n").as_bytes());
                 }
                 break;
@@ -354,8 +456,11 @@ fn handle_connection(
                         if !nf.plan.slow_read.is_zero() {
                             std::thread::sleep(nf.plan.slow_read);
                         }
+                        if nf.down_now() {
+                            return;
+                        }
                     }
-                    let reply = process_line_from(text.trim_end(), &coordinator, &peer);
+                    let reply = service.handle_line(text.trim_end(), &peer);
                     let payload = format!("{reply}\n");
                     let (drop_conn, partial) =
                         net.as_ref().map(|nf| nf.decide()).unwrap_or((false, false));
@@ -413,78 +518,38 @@ pub fn process_line(line: &str, coordinator: &Coordinator) -> Json {
 /// [`process_line`] with an explicit fallback admission key (`peer`),
 /// used when the request carries no `client_id` field.
 pub fn process_line_from(line: &str, coordinator: &Coordinator, peer: &str) -> Json {
-    let doc = match Json::parse(line) {
-        Ok(d) => d,
-        Err(e) => return err_response(Json::Null, &format!("bad json: {e}"), CODE_BAD_REQUEST),
-    };
-    let id = doc.get("id").cloned().unwrap_or(Json::Null);
-    let op_str = doc.get("op").and_then(|o| o.as_str());
-    // introspection ops carry no vector and answer from shared state
-    match op_str {
-        Some("metrics") => {
-            return Json::obj(vec![
-                ("id", id),
-                ("ok", Json::Bool(true)),
-                ("result", coordinator.metrics_json()),
-            ])
-        }
-        Some("health") => {
-            return Json::obj(vec![
-                ("id", id),
-                ("ok", Json::Bool(true)),
-                ("result", coordinator.health_json()),
-            ])
-        }
-        _ => {}
+    match codec::parse_line(line) {
+        ParsedLine::Malformed(reply) => reply,
+        ParsedLine::Compute(req) => respond_compute(req, coordinator, peer),
+        // introspection ops carry no vector and answer from shared state
+        ParsedLine::Other { id, op, .. } => match op.as_deref() {
+            Some("metrics") => codec::ok_response_json(id, coordinator.metrics_json()),
+            Some("health") => codec::ok_response_json(id, coordinator.health_json()),
+            Some("metrics_text") => codec::ok_response_json(
+                id,
+                Json::Str(prom::render(&prom::coordinator_families(
+                    &coordinator.metrics_json(),
+                ))),
+            ),
+            _ => codec::err_response(id, "missing or unknown 'op'", CODE_BAD_REQUEST),
+        },
     }
-    let Some(op) = op_str.and_then(Op::parse) else {
-        return err_response(id, "missing or unknown 'op'", CODE_BAD_REQUEST);
-    };
-    let timeout = match doc.get("timeout_ms") {
-        None => None,
-        Some(t) => match t.as_f64() {
-            Some(ms) if ms.is_finite() && ms >= 0.0 => Some(Duration::from_millis(ms as u64)),
-            _ => {
-                return err_response(
-                    id,
-                    "'timeout_ms' must be a non-negative number",
-                    CODE_BAD_REQUEST,
-                )
-            }
-        },
-    };
-    // admission key: explicit client_id wins, else the peer address; a
-    // present-but-non-string client_id is a malformed request, not a
-    // silent fallback (same strictness as timeout_ms)
-    let client = match doc.get("client_id") {
-        None => peer,
-        Some(c) => match c.as_str() {
-            Some(s) => s,
-            None => return err_response(id, "'client_id' must be a string", CODE_BAD_REQUEST),
-        },
-    };
-    let priority = match doc.get("priority") {
-        None => super::admission::PRIORITY_NORMAL,
-        Some(p) => match p.as_f64() {
-            Some(v) if v.is_finite() && v >= 0.0 && v <= 255.0 && v.fract() == 0.0 => v as u8,
-            _ => {
-                return err_response(id, "'priority' must be an integer 0-255", CODE_BAD_REQUEST)
-            }
-        },
-    };
-    let Some(vec_json) = doc.get("vector").and_then(|v| v.as_arr()) else {
-        return err_response(id, "missing 'vector' array", CODE_BAD_REQUEST);
-    };
-    let mut vector = Vec::with_capacity(vec_json.len());
-    for v in vec_json {
-        match v.as_f64() {
-            Some(f) => vector.push(f as f32),
-            None => return err_response(id, "'vector' must contain numbers", CODE_BAD_REQUEST),
-        }
-    }
+}
+
+/// Execute a validated compute request against a coordinator and render
+/// the wire response (the lane-bound half of [`process_line_from`]).
+pub(crate) fn respond_compute(req: codec::Request, coordinator: &Coordinator, peer: &str) -> Json {
+    let codec::Request {
+        id,
+        op,
+        timeout,
+        client_id,
+        priority,
+        vector,
+    } = req;
     let opts = SubmitOptions {
         deadline: timeout,
-        client: Some(client),
+        client: Some(client_id.as_deref().unwrap_or(peer)),
         priority,
     };
     match coordinator.submit_with_opts(op, vector, opts) {
@@ -492,16 +557,18 @@ pub fn process_line_from(line: &str, coordinator: &Coordinator, peer: &str) -> J
             // bounded wait: the lane's own typed Deadline answer should win
             // the race (RESPONSE_GRACE), but a dead or wedged lane must
             // surface an error here, never hang the connection handler
-            let wait = timeout.unwrap_or(DEFAULT_CALL_TIMEOUT).saturating_add(RESPONSE_GRACE);
+            let wait = timeout
+                .unwrap_or(DEFAULT_CALL_TIMEOUT)
+                .saturating_add(RESPONSE_GRACE);
             match rx.recv_timeout(wait) {
                 Ok(resp) => match resp.result {
-                    Ok(out) => ok_response(id, out),
-                    Err(e) => err_response(id, &e.to_string(), e.code()),
+                    Ok(out) => codec::ok_response(id, out),
+                    Err(e) => codec::err_response(id, &e.to_string(), e.code()),
                 },
                 Err(mpsc::RecvTimeoutError::Timeout) => {
-                    err_response(id, "response timed out", CODE_TIMEOUT)
+                    codec::err_response(id, "response timed out", CODE_TIMEOUT)
                 }
-                Err(mpsc::RecvTimeoutError::Disconnected) => err_response_with_hint(
+                Err(mpsc::RecvTimeoutError::Disconnected) => codec::err_response_with_hint(
                     id,
                     "lane dropped response (restarted mid-request)",
                     "lane_down",
@@ -511,60 +578,15 @@ pub fn process_line_from(line: &str, coordinator: &Coordinator, peer: &str) -> J
         }
         // every taxonomy-retryable refusal carries its retry_after_ms hint
         // so clients can back off without guessing
-        Err(e) => err_response_with_hint(id, &e.to_string(), e.code(), e.retry_after_ms()),
+        Err(e) => codec::err_response_with_hint(id, &e.to_string(), e.code(), e.retry_after_ms()),
     }
-}
-
-fn ok_response(id: Json, out: Output) -> Json {
-    let result = match out {
-        Output::F32(v) => Json::Arr(v.into_iter().map(|x| Json::Num(x as f64)).collect()),
-        Output::I32(v) => Json::Arr(v.into_iter().map(|x| Json::Num(x as f64)).collect()),
-        // packed sign words as fixed-width hex: exact (a u64 does not
-        // round-trip through a JSON f64) and compact on the wire
-        Output::Bits(v) => Json::Arr(v.into_iter().map(|w| Json::Str(word_to_hex(w))).collect()),
-    };
-    Json::obj(vec![("id", id), ("ok", Json::Bool(true)), ("result", result)])
-}
-
-/// One packed word as 16 lowercase hex digits (most significant first).
-pub fn word_to_hex(w: u64) -> String {
-    format!("{w:016x}")
-}
-
-/// Parse a response-side hex word (the client-side decoder; also used by
-/// the serving smoke test). Strict: exactly 16 hex digits — no sign
-/// prefix (`from_str_radix` alone would accept `+` + 15 digits).
-pub fn hex_to_word(s: &str) -> Option<u64> {
-    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
-        return None;
-    }
-    u64::from_str_radix(s, 16).ok()
-}
-
-fn err_response(id: Json, msg: &str, code: &str) -> Json {
-    err_response_with_hint(id, msg, code, None)
-}
-
-/// Error response that attaches `retry_after_ms` when the taxonomy marks
-/// the code retryable — the server-side half of the retry-client
-/// contract (clients treat a missing hint as "do not bother retrying").
-fn err_response_with_hint(id: Json, msg: &str, code: &str, retry_after_ms: Option<u64>) -> Json {
-    let mut fields = vec![
-        ("id", id),
-        ("ok", Json::Bool(false)),
-        ("error", Json::Str(msg.to_string())),
-        ("code", Json::Str(code.to_string())),
-    ];
-    if let Some(ms) = retry_after_ms {
-        fields.push(("retry_after_ms", Json::Num(ms as f64)));
-    }
-    Json::obj(fields)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::{Config, NativeBackend};
+    use crate::runtime::Op;
     use std::time::Duration;
 
     fn coordinator() -> Arc<Coordinator> {
@@ -681,6 +703,35 @@ mod tests {
     }
 
     #[test]
+    fn metrics_text_op_renders_prometheus_exposition() {
+        let c = coordinator();
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", i as f32 / 64.0)).collect();
+        let line = format!(
+            r#"{{"id": 1, "op": "transform", "vector": [{}]}}"#,
+            vec_str.join(",")
+        );
+        assert_eq!(process_line(&line, &c).get("ok"), Some(&Json::Bool(true)));
+        let r = process_line(r#"{"id": 2, "op": "metrics_text"}"#, &c);
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let text = r.get("result").unwrap().as_str().unwrap().to_string();
+        // exposition format: TYPE headers + labeled samples
+        assert!(text.contains("# TYPE ts_lane_completed counter"), "{text}");
+        assert!(
+            text.contains(r#"ts_lane_completed{lane="transform_n64"} 1"#),
+            "{text}"
+        );
+        // and it parses back (the format round trip lives in prom.rs)
+        let families = prom::parse(&text).expect("rendered exposition must parse");
+        assert!(families.iter().any(|f| f.name == "ts_lane_completed"));
+        // the multi-line payload survives the JSON wire encoding
+        let reparsed = Json::parse(&r.to_string()).unwrap();
+        assert_eq!(
+            reparsed.get("result").unwrap().as_str(),
+            Some(text.as_str())
+        );
+    }
+
+    #[test]
     fn process_line_rejects_bad_timeout() {
         let c = coordinator();
         let vec_str: Vec<String> = (0..64).map(|i| format!("{}", i as f32)).collect();
@@ -748,16 +799,75 @@ mod tests {
         assert!(r.get("retry_after_ms").is_none());
     }
 
-    #[test]
-    fn hex_word_round_trip() {
-        for w in [0u64, 1, 0xdead_beef_0123_4567, u64::MAX] {
-            assert_eq!(hex_to_word(&word_to_hex(w)), Some(w));
+    /// A trivial non-coordinator service: proves the connection core is
+    /// genuinely transport-agnostic after the codec split.
+    struct Shout;
+
+    impl LineService for Shout {
+        fn handle_line(&self, line: &str, peer: &str) -> Json {
+            Json::obj(vec![
+                ("echo", Json::Str(line.to_uppercase())),
+                ("peer_seen", Json::Bool(!peer.is_empty())),
+            ])
         }
-        assert_eq!(hex_to_word("xyz"), None);
-        assert_eq!(hex_to_word("00"), None);
-        // sign prefixes are 16 chars but not 16 hex digits
-        assert_eq!(hex_to_word("+00000000000000f"), None);
-        assert_eq!(hex_to_word("-00000000000000f"), None);
+    }
+
+    #[test]
+    fn serve_runs_any_line_service() {
+        let server = serve(Arc::new(Shout), "127.0.0.1:0", ServerOptions::default()).unwrap();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.write_all(b"hello fleet\n").unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let doc = Json::parse(resp.trim()).unwrap();
+        assert_eq!(doc.get("echo").unwrap().as_str(), Some("HELLO FLEET"));
+        assert_eq!(doc.get("peer_seen"), Some(&Json::Bool(true)));
+        drop(reader);
+        server.shutdown();
+    }
+
+    #[test]
+    fn down_window_makes_the_server_play_dead_then_recover() {
+        let c = coordinator();
+        let plan = FaultPlan::parse("down_after_ms:0,down_for_ms:300").unwrap();
+        let server = TcpServer::start_with(
+            Arc::clone(&c),
+            "127.0.0.1:0",
+            ServerOptions {
+                net_faults: plan,
+                ..ServerOptions::default()
+            },
+        )
+        .unwrap();
+        let addr = server.addr();
+        // inside the window: connection is accepted then dropped byteless
+        let stream = TcpStream::connect(addr).unwrap();
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+        let mut reader = BufReader::new(stream);
+        let mut resp = String::new();
+        let n = reader.read_line(&mut resp).unwrap_or(0);
+        assert_eq!(n, 0, "a down shard must not answer, got: {resp}");
+        // after the window: normal service resumes
+        std::thread::sleep(Duration::from_millis(400));
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", (i % 5) as f32)).collect();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(
+                format!(
+                    "{{\"id\": 1, \"op\": \"transform\", \"vector\": [{}]}}\n",
+                    vec_str.join(",")
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let doc = Json::parse(resp.trim()).unwrap();
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        drop(reader);
+        server.shutdown();
     }
 
     #[test]

@@ -117,6 +117,41 @@
 //!   layer) proves every logical request still reaches exactly one
 //!   terminal outcome.
 //!
+//! ## Fleet tier
+//!
+//! One node is still one failure domain, so the serving stack scales out
+//! by treating *whole shards* as untrusted and individually failable.
+//! The connection core is transport-agnostic
+//! ([`coordinator::server::LineService`] + [`coordinator::server::serve`];
+//! the request/response codec lives in [`coordinator::codec`]), so the
+//! same accept loop serves three tiers: a single-node
+//! [`coordinator::CoordinatorService`], a [`router::ShardService`] (a
+//! coordinator plus a bucket-prefix-range slice of the fleet LSH index —
+//! see [`router::shard`] for the placement scheme and the
+//! union-equals-global exactness argument), and the
+//! [`router::ShardRouter`] front-end. The router routes compute ops to
+//! their rendezvous-hash owner group (stable under membership change) and
+//! fails over through replicas and fallback groups on transport errors,
+//! retryable refusals, and timeouts; `lsh_query` scatter-gathers every
+//! group with per-group hedged duplicates after an adaptive p95 delay
+//! ([`router::hedge::HedgePolicy`]) and merges with
+//! [`router::topology::merge_topk`] into the exact global top-k. Shards
+//! missing at the scatter budget **degrade, never block**: the reply is a
+//! `partial` success naming them in `degraded` — and only a fully dark
+//! fleet yields a typed `shard_down` refusal (retryable, with
+//! `retry_after_ms`). Per-endpoint circuit breakers reuse the lane
+//! breaker ([`coordinator::breaker::LaneState`]); background health
+//! probes ([`router::health::Prober`]) are the recovery path that closes
+//! them. `metrics` / `health` / `metrics_text` report fleet counters
+//! (relays, failovers, hedges and wins, full/partial/shard_down) plus
+//! per-endpoint wire counters and breaker phases — `metrics_text` in the
+//! Prometheus text exposition ([`coordinator::prom`]), round-trip tested.
+//! Whole-shard chaos (`TS_FAULT=down_after_ms:t,down_for_ms:d`) drives
+//! the `shard_*` suite in `rust/tests/chaos_serving.rs`: with one of
+//! three shards killed mid-load every query still reaches exactly one
+//! terminal outcome — full, partial-with-marker, or a typed refusal —
+//! and results recover to full once the shard returns.
+//!
 //! ## Correctness tooling
 //!
 //! The invariants the engine lives by are machine-checked in layers:
@@ -170,7 +205,11 @@
 //!   worker pool, metrics, backpressure, lane supervision (panic
 //!   isolation, circuit breaker, deadline propagation, fault injection);
 //!   ops `transform` / `rff` / `crosspolytope` / `binary_embed` (plus
-//!   `metrics` / `health` introspection) over newline-JSON TCP.
+//!   `metrics` / `health` / `metrics_text` introspection) over
+//!   newline-JSON TCP.
+//! * [`router`] — the fleet tier above: shard topology + rendezvous
+//!   routing, per-endpoint health/breakers, hedged scatter-gather with
+//!   partial-result degradation, and the shard-side index slice.
 
 // Every unsafe *operation* must sit in an explicit `unsafe {}` block with
 // its own `// SAFETY:` rationale — an `unsafe fn` signature alone does not
@@ -189,6 +228,7 @@ pub mod linalg;
 mod loom_models;
 pub mod lsh;
 pub mod quantize;
+pub mod router;
 pub mod runtime;
 pub mod sketch;
 pub mod transform;

@@ -4,6 +4,8 @@
 //!   info                      list compiled artifacts + lanes
 //!   verify                    run every artifact against its golden vectors
 //!   serve [opts]              start the coordinator and drive a workload
+//!                             (--shard i/N turns it into one fleet shard)
+//!   route [opts]              shard-router front-end over a fleet of shards
 //!   transform [opts]          one-shot structured transform of a random vector
 //!   metrics-demo              short burst + metrics JSON dump
 //!
@@ -31,6 +33,7 @@ fn main() {
         "info" => cmd_info(&opts),
         "verify" => cmd_verify(&opts),
         "serve" => cmd_serve(&opts),
+        "route" => cmd_route(&opts),
         "transform" => cmd_transform(&opts),
         "metrics-demo" => cmd_metrics_demo(&opts),
         "help" | "--help" | "-h" => {
@@ -67,9 +70,27 @@ COMMANDS:
                    --admit-rate R work-units/s per client [0 = off],
                    --admit-burst B [0 = R], --shed-target-ms T [0 = off],
                    --shed-window-ms 100
+                  --shard I/N makes this node shard I of an N-shard fleet:
+                   it additionally serves \"lsh_query\" over its
+                   bucket-prefix range of a deterministic demo point set
+                   (--points 4096, --tables 8, --prefix-bits 12,
+                    --fleet-seed 71 — must match on every shard)
                   TS_FAULT=panic:p,err:p,delay_ms:d,conn_drop:p,
-                  slow_read_ms:d,partial_write:p,seed:s injects
-                  deterministic backend + transport faults (chaos testing)
+                  slow_read_ms:d,partial_write:p,down_after_ms:t,
+                  down_for_ms:d,seed:s injects deterministic backend +
+                  transport faults incl. a whole-shard kill window
+  route           shard-router front-end: --tcp ADDR --shards
+                  \"host:p|replica,host:p,...\" (commas = shard groups,
+                  pipes = replicas). Routes compute ops to their
+                  rendezvous-hash owner with replica failover; fans
+                  \"lsh_query\" out to every group (hedged stragglers)
+                  and merges top-k, degrading missing shards to a
+                  \"partial\" reply. Knobs: --attempt-timeout-ms 2000,
+                  --scatter-budget-ms 3000, --probe-interval-ms 100,
+                  --probe-timeout-ms 250, --breaker-threshold 3,
+                  --breaker-cooldown-ms 250, --hedge-min-ms 1,
+                  --hedge-max-ms 100, --hedge-initial-ms 10,
+                  --max-conns 256, --drain-deadline-ms 5000
   transform       one-shot transform (--family hd3|hdg|circulant|toeplitz|
                   hankel|skew|dense, --n 256, --seed 42; --binary adds the
                   packed sign-quantized embedding + footprint accounting)
@@ -338,30 +359,59 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
             drain_deadline: Duration::from_millis(opt(opts, "drain-deadline-ms", 5000)),
             net_faults,
         };
-        let server = match triplespin::coordinator::TcpServer::start_with(
-            Arc::clone(&c),
-            addr,
-            server_opts,
-        ) {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("bind {addr}: {e}");
-                return 1;
-            }
-        };
+        // --shard I/N: serve as one fleet shard — same wire protocol plus
+        // `lsh_query` over this node's bucket-prefix range of the shared
+        // demo point set (every shard must use identical index knobs)
+        let mut shard_banner = String::new();
+        let service: Arc<dyn triplespin::coordinator::LineService> =
+            if let Some(spec) = opts.get("shard") {
+                let Some((shard, shards)) = parse_shard_spec(spec) else {
+                    eprintln!("--shard wants I/N with I < N (e.g. --shard 0/3), got '{spec}'");
+                    return 2;
+                };
+                let points: usize = opt(opts, "points", 4096);
+                let cfg = triplespin::router::ShardIndexConfig {
+                    n,
+                    tables: opt(opts, "tables", 8),
+                    prefix_bits: opt(opts, "prefix-bits", 12),
+                    seed: opt(opts, "fleet-seed", 71),
+                    shard,
+                    shards,
+                };
+                let index = triplespin::router::ShardIndex::build(
+                    &triplespin::router::demo_points(n, points, cfg.seed),
+                    &cfg,
+                );
+                shard_banner = format!(
+                    "shard {shard}/{shards}: serving lsh_query over {} of {points} demo points\n ",
+                    index.len()
+                );
+                Arc::new(triplespin::router::ShardService::new(Arc::clone(&c), index))
+            } else {
+                Arc::new(triplespin::coordinator::CoordinatorService::new(Arc::clone(&c)))
+            };
+        let server =
+            match triplespin::coordinator::server::serve(Arc::clone(&service), addr, server_opts) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("bind {addr}: {e}");
+                    return 1;
+                }
+            };
         let ops = if is_pjrt {
             "transform/rff/crosspolytope"
         } else {
             "transform/rff/crosspolytope/binary_embed"
         };
         println!(
-            "listening on {} (ops: {ops}, n={n}, max_conns={});\n\
+            "{shard_banner}listening on {} (ops: {ops}, n={n}, max_conns={});\n\
              protocol: one JSON per line: {{\"id\":1,\"op\":\"transform\",\"vector\":[..]}}\n\
              optional per request: \"timeout_ms\", \"client_id\" (admission key),\n\
-             \"priority\" 0-2; ops \"metrics\" and \"health\" report per-lane\n\
-             counters / breaker state / drain state; errors carry a \"code\"\n\
+             \"priority\" 0-2; ops \"metrics\", \"health\", \"metrics_text\" report\n\
+             per-lane counters / breaker state / drain state; errors carry a \"code\"\n\
              (busy|deadline|unavailable|lane_down|backend|panic|timeout|bad_request\n\
-             |throttled|overloaded|draining) and retryable ones a \"retry_after_ms\"\n\
+             |throttled|overloaded|draining|shard_down) and retryable ones a\n\
+             \"retry_after_ms\"; degraded fleet answers carry code \"partial\"\n\
              (binary_embed results are packed sign words as 16-digit hex strings)\n\
              SIGTERM/Ctrl-C drains gracefully.",
             server.addr(),
@@ -378,6 +428,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
         }
         eprintln!("termination signal: draining (deadline {:?})", server_opts.drain_deadline);
         let clean = server.shutdown_graceful();
+        drop(service); // releases the service's coordinator handle
         match Arc::try_unwrap(c) {
             Ok(c) => c.shutdown(),
             Err(_) => eprintln!("coordinator still referenced at exit; skipping join"),
@@ -463,6 +514,77 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
     if let Some(s) = svc {
         s.shutdown();
     }
+    0
+}
+
+/// Parse `--shard I/N` (shard index / fleet width).
+fn parse_shard_spec(spec: &str) -> Option<(usize, usize)> {
+    let (i, m) = spec.split_once('/')?;
+    let (i, m) = (i.trim().parse().ok()?, m.trim().parse().ok()?);
+    (m >= 1 && i < m).then_some((i, m))
+}
+
+/// `route`: the fleet front-end — no backend of its own, just the shard
+/// topology and the routing/hedging/failover policies.
+fn cmd_route(opts: &HashMap<String, String>) -> i32 {
+    let Some(addr) = opts.get("tcp") else {
+        eprintln!("route needs --tcp ADDR to listen on");
+        return 2;
+    };
+    let Some(spec) = opts.get("shards") else {
+        eprintln!("route needs --shards \"host:p|replica,host:p,...\"");
+        return 2;
+    };
+    let specs = match triplespin::router::parse_topology(spec) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let ropts = triplespin::router::RouterOptions {
+        attempt_timeout: Duration::from_millis(opt(opts, "attempt-timeout-ms", 2000)),
+        scatter_budget: Duration::from_millis(opt(opts, "scatter-budget-ms", 3000)),
+        probe_interval: Duration::from_millis(opt(opts, "probe-interval-ms", 100)),
+        probe_timeout: Duration::from_millis(opt(opts, "probe-timeout-ms", 250)),
+        breaker_threshold: opt(opts, "breaker-threshold", 3),
+        breaker_cooldown: Duration::from_millis(opt(opts, "breaker-cooldown-ms", 250)),
+        hedge_min: Duration::from_millis(opt(opts, "hedge-min-ms", 1)),
+        hedge_max: Duration::from_millis(opt(opts, "hedge-max-ms", 100)),
+        hedge_initial: Duration::from_millis(opt(opts, "hedge-initial-ms", 10)),
+    };
+    let groups = specs.len();
+    let replicas: usize = specs.iter().map(|s| s.endpoints.len()).sum();
+    let router = Arc::new(triplespin::router::ShardRouter::new(specs, ropts));
+    let server_opts = triplespin::coordinator::ServerOptions {
+        max_conns: opt(opts, "max-conns", 256),
+        drain_deadline: Duration::from_millis(opt(opts, "drain-deadline-ms", 5000)),
+        net_faults: Default::default(),
+    };
+    let server = match triplespin::coordinator::server::serve(router, addr, server_opts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "routing on {} over {groups} shard group(s), {replicas} replica(s);\n\
+         compute ops go to their rendezvous owner (failover through replicas\n\
+         and fallback groups); \"lsh_query\" scatter-gathers every group and\n\
+         marks missing shards in a \"partial\" reply; \"metrics\" / \"health\" /\n\
+         \"metrics_text\" report fleet counters and per-endpoint breaker state.\n\
+         SIGTERM/Ctrl-C drains gracefully.",
+        server.addr(),
+    );
+    let latch = triplespin::util::signal::termination_latch();
+    // ORDERING: Relaxed — one-way latch polled in a loop; the signal
+    // handler publishes nothing else.
+    while !latch.load(std::sync::atomic::Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    eprintln!("termination signal: draining (deadline {:?})", server_opts.drain_deadline);
+    server.shutdown_graceful();
     0
 }
 

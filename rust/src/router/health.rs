@@ -1,0 +1,219 @@
+//! Shard endpoints: pooled connections, health probes, per-endpoint
+//! circuit breakers.
+//!
+//! An [`Endpoint`] is one replica address plus everything the router
+//! needs to distrust it: a connection pool (take on call, return only
+//! after a clean round trip — an abandoned or failed connection is
+//! dropped, never returned dirty, so a hedge loser can't desync the
+//! stream for the next caller), a [`LaneState`] circuit breaker reused
+//! verbatim from the coordinator's lane supervision (same
+//! open/degraded/half-open semantics, now guarding a TCP peer instead of
+//! a thread), and wire counters.
+//!
+//! The [`Prober`] is the recovery path: a background thread sends a
+//! `health` request to every endpoint each interval, **bypassing**
+//! `admit()` — probe successes are exactly how an open breaker learns the
+//! shard is back and closes again, without spending a client request on
+//! the experiment.
+
+use crate::coordinator::breaker::LaneState;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Per-endpoint wire counters (exported via the router's `metrics` op
+/// and the `metrics_text` exposition).
+#[derive(Default)]
+pub struct EndpointMetrics {
+    /// Requests written (calls + probes).
+    pub sent: AtomicU64,
+    /// Clean round trips (a parseable reply line came back).
+    pub ok: AtomicU64,
+    /// Transport failures (dial/write/read/parse).
+    pub failed: AtomicU64,
+    /// Health probes issued.
+    pub probes: AtomicU64,
+    /// Probes that failed (transport error or non-ok reply).
+    pub probe_failures: AtomicU64,
+}
+
+/// What one sub-request attempt produced at the transport level.
+pub enum CallOutcome {
+    /// A parseable reply line (may still be a coded refusal).
+    Reply(Json),
+    /// No reply: dial/write/read/parse failure. The connection is gone.
+    Unreachable(String),
+}
+
+type Conn = (BufReader<TcpStream>, TcpStream);
+
+/// One replica address with pooled connections and a circuit breaker.
+pub struct Endpoint {
+    pub addr: String,
+    /// Reused lane-breaker: records call/probe outcomes, gates `admit()`.
+    pub state: LaneState,
+    pub metrics: EndpointMetrics,
+    pool: Mutex<Vec<Conn>>,
+}
+
+impl Endpoint {
+    pub fn new(addr: &str, breaker_threshold: u32, breaker_cooldown: Duration) -> Endpoint {
+        Endpoint {
+            addr: addr.to_string(),
+            state: LaneState::new(breaker_threshold, breaker_cooldown),
+            metrics: EndpointMetrics::default(),
+            pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Breaker gate for client-request traffic (probes bypass this).
+    pub fn admit(&self) -> bool {
+        self.state.admit()
+    }
+
+    /// One request/response round trip. Takes a pooled connection or
+    /// dials; the connection returns to the pool only after a clean
+    /// round trip. Success/failure feeds the breaker.
+    pub fn call(&self, line: &str, timeout: Duration) -> CallOutcome {
+        self.metrics.sent.fetch_add(1, Ordering::Relaxed);
+        let conn = self.pool.lock().unwrap_or_else(|p| p.into_inner()).pop();
+        let mut conn = match conn {
+            Some(c) => c,
+            None => match self.dial(timeout) {
+                Ok(c) => c,
+                Err(e) => return self.fail(e),
+            },
+        };
+        let _ = conn.1.set_read_timeout(Some(timeout));
+        if let Err(e) = conn
+            .1
+            .write_all(format!("{line}\n").as_bytes())
+            .and_then(|()| conn.1.flush())
+        {
+            return self.fail(e.to_string());
+        }
+        let mut reply = String::new();
+        match conn.0.read_line(&mut reply) {
+            Ok(0) => return self.fail("shard closed the connection".to_string()),
+            Ok(_) => {}
+            Err(e) => return self.fail(e.to_string()),
+        }
+        match Json::parse(reply.trim()) {
+            Ok(doc) => {
+                self.pool
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .push(conn);
+                self.state.record_success();
+                self.metrics.ok.fetch_add(1, Ordering::Relaxed);
+                CallOutcome::Reply(doc)
+            }
+            Err(e) => self.fail(format!("unparseable shard reply: {e:?}")),
+        }
+    }
+
+    /// One health probe (bypasses `admit()` — this is the recovery path).
+    /// `true` when the shard answered `ok`.
+    pub fn probe(&self, timeout: Duration) -> bool {
+        self.metrics.probes.fetch_add(1, Ordering::Relaxed);
+        let up = matches!(
+            self.call(r#"{"id":0,"op":"health"}"#, timeout),
+            CallOutcome::Reply(doc) if doc.get("ok") == Some(&Json::Bool(true))
+        );
+        if !up {
+            self.metrics.probe_failures.fetch_add(1, Ordering::Relaxed);
+        }
+        up
+    }
+
+    fn fail(&self, e: String) -> CallOutcome {
+        // the breaker edge (closed -> open) is interesting but already
+        // counted as failed + state transition; drop the bool
+        let _ = self.state.record_failure();
+        self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        CallOutcome::Unreachable(e)
+    }
+
+    fn dial(&self, timeout: Duration) -> Result<Conn, String> {
+        let addr = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| e.to_string())?
+            .next()
+            .ok_or_else(|| format!("no address for {}", self.addr))?;
+        let stream = TcpStream::connect_timeout(&addr, timeout).map_err(|e| e.to_string())?;
+        stream
+            .set_write_timeout(Some(Duration::from_secs(5)))
+            .map_err(|e| e.to_string())?;
+        let reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+        Ok((reader, stream))
+    }
+}
+
+/// Background health-probe loop over a fleet's endpoints; stops and joins
+/// on drop.
+pub struct Prober {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Prober {
+    pub fn start(endpoints: Vec<Arc<Endpoint>>, interval: Duration, timeout: Duration) -> Prober {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("shard-probe".into())
+            .spawn(move || {
+                // ORDERING: Relaxed — one-way stop latch polled per round;
+                // shutdown correctness comes from the join.
+                while !stop2.load(Ordering::Relaxed) {
+                    for ep in &endpoints {
+                        ep.probe(timeout);
+                    }
+                    std::thread::sleep(interval);
+                }
+            })
+            .ok();
+        Prober { stop, join }
+    }
+}
+
+impl Drop for Prober {
+    fn drop(&mut self) {
+        // ORDERING: Relaxed — one-way latch; the join below synchronizes.
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::breaker::Phase;
+
+    #[test]
+    fn unreachable_endpoint_trips_its_breaker_and_counts_failures() {
+        // port 9 (discard) on localhost: nothing listens in the test env
+        let ep = Endpoint::new("127.0.0.1:9", 2, Duration::from_millis(50));
+        assert!(ep.admit(), "breaker starts closed");
+        for _ in 0..2 {
+            match ep.call(r#"{"id":0,"op":"health"}"#, Duration::from_millis(200)) {
+                CallOutcome::Unreachable(_) => {}
+                CallOutcome::Reply(r) => panic!("nothing listens on :9, got {r}"),
+            }
+        }
+        assert_eq!(ep.state.phase(), Phase::Degraded, "threshold 2 tripped");
+        assert!(!ep.admit(), "open breaker sheds before the cooldown");
+        assert_eq!(ep.metrics.failed.load(Ordering::Relaxed), 2);
+        assert_eq!(ep.metrics.sent.load(Ordering::Relaxed), 2);
+        // probes keep flowing despite the open breaker (recovery path)
+        assert!(!ep.probe(Duration::from_millis(200)));
+        assert_eq!(ep.metrics.probes.load(Ordering::Relaxed), 1);
+        assert_eq!(ep.metrics.probe_failures.load(Ordering::Relaxed), 1);
+    }
+}

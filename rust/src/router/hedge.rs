@@ -1,0 +1,106 @@
+//! Hedged-request policy: when to duplicate a straggling sub-query.
+//!
+//! Classic tail-at-scale hedging: wait a latency-percentile delay, then
+//! fire one duplicate at a replica and take whichever terminal answer
+//! lands first. The delay adapts per shard group — it tracks that
+//! group's own p95 (clamped to a configured band), so a uniformly slow
+//! group does not trigger a hedge storm and a uniformly fast one hedges
+//! promptly. Until enough samples exist the policy uses a fixed initial
+//! delay rather than extrapolating from noise.
+
+use crate::coordinator::metrics::Histogram;
+use std::time::Duration;
+
+/// Samples needed before the p95 estimate replaces the initial delay.
+const MIN_SAMPLES: u64 = 16;
+
+/// Per-group hedge policy (shared by that group's scatter workers).
+pub struct HedgePolicy {
+    latency: Histogram,
+    min: Duration,
+    max: Duration,
+    initial: Duration,
+}
+
+impl HedgePolicy {
+    pub fn new(min: Duration, max: Duration, initial: Duration) -> HedgePolicy {
+        HedgePolicy {
+            latency: Histogram::new(),
+            min,
+            max,
+            initial: initial.clamp(min, max),
+        }
+    }
+
+    /// Record one successful sub-query latency.
+    pub fn observe(&self, latency: Duration) {
+        self.latency.record_us(latency.as_micros() as u64);
+    }
+
+    /// How long to wait on the primary before hedging.
+    pub fn delay(&self) -> Duration {
+        if self.latency.count() < MIN_SAMPLES {
+            return self.initial;
+        }
+        Duration::from_micros(self.latency.percentile_us(0.95)).clamp(self.min, self.max)
+    }
+
+    /// Observations recorded so far (observability).
+    pub fn samples(&self) -> u64 {
+        self.latency.count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> HedgePolicy {
+        HedgePolicy::new(
+            Duration::from_millis(1),
+            Duration::from_millis(100),
+            Duration::from_millis(10),
+        )
+    }
+
+    #[test]
+    fn initial_delay_until_enough_samples() {
+        let p = policy();
+        assert_eq!(p.delay(), Duration::from_millis(10));
+        for _ in 0..MIN_SAMPLES - 1 {
+            p.observe(Duration::from_micros(500));
+        }
+        assert_eq!(p.delay(), Duration::from_millis(10), "still warming up");
+        p.observe(Duration::from_micros(500));
+        assert!(p.delay() < Duration::from_millis(10), "p95 took over");
+        assert_eq!(p.samples(), MIN_SAMPLES);
+    }
+
+    #[test]
+    fn delay_tracks_p95_within_the_band() {
+        let p = policy();
+        for _ in 0..100 {
+            p.observe(Duration::from_millis(4));
+        }
+        let d = p.delay();
+        // histogram buckets are power-of-two upper edges: ~4ms lands in
+        // the (4096..8192]us bucket
+        assert!(d >= Duration::from_millis(4) && d <= Duration::from_millis(8), "{d:?}");
+        // a slow group clamps at the max instead of never hedging
+        let slow = policy();
+        for _ in 0..100 {
+            slow.observe(Duration::from_millis(900));
+        }
+        assert_eq!(slow.delay(), Duration::from_millis(100));
+        // a fast group clamps at the min instead of hedging instantly
+        let fast = HedgePolicy::new(
+            Duration::from_millis(2),
+            Duration::from_millis(100),
+            Duration::from_millis(10),
+        );
+        for _ in 0..100 {
+            fast.observe(Duration::from_micros(3));
+        }
+        assert_eq!(fast.delay(), Duration::from_millis(2));
+    }
+}

@@ -1,0 +1,861 @@
+//! Fleet tier: a shard router that treats whole backend shards as
+//! untrusted and individually failable.
+//!
+//! The [`ShardRouter`] is a [`LineService`] — it plugs into the same
+//! [`crate::coordinator::server::serve`] loop as a single-node
+//! coordinator, speaking the same newline-delimited JSON protocol, but
+//! instead of owning compute lanes it owns N **shard groups** (each a
+//! list of replica [`Endpoint`]s running a [`shard::ShardService`]).
+//!
+//! Routing policy, by op:
+//!
+//! - **Compute ops** (`transform`, `binary_embed`, ...): the raw request
+//!   line is forwarded verbatim to one shard — the rendezvous-hash owner
+//!   of the request key — and its reply relayed verbatim. On a transport
+//!   failure, a retryable refusal, or a `timeout`, the router **fails
+//!   over** along the replica list and then the rendezvous fallback
+//!   order; terminal refusals (`bad_dim`, `throttled`, ...) are the
+//!   shard's answer and are relayed, not retried. Only when every
+//!   replica of every group is down does the client see a typed
+//!   `shard_down` refusal with a `retry_after_ms` hint.
+//! - **`lsh_query`**: scatter-gather. Every group gets a sub-query (with
+//!   per-group replica failover and a hedged duplicate after that
+//!   group's p95 delay — see [`hedge::HedgePolicy`]); answers merge with
+//!   [`topology::merge_topk`] into the exact global top-k. A group that
+//!   cannot answer inside the scatter budget degrades the result instead
+//!   of blocking it: the reply is a [`partial`](crate::coordinator::codec::CODE_PARTIAL)
+//!   success naming the missing shards in `degraded` — never a silent
+//!   truncation, never a hang.
+//! - **Introspection** (`metrics`, `health`, `metrics_text`): answered by
+//!   the router itself with fleet-level counters and per-endpoint
+//!   breaker phases.
+//!
+//! Health probes (see [`health::Prober`]) run in the background and are
+//! the recovery path: an open per-endpoint breaker closes again when
+//! probes succeed, without spending client requests on the experiment.
+
+pub mod health;
+pub mod hedge;
+pub mod shard;
+pub mod topology;
+
+pub use health::{CallOutcome, Endpoint, Prober};
+pub use hedge::HedgePolicy;
+pub use shard::{demo_points, ShardIndex, ShardIndexConfig, ShardService};
+pub use topology::{merge_topk, parse_topology, ShardSpec};
+
+use crate::coordinator::breaker::Phase;
+use crate::coordinator::client::is_retryable;
+use crate::coordinator::codec::{self, ParsedLine, CODE_BAD_REQUEST, CODE_SHARD_DOWN, CODE_TIMEOUT, SHARD_DOWN_RETRY_MS};
+use crate::coordinator::prom::{Family, Sample};
+use crate::coordinator::server::LineService;
+use crate::coordinator::{SubmitError, DRAINING_RETRY_MS};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Router tuning knobs (every duration has a CLI flag on `route`).
+#[derive(Clone, Copy, Debug)]
+pub struct RouterOptions {
+    /// Per sub-request attempt: dial + write + read one reply line.
+    pub attempt_timeout: Duration,
+    /// Whole scatter-gather budget; groups still silent at the deadline
+    /// degrade the result instead of extending it.
+    pub scatter_budget: Duration,
+    /// Background health-probe cadence.
+    pub probe_interval: Duration,
+    pub probe_timeout: Duration,
+    /// Consecutive transport failures before an endpoint's breaker opens.
+    pub breaker_threshold: u32,
+    pub breaker_cooldown: Duration,
+    /// Clamp band + warm-up value for the per-group hedge delay.
+    pub hedge_min: Duration,
+    pub hedge_max: Duration,
+    pub hedge_initial: Duration,
+}
+
+impl Default for RouterOptions {
+    fn default() -> RouterOptions {
+        RouterOptions {
+            attempt_timeout: Duration::from_secs(2),
+            scatter_budget: Duration::from_secs(3),
+            probe_interval: Duration::from_millis(100),
+            probe_timeout: Duration::from_millis(250),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            hedge_min: Duration::from_millis(1),
+            hedge_max: Duration::from_millis(100),
+            hedge_initial: Duration::from_millis(10),
+        }
+    }
+}
+
+/// Fleet-level counters (exported via `metrics` and `metrics_text`).
+#[derive(Default)]
+pub struct RouterMetrics {
+    /// Request lines handled (any op).
+    pub queries: AtomicU64,
+    /// Single-shard replies relayed verbatim.
+    pub relayed: AtomicU64,
+    /// Scatter-gather `lsh_query` fan-outs started.
+    pub scatter_queries: AtomicU64,
+    /// Scatter results with every group present.
+    pub full: AtomicU64,
+    /// Scatter results missing at least one group (marked `partial`).
+    pub partial: AtomicU64,
+    /// Typed `shard_down` refusals issued (single-shard and scatter).
+    pub shard_down: AtomicU64,
+    /// Failover hops (replica-to-replica or group-to-group).
+    pub failovers: AtomicU64,
+    /// Hedged duplicate sub-queries launched.
+    pub hedges: AtomicU64,
+    /// Hedges whose answer arrived first.
+    pub hedge_wins: AtomicU64,
+}
+
+impl RouterMetrics {
+    fn get(c: &AtomicU64) -> f64 {
+        // ORDERING: Relaxed — monotonic observability counters; readers
+        // tolerate slightly stale values.
+        c.load(Ordering::Relaxed) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queries", Json::Num(Self::get(&self.queries))),
+            ("relayed", Json::Num(Self::get(&self.relayed))),
+            ("scatter_queries", Json::Num(Self::get(&self.scatter_queries))),
+            ("full", Json::Num(Self::get(&self.full))),
+            ("partial", Json::Num(Self::get(&self.partial))),
+            ("shard_down", Json::Num(Self::get(&self.shard_down))),
+            ("failovers", Json::Num(Self::get(&self.failovers))),
+            ("hedges", Json::Num(Self::get(&self.hedges))),
+            ("hedge_wins", Json::Num(Self::get(&self.hedge_wins))),
+        ])
+    }
+}
+
+/// One shard group at runtime: named replicas plus that group's adaptive
+/// hedge policy.
+struct Group {
+    name: String,
+    endpoints: Vec<Arc<Endpoint>>,
+    hedge: Arc<HedgePolicy>,
+}
+
+/// What one group's scatter worker resolved to.
+enum GroupAnswer {
+    /// Decoded top-k pairs from a successful sub-query.
+    Pairs(Vec<(u32, u64)>),
+    /// A terminal (non-failover-eligible) refusal — the fleet's answer.
+    Terminal(Json),
+    /// Every replica unreachable / refused retryably / timed out.
+    Down,
+}
+
+/// The fleet front-end: owns the shard endpoints, routes compute ops to
+/// their rendezvous owner, scatter-gathers `lsh_query`.
+pub struct ShardRouter {
+    groups: Vec<Group>,
+    opts: RouterOptions,
+    pub metrics: Arc<RouterMetrics>,
+    draining: AtomicBool,
+    _prober: Prober,
+}
+
+impl ShardRouter {
+    pub fn new(specs: Vec<ShardSpec>, opts: RouterOptions) -> ShardRouter {
+        let groups: Vec<Group> = specs
+            .into_iter()
+            .map(|s| Group {
+                name: s.name,
+                endpoints: s
+                    .endpoints
+                    .iter()
+                    .map(|a| {
+                        Arc::new(Endpoint::new(a, opts.breaker_threshold, opts.breaker_cooldown))
+                    })
+                    .collect(),
+                hedge: Arc::new(HedgePolicy::new(
+                    opts.hedge_min,
+                    opts.hedge_max,
+                    opts.hedge_initial,
+                )),
+            })
+            .collect();
+        let all: Vec<Arc<Endpoint>> =
+            groups.iter().flat_map(|g| g.endpoints.iter().cloned()).collect();
+        let prober = Prober::start(all, opts.probe_interval, opts.probe_timeout);
+        ShardRouter {
+            groups,
+            opts,
+            metrics: Arc::new(RouterMetrics::default()),
+            draining: AtomicBool::new(false),
+            _prober: prober,
+        }
+    }
+
+    fn draining_refusal(&self, id: Json) -> Json {
+        let e = SubmitError::Draining { retry_after_ms: DRAINING_RETRY_MS };
+        codec::err_response_with_hint(id, &e.to_string(), e.code(), e.retry_after_ms())
+    }
+
+    /// Forward `line` verbatim to the rendezvous owner of this request,
+    /// failing over through replicas and then fallback groups.
+    fn route_single(&self, line: &str, req: &codec::Request) -> Json {
+        let key = topology::request_key(req.op.name(), &req.vector);
+        let names: Vec<String> = self.groups.iter().map(|g| g.name.clone()).collect();
+        for gi in topology::rendezvous_order(&names, key) {
+            for ep in &self.groups[gi].endpoints {
+                if !ep.admit() {
+                    continue;
+                }
+                match ep.call(line, self.opts.attempt_timeout) {
+                    CallOutcome::Reply(doc) => {
+                        let ok = doc.get("ok") == Some(&Json::Bool(true));
+                        let code = doc.get("code").and_then(Json::as_str).unwrap_or("");
+                        if !ok && (is_retryable(code) || code == CODE_TIMEOUT) {
+                            self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        self.metrics.relayed.fetch_add(1, Ordering::Relaxed);
+                        return doc;
+                    }
+                    CallOutcome::Unreachable(_) => {
+                        self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                }
+            }
+        }
+        self.metrics.shard_down.fetch_add(1, Ordering::Relaxed);
+        codec::err_response_with_hint(
+            req.id.clone(),
+            "no shard reachable for this request",
+            CODE_SHARD_DOWN,
+            Some(SHARD_DOWN_RETRY_MS),
+        )
+    }
+
+    /// Scatter an `lsh_query` to every group, merge what comes back
+    /// inside the budget, mark whatever is missing.
+    fn scatter_lsh(&self, id: Json, doc: &Json) -> Json {
+        let Some(vec_json) = doc.get("vector").and_then(|v| v.as_arr()) else {
+            return codec::err_response(id, "missing 'vector' array", CODE_BAD_REQUEST);
+        };
+        if vec_json.iter().any(|v| v.as_f64().is_none()) {
+            return codec::err_response(id, "'vector' must contain numbers", CODE_BAD_REQUEST);
+        }
+        let k = match doc.get("k") {
+            None => return codec::err_response(id, "missing 'k'", CODE_BAD_REQUEST),
+            Some(v) => match v.as_usize() {
+                Some(k) if k >= 1 => k,
+                _ => {
+                    return codec::err_response(
+                        id,
+                        "'k' must be a positive integer",
+                        CODE_BAD_REQUEST,
+                    )
+                }
+            },
+        };
+        self.metrics.scatter_queries.fetch_add(1, Ordering::Relaxed);
+        // re-render the parsed vector (exact: Json holds the f64s the
+        // client sent) under a fixed sub-request id
+        let sub_line = Arc::new(
+            Json::obj(vec![
+                ("id", Json::Num(0.0)),
+                ("op", Json::Str("lsh_query".to_string())),
+                ("vector", Json::Arr(vec_json.to_vec())),
+                ("k", Json::Num(k as f64)),
+            ])
+            .to_string(),
+        );
+
+        let (tx, rx) = mpsc::channel();
+        for (gi, g) in self.groups.iter().enumerate() {
+            let endpoints = g.endpoints.clone();
+            let hedge = Arc::clone(&g.hedge);
+            let metrics = Arc::clone(&self.metrics);
+            let line = Arc::clone(&sub_line);
+            let attempt = self.opts.attempt_timeout;
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let ans = query_group(&endpoints, &line, attempt, &hedge, &metrics);
+                let _ = tx.send((gi, ans));
+            });
+        }
+        drop(tx);
+
+        let deadline = Instant::now() + self.opts.scatter_budget;
+        let mut answers: Vec<GroupAnswer> =
+            (0..self.groups.len()).map(|_| GroupAnswer::Down).collect();
+        let mut received = 0;
+        while received < self.groups.len() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break; // still-silent groups stay Down => degraded
+            }
+            match rx.recv_timeout(left) {
+                Ok((gi, ans)) => {
+                    answers[gi] = ans;
+                    received += 1;
+                }
+                Err(_) => break,
+            }
+        }
+
+        // a terminal refusal from any shard is the fleet's answer (e.g.
+        // bad_dim: every shard would refuse identically)
+        for ans in &answers {
+            if let GroupAnswer::Terminal(doc) = ans {
+                let msg = doc
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("shard refused the query");
+                let code = doc.get("code").and_then(Json::as_str).unwrap_or(CODE_BAD_REQUEST);
+                let hint = doc.get("retry_after_ms").and_then(Json::as_f64).map(|f| f as u64);
+                return codec::err_response_with_hint(id, msg, code, hint);
+            }
+        }
+
+        let mut parts = Vec::new();
+        let mut degraded = Vec::new();
+        for (gi, ans) in answers.into_iter().enumerate() {
+            match ans {
+                GroupAnswer::Pairs(p) => parts.push(p),
+                GroupAnswer::Down => degraded.push(self.groups[gi].name.clone()),
+                GroupAnswer::Terminal(_) => unreachable!("terminals returned above"),
+            }
+        }
+        if parts.is_empty() {
+            self.metrics.shard_down.fetch_add(1, Ordering::Relaxed);
+            return codec::err_response_with_hint(
+                id,
+                "no shard answered the query",
+                CODE_SHARD_DOWN,
+                Some(SHARD_DOWN_RETRY_MS),
+            );
+        }
+        let merged = topology::merge_topk(&parts, k);
+        if degraded.is_empty() {
+            self.metrics.full.fetch_add(1, Ordering::Relaxed);
+            codec::lsh_ok_response(id, &merged)
+        } else {
+            self.metrics.partial.fetch_add(1, Ordering::Relaxed);
+            codec::partial_response(id, codec::lsh_result(&merged), degraded)
+        }
+    }
+
+    /// Fleet counters plus per-endpoint wire counters and breaker phase.
+    pub fn metrics_json(&self) -> Json {
+        let mut map = BTreeMap::new();
+        map.insert("router".to_string(), self.metrics.to_json());
+        for g in &self.groups {
+            let eps: Vec<Json> = g
+                .endpoints
+                .iter()
+                .map(|ep| {
+                    Json::obj(vec![
+                        ("addr", Json::Str(ep.addr.clone())),
+                        ("sent", Json::Num(RouterMetrics::get(&ep.metrics.sent))),
+                        ("ok", Json::Num(RouterMetrics::get(&ep.metrics.ok))),
+                        ("failed", Json::Num(RouterMetrics::get(&ep.metrics.failed))),
+                        ("probes", Json::Num(RouterMetrics::get(&ep.metrics.probes))),
+                        (
+                            "probe_failures",
+                            Json::Num(RouterMetrics::get(&ep.metrics.probe_failures)),
+                        ),
+                        ("state", Json::Str(ep.state.phase().name().to_string())),
+                    ])
+                })
+                .collect();
+            map.insert(g.name.clone(), Json::Arr(eps));
+        }
+        Json::Obj(map)
+    }
+
+    /// Drain flag plus per-replica breaker phases.
+    pub fn health_json(&self) -> Json {
+        let mut map = BTreeMap::new();
+        // ORDERING: Relaxed — one-way drain latch, freshness not needed.
+        map.insert("draining".to_string(), Json::Bool(self.draining.load(Ordering::Relaxed)));
+        for g in &self.groups {
+            let eps: Vec<Json> = g
+                .endpoints
+                .iter()
+                .map(|ep| {
+                    Json::obj(vec![
+                        ("addr", Json::Str(ep.addr.clone())),
+                        ("state", Json::Str(ep.state.phase().name().to_string())),
+                    ])
+                })
+                .collect();
+            map.insert(g.name.clone(), Json::Arr(eps));
+        }
+        Json::Obj(map)
+    }
+
+    /// Prometheus families: `ts_router_*` fleet counters, `ts_shard_*`
+    /// per-endpoint counters, and a `ts_shard_up` breaker gauge.
+    pub fn families(&self) -> Vec<Family> {
+        let m = &self.metrics;
+        let router: [(&str, &AtomicU64); 9] = [
+            ("queries", &m.queries),
+            ("relayed", &m.relayed),
+            ("scatter_queries", &m.scatter_queries),
+            ("full", &m.full),
+            ("partial", &m.partial),
+            ("shard_down", &m.shard_down),
+            ("failovers", &m.failovers),
+            ("hedges", &m.hedges),
+            ("hedge_wins", &m.hedge_wins),
+        ];
+        let mut out: Vec<Family> = router
+            .into_iter()
+            .map(|(key, c)| Family {
+                name: format!("ts_router_{key}"),
+                kind: "counter".to_string(),
+                samples: vec![Sample { labels: Vec::new(), value: RouterMetrics::get(c) }],
+            })
+            .collect();
+        let per_shard: [(&str, fn(&health::EndpointMetrics) -> &AtomicU64); 5] = [
+            ("sent", |m| &m.sent),
+            ("ok", |m| &m.ok),
+            ("failed", |m| &m.failed),
+            ("probes", |m| &m.probes),
+            ("probe_failures", |m| &m.probe_failures),
+        ];
+        for (key, field) in per_shard {
+            let samples = self
+                .groups
+                .iter()
+                .flat_map(|g| {
+                    g.endpoints.iter().map(|ep| Sample {
+                        labels: vec![
+                            ("shard".to_string(), g.name.clone()),
+                            ("addr".to_string(), ep.addr.clone()),
+                        ],
+                        value: RouterMetrics::get(field(&ep.metrics)),
+                    })
+                })
+                .collect();
+            out.push(Family {
+                name: format!("ts_shard_{key}"),
+                kind: "counter".to_string(),
+                samples,
+            });
+        }
+        let up = self
+            .groups
+            .iter()
+            .flat_map(|g| {
+                g.endpoints.iter().map(|ep| Sample {
+                    labels: vec![
+                        ("shard".to_string(), g.name.clone()),
+                        ("addr".to_string(), ep.addr.clone()),
+                    ],
+                    value: if ep.state.phase() == Phase::Open { 1.0 } else { 0.0 },
+                })
+            })
+            .collect();
+        out.push(Family { name: "ts_shard_up".to_string(), kind: "gauge".to_string(), samples: up });
+        out
+    }
+}
+
+impl LineService for ShardRouter {
+    fn handle_line(&self, line: &str, _peer: &str) -> Json {
+        self.metrics.queries.fetch_add(1, Ordering::Relaxed);
+        match codec::parse_line(line) {
+            ParsedLine::Malformed(reply) => reply,
+            ParsedLine::Compute(req) => {
+                // ORDERING: Relaxed — one-way drain latch; a request that
+                // races the flag is refused by the shard's own drain.
+                if self.draining.load(Ordering::Relaxed) {
+                    return self.draining_refusal(req.id);
+                }
+                self.route_single(line, &req)
+            }
+            ParsedLine::Other { id, op, doc } => match op.as_deref() {
+                Some("lsh_query") => {
+                    // ORDERING: Relaxed — one-way drain latch (as above).
+                    if self.draining.load(Ordering::Relaxed) {
+                        return self.draining_refusal(id);
+                    }
+                    self.scatter_lsh(id, &doc)
+                }
+                Some("metrics") => codec::ok_response_json(id, self.metrics_json()),
+                Some("health") => codec::ok_response_json(id, self.health_json()),
+                Some("metrics_text") => codec::ok_response_json(
+                    id,
+                    Json::Str(crate::coordinator::prom::render(&self.families())),
+                ),
+                _ => codec::err_response(id, "missing or unknown 'op'", CODE_BAD_REQUEST),
+            },
+        }
+    }
+
+    fn begin_drain(&self) {
+        // ORDERING: Relaxed — one-way latch; handlers observe it on
+        // their next line, which is all drain needs.
+        self.draining.store(true, Ordering::Relaxed);
+    }
+
+    fn drain(&self, _deadline: Duration) -> bool {
+        // sub-requests are fire-and-forget threads with their own
+        // timeouts; nothing to join at the router
+        true
+    }
+}
+
+/// Spawn the next admitted endpoint's attempt (detached thread); `false`
+/// when no untried admitted endpoint remains.
+fn launch_next(
+    endpoints: &[Arc<Endpoint>],
+    cursor: &mut usize,
+    line: &Arc<String>,
+    attempt_timeout: Duration,
+    is_hedge: bool,
+    tx: &mpsc::Sender<(bool, Instant, CallOutcome)>,
+) -> bool {
+    while *cursor < endpoints.len() {
+        let ep = Arc::clone(&endpoints[*cursor]);
+        *cursor += 1;
+        if !ep.admit() {
+            continue;
+        }
+        let tx = tx.clone();
+        let line = Arc::clone(line);
+        std::thread::spawn(move || {
+            let started = Instant::now();
+            let out = ep.call(&line, attempt_timeout);
+            // receiver gone = the gather already resolved; drop silently
+            let _ = tx.send((is_hedge, started, out));
+        });
+        return true;
+    }
+    false
+}
+
+/// Resolve one group's sub-query: primary attempt, hedged duplicate after
+/// the group's adaptive delay, replica failover on retryable failures,
+/// first terminal answer wins.
+fn query_group(
+    endpoints: &[Arc<Endpoint>],
+    line: &Arc<String>,
+    attempt_timeout: Duration,
+    hedge: &Arc<HedgePolicy>,
+    metrics: &Arc<RouterMetrics>,
+) -> GroupAnswer {
+    let hedge_delay = hedge.delay();
+    let deadline = Instant::now() + attempt_timeout + hedge_delay + attempt_timeout;
+    let (tx, rx) = mpsc::channel();
+    let mut cursor = 0usize;
+    if !launch_next(endpoints, &mut cursor, line, attempt_timeout, false, &tx) {
+        return GroupAnswer::Down; // breaker-open across the whole group
+    }
+    let mut pending = 1usize;
+    let mut hedged = false;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return GroupAnswer::Down;
+        }
+        let wait = if hedged { left } else { left.min(hedge_delay) };
+        match rx.recv_timeout(wait) {
+            Ok((is_hedge, started, CallOutcome::Reply(doc))) => {
+                if doc.get("ok") == Some(&Json::Bool(true)) {
+                    if let Some(pairs) = doc.get("result").and_then(codec::lsh_pairs) {
+                        hedge.observe(started.elapsed());
+                        if is_hedge {
+                            metrics.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return GroupAnswer::Pairs(pairs);
+                    }
+                    // an ok reply we cannot decode is a failed attempt
+                } else {
+                    let code = doc.get("code").and_then(Json::as_str).unwrap_or("");
+                    if !(is_retryable(code) || code == CODE_TIMEOUT) {
+                        return GroupAnswer::Terminal(doc);
+                    }
+                }
+                pending -= 1;
+                metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                if launch_next(endpoints, &mut cursor, line, attempt_timeout, false, &tx) {
+                    pending += 1;
+                } else if pending == 0 {
+                    return GroupAnswer::Down;
+                }
+            }
+            Ok((_, _, CallOutcome::Unreachable(_))) => {
+                pending -= 1;
+                metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                if launch_next(endpoints, &mut cursor, line, attempt_timeout, false, &tx) {
+                    pending += 1;
+                } else if pending == 0 {
+                    return GroupAnswer::Down;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if hedged {
+                    return GroupAnswer::Down; // the full deadline elapsed
+                }
+                hedged = true;
+                if launch_next(endpoints, &mut cursor, line, attempt_timeout, true, &tx) {
+                    pending += 1;
+                    metrics.hedges.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return GroupAnswer::Down,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{self, ServerOptions, TcpServer};
+    use crate::coordinator::{Config, Coordinator, NativeBackend};
+    use crate::runtime::Op;
+
+    const N: usize = 64;
+    const FLEET_SEED: u64 = 71;
+    const POINTS: usize = 240;
+
+    fn spawn_shard(shard: usize, shards: usize) -> TcpServer {
+        let backend = Arc::new(NativeBackend::new(&[N], 1.0, 17));
+        let config = Config {
+            lanes: vec![(Op::Transform, N), (Op::BinaryEmbed, N)],
+            max_batch: 1,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 64,
+            sigma: 1.0,
+            seed: 17,
+            ..Config::default()
+        };
+        let coordinator = Arc::new(Coordinator::start(config, backend));
+        let points = demo_points(N, POINTS, FLEET_SEED);
+        let index = ShardIndex::build(
+            &points,
+            &ShardIndexConfig {
+                n: N,
+                tables: 6,
+                prefix_bits: 10,
+                seed: FLEET_SEED,
+                shard,
+                shards,
+            },
+        );
+        let service = Arc::new(ShardService::new(coordinator, index));
+        server::serve(service, "127.0.0.1:0", ServerOptions::default()).unwrap()
+    }
+
+    fn fast_opts() -> RouterOptions {
+        RouterOptions {
+            attempt_timeout: Duration::from_millis(500),
+            scatter_budget: Duration::from_millis(1500),
+            probe_interval: Duration::from_millis(25),
+            probe_timeout: Duration::from_millis(100),
+            breaker_cooldown: Duration::from_millis(50),
+            ..RouterOptions::default()
+        }
+    }
+
+    fn specs_for(servers: &[&TcpServer]) -> Vec<ShardSpec> {
+        servers
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ShardSpec {
+                name: format!("s{i}"),
+                endpoints: vec![s.addr().to_string()],
+            })
+            .collect()
+    }
+
+    fn lsh_line(q: &[f32], k: usize) -> String {
+        let vals: Vec<String> = q.iter().map(|x| format!("{x}")).collect();
+        format!("{{\"id\": 7, \"op\": \"lsh_query\", \"vector\": [{}], \"k\": {k}}}", vals.join(","))
+    }
+
+    fn query_vec(seed: u64) -> Vec<f32> {
+        crate::util::rng::Rng::new(seed).unit_vec(N)
+    }
+
+    #[test]
+    fn scatter_gather_reproduces_the_global_topk() {
+        let s0 = spawn_shard(0, 2);
+        let s1 = spawn_shard(1, 2);
+        let router = ShardRouter::new(specs_for(&[&s0, &s1]), fast_opts());
+        let points = demo_points(N, POINTS, FLEET_SEED);
+        let global = ShardIndex::build(
+            &points,
+            &ShardIndexConfig {
+                n: N,
+                tables: 6,
+                prefix_bits: 10,
+                seed: FLEET_SEED,
+                shard: 0,
+                shards: 1,
+            },
+        );
+        for seed in 0..5u64 {
+            let q = query_vec(seed);
+            let reply = router.handle_line(&lsh_line(&q, 8), "test");
+            assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "{reply}");
+            assert_eq!(reply.get("code"), None, "full result is unmarked: {reply}");
+            assert_eq!(reply.get("id"), Some(&Json::Num(7.0)), "client id echoed");
+            let pairs = codec::lsh_pairs(reply.get("result").unwrap()).unwrap();
+            assert_eq!(pairs, global.query(&q, 8), "fleet == one big index");
+        }
+        assert_eq!(router.metrics.full.load(Ordering::Relaxed), 5);
+        assert_eq!(router.metrics.partial.load(Ordering::Relaxed), 0);
+        s0.shutdown();
+        s1.shutdown();
+    }
+
+    #[test]
+    fn a_dead_shard_degrades_to_a_marked_partial_result() {
+        let s0 = spawn_shard(0, 2);
+        let s1 = spawn_shard(1, 2);
+        let addr1 = s1.addr().to_string();
+        let specs = vec![
+            ShardSpec { name: "s0".to_string(), endpoints: vec![s0.addr().to_string()] },
+            ShardSpec { name: "s1".to_string(), endpoints: vec![addr1] },
+        ];
+        let router = ShardRouter::new(specs, fast_opts());
+        s1.shutdown(); // kill the whole second shard
+        let q = query_vec(3);
+        let reply = router.handle_line(&lsh_line(&q, 8), "test");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "partial is a success: {reply}");
+        assert_eq!(
+            reply.get("code").and_then(Json::as_str),
+            Some(codec::CODE_PARTIAL),
+            "degradation is marked, never silent: {reply}"
+        );
+        let degraded = reply.get("degraded").unwrap().as_arr().unwrap();
+        assert_eq!(degraded, &[Json::Str("s1".to_string())][..], "names the missing shard");
+        // the surviving shard's answer is still the exact local top-k
+        let points = demo_points(N, POINTS, FLEET_SEED);
+        let local = ShardIndex::build(
+            &points,
+            &ShardIndexConfig {
+                n: N,
+                tables: 6,
+                prefix_bits: 10,
+                seed: FLEET_SEED,
+                shard: 0,
+                shards: 2,
+            },
+        );
+        let pairs = codec::lsh_pairs(reply.get("result").unwrap()).unwrap();
+        assert_eq!(pairs, local.query(&q, 8));
+        assert_eq!(router.metrics.partial.load(Ordering::Relaxed), 1);
+        s0.shutdown();
+    }
+
+    #[test]
+    fn compute_requests_fail_over_to_the_replica_invisibly() {
+        let primary = spawn_shard(0, 1);
+        let replica = spawn_shard(0, 1);
+        let specs = vec![ShardSpec {
+            name: "s0".to_string(),
+            endpoints: vec![primary.addr().to_string(), replica.addr().to_string()],
+        }];
+        let router = ShardRouter::new(specs, fast_opts());
+        primary.shutdown();
+        let vals: Vec<String> = (0..N).map(|i| format!("{}", i as f32 / 8.0 - 4.0)).collect();
+        let line =
+            format!("{{\"id\": 3, \"op\": \"transform\", \"vector\": [{}]}}", vals.join(","));
+        let reply = router.handle_line(&line, "test");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(true)), "replica served it: {reply}");
+        assert_eq!(reply.get("id"), Some(&Json::Num(3.0)));
+        assert!(router.metrics.failovers.load(Ordering::Relaxed) >= 1);
+        replica.shutdown();
+    }
+
+    #[test]
+    fn an_empty_fleet_refuses_with_a_typed_shard_down() {
+        // one group whose only endpoint never listens
+        let specs = vec![ShardSpec {
+            name: "s0".to_string(),
+            endpoints: vec!["127.0.0.1:9".to_string()],
+        }];
+        let mut opts = fast_opts();
+        opts.attempt_timeout = Duration::from_millis(150);
+        opts.scatter_budget = Duration::from_millis(800);
+        let router = ShardRouter::new(specs, opts);
+        let q = query_vec(1);
+        let reply = router.handle_line(&lsh_line(&q, 4), "test");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+        assert_eq!(reply.get("code").and_then(Json::as_str), Some(CODE_SHARD_DOWN));
+        assert_eq!(
+            reply.get("retry_after_ms"),
+            Some(&Json::Num(SHARD_DOWN_RETRY_MS as f64)),
+            "shard_down refusals carry the retry hint: {reply}"
+        );
+        let vals: Vec<String> = (0..N).map(|_| "0.5".to_string()).collect();
+        let line =
+            format!("{{\"id\": 9, \"op\": \"transform\", \"vector\": [{}]}}", vals.join(","));
+        let reply = router.handle_line(&line, "test");
+        assert_eq!(reply.get("code").and_then(Json::as_str), Some(CODE_SHARD_DOWN));
+        assert_eq!(reply.get("id"), Some(&Json::Num(9.0)), "client id survives refusal");
+        assert!(router.metrics.shard_down.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn terminal_refusals_relay_instead_of_masquerading_as_shard_down() {
+        let s0 = spawn_shard(0, 1);
+        let router = ShardRouter::new(specs_for(&[&s0]), fast_opts());
+        // wrong dimensionality: the shard refuses bad_dim (terminal)
+        let reply =
+            router.handle_line("{\"id\": 5, \"op\": \"lsh_query\", \"vector\": [1.0], \"k\": 2}", "t");
+        assert_eq!(reply.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(reply.get("code").and_then(Json::as_str), Some("bad_dim"), "{reply}");
+        assert_eq!(reply.get("id"), Some(&Json::Num(5.0)), "client id restored");
+        s0.shutdown();
+    }
+
+    #[test]
+    fn router_introspection_reports_fleet_counters_and_breaker_phases() {
+        let s0 = spawn_shard(0, 1);
+        let router = ShardRouter::new(specs_for(&[&s0]), fast_opts());
+        let q = query_vec(2);
+        router.handle_line(&lsh_line(&q, 4), "test");
+        let m = router.handle_line("{\"id\": 1, \"op\": \"metrics\"}", "t");
+        let result = m.get("result").unwrap();
+        let r = result.get("router").unwrap();
+        assert_eq!(r.get("scatter_queries"), Some(&Json::Num(1.0)));
+        let eps = result.get("s0").unwrap().as_arr().unwrap();
+        assert_eq!(eps[0].get("state").and_then(Json::as_str), Some("open"));
+        let h = router.handle_line("{\"id\": 2, \"op\": \"health\"}", "t");
+        assert_eq!(h.get("result").unwrap().get("draining"), Some(&Json::Bool(false)));
+        let t = router.handle_line("{\"id\": 3, \"op\": \"metrics_text\"}", "t");
+        let text = t.get("result").unwrap().as_str().unwrap();
+        assert!(text.contains("# TYPE ts_router_scatter_queries counter"), "{text}");
+        assert!(text.contains("ts_router_full 1"), "{text}");
+        assert!(text.contains("# TYPE ts_shard_up gauge"), "{text}");
+        assert!(
+            text.contains(&format!("ts_shard_up{{shard=\"s0\",addr=\"{}\"}} 1", s0.addr())),
+            "{text}"
+        );
+        let families = crate::coordinator::prom::parse(text).expect("exposition parses");
+        assert!(families.iter().any(|f| f.name == "ts_shard_sent"));
+        s0.shutdown();
+    }
+
+    #[test]
+    fn a_draining_router_refuses_with_the_retry_hint() {
+        let s0 = spawn_shard(0, 1);
+        let router = ShardRouter::new(specs_for(&[&s0]), fast_opts());
+        router.begin_drain();
+        let q = query_vec(4);
+        let reply = router.handle_line(&lsh_line(&q, 4), "test");
+        assert_eq!(reply.get("code").and_then(Json::as_str), Some("draining"), "{reply}");
+        assert_eq!(reply.get("retry_after_ms"), Some(&Json::Num(DRAINING_RETRY_MS as f64)));
+        assert!(router.drain(Duration::from_millis(10)));
+        s0.shutdown();
+    }
+}

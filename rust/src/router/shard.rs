@@ -1,0 +1,317 @@
+//! Shard-side fleet tenant: a bucket-prefix-range slice of an LSH point
+//! set, served next to the coordinator's compute lanes.
+//!
+//! ## Placement
+//!
+//! Every shard derives the same deterministic **placement code** per
+//! point — a `prefix_bits`-bit structured binary embedding
+//! ([`crate::binary::BinaryEmbedding`] over an HD3 chain, seeded from the
+//! fleet seed with a fixed salt so it is independent of the index
+//! tables) — and keeps exactly the points whose code falls in its
+//! contiguous range of the code space: shard `i` of `m` owns codes `c`
+//! with `⌊c·m / 2^prefix_bits⌋ = i`. No coordination, no point list
+//! exchange: feed every shard the same point stream and the fleet
+//! partitions itself.
+//!
+//! ## Exactness under scatter-gather
+//!
+//! All shards build their [`crate::lsh::HammingLsh`] tables from the same
+//! fleet seed, so a point's bucket key in its shard's index equals its
+//! key in a hypothetical global index; local indices are assigned in
+//! global-id order, so the per-shard `(distance, local_id)` result order
+//! equals the global `(distance, global_id)` order. Union the per-shard
+//! buckets and you get exactly the global candidate set — which is why
+//! the router's merged top-k is *identical* to one big index's answer
+//! (asserted in the chaos suite), and a missing shard degrades recall
+//! only by its own points.
+//!
+//! [`ShardService`] is the [`LineService`] a shard process runs: it
+//! answers `lsh_query` from the local index slice and delegates every
+//! other op (compute, introspection) to the coordinator's line handler.
+
+use crate::binary::BinaryEmbedding;
+use crate::coordinator::codec::{self, ParsedLine};
+use crate::coordinator::server::{self, LineService};
+use crate::coordinator::{Coordinator, SubmitError, DRAINING_RETRY_MS};
+use crate::linalg::Workspace;
+use crate::lsh::HammingLsh;
+use crate::transform::{make, Family};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Salt xor'd into the fleet seed for the placement embedding, so
+/// placement is independent of the index tables built from the same seed.
+const PLACEMENT_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Everything needed to build one shard's slice of the fleet index.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardIndexConfig {
+    /// Point / query dimensionality (power of two).
+    pub n: usize,
+    /// LSH tables per shard.
+    pub tables: usize,
+    /// Bucket-prefix width in bits (also the placement-code width).
+    pub prefix_bits: usize,
+    /// Fleet seed: index tables AND placement derive from it, so every
+    /// shard agrees on both without coordination.
+    pub seed: u64,
+    /// This shard's position in `0..shards`.
+    pub shard: usize,
+    /// Fleet width. `1` = a global (unsharded) index.
+    pub shards: usize,
+}
+
+/// Which shard owns a placement code: contiguous range partition of the
+/// `prefix_bits`-bit code space.
+pub fn placement_owner(code: u64, prefix_bits: usize, shards: usize) -> usize {
+    ((code as u128 * shards as u128) >> prefix_bits) as usize
+}
+
+/// Deterministic per-point placement codes (identical on every shard).
+fn placement_codes(points: &[Vec<f32>], cfg: &ShardIndexConfig) -> Vec<u64> {
+    let mut rng = Rng::new(cfg.seed ^ PLACEMENT_SALT);
+    let embed = BinaryEmbedding::new(make(
+        Family::Hd3,
+        cfg.prefix_bits,
+        cfg.n,
+        cfg.n,
+        &mut rng,
+    ));
+    let mut ws = Workspace::new();
+    let mut word = vec![0u64; embed.words_per_code()];
+    let mask = if cfg.prefix_bits == 64 {
+        u64::MAX
+    } else {
+        (1u64 << cfg.prefix_bits) - 1
+    };
+    points
+        .iter()
+        .map(|p| {
+            embed.embed_into(p, &mut word, &mut ws);
+            word[0] & mask
+        })
+        .collect()
+}
+
+/// One shard's slice of the fleet LSH index: the local tables plus the
+/// local-to-global id map.
+pub struct ShardIndex {
+    index: HammingLsh,
+    /// Local row -> global point id (ascending, by construction).
+    ids: Vec<u32>,
+    n: usize,
+}
+
+impl ShardIndex {
+    /// Keep this shard's range of `points` (by placement code) and index
+    /// it. Every shard calls this with the SAME full point stream.
+    pub fn build(points: &[Vec<f32>], cfg: &ShardIndexConfig) -> ShardIndex {
+        assert!(cfg.shards >= 1, "fleet width must be at least 1");
+        assert!(cfg.shard < cfg.shards, "shard index out of range");
+        let codes = placement_codes(points, cfg);
+        let mut mine = Vec::new();
+        let mut ids = Vec::new();
+        for (i, p) in points.iter().enumerate() {
+            if placement_owner(codes[i], cfg.prefix_bits, cfg.shards) == cfg.shard {
+                ids.push(i as u32);
+                mine.push(p.clone());
+            }
+        }
+        let index = HammingLsh::build(
+            &mine,
+            Family::Hd3,
+            cfg.n,
+            cfg.tables,
+            cfg.prefix_bits,
+            cfg.seed,
+        );
+        ShardIndex {
+            index,
+            ids,
+            n: cfg.n,
+        }
+    }
+
+    /// Local top-k for `q`, reported as `(global_id, hamming_distance)`
+    /// in the fleet-wide `(distance, id)` order.
+    pub fn query(&self, q: &[f32], k: usize) -> Vec<(u32, u64)> {
+        self.index
+            .query(q, k)
+            .into_iter()
+            .map(|(local, d)| (self.ids[local], d))
+            .collect()
+    }
+
+    /// Points this shard owns.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Query/point dimensionality.
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+}
+
+/// Deterministic demo point set (unit vectors) shared by the `serve
+/// --shard` CLI and the chaos suite: every shard of a fleet generates the
+/// identical stream from the fleet seed and keeps its own slice.
+pub fn demo_points(n: usize, count: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..count).map(|_| rng.unit_vec(n)).collect()
+}
+
+/// The [`LineService`] a shard process runs: `lsh_query` against the
+/// local index slice, everything else delegated to the coordinator.
+pub struct ShardService {
+    coordinator: Arc<Coordinator>,
+    index: ShardIndex,
+}
+
+impl ShardService {
+    pub fn new(coordinator: Arc<Coordinator>, index: ShardIndex) -> ShardService {
+        ShardService { coordinator, index }
+    }
+
+    pub fn index(&self) -> &ShardIndex {
+        &self.index
+    }
+
+    fn lsh_query(&self, id: Json, doc: &Json) -> Json {
+        if self.coordinator.is_draining() {
+            let e = SubmitError::Draining {
+                retry_after_ms: DRAINING_RETRY_MS,
+            };
+            return codec::err_response_with_hint(id, &e.to_string(), e.code(), e.retry_after_ms());
+        }
+        let Some(vec_json) = doc.get("vector").and_then(|v| v.as_arr()) else {
+            return codec::err_response(id, "missing 'vector' array", codec::CODE_BAD_REQUEST);
+        };
+        let mut q = Vec::with_capacity(vec_json.len());
+        for v in vec_json {
+            match v.as_f64() {
+                Some(f) => q.push(f as f32),
+                None => {
+                    return codec::err_response(
+                        id,
+                        "'vector' must contain numbers",
+                        codec::CODE_BAD_REQUEST,
+                    )
+                }
+            }
+        }
+        if q.len() != self.index.dim() {
+            let e = SubmitError::BadDim;
+            return codec::err_response(id, &e.to_string(), e.code());
+        }
+        let k = match doc.get("k") {
+            None => {
+                return codec::err_response(id, "missing 'k'", codec::CODE_BAD_REQUEST);
+            }
+            Some(v) => match v.as_usize() {
+                Some(k) if k >= 1 => k,
+                _ => {
+                    return codec::err_response(
+                        id,
+                        "'k' must be a positive integer",
+                        codec::CODE_BAD_REQUEST,
+                    )
+                }
+            },
+        };
+        codec::lsh_ok_response(id, &self.index.query(&q, k))
+    }
+}
+
+impl LineService for ShardService {
+    fn handle_line(&self, line: &str, peer: &str) -> Json {
+        if let ParsedLine::Other { id, op, doc } = codec::parse_line(line) {
+            if op.as_deref() == Some("lsh_query") {
+                return self.lsh_query(id, &doc);
+            }
+        }
+        server::process_line_from(line, &self.coordinator, peer)
+    }
+
+    fn begin_drain(&self) {
+        self.coordinator.begin_drain();
+    }
+
+    fn drain(&self, deadline: Duration) -> bool {
+        self.coordinator.drain(deadline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::normalize;
+
+    fn cfg(shard: usize, shards: usize) -> ShardIndexConfig {
+        ShardIndexConfig {
+            n: 64,
+            tables: 6,
+            prefix_bits: 10,
+            seed: 71,
+            shard,
+            shards,
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_point_set_exactly() {
+        let points = demo_points(64, 300, 5);
+        let shards: Vec<ShardIndex> = (0..3).map(|s| ShardIndex::build(&points, &cfg(s, 3))).collect();
+        let total: usize = shards.iter().map(ShardIndex::len).sum();
+        assert_eq!(total, points.len(), "every point owned exactly once");
+        let mut all_ids: Vec<u32> = shards.iter().flat_map(|s| s.ids.clone()).collect();
+        all_ids.sort_unstable();
+        let want: Vec<u32> = (0..points.len() as u32).collect();
+        assert_eq!(all_ids, want, "no id duplicated or dropped");
+        for s in &shards {
+            assert!(s.len() > 20, "range partition badly skewed: {}", s.len());
+            assert!(s.ids.windows(2).all(|w| w[0] < w[1]), "ids ascend");
+        }
+    }
+
+    #[test]
+    fn sharded_union_matches_the_global_index() {
+        // the exactness property the scatter-gather merge relies on:
+        // merging per-shard top-k answers reproduces the global top-k
+        let points = demo_points(64, 300, 5);
+        let global = ShardIndex::build(&points, &cfg(0, 1));
+        assert_eq!(global.len(), points.len());
+        let shards: Vec<ShardIndex> = (0..3).map(|s| ShardIndex::build(&points, &cfg(s, 3))).collect();
+        let mut rng = Rng::new(99);
+        for _ in 0..20 {
+            let mut q = rng.gaussian_vec(64);
+            normalize(&mut q);
+            let k = 8;
+            let want = global.query(&q, k);
+            let parts: Vec<Vec<(u32, u64)>> = shards.iter().map(|s| s.query(&q, k)).collect();
+            let got = crate::router::topology::merge_topk(&parts, k);
+            assert_eq!(got, want, "fleet merge must equal the global answer");
+        }
+    }
+
+    #[test]
+    fn placement_owner_is_a_contiguous_range_partition() {
+        let pb = 10usize;
+        let shards = 3usize;
+        let mut last = 0usize;
+        for code in 0..(1u64 << pb) {
+            let o = placement_owner(code, pb, shards);
+            assert!(o < shards);
+            assert!(o >= last, "owner must be monotone in the code");
+            last = o;
+        }
+        assert_eq!(placement_owner(0, pb, shards), 0);
+        assert_eq!(placement_owner((1 << pb) - 1, pb, shards), shards - 1);
+    }
+}

@@ -1,0 +1,183 @@
+//! Fleet topology: shard groups, replica lists, deterministic routing.
+//!
+//! A fleet is an ordered list of **shard groups**; each group holds one or
+//! more replica endpoints serving the same data. The wire spec is
+//! `"primary|replica,primary|replica,..."` — commas separate groups,
+//! pipes separate replicas within a group — and groups are named `s0`,
+//! `s1`, ... in spec order (the names appear in `degraded` markers,
+//! metrics labels, and health output, so they are part of the observable
+//! contract).
+//!
+//! Routing is deterministic and state-free: compute ops pick their owner
+//! group by **rendezvous (highest-random-weight) hashing** of the request
+//! key against each group name, which keeps assignment stable when groups
+//! are added or removed (only keys owned by the changed group move).
+//! Scatter-gather answers combine with [`merge_topk`], whose `(distance,
+//! id)` ordering matches the per-shard LSH ordering exactly — so a merged
+//! fleet answer is byte-identical to what one big index would return.
+
+/// One shard group: a name plus its replica endpoints (first = primary).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardSpec {
+    pub name: String,
+    pub endpoints: Vec<String>,
+}
+
+/// Parse a `"host:p1|host:p1b,host:p2,host:p3"` fleet spec. Empty groups
+/// or empty endpoints are rejected loudly (a silently-shrunken fleet
+/// would serve partial answers with no shard ever marked down).
+pub fn parse_topology(spec: &str) -> Result<Vec<ShardSpec>, String> {
+    let mut groups = Vec::new();
+    for (i, group) in spec.split(',').enumerate() {
+        let group = group.trim();
+        if group.is_empty() {
+            return Err(format!("topology: group {i} is empty"));
+        }
+        let endpoints: Vec<String> = group
+            .split('|')
+            .map(str::trim)
+            .map(str::to_string)
+            .collect();
+        if endpoints.iter().any(String::is_empty) {
+            return Err(format!("topology: group {i} has an empty endpoint"));
+        }
+        groups.push(ShardSpec {
+            name: format!("s{i}"),
+            endpoints,
+        });
+    }
+    if groups.is_empty() {
+        return Err("topology: no shard groups".to_string());
+    }
+    Ok(groups)
+}
+
+/// FNV-1a over bytes: tiny, deterministic, good enough spread for
+/// rendezvous weights and bucket-range placement (not cryptographic).
+pub fn hash64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Routing key for a compute request: op name + exact input bits, so the
+/// same request always lands on the same owner group (cache affinity)
+/// while nearby-but-different vectors spread uniformly.
+pub fn request_key(op: &str, vector: &[f32]) -> u64 {
+    let mut bytes = Vec::with_capacity(op.len() + vector.len() * 4);
+    bytes.extend_from_slice(op.as_bytes());
+    for x in vector {
+        bytes.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    hash64(&bytes)
+}
+
+/// Rendezvous order: group indices sorted by descending weight
+/// `hash(name ⊕ key)`. Index 0 is the owner; the rest are the stable
+/// fallback order when the owner's replicas are all down.
+pub fn rendezvous_order(names: &[String], key: u64) -> Vec<usize> {
+    let mut weighted: Vec<(u64, usize)> = names
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let mut bytes = name.as_bytes().to_vec();
+            bytes.extend_from_slice(&key.to_le_bytes());
+            (hash64(&bytes), i)
+        })
+        .collect();
+    weighted.sort_by(|a, b| b.cmp(a));
+    weighted.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Merge per-shard top-k lists into the fleet top-k: ascending by
+/// `(distance, id)` — the same total order every shard sorts by — with
+/// duplicate ids dropped (a hedged sub-query can answer twice).
+pub fn merge_topk(parts: &[Vec<(u32, u64)>], k: usize) -> Vec<(u32, u64)> {
+    let mut all: Vec<(u32, u64)> = parts.iter().flatten().copied().collect();
+    all.sort_by_key(|&(id, d)| (d, id));
+    let mut seen = std::collections::BTreeSet::new();
+    all.retain(|&(id, _)| seen.insert(id));
+    all.truncate(k);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_parses_groups_and_replicas() {
+        let t = parse_topology("a:1|b:1, c:2 ,d:3").unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].name, "s0");
+        assert_eq!(t[0].endpoints, vec!["a:1".to_string(), "b:1".to_string()]);
+        assert_eq!(t[1].endpoints, vec!["c:2".to_string()]);
+        assert_eq!(t[2].name, "s2");
+        assert!(parse_topology("").is_err());
+        assert!(parse_topology("a:1,,b:2").is_err());
+        assert!(parse_topology("a:1|").is_err());
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_and_balanced() {
+        let names: Vec<String> = (0..4).map(|i| format!("s{i}")).collect();
+        let mut counts = [0usize; 4];
+        for key in 0..4000u64 {
+            let order = rendezvous_order(&names, hash64(&key.to_le_bytes()));
+            assert_eq!(order.len(), 4);
+            // a permutation, and stable across calls
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3]);
+            assert_eq!(order, rendezvous_order(&names, hash64(&key.to_le_bytes())));
+            counts[order[0]] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 600 && c < 1400, "owner load skew: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn rendezvous_moves_only_the_removed_groups_keys() {
+        // minimal-disruption property: dropping one group must not move
+        // keys between the surviving groups
+        let four: Vec<String> = (0..4).map(|i| format!("s{i}")).collect();
+        let three: Vec<String> = vec!["s0".into(), "s1".into(), "s2".into()];
+        for key in 0..2000u64 {
+            let k = hash64(&key.to_le_bytes());
+            let owner4 = rendezvous_order(&four, k)[0];
+            let owner3 = rendezvous_order(&three, k)[0];
+            if owner4 != 3 {
+                assert_eq!(owner4, owner3, "key {key} moved between survivors");
+            }
+        }
+    }
+
+    #[test]
+    fn request_key_depends_on_op_and_exact_bits() {
+        let v = [0.25f32, -1.5, 3.0];
+        assert_eq!(request_key("transform", &v), request_key("transform", &v));
+        assert_ne!(request_key("transform", &v), request_key("binary_embed", &v));
+        let mut w = v;
+        w[1] = -1.5000001;
+        assert_ne!(request_key("transform", &v), request_key("transform", &w));
+    }
+
+    #[test]
+    fn merge_topk_orders_dedups_and_truncates() {
+        let parts = vec![
+            vec![(5u32, 2u64), (1, 4)],
+            vec![(9, 1), (5, 2), (7, 4)], // 5 duplicated by a hedge win
+            vec![(2, 3)],
+        ];
+        let merged = merge_topk(&parts, 4);
+        assert_eq!(merged, vec![(9, 1), (5, 2), (2, 3), (1, 4)]);
+        // id breaks distance ties deterministically
+        let tied = vec![vec![(8u32, 7u64)], vec![(3, 7)]];
+        assert_eq!(merge_topk(&tied, 2), vec![(3, 7), (8, 7)]);
+        assert_eq!(merge_topk(&[], 3), vec![]);
+    }
+}

@@ -20,6 +20,16 @@
 //! `RetryClient` — every logical request must reach exactly one terminal
 //! outcome, retryable refusals carry `retry_after_ms`, and non-retryable
 //! codes are never retried.
+//!
+//! The `shard_*` scenarios (a third named CI step) lift the fault unit
+//! from one backend or one socket to a whole shard: a `ShardRouter`
+//! fronts a fleet of `ShardService` TCP servers, and individual shards
+//! are killed (`down_after_ms`/`down_for_ms` windows), stalled, or made
+//! flaky while queries flow. The fleet contract under shard loss:
+//! scatter-gather answers are either exact (bit-identical to one global
+//! index) or carry an explicit `partial` marker naming the missing
+//! shards — never silently truncated, never hung — and service recovers
+//! to exact answers once the dead shard returns.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -28,8 +38,12 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use triplespin::coordinator::{
-    Backend, ClientError, Config, Coordinator, FaultInjectingBackend, FaultPlan, NativeBackend,
-    RetryClient, RetryPolicy, ServerOptions, SubmitError, TcpServer,
+    server, Backend, ClientError, Config, Coordinator, FaultInjectingBackend, FaultPlan,
+    NativeBackend, RetryClient, RetryPolicy, ServerOptions, SubmitError, TcpServer,
+};
+use triplespin::router::{
+    demo_points, merge_topk, RouterOptions, ShardIndex, ShardIndexConfig, ShardRouter,
+    ShardService, ShardSpec,
 };
 use triplespin::runtime::{Op, Output};
 use triplespin::util::json::Json;
@@ -608,4 +622,438 @@ fn net_faults_drain_under_load_gives_every_admitted_request_a_terminal_answer() 
     // drain state is observable after the fact
     assert!(c.is_draining());
     assert_eq!(c.pending(), 0, "no job left behind after drain");
+}
+
+// ---------------------------------------------------------------------------
+// shard_* lane: whole-shard chaos against the fleet tier (`ShardRouter`
+// over `ShardService` TCP servers). CI runs these as their own named step
+// (`cargo test --test chaos_serving shard_`).
+// ---------------------------------------------------------------------------
+
+const FLEET_SEED: u64 = 71;
+const FLEET_POINTS: usize = 240;
+const K: usize = 12;
+
+fn fleet_index(shard: usize, shards: usize) -> ShardIndex {
+    ShardIndex::build(
+        &demo_points(N, FLEET_POINTS, FLEET_SEED),
+        &ShardIndexConfig {
+            n: N,
+            tables: 6,
+            prefix_bits: 10,
+            seed: FLEET_SEED,
+            shard,
+            shards,
+        },
+    )
+}
+
+/// A shard process in miniature: coordinator + local index slice, served
+/// over TCP with an optional `TS_FAULT` net-fault plan (`""` = healthy).
+fn spawn_fleet_shard(shard: usize, shards: usize, plan: &str) -> TcpServer {
+    let c = Arc::new(Coordinator::start(base_config(), native()));
+    let service = Arc::new(ShardService::new(c, fleet_index(shard, shards)));
+    let opts = ServerOptions {
+        net_faults: if plan.is_empty() {
+            FaultPlan::default()
+        } else {
+            FaultPlan::parse(plan).unwrap()
+        },
+        ..Default::default()
+    };
+    server::serve(service, "127.0.0.1:0", opts).unwrap()
+}
+
+fn fleet_specs(groups: &[Vec<std::net::SocketAddr>]) -> Vec<ShardSpec> {
+    groups
+        .iter()
+        .enumerate()
+        .map(|(i, eps)| ShardSpec {
+            name: format!("s{i}"),
+            endpoints: eps.iter().map(|a| a.to_string()).collect(),
+        })
+        .collect()
+}
+
+fn fleet_opts() -> RouterOptions {
+    RouterOptions {
+        attempt_timeout: Duration::from_millis(500),
+        scatter_budget: Duration::from_millis(1500),
+        probe_interval: Duration::from_millis(25),
+        probe_timeout: Duration::from_millis(150),
+        breaker_cooldown: Duration::from_millis(60),
+        ..RouterOptions::default()
+    }
+}
+
+/// One request, one reply, over a fresh connection with a hard read
+/// timeout — a hang surfaces as a test failure, never as a stuck run.
+fn fleet_request(addr: std::net::SocketAddr, line: &str) -> Json {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader
+        .read_line(&mut resp)
+        .expect("a terminal reply, not a hang");
+    Json::parse(resp.trim()).expect("reply parses")
+}
+
+fn lsh_line(id: u64, q: &[f32], k: usize) -> String {
+    let vals: Vec<String> = q.iter().map(|x| format!("{x}")).collect();
+    format!(
+        "{{\"id\": {id}, \"op\": \"lsh_query\", \"vector\": [{}], \"k\": {k}}}",
+        vals.join(",")
+    )
+}
+
+/// Decode the flat interleaved `[id0, d0, id1, d1, ...]` wire result.
+fn result_pairs(doc: &Json) -> Vec<(u32, u64)> {
+    let Some(Json::Arr(items)) = doc.get("result") else {
+        panic!("reply without a result array: {doc:?}");
+    };
+    assert_eq!(items.len() % 2, 0, "result must be flat (id, distance) pairs");
+    items
+        .chunks(2)
+        .map(|c| match (&c[0], &c[1]) {
+            (Json::Num(id), Json::Num(d)) => (*id as u32, *d as u64),
+            other => panic!("non-numeric pair {other:?}"),
+        })
+        .collect()
+}
+
+fn degraded_names(doc: &Json) -> Vec<String> {
+    match doc.get("degraded") {
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|s| s.as_str().expect("degraded entries are strings").to_string())
+            .collect(),
+        None => Vec::new(),
+        other => panic!("bad degraded field {other:?}"),
+    }
+}
+
+#[test]
+fn shard_kill_window_yields_marked_partials_then_exact_recovery() {
+    // The acceptance chaos proof: 3 shards, one killed mid-load by a
+    // deterministic TS_FAULT down window. Queries before the window are
+    // exact; during it they degrade to top-k over the surviving shards
+    // with an explicit `partial` marker naming the dead shard; after it
+    // the fleet heals back to exact answers. Never a silent truncation
+    // (full replies are compared element-for-element against one global
+    // index), never a hang (every read is under a timeout).
+    let locals: Vec<ShardIndex> = (0..3).map(|i| fleet_index(i, 3)).collect();
+    let global = fleet_index(0, 1);
+    let shards = vec![
+        spawn_fleet_shard(0, 3, ""),
+        spawn_fleet_shard(1, 3, ""),
+        spawn_fleet_shard(2, 3, "down_after_ms:400,down_for_ms:700"),
+    ];
+    let specs = fleet_specs(&[
+        vec![shards[0].addr()],
+        vec![shards[1].addr()],
+        vec![shards[2].addr()],
+    ]);
+    let front = server::serve(
+        Arc::new(ShardRouter::new(specs, fleet_opts())),
+        "127.0.0.1:0",
+        ServerOptions::default(),
+    )
+    .unwrap();
+
+    let (mut full_before, mut saw_partial, mut full_after) = (false, false, false);
+    let start = Instant::now();
+    let mut seq = 0u64;
+    while start.elapsed() < Duration::from_secs(10) && !(full_before && saw_partial && full_after) {
+        seq += 1;
+        let q = Rng::new(1000 + seq).unit_vec(N);
+        let doc = fleet_request(front.addr(), &lsh_line(seq, &q, K));
+        assert_eq!(
+            doc.get("ok"),
+            Some(&Json::Bool(true)),
+            "two healthy shards must always produce an answer: {doc:?}"
+        );
+        let pairs = result_pairs(&doc);
+        let degraded = degraded_names(&doc);
+        if degraded.is_empty() {
+            assert!(doc.get("code").is_none(), "full replies carry no code: {doc:?}");
+            assert_eq!(
+                pairs,
+                global.query(&q, K),
+                "a full reply must be exact, never silently truncated"
+            );
+            if saw_partial {
+                full_after = true;
+            } else {
+                full_before = true;
+            }
+        } else {
+            assert_eq!(doc.get("code").and_then(|c| c.as_str()), Some("partial"));
+            assert!(
+                degraded.contains(&"s2".to_string()),
+                "only the killed shard may go missing: {degraded:?}"
+            );
+            let alive: Vec<Vec<(u32, u64)>> = (0..3)
+                .filter(|i| !degraded.contains(&format!("s{i}")))
+                .map(|i| locals[i].query(&q, K))
+                .collect();
+            assert_eq!(
+                pairs,
+                merge_topk(&alive, K),
+                "a partial reply is exactly the surviving shards' merge"
+            );
+            saw_partial = true;
+        }
+        std::thread::sleep(Duration::from_millis(15));
+    }
+    assert!(full_before, "no exact answer seen before the kill window");
+    assert!(saw_partial, "the kill window never surfaced as a marked partial");
+    assert!(full_after, "the fleet never healed back to exact answers");
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn shard_replica_failover_keeps_answers_exact_during_primary_kill() {
+    // Group s0 has a dead-from-birth primary and a healthy replica: both
+    // the scatter path and the compute path must fail over inside the
+    // group, so no query ever degrades — and the probe loop must trip
+    // the dead primary's breaker while leaving the replica admitted.
+    let global = fleet_index(0, 1);
+    let s0_dead = spawn_fleet_shard(0, 2, "down_after_ms:0");
+    let s0_replica = spawn_fleet_shard(0, 2, "");
+    let s1 = spawn_fleet_shard(1, 2, "");
+    let specs = fleet_specs(&[vec![s0_dead.addr(), s0_replica.addr()], vec![s1.addr()]]);
+    let front = server::serve(
+        Arc::new(ShardRouter::new(specs, fleet_opts())),
+        "127.0.0.1:0",
+        ServerOptions::default(),
+    )
+    .unwrap();
+
+    for i in 0..10u64 {
+        let q = Rng::new(2000 + i).unit_vec(N);
+        let doc = fleet_request(front.addr(), &lsh_line(i, &q, K));
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{doc:?}");
+        assert!(
+            doc.get("code").is_none(),
+            "replica failover must not degrade the answer: {doc:?}"
+        );
+        assert_eq!(result_pairs(&doc), global.query(&q, K));
+    }
+    let client = RetryClient::connect(&front.addr().to_string(), Some("fleet"), test_policy());
+    let v: Vec<f32> = (0..N).map(|i| (i % 7) as f32).collect();
+    let result = client.call("transform", &v).expect("transform served by the fleet");
+    assert_eq!(result.as_arr().unwrap().len(), N);
+    // probes discover the dead primary: its breaker leaves the healthy
+    // phase while the replica stays open
+    let deadline = Instant::now() + Duration::from_secs(4);
+    loop {
+        let doc = fleet_request(front.addr(), "{\"id\": 99, \"op\": \"health\"}");
+        let result = doc.get("result").expect("health carries a result");
+        let Some(Json::Arr(eps)) = result.get("s0") else {
+            panic!("health must list group s0: {doc:?}");
+        };
+        let states: Vec<&str> = eps
+            .iter()
+            .map(|e| e.get("state").and_then(|s| s.as_str()).unwrap())
+            .collect();
+        if states.contains(&"open") && states.iter().any(|s| *s != "open") {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "probes never tripped the dead primary's breaker: {states:?}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    front.shutdown();
+    s0_dead.shutdown();
+    s0_replica.shutdown();
+    s1.shutdown();
+}
+
+#[test]
+fn shard_down_refusals_are_typed_retryable_and_the_client_converges() {
+    // A single-shard fleet whose only endpoint is inside a down window:
+    // the router refuses with the typed, hinted `shard_down` — and the
+    // retry client treats it as retryable, converging to success once the
+    // window closes and the probe loop re-admits the shard.
+    let s0 = spawn_fleet_shard(0, 1, "down_after_ms:0,down_for_ms:800");
+    let specs = fleet_specs(&[vec![s0.addr()]]);
+    let front = server::serve(
+        Arc::new(ShardRouter::new(specs, fleet_opts())),
+        "127.0.0.1:0",
+        ServerOptions::default(),
+    )
+    .unwrap();
+
+    let q = Rng::new(3000).unit_vec(N);
+    let doc = fleet_request(front.addr(), &lsh_line(1, &q, K));
+    assert_eq!(doc.get("ok"), Some(&Json::Bool(false)), "{doc:?}");
+    assert_eq!(doc.get("code").and_then(|c| c.as_str()), Some("shard_down"));
+    assert_eq!(
+        doc.get("retry_after_ms"),
+        Some(&Json::Num(250.0)),
+        "shard_down is retryable and must carry its hint: {doc:?}"
+    );
+
+    let client = RetryClient::connect(&front.addr().to_string(), Some("conv"), test_policy());
+    let v: Vec<f32> = (0..N).map(|i| (i % 5) as f32).collect();
+    let result = client
+        .call("transform", &v)
+        .expect("converges once the down window closes");
+    assert_eq!(result.as_arr().unwrap().len(), N);
+    assert!(
+        client.retries.load(Ordering::Relaxed) >= 1,
+        "the first attempts land inside the window and must be retried"
+    );
+    front.shutdown();
+    s0.shutdown();
+}
+
+#[test]
+fn shard_chaos_every_query_reaches_exactly_one_terminal_outcome() {
+    // Mixed fleet chaos — one flaky shard (30% connection drops), one
+    // healthy, one with a kill window — under concurrent compute and
+    // scatter traffic. Every logical request must reach exactly one
+    // terminal outcome: an ok (possibly marked partial) or a typed
+    // refusal. A fresh connection plus hard read timeout per query turns
+    // any hang or silent drop into a test failure.
+    let shards = vec![
+        spawn_fleet_shard(0, 3, "conn_drop:0.3,seed:13"),
+        spawn_fleet_shard(1, 3, ""),
+        spawn_fleet_shard(2, 3, "down_after_ms:100,down_for_ms:400"),
+    ];
+    let specs = fleet_specs(&[
+        vec![shards[0].addr()],
+        vec![shards[1].addr()],
+        vec![shards[2].addr()],
+    ]);
+    let front = server::serve(
+        Arc::new(ShardRouter::new(specs, fleet_opts())),
+        "127.0.0.1:0",
+        ServerOptions::default(),
+    )
+    .unwrap();
+    let addr = front.addr();
+    let mut joins = Vec::new();
+    for t in 0..3u64 {
+        joins.push(std::thread::spawn(move || {
+            let client =
+                RetryClient::connect(&addr.to_string(), Some(&format!("c{t}")), test_policy());
+            let mut outcomes: Vec<String> = Vec::new();
+            for i in 0..6u64 {
+                let v = Rng::new(4000 + t * 100 + i).unit_vec(N);
+                outcomes.push(match client.call("transform", &v) {
+                    Ok(result) => {
+                        assert_eq!(result.as_arr().unwrap().len(), N);
+                        "ok".to_string()
+                    }
+                    Err(e) => format!("refused:{e}"),
+                });
+                let doc = fleet_request(addr, &lsh_line(t * 100 + i, &v, K));
+                match doc.get("ok") {
+                    Some(&Json::Bool(true)) => {
+                        let code = doc.get("code").and_then(|c| c.as_str());
+                        assert!(
+                            code.is_none() || code == Some("partial"),
+                            "an ok reply is full or explicitly partial: {doc:?}"
+                        );
+                        outcomes.push(if code.is_some() {
+                            "partial".to_string()
+                        } else {
+                            "full".to_string()
+                        });
+                    }
+                    Some(&Json::Bool(false)) => {
+                        let code = doc
+                            .get("code")
+                            .and_then(|c| c.as_str())
+                            .expect("refusals carry a code");
+                        outcomes.push(format!("refused:{code}"));
+                    }
+                    other => panic!("reply without ok bool: {other:?}"),
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            outcomes
+        }));
+    }
+    let all: Vec<String> = joins
+        .into_iter()
+        .flat_map(|j| j.join().unwrap())
+        .collect();
+    assert_eq!(
+        all.len(),
+        36,
+        "every logical request reached exactly one terminal outcome"
+    );
+    assert!(
+        all.iter().any(|o| o == "ok"),
+        "compute traffic survives the chaos: {all:?}"
+    );
+    assert!(
+        all.iter().any(|o| o == "full" || o == "partial"),
+        "scatter traffic survives the chaos: {all:?}"
+    );
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn shard_hedged_scatter_masks_a_stalled_replica() {
+    // The primary stalls every read by 300ms; the hedge fires after the
+    // initial ~15ms delay and the healthy replica answers first. Queries
+    // stay exact, and the hedge counters prove the mechanism (not luck)
+    // served them. Probe timeout is raised above the stall so the slow
+    // primary is slow, not dead — its breaker must stay closed.
+    let slow = spawn_fleet_shard(0, 1, "slow_read_ms:300");
+    let fast = spawn_fleet_shard(0, 1, "");
+    let global = fleet_index(0, 1);
+    let specs = fleet_specs(&[vec![slow.addr(), fast.addr()]]);
+    let opts = RouterOptions {
+        attempt_timeout: Duration::from_millis(900),
+        scatter_budget: Duration::from_millis(2500),
+        probe_interval: Duration::from_millis(50),
+        probe_timeout: Duration::from_millis(700),
+        hedge_initial: Duration::from_millis(15),
+        ..RouterOptions::default()
+    };
+    let front = server::serve(
+        Arc::new(ShardRouter::new(specs, opts)),
+        "127.0.0.1:0",
+        ServerOptions::default(),
+    )
+    .unwrap();
+    for i in 0..6u64 {
+        let q = Rng::new(5000 + i).unit_vec(N);
+        let doc = fleet_request(front.addr(), &lsh_line(i, &q, K));
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{doc:?}");
+        assert!(
+            doc.get("code").is_none(),
+            "a hedged answer is a full answer: {doc:?}"
+        );
+        assert_eq!(result_pairs(&doc), global.query(&q, K));
+    }
+    let doc = fleet_request(front.addr(), "{\"id\": 1, \"op\": \"metrics\"}");
+    let counters = doc
+        .get("result")
+        .and_then(|r| r.get("router"))
+        .expect("metrics carry router counters");
+    let hedges = counters.get("hedges").and_then(|v| v.as_f64()).unwrap();
+    let wins = counters.get("hedge_wins").and_then(|v| v.as_f64()).unwrap();
+    assert!(hedges >= 1.0, "the stalled primary must trigger hedges: {doc:?}");
+    assert!(wins >= 1.0, "at least one hedge must beat the stalled primary: {doc:?}");
+    front.shutdown();
+    slow.shutdown();
+    fast.shutdown();
 }

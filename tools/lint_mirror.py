@@ -225,7 +225,10 @@ def main():
     codes = []
     for body in re.finditer(r"fn code\(&self\) -> &'static str \{(.*?)\n    \}", coord, re.S):
         codes += re.findall(r'=> "([a-z_]+)"', body.group(1))
+    # CODE_* consts live in codec.rs since the codec split; scan server.rs
+    # too so a straggler const is still part of the taxonomy
     server = (src / "coordinator" / "server.rs").read_text()
+    server += (src / "coordinator" / "codec.rs").read_text()
     codes += re.findall(r'const CODE_[A-Z_]+: &str = "([a-z_]+)";', server)
     if len(codes) != len(set(codes)):
         dupes = sorted({c for c in codes if codes.count(c) > 1})
