@@ -25,7 +25,12 @@
 //! `admission` sweep does the same for the overload-refusal paths: a
 //! granted call through an active token bucket vs a `throttled` refusal
 //! vs an `overloaded` shed — refusals must be far cheaper than serving,
-//! or shedding would not shed load. A `router_merge` sweep times the
+//! or shedding would not shed load. A `serving_batch` sweep drives the
+//! coalescing ingress: 32 concurrent single-row clients on one lane
+//! (recorded batch-size histogram, mean coalesced batch must exceed 4),
+//! dedup fan-out from one leader computation across identical concurrent
+//! requests, and response-cache hit latency vs an honest recompute of
+//! the same request. A `router_merge` sweep times the
 //! fleet tier's pure-CPU routing arithmetic (request keying + rendezvous
 //! ordering, and the scatter-gather top-k merge) so the per-query cost
 //! the `ShardRouter` adds on top of the network hops it hides stays
@@ -37,13 +42,14 @@
 //!
 //!     cargo bench --bench transform_throughput
 
-use std::sync::Arc;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::Duration;
 
 use triplespin::binary::{BinaryEmbedding, BitMatrix};
 use triplespin::coordinator::{
-    admission, Backend, Config, Coordinator, FaultInjectingBackend, FaultPlan, NativeBackend,
-    SubmitOptions,
+    admission, codec, Backend, Batcher, Config, Coordinator, FaultInjectingBackend, FaultPlan,
+    IngressOptions, NativeBackend, SubmitOptions,
 };
 use triplespin::linalg::fft;
 use triplespin::linalg::simd;
@@ -593,6 +599,204 @@ fn main() {
             ("throttle_speedup", Json::Num(acc_b.mean_ns / thr_b.mean_ns)),
             ("shed_speedup", Json::Num(acc_b.mean_ns / shed_b.mean_ns)),
         ]));
+    }
+
+    // Serving-batch sweep: the coalescing ingress end to end. 32
+    // concurrent single-row clients on one lane must coalesce into pooled
+    // batches (mean batch size > 4 — the whole amortization story at the
+    // serving tier), identical concurrent requests must fan out from one
+    // leader computation, and a response-cache hit must answer in less
+    // time than a recompute of the same request. All three are measured,
+    // not assumed: the backend records every batch shape it actually ran.
+    println!("\n== serving batch (coalesce / dedup fan-out / cache) ==\n");
+    {
+        let n = 256usize;
+        /// Backend that records each call's row count behind a short
+        /// stall — the stall is what lets concurrent clients pile up into
+        /// coalesced batches, exactly like a real accelerator dispatch.
+        struct RecordingBackend {
+            inner: NativeBackend,
+            delay: Duration,
+            sizes: Mutex<Vec<usize>>,
+        }
+        impl Backend for RecordingBackend {
+            fn run_batch(
+                &self,
+                op: Op,
+                n: usize,
+                rows: usize,
+                xs: &[f32],
+            ) -> Result<triplespin::runtime::Output, String> {
+                self.sizes.lock().unwrap().push(rows);
+                if !self.delay.is_zero() {
+                    std::thread::sleep(self.delay);
+                }
+                self.inner.run_batch(op, n, rows, xs)
+            }
+            fn name(&self) -> &'static str {
+                "recording"
+            }
+        }
+        let mk_req = |vector: Vec<f32>, no_cache: bool| codec::Request {
+            id: Json::Num(1.0),
+            op: Op::Transform,
+            timeout: None,
+            client_id: None,
+            priority: admission::PRIORITY_NORMAL,
+            no_cache,
+            vector,
+        };
+        let be = Arc::new(RecordingBackend {
+            inner: NativeBackend::new(&[n], 1.0, 3),
+            delay: Duration::from_millis(1),
+            sizes: Mutex::new(Vec::new()),
+        });
+        let c = Arc::new(Coordinator::start(
+            Config {
+                lanes: vec![(Op::Transform, n)],
+                max_batch: 32,
+                max_wait: Duration::from_millis(5),
+                queue_cap: 1024,
+                sigma: 1.0,
+                seed: 3,
+                breaker_threshold: 0,
+                ..Config::default()
+            },
+            Arc::clone(&be) as Arc<dyn Backend>,
+        ));
+        let batcher = Batcher::new(Arc::clone(&c), IngressOptions::default());
+
+        // phase 1 — coalescing: 32 clients, 8 distinct single-row
+        // requests each; the 1ms dispatch stall piles arrivals into the
+        // lane queue and the flush window batches them
+        let (clients, rounds) = (32usize, 8usize);
+        std::thread::scope(|s| {
+            for t in 0..clients {
+                let batcher = &batcher;
+                let mk_req = &mk_req;
+                s.spawn(move || {
+                    for r in 0..rounds {
+                        let v = Rng::new(1000 + (t * rounds + r) as u64).gaussian_vec(n);
+                        let doc = batcher.respond(mk_req(v, false), "bench");
+                        assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{doc}");
+                    }
+                });
+            }
+        });
+        let sizes = be.sizes.lock().unwrap().clone();
+        let total_rows: usize = sizes.iter().sum();
+        assert_eq!(total_rows, clients * rounds, "every row reaches the backend once");
+        let mean_batch = total_rows as f64 / sizes.len() as f64;
+        assert!(
+            mean_batch > 4.0,
+            "32 concurrent clients must coalesce: mean {mean_batch:.2} over {sizes:?}"
+        );
+        // histogram over size buckets 1 / 2 / 3-4 / 5-8 / 9-16 / 17-32
+        let mut hist = [0u64; 6];
+        for &sz in &sizes {
+            let bucket = match sz {
+                1 => 0,
+                2 => 1,
+                3..=4 => 2,
+                5..=8 => 3,
+                9..=16 => 4,
+                _ => 5,
+            };
+            hist[bucket] += 1;
+        }
+
+        // phase 2 — dedup fan-out: 16 clients send the SAME request
+        // (no_cache, so dedup and not the cache must provide the sharing);
+        // one leader computes inside the 1ms stall, the rest subscribe
+        let metrics = c.lane_metrics(Op::Transform, n).expect("bench lane");
+        let followers_before = metrics.dedup_followers.load(Ordering::Relaxed);
+        let dup: Vec<f32> = Rng::new(4242).gaussian_vec(n);
+        let gate = Barrier::new(16);
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                let batcher = &batcher;
+                let mk_req = &mk_req;
+                let dup = &dup;
+                let gate = &gate;
+                s.spawn(move || {
+                    gate.wait();
+                    let doc = batcher.respond(mk_req(dup.clone(), true), "bench");
+                    assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{doc}");
+                });
+            }
+        });
+        let dedup_fanout = metrics.dedup_followers.load(Ordering::Relaxed) - followers_before;
+        assert!(dedup_fanout >= 1, "a 1ms compute window must catch followers");
+
+        // phase 3 — cache hit vs recompute, on a stall-free stack so the
+        // compute number is the honest lane cost, not the injected delay
+        let fast_be = Arc::new(NativeBackend::new(&[n], 1.0, 3));
+        let fast_c = Arc::new(Coordinator::start(
+            Config {
+                lanes: vec![(Op::Transform, n)],
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+                queue_cap: 256,
+                sigma: 1.0,
+                seed: 3,
+                breaker_threshold: 0,
+                ..Config::default()
+            },
+            fast_be as Arc<dyn Backend>,
+        ));
+        let fast = Batcher::new(Arc::clone(&fast_c), IngressOptions::default());
+        let v: Vec<f32> = Rng::new(777).gaussian_vec(n);
+        let primed = fast.respond(mk_req(v.clone(), false), "bench");
+        assert_eq!(primed.get("ok"), Some(&Json::Bool(true)), "{primed}");
+        let hit_b = bench::bench(&format!("ingress cache hit n={n}"), opts, || {
+            std::hint::black_box(fast.respond(mk_req(v.clone(), false), "bench"));
+        });
+        let comp_b = bench::bench(&format!("ingress recompute n={n}"), opts, || {
+            std::hint::black_box(fast.respond(mk_req(v.clone(), true), "bench"));
+        });
+        assert!(
+            hit_b.mean_ns < comp_b.mean_ns,
+            "a cache hit must be answered without backend time"
+        );
+        let fast_metrics = fast_c.lane_metrics(Op::Transform, n).expect("fast lane");
+        let cache_hits = fast_metrics.cache_hits.load(Ordering::Relaxed);
+        let cache_misses = fast_metrics.cache_misses.load(Ordering::Relaxed);
+
+        println!(
+            "ingress n={n:<5} mean batch {mean_batch:.1} ({} calls, hist {hist:?})\n\
+             ingress dedup fan-out {dedup_fanout} followers / 16 identical clients\n\
+             ingress cache hit {:>10}  recompute {:>10}  (x{:.1}, {cache_hits} hits)",
+            sizes.len(),
+            bench::fmt_ns(hit_b.mean_ns),
+            bench::fmt_ns(comp_b.mean_ns),
+            comp_b.mean_ns / hit_b.mean_ns,
+        );
+        entries.push(Json::obj(vec![
+            ("kind", Json::Str("serving_batch".into())),
+            ("family", Json::Str("hd3_chain".into())),
+            ("n", Json::Num(n as f64)),
+            ("rows", Json::Num(clients as f64)),
+            ("clients", Json::Num(clients as f64)),
+            ("requests", Json::Num((clients * rounds) as f64)),
+            ("mean_coalesced_batch", Json::Num(mean_batch)),
+            (
+                "batch_hist",
+                Json::Arr(hist.iter().map(|&h| Json::Num(h as f64)).collect()),
+            ),
+            ("dedup_fanout", Json::Num(dedup_fanout as f64)),
+            ("cache_hit_ns", Json::Num(hit_b.mean_ns)),
+            ("compute_ns", Json::Num(comp_b.mean_ns)),
+            ("cache_speedup", Json::Num(comp_b.mean_ns / hit_b.mean_ns)),
+            ("cache_hits", Json::Num(cache_hits as f64)),
+            ("cache_misses", Json::Num(cache_misses as f64)),
+        ]));
+        drop(batcher);
+        drop(fast);
+        for c in [c, fast_c] {
+            if let Ok(c) = Arc::try_unwrap(c) {
+                c.shutdown();
+            }
+        }
     }
 
     // Router-merge sweep: the fleet tier's pure-CPU hot path, no sockets.

@@ -1,0 +1,578 @@
+//! Serving ingress: in-flight dedup and a bounded response cache in
+//! front of the coordinator's per-lane micro-batchers.
+//!
+//! The engine is batch-first — pooled multi-row batches are where the
+//! TripleSpin structured-matrix work amortizes — but a TCP front that
+//! forwards each request line straight to [`super::Coordinator`] turns
+//! every concurrent client into a batch of one. This module is the real
+//! ingress between [`super::server::LineService`] and the coordinator:
+//!
+//! * **Coalescing** happens in the lane itself (requests from many
+//!   connections land on one lane queue and flush together on
+//!   `max_batch` / `max_wait` / the cost-model `flush_work` cap, with
+//!   the earliest queued deadline bounding the window). The ingress
+//!   keeps that path hot by stripping duplicate work *before* it
+//!   reaches the queue. The batch class is the lane key `(op, n)`:
+//!   requests coalesce exactly when they share an op and a transform
+//!   dimension, because that is what one backend call can execute.
+//! * **In-flight dedup**: byte-identical concurrent requests
+//!   (fingerprint = FNV-1a over op name + exact input bits, via
+//!   [`crate::router::topology::request_key`]) elect one leader that
+//!   computes; followers subscribe to the same response slot. Compute
+//!   is a deterministic pure function of `(op, input bits)`, so fanning
+//!   the leader's *successful* output to followers is exact — and only
+//!   successes fan out: any leader failure (refusal, typed error,
+//!   timeout, lane death) orphans the slot, and each waiter retries
+//!   individually (one promotes itself to leader), so failures stay
+//!   per-request and a dead leader cannot strand its followers.
+//! * **Response cache**: a bounded per-lane LRU keyed by the same
+//!   fingerprint answers repeat requests without backend time. Requests
+//!   can opt out per line with the `no_cache` wire field (neither read
+//!   nor stored); hit / miss / eviction counts and occupancy ride
+//!   [`super::LaneMetrics`].
+//!
+//! **Every** request — leader, follower, cache hit — pays the full
+//! admission chain ([`super::Coordinator::admit`]) first: each client is
+//! charged its own work units, and a shed / throttle refusal for one
+//! follower never evicts the leader's computation (the refusal happens
+//! before the slot is joined). Refusal order therefore matches the
+//! uncoalesced path exactly.
+
+use super::codec;
+use super::server::CODE_TIMEOUT;
+use super::{
+    Coordinator, LaneMetrics, SubmitError, SubmitOptions, DEFAULT_CALL_TIMEOUT, RESPONSE_GRACE,
+};
+use crate::router::topology;
+use crate::runtime::{Op, Output};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Ingress tuning for [`super::CoordinatorService::with_ingress`].
+#[derive(Clone, Copy, Debug)]
+pub struct IngressOptions {
+    /// Response-cache entries per lane (`0` disables the cache).
+    pub cache_cap: usize,
+    /// In-flight dedup of identical requests (leader / follower slots).
+    pub dedup: bool,
+}
+
+impl Default for IngressOptions {
+    fn default() -> Self {
+        IngressOptions {
+            cache_cap: 256,
+            dedup: true,
+        }
+    }
+}
+
+/// Terminal state of one dedup slot. `Pending` while the leader
+/// computes; exactly one transition out of it, under the slot mutex.
+enum SlotState {
+    Pending,
+    /// The leader's successful output — safe to fan out because compute
+    /// is deterministic in `(op, input bits)`.
+    Done(Output),
+    /// The leader failed (refusal, typed error, timeout, lane death).
+    /// Waiters retry individually; one becomes the next leader.
+    Orphaned,
+}
+
+/// One in-flight computation identical requests subscribe to.
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+/// What a follower's bounded wait on a slot resolved to.
+enum Waited {
+    Done(Output),
+    Orphaned,
+    TimedOut,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            state: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Publish the terminal state and wake every follower.
+    fn resolve(&self, terminal: SlotState) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        *st = terminal;
+        self.cv.notify_all();
+    }
+
+    /// Follower-side bounded wait for the leader's terminal state.
+    fn wait_until(&self, deadline: Instant) -> Waited {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            match &*st {
+                SlotState::Done(out) => return Waited::Done(out.clone()),
+                SlotState::Orphaned => return Waited::Orphaned,
+                SlotState::Pending => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Waited::TimedOut;
+            }
+            // spurious wakes and timeouts both fall through to the
+            // state/deadline re-check at the top of the loop
+            let (guard, _) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = guard;
+        }
+    }
+}
+
+/// Bounded true-LRU response cache (stamp-based recency; eviction scans
+/// for the oldest stamp — O(cap), fine for the small per-lane caps the
+/// ingress runs with).
+struct LruCache {
+    cap: usize,
+    stamp: u64,
+    map: HashMap<u64, (Output, u64)>,
+}
+
+impl LruCache {
+    fn new(cap: usize) -> LruCache {
+        LruCache {
+            cap,
+            stamp: 0,
+            map: HashMap::new(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Hit refreshes recency (true LRU, not FIFO).
+    fn get(&mut self, key: u64) -> Option<Output> {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        self.map.get_mut(&key).map(|(out, s)| {
+            *s = stamp;
+            out.clone()
+        })
+    }
+
+    /// Insert (or refresh) `key`; returns how many entries were evicted
+    /// to stay under capacity (0 or 1).
+    fn insert(&mut self, key: u64, out: Output) -> u64 {
+        if self.cap == 0 {
+            return 0;
+        }
+        self.stamp += 1;
+        let stamp = self.stamp;
+        if let Some(slot) = self.map.get_mut(&key) {
+            *slot = (out, stamp);
+            return 0;
+        }
+        let mut evicted = 0;
+        if self.map.len() >= self.cap {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, s))| *s)
+                .map(|(k, _)| *k)
+            {
+                self.map.remove(&oldest);
+                evicted = 1;
+            }
+        }
+        self.map.insert(key, (out, stamp));
+        evicted
+    }
+}
+
+/// Per-lane ingress state: the dedup slot table and the response cache,
+/// plus the lane's metrics handle (shared with the coordinator, so
+/// ingress counters land in the same per-lane document).
+struct LaneIngress {
+    metrics: Arc<LaneMetrics>,
+    inflight: Mutex<HashMap<u64, Arc<Slot>>>,
+    cache: Mutex<LruCache>,
+}
+
+/// The ingress front: one [`LaneIngress`] per coordinator lane.
+pub struct Batcher {
+    coordinator: Arc<Coordinator>,
+    opts: IngressOptions,
+    lanes: HashMap<(Op, usize), LaneIngress>,
+}
+
+impl Batcher {
+    /// Build an ingress over every lane `coordinator` serves.
+    pub fn new(coordinator: Arc<Coordinator>, opts: IngressOptions) -> Batcher {
+        let lanes = coordinator
+            .metrics()
+            .into_iter()
+            .map(|(key, metrics)| {
+                (
+                    key,
+                    LaneIngress {
+                        metrics,
+                        inflight: Mutex::new(HashMap::new()),
+                        cache: Mutex::new(LruCache::new(opts.cache_cap)),
+                    },
+                )
+            })
+            .collect();
+        Batcher {
+            coordinator,
+            opts,
+            lanes,
+        }
+    }
+
+    /// Answer one validated compute request through the ingress:
+    /// admission → cache → dedup → lane. The rendered response is
+    /// byte-identical to the uncoalesced path's for the same outcome.
+    pub fn respond(&self, req: codec::Request, peer: &str) -> Json {
+        let codec::Request {
+            id,
+            op,
+            timeout,
+            client_id,
+            priority,
+            no_cache,
+            vector,
+        } = req;
+        let started = Instant::now();
+        let opts = SubmitOptions {
+            deadline: timeout,
+            client: Some(client_id.as_deref().unwrap_or(peer)),
+            priority,
+        };
+        // 1. full admission chain, for every caller — leaders, followers
+        // and cache hits alike pay their own work units, and refusals
+        // happen before any slot is joined (so they cannot evict an
+        // in-flight leader)
+        if let Err(e) = self.coordinator.admit(op, vector.len(), opts) {
+            return codec::err_response_with_hint(id, &e.to_string(), e.code(), e.retry_after_ms());
+        }
+        let Some(lane) = self.lanes.get(&(op, vector.len())) else {
+            // admitted lanes always have ingress state (same key set by
+            // construction); degrade to a plain compute if not
+            return match self.compute(&id, op, vector, timeout) {
+                Ok(out) => codec::ok_response(id, out),
+                Err(reply) => reply,
+            };
+        };
+        let key = topology::request_key(op.name(), &vector);
+        // 2. response cache (skipped entirely on no_cache: not a miss)
+        if !no_cache && self.opts.cache_cap > 0 {
+            let hit = {
+                let mut cache = lane.cache.lock().unwrap_or_else(|p| p.into_inner());
+                cache.get(key)
+            };
+            if let Some(out) = hit {
+                lane.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                record_completion(&lane.metrics, &out, started);
+                return codec::ok_response(id, out);
+            }
+            lane.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        if !self.opts.dedup {
+            return self.lead(lane, None, &id, op, key, no_cache, vector, timeout);
+        }
+        // 3. dedup: join the in-flight slot as a follower, or claim
+        // leadership. An orphaned slot (failed leader) loops back here —
+        // the retrying waiter that finds the table empty promotes itself
+        // to leader, so every waiter reaches a terminal coded response.
+        let wait_deadline =
+            started + timeout.unwrap_or(DEFAULT_CALL_TIMEOUT).saturating_add(RESPONSE_GRACE);
+        loop {
+            let claimed = {
+                let mut inflight = lane.inflight.lock().unwrap_or_else(|p| p.into_inner());
+                match inflight.get(&key) {
+                    Some(slot) => Err(Arc::clone(slot)),
+                    None => {
+                        let slot = Arc::new(Slot::new());
+                        inflight.insert(key, Arc::clone(&slot));
+                        Ok(slot)
+                    }
+                }
+            };
+            match claimed {
+                Ok(slot) => {
+                    return self.lead(lane, Some(slot), &id, op, key, no_cache, vector, timeout);
+                }
+                Err(slot) => {
+                    lane.metrics.dedup_followers.fetch_add(1, Ordering::Relaxed);
+                    match slot.wait_until(wait_deadline) {
+                        Waited::Done(out) => {
+                            record_completion(&lane.metrics, &out, started);
+                            return codec::ok_response(id, out);
+                        }
+                        // leader failed — retry; failures never fan out
+                        Waited::Orphaned => continue,
+                        Waited::TimedOut => {
+                            return codec::err_response(id, "response timed out", CODE_TIMEOUT)
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Leader path: compute through the lane, publish the slot's
+    /// terminal state, feed the cache on success. The slot entry is
+    /// removed from the table *before* resolving so late arrivals start
+    /// a fresh computation instead of joining a finished one.
+    #[allow(clippy::too_many_arguments)]
+    fn lead(
+        &self,
+        lane: &LaneIngress,
+        slot: Option<Arc<Slot>>,
+        id: &Json,
+        op: Op,
+        key: u64,
+        no_cache: bool,
+        vector: Vec<f32>,
+        timeout: Option<Duration>,
+    ) -> Json {
+        let outcome = self.compute(id, op, vector, timeout);
+        if slot.is_some() {
+            let mut inflight = lane.inflight.lock().unwrap_or_else(|p| p.into_inner());
+            inflight.remove(&key);
+        }
+        match outcome {
+            Ok(out) => {
+                if let Some(slot) = slot {
+                    slot.resolve(SlotState::Done(out.clone()));
+                }
+                if !no_cache && self.opts.cache_cap > 0 {
+                    let (evicted, len) = {
+                        let mut cache = lane.cache.lock().unwrap_or_else(|p| p.into_inner());
+                        let evicted = cache.insert(key, out.clone());
+                        (evicted, cache.len() as u64)
+                    };
+                    if evicted > 0 {
+                        lane.metrics.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
+                    }
+                    lane.metrics.cache_entries.store(len, Ordering::Relaxed);
+                }
+                codec::ok_response(id.clone(), out)
+            }
+            Err(reply) => {
+                // failures never fan out: waiters retry individually
+                if let Some(slot) = slot {
+                    slot.resolve(SlotState::Orphaned);
+                }
+                reply
+            }
+        }
+    }
+
+    /// One enqueue + bounded response wait — the exact uncoalesced
+    /// `respond_compute` behavior, minus admission (already paid).
+    /// Errors come back as ready-to-send wire replies.
+    fn compute(
+        &self,
+        id: &Json,
+        op: Op,
+        vector: Vec<f32>,
+        timeout: Option<Duration>,
+    ) -> Result<Output, Json> {
+        match self.coordinator.enqueue(op, vector, timeout) {
+            Ok((_, rx)) => {
+                let wait = timeout
+                    .unwrap_or(DEFAULT_CALL_TIMEOUT)
+                    .saturating_add(RESPONSE_GRACE);
+                match rx.recv_timeout(wait) {
+                    Ok(resp) => match resp.result {
+                        Ok(out) => Ok(out),
+                        Err(e) => Err(codec::err_response(id.clone(), &e.to_string(), e.code())),
+                    },
+                    Err(mpsc::RecvTimeoutError::Timeout) => Err(codec::err_response(
+                        id.clone(),
+                        "response timed out",
+                        CODE_TIMEOUT,
+                    )),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        Err(codec::err_response_with_hint(
+                            id.clone(),
+                            "lane dropped response (restarted mid-request)",
+                            "lane_down",
+                            SubmitError::LaneDown.retry_after_ms(),
+                        ))
+                    }
+                }
+            }
+            Err(e) => Err(codec::err_response_with_hint(
+                id.clone(),
+                &e.to_string(),
+                e.code(),
+                e.retry_after_ms(),
+            )),
+        }
+    }
+}
+
+/// Count a request answered off the lane path (cache hit / dedup
+/// follower) into the same completion ledger the lane feeds: completed,
+/// output footprint, and end-to-end latency.
+fn record_completion(metrics: &LaneMetrics, out: &Output, started: Instant) {
+    let bits = match out {
+        Output::Bits(v) => v.len() * 64,
+        Output::F32(v) => v.len() * 32,
+        Output::I32(v) => v.len() * 32,
+    };
+    metrics.output_bits.fetch_add(bits as u64, Ordering::Relaxed);
+    metrics.completed.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .latency
+        .record_us(started.elapsed().as_micros() as u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Config, NativeBackend};
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn lru_cache_evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        assert_eq!(c.insert(1, Output::I32(vec![1])), 0);
+        assert_eq!(c.insert(2, Output::I32(vec![2])), 0);
+        // touch 1 so 2 becomes the eviction victim
+        assert!(c.get(1).is_some());
+        assert_eq!(c.insert(3, Output::I32(vec![3])), 1);
+        assert!(c.get(2).is_none(), "LRU victim must be the stale entry");
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        assert_eq!(c.len(), 2);
+        // refreshing an existing key never evicts
+        assert_eq!(c.insert(1, Output::I32(vec![9])), 0);
+        assert_eq!(c.len(), 2);
+        // cap 0 disables storage entirely
+        let mut off = LruCache::new(0);
+        assert_eq!(off.insert(1, Output::I32(vec![1])), 0);
+        assert_eq!(off.len(), 0);
+    }
+
+    #[test]
+    fn fingerprint_separates_ops_and_inputs() {
+        let v = vec![1.0f32; 8];
+        let a = topology::request_key(Op::Transform.name(), &v);
+        assert_eq!(a, topology::request_key(Op::Transform.name(), &v));
+        assert_ne!(a, topology::request_key(Op::Rff.name(), &v));
+        let mut w = v.clone();
+        w[0] = 1.0 + f32::EPSILON;
+        assert_ne!(a, topology::request_key(Op::Transform.name(), &w));
+    }
+
+    #[test]
+    fn orphaned_slot_wakes_followers_to_retry() {
+        let slot = Arc::new(Slot::new());
+        let s2 = Arc::clone(&slot);
+        let waiter = std::thread::spawn(move || {
+            matches!(
+                s2.wait_until(Instant::now() + Duration::from_secs(5)),
+                Waited::Orphaned
+            )
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        slot.resolve(SlotState::Orphaned);
+        assert!(waiter.join().unwrap(), "orphan must wake the follower");
+        // a pre-resolved slot answers without blocking
+        let done = Slot::new();
+        done.resolve(SlotState::Done(Output::I32(vec![7])));
+        assert!(matches!(
+            done.wait_until(Instant::now() + Duration::from_millis(1)),
+            Waited::Done(_)
+        ));
+    }
+
+    /// Backend that counts calls — proves cache hits skip it entirely.
+    struct CountingBackend {
+        inner: NativeBackend,
+        calls: AtomicU64,
+    }
+
+    impl Backend for CountingBackend {
+        fn run_batch(
+            &self,
+            op: Op,
+            n: usize,
+            rows: usize,
+            xs: &[f32],
+        ) -> Result<Output, String> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            self.inner.run_batch(op, n, rows, xs)
+        }
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+    }
+
+    fn request(vector: Vec<f32>, no_cache: bool) -> codec::Request {
+        codec::Request {
+            id: Json::Num(1.0),
+            op: Op::Transform,
+            timeout: None,
+            client_id: None,
+            priority: crate::coordinator::admission::PRIORITY_NORMAL,
+            no_cache,
+            vector,
+        }
+    }
+
+    #[test]
+    fn cache_hits_answer_without_backend_and_no_cache_opts_out() {
+        let config = Config {
+            lanes: vec![(Op::Transform, 64)],
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            queue_cap: 64,
+            sigma: 1.0,
+            seed: 5,
+            ..Config::default()
+        };
+        let be = Arc::new(CountingBackend {
+            inner: NativeBackend::new(&[64], 1.0, 5),
+            calls: AtomicU64::new(0),
+        });
+        let c = Arc::new(crate::coordinator::Coordinator::start(
+            config,
+            Arc::clone(&be) as Arc<dyn Backend>,
+        ));
+        let b = Batcher::new(Arc::clone(&c), IngressOptions::default());
+        let v: Vec<f32> = (0..64).map(|i| i as f32 / 64.0).collect();
+        let first = b.respond(request(v.clone(), false), "t");
+        assert_eq!(first.get("ok"), Some(&Json::Bool(true)));
+        let calls_after_first = be.calls.load(Ordering::Relaxed);
+        assert!(calls_after_first >= 1);
+        // identical request: answered from cache, byte-identical, no
+        // further backend calls
+        let second = b.respond(request(v.clone(), false), "t");
+        assert_eq!(second.to_string(), first.to_string());
+        assert_eq!(be.calls.load(Ordering::Relaxed), calls_after_first);
+        // no_cache recomputes (and never stores)
+        let third = b.respond(request(v.clone(), true), "t");
+        assert_eq!(third.to_string(), first.to_string());
+        assert!(be.calls.load(Ordering::Relaxed) > calls_after_first);
+        let m = c.lane_metrics(Op::Transform, 64).unwrap();
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 1, "no_cache is not a miss");
+        assert_eq!(m.cache_entries.load(Ordering::Relaxed), 1);
+        // the full ledger stays balanced: 3 submits, 3 completions
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 3);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 3);
+        drop(b);
+        if let Ok(c) = Arc::try_unwrap(c) {
+            c.shutdown();
+        }
+    }
+}

@@ -57,6 +57,11 @@ pub struct Request {
     /// Explicit `client_id` admission key (`None` = fall back to peer).
     pub client_id: Option<String>,
     pub priority: u8,
+    /// Opt-out of the ingress response cache for this request: neither
+    /// answered from it nor stored into it (dedup still applies — it is
+    /// an in-flight concern, not a staleness one). Ignored when the
+    /// server runs without an ingress.
+    pub no_cache: bool,
     pub vector: Vec<f32>,
 }
 
@@ -80,7 +85,7 @@ pub enum ParsedLine {
 /// Parse + validate one request line (pure function, no I/O). Validation
 /// order and error strings are part of the wire contract (pinned by the
 /// round-trip tests): bad JSON, then per-field checks in `timeout_ms`,
-/// `client_id`, `priority`, `vector` order.
+/// `client_id`, `priority`, `no_cache`, `vector` order.
 pub fn parse_line(line: &str) -> ParsedLine {
     let doc = match Json::parse(line) {
         Ok(d) => d,
@@ -140,6 +145,19 @@ pub fn parse_line(line: &str) -> ParsedLine {
             }
         },
     };
+    // cache opt-out: strict like every other optional field — a
+    // present-but-non-bool value is a malformed request
+    let no_cache = match doc.get("no_cache") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => {
+            return ParsedLine::Malformed(err_response(
+                id,
+                "'no_cache' must be a boolean",
+                CODE_BAD_REQUEST,
+            ))
+        }
+    };
     let Some(vec_json) = doc.get("vector").and_then(|v| v.as_arr()) else {
         return ParsedLine::Malformed(err_response(id, "missing 'vector' array", CODE_BAD_REQUEST));
     };
@@ -162,6 +180,7 @@ pub fn parse_line(line: &str) -> ParsedLine {
         timeout,
         client_id,
         priority,
+        no_cache,
         vector,
     })
 }
@@ -457,15 +476,22 @@ mod tests {
                 _ => panic!("'{op_str}' must parse as a compute request"),
             }
         }
-        // defaults: no timeout, peer-fallback client, normal priority
+        // defaults: no timeout, peer-fallback client, normal priority,
+        // cache participation on
         match parse_line(r#"{"op":"transform","vector":[1]}"#) {
             ParsedLine::Compute(req) => {
                 assert_eq!(req.id, Json::Null);
                 assert_eq!(req.timeout, None);
                 assert_eq!(req.client_id, None);
                 assert_eq!(req.priority, admission::PRIORITY_NORMAL);
+                assert!(!req.no_cache);
             }
             _ => panic!("minimal request must parse"),
+        }
+        // explicit cache opt-out parses through
+        match parse_line(r#"{"op":"transform","vector":[1],"no_cache":true}"#) {
+            ParsedLine::Compute(req) => assert!(req.no_cache),
+            _ => panic!("no_cache request must parse"),
         }
         // non-lane ops fall through to Other with the id preserved
         match parse_line(r#"{"id":9,"op":"metrics"}"#) {
@@ -494,6 +520,10 @@ mod tests {
             (
                 r#"{"id":8,"op":"transform","vector":[1],"priority":1.5}"#,
                 r#"{"code":"bad_request","error":"'priority' must be an integer 0-255","id":8,"ok":false}"#,
+            ),
+            (
+                r#"{"id":9,"op":"transform","vector":[1],"no_cache":"yes"}"#,
+                r#"{"code":"bad_request","error":"'no_cache' must be a boolean","id":9,"ok":false}"#,
             ),
             (
                 r#"{"id":3,"op":"transform"}"#,

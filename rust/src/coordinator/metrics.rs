@@ -98,6 +98,21 @@ pub struct LaneMetrics {
     /// batch's decrements, so across lane deaths the gauge can overcount
     /// — drain is deadline-bounded, never gauge-trusting.
     pub in_flight: AtomicU64,
+    /// Rows executed as part of a multi-row batch (rows in batches of
+    /// size ≥ 2 — the ingress coalescing win the bench measures).
+    pub coalesced_rows: AtomicU64,
+    /// Requests answered by subscribing to another in-flight identical
+    /// request's response slot instead of reaching the backend.
+    pub dedup_followers: AtomicU64,
+    /// Requests answered straight from the response cache.
+    pub cache_hits: AtomicU64,
+    /// Cache lookups that missed (only counted when the cache was
+    /// actually consulted — `no_cache` requests are not misses).
+    pub cache_misses: AtomicU64,
+    /// Entries evicted from the response cache to stay under capacity.
+    pub cache_evictions: AtomicU64,
+    /// Gauge: current response-cache occupancy for this lane.
+    pub cache_entries: AtomicU64,
     pub latency: Histogram,
 }
 
@@ -193,6 +208,30 @@ impl LaneMetrics {
                 "in_flight",
                 Json::Num(self.in_flight.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "coalesced_rows",
+                Json::Num(self.coalesced_rows.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "dedup_followers",
+                Json::Num(self.dedup_followers.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "cache_hits",
+                Json::Num(self.cache_hits.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "cache_misses",
+                Json::Num(self.cache_misses.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "cache_evictions",
+                Json::Num(self.cache_evictions.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "cache_entries",
+                Json::Num(self.cache_entries.load(Ordering::Relaxed) as f64),
+            ),
             ("latency_mean_us", Json::Num(self.latency.mean_us())),
             (
                 "latency_p50_us",
@@ -275,6 +314,21 @@ mod tests {
         assert_eq!(j.get("shed_overloaded").unwrap().as_f64(), Some(5.0));
         assert_eq!(j.get("drained").unwrap().as_f64(), Some(6.0));
         assert_eq!(j.get("in_flight").unwrap().as_f64(), Some(1.0));
+        // ingress counters (coalescing / dedup / response cache) are part
+        // of the exported schema
+        m.coalesced_rows.store(12, Ordering::Relaxed);
+        m.dedup_followers.store(7, Ordering::Relaxed);
+        m.cache_hits.store(3, Ordering::Relaxed);
+        m.cache_misses.store(8, Ordering::Relaxed);
+        m.cache_evictions.store(2, Ordering::Relaxed);
+        m.cache_entries.store(6, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("coalesced_rows").unwrap().as_f64(), Some(12.0));
+        assert_eq!(j.get("dedup_followers").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("cache_hits").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("cache_misses").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.get("cache_evictions").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("cache_entries").unwrap().as_f64(), Some(6.0));
         // serializes to valid JSON
         let s = j.to_string();
         assert!(Json::parse(&s).is_ok());

@@ -72,6 +72,7 @@
 
 pub mod admission;
 pub mod backend;
+pub mod batcher;
 pub mod breaker;
 pub mod client;
 pub mod codec;
@@ -82,6 +83,7 @@ pub mod server;
 
 pub use admission::{AdmissionControl, OverloadShedder};
 pub use backend::{Backend, ModelParams, NativeBackend, PjrtBackend};
+pub use batcher::{Batcher, IngressOptions};
 pub use breaker::{LaneState, Phase};
 pub use client::{ClientError, RetryClient, RetryPolicy};
 pub use fault::{FaultInjectingBackend, FaultPlan};
@@ -148,6 +150,12 @@ pub struct Config {
     /// How long the delay must stay above target before the shedder
     /// starts dropping priority-0 work (priority ≤ 1 after 2× window).
     pub shed_window: Duration,
+    /// Cost-model flush bound: cap each coalesced batch so its estimated
+    /// work ([`admission::request_work`] per row × rows) stays at or
+    /// under this many work units — expensive rows flush in smaller
+    /// batches instead of waiting on stragglers. `0` disables the cap
+    /// (batches are bounded by [`Config::max_batch`] alone).
+    pub flush_work: u64,
 }
 
 impl Default for Config {
@@ -173,6 +181,7 @@ impl Default for Config {
             admission_burst: 0.0,
             shed_target: Duration::ZERO,
             shed_window: Duration::from_millis(100),
+            flush_work: 0,
         }
     }
 }
@@ -382,6 +391,11 @@ impl Coordinator {
                 n,
                 per: backend.out_elems(op, n),
                 max_batch: config.max_batch,
+                work_cap_rows: if config.flush_work > 0 {
+                    ((config.flush_work / admission::request_work(op, n)).max(1)) as usize
+                } else {
+                    usize::MAX
+                },
                 max_wait: config.max_wait,
                 metrics: Arc::clone(&metrics),
                 state: Arc::clone(&state),
@@ -451,21 +465,33 @@ impl Coordinator {
     }
 
     /// Full-control submit: deadline, admission client key, priority.
-    /// The refusal order is deliberate — drain beats everything (the
-    /// instance is going away), lane health beats admission (don't charge
-    /// tokens for doomed work), the token bucket beats the shedder (a
-    /// throttled client shouldn't consume shedder headroom).
+    /// Exactly [`Coordinator::admit`] followed by
+    /// [`Coordinator::enqueue`] — the ingress batcher uses the two
+    /// halves separately so dedup followers and cache hits still pay
+    /// admission without enqueueing duplicate work.
     pub fn submit_with_opts(
         &self,
         op: Op,
         vector: Vec<f32>,
         opts: SubmitOptions<'_>,
     ) -> Result<(u64, Receiver<Response>), SubmitError> {
-        let lane = self
-            .lanes
-            .get(&(op, vector.len()))
-            .ok_or(SubmitError::UnknownLane)?;
-        if vector.len() != lane.n {
+        self.admit(op, vector.len(), opts)?;
+        self.enqueue(op, vector, opts.deadline)
+    }
+
+    /// Admission-only half of [`Coordinator::submit_with_opts`]: counts
+    /// the submit and runs the full refusal chain without enqueueing any
+    /// work. The refusal order is deliberate — drain beats everything
+    /// (the instance is going away), lane health beats admission (don't
+    /// charge tokens for doomed work), the token bucket beats the
+    /// shedder (a throttled client shouldn't consume shedder headroom).
+    /// The ingress batcher calls this for *every* request — leaders,
+    /// dedup followers, and cache hits alike — so each client is charged
+    /// its own work units and the refusal order matches the uncoalesced
+    /// path exactly.
+    pub fn admit(&self, op: Op, dim: usize, opts: SubmitOptions<'_>) -> Result<(), SubmitError> {
+        let lane = self.lanes.get(&(op, dim)).ok_or(SubmitError::UnknownLane)?;
+        if dim != lane.n {
             return Err(SubmitError::BadDim);
         }
         lane.metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -498,6 +524,23 @@ impl Coordinator {
             lane.metrics.shed_overloaded.fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Overloaded { retry_after_ms });
         }
+        Ok(())
+    }
+
+    /// Queueing half of [`Coordinator::submit_with_opts`]: assumes
+    /// [`Coordinator::admit`] already accepted this request (it is not
+    /// re-counted as a submit and pays no admission tokens here; only the
+    /// queue itself can still refuse, with [`SubmitError::Busy`]).
+    pub fn enqueue(
+        &self,
+        op: Op,
+        vector: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<(u64, Receiver<Response>), SubmitError> {
+        let lane = self
+            .lanes
+            .get(&(op, vector.len()))
+            .ok_or(SubmitError::UnknownLane)?;
         // ORDERING: Relaxed — fetch_add's RMW atomicity alone guarantees
         // unique ids; ids never order other memory (responses are matched
         // by value over the reply channel, which synchronizes).
@@ -509,7 +552,7 @@ impl Coordinator {
             vector,
             reply,
             enqueued: now,
-            deadline: opts.deadline.or(self.default_deadline).map(|d| now + d),
+            deadline: deadline.or(self.default_deadline).map(|d| now + d),
         };
         // gauge up before try_send: the lane may dequeue (and decrement)
         // the instant the job lands, so the reverse order could underflow
@@ -529,6 +572,13 @@ impl Coordinator {
                 Err(SubmitError::LaneDown)
             }
         }
+    }
+
+    /// Metrics handle for one lane (`None` when the lane doesn't exist)
+    /// — how the ingress batcher feeds its cache/dedup counters into the
+    /// same per-lane document everything else reads.
+    pub fn lane_metrics(&self, op: Op, n: usize) -> Option<Arc<LaneMetrics>> {
+        self.lanes.get(&(op, n)).map(|l| Arc::clone(&l.metrics))
     }
 
     /// Submit and wait for the response (convenience for examples / CLI).
@@ -666,6 +716,12 @@ impl Coordinator {
                                 "restarts",
                                 Json::Num(lane.metrics.restarts.load(Ordering::Relaxed) as f64),
                             ),
+                            (
+                                "cache_entries",
+                                Json::Num(
+                                    lane.metrics.cache_entries.load(Ordering::Relaxed) as f64
+                                ),
+                            ),
                         ]),
                     )
                 }),
@@ -691,6 +747,10 @@ struct LaneWorker {
     /// Output elements per request row.
     per: usize,
     max_batch: usize,
+    /// Cost-model row cap derived from [`Config::flush_work`] and this
+    /// lane's per-row work estimate (`usize::MAX` when disabled): big
+    /// rows flush in smaller batches instead of waiting for stragglers.
+    work_cap_rows: usize,
     max_wait: Duration,
     metrics: Arc<LaneMetrics>,
     state: Arc<LaneState>,
@@ -747,15 +807,28 @@ impl LaneWorker {
                 Ok(j) => j,
                 Err(_) => return, // all senders dropped -> shutdown
             };
+            // the earliest queued deadline bounds the flush window — a
+            // request near expiry must not burn its remaining budget
+            // waiting for batchmates; the cost-model row cap keeps one
+            // flush's total estimated work bounded for expensive lanes
             let mut jobs = vec![first];
-            let fill_deadline = Instant::now() + self.max_wait;
-            while jobs.len() < self.max_batch {
+            let mut fill_deadline = Instant::now() + self.max_wait;
+            if let Some(d) = jobs[0].deadline {
+                fill_deadline = fill_deadline.min(d);
+            }
+            let batch_cap = self.max_batch.min(self.work_cap_rows);
+            while jobs.len() < batch_cap {
                 let now = Instant::now();
                 if now >= fill_deadline {
                     break;
                 }
                 match rx.recv_timeout(fill_deadline - now) {
-                    Ok(j) => jobs.push(j),
+                    Ok(j) => {
+                        if let Some(d) = j.deadline {
+                            fill_deadline = fill_deadline.min(d);
+                        }
+                        jobs.push(j);
+                    }
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
@@ -794,6 +867,13 @@ impl LaneWorker {
     /// Execute one batch of live jobs and answer every one of them.
     fn run_jobs(&self, mut jobs: Vec<Job>) {
         let rows = jobs.len();
+        if rows > 1 {
+            // the coalescing ledger: rows that actually shared a backend
+            // call with at least one batchmate
+            self.metrics
+                .coalesced_rows
+                .fetch_add(rows as u64, Ordering::Relaxed);
+        }
         let mut xs = Vec::with_capacity(rows * self.n);
         for j in &jobs {
             xs.extend_from_slice(&j.vector);
@@ -1176,6 +1256,8 @@ mod tests {
         let lane = h.get("transform_n64").expect("transform lane in health");
         assert_eq!(lane.get("state").unwrap().as_str(), Some("open"));
         assert_eq!(lane.get("restarts").unwrap().as_f64(), Some(0.0));
+        // response-cache occupancy rides health (fed by the ingress)
+        assert_eq!(lane.get("cache_entries").unwrap().as_f64(), Some(0.0));
         assert!(crate::util::json::Json::parse(&h.to_string()).is_ok());
         c.shutdown();
     }
@@ -1224,6 +1306,77 @@ mod tests {
             "mean batch {} — burst should batch",
             tm.mean_batch_size()
         );
+        assert!(
+            tm.coalesced_rows.load(Ordering::Relaxed) > 0,
+            "multi-row batches must feed the coalescing ledger"
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn flush_work_caps_batch_rows() {
+        // two rows' worth of work per flush: a 16-deep burst against a
+        // 32-row max_batch must still flush in ≤ 2-row batches
+        let per_row = admission::request_work(Op::Transform, 64);
+        let config = Config {
+            lanes: vec![(Op::Transform, 64)],
+            max_batch: 32,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 64,
+            sigma: 1.0,
+            seed: 9,
+            flush_work: per_row * 2,
+            ..Config::default()
+        };
+        let backend = Arc::new(NativeBackend::new(&[64], 1.0, 9));
+        let c = Coordinator::start(config, backend);
+        let mut rng = Rng::new(7);
+        let mut rxs = Vec::new();
+        for _ in 0..16 {
+            rxs.push(c.submit(Op::Transform, rng.gaussian_vec(64)).unwrap());
+        }
+        for (_, rx) in rxs {
+            rx.recv().unwrap().result.unwrap();
+        }
+        let m = c.metrics();
+        let (_, tm) = &m[0];
+        let mean = tm.mean_batch_size();
+        assert!(mean > 0.0 && mean <= 2.0, "work cap must bound flushes: {mean}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn admit_then_enqueue_matches_submit_refusals() {
+        // split halves behave like submit_with_opts: admission charges
+        // the client's bucket at admit() time, enqueue() then queues
+        let config = Config {
+            lanes: vec![(Op::Transform, 64)],
+            admission_rate: 100_000.0,
+            admission_burst: admission::request_work(Op::Transform, 64) as f64 + 10.0,
+            ..Config::default()
+        };
+        let backend = Arc::new(NativeBackend::new(&[64], 1.0, 7));
+        let c = Coordinator::start(config, backend);
+        let alice = SubmitOptions {
+            client: Some("alice"),
+            ..SubmitOptions::default()
+        };
+        assert_eq!(c.admit(Op::Transform, 64, alice), Ok(()));
+        let (_, rx) = c.enqueue(Op::Transform, vec![1.0; 64], None).unwrap();
+        assert!(rx.recv().unwrap().result.is_ok());
+        // the bucket was charged by admit(), so a second admit throttles
+        assert!(matches!(
+            c.admit(Op::Transform, 64, alice),
+            Err(SubmitError::Throttled { .. })
+        ));
+        // dimension mistakes refuse at the admit half
+        assert_eq!(
+            c.admit(Op::Transform, 128, SubmitOptions::default()),
+            Err(SubmitError::UnknownLane)
+        );
+        // the metrics handle resolves exactly the configured lanes
+        assert!(c.lane_metrics(Op::Transform, 64).is_some());
+        assert!(c.lane_metrics(Op::Rff, 64).is_none());
         c.shutdown();
     }
 

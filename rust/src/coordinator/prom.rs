@@ -181,9 +181,13 @@ fn split_sample(line: &str, ln: usize) -> Result<(String, Vec<(String, String)>,
 }
 
 /// Is this per-lane metric key a point-in-time gauge (vs a monotonic
-/// counter)? Latency summaries, means, and in-flight depth move both ways.
+/// counter)? Latency summaries, means, in-flight depth, and the
+/// response-cache occupancy move both ways.
 fn is_gauge_key(key: &str) -> bool {
-    key.starts_with("latency_") || key.starts_with("mean_") || key == "in_flight"
+    key.starts_with("latency_")
+        || key.starts_with("mean_")
+        || key == "in_flight"
+        || key == "cache_entries"
 }
 
 /// Convert a coordinator `metrics_json()` document into exposition
@@ -327,6 +331,8 @@ mod tests {
                     ("completed", Json::Num(5.0)),
                     ("latency_p95_us", Json::Num(120.0)),
                     ("in_flight", Json::Num(1.0)),
+                    ("cache_hits", Json::Num(3.0)),
+                    ("cache_entries", Json::Num(2.0)),
                 ]),
             ),
             (
@@ -345,6 +351,9 @@ mod tests {
         );
         assert_eq!(by_name["ts_lane_latency_p95_us"].kind, "gauge");
         assert_eq!(by_name["ts_lane_in_flight"].kind, "gauge");
+        // ingress counters flow through generically; occupancy is a gauge
+        assert_eq!(by_name["ts_lane_cache_hits"].kind, "counter");
+        assert_eq!(by_name["ts_lane_cache_entries"].kind, "gauge");
         let adm = by_name["ts_admission_tokens"];
         assert!(adm.samples[0].labels.is_empty());
         assert_eq!(adm.samples[0].value, 9.5);

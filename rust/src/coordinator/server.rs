@@ -129,20 +129,48 @@ pub trait LineService: Send + Sync + 'static {
 
 /// The single-node [`LineService`]: a [`Coordinator`]'s lanes behind the
 /// wire codec (plus the `metrics`/`health`/`metrics_text` introspection
-/// ops).
+/// ops). [`CoordinatorService::new`] is a passthrough front (one request
+/// line = one lane submit); [`CoordinatorService::with_ingress`] puts
+/// the coalescing ingress ([`super::Batcher`]: in-flight dedup + a
+/// bounded response cache) in front of the same lanes.
 pub struct CoordinatorService {
     coordinator: Arc<Coordinator>,
+    ingress: Option<super::Batcher>,
 }
 
 impl CoordinatorService {
     pub fn new(coordinator: Arc<Coordinator>) -> Self {
-        CoordinatorService { coordinator }
+        CoordinatorService {
+            coordinator,
+            ingress: None,
+        }
+    }
+
+    /// Serve through the coalescing ingress: every compute line passes
+    /// admission, then the response cache, then in-flight dedup, before
+    /// reaching a lane. Introspection ops and refusal rendering are
+    /// identical to the passthrough front.
+    pub fn with_ingress(coordinator: Arc<Coordinator>, opts: super::IngressOptions) -> Self {
+        let ingress = super::Batcher::new(Arc::clone(&coordinator), opts);
+        CoordinatorService {
+            coordinator,
+            ingress: Some(ingress),
+        }
     }
 }
 
 impl LineService for CoordinatorService {
     fn handle_line(&self, line: &str, peer: &str) -> Json {
-        process_line_from(line, &self.coordinator, peer)
+        match &self.ingress {
+            None => process_line_from(line, &self.coordinator, peer),
+            Some(batcher) => match codec::parse_line(line) {
+                ParsedLine::Malformed(reply) => reply,
+                ParsedLine::Compute(req) => batcher.respond(req, peer),
+                ParsedLine::Other { id, op, .. } => {
+                    respond_other(id, op.as_deref(), &self.coordinator)
+                }
+            },
+        }
     }
 
     fn begin_drain(&self) {
@@ -521,18 +549,24 @@ pub fn process_line_from(line: &str, coordinator: &Coordinator, peer: &str) -> J
     match codec::parse_line(line) {
         ParsedLine::Malformed(reply) => reply,
         ParsedLine::Compute(req) => respond_compute(req, coordinator, peer),
-        // introspection ops carry no vector and answer from shared state
-        ParsedLine::Other { id, op, .. } => match op.as_deref() {
-            Some("metrics") => codec::ok_response_json(id, coordinator.metrics_json()),
-            Some("health") => codec::ok_response_json(id, coordinator.health_json()),
-            Some("metrics_text") => codec::ok_response_json(
-                id,
-                Json::Str(prom::render(&prom::coordinator_families(
-                    &coordinator.metrics_json(),
-                ))),
-            ),
-            _ => codec::err_response(id, "missing or unknown 'op'", CODE_BAD_REQUEST),
-        },
+        ParsedLine::Other { id, op, .. } => respond_other(id, op.as_deref(), coordinator),
+    }
+}
+
+/// Answer an introspection op (`metrics` / `health` / `metrics_text`)
+/// from shared coordinator state, or refuse an unknown op — shared by
+/// the passthrough and ingress fronts so both render identical bytes.
+pub(crate) fn respond_other(id: Json, op: Option<&str>, coordinator: &Coordinator) -> Json {
+    match op {
+        Some("metrics") => codec::ok_response_json(id, coordinator.metrics_json()),
+        Some("health") => codec::ok_response_json(id, coordinator.health_json()),
+        Some("metrics_text") => codec::ok_response_json(
+            id,
+            Json::Str(prom::render(&prom::coordinator_families(
+                &coordinator.metrics_json(),
+            ))),
+        ),
+        _ => codec::err_response(id, "missing or unknown 'op'", CODE_BAD_REQUEST),
     }
 }
 
@@ -545,6 +579,9 @@ pub(crate) fn respond_compute(req: codec::Request, coordinator: &Coordinator, pe
         timeout,
         client_id,
         priority,
+        // cache participation is an ingress concern; the passthrough
+        // front never caches, so the opt-out is trivially honored
+        no_cache: _,
         vector,
     } = req;
     let opts = SubmitOptions {
@@ -797,6 +834,40 @@ mod tests {
         let r = process_line(r#"{"id":11,"op":"transform","vector":[1,2]}"#, &c);
         assert_eq!(r.get("code").unwrap().as_str(), Some("unknown_lane"));
         assert!(r.get("retry_after_ms").is_none());
+    }
+
+    #[test]
+    fn ingress_service_matches_passthrough_bytes() {
+        let c = coordinator();
+        let plain = CoordinatorService::new(Arc::clone(&c));
+        let svc = CoordinatorService::with_ingress(
+            Arc::clone(&c),
+            crate::coordinator::IngressOptions::default(),
+        );
+        let vec_str: Vec<String> = (0..64).map(|i| format!("{}", i as f32 / 64.0)).collect();
+        let line = format!(
+            r#"{{"id": 1, "op": "transform", "vector": [{}]}}"#,
+            vec_str.join(",")
+        );
+        // zero cross-request corruption: ingress replies are
+        // byte-identical to the uncoalesced path's
+        let plain_reply = plain.handle_line(&line, "p");
+        let first = svc.handle_line(&line, "p");
+        assert_eq!(first.to_string(), plain_reply.to_string());
+        // the cached repeat still renders the same bytes
+        let second = svc.handle_line(&line, "p");
+        assert_eq!(second.to_string(), first.to_string());
+        let m = c.lane_metrics(Op::Transform, 64).unwrap();
+        assert_eq!(m.cache_hits.load(std::sync::atomic::Ordering::Relaxed), 1);
+        // introspection and refusals flow through the ingress front too
+        let metrics = svc.handle_line(r#"{"id":2,"op":"metrics"}"#, "p");
+        assert_eq!(metrics.get("ok"), Some(&Json::Bool(true)));
+        let lane = metrics.get("result").unwrap().get("transform_n64").unwrap();
+        assert_eq!(lane.get("cache_hits").unwrap().as_f64(), Some(1.0));
+        let bad = svc.handle_line("{nope", "p");
+        assert_eq!(bad.get("code").unwrap().as_str(), Some("bad_request"));
+        let refusal = svc.handle_line(r#"{"id":3,"op":"transform","vector":[1,2]}"#, "p");
+        assert_eq!(refusal.get("code").unwrap().as_str(), Some("unknown_lane"));
     }
 
     /// A trivial non-coordinator service: proves the connection core is

@@ -83,6 +83,43 @@
 //! `rust/tests/chaos_serving.rs` and the `serving_fault` bench sweep
 //! (error-path latency is measured, not assumed zero).
 //!
+//! ## Serving ingress
+//!
+//! In front of the coordinator sits an opt-in coalescing ingress
+//! ([`coordinator::Batcher`], enabled via
+//! `CoordinatorService::with_ingress` and on by default in `serve --tcp`)
+//! that turns many small concurrent requests into the batch shapes the
+//! engine is built for:
+//!
+//! * **Micro-batching** — requests with the same *batch class* (op +
+//!   transform configuration, i.e. the `(op, n)` lane: same family chain,
+//!   sigma and seed) coalesce in the lane queue and flush as one pooled
+//!   backend batch when `max_batch` fills or a short `max_wait` window
+//!   closes. The window is cost-model-aware: `Config::flush_work` caps the
+//!   estimated work (`coordinator::admission::request_work`) a batch may
+//!   accumulate so one huge row never waits on stragglers, and the
+//!   earliest per-request deadline in the batch bounds the flush window.
+//! * **In-flight dedup** — identical requests (fingerprint =
+//!   [`router::topology::request_key`], FNV-1a over the op name and the
+//!   exact input bits) share one computation: the first becomes the
+//!   *leader*, later arrivals subscribe to its response slot. This is
+//!   sound because compute is deterministic in (op, input bits) — SIMD
+//!   tiers are bit-identical and lane parameters are seed-fixed — and
+//!   because only *successes* fan out: a leader refusal or failure orphans
+//!   the slot and each follower retries for itself, so a shed or
+//!   throttled follower can never evict the leader's computation and a
+//!   poisoned row still fails alone through the panic-singleton-retry
+//!   path.
+//! * **Response cache** — a bounded per-lane LRU keyed by the same
+//!   fingerprint answers exact repeats without backend time; requests opt
+//!   out with `"no_cache": true` on the wire. Every request — leader,
+//!   follower or cache hit — still pays admission (token bucket, shedder,
+//!   drain, breaker) first, so refusal behavior is identical to the
+//!   uncoalesced path. `coalesced_rows`, `dedup_followers`,
+//!   `cache_hits` / `cache_misses` / `cache_evictions` and the
+//!   `cache_entries` occupancy gauge flow through `metrics`, `health` and
+//!   the Prometheus text exposition.
+//!
 //! ## Overload protection
 //!
 //! Refusing work is a feature with a contract, not an accident:

@@ -62,6 +62,9 @@ COMMANDS:
                   (--backend native|pjrt, --n 256,
                    --op transform|rff|crosspolytope|binary_embed,
                    --max-batch 64, --queue 1024,
+                   --max-wait-us 200 | --max-wait-ms W (coalescing window),
+                   --flush-work U [0 = off] closes a batch early at U
+                   estimated work units (huge rows don't wait on stragglers),
                    --deadline-ms 0 [0 = none], --breaker-threshold 8,
                    --breaker-cooldown-ms 250)
                   --tcp ADDR serves newline-JSON instead; then:
@@ -69,7 +72,9 @@ COMMANDS:
                    --drain-deadline-ms 5000 (SIGTERM/Ctrl-C drain),
                    --admit-rate R work-units/s per client [0 = off],
                    --admit-burst B [0 = R], --shed-target-ms T [0 = off],
-                   --shed-window-ms 100
+                   --shed-window-ms 100,
+                   --cache-cap 256 response-cache entries per lane [0 = off],
+                   --no-dedup disables in-flight request dedup
                   --shard I/N makes this node shard I of an N-shard fleet:
                    it additionally serves \"lsh_query\" over its
                    bucket-prefix range of a deterministic demo point set
@@ -281,10 +286,17 @@ fn build_coordinator(
         d
     };
     let deadline_ms: u64 = opt(opts, "deadline-ms", 0);
+    // --max-wait-ms is the coarse (ingress-friendly) alternative to
+    // --max-wait-us; when both are given the millisecond knob wins
+    let max_wait = if opts.contains_key("max-wait-ms") {
+        Duration::from_millis(opt(opts, "max-wait-ms", 0))
+    } else {
+        Duration::from_micros(opt(opts, "max-wait-us", 200))
+    };
     let config = Config {
         lanes,
         max_batch: opt(opts, "max-batch", 64),
-        max_wait: Duration::from_micros(opt(opts, "max-wait-us", 200)),
+        max_wait,
         queue_cap: opt(opts, "queue", 1024),
         sigma,
         seed,
@@ -297,6 +309,9 @@ fn build_coordinator(
         admission_burst: opt(opts, "admit-burst", 0.0),
         shed_target: Duration::from_millis(opt(opts, "shed-target-ms", 0)),
         shed_window: Duration::from_millis(opt(opts, "shed-window-ms", 100)),
+        // cost-model flush bound: a lane batch closes early once it holds
+        // this much estimated work, so one huge row never waits on stragglers
+        flush_work: opt(opts, "flush-work", 0),
         ..Config::default()
     };
     let backend_s = opts
@@ -388,7 +403,17 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
                 );
                 Arc::new(triplespin::router::ShardService::new(Arc::clone(&c), index))
             } else {
-                Arc::new(triplespin::coordinator::CoordinatorService::new(Arc::clone(&c)))
+                // coalescing ingress: in-flight dedup + bounded response
+                // cache in front of the coordinator (--cache-cap 0 and
+                // --no-dedup turn the pieces off individually)
+                let ingress = triplespin::coordinator::IngressOptions {
+                    cache_cap: opt(opts, "cache-cap", 256),
+                    dedup: !opts.contains_key("no-dedup"),
+                };
+                Arc::new(triplespin::coordinator::CoordinatorService::with_ingress(
+                    Arc::clone(&c),
+                    ingress,
+                ))
             };
         let server =
             match triplespin::coordinator::server::serve(Arc::clone(&service), addr, server_opts) {
@@ -407,7 +432,9 @@ fn cmd_serve(opts: &HashMap<String, String>) -> i32 {
             "{shard_banner}listening on {} (ops: {ops}, n={n}, max_conns={});\n\
              protocol: one JSON per line: {{\"id\":1,\"op\":\"transform\",\"vector\":[..]}}\n\
              optional per request: \"timeout_ms\", \"client_id\" (admission key),\n\
-             \"priority\" 0-2; ops \"metrics\", \"health\", \"metrics_text\" report\n\
+             \"priority\" 0-2, \"no_cache\" true opts out of the response cache;\n\
+             identical concurrent requests are deduplicated (one computes, the\n\
+             rest share the reply); ops \"metrics\", \"health\", \"metrics_text\" report\n\
              per-lane counters / breaker state / drain state; errors carry a \"code\"\n\
              (busy|deadline|unavailable|lane_down|backend|panic|timeout|bad_request\n\
              |throttled|overloaded|draining|shard_down) and retryable ones a\n\

@@ -34,12 +34,13 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use triplespin::coordinator::{
-    server, Backend, ClientError, Config, Coordinator, FaultInjectingBackend, FaultPlan,
-    NativeBackend, RetryClient, RetryPolicy, ServerOptions, SubmitError, TcpServer,
+    server, Backend, ClientError, Config, Coordinator, CoordinatorService, FaultInjectingBackend,
+    FaultPlan, IngressOptions, LineService, NativeBackend, RetryClient, RetryPolicy,
+    ServerOptions, SubmitError, TcpServer,
 };
 use triplespin::router::{
     demo_points, merge_topk, RouterOptions, ShardIndex, ShardIndexConfig, ShardRouter,
@@ -1056,4 +1057,277 @@ fn shard_hedged_scatter_masks_a_stalled_replica() {
     front.shutdown();
     slow.shutdown();
     fast.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// coalesce_*: the ingress (micro-batching + dedup + response cache) under
+// faults. CI's batching lane runs these alongside tcp_serving's batch_*
+// scenarios. The contract: coalescing and dedup are performance features
+// only — degradation stays per-request. A dying leader fails over (every
+// follower still reaches a terminal coded response), a poisoned row fails
+// alone even when coalesced into a shared batch, and an admission refusal
+// for one follower never evicts the leader's computation.
+// ---------------------------------------------------------------------------
+
+/// Start an ingress-fronted TCP server (dedup + response cache) over `be`.
+fn serve_ingress(cfg: Config, be: Arc<dyn Backend>) -> (Arc<Coordinator>, TcpServer) {
+    let c = Arc::new(Coordinator::start(cfg, be));
+    let service: Arc<dyn LineService> = Arc::new(CoordinatorService::with_ingress(
+        Arc::clone(&c),
+        IngressOptions::default(),
+    ));
+    let srv = server::serve(service, "127.0.0.1:0", ServerOptions::default()).unwrap();
+    (c, srv)
+}
+
+#[test]
+fn coalesce_leader_death_fails_over_until_every_follower_terminates() {
+    // Every backend call delays 200ms then panics: each dedup leader dies
+    // mid-compute with followers subscribed to its slot. The orphaned slot
+    // must wake them to retry — one promotes to leader, dies in turn — until
+    // every client holds a terminal coded response. No reply may hang, and
+    // no follower may be failed by a panic that wasn't its own attempt's.
+    let be = faulty("panic:1,delay_ms:200,seed:2");
+    let cfg = Config {
+        breaker_threshold: 0,
+        ..base_config()
+    };
+    let (c, srv) = serve_ingress(cfg, be as Arc<dyn Backend>);
+    let addr = srv.addr();
+    let clients = 4usize;
+    let barrier = Arc::new(Barrier::new(clients));
+    let vals: Vec<String> = (0..N).map(|i| format!("{}", i as f32 / 4.0)).collect();
+    let line = format!("{{\"id\": 5, \"op\": \"transform\", \"vector\": [{}]}}\n", vals.join(","));
+    let mut joins = Vec::new();
+    for _ in 0..clients {
+        let barrier = Arc::clone(&barrier);
+        let line = line.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            barrier.wait();
+            stream.write_all(line.as_bytes()).unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            Json::parse(resp.trim()).expect("terminal reply despite leader death")
+        }));
+    }
+    for j in joins {
+        let doc = j.join().unwrap();
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(false)), "{doc}");
+        assert_eq!(
+            doc.get("code").unwrap().as_str(),
+            Some("panic"),
+            "followers of a dead leader must reach the typed outcome: {doc}"
+        );
+    }
+    let m = c.lane_metrics(Op::Transform, N).expect("lane metrics");
+    assert!(
+        m.dedup_followers.load(Ordering::Relaxed) >= 1,
+        "a 200ms compute window must catch at least one follower in flight"
+    );
+    srv.shutdown();
+    drop(c);
+}
+
+/// Backend that panics whenever the batch contains a poisoned row (first
+/// element above 900) — the coalesced-batch poison scenario.
+struct PanickyBackend {
+    inner: NativeBackend,
+}
+
+impl Backend for PanickyBackend {
+    fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+        for row in xs.chunks_exact(n) {
+            if row[0] > 900.0 {
+                panic!("poisoned input row");
+            }
+        }
+        self.inner.run_batch(op, n, rows, xs)
+    }
+    fn name(&self) -> &'static str {
+        "panicky"
+    }
+}
+
+#[test]
+fn coalesce_poisoned_row_fails_alone_batchmates_match_uncoalesced() {
+    // 8 concurrent clients with distinct vectors coalesce into shared
+    // batches; one row is poisoned. The existing panic-singleton-retry
+    // path must isolate it: the poisoned request wears code "panic", its
+    // batchmates succeed byte-identically to an uncoalesced control server.
+    let be = Arc::new(PanickyBackend {
+        inner: NativeBackend::new(&[N], 1.0, 5),
+    });
+    let cfg = Config {
+        max_batch: 8,
+        max_wait: Duration::from_millis(100),
+        breaker_threshold: 0,
+        ..base_config()
+    };
+    let (c, srv) = serve_ingress(cfg, be as Arc<dyn Backend>);
+    let addr = srv.addr();
+
+    // uncoalesced control: same lane parameters, no ingress, no batching
+    let control_c = Arc::new(Coordinator::start(
+        Config {
+            max_batch: 1,
+            ..base_config()
+        },
+        native(),
+    ));
+    let control = TcpServer::start(Arc::clone(&control_c), "127.0.0.1:0").unwrap();
+    let control_addr = control.addr();
+
+    let clients = 8usize;
+    let barrier = Arc::new(Barrier::new(clients));
+    let mut joins = Vec::new();
+    for t in 0..clients {
+        let barrier = Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || {
+            let mut vals: Vec<String> = (0..N)
+                .map(|i| format!("{}", (i + t * N) as f32 / 32.0 - 4.0))
+                .collect();
+            if t == 2 {
+                vals[0] = "1000".into(); // the poisoned row
+            }
+            let line = format!(
+                "{{\"id\": {t}, \"op\": \"transform\", \"vector\": [{}]}}\n",
+                vals.join(",")
+            );
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            barrier.wait();
+            stream.write_all(line.as_bytes()).unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            // replay the same line against the uncoalesced control
+            let mut cs = TcpStream::connect(control_addr).unwrap();
+            let mut creader = BufReader::new(cs.try_clone().unwrap());
+            cs.write_all(line.as_bytes()).unwrap();
+            let mut control_resp = String::new();
+            creader.read_line(&mut control_resp).unwrap();
+            (t, resp, control_resp)
+        }));
+    }
+    for j in joins {
+        let (t, resp, control_resp) = j.join().unwrap();
+        let doc = Json::parse(resp.trim()).unwrap();
+        if t == 2 {
+            assert_eq!(doc.get("ok"), Some(&Json::Bool(false)), "{doc}");
+            assert_eq!(
+                doc.get("code").unwrap().as_str(),
+                Some("panic"),
+                "the poisoned row wears its own panic: {doc}"
+            );
+        } else {
+            assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{doc}");
+            assert_eq!(
+                resp, control_resp,
+                "a poisoned batchmate must not perturb client {t}'s bytes"
+            );
+        }
+    }
+    let m = c.lane_metrics(Op::Transform, N).expect("lane metrics");
+    assert!(m.panics.load(Ordering::Relaxed) >= 1, "panic counted");
+    assert_eq!(
+        m.lane_failures.load(Ordering::Relaxed),
+        0,
+        "a poisoned coalesced row must not kill the lane"
+    );
+    control.shutdown();
+    srv.shutdown();
+    drop(c);
+}
+
+#[test]
+fn coalesce_throttled_follower_does_not_evict_leader() {
+    // Admission refusals are per-request even when requests are identical:
+    // a follower whose token bucket is empty gets its `throttled` refusal
+    // BEFORE joining the leader's slot, so the refusal can neither evict
+    // the leader's in-flight computation nor poison the shared response.
+    let per_req = triplespin::coordinator::admission::request_work(Op::Transform, N) as f64;
+    let be = faulty("delay_ms:300");
+    let cfg = Config {
+        admission_rate: 0.0001, // effectively no refill within the test
+        admission_burst: per_req + 1.0,
+        ..base_config()
+    };
+    let (c, srv) = serve_ingress(cfg, be as Arc<dyn Backend>);
+    let addr = srv.addr();
+    let vals = |offset: f32| -> String {
+        (0..N).map(|i| format!("{}", i as f32 + offset)).collect::<Vec<_>>().join(",")
+    };
+
+    // hog spends its whole budget on one (distinct) request
+    let mut hog = TcpStream::connect(addr).unwrap();
+    let mut hog_reader = BufReader::new(hog.try_clone().unwrap());
+    hog.write_all(
+        format!(
+            "{{\"id\": 1, \"op\": \"transform\", \"client_id\": \"hog\", \"vector\": [{}]}}\n",
+            vals(100.0)
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut resp = String::new();
+    hog_reader.read_line(&mut resp).unwrap();
+    assert_eq!(
+        Json::parse(resp.trim()).unwrap().get("ok"),
+        Some(&Json::Bool(true)),
+        "{resp}"
+    );
+
+    // alice leads a fresh computation (300ms in the backend)
+    let shared = format!(
+        "{{\"id\": 2, \"op\": \"transform\", \"client_id\": \"alice\", \"vector\": [{}]}}\n",
+        vals(0.0)
+    );
+    let mut alice = TcpStream::connect(addr).unwrap();
+    let mut alice_reader = BufReader::new(alice.try_clone().unwrap());
+    alice.write_all(shared.as_bytes()).unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // alice reaches the backend
+
+    // hog sends the byte-identical request while alice is in flight: it
+    // must bounce off admission with a typed, hinted refusal — immediately
+    let over_budget = shared.replace("\"alice\"", "\"hog\"");
+    let mut hog2 = TcpStream::connect(addr).unwrap();
+    let mut hog2_reader = BufReader::new(hog2.try_clone().unwrap());
+    let refused_at = Instant::now();
+    hog2.write_all(over_budget.as_bytes()).unwrap();
+    let mut refusal = String::new();
+    hog2_reader.read_line(&mut refusal).unwrap();
+    let doc = Json::parse(refusal.trim()).unwrap();
+    assert_eq!(doc.get("ok"), Some(&Json::Bool(false)), "{doc}");
+    assert_eq!(doc.get("code").unwrap().as_str(), Some("throttled"), "{doc}");
+    assert!(doc.get("retry_after_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(
+        refused_at.elapsed() < Duration::from_millis(200),
+        "the refusal must not wait on the leader's backend time"
+    );
+
+    // the leader's computation survives the follower's refusal
+    let mut reply = String::new();
+    alice_reader.read_line(&mut reply).unwrap();
+    let doc = Json::parse(reply.trim()).unwrap();
+    assert_eq!(
+        doc.get("ok"),
+        Some(&Json::Bool(true)),
+        "a throttled follower must not evict the leader: {doc}"
+    );
+
+    let m = c.lane_metrics(Op::Transform, N).expect("lane metrics");
+    assert_eq!(
+        m.dedup_followers.load(Ordering::Relaxed),
+        0,
+        "admission refuses before the slot join"
+    );
+    assert_eq!(
+        m.cache_entries.load(Ordering::Relaxed),
+        2,
+        "both completed computations stay cached despite the refusal"
+    );
+    drop((hog_reader, hog, hog2_reader, hog2, alice_reader, alice));
+    srv.shutdown();
+    drop(c);
 }

@@ -12,11 +12,13 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 use triplespin::coordinator::{
-    server::hex_to_word, Backend, Config, Coordinator, NativeBackend, ServerOptions, TcpServer,
+    server::hex_to_word, server::serve, Backend, Config, Coordinator, CoordinatorService,
+    IngressOptions, LineService, NativeBackend, ServerOptions, TcpServer,
 };
 use triplespin::runtime::{Op, Output};
 use triplespin::util::json::Json;
@@ -277,6 +279,267 @@ fn graceful_drain_completes_in_flight_refuses_new_and_joins() {
         start.elapsed() < Duration::from_secs(5),
         "drain must not consume the full deadline when idle"
     );
+}
+
+/// Backend wrapper that counts `run_batch` calls and records each call's
+/// row count — the ground truth for "the backend ran exactly once" in the
+/// dedup tests and for coalesced-batch-size evidence.
+struct CountingBackend {
+    inner: NativeBackend,
+    delay: Duration,
+    calls: AtomicU64,
+    batch_rows: Mutex<Vec<usize>>,
+}
+
+impl CountingBackend {
+    fn new(delay: Duration) -> Self {
+        CountingBackend {
+            inner: NativeBackend::new(&[N], 1.0, 17),
+            delay,
+            calls: AtomicU64::new(0),
+            batch_rows: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl Backend for CountingBackend {
+    fn run_batch(&self, op: Op, n: usize, rows: usize, xs: &[f32]) -> Result<Output, String> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.batch_rows.lock().unwrap().push(rows);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.run_batch(op, n, rows, xs)
+    }
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+}
+
+/// Start an ingress-fronted server (dedup + response cache in front of the
+/// coordinator) over the given backend.
+fn serve_with_ingress(
+    backend: Arc<dyn Backend>,
+    cfg: Config,
+    ingress: IngressOptions,
+) -> (Arc<Coordinator>, TcpServer) {
+    let c = Arc::new(Coordinator::start(cfg, backend));
+    let service: Arc<dyn LineService> =
+        Arc::new(CoordinatorService::with_ingress(Arc::clone(&c), ingress));
+    let server = serve(service, "127.0.0.1:0", ServerOptions::default()).unwrap();
+    (c, server)
+}
+
+#[test]
+fn batch_dedup_leader_computes_once_and_fans_out() {
+    // 8 concurrent byte-identical requests against a 400ms backend: exactly
+    // one backend call computes, every client gets the same bytes back, and
+    // everyone who didn't lead is accounted for as a follower or cache hit.
+    let backend = Arc::new(CountingBackend::new(Duration::from_millis(400)));
+    let (c, server) = serve_with_ingress(
+        Arc::clone(&backend) as Arc<dyn Backend>,
+        config(64, Duration::from_micros(200)),
+        IngressOptions::default(),
+    );
+    let addr = server.addr();
+
+    let clients = 8usize;
+    let barrier = Arc::new(Barrier::new(clients));
+    let mut joins = Vec::new();
+    for _ in 0..clients {
+        let barrier = Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || {
+            // same id on purpose: identical requests must yield identical
+            // reply bytes, id included
+            let line =
+                format!("{{\"id\": 7, \"op\": \"transform\", \"vector\": [{}]}}\n", vector_json());
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            barrier.wait();
+            stream.write_all(line.as_bytes()).unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            resp
+        }));
+    }
+    let replies: Vec<String> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for r in &replies {
+        let doc = Json::parse(r.trim()).unwrap();
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{doc}");
+        assert_eq!(r, &replies[0], "dedup fan-out must be byte-identical");
+    }
+    assert_eq!(
+        backend.calls.load(Ordering::Relaxed),
+        1,
+        "one leader computes; followers subscribe to its slot"
+    );
+    let m = c.lane_metrics(Op::Transform, N).expect("transform lane metrics");
+    let followers = m.dedup_followers.load(Ordering::Relaxed);
+    let hits = m.cache_hits.load(Ordering::Relaxed);
+    assert_eq!(
+        followers + hits,
+        (clients - 1) as u64,
+        "everyone but the leader is a dedup follower (or a late cache hit)"
+    );
+    assert!(followers >= 1, "a 400ms compute window must catch followers in flight");
+    server.shutdown();
+    drop(c);
+}
+
+#[test]
+fn batch_cache_hits_skip_backend_and_no_cache_opts_out() {
+    let backend = Arc::new(CountingBackend::new(Duration::ZERO));
+    let (c, server) = serve_with_ingress(
+        Arc::clone(&backend) as Arc<dyn Backend>,
+        config(64, Duration::from_micros(200)),
+        IngressOptions::default(),
+    );
+    let addr = server.addr();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let line = format!("{{\"id\": 3, \"op\": \"transform\", \"vector\": [{}]}}\n", vector_json());
+    let mut send = |line: &str| {
+        stream.write_all(line.as_bytes()).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp
+    };
+    let first = send(&line);
+    assert_eq!(
+        Json::parse(first.trim()).unwrap().get("ok"),
+        Some(&Json::Bool(true)),
+        "{first}"
+    );
+    let calls_after_first = backend.calls.load(Ordering::Relaxed);
+
+    // exact repeat: answered from the response cache, byte-identical,
+    // zero additional backend time
+    let second = send(&line);
+    assert_eq!(second, first, "cache hit must replay the same bytes");
+    assert_eq!(
+        backend.calls.load(Ordering::Relaxed),
+        calls_after_first,
+        "cache hits must not reach the backend"
+    );
+
+    // no_cache opts this request out: same reply payload, but recomputed
+    let no_cache_line = format!(
+        "{{\"id\": 3, \"op\": \"transform\", \"no_cache\": true, \"vector\": [{}]}}\n",
+        vector_json()
+    );
+    let third = send(&no_cache_line);
+    assert_eq!(third, first, "deterministic recompute matches the cached bytes");
+    assert_eq!(
+        backend.calls.load(Ordering::Relaxed),
+        calls_after_first + 1,
+        "no_cache must recompute"
+    );
+
+    let m = c.lane_metrics(Op::Transform, N).expect("transform lane metrics");
+    assert_eq!(m.cache_hits.load(Ordering::Relaxed), 1);
+    assert_eq!(m.cache_misses.load(Ordering::Relaxed), 1, "no_cache is not a miss");
+    assert_eq!(m.cache_entries.load(Ordering::Relaxed), 1);
+
+    // health reports cache occupancy on the wire
+    let health = send("{\"id\": 4, \"op\": \"health\"}\n");
+    let h = Json::parse(health.trim()).unwrap();
+    let lane = h
+        .get("result")
+        .and_then(|r| r.get(&format!("transform_n{N}")))
+        .expect("transform lane in health");
+    assert_eq!(lane.get("cache_entries").unwrap().as_f64(), Some(1.0));
+
+    drop(reader);
+    drop(stream);
+    server.shutdown();
+    drop(c);
+}
+
+#[test]
+fn batch_coalescing_evidence_under_concurrent_clients() {
+    // The acceptance scenario: 32 concurrent single-row TCP clients with
+    // DISTINCT vectors on one lane must coalesce into pooled batches with
+    // mean batch size > 4, and every reply must be byte-identical to the
+    // uncoalesced path.
+    let backend = Arc::new(CountingBackend::new(Duration::from_millis(5)));
+    let cfg = Config {
+        max_batch: 32,
+        max_wait: Duration::from_millis(100),
+        ..config(256, Duration::from_millis(100))
+    };
+    let (c, server) = serve_with_ingress(
+        Arc::clone(&backend) as Arc<dyn Backend>,
+        cfg,
+        IngressOptions::default(),
+    );
+    let addr = server.addr();
+
+    // control: the same engine parameters with no ingress and no batching
+    // (max_batch 1) — the uncoalesced baseline for byte-level comparison
+    let control_c = Arc::new(Coordinator::start(
+        config(256, Duration::from_micros(50)),
+        Arc::new(NativeBackend::new(&[N], 1.0, 17)),
+    ));
+    let control = TcpServer::start(Arc::clone(&control_c), "127.0.0.1:0").unwrap();
+    let control_addr = control.addr();
+
+    let clients = 32usize;
+    let barrier = Arc::new(Barrier::new(clients));
+    let mut joins = Vec::new();
+    for t in 0..clients {
+        let barrier = Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || {
+            // distinct per-client vector: no dedup or cache sharing here,
+            // coalescing alone must provide the batching
+            let vals: Vec<String> = (0..N)
+                .map(|i| format!("{}", (i + t * N) as f32 / 64.0 - 8.0))
+                .collect();
+            let line = format!(
+                "{{\"id\": {t}, \"op\": \"transform\", \"vector\": [{}]}}\n",
+                vals.join(",")
+            );
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            barrier.wait();
+            stream.write_all(line.as_bytes()).unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+
+            // same request against the uncoalesced control server
+            let mut cs = TcpStream::connect(control_addr).unwrap();
+            let mut creader = BufReader::new(cs.try_clone().unwrap());
+            cs.write_all(line.as_bytes()).unwrap();
+            let mut control_resp = String::new();
+            creader.read_line(&mut control_resp).unwrap();
+            (resp, control_resp)
+        }));
+    }
+    let pairs: Vec<(String, String)> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for (resp, control_resp) in &pairs {
+        let doc = Json::parse(resp.trim()).unwrap();
+        assert_eq!(doc.get("ok"), Some(&Json::Bool(true)), "{doc}");
+        assert_eq!(
+            resp, control_resp,
+            "coalesced reply must be byte-identical to the uncoalesced path"
+        );
+    }
+    let sizes = backend.batch_rows.lock().unwrap().clone();
+    let rows: usize = sizes.iter().sum();
+    assert_eq!(rows, clients, "every admitted row reaches the backend exactly once");
+    let mean = rows as f64 / sizes.len() as f64;
+    assert!(
+        mean > 4.0,
+        "32 concurrent clients must coalesce (mean batch {mean:.2}, sizes {sizes:?})"
+    );
+    let m = c.lane_metrics(Op::Transform, N).expect("transform lane metrics");
+    assert!(
+        m.coalesced_rows.load(Ordering::Relaxed) > 0,
+        "coalesced_rows must count rows served in multi-row batches"
+    );
+    control.shutdown();
+    server.shutdown();
+    drop(c);
 }
 
 #[test]
